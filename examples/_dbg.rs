@@ -1,0 +1,40 @@
+use aiconfigurator::config::*;
+use aiconfigurator::frameworks::Framework;
+use aiconfigurator::models::{by_name, Dtype};
+use aiconfigurator::perfmodel::{self, memory};
+use aiconfigurator::search::SearchSpace;
+use aiconfigurator::silicon::Silicon;
+use aiconfigurator::simulator::{aggregated::AggregatedSim, SimConfig};
+use aiconfigurator::workload::closed_loop;
+use aiconfigurator::hardware::{h100_sxm, ClusterSpec};
+use aiconfigurator::perfdb::PerfDatabase;
+
+fn main() {
+    let cluster = ClusterSpec::new(h100_sxm(), 8, 1);
+    let sil = Silicon::new(cluster, Framework::TrtLlm.profile());
+    let model = by_name("qwen3-235b").unwrap();
+    let db = PerfDatabase::build(&sil, &model, Dtype::Fp8, 0xA1C0);
+    println!("{:>6} {:>5} {:>5} {:>3} {:>3} | {:>9} {:>9} {:>7} | {:>9} {:>9}",
+             "isl","osl","conc","tp","ep","pred_tpot","sim_tpot","err%","pred_ttft","sim_ttft");
+    for &(isl, osl, conc, tp, ep) in &[
+        (128u32,128u32,4u32,1u32,1u32),(128,128,32,8,8),(512,256,16,4,4),(1024,128,4,2,2),
+        (2048,256,32,8,1),(4096,512,32,8,8),(4096,128,4,1,1),(4096,512,4,8,8),
+        (128,512,32,2,2),(1024,512,16,8,4)] {
+        let mut eng = EngineConfig{ framework: Framework::TrtLlm,
+            parallel: ParallelSpec{tp,pp:1,ep,dp:1}, batch: conc,
+            weight_dtype: Dtype::Fp8, kv_dtype: Dtype::Fp8,
+            flags: RuntimeFlags::defaults_for(Framework::TrtLlm)};
+        eng.batch = conc;
+        if !SearchSpace::layout_valid(&model, &cluster, &eng.parallel) ||
+           !memory::fits(&model, cluster.gpu.mem_bytes(), &eng, isl, osl) { continue; }
+        let wl = WorkloadSpec::new("qwen3-235b", isl, osl, f64::INFINITY, 0.0);
+        let cand = Candidate::Aggregated{engine: eng, replicas: 1};
+        let est = perfmodel::estimate(&db, &model, &cluster, &cand, &wl);
+        let sim = AggregatedSim::new(&sil, &model, &cluster, eng, SimConfig::default())
+            .run(&closed_loop(2*conc as usize, isl, osl));
+        let err = (est.tpot_ms - sim.mean_tpot_ms())/sim.mean_tpot_ms()*100.0;
+        println!("{:>6} {:>5} {:>5} {:>3} {:>3} | {:>9.2} {:>9.2} {:>7.1} | {:>9.0} {:>9.0}",
+                 isl, osl, conc, tp, ep, est.tpot_ms, sim.mean_tpot_ms(), err,
+                 est.ttft_ms, sim.mean_ttft_ms());
+    }
+}

@@ -1,0 +1,12 @@
+//! §5.4 case study (Figure 8 + Table 2): optimal aggregated vs
+//! disaggregated serving of Qwen3-32B-FP8 on 8×H200 under a production
+//! SLA (TTFT ≤ 1200 ms, ≥ 60 tokens/s/user), with ground-truth
+//! validation in the discrete-event simulator and generated launch files.
+//!
+//! Run: `cargo run --release --example case_study [-- --full]`
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let rep = aiconfigurator::experiments::fig8_case_study::run(!full);
+    println!("{}", rep.render());
+}

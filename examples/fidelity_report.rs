@@ -1,0 +1,29 @@
+//! Fidelity + efficiency report: regenerates the paper's evaluation
+//! tables/figures (§5.1 Fig 6, §5.2 Fig 7, §5.3 Table 1).
+//!
+//! Run: `cargo run --release --example fidelity_report -- [--exp fig6|fig7|table1|all] [--full]`
+//!
+//! `--full` runs the paper-scale sweeps (360 + 600 + 128 fidelity
+//! configurations for Fig 6, etc.); default quick mode uses reduced grids.
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let full = args.iter().any(|a| a == "--full");
+    let exp = args
+        .iter()
+        .position(|a| a == "--exp")
+        .and_then(|i| args.get(i + 1))
+        .map(String::as_str)
+        .unwrap_or("all")
+        .to_string();
+    let quick = !full;
+    if exp == "fig6" || exp == "all" {
+        println!("{}", aiconfigurator::experiments::fig6_agg_fidelity::run(quick).render());
+    }
+    if exp == "fig7" || exp == "all" {
+        println!("{}", aiconfigurator::experiments::fig7_disagg_fidelity::run(quick).render());
+    }
+    if exp == "table1" || exp == "all" {
+        println!("{}", aiconfigurator::experiments::table1_efficiency::run(quick).render());
+    }
+}

@@ -1,0 +1,52 @@
+//! Figure 5 reproduction + MoE power-law kernel demo.
+//!
+//! Prints the expert-load skew table (α sweep) from the native sampler,
+//! then — if `artifacts/` is built — runs the AOT-compiled Pallas
+//! power-law kernel through PJRT and cross-checks it against the native
+//! implementation (loads sum, imbalance ordering).
+//!
+//! Run: `make artifacts && cargo run --release --example moe_loads`
+
+use aiconfigurator::runtime::{PjrtService, MOE_EXPERTS};
+use aiconfigurator::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    // Figure 5 table (native path).
+    let rep = aiconfigurator::experiments::fig5_powerlaw::run(false);
+    println!("{}", rep.render());
+
+    // PJRT kernel cross-check (optional: requires `make artifacts`).
+    let dir = std::path::Path::new("artifacts");
+    if !dir.join("moe_powerlaw.hlo.txt").exists() {
+        println!("artifacts/ not built — skipping PJRT kernel demo (run `make artifacts`)");
+        return Ok(());
+    }
+    // The interp executable needs a grid payload; zeros are fine here.
+    let grids = vec![0f32; aiconfigurator::perfdb::tables::GRID_LEN];
+    let svc = PjrtService::start(dir, grids)?;
+
+    let alphas = [0.05f32, 0.6, 1.2];
+    let s = alphas.len();
+    let mut rng = Rng::new(7);
+    let u: Vec<f32> = (0..s * MOE_EXPERTS).map(|_| rng.f64_open() as f32).collect();
+    let params: Vec<f32> = alphas.iter().flat_map(|_| [1.0, 100.0, 8192.0]).collect();
+    let (loads, imb) = svc.moe(&u, &alphas, &params)?;
+
+    println!("PJRT Pallas kernel (S={s} scenarios, E={MOE_EXPERTS} experts):");
+    for (i, a) in alphas.iter().enumerate() {
+        let row = &loads[i * MOE_EXPERTS..(i + 1) * MOE_EXPERTS];
+        let sum: f32 = row.iter().sum();
+        let mut sorted: Vec<f32> = row.to_vec();
+        sorted.sort_by(|x, y| y.partial_cmp(x).unwrap());
+        let top20: f32 = sorted[..MOE_EXPERTS / 5].iter().sum::<f32>() / sum;
+        println!(
+            "  alpha={a:<4} tokens={sum:>8.0} imbalance={:>6.2} top-20% share={:>5.1}%",
+            imb[i],
+            top20 * 100.0
+        );
+        assert!((sum - 8192.0).abs() < 2.0, "loads must sum to T*K");
+    }
+    assert!(imb[2] > imb[0], "imbalance must grow with alpha");
+    println!("kernel cross-check OK");
+    Ok(())
+}

@@ -1,0 +1,10 @@
+//! Figure 1 reproduction: aggregated vs disaggregated Pareto frontiers
+//! for Qwen3-235B on 64×H200, ISL 4096 / OSL 1024, TTFT ≤ 1000 ms.
+//!
+//! Run: `cargo run --release --example pareto_frontier [-- --full]`
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let rep = aiconfigurator::experiments::fig1_pareto::run(!full);
+    println!("{}", rep.render());
+}

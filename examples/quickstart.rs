@@ -1,0 +1,69 @@
+//! Quickstart: the paper's 5-step workflow end to end, in ~40 lines.
+//!
+//! 1. PerfDatabase — offline profiling (synthetic silicon here).
+//! 2. TaskRunner — enumerate the valid configuration space.
+//! 3. InferenceSession — estimate TTFT/TPOT/throughput per candidate.
+//! 4. Pareto analyzer — SLA filter + ranking.
+//! 5. Generator — emit ready-to-run launch files.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use aiconfigurator::config::WorkloadSpec;
+use aiconfigurator::frameworks::Framework;
+use aiconfigurator::generator;
+use aiconfigurator::hardware::{h100_sxm, ClusterSpec};
+use aiconfigurator::models::{by_name, Dtype};
+use aiconfigurator::pareto;
+use aiconfigurator::perfdb::PerfDatabase;
+use aiconfigurator::search::{SearchSpace, TaskRunner};
+use aiconfigurator::silicon::Silicon;
+
+fn main() -> anyhow::Result<()> {
+    // Deployment context: Qwen3-32B on one 8xH100 node, TensorRT-LLM.
+    let model = by_name("qwen3-32b").unwrap();
+    let cluster = ClusterSpec::new(h100_sxm(), 8, 1);
+    let silicon = Silicon::new(cluster, Framework::TrtLlm.profile());
+
+    // Workload + SLA: chat-style, TTFT <= 1s, >= 30 tokens/s per user.
+    let wl = WorkloadSpec::new("qwen3-32b", 2048, 256, 1000.0, 30.0);
+
+    // Step 1: build (or load) the operator performance database.
+    println!("[1/5] profiling operator database...");
+    let db = PerfDatabase::build(&silicon, &model, Dtype::Fp8, 42);
+    println!("      simulated campaign cost: {:.1} GPU-hours", db.profile_cost_hours);
+
+    // Steps 2-3: enumerate + estimate every candidate configuration.
+    println!("[2/5] + [3/5] searching the configuration space...");
+    let space = SearchSpace::default_for(&model, Framework::TrtLlm);
+    let report = TaskRunner::new(&model, &cluster, space, wl.clone()).run(&db);
+    println!(
+        "      {} configs priced, {} candidates, {:.3}s ({:.2} ms median/config)",
+        report.configs_priced,
+        report.evaluated.len(),
+        report.elapsed_s,
+        report.median_config_ms
+    );
+
+    // Step 4: Pareto analysis under the SLA.
+    println!("[4/5] Pareto analysis...");
+    let analysis = pareto::analyze(&report.evaluated, &wl.sla);
+    println!("      {} SLA-feasible candidates; top 5:", analysis.feasible.len());
+    for e in analysis.feasible.iter().take(5) {
+        println!(
+            "      {:>8.1} tok/s/GPU @ {:>5.1} tok/s/user, TTFT {:>6.1} ms — {}",
+            e.est.thru_per_gpu, e.est.speed, e.est.ttft_ms, e.cand.label()
+        );
+    }
+
+    // Step 5: generate launch files for the winner.
+    let best = analysis.best().expect("no feasible config");
+    let bundle = generator::generate(&best.cand, "Qwen/Qwen3-32B-FP8", &wl);
+    println!("[5/5] launch bundle for {}:", best.cand.label());
+    for (name, _) in &bundle.files {
+        println!("      {name}");
+    }
+    let dir = std::env::temp_dir().join("aiconfigurator_quickstart");
+    bundle.write_to(&dir)?;
+    println!("      written to {}", dir.display());
+    Ok(())
+}

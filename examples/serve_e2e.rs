@@ -1,0 +1,160 @@
+//! End-to-end serving driver (the E2E validation required by DESIGN.md):
+//!
+//! 1. Starts the config-search service with the AOT Pallas interp kernel
+//!    on its hot path (PJRT), bound to the Qwen3-32B/H100/TRT-LLM
+//!    context.
+//! 2. Fires a batch of concurrent workload-descriptor requests at it
+//!    over TCP (multiple client threads × several requests each, with
+//!    varying ISL/OSL/SLA).
+//! 3. Reports request latency percentiles + sustained search throughput.
+//! 4. Takes the recommended configuration from the last response and
+//!    validates it in the ground-truth discrete-event simulator.
+//!
+//! Run: `make artifacts && cargo run --release --example serve_e2e`
+//! (falls back to the native interpolation path without artifacts).
+
+use std::time::Instant;
+
+use aiconfigurator::config::WorkloadSpec;
+use aiconfigurator::frameworks::Framework;
+use aiconfigurator::service::{make_request, Client, SearchServer, ServerConfig};
+use aiconfigurator::util::stats;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = std::path::Path::new("artifacts");
+    let have_artifacts = artifacts.join("interp.hlo.txt").exists();
+    let cfg = ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        artifacts: have_artifacts.then(|| artifacts.to_path_buf()),
+        seed: 0xA1C0,
+    };
+    let pjrt_ctx =
+        have_artifacts.then_some(("qwen3-32b", "h100", 8u32, 1u32, Framework::TrtLlm));
+    println!(
+        "starting config-search service ({} hot path)...",
+        if have_artifacts { "PJRT/Pallas" } else { "native (run `make artifacts` for PJRT)" }
+    );
+    let (server, addr) = SearchServer::bind(&cfg, pjrt_ctx)?;
+    let stop = server.stopper();
+    let server_thread = std::thread::spawn(move || server.run());
+
+    // --- Load: 4 client threads × 6 requests each, varied workloads. ----
+    let clients = 4;
+    let per_client = 6;
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            std::thread::spawn(move || -> anyhow::Result<(Vec<f64>, Option<String>)> {
+                let mut cl = Client::connect(&addr)?;
+                let mut lat = Vec::new();
+                let mut best = None;
+                for i in 0..per_client {
+                    let isl = [1024u32, 2048, 4000][(c + i) % 3];
+                    let osl = [128u32, 256, 500][(c + i) % 3];
+                    let wl = WorkloadSpec::new(
+                        "qwen3-32b",
+                        isl,
+                        osl,
+                        1500.0,
+                        20.0 + 10.0 * ((c + i) % 4) as f64,
+                    );
+                    let req = make_request(&wl, "h100", 8, 1, Framework::TrtLlm, (c * 100 + i) as u64);
+                    let t = Instant::now();
+                    let resp = cl.request(&req)?;
+                    lat.push(t.elapsed().as_secs_f64() * 1e3);
+                    anyhow::ensure!(
+                        resp.req_str("status")? == "ok",
+                        "bad response: {}",
+                        resp.to_string()
+                    );
+                    if let Some(top) = resp.req("top")?.as_arr().and_then(|a| a.first()) {
+                        best = Some(format!(
+                            "{} -> {:.1} tok/s/GPU",
+                            top.req_str("config")?,
+                            top.req_f64("thru_per_gpu")?
+                        ));
+                    }
+                }
+                Ok((lat, best))
+            })
+        })
+        .collect();
+
+    let mut all_lat = Vec::new();
+    let mut last_best = None;
+    for h in handles {
+        let (lat, best) = h.join().unwrap()?;
+        all_lat.extend(lat);
+        if best.is_some() {
+            last_best = best;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let n = all_lat.len();
+    println!("\n=== service load results ===");
+    println!("requests: {n} over {clients} connections in {wall:.2}s");
+    println!(
+        "latency  p50 {:.1} ms  p90 {:.1} ms  p99 {:.1} ms  (first request includes DB build)",
+        stats::percentile(&all_lat, 50.0),
+        stats::percentile(&all_lat, 90.0),
+        stats::percentile(&all_lat, 99.0),
+    );
+    println!("search throughput: {:.1} searches/s", n as f64 / wall);
+    if let Some(b) = &last_best {
+        println!("last recommendation: {b}");
+    }
+
+    // --- Validate a recommendation in the ground-truth simulator. -------
+    println!("\n=== validating the 4000/500 recommendation in the DES ===");
+    use aiconfigurator::hardware::{h100_sxm, ClusterSpec};
+    use aiconfigurator::models::{by_name, Dtype};
+    use aiconfigurator::pareto;
+    use aiconfigurator::perfdb::PerfDatabase;
+    use aiconfigurator::search::{SearchSpace, TaskRunner};
+    use aiconfigurator::silicon::Silicon;
+    use aiconfigurator::simulator::{aggregated::AggregatedSim, disagg::DisaggSim, SimConfig};
+    use aiconfigurator::workload::closed_loop;
+
+    let model = by_name("qwen3-32b").unwrap();
+    let cluster = ClusterSpec::new(h100_sxm(), 8, 1);
+    let silicon = Silicon::new(cluster, Framework::TrtLlm.profile());
+    let db = PerfDatabase::build(&silicon, &model, Dtype::Fp8, 0xA1C0);
+    let wl = WorkloadSpec::new("qwen3-32b", 4000, 500, 1500.0, 30.0);
+    let report =
+        TaskRunner::new(&model, &cluster, SearchSpace::default_for(&model, Framework::TrtLlm), wl.clone())
+            .run(&db);
+    let analysis = pareto::analyze(&report.evaluated, &wl.sla);
+    let best = analysis.best().expect("feasible config");
+    println!("recommended: {} (predicted {:.1} tok/s/GPU @ {:.1} tok/s/user)",
+             best.cand.label(), best.est.thru_per_gpu, best.est.speed);
+    let (thru, speed) = match &best.cand {
+        aiconfigurator::config::Candidate::Aggregated { engine, .. } => {
+            let res = AggregatedSim::new(&silicon, &model, &cluster, *engine, SimConfig::default())
+                .run(&closed_loop(3 * engine.batch as usize, wl.isl, wl.osl));
+            (
+                res.output_tokens as f64 / (res.makespan_ms / 1000.0)
+                    / engine.parallel.gpus() as f64,
+                res.speed(),
+            )
+        }
+        aiconfigurator::config::Candidate::Disaggregated { prefill, decode, x, y } => {
+            let res = DisaggSim::new(
+                &silicon, &model, &cluster, *prefill, *decode, *x, *y, SimConfig::default(),
+            )
+            .run(&closed_loop((3 * y * decode.batch).max(24) as usize, wl.isl, wl.osl));
+            (res.thru_per_gpu(), res.speed())
+        }
+    };
+    println!(
+        "simulator: {thru:.1} tok/s/GPU @ {speed:.1} tok/s/user (deviation thru {:+.1}%, speed {:+.1}%)",
+        (best.est.thru_per_gpu / thru - 1.0) * 100.0,
+        (best.est.speed / speed - 1.0) * 100.0
+    );
+
+    // Shut the server down (poke the accept loop with a dummy connect).
+    stop.store(true, std::sync::atomic::Ordering::SeqCst);
+    let _ = std::net::TcpStream::connect(addr);
+    let _ = server_thread.join();
+    println!("\nserve_e2e OK");
+    Ok(())
+}

@@ -1,0 +1,95 @@
+"""AOT lowering: JAX/Pallas -> HLO *text* artifacts for the Rust runtime.
+
+HLO text (NOT ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. Lower with ``return_tuple=True``
+and unwrap with ``to_tuple1()``/``to_tupleN`` on the Rust side.
+See /opt/xla-example/load_hlo and its README gotchas.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+Emits:  interp.hlo.txt, moe_powerlaw.hlo.txt, manifest.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_all() -> dict:
+    """Lower every exported entry point; returns {name: hlo_text}."""
+    out = {}
+    out["interp"] = to_hlo_text(
+        jax.jit(model.latency_eval).lower(*model.latency_eval_specs())
+    )
+    # Small-batch variant for candidate-evaluation step sweeps (§Perf).
+    out["interp_small"] = to_hlo_text(
+        jax.jit(model.latency_eval).lower(
+            *model.latency_eval_specs(model.QUERY_BATCH_SMALL)
+        )
+    )
+    out["moe_powerlaw"] = to_hlo_text(
+        jax.jit(model.moe_load_eval).lower(*model.moe_load_eval_specs())
+    )
+    return out
+
+
+def manifest() -> dict:
+    """Shape contract consumed by rust/src/runtime (asserted at load)."""
+    return {
+        "interp": {
+            "num_tables": model.NUM_TABLES,
+            "grid": [model.GRID_NX, model.GRID_NY, model.GRID_NZ],
+            "query_batch": model.QUERY_BATCH,
+            "query_batch_small": model.QUERY_BATCH_SMALL,
+            "inputs": ["grids", "tids", "coords"],
+            "outputs": ["lat"],
+        },
+        "moe_powerlaw": {
+            "scenarios": model.MOE_SCENARIOS,
+            "experts": model.MOE_EXPERTS,
+            "inputs": ["u", "alpha", "params"],
+            "outputs": ["loads", "imbalance"],
+        },
+    }
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description="AOT-lower AIConfigurator kernels")
+    p.add_argument("--out-dir", default="../artifacts")
+    # Back-compat with the scaffold Makefile's single-file invocation.
+    p.add_argument("--out", default=None, help=argparse.SUPPRESS)
+    args = p.parse_args()
+    out_dir = os.path.dirname(args.out) if args.out else args.out_dir
+    os.makedirs(out_dir, exist_ok=True)
+
+    for name, text in lower_all().items():
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {len(text):>9} chars -> {path}")
+
+    mpath = os.path.join(out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest(), f, indent=2)
+    print(f"wrote manifest -> {mpath}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,119 @@
+"""L1 Pallas kernel: batched trilinear interpolation over packed perf grids.
+
+This is the innermost hot-spot of AIConfigurator's GETSTEPLATENCY: every
+candidate serving configuration decomposes into operator queries
+(GEMM / attention / communication / MoE), each of which is answered by
+interpolating the operator's calibrated latency grid (paper §4.4,
+"interpolation estimates latencies for intermediate configurations").
+
+Layout
+------
+* ``grids``  : f32[T, NX, NY, NZ] — T packed lookup tables. Each table is a
+  latency surface over three *normalized* axes; the axis transforms
+  (log-spacing over M/N/K, batch, sequence length, message size, ...) are
+  applied by the Rust coordinator before the query reaches this kernel, so
+  coordinates arrive as fractional grid indices in ``[0, N-1]``.
+* ``tids``   : i32[Q]    — table id per query.
+* ``coords`` : f32[Q, 3] — fractional (x, y, z) grid coordinates.
+* returns    : f32[Q]    — interpolated latency (microseconds).
+
+Tables with a degenerate axis (e.g. 2-D attention surfaces stored with
+NZ>1 but constant along z) are handled naturally: upper corner indices are
+clamped to the axis bound, and the fractional weight of a clamped corner
+collapses the interpolation to the lower corner.
+
+TPU adaptation (§Hardware-Adaptation in DESIGN.md): the kernel is tiled
+over the query axis — each program instance stages a block of
+``block_q`` queries (tids + coords ≈ 16·block_q bytes) into VMEM while the
+packed grids stay resident (T·NX·NY·NZ·4 B ≈ 1 MiB for the default
+16×32×32×16 database, well inside the 16 MiB VMEM budget, so the
+BlockSpec maps the full grid into every program). The 8-corner gather is
+the bottleneck — a VPU/gather-bound kernel, not MXU — so block_q is chosen
+to amortize grid residency across many queries. MUST run with
+``interpret=True`` on CPU (Mosaic custom-calls cannot execute on the CPU
+PJRT plugin).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_Q = 1024
+
+
+def _interp_kernel(tids_ref, coords_ref, grids_ref, out_ref):
+    """One query tile: gather 8 corners per query and blend trilinearly."""
+    t = tids_ref[...]  # [Bq] i32
+    c = coords_ref[...]  # [Bq, 3] f32
+    g = grids_ref[...]  # [T, NX, NY, NZ] f32
+    nx, ny, nz = g.shape[1], g.shape[2], g.shape[3]
+
+    x = jnp.clip(c[:, 0], 0.0, float(nx - 1))
+    y = jnp.clip(c[:, 1], 0.0, float(ny - 1))
+    z = jnp.clip(c[:, 2], 0.0, float(nz - 1))
+
+    x0 = jnp.floor(x).astype(jnp.int32)
+    y0 = jnp.floor(y).astype(jnp.int32)
+    z0 = jnp.floor(z).astype(jnp.int32)
+    x1 = jnp.minimum(x0 + 1, nx - 1)
+    y1 = jnp.minimum(y0 + 1, ny - 1)
+    z1 = jnp.minimum(z0 + 1, nz - 1)
+
+    xd = x - x0.astype(jnp.float32)
+    yd = y - y0.astype(jnp.float32)
+    zd = z - z0.astype(jnp.float32)
+
+    # 8-corner gather (vectorized advanced indexing → gather in HLO).
+    c000 = g[t, x0, y0, z0]
+    c001 = g[t, x0, y0, z1]
+    c010 = g[t, x0, y1, z0]
+    c011 = g[t, x0, y1, z1]
+    c100 = g[t, x1, y0, z0]
+    c101 = g[t, x1, y0, z1]
+    c110 = g[t, x1, y1, z0]
+    c111 = g[t, x1, y1, z1]
+
+    c00 = c000 * (1.0 - xd) + c100 * xd
+    c01 = c001 * (1.0 - xd) + c101 * xd
+    c10 = c010 * (1.0 - xd) + c110 * xd
+    c11 = c011 * (1.0 - xd) + c111 * xd
+
+    c0 = c00 * (1.0 - yd) + c10 * yd
+    c1 = c01 * (1.0 - yd) + c11 * yd
+
+    out_ref[...] = c0 * (1.0 - zd) + c1 * zd
+
+
+@functools.partial(jax.jit, static_argnames=("block_q",))
+def interp(grids, tids, coords, *, block_q: int = DEFAULT_BLOCK_Q):
+    """Batched trilinear interpolation.
+
+    Args:
+      grids:  f32[T, NX, NY, NZ] packed latency tables.
+      tids:   i32[Q] table id per query.
+      coords: f32[Q, 3] fractional grid coordinates.
+      block_q: queries per program instance (Q must be divisible).
+
+    Returns:
+      f32[Q] interpolated values.
+    """
+    q = tids.shape[0]
+    if q % block_q != 0:
+        raise ValueError(f"Q={q} must be a multiple of block_q={block_q}")
+    t, nx, ny, nz = grids.shape
+    return pl.pallas_call(
+        _interp_kernel,
+        grid=(q // block_q,),
+        in_specs=[
+            pl.BlockSpec((block_q,), lambda i: (i,)),
+            pl.BlockSpec((block_q, 3), lambda i: (i, 0)),
+            pl.BlockSpec((t, nx, ny, nz), lambda i: (0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_q,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((q,), jnp.float32),
+        interpret=True,
+    )(tids, coords, grids)

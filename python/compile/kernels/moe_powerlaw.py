@@ -1,0 +1,99 @@
+"""L1 Pallas kernel: power-law MoE expert-load synthesis (paper §4.4.1).
+
+Implements the controlled token-assignment procedure of Eq. (3)-(4):
+inverse-transform sampling of per-expert load weights from a bounded
+power-law, normalization to token counts, and the hot-expert tail factor
+that determines grouped-GEMM latency in practice ("the tail latency caused
+by the most heavily loaded expert ... determines overall throughput").
+
+Layout
+------
+* ``u``      : f32[S, E] — uniform(0,1) samples, one row per scenario
+  (the Rust coordinator owns the RNG so runs are reproducible).
+* ``alpha``  : f32[S]    — skew per scenario (α≈0 uniform, α≈1.2 heavy
+  tail). α = 1 is singular in Eq. (3); callers must nudge it away
+  (the Rust side clamps to |α-1| ≥ 1e-3).
+* ``params`` : f32[S, 3] — (x_min, x_max, T_total·K) per scenario.
+
+Returns
+-------
+* ``loads``  : f32[S, E] — fractional token count per expert
+  (integer rounding + residual redistribution happens in Rust, which
+  needs exact totals; the float surface is what the latency model uses).
+* ``imb``    : f32[S]    — tail factor: max_i N_i / (T_total·K / E), i.e.
+  how much slower the hottest expert is than the balanced ideal.
+
+Tiled over scenarios; each program stages a [block_s, E] tile into VMEM
+(E=128, block_s=64 → 32 KiB). Pure VPU work (exp/log/divide), no MXU.
+interpret=True for CPU-PJRT execution.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_S = 64
+
+
+def _moe_kernel(u_ref, alpha_ref, params_ref, loads_ref, imb_ref):
+    u = u_ref[...]  # [Bs, E]
+    a = alpha_ref[...]  # [Bs]
+    p = params_ref[...]  # [Bs, 3]
+    e = u.shape[1]
+
+    one_m = (1.0 - a)[:, None]  # [Bs, 1]
+    x_min = p[:, 0:1]
+    x_max = p[:, 1:2]
+    total = p[:, 2:3]  # T_total * K
+
+    # Eq. (3): x_i = [(x_max^{1-a} - x_min^{1-a}) U + x_min^{1-a}]^{1/(1-a)}
+    lo = x_min**one_m
+    hi = x_max**one_m
+    x = ((hi - lo) * u + lo) ** (1.0 / one_m)
+
+    # Eq. (4): normalize to token counts (float; rounding done by caller).
+    w = x / jnp.sum(x, axis=1, keepdims=True)
+    loads = w * total
+
+    loads_ref[...] = loads
+    imb_ref[...] = jnp.max(loads, axis=1) / (total[:, 0] / float(e))
+
+
+@functools.partial(jax.jit, static_argnames=("block_s",))
+def moe_powerlaw(u, alpha, params, *, block_s: int = DEFAULT_BLOCK_S):
+    """Sample power-law expert loads for a batch of scenarios.
+
+    Args:
+      u:      f32[S, E] uniform samples.
+      alpha:  f32[S] power-law skew (must not be exactly 1).
+      params: f32[S, 3] columns (x_min, x_max, T_total*K).
+      block_s: scenarios per program instance (S must be divisible).
+
+    Returns:
+      (loads f32[S, E], imbalance f32[S]).
+    """
+    s, e = u.shape
+    if s % block_s != 0:
+        raise ValueError(f"S={s} must be a multiple of block_s={block_s}")
+    return pl.pallas_call(
+        _moe_kernel,
+        grid=(s // block_s,),
+        in_specs=[
+            pl.BlockSpec((block_s, e), lambda i: (i, 0)),
+            pl.BlockSpec((block_s,), lambda i: (i,)),
+            pl.BlockSpec((block_s, 3), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_s, e), lambda i: (i, 0)),
+            pl.BlockSpec((block_s,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((s, e), jnp.float32),
+            jax.ShapeDtypeStruct((s,), jnp.float32),
+        ],
+        interpret=True,
+    )(u, alpha, params)

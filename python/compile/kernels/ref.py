@@ -1,0 +1,64 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the reference semantics the kernels (and the Rust native
+interpolator in ``rust/src/perfdb/query.rs``) must match. pytest +
+hypothesis compare kernel vs ref across shapes/dtypes; the Rust unit tests
+replicate the same closed-form cases (linear surfaces reproduced exactly,
+corner clamping, degenerate axes).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def interp_ref(grids, tids, coords):
+    """Trilinear interpolation over packed grids — reference semantics.
+
+    grids: f32[T, NX, NY, NZ]; tids: i32[Q]; coords: f32[Q, 3].
+    Returns f32[Q].
+    """
+    nx, ny, nz = grids.shape[1], grids.shape[2], grids.shape[3]
+    x = jnp.clip(coords[:, 0], 0.0, nx - 1.0)
+    y = jnp.clip(coords[:, 1], 0.0, ny - 1.0)
+    z = jnp.clip(coords[:, 2], 0.0, nz - 1.0)
+
+    x0 = jnp.floor(x).astype(jnp.int32)
+    y0 = jnp.floor(y).astype(jnp.int32)
+    z0 = jnp.floor(z).astype(jnp.int32)
+    x1 = jnp.minimum(x0 + 1, nx - 1)
+    y1 = jnp.minimum(y0 + 1, ny - 1)
+    z1 = jnp.minimum(z0 + 1, nz - 1)
+
+    xd = x - x0
+    yd = y - y0
+    zd = z - z0
+
+    def g(ix, iy, iz):
+        return grids[tids, ix, iy, iz]
+
+    c00 = g(x0, y0, z0) * (1 - xd) + g(x1, y0, z0) * xd
+    c01 = g(x0, y0, z1) * (1 - xd) + g(x1, y0, z1) * xd
+    c10 = g(x0, y1, z0) * (1 - xd) + g(x1, y1, z0) * xd
+    c11 = g(x0, y1, z1) * (1 - xd) + g(x1, y1, z1) * xd
+
+    c0 = c00 * (1 - yd) + c10 * yd
+    c1 = c01 * (1 - yd) + c11 * yd
+    return c0 * (1 - zd) + c1 * zd
+
+
+def moe_powerlaw_ref(u, alpha, params):
+    """Eq. (3)-(4) of the paper — reference semantics.
+
+    u: f32[S, E]; alpha: f32[S]; params: f32[S, 3] = (x_min, x_max, T*K).
+    Returns (loads f32[S, E], imbalance f32[S]).
+    """
+    e = u.shape[1]
+    one_m = (1.0 - alpha)[:, None]
+    lo = params[:, 0:1] ** one_m
+    hi = params[:, 1:2] ** one_m
+    x = ((hi - lo) * u + lo) ** (1.0 / one_m)
+    w = x / jnp.sum(x, axis=1, keepdims=True)
+    loads = w * params[:, 2:3]
+    imb = jnp.max(loads, axis=1) / (params[:, 2] / float(e))
+    return loads, imb

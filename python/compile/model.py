@@ -1,0 +1,78 @@
+"""L2: the JAX compute graph AOT-compiled for the Rust coordinator.
+
+AIConfigurator's hot path is not a neural network forward pass — it is the
+batched evaluation of operator-latency queries against the calibrated
+performance database (paper §4.3-4.4), plus the power-law MoE load model
+(§4.4.1). Both are expressed here as jittable JAX functions that call the
+L1 Pallas kernels, and are lowered once by ``aot.py`` to HLO text that the
+Rust runtime loads via PJRT. Python never runs on the request path.
+
+Exported entry points (fixed AOT shapes; the Rust side pads batches):
+
+* ``latency_eval(grids, tids, coords)``        -> (lat[Q],)
+* ``moe_load_eval(u, alpha, params)``          -> (loads[S,E], imb[S])
+
+Shape constants here are the single source of truth; ``aot.py`` writes
+them to ``artifacts/manifest.json`` and the Rust runtime asserts against
+them at load time (rust/src/runtime/mod.rs).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.interp import interp
+from compile.kernels.moe_powerlaw import moe_powerlaw
+
+# --- AOT shape contract (mirrored in rust/src/runtime/mod.rs) -----------
+NUM_TABLES = 16  # packed operator tables
+GRID_NX = 32
+GRID_NY = 32
+GRID_NZ = 16
+QUERY_BATCH = 8192  # operator queries per PJRT execution (bulk variant)
+# Small-batch variant: candidate evaluation issues dozens-to-hundreds of
+# queries per step sweep; padding those to 8192 wastes ~30x gather work
+# (§Perf L1/L2 iteration 1 in EXPERIMENTS.md). The runtime picks the
+# variant by batch size.
+QUERY_BATCH_SMALL = 256
+
+MOE_SCENARIOS = 256
+MOE_EXPERTS = 128
+
+
+def latency_eval(grids, tids, coords):
+    """Batched operator-latency lookup: trilinear interpolation kernel.
+
+    A single fused HLO module: coordinate clamping, 8-corner gather and
+    blend all lower into one program — no host round-trips between
+    operators of the same candidate configuration. The Pallas query tile
+    shrinks with the batch so the small AOT variant stays single-tile.
+    """
+    block_q = min(tids.shape[0], 1024)
+    lat = interp(grids, tids, coords, block_q=block_q)
+    return (lat,)
+
+
+def moe_load_eval(u, alpha, params):
+    """Batched power-law expert-load synthesis (Eq. 3-4 + tail factor)."""
+    loads, imb = moe_powerlaw(u, alpha, params)
+    return (loads, imb)
+
+
+def latency_eval_specs(batch: int = QUERY_BATCH):
+    """ShapeDtypeStructs for AOT lowering of ``latency_eval``."""
+    return (
+        jax.ShapeDtypeStruct((NUM_TABLES, GRID_NX, GRID_NY, GRID_NZ), jnp.float32),
+        jax.ShapeDtypeStruct((batch,), jnp.int32),
+        jax.ShapeDtypeStruct((batch, 3), jnp.float32),
+    )
+
+
+def moe_load_eval_specs():
+    """ShapeDtypeStructs for AOT lowering of ``moe_load_eval``."""
+    return (
+        jax.ShapeDtypeStruct((MOE_SCENARIOS, MOE_EXPERTS), jnp.float32),
+        jax.ShapeDtypeStruct((MOE_SCENARIOS,), jnp.float32),
+        jax.ShapeDtypeStruct((MOE_SCENARIOS, 3), jnp.float32),
+    )

@@ -1,0 +1,71 @@
+"""L2/AOT: lowering produces well-formed HLO text with the contract shapes.
+
+These tests guard the interchange format the Rust runtime depends on:
+entry layout shapes, tuple return, and manifest consistency.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import pytest
+
+from compile import aot, model
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.fixture(scope="module")
+def lowered():
+    return aot.lower_all()
+
+
+def test_interp_entry_layout(lowered):
+    hlo = lowered["interp"]
+    assert hlo.startswith("HloModule")
+    t, nx, ny, nz = model.NUM_TABLES, model.GRID_NX, model.GRID_NY, model.GRID_NZ
+    q = model.QUERY_BATCH
+    assert f"f32[{t},{nx},{ny},{nz}]" in hlo
+    assert f"s32[{q}]" in hlo
+    assert f"f32[{q},3]" in hlo
+    # return_tuple=True → tuple-typed root.
+    assert f"->(f32[{q}]" in hlo
+
+
+def test_moe_entry_layout(lowered):
+    hlo = lowered["moe_powerlaw"]
+    s, e = model.MOE_SCENARIOS, model.MOE_EXPERTS
+    assert f"f32[{s},{e}]" in hlo
+    assert f"f32[{s},3]" in hlo
+    assert f"->(f32[{s},{e}]" in hlo
+
+
+def test_no_custom_calls(lowered):
+    """interpret=True must lower to plain HLO — no Mosaic custom-calls,
+    which the CPU PJRT client cannot execute."""
+    for name, hlo in lowered.items():
+        assert "custom-call" not in hlo, f"{name} contains a custom-call"
+
+
+def test_manifest_matches_model():
+    m = aot.manifest()
+    assert m["interp"]["num_tables"] == model.NUM_TABLES
+    assert m["interp"]["grid"] == [model.GRID_NX, model.GRID_NY, model.GRID_NZ]
+    assert m["interp"]["query_batch"] == model.QUERY_BATCH
+    assert m["moe_powerlaw"]["experts"] == model.MOE_EXPERTS
+
+
+def test_artifacts_on_disk_if_built():
+    """If `make artifacts` has run, the files must agree with the manifest."""
+    mpath = os.path.join(ART, "manifest.json")
+    if not os.path.exists(mpath):
+        pytest.skip("artifacts not built")
+    with open(mpath) as f:
+        m = json.load(f)
+    assert m == aot.manifest()
+    for name in ("interp", "moe_powerlaw"):
+        p = os.path.join(ART, f"{name}.hlo.txt")
+        assert os.path.exists(p)
+        with open(p) as f:
+            assert f.read(9) == "HloModule"

@@ -1,0 +1,129 @@
+"""L1 correctness: Pallas interp kernel vs pure-jnp oracle.
+
+Hypothesis sweeps grid shapes, table counts, block sizes and coordinate
+ranges (including out-of-range coordinates, which must clamp) and asserts
+allclose against ``ref.interp_ref``. Closed-form cases pin down the
+semantics independently of the oracle.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.interp import interp
+from compile.kernels.ref import interp_ref
+
+
+def _mk(rng, t, nx, ny, nz, q, lo=-2.0, scale=1.3):
+    grids = (rng.random((t, nx, ny, nz)) * 1000.0).astype(np.float32)
+    tids = rng.integers(0, t, q).astype(np.int32)
+    # Coordinates deliberately overshoot the grid on both sides.
+    coords = (
+        rng.random((q, 3)) * (np.array([nx, ny, nz]) * scale) + lo
+    ).astype(np.float32)
+    return grids, tids, coords
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    t=st.integers(1, 8),
+    nx=st.integers(2, 16),
+    ny=st.integers(2, 16),
+    nz=st.integers(1, 8),
+    logq=st.integers(0, 3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matches_ref(t, nx, ny, nz, logq, seed):
+    rng = np.random.default_rng(seed)
+    block_q = 4 * 2**logq
+    q = block_q * int(rng.integers(1, 5))
+    grids, tids, coords = _mk(rng, t, nx, ny, nz, q)
+    got = interp(jnp.array(grids), jnp.array(tids), jnp.array(coords), block_q=block_q)
+    want = interp_ref(jnp.array(grids), jnp.array(tids), jnp.array(coords))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_linear_surface_exact(seed):
+    """Trilinear interpolation reproduces a trilinear function exactly."""
+    rng = np.random.default_rng(seed)
+    nx, ny, nz = 8, 6, 4
+    a, b, c, d = rng.random(4).astype(np.float32) * 10
+    ix, iy, iz = np.meshgrid(
+        np.arange(nx), np.arange(ny), np.arange(nz), indexing="ij"
+    )
+    grid = (a * ix + b * iy + c * iz + d).astype(np.float32)[None]
+    q = 64
+    coords = (rng.random((q, 3)) * np.array([nx - 1, ny - 1, nz - 1])).astype(
+        np.float32
+    )
+    tids = np.zeros(q, dtype=np.int32)
+    got = np.asarray(
+        interp(jnp.array(grid), jnp.array(tids), jnp.array(coords), block_q=16)
+    )
+    want = a * coords[:, 0] + b * coords[:, 1] + c * coords[:, 2] + d
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-2)
+
+
+def test_grid_points_exact():
+    """Queries exactly on grid points return the stored values."""
+    rng = np.random.default_rng(7)
+    grids = (rng.random((3, 5, 5, 3)) * 100).astype(np.float32)
+    pts = [(t, x, y, z) for t in range(3) for x in range(5) for y in range(5) for z in range(3)]
+    rng.shuffle(pts)
+    pts = pts[:32]
+    tids = np.array([p[0] for p in pts], dtype=np.int32)
+    coords = np.array([p[1:] for p in pts], dtype=np.float32)
+    got = np.asarray(interp(jnp.array(grids), jnp.array(tids), jnp.array(coords), block_q=32))
+    want = np.array([grids[p] for p in pts])
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-4)
+
+
+def test_clamping():
+    """Out-of-range coordinates clamp to the boundary surface."""
+    grids = np.arange(2 * 4 * 4 * 2, dtype=np.float32).reshape(2, 4, 4, 2)
+    tids = np.array([0, 0, 1, 1], dtype=np.int32)
+    coords = np.array(
+        [[-5.0, -5.0, -5.0], [99.0, 99.0, 99.0], [-1.0, 2.0, 0.5], [3.0, 99.0, 1.0]],
+        dtype=np.float32,
+    )
+    got = np.asarray(interp(jnp.array(grids), jnp.array(tids), jnp.array(coords), block_q=4))
+    assert got[0] == grids[0, 0, 0, 0]
+    assert got[1] == grids[0, 3, 3, 1]
+    assert got[2] == pytest.approx((grids[1, 0, 2, 0] + grids[1, 0, 2, 1]) / 2, rel=1e-5)
+    assert got[3] == grids[1, 3, 3, 1]
+
+
+def test_degenerate_z_axis():
+    """NZ=1 tables (2-D surfaces) interpolate over x,y only."""
+    rng = np.random.default_rng(3)
+    grids = (rng.random((1, 6, 6, 1)) * 10).astype(np.float32)
+    tids = np.zeros(8, dtype=np.int32)
+    coords = np.stack(
+        [
+            rng.random(8).astype(np.float32) * 5,
+            rng.random(8).astype(np.float32) * 5,
+            rng.random(8).astype(np.float32) * 3,  # z ignored after clamp
+        ],
+        axis=1,
+    )
+    got = np.asarray(interp(jnp.array(grids), jnp.array(tids), jnp.array(coords), block_q=8))
+    coords0 = coords.copy()
+    coords0[:, 2] = 0.0
+    want = np.asarray(interp_ref(jnp.array(grids), jnp.array(tids), jnp.array(coords0)))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+def test_bad_block_raises():
+    grids = np.zeros((1, 2, 2, 1), dtype=np.float32)
+    with pytest.raises(ValueError):
+        interp(
+            jnp.array(grids),
+            jnp.zeros(10, jnp.int32),
+            jnp.zeros((10, 3), jnp.float32),
+            block_q=16,
+        )

@@ -1,0 +1,39 @@
+//! Bench: end-to-end experiment harness timings (one timed pass per
+//! paper table/figure, quick grids) — regenerates each table/figure and
+//! reports how long the full regeneration takes.
+//!
+//! Run: `cargo bench --bench experiments`
+
+use aiconfigurator::experiments::*;
+use aiconfigurator::util::bench::once;
+
+fn main() {
+    let r1 = once("experiment/fig1-pareto(quick)", || {
+        let rep = fig1_pareto::run(true);
+        print!("{}", rep.render());
+    });
+    let r5 = once("experiment/fig5-powerlaw", || {
+        let rep = fig5_powerlaw::run(true);
+        print!("{}", rep.render());
+    });
+    let r6 = once("experiment/fig6-agg-fidelity(quick)", || {
+        let rep = fig6_agg_fidelity::run(true);
+        print!("{}", rep.render());
+    });
+    let r7 = once("experiment/fig7-disagg-fidelity(quick)", || {
+        let rep = fig7_disagg_fidelity::run(true);
+        print!("{}", rep.render());
+    });
+    let r8 = once("experiment/fig8-case-study(quick)", || {
+        let rep = fig8_case_study::run(true);
+        print!("{}", rep.render());
+    });
+    let rt = once("experiment/table1-efficiency(quick)", || {
+        let rep = table1_efficiency::run(true);
+        print!("{}", rep.render());
+    });
+    println!("\n--- summary (ms) ---");
+    for r in [r1, r5, r6, r7, r8, rt] {
+        println!("{:<44} {:>12.1}", r.name, r.median_ms());
+    }
+}

@@ -1,0 +1,80 @@
+//! Bench: the interpolation hot path — native Rust trilinear vs the
+//! AOT-compiled Pallas kernel through PJRT, across batch sizes; plus
+//! the MoE power-law sampler (native vs kernel). This is the §Perf L3/L1
+//! measurement recorded in EXPERIMENTS.md.
+//!
+//! Run: `make artifacts && cargo bench --bench interp_hot_path`
+
+use aiconfigurator::frameworks::Framework;
+use aiconfigurator::hardware::{h100_sxm, ClusterSpec};
+use aiconfigurator::models::{by_name, Dtype};
+use aiconfigurator::perfdb::query::trilinear;
+use aiconfigurator::perfdb::PerfDatabase;
+use aiconfigurator::perfmodel::moe;
+use aiconfigurator::runtime::{PjrtService, MOE_EXPERTS};
+use aiconfigurator::silicon::Silicon;
+use aiconfigurator::util::bench::{bench, black_box};
+use aiconfigurator::util::rng::Rng;
+
+fn main() {
+    let cluster = ClusterSpec::new(h100_sxm(), 8, 1);
+    let silicon = Silicon::new(cluster, Framework::TrtLlm.profile());
+    let model = by_name("qwen3-235b").unwrap();
+    let db = PerfDatabase::build(&silicon, &model, Dtype::Fp8, 1);
+
+    let mut rng = Rng::new(42);
+    let n_max = 16384usize;
+    let tids: Vec<i32> = (0..n_max).map(|_| rng.below(14) as i32).collect();
+    let coords: Vec<f32> = (0..n_max * 3).map(|_| (rng.f64() * 15.0) as f32).collect();
+
+    // --- Native path --------------------------------------------------
+    for &n in &[1usize, 64, 1024, 8192] {
+        let r = bench(&format!("native-interp/batch{n}"), 3, 30, || {
+            let mut acc = 0.0f64;
+            for i in 0..n {
+                acc += trilinear(
+                    db.grids(),
+                    tids[i] as usize,
+                    coords[i * 3] as f64,
+                    coords[i * 3 + 1] as f64,
+                    coords[i * 3 + 2] as f64,
+                );
+            }
+            black_box(acc);
+        });
+        println!(
+            "    -> {:.1} ns/query",
+            r.median_ms() * 1e6 / n as f64
+        );
+    }
+
+    // --- PJRT path ------------------------------------------------------
+    let artifacts = std::path::Path::new("artifacts");
+    if artifacts.join("interp.hlo.txt").exists() {
+        let svc = PjrtService::start(artifacts, db.grids().to_vec()).unwrap();
+        for &n in &[1usize, 64, 1024, 8192, 16384] {
+            let r = bench(&format!("pjrt-interp/batch{n}"), 2, 15, || {
+                black_box(svc.interp(&tids[..n], &coords[..n * 3]).unwrap());
+            });
+            println!(
+                "    -> {:.1} ns/query (incl. channel + padding to 8192)",
+                r.median_ms() * 1e6 / n as f64
+            );
+        }
+        // MoE kernel.
+        let s = 256usize;
+        let u: Vec<f32> = (0..s * MOE_EXPERTS).map(|_| rng.f64_open() as f32).collect();
+        let alpha: Vec<f32> = (0..s).map(|i| 0.1 + (i as f32) * 0.005).collect();
+        let params: Vec<f32> = (0..s).flat_map(|_| [1.0f32, 100.0, 8192.0]).collect();
+        bench("pjrt-moe-powerlaw/s256", 2, 15, || {
+            black_box(svc.moe(&u, &alpha, &params).unwrap());
+        });
+    } else {
+        println!("(artifacts/ missing — skipping PJRT benches; run `make artifacts`)");
+    }
+
+    // --- Native MoE sampler ----------------------------------------------
+    bench("native-moe-gamma/e128-ep8", 3, 30, || {
+        black_box(moe::ep_imbalance(128, 1.2, 8, 7, 16));
+    });
+}

@@ -1,0 +1,72 @@
+//! Bench: ground-truth simulator step rate — aggregated continuous
+//! batching and disaggregated pools. The simulator must stay fast enough
+//! to serve as the "GPU benchmark" stand-in for paper-scale fidelity
+//! sweeps (≥1000 configs).
+//!
+//! Run: `cargo bench --bench simulator`
+
+use aiconfigurator::config::{EngineConfig, ParallelSpec, RuntimeFlags};
+use aiconfigurator::frameworks::Framework;
+use aiconfigurator::hardware::{h100_sxm, ClusterSpec};
+use aiconfigurator::models::{by_name, Dtype};
+use aiconfigurator::silicon::Silicon;
+use aiconfigurator::simulator::{aggregated::AggregatedSim, disagg::DisaggSim, SimConfig};
+use aiconfigurator::util::bench::{bench, black_box};
+use aiconfigurator::workload::closed_loop;
+
+fn eng(fw: Framework, tp: u32, batch: u32) -> EngineConfig {
+    EngineConfig {
+        framework: fw,
+        parallel: ParallelSpec::tp(tp),
+        batch,
+        weight_dtype: Dtype::Fp8,
+        kv_dtype: Dtype::Fp8,
+        flags: RuntimeFlags::defaults_for(fw),
+    }
+}
+
+fn main() {
+    let cluster = ClusterSpec::new(h100_sxm(), 8, 1);
+    let silicon = Silicon::new(cluster, Framework::TrtLlm.profile());
+
+    for model_name in ["qwen3-32b", "qwen3-235b"] {
+        let model = by_name(model_name).unwrap();
+        let e = eng(Framework::TrtLlm, 4, 32);
+        let trace = closed_loop(64, 2048, 128);
+        let mut iters = 0u64;
+        let r = bench(&format!("sim-aggregated/{model_name}-b32"), 1, 10, || {
+            let sim =
+                AggregatedSim::new(&silicon, &model, &cluster, e, SimConfig::default());
+            let res = sim.run(&trace);
+            iters = res.iterations;
+            black_box(res);
+        });
+        println!(
+            "    -> {iters} iterations/run, {:.1} µs/iteration",
+            r.median_ms() * 1e3 / iters as f64
+        );
+    }
+
+    let model = by_name("qwen3-32b").unwrap();
+    let trace = closed_loop(64, 2048, 128);
+    let mut iters = 0u64;
+    let r = bench("sim-disaggregated/qwen3-32b-4P2D", 1, 10, || {
+        let sim = DisaggSim::new(
+            &silicon,
+            &model,
+            &cluster,
+            eng(Framework::TrtLlm, 1, 2),
+            eng(Framework::TrtLlm, 2, 32),
+            4,
+            2,
+            SimConfig::default(),
+        );
+        let res = sim.run(&trace);
+        iters = res.iterations;
+        black_box(res);
+    });
+    println!(
+        "    -> {iters} iterations/run, {:.1} µs/iteration",
+        r.median_ms() * 1e3 / iters as f64
+    );
+}

@@ -1,0 +1,40 @@
+//! Bench: Table 1 — configuration-search efficiency. Times the full
+//! paper-scale sweep per model and prints the Table 1 rows plus
+//! criterion-style timings for the search core.
+//!
+//! Run: `cargo bench --bench table1_search`
+
+use aiconfigurator::config::WorkloadSpec;
+use aiconfigurator::experiments::table1_efficiency;
+use aiconfigurator::frameworks::Framework;
+use aiconfigurator::hardware::{h100_sxm, ClusterSpec};
+use aiconfigurator::models::{by_name, Dtype};
+use aiconfigurator::perfdb::PerfDatabase;
+use aiconfigurator::search::{SearchSpace, TaskRunner};
+use aiconfigurator::silicon::Silicon;
+use aiconfigurator::util::bench::{bench, black_box, once};
+
+fn main() {
+    println!("--- Table 1 (paper-scale sweep) ---");
+    let rep = table1_efficiency::run(false);
+    println!("{}", rep.render());
+
+    println!("--- search-core timings ---");
+    let cluster = ClusterSpec::new(h100_sxm(), 8, 1);
+    for name in ["llama3.1-8b", "qwen3-32b", "qwen3-235b"] {
+        let model = by_name(name).unwrap();
+        let silicon = Silicon::new(cluster, Framework::TrtLlm.profile());
+        let db = once(&format!("build-db/{name}"), || {
+            black_box(PerfDatabase::build(&silicon, &model, Dtype::Fp8, 1));
+        });
+        let _ = db;
+        let dbv = PerfDatabase::build(&silicon, &model, Dtype::Fp8, 1);
+        let wl = WorkloadSpec::new(name, 2048, 256, f64::INFINITY, 0.0);
+        let space = SearchSpace::default_for(&model, Framework::TrtLlm);
+        bench(&format!("search-sweep/{name}"), 1, 10, || {
+            let runner =
+                TaskRunner::new(&model, &cluster, space.clone(), wl.clone());
+            black_box(runner.run(&dbv));
+        });
+    }
+}

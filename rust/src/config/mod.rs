@@ -1,0 +1,311 @@
+//! Core configuration types: candidate serving configurations, workload
+//! descriptors and SLAs (paper §4.1 "TaskRunner ... constructs a search
+//! space comprised of all the valid candidate serving configurations
+//! based on the user provided workload descriptor").
+
+use crate::frameworks::Framework;
+use crate::models::Dtype;
+use crate::util::json::{self, Json};
+
+/// Serving architectures modeled by AIConfigurator (paper Fig 3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ServingMode {
+    /// Fixed batch processed end-to-end.
+    Static,
+    /// Continuous/inflight batching: prefill+decode mixed per iteration.
+    Aggregated,
+    /// Separate prefill and decode GPU pools with KV transfer.
+    Disaggregated,
+}
+
+impl ServingMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            ServingMode::Static => "static",
+            ServingMode::Aggregated => "aggregated",
+            ServingMode::Disaggregated => "disaggregated",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ServingMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "static" => Some(ServingMode::Static),
+            "aggregated" | "agg" | "ifb" => Some(ServingMode::Aggregated),
+            "disaggregated" | "disagg" | "pd" => Some(ServingMode::Disaggregated),
+            _ => None,
+        }
+    }
+}
+
+/// Model-parallel layout of one engine instance.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct ParallelSpec {
+    /// Tensor parallelism (shards attention heads + FFN columns).
+    pub tp: u32,
+    /// Pipeline parallelism (shards layers).
+    pub pp: u32,
+    /// Expert parallelism (shards MoE experts). 1 for dense models.
+    pub ep: u32,
+    /// Data parallelism of the *attention* path (DeepSeek-style DP
+    /// attention; also used as replica count inside one engine).
+    pub dp: u32,
+}
+
+impl ParallelSpec {
+    pub fn tp(tp: u32) -> Self {
+        ParallelSpec { tp, pp: 1, ep: 1, dp: 1 }
+    }
+
+    /// GPUs used by a single engine instance.
+    ///
+    /// EP shards the expert set across the TP×DP group rather than
+    /// multiplying the GPU count (TRT-LLM/vLLM wide-EP convention), so
+    /// the footprint is tp × pp × dp with ep ≤ tp × dp.
+    pub fn gpus(&self) -> u32 {
+        self.tp * self.pp * self.dp
+    }
+
+    pub fn label(&self) -> String {
+        let mut s = format!("TP{}", self.tp);
+        if self.pp > 1 {
+            s.push_str(&format!("PP{}", self.pp));
+        }
+        if self.ep > 1 {
+            s.push_str(&format!("EP{}", self.ep));
+        }
+        if self.dp > 1 {
+            s.push_str(&format!("DP{}", self.dp));
+        }
+        s
+    }
+}
+
+/// Framework runtime flags the paper's Generator emits (§4.1: CUDA
+/// graphs, KV-cache memory fraction, token capacity, chunked context).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RuntimeFlags {
+    pub cuda_graph: bool,
+    /// `--kv_cache_free_gpu_mem_fraction`.
+    pub kv_frac: f64,
+    /// Context token capacity per iteration (C_ctx, `--max_num_tokens`).
+    pub max_num_tokens: u32,
+    pub chunked_prefill: bool,
+}
+
+impl RuntimeFlags {
+    pub fn defaults_for(fw: Framework) -> Self {
+        let p = fw.profile();
+        RuntimeFlags {
+            cuda_graph: true,
+            kv_frac: p.kv_frac_default,
+            max_num_tokens: p.max_num_tokens_default,
+            chunked_prefill: p.chunked_prefill_default,
+        }
+    }
+}
+
+/// One candidate engine configuration for a single pool.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EngineConfig {
+    pub framework: Framework,
+    pub parallel: ParallelSpec,
+    /// Max batch size (decode slots) per engine instance.
+    pub batch: u32,
+    /// Weight quantization.
+    pub weight_dtype: Dtype,
+    /// KV-cache dtype.
+    pub kv_dtype: Dtype,
+    pub flags: RuntimeFlags,
+}
+
+impl EngineConfig {
+    pub fn label(&self) -> String {
+        format!(
+            "{}-{}-b{}-{}{}",
+            self.framework.name(),
+            self.parallel.label(),
+            self.batch,
+            self.weight_dtype.name(),
+            if self.flags.cuda_graph { "" } else { "-nograph" },
+        )
+    }
+}
+
+/// A full candidate deployment: aggregated (one pool) or disaggregated
+/// ((x)P(y)D composite, paper §4.2.3).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Candidate {
+    Aggregated {
+        engine: EngineConfig,
+        /// Number of identical replicas behind the router.
+        replicas: u32,
+    },
+    Disaggregated {
+        prefill: EngineConfig,
+        decode: EngineConfig,
+        /// x prefill workers.
+        x: u32,
+        /// y decode workers.
+        y: u32,
+    },
+}
+
+impl Candidate {
+    pub fn total_gpus(&self) -> u32 {
+        match self {
+            Candidate::Aggregated { engine, replicas } => engine.parallel.gpus() * replicas,
+            Candidate::Disaggregated { prefill, decode, x, y } => {
+                prefill.parallel.gpus() * x + decode.parallel.gpus() * y
+            }
+        }
+    }
+
+    pub fn mode(&self) -> ServingMode {
+        match self {
+            Candidate::Aggregated { .. } => ServingMode::Aggregated,
+            Candidate::Disaggregated { .. } => ServingMode::Disaggregated,
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            Candidate::Aggregated { engine, replicas } => {
+                format!("{}x {}", replicas, engine.label())
+            }
+            Candidate::Disaggregated { prefill, decode, x, y } => {
+                format!("P:{}x{} D:{}x{}", x, prefill.label(), y, decode.label())
+            }
+        }
+    }
+}
+
+/// Service-level agreement targets (paper §1: TTFT + TPOT SLAs).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Sla {
+    /// Max time-to-first-token, milliseconds.
+    pub ttft_ms: f64,
+    /// Min generation speed, tokens/s per user ( = 1000 / max TPOT).
+    pub min_speed: f64,
+}
+
+impl Sla {
+    pub fn max_tpot_ms(&self) -> f64 {
+        if self.min_speed <= 0.0 {
+            f64::INFINITY
+        } else {
+            1000.0 / self.min_speed
+        }
+    }
+}
+
+/// User-supplied workload descriptor (paper §4.1 step 2).
+#[derive(Clone, Debug)]
+pub struct WorkloadSpec {
+    pub model: String,
+    /// Input sequence length (tokens).
+    pub isl: u32,
+    /// Output sequence length (tokens) — fixed value per the paper §4.2.
+    pub osl: u32,
+    /// Shared prefix length already cached (P in Algorithm 1).
+    pub prefix: u32,
+    pub sla: Sla,
+}
+
+impl WorkloadSpec {
+    pub fn new(model: &str, isl: u32, osl: u32, ttft_ms: f64, min_speed: f64) -> Self {
+        WorkloadSpec {
+            model: model.to_string(),
+            isl,
+            osl,
+            prefix: 0,
+            sla: Sla { ttft_ms, min_speed },
+        }
+    }
+
+    /// Parse from the JSON wire/file format:
+    /// `{"model": "...", "isl": N, "osl": N, "prefix": N,
+    ///   "sla": {"ttft_ms": X, "min_speed": Y}}`.
+    pub fn from_json(j: &Json) -> anyhow::Result<WorkloadSpec> {
+        let sla = j.get("sla").cloned().unwrap_or(Json::obj());
+        Ok(WorkloadSpec {
+            model: j.req_str("model")?.to_string(),
+            isl: j.req_f64("isl")? as u32,
+            osl: j.req_f64("osl")? as u32,
+            prefix: j.f64_or("prefix", 0.0) as u32,
+            sla: Sla {
+                ttft_ms: sla.f64_or("ttft_ms", f64::INFINITY),
+                min_speed: sla.f64_or("min_speed", 0.0),
+            },
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut sla = Json::obj();
+        sla.set("ttft_ms", json::num(self.sla.ttft_ms))
+            .set("min_speed", json::num(self.sla.min_speed));
+        let mut o = Json::obj();
+        o.set("model", json::s(&self.model))
+            .set("isl", json::num(self.isl as f64))
+            .set("osl", json::num(self.osl as f64))
+            .set("prefix", json::num(self.prefix as f64))
+            .set("sla", sla);
+        o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parallel_gpus_and_label() {
+        let p = ParallelSpec { tp: 4, pp: 2, ep: 8, dp: 1 };
+        assert_eq!(p.gpus(), 8);
+        assert_eq!(p.label(), "TP4PP2EP8");
+        assert_eq!(ParallelSpec::tp(2).label(), "TP2");
+    }
+
+    #[test]
+    fn candidate_gpu_accounting() {
+        let e = EngineConfig {
+            framework: Framework::TrtLlm,
+            parallel: ParallelSpec::tp(2),
+            batch: 8,
+            weight_dtype: Dtype::Fp8,
+            kv_dtype: Dtype::Fp8,
+            flags: RuntimeFlags::defaults_for(Framework::TrtLlm),
+        };
+        let agg = Candidate::Aggregated { engine: e, replicas: 4 };
+        assert_eq!(agg.total_gpus(), 8);
+        let mut p = e;
+        p.parallel = ParallelSpec::tp(1);
+        let dis = Candidate::Disaggregated { prefill: p, decode: e, x: 4, y: 2 };
+        assert_eq!(dis.total_gpus(), 4 + 4);
+        assert_eq!(dis.mode(), ServingMode::Disaggregated);
+    }
+
+    #[test]
+    fn sla_tpot() {
+        let sla = Sla { ttft_ms: 1000.0, min_speed: 20.0 };
+        assert_eq!(sla.max_tpot_ms(), 50.0);
+        let open = Sla { ttft_ms: 1000.0, min_speed: 0.0 };
+        assert!(open.max_tpot_ms().is_infinite());
+    }
+
+    #[test]
+    fn workload_json_roundtrip() {
+        let w = WorkloadSpec::new("qwen3-32b", 4000, 500, 1200.0, 60.0);
+        let j = w.to_json();
+        let back = WorkloadSpec::from_json(&j).unwrap();
+        assert_eq!(back.model, "qwen3-32b");
+        assert_eq!(back.isl, 4000);
+        assert_eq!(back.sla.min_speed, 60.0);
+    }
+
+    #[test]
+    fn mode_parse() {
+        assert_eq!(ServingMode::parse("disagg"), Some(ServingMode::Disaggregated));
+        assert_eq!(ServingMode::parse("IFB"), Some(ServingMode::Aggregated));
+        assert_eq!(ServingMode::parse("x"), None);
+    }
+}

@@ -1,0 +1,79 @@
+//! Shared fixtures for the experiment harnesses.
+
+use crate::config::{EngineConfig, ParallelSpec, RuntimeFlags, WorkloadSpec};
+use crate::frameworks::Framework;
+use crate::hardware::{h100_sxm, h200_sxm, ClusterSpec};
+use crate::models::{by_name, Dtype, ModelArch};
+use crate::perfdb::PerfDatabase;
+use crate::silicon::Silicon;
+
+/// Global experiment seed (all harnesses are deterministic).
+pub const SEED: u64 = 0xA1C0;
+
+pub fn h100_node() -> ClusterSpec {
+    ClusterSpec::new(h100_sxm(), 8, 1)
+}
+
+pub fn h200_node() -> ClusterSpec {
+    ClusterSpec::new(h200_sxm(), 8, 1)
+}
+
+pub fn h200_cluster(nodes: u32) -> ClusterSpec {
+    ClusterSpec::new(h200_sxm(), 8, nodes)
+}
+
+/// (silicon, model, db) for a context — the standard triple.
+pub fn context(
+    model_name: &str,
+    cluster: ClusterSpec,
+    fw: Framework,
+) -> (Silicon, ModelArch, PerfDatabase) {
+    let model = by_name(model_name).expect("model");
+    let silicon = Silicon::new(cluster, fw.profile());
+    let db = PerfDatabase::build(&silicon, &model, Dtype::Fp8, SEED);
+    (silicon, model, db)
+}
+
+/// A standard fp8 engine config.
+pub fn engine(fw: Framework, tp: u32, ep: u32, batch: u32) -> EngineConfig {
+    EngineConfig {
+        framework: fw,
+        parallel: ParallelSpec { tp, pp: 1, ep, dp: 1 },
+        batch,
+        weight_dtype: Dtype::Fp8,
+        kv_dtype: Dtype::Fp8,
+        flags: RuntimeFlags::defaults_for(fw),
+    }
+}
+
+/// Standard workload constructor.
+pub fn workload(model: &str, isl: u32, osl: u32, ttft_ms: f64, min_speed: f64) -> WorkloadSpec {
+    WorkloadSpec::new(model, isl, osl, ttft_ms, min_speed)
+}
+
+/// Format a table row with fixed-width columns.
+pub fn row(cols: &[String], widths: &[usize]) -> String {
+    let mut s = String::new();
+    for (c, w) in cols.iter().zip(widths) {
+        s.push_str(&format!("{c:>w$}  ", w = w));
+    }
+    s.trim_end().to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn context_builds() {
+        let (sil, model, db) = context("llama3.1-8b", h100_node(), Framework::TrtLlm);
+        assert_eq!(model.name, "llama3.1-8b");
+        assert_eq!(db.ctx.model, "llama3.1-8b");
+        assert_eq!(sil.cluster.total_gpus(), 8);
+    }
+
+    #[test]
+    fn row_format() {
+        assert_eq!(row(&["a".into(), "bb".into()], &[3, 4]), "  a    bb");
+    }
+}

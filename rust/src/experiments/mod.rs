@@ -1,0 +1,52 @@
+//! Experiment harnesses: one module per table/figure of the paper's
+//! evaluation (§5), each regenerating the same rows/series the paper
+//! reports — prediction vs ground-truth simulator, search efficiency,
+//! Pareto case studies. See DESIGN.md's per-experiment index.
+//!
+//! Every harness takes a `quick` flag: `true` shrinks sweeps for CI /
+//! benches; `false` runs the paper-scale grid (used by
+//! `examples/fidelity_report.rs` and EXPERIMENTS.md).
+
+pub mod common;
+pub mod fig1_pareto;
+pub mod fig5_powerlaw;
+pub mod fig6_agg_fidelity;
+pub mod fig7_disagg_fidelity;
+pub mod fig8_case_study;
+pub mod table1_efficiency;
+
+/// A rendered experiment report (printable, and parseable by tests).
+#[derive(Clone, Debug)]
+pub struct Report {
+    pub title: String,
+    pub lines: Vec<String>,
+    /// Machine-readable key figures, e.g. ("tpot_mape_qwen3-32b", 8.2).
+    pub figures: Vec<(String, f64)>,
+}
+
+impl Report {
+    pub fn new(title: &str) -> Report {
+        Report { title: title.to_string(), lines: Vec::new(), figures: Vec::new() }
+    }
+
+    pub fn line(&mut self, s: impl Into<String>) {
+        self.lines.push(s.into());
+    }
+
+    pub fn fig(&mut self, key: &str, v: f64) {
+        self.figures.push((key.to_string(), v));
+    }
+
+    pub fn get(&self, key: &str) -> Option<f64> {
+        self.figures.iter().find(|(k, _)| k == key).map(|(_, v)| *v)
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = format!("== {} ==\n", self.title);
+        for l in &self.lines {
+            out.push_str(l);
+            out.push('\n');
+        }
+        out
+    }
+}

@@ -1,0 +1,188 @@
+//! Inference-framework profiles (paper §3 "Framework Heterogeneity").
+//!
+//! Each framework exhibits distinct performance characteristics the paper
+//! calls out: TensorRT-LLM (static graph optimization, custom kernels),
+//! vLLM (PagedAttention, Python-based scheduling), SGLang (RadixAttention,
+//! Triton kernels). The profile captures what the operator database and
+//! the serving-mode models need: kernel efficiency multipliers, host
+//! scheduling overheads, CUDA-graph behaviour, and default runtime flags.
+//!
+//! These profiles parameterize *both* sides of the fidelity experiments:
+//! the synthetic silicon (ground truth) applies them exactly, while the
+//! PerfDatabase observes them only through noisy grid profiling — the
+//! same epistemic split as paper-vs-real-hardware.
+
+use crate::models::Dtype;
+
+/// Supported inference backends.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Framework {
+    TrtLlm,
+    Vllm,
+    Sglang,
+}
+
+impl Framework {
+    pub fn name(self) -> &'static str {
+        match self {
+            Framework::TrtLlm => "trtllm",
+            Framework::Vllm => "vllm",
+            Framework::Sglang => "sglang",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Framework> {
+        match s.to_ascii_lowercase().as_str() {
+            "trtllm" | "trt-llm" | "tensorrt-llm" => Some(Framework::TrtLlm),
+            "vllm" => Some(Framework::Vllm),
+            "sglang" => Some(Framework::Sglang),
+            _ => None,
+        }
+    }
+
+    pub fn all() -> [Framework; 3] {
+        [Framework::TrtLlm, Framework::Vllm, Framework::Sglang]
+    }
+
+    pub fn profile(self) -> FrameworkProfile {
+        profile(self)
+    }
+}
+
+/// Performance-relevant behaviour of a serving engine.
+#[derive(Clone, Copy, Debug)]
+pub struct FrameworkProfile {
+    pub framework: Framework,
+    /// GEMM kernel efficiency vs roofline (framework kernel quality).
+    pub gemm_eff: f64,
+    /// Prefill attention kernel efficiency (FlashAttention-class).
+    pub attn_prefill_eff: f64,
+    /// Decode attention kernel efficiency (XQA/PagedAttention-class).
+    pub attn_decode_eff: f64,
+    /// MoE grouped-GEMM efficiency.
+    pub moe_eff: f64,
+    /// Host scheduling overhead per iteration, microseconds
+    /// (vLLM's Python scheduler is the outlier the paper highlights).
+    pub sched_overhead_us: f64,
+    /// Additional per-kernel launch overhead multiplier when CUDA graphs
+    /// are OFF (decode iterations launch hundreds of small kernels).
+    pub no_cudagraph_launch_penalty: f64,
+    /// Fraction of scheduling overhead removed by CUDA graphs in decode.
+    pub cudagraph_saving: f64,
+    /// Default fraction of free GPU memory given to the KV cache
+    /// (`--kv_cache_free_gpu_mem_fraction` and friends).
+    pub kv_frac_default: f64,
+    /// Whether chunked prefill is on by default.
+    pub chunked_prefill_default: bool,
+    /// Default max-num-tokens (context capacity C_ctx) per iteration.
+    pub max_num_tokens_default: u32,
+}
+
+/// Profile database (synthetic-silicon parameterization; see DESIGN.md).
+pub fn profile(fw: Framework) -> FrameworkProfile {
+    match fw {
+        Framework::TrtLlm => FrameworkProfile {
+            framework: fw,
+            gemm_eff: 0.92,
+            attn_prefill_eff: 0.90,
+            attn_decode_eff: 0.88,
+            // Grouped GEMM pays token permute/dispatch + ragged tiling:
+            // ~55% of dense peak even for large token counts.
+            moe_eff: 0.55,
+            sched_overhead_us: 350.0,
+            no_cudagraph_launch_penalty: 2.2,
+            cudagraph_saving: 0.55,
+            kv_frac_default: 0.90,
+            chunked_prefill_default: true,
+            max_num_tokens_default: 8192,
+        },
+        Framework::Vllm => FrameworkProfile {
+            framework: fw,
+            gemm_eff: 0.88,
+            attn_prefill_eff: 0.86,
+            attn_decode_eff: 0.84,
+            moe_eff: 0.45,
+            sched_overhead_us: 900.0,
+            no_cudagraph_launch_penalty: 2.6,
+            cudagraph_saving: 0.62,
+            kv_frac_default: 0.90,
+            chunked_prefill_default: true,
+            max_num_tokens_default: 8192,
+        },
+        Framework::Sglang => FrameworkProfile {
+            framework: fw,
+            gemm_eff: 0.90,
+            attn_prefill_eff: 0.88,
+            attn_decode_eff: 0.87,
+            moe_eff: 0.50,
+            sched_overhead_us: 550.0,
+            no_cudagraph_launch_penalty: 2.4,
+            cudagraph_saving: 0.60,
+            kv_frac_default: 0.88,
+            chunked_prefill_default: true,
+            max_num_tokens_default: 8192,
+        },
+    }
+}
+
+impl FrameworkProfile {
+    /// Quantization formats the engine can serve.
+    pub fn supports_dtype(&self, dt: Dtype) -> bool {
+        match self.framework {
+            Framework::TrtLlm => true,
+            // vLLM/SGLang int4 paths exist but we model fp16/fp8/int8.
+            Framework::Vllm | Framework::Sglang => !matches!(dt, Dtype::Int4),
+        }
+    }
+
+    /// Host overhead of one iteration, given CUDA-graph state and phase.
+    pub fn iter_host_overhead_us(&self, cuda_graph: bool, decode_only: bool) -> f64 {
+        if decode_only && cuda_graph {
+            self.sched_overhead_us * (1.0 - self.cudagraph_saving)
+        } else {
+            self.sched_overhead_us
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(Framework::parse("TensorRT-LLM"), Some(Framework::TrtLlm));
+        assert_eq!(Framework::parse("vllm"), Some(Framework::Vllm));
+        assert_eq!(Framework::parse("sglang"), Some(Framework::Sglang));
+        assert_eq!(Framework::parse("orca"), None);
+    }
+
+    #[test]
+    fn vllm_python_scheduler_is_heaviest() {
+        let t = profile(Framework::TrtLlm);
+        let v = profile(Framework::Vllm);
+        let s = profile(Framework::Sglang);
+        assert!(v.sched_overhead_us > s.sched_overhead_us);
+        assert!(s.sched_overhead_us > t.sched_overhead_us);
+    }
+
+    #[test]
+    fn cudagraph_reduces_decode_overhead() {
+        let p = profile(Framework::Vllm);
+        assert!(
+            p.iter_host_overhead_us(true, true) < p.iter_host_overhead_us(false, true)
+        );
+        // Mixed iterations don't benefit (graphs capture decode shapes).
+        assert_eq!(
+            p.iter_host_overhead_us(true, false),
+            p.iter_host_overhead_us(false, false)
+        );
+    }
+
+    #[test]
+    fn dtype_support() {
+        assert!(profile(Framework::TrtLlm).supports_dtype(Dtype::Int4));
+        assert!(!profile(Framework::Vllm).supports_dtype(Dtype::Int4));
+        assert!(profile(Framework::Sglang).supports_dtype(Dtype::Fp8));
+    }
+}

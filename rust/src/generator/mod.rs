@@ -1,0 +1,149 @@
+//! Generator (paper §4.1 step 5): convert a recommended candidate into
+//! version-compatible launch files for TensorRT-LLM, vLLM or SGLang,
+//! setting the optimal serving flags (`--enable_cuda_graph`,
+//! `--kv_cache_free_gpu_mem_fraction`, `--enable_chunked_context`,
+//! max-token capacity, parallelism), plus a Dynamo deployment spec for
+//! disaggregated composites.
+
+pub mod dynamo;
+pub mod sglang;
+pub mod trtllm;
+pub mod vllm;
+
+use crate::config::{Candidate, EngineConfig, WorkloadSpec};
+use crate::frameworks::Framework;
+
+/// A generated launch bundle: (filename, contents) pairs.
+#[derive(Clone, Debug)]
+pub struct LaunchBundle {
+    pub files: Vec<(String, String)>,
+}
+
+impl LaunchBundle {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.files.iter().find(|(n, _)| n == name).map(|(_, c)| c.as_str())
+    }
+
+    pub fn write_to(&self, dir: &std::path::Path) -> anyhow::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        for (name, content) in &self.files {
+            std::fs::write(dir.join(name), content)?;
+        }
+        Ok(())
+    }
+}
+
+/// Generate launch files for a candidate.
+pub fn generate(cand: &Candidate, model_hf_id: &str, wl: &WorkloadSpec) -> LaunchBundle {
+    match cand {
+        Candidate::Aggregated { engine, replicas } => {
+            let mut files = engine_files(engine, model_hf_id, wl, "server");
+            files.push((
+                "README.launch.md".to_string(),
+                format!(
+                    "# AIConfigurator recommendation\n\nMode: aggregated, {replicas} replica(s) of {}\nWorkload: ISL={} OSL={} | SLA: TTFT<={}ms speed>={} tok/s/user\n",
+                    engine.label(), wl.isl, wl.osl, wl.sla.ttft_ms, wl.sla.min_speed
+                ),
+            ));
+            LaunchBundle { files }
+        }
+        Candidate::Disaggregated { prefill, decode, x, y } => {
+            let mut files = engine_files(prefill, model_hf_id, wl, "prefill");
+            files.extend(engine_files(decode, model_hf_id, wl, "decode"));
+            files.push((
+                "dynamo_disagg.yaml".to_string(),
+                dynamo::disagg_yaml(prefill, decode, *x, *y, model_hf_id, wl),
+            ));
+            LaunchBundle { files }
+        }
+    }
+}
+
+fn engine_files(
+    eng: &EngineConfig,
+    model: &str,
+    wl: &WorkloadSpec,
+    role: &str,
+) -> Vec<(String, String)> {
+    match eng.framework {
+        Framework::TrtLlm => vec![
+            (format!("trtllm_{role}.yaml"), trtllm::extra_llm_api_config(eng, wl)),
+            (format!("launch_{role}.sh"), trtllm::serve_command(eng, model, wl)),
+        ],
+        Framework::Vllm => vec![(format!("launch_{role}.sh"), vllm::serve_command(eng, model, wl))],
+        Framework::Sglang => {
+            vec![(format!("launch_{role}.sh"), sglang::serve_command(eng, model, wl))]
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ParallelSpec, RuntimeFlags, Sla};
+    use crate::models::Dtype;
+
+    fn eng(fw: Framework) -> EngineConfig {
+        EngineConfig {
+            framework: fw,
+            parallel: ParallelSpec { tp: 2, pp: 1, ep: 1, dp: 1 },
+            batch: 8,
+            weight_dtype: Dtype::Fp8,
+            kv_dtype: Dtype::Fp8,
+            flags: RuntimeFlags {
+                cuda_graph: true,
+                kv_frac: 0.9,
+                max_num_tokens: 8192,
+                chunked_prefill: true,
+            },
+        }
+    }
+
+    fn wl() -> WorkloadSpec {
+        WorkloadSpec {
+            model: "qwen3-32b".into(),
+            isl: 4000,
+            osl: 500,
+            prefix: 0,
+            sla: Sla { ttft_ms: 1200.0, min_speed: 60.0 },
+        }
+    }
+
+    #[test]
+    fn aggregated_bundle_has_launch_script() {
+        let c = Candidate::Aggregated { engine: eng(Framework::TrtLlm), replicas: 1 };
+        let b = generate(&c, "Qwen/Qwen3-32B-FP8", &wl());
+        let sh = b.get("launch_server.sh").unwrap();
+        assert!(sh.contains("trtllm-serve"));
+        assert!(sh.contains("--tp_size 2"));
+        let yaml = b.get("trtllm_server.yaml").unwrap();
+        assert!(yaml.contains("kv_cache_config"));
+        assert!(yaml.contains("0.9"));
+    }
+
+    #[test]
+    fn disagg_bundle_has_dynamo_spec() {
+        let mut p = eng(Framework::TrtLlm);
+        p.parallel = ParallelSpec::tp(1);
+        p.batch = 1;
+        let c = Candidate::Disaggregated { prefill: p, decode: eng(Framework::TrtLlm), x: 4, y: 2 };
+        let b = generate(&c, "Qwen/Qwen3-32B-FP8", &wl());
+        let y = b.get("dynamo_disagg.yaml").unwrap();
+        assert!(y.contains("prefill"));
+        assert!(y.contains("replicas: 4"));
+        assert!(y.contains("replicas: 2"));
+        assert!(b.get("launch_prefill.sh").is_some());
+        assert!(b.get("launch_decode.sh").is_some());
+    }
+
+    #[test]
+    fn all_frameworks_generate() {
+        for fw in Framework::all() {
+            let c = Candidate::Aggregated { engine: eng(fw), replicas: 1 };
+            let b = generate(&c, "org/model", &wl());
+            assert!(!b.files.is_empty(), "{fw:?}");
+            let sh = b.get("launch_server.sh").unwrap();
+            assert!(sh.contains("org/model"));
+        }
+    }
+}

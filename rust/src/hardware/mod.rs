@@ -1,0 +1,234 @@
+//! GPU and cluster specifications (paper §4.4 "hardware specifications:
+//! memory bandwidth, compute throughput, interconnect bandwidth").
+//!
+//! Public datasheet numbers for the platforms the paper's database covers
+//! (Ampere → Blackwell). Crossover behaviour (agg vs disagg, TP vs EP)
+//! is driven by the *ratios* of these constants, which is why the
+//! synthetic-silicon substitution preserves the paper's conclusions
+//! (DESIGN.md).
+
+use crate::models::Dtype;
+
+/// A single GPU's performance envelope.
+#[derive(Clone, Copy, Debug)]
+pub struct GpuSpec {
+    pub name: &'static str,
+    /// HBM capacity in GiB.
+    pub mem_gib: f64,
+    /// HBM bandwidth, GB/s.
+    pub mem_bw_gbs: f64,
+    /// Dense tensor-core TFLOPS at fp16.
+    pub fp16_tflops: f64,
+    /// Dense tensor-core TFLOPS at fp8 (0 = unsupported).
+    pub fp8_tflops: f64,
+    /// Dense int8 TOPS.
+    pub int8_tops: f64,
+    /// NVLink bandwidth per GPU (unidirectional aggregate), GB/s.
+    pub nvlink_gbs: f64,
+    /// Streaming multiprocessor count (wave quantization granularity).
+    pub sm_count: u32,
+    /// Kernel launch overhead, microseconds.
+    pub launch_us: f64,
+}
+
+impl GpuSpec {
+    /// Peak dense TFLOPS for a dtype (int4 runs on the int8 path at 2×
+    /// weight-bandwidth advantage but same MACs on these parts).
+    pub fn tflops(&self, dt: Dtype) -> f64 {
+        match dt {
+            Dtype::Fp16 => self.fp16_tflops,
+            Dtype::Fp8 => {
+                if self.fp8_tflops > 0.0 {
+                    self.fp8_tflops
+                } else {
+                    self.int8_tops // Ampere: fall back to int8 path
+                }
+            }
+            Dtype::Int8 | Dtype::Int4 => self.int8_tops,
+        }
+    }
+
+    pub fn supports(&self, dt: Dtype) -> bool {
+        !matches!(dt, Dtype::Fp8) || self.fp8_tflops > 0.0
+    }
+
+    pub fn mem_bytes(&self) -> f64 {
+        self.mem_gib * 1024.0 * 1024.0 * 1024.0
+    }
+}
+
+/// NVIDIA A100 SXM4 80GB (Ampere).
+pub fn a100_sxm() -> GpuSpec {
+    GpuSpec {
+        name: "a100-sxm",
+        mem_gib: 80.0,
+        mem_bw_gbs: 2039.0,
+        fp16_tflops: 312.0,
+        fp8_tflops: 0.0,
+        int8_tops: 624.0,
+        nvlink_gbs: 300.0,
+        sm_count: 108,
+        launch_us: 4.0,
+    }
+}
+
+/// NVIDIA H100 SXM5 80GB (Hopper) — paper §5.1 testbed.
+pub fn h100_sxm() -> GpuSpec {
+    GpuSpec {
+        name: "h100-sxm",
+        mem_gib: 80.0,
+        mem_bw_gbs: 3350.0,
+        fp16_tflops: 989.0,
+        fp8_tflops: 1979.0,
+        int8_tops: 1979.0,
+        nvlink_gbs: 450.0,
+        sm_count: 132,
+        launch_us: 3.0,
+    }
+}
+
+/// NVIDIA H200 SXM 141GB (Hopper refresh) — paper §5.4 / Fig 1 testbed.
+pub fn h200_sxm() -> GpuSpec {
+    GpuSpec {
+        name: "h200-sxm",
+        mem_gib: 141.0,
+        mem_bw_gbs: 4800.0,
+        fp16_tflops: 989.0,
+        fp8_tflops: 1979.0,
+        int8_tops: 1979.0,
+        nvlink_gbs: 450.0,
+        sm_count: 132,
+        launch_us: 3.0,
+    }
+}
+
+/// NVIDIA B200 192GB (Blackwell).
+pub fn b200() -> GpuSpec {
+    GpuSpec {
+        name: "b200",
+        mem_gib: 192.0,
+        mem_bw_gbs: 8000.0,
+        fp16_tflops: 2250.0,
+        fp8_tflops: 4500.0,
+        int8_tops: 4500.0,
+        nvlink_gbs: 900.0,
+        sm_count: 148,
+        launch_us: 3.0,
+    }
+}
+
+pub fn gpu_by_name(name: &str) -> Option<GpuSpec> {
+    match name.to_ascii_lowercase().as_str() {
+        "a100" | "a100-sxm" => Some(a100_sxm()),
+        "h100" | "h100-sxm" => Some(h100_sxm()),
+        "h200" | "h200-sxm" => Some(h200_sxm()),
+        "b200" => Some(b200()),
+        _ => None,
+    }
+}
+
+/// Link class a collective runs over — decides effective bandwidth.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LinkKind {
+    /// Intra-node NVLink/NVSwitch domain.
+    NvLink,
+    /// Cross-node InfiniBand fabric.
+    InfiniBand,
+}
+
+/// A homogeneous cluster: `num_nodes` nodes of `gpus_per_node` GPUs.
+#[derive(Clone, Copy, Debug)]
+pub struct ClusterSpec {
+    pub gpu: GpuSpec,
+    pub gpus_per_node: u32,
+    pub num_nodes: u32,
+    /// Per-GPU InfiniBand bandwidth (unidirectional), GB/s.
+    /// 400 Gb/s NDR per GPU = 50 GB/s.
+    pub ib_gbs: f64,
+    /// Base latency of an IB hop, microseconds.
+    pub ib_latency_us: f64,
+    /// Base latency of an NVLink hop, microseconds.
+    pub nvlink_latency_us: f64,
+}
+
+impl ClusterSpec {
+    pub fn new(gpu: GpuSpec, gpus_per_node: u32, num_nodes: u32) -> Self {
+        ClusterSpec {
+            gpu,
+            gpus_per_node,
+            num_nodes,
+            ib_gbs: 50.0,
+            ib_latency_us: 8.0,
+            nvlink_latency_us: 2.0,
+        }
+    }
+
+    pub fn total_gpus(&self) -> u32 {
+        self.gpus_per_node * self.num_nodes
+    }
+
+    /// Which link class a `gpus`-wide collective uses.
+    pub fn link_for(&self, gpus: u32) -> LinkKind {
+        if gpus <= self.gpus_per_node {
+            LinkKind::NvLink
+        } else {
+            LinkKind::InfiniBand
+        }
+    }
+
+    /// Effective point-to-point bandwidth between two specific GPUs.
+    pub fn p2p_bw_gbs(&self, link: LinkKind) -> f64 {
+        match link {
+            LinkKind::NvLink => self.gpu.nvlink_gbs,
+            LinkKind::InfiniBand => self.ib_gbs,
+        }
+    }
+
+    pub fn link_latency_us(&self, link: LinkKind) -> f64 {
+        match link {
+            LinkKind::NvLink => self.nvlink_latency_us,
+            LinkKind::InfiniBand => self.ib_latency_us,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry() {
+        for n in ["a100", "h100", "h200", "b200"] {
+            assert!(gpu_by_name(n).is_some());
+        }
+        assert!(gpu_by_name("v100").is_none());
+    }
+
+    #[test]
+    fn dtype_support() {
+        assert!(!a100_sxm().supports(Dtype::Fp8));
+        assert!(h100_sxm().supports(Dtype::Fp8));
+        assert_eq!(h100_sxm().tflops(Dtype::Fp8), 1979.0);
+        // Ampere fp8 request falls back to the int8 path.
+        assert_eq!(a100_sxm().tflops(Dtype::Fp8), 624.0);
+    }
+
+    #[test]
+    fn cluster_topology() {
+        let c = ClusterSpec::new(h100_sxm(), 8, 2);
+        assert_eq!(c.total_gpus(), 16);
+        assert_eq!(c.link_for(8), LinkKind::NvLink);
+        assert_eq!(c.link_for(16), LinkKind::InfiniBand);
+        assert!(c.p2p_bw_gbs(LinkKind::NvLink) > c.p2p_bw_gbs(LinkKind::InfiniBand));
+    }
+
+    #[test]
+    fn h200_vs_h100() {
+        // Same compute, more/faster memory — the ratio that drives
+        // decode-heavy configs toward H200.
+        let (a, b) = (h100_sxm(), h200_sxm());
+        assert_eq!(a.fp16_tflops, b.fp16_tflops);
+        assert!(b.mem_bw_gbs > a.mem_bw_gbs);
+        assert!(b.mem_gib > a.mem_gib);
+    }
+}

@@ -1,0 +1,318 @@
+//! `aiconfigurator` — CLI for the AIConfigurator reproduction.
+//!
+//! Subcommands mirror the paper's workflow (§4.1):
+//!   build-db     offline profiling → perf database JSON (PerfDatabase)
+//!   search       TaskRunner + Pareto analyzer + Generator
+//!   simulate     ground-truth discrete-event simulation of one config
+//!   experiment   regenerate a paper table/figure (fig1..fig8, table1)
+//!   serve        run the TCP config-search service
+//!
+//! (Arg parsing is hand-rolled: the offline build environment has no
+//! clap — see DESIGN.md substitutions.)
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use aiconfigurator::config::{ServingMode, WorkloadSpec};
+use aiconfigurator::experiments;
+use aiconfigurator::frameworks::Framework;
+use aiconfigurator::hardware::{gpu_by_name, ClusterSpec};
+use aiconfigurator::models::{by_name, Dtype};
+use aiconfigurator::pareto;
+use aiconfigurator::perfdb::{LatencyOracle, PerfDatabase};
+use aiconfigurator::runtime::{PjrtOracle, PjrtService};
+use aiconfigurator::search::{SearchSpace, TaskRunner};
+use aiconfigurator::service::{SearchServer, ServerConfig};
+use aiconfigurator::silicon::Silicon;
+use aiconfigurator::simulator::aggregated::AggregatedSim;
+use aiconfigurator::simulator::SimConfig;
+use aiconfigurator::workload::closed_loop;
+use aiconfigurator::{generator, simulator};
+
+const USAGE: &str = "\
+aiconfigurator — lightning-fast LLM serving configuration search (reproduction)
+
+USAGE:
+  aiconfigurator search     --model <name> [--gpu h100] [--gpus-per-node 8]
+                            [--nodes 1] [--framework trtllm] --isl N --osl N
+                            [--ttft MS] [--speed TOK_S] [--modes agg,disagg]
+                            [--top 5] [--out-dir DIR] [--pjrt ARTIFACTS_DIR]
+  aiconfigurator build-db   --model <name> [--gpu h100] [--framework trtllm]
+                            [--nodes 1] --out FILE.json
+  aiconfigurator simulate   --model <name> [--gpu h100] [--framework trtllm]
+                            [--tp 1] [--ep 1] [--batch 8] --isl N --osl N
+                            [--requests 32]
+  aiconfigurator experiment <fig1|fig5|fig6|fig7|fig8|table1|all> [--full]
+  aiconfigurator serve      [--addr 127.0.0.1:7788] [--pjrt ARTIFACTS_DIR]
+                            [--model <name> --gpu h100 --framework trtllm]
+
+Models: llama3.1-8b qwen3-32b qwen3-235b deepseek-v3 mixtral-8x7b gpt-oss-120b
+GPUs:   a100 h100 h200 b200    Frameworks: trtllm vllm sglang
+";
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() {
+        eprint!("{USAGE}");
+        std::process::exit(2);
+    }
+    let cmd = args[0].clone();
+    let (flags, positional) = parse_flags(&args[1..]);
+    let result = match cmd.as_str() {
+        "search" => cmd_search(&flags),
+        "build-db" => cmd_build_db(&flags),
+        "simulate" => cmd_simulate(&flags),
+        "experiment" => cmd_experiment(&positional, &flags),
+        "serve" => cmd_serve(&flags),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => Err(anyhow::anyhow!("unknown command '{other}'\n{USAGE}")),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn parse_flags(args: &[String]) -> (HashMap<String, String>, Vec<String>) {
+    let mut flags = HashMap::new();
+    let mut positional = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(name) = args[i].strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                flags.insert(name.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(name.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            positional.push(args[i].clone());
+            i += 1;
+        }
+    }
+    (flags, positional)
+}
+
+fn flag<'a>(f: &'a HashMap<String, String>, k: &str, default: &'a str) -> &'a str {
+    f.get(k).map(String::as_str).unwrap_or(default)
+}
+
+fn flag_u32(f: &HashMap<String, String>, k: &str, default: u32) -> anyhow::Result<u32> {
+    match f.get(k) {
+        None => Ok(default),
+        Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{k} must be an integer, got '{v}'")),
+    }
+}
+
+fn flag_f64(f: &HashMap<String, String>, k: &str, default: f64) -> anyhow::Result<f64> {
+    match f.get(k) {
+        None => Ok(default),
+        Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{k} must be a number, got '{v}'")),
+    }
+}
+
+struct Ctx {
+    model: aiconfigurator::models::ModelArch,
+    cluster: ClusterSpec,
+    framework: Framework,
+    silicon: Silicon,
+}
+
+fn load_ctx(f: &HashMap<String, String>) -> anyhow::Result<Ctx> {
+    let model_name = f.get("model").ok_or_else(|| anyhow::anyhow!("--model is required"))?;
+    let model = by_name(model_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown model '{model_name}' (see --help)"))?;
+    let gpu_name = flag(f, "gpu", "h100");
+    let gpu = gpu_by_name(gpu_name).ok_or_else(|| anyhow::anyhow!("unknown gpu '{gpu_name}'"))?;
+    let cluster =
+        ClusterSpec::new(gpu, flag_u32(f, "gpus-per-node", 8)?, flag_u32(f, "nodes", 1)?);
+    let fw_name = flag(f, "framework", "trtllm");
+    let framework = Framework::parse(fw_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown framework '{fw_name}'"))?;
+    Ok(Ctx { model, cluster, framework, silicon: Silicon::new(cluster, framework.profile()) })
+}
+
+fn cmd_search(f: &HashMap<String, String>) -> anyhow::Result<()> {
+    let ctx = load_ctx(f)?;
+    let isl = flag_u32(f, "isl", 0)?;
+    let osl = flag_u32(f, "osl", 0)?;
+    anyhow::ensure!(isl > 0 && osl > 0, "--isl and --osl are required");
+    let wl = WorkloadSpec::new(
+        ctx.model.name,
+        isl,
+        osl,
+        flag_f64(f, "ttft", f64::INFINITY)?,
+        flag_f64(f, "speed", 0.0)?,
+    );
+
+    eprintln!("building performance database (offline profiling of silicon)...");
+    let db = PerfDatabase::build(&ctx.silicon, &ctx.model, Dtype::Fp8, 0xA1C0);
+
+    let mut space = SearchSpace::default_for(&ctx.model, ctx.framework);
+    if let Some(modes) = f.get("modes") {
+        space.modes = modes.split(',').filter_map(ServingMode::parse).collect();
+        anyhow::ensure!(!space.modes.is_empty(), "--modes must name agg and/or disagg");
+    }
+
+    let runner = TaskRunner::new(&ctx.model, &ctx.cluster, space, wl.clone());
+    // Optional PJRT-backed hot path (AOT Pallas kernel via the runtime).
+    let report = if let Some(dir) = f.get("pjrt") {
+        eprintln!("loading AOT artifacts from {dir} (PJRT interp on the hot path)...");
+        let svc = PjrtService::start(std::path::Path::new(dir), db.grids().to_vec())?;
+        let oracle = PjrtOracle { svc: &svc, db: &db };
+        runner.run(&oracle)
+    } else {
+        runner.run(&db as &dyn LatencyOracle)
+    };
+
+    let analysis = pareto::analyze(&report.evaluated, &wl.sla);
+    println!(
+        "searched {} configs ({} candidates) in {:.2}s — median {:.2} ms/config; {} SLA-feasible",
+        report.configs_priced,
+        report.evaluated.len(),
+        report.elapsed_s,
+        report.median_config_ms,
+        analysis.feasible.len()
+    );
+    let top = flag_u32(f, "top", 5)? as usize;
+    println!(
+        "{:<6} {:>14} {:>12} {:>10} {:>6}  configuration",
+        "mode", "thru t/s/GPU", "speed t/s/u", "TTFT ms", "GPUs"
+    );
+    for e in analysis.feasible.iter().take(top) {
+        println!(
+            "{:<6} {:>14.1} {:>12.1} {:>10.1} {:>6}  {}",
+            match e.cand.mode() {
+                ServingMode::Aggregated => "agg",
+                ServingMode::Disaggregated => "disagg",
+                ServingMode::Static => "static",
+            },
+            e.est.thru_per_gpu,
+            e.est.speed,
+            e.est.ttft_ms,
+            e.cand.total_gpus(),
+            e.cand.label()
+        );
+    }
+    if let Some(best) = analysis.best() {
+        if let Some(dir) = f.get("out-dir") {
+            let bundle = generator::generate(&best.cand, ctx.model.name, &wl);
+            bundle.write_to(std::path::Path::new(dir))?;
+            println!("wrote launch bundle to {dir}/");
+        }
+    } else {
+        println!("no configuration satisfies the SLA — relax --ttft/--speed");
+    }
+    Ok(())
+}
+
+fn cmd_build_db(f: &HashMap<String, String>) -> anyhow::Result<()> {
+    let ctx = load_ctx(f)?;
+    let out = f.get("out").ok_or_else(|| anyhow::anyhow!("--out is required"))?;
+    let db = PerfDatabase::build(&ctx.silicon, &ctx.model, Dtype::Fp8, 0xA1C0);
+    db.save(std::path::Path::new(out))?;
+    println!(
+        "profiled {} ({} on {}) -> {out} (simulated campaign cost {:.1} GPU-hours)",
+        ctx.model.name,
+        ctx.framework.name(),
+        ctx.cluster.gpu.name,
+        db.profile_cost_hours
+    );
+    Ok(())
+}
+
+fn cmd_simulate(f: &HashMap<String, String>) -> anyhow::Result<()> {
+    let ctx = load_ctx(f)?;
+    let isl = flag_u32(f, "isl", 1024)?;
+    let osl = flag_u32(f, "osl", 128)?;
+    let batch = flag_u32(f, "batch", 8)?;
+    let eng = aiconfigurator::config::EngineConfig {
+        framework: ctx.framework,
+        parallel: aiconfigurator::config::ParallelSpec {
+            tp: flag_u32(f, "tp", 1)?,
+            pp: 1,
+            ep: flag_u32(f, "ep", 1)?,
+            dp: 1,
+        },
+        batch,
+        weight_dtype: Dtype::Fp8,
+        kv_dtype: Dtype::Fp8,
+        flags: aiconfigurator::config::RuntimeFlags::defaults_for(ctx.framework),
+    };
+    let n = flag_u32(f, "requests", 4 * batch)? as usize;
+    let sim = AggregatedSim::new(&ctx.silicon, &ctx.model, &ctx.cluster, eng, SimConfig::default());
+    let res = sim.run(&closed_loop(n, isl, osl));
+    print_sim(&res);
+    Ok(())
+}
+
+fn print_sim(res: &simulator::SimResult) {
+    println!(
+        "completed {} requests in {:.1}s over {} iterations",
+        res.completed,
+        res.makespan_ms / 1000.0,
+        res.iterations
+    );
+    println!(
+        "TTFT mean {:.1} ms (p99 {:.1}) | TPOT mean {:.2} ms | speed {:.1} tok/s/user | {:.1} tok/s/GPU",
+        res.mean_ttft_ms(),
+        res.p99_ttft_ms(),
+        res.mean_tpot_ms(),
+        res.speed(),
+        res.thru_per_gpu()
+    );
+}
+
+fn cmd_experiment(pos: &[String], f: &HashMap<String, String>) -> anyhow::Result<()> {
+    let which = pos.first().map(String::as_str).unwrap_or("all");
+    let quick = !f.contains_key("full");
+    let run_one = |name: &str| -> anyhow::Result<()> {
+        let rep = match name {
+            "fig1" => experiments::fig1_pareto::run(quick),
+            "fig5" => experiments::fig5_powerlaw::run(quick),
+            "fig6" => experiments::fig6_agg_fidelity::run(quick),
+            "fig7" => experiments::fig7_disagg_fidelity::run(quick),
+            "fig8" | "table2" => experiments::fig8_case_study::run(quick),
+            "table1" => experiments::table1_efficiency::run(quick),
+            other => anyhow::bail!("unknown experiment '{other}'"),
+        };
+        println!("{}", rep.render());
+        Ok(())
+    };
+    if which == "all" {
+        for n in ["fig1", "fig5", "fig6", "fig7", "fig8", "table1"] {
+            run_one(n)?;
+        }
+        Ok(())
+    } else {
+        run_one(which)
+    }
+}
+
+fn cmd_serve(f: &HashMap<String, String>) -> anyhow::Result<()> {
+    let cfg = ServerConfig {
+        addr: flag(f, "addr", "127.0.0.1:7788").to_string(),
+        artifacts: f.get("pjrt").map(PathBuf::from),
+        seed: 0xA1C0,
+    };
+    let pjrt_ctx = if cfg.artifacts.is_some() {
+        let model = f.get("model").map(String::as_str).unwrap_or("qwen3-32b");
+        Some((
+            model,
+            flag(f, "gpu", "h100"),
+            flag_u32(f, "gpus-per-node", 8)?,
+            flag_u32(f, "nodes", 1)?,
+            Framework::parse(flag(f, "framework", "trtllm"))
+                .ok_or_else(|| anyhow::anyhow!("unknown framework"))?,
+        ))
+    } else {
+        None
+    };
+    let (server, addr) = SearchServer::bind(&cfg, pjrt_ctx)?;
+    println!("aiconfigurator service listening on {addr} (JSON-lines)");
+    server.run()
+}

@@ -1,0 +1,142 @@
+//! Fidelity metrics (paper §5): MAPE, Pearson correlation, banded MAPE
+//! (the 25–50 tokens/s/user interactive region of Fig 7).
+
+/// Mean Absolute Percentage Error between predictions and ground truth.
+/// Pairs with non-positive truth are skipped.
+pub fn mape(pred: &[f64], truth: &[f64]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    let mut sum = 0.0;
+    let mut n = 0usize;
+    for (p, t) in pred.iter().zip(truth) {
+        if *t > 0.0 {
+            sum += ((p - t) / t).abs();
+            n += 1;
+        }
+    }
+    if n == 0 {
+        0.0
+    } else {
+        100.0 * sum / n as f64
+    }
+}
+
+/// Pearson correlation coefficient r.
+pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len();
+    if n < 2 {
+        return 0.0;
+    }
+    let mx = xs.iter().sum::<f64>() / n as f64;
+    let my = ys.iter().sum::<f64>() / n as f64;
+    let (mut sxy, mut sxx, mut syy) = (0.0, 0.0, 0.0);
+    for (x, y) in xs.iter().zip(ys) {
+        sxy += (x - mx) * (y - my);
+        sxx += (x - mx) * (x - mx);
+        syy += (y - my) * (y - my);
+    }
+    if sxx == 0.0 || syy == 0.0 {
+        0.0
+    } else {
+        sxy / (sxx * syy).sqrt()
+    }
+}
+
+/// MAPE restricted to samples whose `band_key` lies in [lo, hi]
+/// (e.g. Fig 7's 25–50 tokens/s/user interactive region).
+pub fn banded_mape(pred: &[f64], truth: &[f64], band_key: &[f64], lo: f64, hi: f64) -> f64 {
+    let mut p = Vec::new();
+    let mut t = Vec::new();
+    for i in 0..pred.len() {
+        if band_key[i] >= lo && band_key[i] <= hi {
+            p.push(pred[i]);
+            t.push(truth[i]);
+        }
+    }
+    mape(&p, &t)
+}
+
+/// A (prediction, truth) accumulator for fidelity reports.
+#[derive(Clone, Debug, Default)]
+pub struct FidelitySet {
+    pub pred: Vec<f64>,
+    pub truth: Vec<f64>,
+}
+
+impl FidelitySet {
+    pub fn push(&mut self, pred: f64, truth: f64) {
+        self.pred.push(pred);
+        self.truth.push(truth);
+    }
+
+    pub fn mape(&self) -> f64 {
+        mape(&self.pred, &self.truth)
+    }
+
+    pub fn r(&self) -> f64 {
+        pearson(&self.pred, &self.truth)
+    }
+
+    pub fn len(&self) -> usize {
+        self.pred.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pred.is_empty()
+    }
+
+    /// Drop pairs whose truth exceeds `cap` (the paper filters
+    /// TTFT > 1000 ms as pathological queuing outliers).
+    pub fn filtered(&self, cap: f64) -> FidelitySet {
+        let mut out = FidelitySet::default();
+        for (p, t) in self.pred.iter().zip(&self.truth) {
+            if *t <= cap {
+                out.push(*p, *t);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mape_basics() {
+        assert_eq!(mape(&[110.0], &[100.0]), 10.0);
+        assert_eq!(mape(&[90.0, 110.0], &[100.0, 100.0]), 10.0);
+        assert_eq!(mape(&[], &[]), 0.0);
+        // zero-truth pairs skipped
+        assert_eq!(mape(&[5.0, 110.0], &[0.0, 100.0]), 10.0);
+    }
+
+    #[test]
+    fn pearson_basics() {
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let y = [2.0, 4.0, 6.0, 8.0];
+        assert!((pearson(&x, &y) - 1.0).abs() < 1e-12);
+        let yn: Vec<f64> = y.iter().map(|v| -v).collect();
+        assert!((pearson(&x, &yn) + 1.0).abs() < 1e-12);
+        assert_eq!(pearson(&[1.0], &[1.0]), 0.0);
+    }
+
+    #[test]
+    fn banded() {
+        let pred = [10.0, 20.0, 30.0];
+        let truth = [10.0, 10.0, 10.0];
+        let key = [1.0, 5.0, 9.0];
+        // only the middle sample is in [4, 6]
+        assert_eq!(banded_mape(&pred, &truth, &key, 4.0, 6.0), 100.0);
+    }
+
+    #[test]
+    fn fidelity_set_filter() {
+        let mut f = FidelitySet::default();
+        f.push(100.0, 90.0);
+        f.push(5000.0, 4000.0); // outlier
+        let g = f.filtered(1000.0);
+        assert_eq!(g.len(), 1);
+        assert!(g.mape() > 0.0);
+    }
+}

@@ -1,0 +1,256 @@
+//! Model architecture registry (paper §4.4 "popular open-weights models").
+//!
+//! Performance modeling needs only architecture *shapes* — layer counts,
+//! hidden sizes, attention layout (MHA/GQA/MLA), MoE expert geometry —
+//! never weights. All numbers below are the public configs of the models
+//! the paper evaluates (Qwen3-32B, Qwen3-235B-A22B, DeepSeek-V3,
+//! Llama3.1-8B) plus the other families the PerfDatabase covers
+//! (Mixtral, GPT-OSS).
+
+pub mod presets;
+
+pub use presets::{by_name, list_names};
+
+/// Numeric formats the operator database is parameterized over.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Dtype {
+    Fp16,
+    Fp8,
+    Int8,
+    Int4,
+}
+
+impl Dtype {
+    /// Bytes per element (Int4 is 0.5 — use [`Dtype::bits`] for exact math).
+    pub fn bytes(self) -> f64 {
+        self.bits() as f64 / 8.0
+    }
+
+    pub fn bits(self) -> u32 {
+        match self {
+            Dtype::Fp16 => 16,
+            Dtype::Fp8 | Dtype::Int8 => 8,
+            Dtype::Int4 => 4,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Dtype::Fp16 => "fp16",
+            Dtype::Fp8 => "fp8",
+            Dtype::Int8 => "int8",
+            Dtype::Int4 => "int4",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Dtype> {
+        match s.to_ascii_lowercase().as_str() {
+            "fp16" | "bf16" | "half" => Some(Dtype::Fp16),
+            "fp8" | "e4m3" => Some(Dtype::Fp8),
+            "int8" => Some(Dtype::Int8),
+            "int4" | "w4" | "awq" => Some(Dtype::Int4),
+            _ => None,
+        }
+    }
+}
+
+/// Attention family — determines both compute shape and KV-cache layout.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum AttnKind {
+    /// Multi-head attention: `kv_heads == heads`.
+    Mha,
+    /// Grouped-query attention with `kv_heads` KV groups.
+    Gqa,
+    /// Multi-head latent attention (DeepSeek): KV compressed into a
+    /// latent of `kv_lora_rank` (+ decoupled RoPE dim).
+    Mla {
+        q_lora_rank: u64,
+        kv_lora_rank: u64,
+        qk_rope_dim: u64,
+        qk_nope_dim: u64,
+        v_head_dim: u64,
+    },
+}
+
+/// Mixture-of-experts geometry.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MoeConfig {
+    pub num_experts: u64,
+    pub top_k: u64,
+    /// Per-expert FFN intermediate size.
+    pub expert_inter: u64,
+    /// Shared-expert intermediate size (0 = none).
+    pub shared_inter: u64,
+    /// Leading dense layers (DeepSeek-V3 has 3).
+    pub first_dense_layers: u64,
+    /// Power-law skew α observed for this model's routing (paper §4.4.1;
+    /// Qwen3-235B ≈ 1.2 → 20% of experts take ~70% of tokens).
+    pub load_alpha: f64,
+}
+
+/// A transformer architecture, sufficient for operator decomposition.
+#[derive(Clone, Debug)]
+pub struct ModelArch {
+    pub name: &'static str,
+    pub num_layers: u64,
+    pub hidden: u64,
+    pub heads: u64,
+    pub kv_heads: u64,
+    pub head_dim: u64,
+    /// Dense-FFN intermediate size (used by dense layers).
+    pub inter: u64,
+    pub vocab: u64,
+    pub attn: AttnKind,
+    pub moe: Option<MoeConfig>,
+}
+
+impl ModelArch {
+    pub fn is_moe(&self) -> bool {
+        self.moe.is_some()
+    }
+
+    /// Attention weight parameters per layer.
+    pub fn attn_params_per_layer(&self) -> u64 {
+        match self.attn {
+            AttnKind::Mha | AttnKind::Gqa => {
+                let q = self.hidden * self.heads * self.head_dim;
+                let kv = 2 * self.hidden * self.kv_heads * self.head_dim;
+                let o = self.heads * self.head_dim * self.hidden;
+                q + kv + o
+            }
+            AttnKind::Mla {
+                q_lora_rank,
+                kv_lora_rank,
+                qk_rope_dim,
+                qk_nope_dim,
+                v_head_dim,
+            } => {
+                let q_dim = qk_nope_dim + qk_rope_dim;
+                let q = self.hidden * q_lora_rank + q_lora_rank * self.heads * q_dim;
+                let kv_down = self.hidden * (kv_lora_rank + qk_rope_dim);
+                let kv_up = kv_lora_rank * self.heads * (qk_nope_dim + v_head_dim);
+                let o = self.heads * v_head_dim * self.hidden;
+                q + kv_down + kv_up + o
+            }
+        }
+    }
+
+    /// FFN weight parameters for layer `l` (gated SwiGLU: 3 matrices).
+    pub fn ffn_params_layer(&self, l: u64) -> u64 {
+        match &self.moe {
+            Some(moe) if l >= moe.first_dense_layers => {
+                moe.num_experts * 3 * self.hidden * moe.expert_inter
+                    + 3 * self.hidden * moe.shared_inter
+            }
+            _ => 3 * self.hidden * self.inter,
+        }
+    }
+
+    /// Total parameter count (weights only; norms/bias negligible).
+    pub fn total_params(&self) -> u64 {
+        let embed = 2 * self.vocab * self.hidden; // in + lm_head
+        let per_layer_attn = self.attn_params_per_layer();
+        let ffn: u64 = (0..self.num_layers).map(|l| self.ffn_params_layer(l)).sum();
+        embed + self.num_layers * per_layer_attn + ffn
+    }
+
+    /// Active parameters per token (MoE models activate top_k experts).
+    pub fn active_params(&self) -> u64 {
+        match &self.moe {
+            None => self.total_params(),
+            Some(moe) => {
+                let embed = 2 * self.vocab * self.hidden;
+                let attn = self.num_layers * self.attn_params_per_layer();
+                let dense = moe.first_dense_layers * 3 * self.hidden * self.inter;
+                let active_moe = (self.num_layers - moe.first_dense_layers)
+                    * (moe.top_k * 3 * self.hidden * moe.expert_inter
+                        + 3 * self.hidden * moe.shared_inter);
+                embed + attn + dense + active_moe
+            }
+        }
+    }
+
+    /// KV-cache bytes per token per layer (full model, before TP/PP split).
+    pub fn kv_bytes_per_token_layer(&self, kv_dtype: Dtype) -> f64 {
+        match self.attn {
+            AttnKind::Mha | AttnKind::Gqa => {
+                (2 * self.kv_heads * self.head_dim) as f64 * kv_dtype.bytes()
+            }
+            AttnKind::Mla {
+                kv_lora_rank,
+                qk_rope_dim,
+                ..
+            } => (kv_lora_rank + qk_rope_dim) as f64 * kv_dtype.bytes(),
+        }
+    }
+
+    /// KV-cache bytes per token for the whole model.
+    pub fn kv_bytes_per_token(&self, kv_dtype: Dtype) -> f64 {
+        self.num_layers as f64 * self.kv_bytes_per_token_layer(kv_dtype)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_counts_in_published_ballpark() {
+        // (name, expected total params in B, tolerance in B)
+        for (name, want, tol) in [
+            ("llama3.1-8b", 8.0, 1.0),
+            ("qwen3-32b", 32.0, 4.0),
+            ("qwen3-235b", 235.0, 25.0),
+            ("deepseek-v3", 671.0, 70.0),
+            ("mixtral-8x7b", 47.0, 6.0),
+            ("gpt-oss-120b", 117.0, 20.0),
+        ] {
+            let m = by_name(name).unwrap();
+            let got = m.total_params() as f64 / 1e9;
+            assert!(
+                (got - want).abs() < tol,
+                "{name}: got {got:.1}B params, want ~{want}B"
+            );
+        }
+    }
+
+    #[test]
+    fn active_params_moe() {
+        let m = by_name("qwen3-235b").unwrap();
+        let active = m.active_params() as f64 / 1e9;
+        // Qwen3-235B-A22B: ~22B active.
+        assert!((active - 22.0).abs() < 4.0, "active={active:.1}B");
+        // Dense model: active == total.
+        let d = by_name("qwen3-32b").unwrap();
+        assert_eq!(d.active_params(), d.total_params());
+    }
+
+    #[test]
+    fn kv_bytes_gqa_vs_mla() {
+        let gqa = by_name("qwen3-32b").unwrap();
+        // 8 kv heads * 128 dim * 2 (K+V) * 2 bytes = 4096 B/token/layer.
+        assert_eq!(gqa.kv_bytes_per_token_layer(Dtype::Fp16), 4096.0);
+        let mla = by_name("deepseek-v3").unwrap();
+        // MLA latent: (512 + 64) * 2 bytes = 1152 — far smaller than GQA
+        // would be at 128 heads.
+        assert_eq!(mla.kv_bytes_per_token_layer(Dtype::Fp16), 1152.0);
+    }
+
+    #[test]
+    fn registry_lookup() {
+        assert!(by_name("nope").is_none());
+        assert!(list_names().len() >= 6);
+        for n in list_names() {
+            assert!(by_name(n).is_some());
+        }
+    }
+
+    #[test]
+    fn dtype_parse() {
+        assert_eq!(Dtype::parse("FP8"), Some(Dtype::Fp8));
+        assert_eq!(Dtype::parse("bf16"), Some(Dtype::Fp16));
+        assert_eq!(Dtype::parse("w4"), Some(Dtype::Int4));
+        assert_eq!(Dtype::parse("fp64"), None);
+        assert_eq!(Dtype::Int4.bytes(), 0.5);
+    }
+}

@@ -1,0 +1,161 @@
+//! Public architecture configs for the models the paper evaluates.
+
+use super::{AttnKind, ModelArch, MoeConfig};
+
+/// Llama 3.1 8B — dense GQA (paper Table 1).
+pub fn llama3_1_8b() -> ModelArch {
+    ModelArch {
+        name: "llama3.1-8b",
+        num_layers: 32,
+        hidden: 4096,
+        heads: 32,
+        kv_heads: 8,
+        head_dim: 128,
+        inter: 14336,
+        vocab: 128256,
+        attn: AttnKind::Gqa,
+        moe: None,
+    }
+}
+
+/// Qwen3 32B — dense GQA (paper §5.1, §5.4).
+pub fn qwen3_32b() -> ModelArch {
+    ModelArch {
+        name: "qwen3-32b",
+        num_layers: 64,
+        hidden: 5120,
+        heads: 64,
+        kv_heads: 8,
+        head_dim: 128,
+        inter: 25600,
+        vocab: 151936,
+        attn: AttnKind::Gqa,
+        moe: None,
+    }
+}
+
+/// Qwen3 235B-A22B — 128-expert MoE, top-8 (paper §5.1, Fig 1).
+/// Routing skew α≈1.2: "~70% of compute is handled by only 20% of
+/// active experts" (§4.4.1).
+pub fn qwen3_235b() -> ModelArch {
+    ModelArch {
+        name: "qwen3-235b",
+        num_layers: 94,
+        hidden: 4096,
+        heads: 64,
+        kv_heads: 4,
+        head_dim: 128,
+        inter: 12288,
+        vocab: 151936,
+        attn: AttnKind::Gqa,
+        moe: Some(MoeConfig {
+            num_experts: 128,
+            top_k: 8,
+            expert_inter: 1536,
+            shared_inter: 0,
+            first_dense_layers: 0,
+            load_alpha: 1.2,
+        }),
+    }
+}
+
+/// DeepSeek-V3 671B — MLA + 256-expert MoE top-8 + shared expert
+/// (paper §5.2, Fig 7).
+pub fn deepseek_v3() -> ModelArch {
+    ModelArch {
+        name: "deepseek-v3",
+        num_layers: 61,
+        hidden: 7168,
+        heads: 128,
+        kv_heads: 128,
+        head_dim: 128,
+        inter: 18432,
+        vocab: 129280,
+        attn: AttnKind::Mla {
+            q_lora_rank: 1536,
+            kv_lora_rank: 512,
+            qk_rope_dim: 64,
+            qk_nope_dim: 128,
+            v_head_dim: 128,
+        },
+        moe: Some(MoeConfig {
+            num_experts: 256,
+            top_k: 8,
+            expert_inter: 2048,
+            shared_inter: 2048,
+            first_dense_layers: 3,
+            load_alpha: 1.1,
+        }),
+    }
+}
+
+/// Mixtral 8x7B — 8-expert MoE top-2.
+pub fn mixtral_8x7b() -> ModelArch {
+    ModelArch {
+        name: "mixtral-8x7b",
+        num_layers: 32,
+        hidden: 4096,
+        heads: 32,
+        kv_heads: 8,
+        head_dim: 128,
+        inter: 14336,
+        vocab: 32000,
+        attn: AttnKind::Gqa,
+        moe: Some(MoeConfig {
+            num_experts: 8,
+            top_k: 2,
+            expert_inter: 14336,
+            shared_inter: 0,
+            first_dense_layers: 0,
+            load_alpha: 0.6,
+        }),
+    }
+}
+
+/// GPT-OSS 120B — 128-expert MoE top-4.
+pub fn gpt_oss_120b() -> ModelArch {
+    ModelArch {
+        name: "gpt-oss-120b",
+        num_layers: 36,
+        hidden: 2880,
+        heads: 64,
+        kv_heads: 8,
+        head_dim: 64,
+        inter: 2880,
+        vocab: 201088,
+        attn: AttnKind::Gqa,
+        moe: Some(MoeConfig {
+            num_experts: 128,
+            top_k: 4,
+            expert_inter: 2880,
+            shared_inter: 0,
+            first_dense_layers: 0,
+            load_alpha: 0.9,
+        }),
+    }
+}
+
+/// Look up a model by (case-insensitive) name.
+pub fn by_name(name: &str) -> Option<ModelArch> {
+    match name.to_ascii_lowercase().as_str() {
+        "llama3.1-8b" | "llama3-8b" | "llama" => Some(llama3_1_8b()),
+        "qwen3-32b" => Some(qwen3_32b()),
+        "qwen3-235b" | "qwen3-235b-a22b" => Some(qwen3_235b()),
+        "deepseek-v3" | "dsv3" => Some(deepseek_v3()),
+        "mixtral-8x7b" | "mixtral" => Some(mixtral_8x7b()),
+        "gpt-oss-120b" | "gpt-oss" => Some(gpt_oss_120b()),
+        _ => None,
+    }
+}
+
+/// Canonical registry names.
+pub fn list_names() -> &'static [&'static str] {
+    &[
+        "llama3.1-8b",
+        "qwen3-32b",
+        "qwen3-235b",
+        "deepseek-v3",
+        "mixtral-8x7b",
+        "gpt-oss-120b",
+    ]
+}

@@ -1,0 +1,459 @@
+//! Iteration → operator decomposition (paper §4.3, Fig 4).
+//!
+//! "Any inference iteration step can be modeled as running a fixed
+//! sequence of operators for a number of times ... Introducing modern
+//! parallel strategies does not alter this fundamental property except
+//! for inserting a few well-defined communication operators at fixed
+//! positions and scaling down the compute operators by sharding inputs."
+//!
+//! [`decompose`] turns (model, cluster, engine config, step shape) into a
+//! flat [`Op`] list; both the synthetic silicon (ground truth) and the
+//! PerfDatabase-backed analytical model consume the same list — the
+//! fidelity gap then comes only from measurement noise, interpolation
+//! and scheduling dynamics, exactly as in the paper.
+
+use crate::config::EngineConfig;
+use crate::hardware::ClusterSpec;
+use crate::models::{AttnKind, Dtype, ModelArch};
+
+/// Activation bytes (activations stay fp16/bf16 in all modeled engines).
+pub const ACT_BYTES: f64 = 2.0;
+
+/// A primitive operator with everything its latency depends on.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Op {
+    /// Dense GEMM: `[m,k] x [k,n]`, weights in `dtype`.
+    Gemm { m: u64, n: u64, k: u64, dtype: Dtype, count: u32 },
+    /// Fused prefill attention for ONE request (batch handled by `count`):
+    /// `q_tokens` new tokens attending to `kv_len` cached+new tokens.
+    AttnPrefill {
+        q_tokens: u64,
+        kv_len: u64,
+        heads: u64,
+        head_dim: u64,
+        /// 1.0 for full attention, ~0.5 for causal q==kv.
+        causal_frac: f64,
+        count: u32,
+    },
+    /// Batched decode attention: `batch` single-token queries against
+    /// `kv_len`-long caches. `kv_token_bytes` = bytes of K+V (or MLA
+    /// latent) per token per layer on THIS gpu.
+    AttnDecode {
+        batch: u64,
+        kv_len: u64,
+        heads: u64,
+        head_dim: u64,
+        kv_token_bytes: f64,
+        count: u32,
+    },
+    /// MoE grouped GEMM on one GPU: `tokens` routed tokens spread over
+    /// `experts` resident experts; FFN shapes `inter`×`hidden`;
+    /// `imbalance` = hottest-GPU load / mean load (power-law tail,
+    /// paper §4.4.1).
+    MoeGemm {
+        tokens: u64,
+        experts: u64,
+        inter: u64,
+        hidden: u64,
+        dtype: Dtype,
+        imbalance: f64,
+        count: u32,
+    },
+    /// Ring all-reduce of `bytes` across `gpus`.
+    AllReduce { bytes: f64, gpus: u32, count: u32 },
+    /// All-gather of `bytes` (per-GPU shard) across `gpus`.
+    AllGather { bytes: f64, gpus: u32, count: u32 },
+    /// All-to-all (MoE dispatch/combine) of `bytes` per GPU.
+    AllToAll { bytes: f64, gpus: u32, count: u32 },
+    /// Point-to-point transfer (PP stage boundary, KV-cache transfer).
+    P2p { bytes: f64, cross_node: bool, count: u32 },
+    /// Bandwidth-bound elementwise/norm/embedding traffic.
+    Elementwise { bytes: f64, count: u32 },
+}
+
+impl Op {
+    pub fn count(&self) -> u32 {
+        match self {
+            Op::Gemm { count, .. }
+            | Op::AttnPrefill { count, .. }
+            | Op::AttnDecode { count, .. }
+            | Op::MoeGemm { count, .. }
+            | Op::AllReduce { count, .. }
+            | Op::AllGather { count, .. }
+            | Op::AllToAll { count, .. }
+            | Op::P2p { count, .. }
+            | Op::Elementwise { count, .. } => *count,
+        }
+    }
+
+    /// Short class name (profiling/reporting).
+    pub fn class(&self) -> &'static str {
+        match self {
+            Op::Gemm { .. } => "gemm",
+            Op::AttnPrefill { .. } => "attn_prefill",
+            Op::AttnDecode { .. } => "attn_decode",
+            Op::MoeGemm { .. } => "moe",
+            Op::AllReduce { .. } => "allreduce",
+            Op::AllGather { .. } => "allgather",
+            Op::AllToAll { .. } => "alltoall",
+            Op::P2p { .. } => "p2p",
+            Op::Elementwise { .. } => "elementwise",
+        }
+    }
+}
+
+/// The token population of one engine iteration.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct StepShape {
+    /// Prefill requests scheduled this iteration.
+    pub ctx_reqs: u32,
+    /// New prompt tokens per prefill request (chunk size if chunked).
+    pub ctx_q: u64,
+    /// Total KV length each prefill request attends to (prefix + chunk).
+    pub ctx_kv: u64,
+    /// Decode requests scheduled this iteration.
+    pub gen_reqs: u64,
+    /// Mean KV length of decode requests.
+    pub gen_kv: u64,
+}
+
+impl StepShape {
+    pub fn prefill(reqs: u32, q: u64, kv: u64) -> Self {
+        StepShape { ctx_reqs: reqs, ctx_q: q, ctx_kv: kv, ..Default::default() }
+    }
+
+    pub fn decode(reqs: u64, kv: u64) -> Self {
+        StepShape { gen_reqs: reqs, gen_kv: kv, ..Default::default() }
+    }
+
+    /// Total tokens entering the GEMM path this iteration.
+    pub fn total_tokens(&self) -> u64 {
+        self.ctx_reqs as u64 * self.ctx_q + self.gen_reqs
+    }
+
+    pub fn is_decode_only(&self) -> bool {
+        self.ctx_reqs == 0 && self.gen_reqs > 0
+    }
+}
+
+/// Decompose one iteration into operators for a single PP stage times
+/// `pp` stages (the per-model fixed sequence of Fig 4).
+///
+/// `moe_imbalance` is the per-GPU load tail factor γ ≥ 1 obtained from
+/// the power-law model ([`crate::perfmodel::moe_imbalance`]); 1.0 means
+/// perfectly balanced routing.
+pub fn decompose(
+    model: &ModelArch,
+    cluster: &ClusterSpec,
+    eng: &EngineConfig,
+    shape: &StepShape,
+    moe_imbalance: f64,
+) -> Vec<Op> {
+    let mut ops = Vec::with_capacity(24);
+    let tp = eng.parallel.tp as u64;
+    let pp = eng.parallel.pp as u64;
+    let ep = eng.parallel.ep.max(1) as u64;
+    let wdt = eng.weight_dtype;
+
+    let tokens = shape.total_tokens();
+    if tokens == 0 {
+        return ops;
+    }
+    let layers = model.num_layers; // counts cover all PP stages
+    let layers_u32 = layers as u32;
+    let heads_tp = (model.heads / tp).max(1);
+    let kv_heads_tp = (model.kv_heads / tp).max(1);
+
+    // --- Attention projections -----------------------------------------
+    match model.attn {
+        AttnKind::Mha | AttnKind::Gqa => {
+            // Fused QKV projection.
+            let n_qkv = (heads_tp + 2 * kv_heads_tp) * model.head_dim;
+            ops.push(Op::Gemm { m: tokens, n: n_qkv, k: model.hidden, dtype: wdt, count: layers_u32 });
+            // Output projection.
+            ops.push(Op::Gemm {
+                m: tokens,
+                n: model.hidden,
+                k: heads_tp * model.head_dim,
+                dtype: wdt,
+                count: layers_u32,
+            });
+        }
+        AttnKind::Mla { q_lora_rank, kv_lora_rank, qk_rope_dim, qk_nope_dim, v_head_dim } => {
+            let q_dim = qk_nope_dim + qk_rope_dim;
+            // Down-projections (replicated), up-projections (TP-sharded).
+            ops.push(Op::Gemm { m: tokens, n: q_lora_rank + kv_lora_rank + qk_rope_dim, k: model.hidden, dtype: wdt, count: layers_u32 });
+            ops.push(Op::Gemm { m: tokens, n: heads_tp * q_dim, k: q_lora_rank, dtype: wdt, count: layers_u32 });
+            ops.push(Op::Gemm { m: tokens, n: heads_tp * (qk_nope_dim + v_head_dim), k: kv_lora_rank, dtype: wdt, count: layers_u32 });
+            ops.push(Op::Gemm { m: tokens, n: model.hidden, k: heads_tp * v_head_dim, dtype: wdt, count: layers_u32 });
+        }
+    }
+
+    // --- Attention cores ------------------------------------------------
+    if shape.ctx_reqs > 0 {
+        ops.push(Op::AttnPrefill {
+            q_tokens: shape.ctx_q,
+            kv_len: shape.ctx_kv.max(shape.ctx_q),
+            heads: heads_tp,
+            head_dim: model.head_dim,
+            causal_frac: if shape.ctx_kv <= shape.ctx_q { 0.5 } else { 1.0 },
+            count: layers_u32 * shape.ctx_reqs,
+        });
+    }
+    if shape.gen_reqs > 0 {
+        let kv_token_bytes = kv_bytes_per_gpu_layer(model, eng.kv_dtype, tp);
+        ops.push(Op::AttnDecode {
+            batch: shape.gen_reqs,
+            kv_len: shape.gen_kv.max(1),
+            heads: heads_tp,
+            head_dim: model.head_dim,
+            kv_token_bytes,
+            count: layers_u32,
+        });
+    }
+
+    // --- Attention-block collective (TP) --------------------------------
+    if tp > 1 {
+        ops.push(Op::AllReduce {
+            bytes: tokens as f64 * model.hidden as f64 * ACT_BYTES,
+            gpus: tp as u32,
+            count: layers_u32,
+        });
+    }
+
+    // --- FFN / MoE --------------------------------------------------------
+    match &model.moe {
+        None => {
+            // Gated FFN: fused gate+up, then down.
+            let inter_tp = model.inter / tp;
+            ops.push(Op::Gemm { m: tokens, n: 2 * inter_tp, k: model.hidden, dtype: wdt, count: layers_u32 });
+            ops.push(Op::Gemm { m: tokens, n: model.hidden, k: inter_tp, dtype: wdt, count: layers_u32 });
+        }
+        Some(moe) => {
+            let dense = moe.first_dense_layers as u32;
+            let moe_layers = (layers - moe.first_dense_layers) as u32;
+            if dense > 0 {
+                let inter_tp = model.inter / tp;
+                ops.push(Op::Gemm { m: tokens, n: 2 * inter_tp, k: model.hidden, dtype: wdt, count: dense });
+                ops.push(Op::Gemm { m: tokens, n: model.hidden, k: inter_tp, dtype: wdt, count: dense });
+            }
+            // Dispatch: each token's hidden vector to top_k experts.
+            if ep > 1 {
+                let bytes = tokens as f64 * moe.top_k as f64 * model.hidden as f64 * ACT_BYTES
+                    / ep as f64;
+                ops.push(Op::AllToAll { bytes, gpus: ep as u32, count: moe_layers });
+            }
+            // Grouped GEMM over resident experts. EP shards experts across
+            // the TP×DP group; without EP, TP shards each expert's FFN.
+            let (experts_gpu, inter_gpu) = if ep > 1 {
+                ((moe.num_experts / ep).max(1), moe.expert_inter)
+            } else {
+                (moe.num_experts, (moe.expert_inter / tp).max(1))
+            };
+            let routed = tokens * moe.top_k / ep;
+            ops.push(Op::MoeGemm {
+                tokens: routed.max(1),
+                experts: experts_gpu,
+                inter: inter_gpu,
+                hidden: model.hidden,
+                dtype: wdt,
+                imbalance: moe_imbalance,
+                count: moe_layers,
+            });
+            if moe.shared_inter > 0 {
+                let sh = (moe.shared_inter / tp).max(1);
+                ops.push(Op::Gemm { m: tokens, n: 2 * sh, k: model.hidden, dtype: wdt, count: moe_layers });
+                ops.push(Op::Gemm { m: tokens, n: model.hidden, k: sh, dtype: wdt, count: moe_layers });
+            }
+            // Combine.
+            if ep > 1 {
+                let bytes = tokens as f64 * moe.top_k as f64 * model.hidden as f64 * ACT_BYTES
+                    / ep as f64;
+                ops.push(Op::AllToAll { bytes, gpus: ep as u32, count: moe_layers });
+            }
+        }
+    }
+
+    // --- FFN-block collective (TP) ---------------------------------------
+    if tp > 1 {
+        ops.push(Op::AllReduce {
+            bytes: tokens as f64 * model.hidden as f64 * ACT_BYTES,
+            gpus: tp as u32,
+            count: layers_u32,
+        });
+    }
+
+    // --- Norms / residuals / embedding traffic ---------------------------
+    // ~4 full activation sweeps per layer (2 norms + 2 residual adds).
+    ops.push(Op::Elementwise {
+        bytes: 4.0 * tokens as f64 * model.hidden as f64 * ACT_BYTES,
+        count: layers_u32,
+    });
+    ops.push(Op::Elementwise {
+        bytes: tokens as f64 * model.hidden as f64 * ACT_BYTES,
+        count: 1, // embedding gather
+    });
+
+    // --- LM head: one sampled token per sequence -------------------------
+    let sampled = shape.gen_reqs + shape.ctx_reqs as u64;
+    ops.push(Op::Gemm {
+        m: sampled.max(1),
+        n: model.vocab / tp,
+        k: model.hidden,
+        dtype: wdt,
+        count: 1,
+    });
+    if tp > 1 {
+        // Gather sharded logits (top-k sampling path).
+        ops.push(Op::AllGather {
+            bytes: sampled as f64 * (model.vocab / tp) as f64 * ACT_BYTES,
+            gpus: tp as u32,
+            count: 1,
+        });
+    }
+
+    // --- Pipeline-parallel stage boundaries -------------------------------
+    if pp > 1 {
+        let bytes = tokens as f64 * model.hidden as f64 * ACT_BYTES;
+        let cross = eng.parallel.gpus() > cluster.gpus_per_node;
+        ops.push(Op::P2p { bytes, cross_node: cross, count: (pp - 1) as u32 });
+    }
+
+    ops
+}
+
+/// Per-kernel launch overhead contained in an op list, microseconds.
+///
+/// CUDA graphs capture decode-only iterations and replay them without
+/// per-kernel launches; engines cannot graph mixed prefill+decode steps
+/// (dynamic shapes). The iteration models subtract
+/// [`CUDA_GRAPH_LAUNCH_SAVING`] × this from graphed decode steps —
+/// an asymmetry that favours pure-decode pools (disaggregation) and the
+/// generation-only phase of continuous batching.
+pub fn launch_overhead_us(ops: &[Op], launch_us: f64) -> f64 {
+    ops.iter().map(|o| o.count() as f64).sum::<f64>() * launch_us
+}
+
+/// Fraction of kernel-launch overhead removed by CUDA-graph replay.
+pub const CUDA_GRAPH_LAUNCH_SAVING: f64 = 0.85;
+
+/// KV (or MLA latent) bytes per token per layer held on one TP rank.
+pub fn kv_bytes_per_gpu_layer(model: &ModelArch, kv_dtype: Dtype, tp: u64) -> f64 {
+    match model.attn {
+        AttnKind::Mha | AttnKind::Gqa => {
+            let kv_heads_tp = (model.kv_heads / tp).max(1);
+            (2 * kv_heads_tp * model.head_dim) as f64 * kv_dtype.bytes()
+        }
+        // MLA latent is replicated across TP ranks.
+        AttnKind::Mla { kv_lora_rank, qk_rope_dim, .. } => {
+            (kv_lora_rank + qk_rope_dim) as f64 * kv_dtype.bytes()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{EngineConfig, ParallelSpec, RuntimeFlags};
+    use crate::frameworks::Framework;
+    use crate::hardware::{h100_sxm, ClusterSpec};
+    use crate::models::by_name;
+
+    fn eng(tp: u32, ep: u32) -> EngineConfig {
+        EngineConfig {
+            framework: Framework::TrtLlm,
+            parallel: ParallelSpec { tp, pp: 1, ep, dp: 1 },
+            batch: 8,
+            weight_dtype: Dtype::Fp16,
+            kv_dtype: Dtype::Fp16,
+            flags: RuntimeFlags::defaults_for(Framework::TrtLlm),
+        }
+    }
+
+    fn cluster() -> ClusterSpec {
+        ClusterSpec::new(h100_sxm(), 8, 1)
+    }
+
+    #[test]
+    fn dense_prefill_has_no_moe_or_comm_at_tp1() {
+        let m = by_name("qwen3-32b").unwrap();
+        let ops = decompose(&m, &cluster(), &eng(1, 1), &StepShape::prefill(1, 4096, 4096), 1.0);
+        assert!(ops.iter().all(|o| !matches!(o, Op::MoeGemm { .. })));
+        assert!(ops.iter().all(|o| !matches!(o, Op::AllReduce { .. })));
+        assert!(ops.iter().any(|o| matches!(o, Op::AttnPrefill { .. })));
+        assert!(ops.iter().all(|o| !matches!(o, Op::AttnDecode { .. })));
+    }
+
+    #[test]
+    fn tp_inserts_two_allreduce_per_layer() {
+        let m = by_name("qwen3-32b").unwrap();
+        let ops = decompose(&m, &cluster(), &eng(4, 1), &StepShape::decode(16, 2048), 1.0);
+        let ar: u32 = ops
+            .iter()
+            .filter_map(|o| match o {
+                Op::AllReduce { count, .. } => Some(*count),
+                _ => None,
+            })
+            .sum();
+        assert_eq!(ar as u64, 2 * m.num_layers);
+    }
+
+    #[test]
+    fn ep_inserts_dispatch_and_combine() {
+        let m = by_name("qwen3-235b").unwrap();
+        let ops = decompose(&m, &cluster(), &eng(1, 8), &StepShape::decode(32, 4096), 1.3);
+        let a2a = ops.iter().filter(|o| matches!(o, Op::AllToAll { .. })).count();
+        assert_eq!(a2a, 2, "dispatch + combine");
+        let moe = ops.iter().find(|o| matches!(o, Op::MoeGemm { .. })).unwrap();
+        if let Op::MoeGemm { experts, tokens, imbalance, .. } = moe {
+            assert_eq!(*experts, 128 / 8);
+            assert_eq!(*tokens, 32 * 8 / 8);
+            assert_eq!(*imbalance, 1.3);
+        }
+    }
+
+    #[test]
+    fn tp_shards_gemm_n_dims() {
+        let m = by_name("qwen3-32b").unwrap();
+        let shape = StepShape::prefill(1, 1024, 1024);
+        let t1 = decompose(&m, &cluster(), &eng(1, 1), &shape, 1.0);
+        let t4 = decompose(&m, &cluster(), &eng(4, 1), &shape, 1.0);
+        let flops = |ops: &[Op]| -> f64 {
+            ops.iter()
+                .filter_map(|o| match o {
+                    Op::Gemm { m, n, k, count, .. } => {
+                        Some(2.0 * *m as f64 * *n as f64 * *k as f64 * *count as f64)
+                    }
+                    _ => None,
+                })
+                .sum()
+        };
+        let r = flops(&t1) / flops(&t4);
+        assert!(r > 3.0 && r < 4.5, "TP4 should ~quarter GEMM flops, got ratio {r}");
+    }
+
+    #[test]
+    fn mla_decode_kv_is_latent_and_replicated() {
+        let m = by_name("deepseek-v3").unwrap();
+        assert_eq!(kv_bytes_per_gpu_layer(&m, Dtype::Fp16, 1), 1152.0);
+        assert_eq!(kv_bytes_per_gpu_layer(&m, Dtype::Fp16, 8), 1152.0);
+        let g = by_name("qwen3-32b").unwrap();
+        assert_eq!(kv_bytes_per_gpu_layer(&g, Dtype::Fp16, 8), 4096.0 / 8.0);
+    }
+
+    #[test]
+    fn empty_shape_no_ops() {
+        let m = by_name("llama3.1-8b").unwrap();
+        assert!(decompose(&m, &cluster(), &eng(1, 1), &StepShape::default(), 1.0).is_empty());
+    }
+
+    #[test]
+    fn mixed_step_has_both_attention_kinds() {
+        let m = by_name("llama3.1-8b").unwrap();
+        let shape = StepShape { ctx_reqs: 2, ctx_q: 512, ctx_kv: 512, gen_reqs: 16, gen_kv: 1024 };
+        let ops = decompose(&m, &cluster(), &eng(2, 1), &shape, 1.0);
+        assert!(ops.iter().any(|o| matches!(o, Op::AttnPrefill { .. })));
+        assert!(ops.iter().any(|o| matches!(o, Op::AttnDecode { .. })));
+        assert_eq!(shape.total_tokens(), 2 * 512 + 16);
+    }
+}

@@ -1,0 +1,125 @@
+//! Pareto Analyzer (paper §4.1 step 4): filter SLA-valid configurations,
+//! extract the throughput-vs-speed Pareto frontier (Fig 1 / Fig 8), and
+//! rank the feasible set by per-GPU system throughput.
+
+use crate::config::Sla;
+use crate::perfmodel::PerfEstimate;
+use crate::search::runner::Evaluated;
+
+/// Full analysis of a search report.
+#[derive(Clone, Debug)]
+pub struct Analysis {
+    /// SLA-feasible candidates, best throughput first.
+    pub feasible: Vec<Evaluated>,
+    /// Indices (into `feasible`) forming the speed/throughput frontier.
+    pub frontier: Vec<usize>,
+}
+
+impl Analysis {
+    pub fn best(&self) -> Option<&Evaluated> {
+        self.feasible.first()
+    }
+}
+
+/// Is `a` Pareto-dominated by `b` in (speed, throughput) maximization?
+fn dominated(a: &PerfEstimate, b: &PerfEstimate) -> bool {
+    b.speed >= a.speed
+        && b.thru_per_gpu >= a.thru_per_gpu
+        && (b.speed > a.speed || b.thru_per_gpu > a.thru_per_gpu)
+}
+
+/// Extract the Pareto frontier over (generation speed, per-GPU
+/// throughput) from an arbitrary point set. Returns indices into the
+/// input, sorted by speed ascending.
+pub fn frontier_indices(points: &[PerfEstimate]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..points.len()).collect();
+    idx.retain(|&i| !points.iter().enumerate().any(|(j, b)| j != i && dominated(&points[i], b)));
+    // Deduplicate identical (speed, thru) pairs.
+    idx.sort_by(|&a, &b| {
+        points[a]
+            .speed
+            .partial_cmp(&points[b].speed)
+            .unwrap()
+            .then(points[a].thru_per_gpu.partial_cmp(&points[b].thru_per_gpu).unwrap())
+    });
+    idx.dedup_by(|&mut a, &mut b| {
+        points[a].speed == points[b].speed && points[a].thru_per_gpu == points[b].thru_per_gpu
+    });
+    idx
+}
+
+/// Analyze a search result against an SLA.
+pub fn analyze(evaluated: &[Evaluated], sla: &Sla) -> Analysis {
+    let mut feasible: Vec<Evaluated> =
+        evaluated.iter().filter(|e| e.est.meets(sla)).cloned().collect();
+    feasible.sort_by(|a, b| b.est.thru_per_gpu.partial_cmp(&a.est.thru_per_gpu).unwrap());
+    let pts: Vec<PerfEstimate> = feasible.iter().map(|e| e.est).collect();
+    let frontier = frontier_indices(&pts);
+    Analysis { feasible, frontier }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Candidate, EngineConfig, ParallelSpec, RuntimeFlags};
+    use crate::frameworks::Framework;
+    use crate::models::Dtype;
+
+    fn ev(speed: f64, thru: f64, ttft: f64) -> Evaluated {
+        let eng = EngineConfig {
+            framework: Framework::TrtLlm,
+            parallel: ParallelSpec::tp(1),
+            batch: 1,
+            weight_dtype: Dtype::Fp8,
+            kv_dtype: Dtype::Fp8,
+            flags: RuntimeFlags::defaults_for(Framework::TrtLlm),
+        };
+        Evaluated {
+            cand: Candidate::Aggregated { engine: eng, replicas: 1 },
+            est: PerfEstimate {
+                ttft_ms: ttft,
+                tpot_ms: 1000.0 / speed,
+                speed,
+                thru_per_gpu: thru,
+                concurrency: 1,
+            },
+        }
+    }
+
+    #[test]
+    fn frontier_excludes_dominated() {
+        let pts = vec![
+            ev(10.0, 100.0, 500.0).est,
+            ev(20.0, 80.0, 500.0).est,
+            ev(15.0, 90.0, 500.0).est, // dominated by neither
+            ev(9.0, 90.0, 500.0).est,  // dominated by (10,100) and (15,90)
+            ev(30.0, 30.0, 500.0).est,
+        ];
+        let f = frontier_indices(&pts);
+        assert!(f.contains(&0) && f.contains(&1) && f.contains(&2) && f.contains(&4));
+        assert!(!f.contains(&3));
+    }
+
+    #[test]
+    fn analyze_filters_and_ranks() {
+        let sla = Sla { ttft_ms: 1000.0, min_speed: 12.0 };
+        let evs = vec![
+            ev(10.0, 200.0, 100.0), // too slow per user
+            ev(20.0, 150.0, 100.0),
+            ev(25.0, 120.0, 2000.0), // TTFT violation
+            ev(15.0, 170.0, 900.0),
+        ];
+        let a = analyze(&evs, &sla);
+        assert_eq!(a.feasible.len(), 2);
+        assert_eq!(a.best().unwrap().est.thru_per_gpu, 170.0);
+        // Both feasible points are mutually non-dominated here.
+        assert_eq!(a.frontier.len(), 2);
+    }
+
+    #[test]
+    fn empty_input_safe() {
+        let a = analyze(&[], &Sla { ttft_ms: 1.0, min_speed: 1.0 });
+        assert!(a.best().is_none());
+        assert!(a.frontier.is_empty());
+    }
+}

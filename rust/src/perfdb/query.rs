@@ -1,0 +1,103 @@
+//! Native trilinear interpolation — the Rust twin of the Pallas kernel
+//! (`python/compile/kernels/interp.py`). Semantics match
+//! `python/compile/kernels/ref.py` exactly (corner clamping, degenerate
+//! axes); integration tests compare this path against the PJRT-executed
+//! kernel on identical grids.
+
+use super::tables::{NX, NY, NZ};
+
+/// Trilinear interpolation on the packed `[T, NX, NY, NZ]` grid at
+/// fractional coordinates (already clamped by axis mapping, re-clamped
+/// here for safety).
+#[inline]
+pub fn trilinear(grids: &[f32], table: usize, fx: f64, fy: f64, fz: f64) -> f64 {
+    let x = fx.clamp(0.0, (NX - 1) as f64);
+    let y = fy.clamp(0.0, (NY - 1) as f64);
+    let z = fz.clamp(0.0, (NZ - 1) as f64);
+
+    let x0 = x.floor() as usize;
+    let y0 = y.floor() as usize;
+    let z0 = z.floor() as usize;
+    let x1 = (x0 + 1).min(NX - 1);
+    let y1 = (y0 + 1).min(NY - 1);
+    let z1 = (z0 + 1).min(NZ - 1);
+
+    let xd = x - x0 as f64;
+    let yd = y - y0 as f64;
+    let zd = z - z0 as f64;
+
+    let base = table * NX * NY * NZ;
+    let g = |ix: usize, iy: usize, iz: usize| -> f64 {
+        grids[base + (ix * NY + iy) * NZ + iz] as f64
+    };
+
+    let c00 = g(x0, y0, z0) * (1.0 - xd) + g(x1, y0, z0) * xd;
+    let c01 = g(x0, y0, z1) * (1.0 - xd) + g(x1, y0, z1) * xd;
+    let c10 = g(x0, y1, z0) * (1.0 - xd) + g(x1, y1, z0) * xd;
+    let c11 = g(x0, y1, z1) * (1.0 - xd) + g(x1, y1, z1) * xd;
+
+    let c0 = c00 * (1.0 - yd) + c10 * yd;
+    let c1 = c01 * (1.0 - yd) + c11 * yd;
+    c0 * (1.0 - zd) + c1 * zd
+}
+
+/// Flat index into the packed grid (builder-side writes).
+#[inline]
+pub fn flat(table: usize, ix: usize, iy: usize, iz: usize) -> usize {
+    ((table * NX + ix) * NY + iy) * NZ + iz
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perfdb::tables::GRID_LEN;
+    use crate::util::rng::Rng;
+
+    fn linear_grid(a: f64, b: f64, c: f64, d: f64) -> Vec<f32> {
+        let mut g = vec![0f32; GRID_LEN];
+        for ix in 0..NX {
+            for iy in 0..NY {
+                for iz in 0..NZ {
+                    g[flat(0, ix, iy, iz)] =
+                        (a * ix as f64 + b * iy as f64 + c * iz as f64 + d) as f32;
+                }
+            }
+        }
+        g
+    }
+
+    #[test]
+    fn reproduces_linear_functions_exactly() {
+        let g = linear_grid(2.0, -1.0, 0.5, 10.0);
+        let mut rng = Rng::new(1);
+        for _ in 0..200 {
+            let fx = rng.f64() * (NX - 1) as f64;
+            let fy = rng.f64() * (NY - 1) as f64;
+            let fz = rng.f64() * (NZ - 1) as f64;
+            let want = 2.0 * fx - fy + 0.5 * fz + 10.0;
+            let got = trilinear(&g, 0, fx, fy, fz);
+            assert!((got - want).abs() < 1e-3, "({fx},{fy},{fz}): {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn grid_points_exact() {
+        let g = linear_grid(1.0, 3.0, 7.0, 0.0);
+        assert_eq!(trilinear(&g, 0, 5.0, 6.0, 2.0), 5.0 + 18.0 + 14.0);
+    }
+
+    #[test]
+    fn clamps_out_of_range() {
+        let g = linear_grid(1.0, 0.0, 0.0, 0.0);
+        assert_eq!(trilinear(&g, 0, -5.0, 0.0, 0.0), 0.0);
+        assert_eq!(trilinear(&g, 0, 1e9, 0.0, 0.0), (NX - 1) as f64);
+    }
+
+    #[test]
+    fn table_offset_respected() {
+        let mut g = vec![0f32; GRID_LEN];
+        g[flat(3, 0, 0, 0)] = 99.0;
+        assert_eq!(trilinear(&g, 3, 0.0, 0.0, 0.0), 99.0);
+        assert_eq!(trilinear(&g, 2, 0.0, 0.0, 0.0), 0.0);
+    }
+}

@@ -1,0 +1,91 @@
+//! Speed-of-Light analytical fallback (paper §4.4 "Speed-of-Light
+//! estimation provides analytical bounds via roofline models for
+//! unprofiled operators").
+//!
+//! Pure roofline — no framework efficiency, no quantization effects —
+//! which is exactly why profiled tables are preferred when available.
+
+use crate::hardware::ClusterSpec;
+use crate::models::Dtype;
+use crate::ops::Op;
+
+/// Roofline latency bound for any op, microseconds.
+pub fn latency_us(cluster: &ClusterSpec, op: &Op) -> f64 {
+    let gpu = &cluster.gpu;
+    let bw = gpu.mem_bw_gbs * 1e3; // bytes/us
+    match *op {
+        Op::Elementwise { bytes, .. } => bytes / bw + gpu.launch_us,
+        Op::Gemm { m, n, k, dtype, .. } => {
+            let flops = 2.0 * m as f64 * n as f64 * k as f64;
+            let t_c = flops / (gpu.tflops(dtype) * 1e12) * 1e6;
+            let bytes = n as f64 * k as f64 * dtype.bytes() + (m * (n + k)) as f64 * 2.0;
+            t_c.max(bytes / bw) + gpu.launch_us
+        }
+        Op::AttnPrefill { q_tokens, kv_len, heads, head_dim, causal_frac, .. } => {
+            let flops =
+                4.0 * heads as f64 * q_tokens as f64 * kv_len as f64 * head_dim as f64 * causal_frac;
+            flops / (gpu.tflops(Dtype::Fp16) * 1e12) * 1e6 + gpu.launch_us
+        }
+        Op::AttnDecode { batch, kv_len, kv_token_bytes, .. } => {
+            batch as f64 * kv_len as f64 * kv_token_bytes / bw + gpu.launch_us
+        }
+        Op::MoeGemm { tokens, inter, hidden, dtype, .. } => {
+            let flops = 2.0 * 3.0 * tokens as f64 * inter as f64 * hidden as f64;
+            flops / (gpu.tflops(dtype) * 1e12) * 1e6 + gpu.launch_us
+        }
+        Op::AllReduce { bytes, gpus, .. } => {
+            if gpus <= 1 {
+                0.0
+            } else {
+                let g = gpus as f64;
+                2.0 * (g - 1.0) / g * bytes / (cluster.p2p_bw_gbs(cluster.link_for(gpus)) * 1e3)
+            }
+        }
+        Op::AllGather { bytes, gpus, .. } | Op::AllToAll { bytes, gpus, .. } => {
+            if gpus <= 1 {
+                0.0
+            } else {
+                bytes / (cluster.p2p_bw_gbs(cluster.link_for(gpus)) * 1e3)
+            }
+        }
+        Op::P2p { bytes, cross_node, .. } => {
+            let link = if cross_node {
+                crate::hardware::LinkKind::InfiniBand
+            } else {
+                crate::hardware::LinkKind::NvLink
+            };
+            bytes / (cluster.p2p_bw_gbs(link) * 1e3)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware::{h100_sxm, ClusterSpec};
+
+    #[test]
+    fn sol_is_lower_bound_of_silicon() {
+        use crate::frameworks::Framework;
+        use crate::silicon::Silicon;
+        let c = ClusterSpec::new(h100_sxm(), 8, 1);
+        let sil = Silicon::new(c, Framework::TrtLlm.profile());
+        for op in [
+            Op::Gemm { m: 4096, n: 8192, k: 8192, dtype: Dtype::Fp16, count: 1 },
+            Op::AttnDecode { batch: 64, kv_len: 4096, heads: 32, head_dim: 128, kv_token_bytes: 4096.0, count: 1 },
+            Op::AllReduce { bytes: 1e7, gpus: 8, count: 1 },
+        ] {
+            let sol = latency_us(&c, &op);
+            let real = sil.op_latency_us(&op);
+            assert!(sol <= real * 1.01, "{op:?}: sol={sol} real={real}");
+        }
+    }
+
+    #[test]
+    fn elementwise_bandwidth() {
+        let c = ClusterSpec::new(h100_sxm(), 8, 1);
+        let t = latency_us(&c, &Op::Elementwise { bytes: 3.35e9, count: 1 });
+        // 3.35 GB at 3350 GB/s ≈ 1 ms.
+        assert!((t - 1000.0 - c.gpu.launch_us).abs() < 1.0, "t={t}");
+    }
+}

@@ -1,0 +1,282 @@
+//! Table layout of the packed operator-latency database.
+//!
+//! The grid geometry (16 tables × 32×32×16) is the AOT shape contract
+//! shared with the Pallas interpolation kernel
+//! (`python/compile/model.py`); `artifacts/manifest.json` carries the
+//! same numbers and the runtime asserts agreement at load.
+
+use crate::models::Dtype;
+use crate::ops::Op;
+
+pub const NUM_TABLES: usize = 16;
+pub const NX: usize = 32;
+pub const NY: usize = 32;
+pub const NZ: usize = 16;
+pub const GRID_LEN: usize = NUM_TABLES * NX * NY * NZ;
+
+/// Semantic table ids (slots 14–15 reserved).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(usize)]
+pub enum TableId {
+    GemmFp16 = 0,
+    GemmFp8 = 1,
+    GemmInt8 = 2,
+    GemmInt4 = 3,
+    AttnPrefill = 4,
+    AttnDecode = 5,
+    MoeFp16 = 6,
+    MoeFp8 = 7,
+    MoeInt8 = 8,
+    MoeInt4 = 9,
+    AllReduce = 10,
+    AllGather = 11,
+    AllToAll = 12,
+    P2p = 13,
+}
+
+impl TableId {
+    pub fn gemm(dt: Dtype) -> TableId {
+        match dt {
+            Dtype::Fp16 => TableId::GemmFp16,
+            Dtype::Fp8 => TableId::GemmFp8,
+            Dtype::Int8 => TableId::GemmInt8,
+            Dtype::Int4 => TableId::GemmInt4,
+        }
+    }
+
+    pub fn moe(dt: Dtype) -> TableId {
+        match dt {
+            Dtype::Fp16 => TableId::MoeFp16,
+            Dtype::Fp8 => TableId::MoeFp8,
+            Dtype::Int8 => TableId::MoeInt8,
+            Dtype::Int4 => TableId::MoeInt4,
+        }
+    }
+
+    pub fn all_active() -> [TableId; 14] {
+        use TableId::*;
+        [
+            GemmFp16, GemmFp8, GemmInt8, GemmInt4, AttnPrefill, AttnDecode,
+            MoeFp16, MoeFp8, MoeInt8, MoeInt4, AllReduce, AllGather, AllToAll, P2p,
+        ]
+    }
+}
+
+/// One grid axis: physical range + spacing. A degenerate axis
+/// (`hi <= lo`) pins every query to index 0.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Axis {
+    pub lo: f64,
+    pub hi: f64,
+    pub log2: bool,
+    /// Grid points along this axis (NX/NY/NZ).
+    pub n: usize,
+}
+
+impl Axis {
+    pub fn log(lo: f64, hi: f64, n: usize) -> Axis {
+        Axis { lo, hi, log2: true, n }
+    }
+
+    pub fn lin(lo: f64, hi: f64, n: usize) -> Axis {
+        Axis { lo, hi, log2: false, n }
+    }
+
+    pub fn constant(v: f64, n: usize) -> Axis {
+        Axis { lo: v, hi: v, log2: false, n }
+    }
+
+    fn tf(&self, v: f64) -> f64 {
+        if self.log2 {
+            v.max(1e-12).log2()
+        } else {
+            v
+        }
+    }
+
+    /// Fractional grid index for physical value `v`, clamped to
+    /// [0, n-1]. Out-of-range values clamp (boundary extrapolation).
+    pub fn frac(&self, v: f64) -> f64 {
+        if self.hi <= self.lo {
+            return 0.0;
+        }
+        let (l, h) = (self.tf(self.lo), self.tf(self.hi));
+        let f = (self.tf(v) - l) / (h - l) * (self.n - 1) as f64;
+        f.clamp(0.0, (self.n - 1) as f64)
+    }
+
+    /// Physical value of grid index `i`.
+    pub fn value(&self, i: usize) -> f64 {
+        if self.hi <= self.lo {
+            return self.lo;
+        }
+        let (l, h) = (self.tf(self.lo), self.tf(self.hi));
+        let t = l + (h - l) * i as f64 / (self.n - 1) as f64;
+        if self.log2 {
+            t.exp2()
+        } else {
+            t
+        }
+    }
+}
+
+/// Axis triple for one table.
+#[derive(Clone, Copy, Debug)]
+pub struct TableSpec {
+    pub id: TableId,
+    pub x: Axis,
+    pub y: Axis,
+    pub z: Axis,
+}
+
+/// Canonical axis specs (shared by the builder and the query mapper —
+/// the invertibility that makes profiling and lookup agree).
+pub fn spec(id: TableId) -> TableSpec {
+    use TableId::*;
+    match id {
+        GemmFp16 | GemmFp8 | GemmInt8 | GemmInt4 => TableSpec {
+            id,
+            x: Axis::log(1.0, 262_144.0, NX),   // m: 1 .. 256k tokens
+            y: Axis::log(64.0, 262_144.0, NY),  // n
+            z: Axis::log(64.0, 32_768.0, NZ),   // k
+        },
+        AttnPrefill => TableSpec {
+            id,
+            x: Axis::log(1.0, 16_384.0, NX),    // q tokens per request
+            y: Axis::log(16.0, 131_072.0, NY),  // kv length
+            z: Axis::log(1.0, 128.0, NZ),       // heads per GPU
+        },
+        AttnDecode => TableSpec {
+            id,
+            x: Axis::log(1.0, 512.0, NX),       // decode batch
+            y: Axis::log(16.0, 131_072.0, NY),  // kv length
+            z: Axis::log(1.0, 128.0, NZ),       // heads per GPU
+        },
+        MoeFp16 | MoeFp8 | MoeInt8 | MoeInt4 => TableSpec {
+            id,
+            x: Axis::log(1.0, 131_072.0, NX),   // routed tokens per GPU
+            y: Axis::log(1.0, 256.0, NY),       // resident experts per GPU
+            z: Axis::lin(1.0, 8.0, NZ),         // imbalance γ
+        },
+        AllReduce | AllGather | AllToAll => TableSpec {
+            id,
+            x: Axis::log(256.0, 1.074e9, NX),   // bytes
+            y: Axis::log(2.0, 64.0, NY),        // gpus
+            z: Axis::constant(0.0, NZ),
+        },
+        P2p => TableSpec {
+            id,
+            x: Axis::log(256.0, 1.074e9, NX),   // bytes
+            y: Axis::lin(0.0, 1.0, NY),         // cross-node flag
+            z: Axis::constant(0.0, NZ),
+        },
+    }
+}
+
+/// Canonical MoE FFN shape the grouped-GEMM tables are profiled at.
+/// Both the compute and weight-streaming paths are linear in
+/// `inter * hidden`, so queries for other shapes scale the interpolated
+/// latency by the volume ratio (per-expert dispatch overhead mis-scales
+/// slightly — an accepted approximation recorded in DESIGN.md).
+pub const MOE_CANON_INTER: u64 = 2048;
+pub const MOE_CANON_HIDDEN: u64 = 4096;
+
+/// A database lookup: table + fractional grid coordinates + a linear
+/// post-scale applied to the interpolated value.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Query {
+    pub table: TableId,
+    pub fx: f64,
+    pub fy: f64,
+    pub fz: f64,
+    pub scale: f64,
+}
+
+/// Map an op to its database query, or `None` if the op class is not
+/// profiled (answered by the Speed-of-Light fallback instead).
+pub fn query_for(op: &Op) -> Option<Query> {
+    let (table, x, y, z, scale) = match *op {
+        Op::Gemm { m, n, k, dtype, .. } => {
+            (TableId::gemm(dtype), m as f64, n as f64, k as f64, 1.0)
+        }
+        Op::AttnPrefill { q_tokens, kv_len, heads, .. } => {
+            (TableId::AttnPrefill, q_tokens as f64, kv_len as f64, heads as f64, 1.0)
+        }
+        Op::AttnDecode { batch, kv_len, heads, .. } => {
+            (TableId::AttnDecode, batch as f64, kv_len as f64, heads as f64, 1.0)
+        }
+        Op::MoeGemm { tokens, experts, inter, hidden, dtype, imbalance, .. } => {
+            // Tables hold the canonical FFN shape; scale by volume ratio.
+            let scale = (inter * hidden) as f64
+                / (MOE_CANON_INTER * MOE_CANON_HIDDEN) as f64;
+            (TableId::moe(dtype), tokens as f64, experts as f64, imbalance, scale)
+        }
+        Op::AllReduce { bytes, gpus, .. } => (TableId::AllReduce, bytes, gpus as f64, 0.0, 1.0),
+        Op::AllGather { bytes, gpus, .. } => (TableId::AllGather, bytes, gpus as f64, 0.0, 1.0),
+        Op::AllToAll { bytes, gpus, .. } => (TableId::AllToAll, bytes, gpus as f64, 0.0, 1.0),
+        Op::P2p { bytes, cross_node, .. } => {
+            (TableId::P2p, bytes, if cross_node { 1.0 } else { 0.0 }, 0.0, 1.0)
+        }
+        Op::Elementwise { .. } => return None,
+    };
+    let s = spec(table);
+    Some(Query {
+        table,
+        fx: s.x.frac(x),
+        fy: s.y.frac(y),
+        fz: s.z.frac(z),
+        scale,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axis_roundtrip() {
+        let a = Axis::log(1.0, 262_144.0, 32);
+        for i in [0usize, 7, 16, 31] {
+            let v = a.value(i);
+            assert!((a.frac(v) - i as f64).abs() < 1e-9, "i={i} v={v}");
+        }
+        let l = Axis::lin(1.0, 8.0, 16);
+        assert!((l.frac(l.value(5)) - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn axis_clamps() {
+        let a = Axis::log(16.0, 1024.0, 8);
+        assert_eq!(a.frac(1.0), 0.0);
+        assert_eq!(a.frac(1e9), 7.0);
+    }
+
+    #[test]
+    fn constant_axis() {
+        let a = Axis::constant(0.0, 16);
+        assert_eq!(a.frac(123.0), 0.0);
+        assert_eq!(a.value(9), 0.0);
+    }
+
+    #[test]
+    fn query_mapping_dispatch() {
+        use crate::models::Dtype;
+        let q = query_for(&Op::Gemm { m: 64, n: 4096, k: 4096, dtype: Dtype::Fp8, count: 1 })
+            .unwrap();
+        assert_eq!(q.table, TableId::GemmFp8);
+        assert!(q.fx > 0.0 && q.fx < 31.0);
+        assert!(query_for(&Op::Elementwise { bytes: 1e6, count: 1 }).is_none());
+        let p = query_for(&Op::P2p { bytes: 1e6, cross_node: true, count: 1 }).unwrap();
+        assert_eq!(p.fy, 31.0);
+    }
+
+    #[test]
+    fn all_active_have_specs() {
+        for id in TableId::all_active() {
+            let s = spec(id);
+            assert_eq!(s.x.n, NX);
+            assert_eq!(s.y.n, NY);
+            assert_eq!(s.z.n, NZ);
+        }
+    }
+}

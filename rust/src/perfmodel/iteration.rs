@@ -1,0 +1,169 @@
+//! Iteration-level latency (paper §4.3): one engine iteration's latency
+//! = Σ operator latencies (from the oracle) + framework host overhead.
+//! This is the GETSTEPLATENCY / GETMIXLAT / GETGENLAT primitive that
+//! Algorithms 1–3 are built on.
+
+use crate::config::EngineConfig;
+use crate::hardware::ClusterSpec;
+use crate::models::ModelArch;
+use crate::ops::{decompose, StepShape};
+use crate::perfdb::LatencyOracle;
+
+use super::moe;
+
+/// Context shared by every step-latency query of one estimation run.
+pub struct IterCtx<'a> {
+    pub oracle: &'a dyn LatencyOracle,
+    pub model: &'a ModelArch,
+    pub cluster: &'a ClusterSpec,
+    pub eng: &'a EngineConfig,
+    /// Cached MoE imbalance γ for this engine's EP degree.
+    pub moe_gamma: f64,
+}
+
+impl<'a> IterCtx<'a> {
+    pub fn new(
+        oracle: &'a dyn LatencyOracle,
+        model: &'a ModelArch,
+        cluster: &'a ClusterSpec,
+        eng: &'a EngineConfig,
+    ) -> Self {
+        let moe_gamma = moe::model_imbalance(model, eng.parallel.ep, 0x1517);
+        IterCtx { oracle, model, cluster, eng, moe_gamma }
+    }
+
+    /// Latency of one iteration with the given token population, ms.
+    pub fn step_ms(&self, shape: &StepShape) -> f64 {
+        let ops = decompose(self.model, self.cluster, self.eng, shape, self.moe_gamma);
+        let mut kernel_us = self.oracle.step_latency_us(&ops);
+        // CUDA-graph replay removes per-kernel launches on decode-only
+        // steps (mixed steps have dynamic shapes and cannot be graphed).
+        if self.eng.flags.cuda_graph && shape.is_decode_only() {
+            kernel_us -= crate::ops::CUDA_GRAPH_LAUNCH_SAVING
+                * crate::ops::launch_overhead_us(&ops, self.cluster.gpu.launch_us);
+            kernel_us = kernel_us.max(0.0);
+        }
+        let host_us = self
+            .eng
+            .framework
+            .profile()
+            .iter_host_overhead_us(self.eng.flags.cuda_graph, shape.is_decode_only());
+        (kernel_us + host_us) / 1000.0
+    }
+
+    /// Latency of MANY iterations in one oracle round-trip: decompose
+    /// every shape, price all ops in a single `op_latencies_us` batch,
+    /// then reassemble per-step sums (+ CUDA-graph and host adjustments).
+    /// Collapses Algorithm 1's stride sweep from ~OSL/32 oracle calls to
+    /// one — the §Perf L3 fix that makes the PJRT path competitive.
+    pub fn steps_ms_batch(&self, shapes: &[StepShape]) -> Vec<f64> {
+        let mut all_ops = Vec::with_capacity(shapes.len() * 16);
+        let mut bounds = Vec::with_capacity(shapes.len());
+        for shape in shapes {
+            let ops = decompose(self.model, self.cluster, self.eng, shape, self.moe_gamma);
+            bounds.push((all_ops.len(), ops.len()));
+            all_ops.extend(ops);
+        }
+        let lat = self.oracle.op_latencies_us(&all_ops);
+        let fw = self.eng.framework.profile();
+        shapes
+            .iter()
+            .zip(&bounds)
+            .map(|(shape, &(start, len))| {
+                let ops = &all_ops[start..start + len];
+                let mut kernel_us: f64 = ops
+                    .iter()
+                    .zip(&lat[start..start + len])
+                    .map(|(o, l)| l * o.count() as f64)
+                    .sum();
+                if self.eng.flags.cuda_graph && shape.is_decode_only() {
+                    kernel_us -= crate::ops::CUDA_GRAPH_LAUNCH_SAVING
+                        * crate::ops::launch_overhead_us(ops, self.cluster.gpu.launch_us);
+                    kernel_us = kernel_us.max(0.0);
+                }
+                let host_us =
+                    fw.iter_host_overhead_us(self.eng.flags.cuda_graph, shape.is_decode_only());
+                (kernel_us + host_us) / 1000.0
+            })
+            .collect()
+    }
+
+    /// GETSTEPLATENCY(batch, seq_len, 'prefill'): `batch` requests each
+    /// prefilling `q` new tokens against `kv` total context.
+    pub fn prefill_step_ms(&self, batch: u32, q: u64, kv: u64) -> f64 {
+        self.step_ms(&StepShape::prefill(batch, q, kv))
+    }
+
+    /// GETSTEPLATENCY(batch, seq_len, 'decode').
+    pub fn decode_step_ms(&self, batch: u64, kv: u64) -> f64 {
+        self.step_ms(&StepShape::decode(batch, kv))
+    }
+
+    /// GETMIXLAT(N_ctx, N_gen, ISL, OSL): a mixed iteration carrying
+    /// `n_ctx` prefill tokens (split into `ceil(n_ctx/isl)` requests)
+    /// plus `n_gen` decode streams at mid-generation depth.
+    pub fn mix_step_ms(&self, n_ctx: u64, n_gen: u64, isl: u64, osl: u64) -> f64 {
+        let ctx_reqs = n_ctx.div_ceil(isl.max(1)).max(1) as u32;
+        let ctx_q = (n_ctx / ctx_reqs as u64).max(1);
+        let gen_kv = isl + osl / 2;
+        self.step_ms(&StepShape {
+            ctx_reqs,
+            ctx_q,
+            ctx_kv: isl.max(ctx_q),
+            gen_reqs: n_gen,
+            gen_kv,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ParallelSpec, RuntimeFlags};
+    use crate::frameworks::Framework;
+    use crate::hardware::h100_sxm;
+    use crate::models::{by_name, Dtype};
+    use crate::silicon::Silicon;
+
+    fn fixture() -> (Silicon, ModelArch, ClusterSpec, EngineConfig) {
+        let cluster = ClusterSpec::new(h100_sxm(), 8, 1);
+        let sil = Silicon::new(cluster, Framework::TrtLlm.profile());
+        let model = by_name("qwen3-32b").unwrap();
+        let eng = EngineConfig {
+            framework: Framework::TrtLlm,
+            parallel: ParallelSpec::tp(2),
+            batch: 8,
+            weight_dtype: Dtype::Fp8,
+            kv_dtype: Dtype::Fp8,
+            flags: RuntimeFlags::defaults_for(Framework::TrtLlm),
+        };
+        (sil, model, cluster, eng)
+    }
+
+    #[test]
+    fn prefill_scales_superlinearly_with_isl() {
+        let (sil, model, cluster, eng) = fixture();
+        let ctx = IterCtx::new(&sil, &model, &cluster, &eng);
+        let t1 = ctx.prefill_step_ms(1, 1024, 1024);
+        let t4 = ctx.prefill_step_ms(1, 4096, 4096);
+        assert!(t4 > t1 * 3.5, "t1={t1} t4={t4}");
+    }
+
+    #[test]
+    fn decode_step_far_cheaper_than_prefill() {
+        let (sil, model, cluster, eng) = fixture();
+        let ctx = IterCtx::new(&sil, &model, &cluster, &eng);
+        let p = ctx.prefill_step_ms(1, 4096, 4096);
+        let d = ctx.decode_step_ms(8, 4096);
+        assert!(d < p * 0.5, "prefill={p} decode={d}");
+    }
+
+    #[test]
+    fn mix_step_costs_more_than_decode_only() {
+        let (sil, model, cluster, eng) = fixture();
+        let ctx = IterCtx::new(&sil, &model, &cluster, &eng);
+        let mixed = ctx.mix_step_ms(4096, 8, 4096, 512);
+        let gen = ctx.decode_step_ms(8, 4096 + 256);
+        assert!(mixed > gen * 2.0, "mixed={mixed} gen={gen}");
+    }
+}

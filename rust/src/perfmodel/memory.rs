@@ -1,0 +1,145 @@
+//! Memory feasibility: weights + KV cache + activation reserve per GPU.
+//! Candidates that don't fit are pruned from the search space
+//! ("Configurations exceeding memory capacity were automatically
+//! pruned", paper §5.2), and the KV budget bounds batch size and the
+//! context-token capacity.
+
+use crate::config::EngineConfig;
+use crate::models::ModelArch;
+use crate::ops::kv_bytes_per_gpu_layer;
+
+/// Activation / workspace reserve per GPU, bytes (CUDA context, cublas
+/// workspaces, activation peaks).
+pub const ACT_RESERVE_BYTES: f64 = 4.0 * 1024.0 * 1024.0 * 1024.0;
+
+/// Model weight bytes held by ONE GPU under the engine's parallelism.
+pub fn weight_bytes_per_gpu(model: &ModelArch, eng: &EngineConfig) -> f64 {
+    let tp = eng.parallel.tp as u64;
+    let pp = eng.parallel.pp as u64;
+    let ep = eng.parallel.ep.max(1) as u64;
+    let wb = eng.weight_dtype.bytes();
+
+    // Embedding + LM head shard across TP.
+    let embed = 2.0 * (model.vocab * model.hidden) as f64 / tp as f64 * wb;
+    // Attention shards across TP.
+    let attn = model.num_layers as f64 * model.attn_params_per_layer() as f64 / tp as f64 * wb;
+    // FFN / MoE.
+    let ffn: f64 = (0..model.num_layers)
+        .map(|l| match &model.moe {
+            Some(moe) if l >= moe.first_dense_layers => {
+                let experts = if ep > 1 {
+                    // EP shards whole experts; each kept at full width.
+                    (moe.num_experts as f64 / ep as f64)
+                        * 3.0
+                        * (model.hidden * moe.expert_inter) as f64
+                } else {
+                    moe.num_experts as f64 * 3.0 * (model.hidden * moe.expert_inter) as f64
+                        / tp as f64
+                };
+                let shared = 3.0 * (model.hidden * moe.shared_inter) as f64 / tp as f64;
+                (experts + shared) * wb
+            }
+            _ => 3.0 * (model.hidden * model.inter) as f64 / tp as f64 * wb,
+        })
+        .sum();
+
+    (embed + attn + ffn) / pp as f64
+}
+
+/// KV bytes per token held by ONE GPU (layers split over PP).
+pub fn kv_bytes_per_token_gpu(model: &ModelArch, eng: &EngineConfig) -> f64 {
+    let per_layer = kv_bytes_per_gpu_layer(model, eng.kv_dtype, eng.parallel.tp as u64);
+    model.num_layers as f64 * per_layer / eng.parallel.pp as f64
+}
+
+/// KV-cache token capacity of one engine instance, after weights and the
+/// activation reserve, scaled by the kv-fraction flag. 0 ⇒ infeasible.
+pub fn kv_capacity_tokens(model: &ModelArch, gpu_mem_bytes: f64, eng: &EngineConfig) -> u64 {
+    let weights = weight_bytes_per_gpu(model, eng);
+    let free = gpu_mem_bytes - weights - ACT_RESERVE_BYTES;
+    if free <= 0.0 {
+        return 0;
+    }
+    let kv_budget = free * eng.flags.kv_frac;
+    (kv_budget / kv_bytes_per_token_gpu(model, eng)) as u64
+}
+
+/// Can this engine hold `batch` concurrent requests of `isl+osl` tokens?
+pub fn fits(model: &ModelArch, gpu_mem_bytes: f64, eng: &EngineConfig, isl: u32, osl: u32) -> bool {
+    let needed = eng.batch as u64 * (isl + osl) as u64;
+    kv_capacity_tokens(model, gpu_mem_bytes, eng) >= needed
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ParallelSpec, RuntimeFlags};
+    use crate::frameworks::Framework;
+    use crate::hardware::h100_sxm;
+    use crate::models::{by_name, Dtype};
+
+    fn eng(tp: u32, ep: u32, batch: u32, dt: Dtype) -> EngineConfig {
+        EngineConfig {
+            framework: Framework::TrtLlm,
+            parallel: ParallelSpec { tp, pp: 1, ep, dp: 1 },
+            batch,
+            weight_dtype: dt,
+            kv_dtype: dt,
+            flags: RuntimeFlags::defaults_for(Framework::TrtLlm),
+        }
+    }
+
+    #[test]
+    fn qwen32b_fp8_fits_tp1_on_h100_but_fp16_does_not() {
+        let m = by_name("qwen3-32b").unwrap();
+        let mem = h100_sxm().mem_bytes();
+        // fp8: ~33 GB weights on one GPU — fits with ample KV room.
+        let cap8 = kv_capacity_tokens(&m, mem, &eng(1, 1, 8, Dtype::Fp8));
+        assert!(cap8 > 100_000, "cap8={cap8}");
+        // fp16: ~66 GB weights + 4 GB reserve — KV squeezed hard (and
+        // each token costs 2× the bytes).
+        let cap16 = kv_capacity_tokens(&m, mem, &eng(1, 1, 8, Dtype::Fp16));
+        assert!(cap16 < cap8 / 4, "cap16={cap16} cap8={cap8}");
+    }
+
+    #[test]
+    fn tp_scales_weights_down() {
+        let m = by_name("qwen3-32b").unwrap();
+        let w1 = weight_bytes_per_gpu(&m, &eng(1, 1, 8, Dtype::Fp16));
+        let w8 = weight_bytes_per_gpu(&m, &eng(8, 1, 8, Dtype::Fp16));
+        let r = w1 / w8;
+        assert!(r > 7.5 && r < 8.5, "ratio {r}");
+    }
+
+    #[test]
+    fn deepseek_v3_needs_many_gpus() {
+        let m = by_name("deepseek-v3").unwrap();
+        let mem = h100_sxm().mem_bytes();
+        // fp8 671B ≈ 671 GB: even TP8 single-node can't hold it with EP1.
+        assert!(!fits(&m, mem, &eng(8, 1, 1, Dtype::Fp8), 1000, 100));
+        // TP8 × EP8 over 8 GPUs (wide-EP: experts sharded 8-way) fits.
+        let e = eng(8, 8, 1, Dtype::Fp8);
+        let w = weight_bytes_per_gpu(&m, &e);
+        assert!(w < 79.0 * 1.1e9, "w={w}");
+    }
+
+    #[test]
+    fn batch_feasibility_monotone() {
+        let m = by_name("llama3.1-8b").unwrap();
+        let mem = h100_sxm().mem_bytes();
+        assert!(fits(&m, mem, &eng(1, 1, 4, Dtype::Fp16), 4096, 512));
+        assert!(!fits(&m, mem, &eng(1, 1, 4096, Dtype::Fp16), 4096, 512));
+    }
+
+    #[test]
+    fn kv_frac_flag_scales_capacity() {
+        let m = by_name("llama3.1-8b").unwrap();
+        let mem = h100_sxm().mem_bytes();
+        let mut lo = eng(1, 1, 8, Dtype::Fp16);
+        lo.flags.kv_frac = 0.5;
+        let hi = eng(1, 1, 8, Dtype::Fp16);
+        let c_lo = kv_capacity_tokens(&m, mem, &lo);
+        let c_hi = kv_capacity_tokens(&m, mem, &hi);
+        assert!((c_hi as f64 / c_lo as f64 - 0.9 / 0.5).abs() < 0.05);
+    }
+}

@@ -1,0 +1,111 @@
+//! Serving-mode performance models (paper §4.2): derive TTFT / TPOT /
+//! generation speed / per-GPU system throughput for a candidate
+//! configuration, from operator latencies answered by a
+//! [`LatencyOracle`] (the PerfDatabase on the search path, or raw
+//! silicon for oracle-gap experiments).
+//!
+//! * [`static_mode`] — Algorithm 1 (stride-interpolated decode sweep).
+//! * [`aggregated`] — Algorithm 2 (continuous batching with the mixed /
+//!   generation-only phase split and the F_corr TTFT correction).
+//! * [`disagg`] — Algorithm 3 (per-pool filtering + (x)P(y)D rate
+//!   matching with α/β degradation factors).
+
+pub mod aggregated;
+pub mod disagg;
+pub mod iteration;
+pub mod memory;
+pub mod moe;
+pub mod static_mode;
+
+use crate::config::{Candidate, WorkloadSpec};
+use crate::hardware::ClusterSpec;
+use crate::models::ModelArch;
+use crate::perfdb::LatencyOracle;
+
+/// Performance projection for one candidate (the paper's Eq. 1–2).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PerfEstimate {
+    pub ttft_ms: f64,
+    pub tpot_ms: f64,
+    /// Generation speed, tokens/s per user = 1000 / TPOT (Eq. 1).
+    pub speed: f64,
+    /// System throughput, tokens/s per GPU (Eq. 2).
+    pub thru_per_gpu: f64,
+    /// Steady-state concurrent requests assumed.
+    pub concurrency: u32,
+}
+
+impl PerfEstimate {
+    pub fn from_latencies(
+        ttft_ms: f64,
+        tpot_ms: f64,
+        batch: u32,
+        osl: u32,
+        total_gpus: u32,
+    ) -> PerfEstimate {
+        let speed = if tpot_ms > 0.0 { 1000.0 / tpot_ms } else { f64::INFINITY };
+        // Eq. 2: requests complete every TTFT + (OSL-1)·TPOT ms; `batch`
+        // run concurrently; each yields OSL tokens.
+        let per_req_ms = ttft_ms + (osl.saturating_sub(1)) as f64 * tpot_ms;
+        let thru = 1000.0 / per_req_ms * batch as f64 * osl as f64 / total_gpus as f64;
+        PerfEstimate { ttft_ms, tpot_ms, speed, thru_per_gpu: thru, concurrency: batch }
+    }
+
+    /// Does this estimate satisfy the SLA?
+    pub fn meets(&self, sla: &crate::config::Sla) -> bool {
+        self.ttft_ms <= sla.ttft_ms && self.speed >= sla.min_speed
+    }
+}
+
+/// Estimate a full candidate deployment against a workload — the
+/// "InferenceSession" step of the paper's workflow (§4.1 step 3).
+pub fn estimate(
+    oracle: &dyn LatencyOracle,
+    model: &ModelArch,
+    cluster: &ClusterSpec,
+    cand: &Candidate,
+    wl: &WorkloadSpec,
+) -> PerfEstimate {
+    match cand {
+        Candidate::Aggregated { engine, replicas } => {
+            let (ttft, tpot) = aggregated::estimate(oracle, model, cluster, engine, wl);
+            // Replicas scale concurrency and GPUs together; per-GPU
+            // throughput is replica-invariant.
+            let est = PerfEstimate::from_latencies(
+                ttft,
+                tpot,
+                engine.batch * replicas,
+                wl.osl,
+                engine.parallel.gpus() * replicas,
+            );
+            est
+        }
+        Candidate::Disaggregated { prefill, decode, x, y } => {
+            disagg::estimate_composite(oracle, model, cluster, prefill, decode, *x, *y, wl)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Sla;
+
+    #[test]
+    fn eq2_throughput_units() {
+        // TTFT 1000ms, TPOT 50ms, OSL 101, batch 10, 2 GPUs:
+        // per-request = 1000 + 100*50 = 6000 ms → 1/6 req/s × 10 × 101
+        // tokens / 2 gpus = 84.17 tokens/s/gpu.
+        let e = PerfEstimate::from_latencies(1000.0, 50.0, 10, 101, 2);
+        assert!((e.thru_per_gpu - 84.1666).abs() < 0.01, "{}", e.thru_per_gpu);
+        assert!((e.speed - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sla_check() {
+        let e = PerfEstimate::from_latencies(900.0, 40.0, 8, 100, 8);
+        assert!(e.meets(&Sla { ttft_ms: 1000.0, min_speed: 20.0 }));
+        assert!(!e.meets(&Sla { ttft_ms: 800.0, min_speed: 20.0 }));
+        assert!(!e.meets(&Sla { ttft_ms: 1000.0, min_speed: 30.0 }));
+    }
+}

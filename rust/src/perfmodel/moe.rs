@@ -1,0 +1,170 @@
+//! Power-law MoE load imbalance (paper §4.4.1, Eq. 3–4).
+//!
+//! Computes γ — the hottest-participant load factor that multiplies
+//! grouped-GEMM compute time. The Rust implementation mirrors the Pallas
+//! kernel (`python/compile/kernels/moe_powerlaw.py`); the PJRT-backed
+//! service path runs the kernel, this native path serves the CLI and is
+//! cross-checked against the kernel in integration tests.
+
+use crate::models::ModelArch;
+use crate::util::rng::Rng;
+
+/// Default x bounds of the bounded power law (Eq. 3).
+pub const X_MIN: f64 = 1.0;
+pub const X_MAX: f64 = 100.0;
+/// Guard band around the α = 1 singularity.
+pub const ALPHA_GUARD: f64 = 0.02;
+
+/// Sample one expert-load weight vector (Eq. 3, before normalization).
+pub fn sample_weights(rng: &mut Rng, experts: usize, alpha: f64) -> Vec<f64> {
+    let a = clamp_alpha(alpha);
+    let one_m = 1.0 - a;
+    let lo = X_MIN.powf(one_m);
+    let hi = X_MAX.powf(one_m);
+    (0..experts)
+        .map(|_| ((hi - lo) * rng.f64_open() + lo).powf(1.0 / one_m))
+        .collect()
+}
+
+/// Nudge α off the singular point, matching the kernel's contract.
+pub fn clamp_alpha(alpha: f64) -> f64 {
+    if (alpha - 1.0).abs() < ALPHA_GUARD {
+        if alpha < 1.0 {
+            1.0 - ALPHA_GUARD
+        } else {
+            1.0 + ALPHA_GUARD
+        }
+    } else {
+        alpha
+    }
+}
+
+/// Token counts per expert for a batch of `t_total` tokens routed top-k
+/// (Eq. 4), with residual redistribution so the counts sum exactly.
+pub fn token_counts(rng: &mut Rng, experts: usize, alpha: f64, t_total: u64, k: u64) -> Vec<u64> {
+    let w = sample_weights(rng, experts, alpha);
+    let sum: f64 = w.iter().sum();
+    let total = t_total * k;
+    let mut counts: Vec<u64> = w
+        .iter()
+        .map(|x| (x / sum * total as f64).round() as u64)
+        .collect();
+    // Fix rounding drift.
+    let mut drift = counts.iter().sum::<u64>() as i64 - total as i64;
+    let mut i = 0;
+    while drift != 0 && experts > 0 {
+        let idx = i % experts;
+        if drift > 0 && counts[idx] > 0 {
+            counts[idx] -= 1;
+            drift -= 1;
+        } else if drift < 0 {
+            counts[idx] += 1;
+            drift += 1;
+        }
+        i += 1;
+    }
+    counts
+}
+
+/// γ for an EP group: hottest GPU's routed-token share over the mean,
+/// experts assigned to GPUs in contiguous blocks (the standard layout).
+/// Averaged over `trials` samples for stability. γ = 1 when `ep <= 1`
+/// (a single grouped GEMM is work-conserving across its experts).
+pub fn ep_imbalance(experts: u64, alpha: f64, ep: u32, seed: u64, trials: u32) -> f64 {
+    if ep <= 1 || experts == 0 {
+        return 1.0;
+    }
+    let ep = ep.min(experts as u32);
+    let per_gpu = (experts as usize).div_ceil(ep as usize);
+    let mut rng = Rng::new(seed ^ MOE_SEED_SALT);
+    let mut acc = 0.0;
+    for _ in 0..trials.max(1) {
+        let w = sample_weights(&mut rng, experts as usize, alpha);
+        let total: f64 = w.iter().sum();
+        let mean = total / ep as f64;
+        let max_gpu = w
+            .chunks(per_gpu)
+            .map(|c| c.iter().sum::<f64>())
+            .fold(0.0f64, f64::max);
+        acc += max_gpu / mean;
+    }
+    acc / trials.max(1) as f64
+}
+
+const MOE_SEED_SALT: u64 = 0x5EED_0E0E_0E0E_5EED;
+
+/// Convenience: γ for a model under `ep`-way expert parallelism.
+pub fn model_imbalance(model: &ModelArch, ep: u32, seed: u64) -> f64 {
+    match &model.moe {
+        None => 1.0,
+        Some(m) => ep_imbalance(m.num_experts, m.load_alpha, ep, seed, 16),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::by_name;
+
+    #[test]
+    fn counts_sum_exactly() {
+        let mut rng = Rng::new(1);
+        for (t, k) in [(128u64, 8u64), (4096, 2), (7, 8)] {
+            let c = token_counts(&mut rng, 128, 1.2, t, k);
+            assert_eq!(c.iter().sum::<u64>(), t * k);
+        }
+    }
+
+    #[test]
+    fn gamma_one_without_ep() {
+        assert_eq!(ep_imbalance(128, 1.2, 1, 0, 8), 1.0);
+        let dense = by_name("qwen3-32b").unwrap();
+        assert_eq!(model_imbalance(&dense, 8, 0), 1.0);
+    }
+
+    #[test]
+    fn gamma_grows_with_alpha() {
+        let lo = ep_imbalance(128, 0.05, 8, 7, 32);
+        let hi = ep_imbalance(128, 1.2, 8, 7, 32);
+        assert!(lo < hi, "lo={lo} hi={hi}");
+        assert!(lo >= 1.0 && lo < 1.4, "lo={lo}");
+        assert!(hi > 1.15 && hi < 4.0, "hi={hi}");
+    }
+
+    #[test]
+    fn gamma_grows_with_ep() {
+        let e2 = ep_imbalance(128, 1.2, 2, 3, 32);
+        let e16 = ep_imbalance(128, 1.2, 16, 3, 32);
+        assert!(e16 > e2, "e2={e2} e16={e16}");
+    }
+
+    #[test]
+    fn heavy_tail_top20_share() {
+        // α=1.2 over 128 experts: top 20% of experts carry the majority
+        // of the load (the Qwen3-235B observation).
+        let mut rng = Rng::new(5);
+        let mut share = 0.0;
+        let trials = 64;
+        for _ in 0..trials {
+            let mut w = sample_weights(&mut rng, 128, 1.2);
+            w.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            let total: f64 = w.iter().sum();
+            let top: f64 = w[..26].iter().sum();
+            share += top / total;
+        }
+        share /= trials as f64;
+        assert!(share > 0.5, "top-20% share {share}");
+    }
+
+    #[test]
+    fn alpha_guard() {
+        assert_eq!(clamp_alpha(1.0), 1.0 + ALPHA_GUARD);
+        assert_eq!(clamp_alpha(0.999), 1.0 - ALPHA_GUARD);
+        assert_eq!(clamp_alpha(0.5), 0.5);
+        // No NaNs near the singularity.
+        let mut rng = Rng::new(2);
+        for w in sample_weights(&mut rng, 64, 1.0) {
+            assert!(w.is_finite() && w > 0.0);
+        }
+    }
+}

@@ -1,0 +1,124 @@
+//! Algorithm 1 — Static Mode Inference Performance Estimation.
+//!
+//! Strictly sequential processing of one fixed batch: TTFT = prefill
+//! latency; TPOT = average decode-step latency over the output sequence,
+//! estimated with the paper's stride-based optimization (default stride
+//! 32): query the oracle at stride intervals and extrapolate each step's
+//! cost across the next R tokens instead of querying every token.
+
+use super::iteration::IterCtx;
+
+/// Default stride S_stride (paper: 32).
+pub const STRIDE: u64 = 32;
+
+/// Returns (TTFT ms, TPOT ms) for a static batch.
+///
+/// * `isl` / `osl` — input/output lengths; `prefix` — cached prefix P.
+/// * `batch` — fixed batch size B.
+pub fn estimate(ctx: &IterCtx, isl: u64, osl: u64, prefix: u64, batch: u32) -> (f64, f64) {
+    estimate_with_stride(ctx, isl, osl, prefix, batch, STRIDE)
+}
+
+/// Algorithm 1 with an explicit stride (ablation hook).
+pub fn estimate_with_stride(
+    ctx: &IterCtx,
+    isl: u64,
+    osl: u64,
+    prefix: u64,
+    batch: u32,
+    stride: u64,
+) -> (f64, f64) {
+    let stride = stride.max(1);
+    // Phase 1: context latency (TTFT).
+    let isl_eff = isl.saturating_sub(prefix).max(1);
+    let ttft = ctx.prefill_step_ms(batch, isl_eff, isl);
+
+    // Phase 2: generation latency, stride-interpolated. All stride
+    // points are priced in ONE oracle batch (steps_ms_batch) — a single
+    // PJRT execution on the kernel-backed path.
+    let mut t_gen = 0.0;
+    if osl > 1 {
+        let mut shapes = Vec::new();
+        let mut weights = Vec::new();
+        let mut k = 0u64;
+        while k < osl - 1 {
+            let s_seq = isl + k + 1; // current total sequence length
+            shapes.push(crate::ops::StepShape::decode(batch as u64, s_seq));
+            weights.push(stride.min(osl - 1 - k) as f64); // next R tokens
+            k += stride;
+        }
+        let lat = ctx.steps_ms_batch(&shapes);
+        t_gen = lat.iter().zip(&weights).map(|(l, w)| l * w).sum();
+    }
+
+    // Phase 3: TPOT.
+    let tpot = if osl > 1 { t_gen / (osl - 1) as f64 } else { 0.0 };
+    (ttft, tpot)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{EngineConfig, ParallelSpec, RuntimeFlags};
+    use crate::frameworks::Framework;
+    use crate::hardware::{h100_sxm, ClusterSpec};
+    use crate::models::{by_name, Dtype, ModelArch};
+    use crate::silicon::Silicon;
+
+    fn fixture() -> (Silicon, ModelArch, ClusterSpec, EngineConfig) {
+        let cluster = ClusterSpec::new(h100_sxm(), 8, 1);
+        (
+            Silicon::new(cluster, Framework::TrtLlm.profile()),
+            by_name("qwen3-32b").unwrap(),
+            cluster,
+            EngineConfig {
+                framework: Framework::TrtLlm,
+                parallel: ParallelSpec::tp(4),
+                batch: 8,
+                weight_dtype: Dtype::Fp8,
+                kv_dtype: Dtype::Fp8,
+                flags: RuntimeFlags::defaults_for(Framework::TrtLlm),
+            },
+        )
+    }
+
+    #[test]
+    fn stride_close_to_exact() {
+        let (sil, model, cluster, eng) = fixture();
+        let ctx = IterCtx::new(&sil, &model, &cluster, &eng);
+        let (_, tpot_exact) = estimate_with_stride(&ctx, 2048, 256, 0, 8, 1);
+        let (_, tpot_s32) = estimate_with_stride(&ctx, 2048, 256, 0, 8, 32);
+        let err = (tpot_s32 - tpot_exact).abs() / tpot_exact;
+        assert!(err < 0.02, "stride error {err}");
+    }
+
+    #[test]
+    fn prefix_reduces_ttft_only() {
+        let (sil, model, cluster, eng) = fixture();
+        let ctx = IterCtx::new(&sil, &model, &cluster, &eng);
+        let (t0, p0) = estimate(&ctx, 4096, 128, 0, 4);
+        let (t1, p1) = estimate(&ctx, 4096, 128, 3072, 4);
+        assert!(t1 < t0 * 0.6, "t0={t0} t1={t1}");
+        assert!((p1 - p0).abs() / p0 < 0.01);
+    }
+
+    #[test]
+    fn osl_one_has_zero_tpot() {
+        let (sil, model, cluster, eng) = fixture();
+        let ctx = IterCtx::new(&sil, &model, &cluster, &eng);
+        let (ttft, tpot) = estimate(&ctx, 1024, 1, 0, 2);
+        assert!(ttft > 0.0);
+        assert_eq!(tpot, 0.0);
+    }
+
+    #[test]
+    fn tpot_grows_with_batch() {
+        let (sil, model, cluster, eng) = fixture();
+        let ctx = IterCtx::new(&sil, &model, &cluster, &eng);
+        let (_, p1) = estimate(&ctx, 2048, 128, 0, 1);
+        let (_, p64) = estimate(&ctx, 2048, 128, 0, 64);
+        assert!(p64 > p1, "p1={p1} p64={p64}");
+        // ...but far less than 64× (batching amortizes weight reads).
+        assert!(p64 < p1 * 16.0);
+    }
+}

@@ -1,0 +1,104 @@
+//! `artifacts/manifest.json` — the AOT shape contract emitted by
+//! `python/compile/aot.py`, asserted here against the compiled-in
+//! database geometry before any PJRT execution.
+
+use std::path::Path;
+
+use crate::perfdb::tables::{NUM_TABLES, NX, NY, NZ};
+use crate::util::json;
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub num_tables: usize,
+    pub grid: [usize; 3],
+    pub query_batch: usize,
+    pub query_batch_small: usize,
+    pub moe_scenarios: usize,
+    pub moe_experts: usize,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> anyhow::Result<Manifest> {
+        let txt = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e} (run `make artifacts`)", path.display()))?;
+        Self::parse(&txt)
+    }
+
+    pub fn parse(txt: &str) -> anyhow::Result<Manifest> {
+        let j = json::parse(txt)?;
+        let interp = j.req("interp")?;
+        let moe = j.req("moe_powerlaw")?;
+        let grid = interp.req("grid")?.as_arr().ok_or_else(|| anyhow::anyhow!("bad grid"))?;
+        anyhow::ensure!(grid.len() == 3, "grid must have 3 dims");
+        Ok(Manifest {
+            num_tables: interp.req_f64("num_tables")? as usize,
+            grid: [
+                grid[0].as_u64().unwrap_or(0) as usize,
+                grid[1].as_u64().unwrap_or(0) as usize,
+                grid[2].as_u64().unwrap_or(0) as usize,
+            ],
+            query_batch: interp.req_f64("query_batch")? as usize,
+            query_batch_small: interp.f64_or("query_batch_small", 0.0) as usize,
+            moe_scenarios: moe.req_f64("scenarios")? as usize,
+            moe_experts: moe.req_f64("experts")? as usize,
+        })
+    }
+
+    /// Assert agreement with the compiled-in geometry.
+    pub fn check_contract(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.num_tables == NUM_TABLES && self.grid == [NX, NY, NZ],
+            "artifact grid {:?}x{} != compiled {:?}x{} — rebuild artifacts",
+            self.grid,
+            self.num_tables,
+            [NX, NY, NZ],
+            NUM_TABLES
+        );
+        anyhow::ensure!(
+            self.query_batch == super::QUERY_BATCH
+                && self.moe_scenarios == super::MOE_SCENARIOS
+                && self.moe_experts == super::MOE_EXPERTS,
+            "artifact batch shapes changed — rebuild artifacts"
+        );
+        anyhow::ensure!(
+            self.query_batch_small == 0 || self.query_batch_small == super::QUERY_BATCH_SMALL,
+            "small-batch artifact shape changed — rebuild artifacts"
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const GOOD: &str = r#"{
+      "interp": {"num_tables": 16, "grid": [32, 32, 16], "query_batch": 8192,
+                 "query_batch_small": 256,
+                 "inputs": ["grids","tids","coords"], "outputs": ["lat"]},
+      "moe_powerlaw": {"scenarios": 256, "experts": 128,
+                       "inputs": ["u","alpha","params"], "outputs": ["loads","imbalance"]}
+    }"#;
+
+    #[test]
+    fn parse_and_check() {
+        let m = Manifest::parse(GOOD).unwrap();
+        assert_eq!(m.num_tables, 16);
+        assert_eq!(m.grid, [32, 32, 16]);
+        m.check_contract().unwrap();
+    }
+
+    #[test]
+    fn contract_mismatch_rejected() {
+        let bad = GOOD.replace("[32, 32, 16]", "[8, 8, 8]");
+        let m = Manifest::parse(&bad).unwrap();
+        assert!(m.check_contract().is_err());
+    }
+
+    #[test]
+    fn missing_fields_rejected() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse(r#"{"interp": {}}"#).is_err());
+    }
+}

@@ -1,0 +1,325 @@
+//! AOT runtime: load the JAX/Pallas-lowered HLO artifacts and execute
+//! them on the PJRT CPU client from the Rust hot path.
+//!
+//! Python runs once at build time (`make artifacts`); this module makes
+//! the binary self-contained afterwards. Interchange is HLO *text*
+//! (xla_extension 0.5.1 rejects jax≥0.5's 64-bit-id protos; the text
+//! parser reassigns ids — see `python/compile/aot.py`).
+//!
+//! The PJRT client types hold raw pointers (!Send/!Sync), so the
+//! executables live on a dedicated evaluator thread behind channels:
+//! [`PjrtService`] is the thread-safe handle, and [`PjrtOracle`] adapts
+//! it to the [`LatencyOracle`] interface used by the search path — this
+//! is also exactly the dynamic-batching shape the config-search service
+//! needs (many concurrent searches funneling queries into one executor).
+
+pub mod manifest;
+
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+use std::sync::Mutex;
+
+use crate::ops::Op;
+use crate::perfdb::tables::{query_for, GRID_LEN};
+use crate::perfdb::{sol, LatencyOracle, PerfDatabase};
+
+pub use manifest::Manifest;
+
+/// Interp kernel AOT batch size (manifest `query_batch`).
+pub const QUERY_BATCH: usize = 8192;
+/// Small-batch interp variant (manifest `query_batch_small`) — candidate
+/// step sweeps issue dozens of queries; padding them to 8192 wastes ~30x
+/// gather work (§Perf iteration 1).
+pub const QUERY_BATCH_SMALL: usize = 256;
+/// MoE kernel AOT scenario count / expert width.
+pub const MOE_SCENARIOS: usize = 256;
+pub const MOE_EXPERTS: usize = 128;
+
+enum Job {
+    Interp {
+        tids: Vec<i32>,
+        coords: Vec<f32>,
+        resp: mpsc::Sender<anyhow::Result<Vec<f32>>>,
+    },
+    Moe {
+        u: Vec<f32>,
+        alpha: Vec<f32>,
+        params: Vec<f32>,
+        resp: mpsc::Sender<anyhow::Result<(Vec<f32>, Vec<f32>)>>,
+    },
+    Shutdown,
+}
+
+/// Thread-safe handle to the PJRT evaluator thread.
+pub struct PjrtService {
+    tx: Mutex<mpsc::Sender<Job>>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl PjrtService {
+    /// Load artifacts from `dir` (expects `interp.hlo.txt`,
+    /// `moe_powerlaw.hlo.txt`, `manifest.json`) and bind the packed
+    /// grids of `db` as the interpolation surface.
+    pub fn start(dir: &Path, grids: Vec<f32>) -> anyhow::Result<PjrtService> {
+        anyhow::ensure!(grids.len() == GRID_LEN, "grid payload length {}", grids.len());
+        let m = Manifest::load(&dir.join("manifest.json"))?;
+        m.check_contract()?;
+        let interp_path: PathBuf = dir.join("interp.hlo.txt");
+        let interp_small_path: PathBuf = dir.join("interp_small.hlo.txt");
+        let moe_path: PathBuf = dir.join("moe_powerlaw.hlo.txt");
+        anyhow::ensure!(interp_path.exists(), "missing {}", interp_path.display());
+        anyhow::ensure!(moe_path.exists(), "missing {}", moe_path.display());
+
+        let (tx, rx) = mpsc::channel::<Job>();
+        let (ready_tx, ready_rx) = mpsc::channel::<anyhow::Result<()>>();
+        let handle = std::thread::Builder::new()
+            .name("pjrt-eval".into())
+            .spawn(move || {
+                evaluator_thread(rx, ready_tx, &interp_path, &interp_small_path, &moe_path, grids)
+            })?;
+        ready_rx.recv()??;
+        Ok(PjrtService { tx: Mutex::new(tx), handle: Some(handle) })
+    }
+
+    /// Evaluate interpolation queries. Arbitrary length — internally
+    /// chunked and padded to the AOT batch (8192).
+    pub fn interp(&self, tids: &[i32], coords: &[f32]) -> anyhow::Result<Vec<f32>> {
+        anyhow::ensure!(coords.len() == tids.len() * 3, "coords shape mismatch");
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .send(Job::Interp { tids: tids.to_vec(), coords: coords.to_vec(), resp: rtx })
+            .map_err(|_| anyhow::anyhow!("pjrt evaluator thread gone"))?;
+        rrx.recv()?
+    }
+
+    /// Evaluate MoE power-law scenarios (S ≤ 256 per call; padded).
+    pub fn moe(
+        &self,
+        u: &[f32],
+        alpha: &[f32],
+        params: &[f32],
+    ) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
+        let s = alpha.len();
+        anyhow::ensure!(s <= MOE_SCENARIOS, "too many scenarios: {s}");
+        anyhow::ensure!(u.len() == s * MOE_EXPERTS && params.len() == s * 3, "shape mismatch");
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .send(Job::Moe {
+                u: u.to_vec(),
+                alpha: alpha.to_vec(),
+                params: params.to_vec(),
+                resp: rtx,
+            })
+            .map_err(|_| anyhow::anyhow!("pjrt evaluator thread gone"))?;
+        rrx.recv()?
+    }
+}
+
+impl Drop for PjrtService {
+    fn drop(&mut self) {
+        let _ = self.tx.lock().unwrap().send(Job::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn evaluator_thread(
+    rx: mpsc::Receiver<Job>,
+    ready: mpsc::Sender<anyhow::Result<()>>,
+    interp_path: &Path,
+    interp_small_path: &Path,
+    moe_path: &Path,
+    grids: Vec<f32>,
+) {
+    let init = (|| -> anyhow::Result<_> {
+        let client = xla::PjRtClient::cpu()?;
+        let load = |p: &Path| -> anyhow::Result<xla::PjRtLoadedExecutable> {
+            let proto = xla::HloModuleProto::from_text_file(p)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            Ok(client.compile(&comp)?)
+        };
+        let interp = load(interp_path)?;
+        // Older artifact sets may lack the small variant; fall back.
+        let interp_small = if interp_small_path.exists() {
+            Some(load(interp_small_path)?)
+        } else {
+            None
+        };
+        let moe = load(moe_path)?;
+        // The grid surface lives on-device for the whole session: one
+        // host->device upload instead of one per execute (§Perf iter 2).
+        let grids_buf = client.buffer_from_host_buffer::<f32>(
+            &grids,
+            &[
+                crate::perfdb::tables::NUM_TABLES,
+                crate::perfdb::tables::NX,
+                crate::perfdb::tables::NY,
+                crate::perfdb::tables::NZ,
+            ],
+            None,
+        )?;
+        Ok((client, interp, interp_small, moe, grids_buf))
+    })();
+    let (client, interp_exe, interp_small_exe, moe_exe, grids_buf) = match init {
+        Ok(v) => {
+            let _ = ready.send(Ok(()));
+            v
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+
+    while let Ok(job) = rx.recv() {
+        match job {
+            Job::Shutdown => break,
+            Job::Interp { tids, coords, resp } => {
+                let _ = resp.send(run_interp(
+                    &client,
+                    &interp_exe,
+                    interp_small_exe.as_ref(),
+                    &grids_buf,
+                    &tids,
+                    &coords,
+                ));
+            }
+            Job::Moe { u, alpha, params, resp } => {
+                let _ = resp.send(run_moe(&moe_exe, &u, &alpha, &params));
+            }
+        }
+    }
+}
+
+fn run_interp(
+    client: &xla::PjRtClient,
+    exe: &xla::PjRtLoadedExecutable,
+    exe_small: Option<&xla::PjRtLoadedExecutable>,
+    grids: &xla::PjRtBuffer,
+    tids: &[i32],
+    coords: &[f32],
+) -> anyhow::Result<Vec<f32>> {
+    let mut out = Vec::with_capacity(tids.len());
+    let mut chunk_start = 0usize;
+    while chunk_start < tids.len() || (tids.is_empty() && chunk_start == 0) {
+        let remaining = tids.len() - chunk_start;
+        // Pick the variant: pay for 256 slots when ≤256 queries remain.
+        let (the_exe, batch) = match exe_small {
+            Some(s) if remaining <= QUERY_BATCH_SMALL => (s, QUERY_BATCH_SMALL),
+            _ => (exe, QUERY_BATCH),
+        };
+        let end = (chunk_start + batch).min(tids.len());
+        let n = end - chunk_start;
+        let mut t = vec![0i32; batch];
+        let mut c = vec![0f32; batch * 3];
+        t[..n].copy_from_slice(&tids[chunk_start..end]);
+        c[..n * 3].copy_from_slice(&coords[chunk_start * 3..end * 3]);
+        let t_buf = client.buffer_from_host_buffer::<i32>(&t, &[batch], None)?;
+        let c_buf = client.buffer_from_host_buffer::<f32>(&c, &[batch, 3], None)?;
+        // Buffer-level execute: the grid surface is device-resident.
+        let result = the_exe.execute_b::<&xla::PjRtBuffer>(&[grids, &t_buf, &c_buf])?[0][0]
+            .to_literal_sync()?;
+        let lat = result.to_tuple1()?;
+        let v: Vec<f32> = lat.to_vec()?;
+        out.extend_from_slice(&v[..n]);
+        chunk_start = end;
+        if n == 0 {
+            break;
+        }
+    }
+    Ok(out)
+}
+
+fn run_moe(
+    exe: &xla::PjRtLoadedExecutable,
+    u: &[f32],
+    alpha: &[f32],
+    params: &[f32],
+) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
+    let s = alpha.len();
+    let mut u_p = vec![0.5f32; MOE_SCENARIOS * MOE_EXPERTS];
+    let mut a_p = vec![0.5f32; MOE_SCENARIOS];
+    let mut p_p = vec![1.0f32; MOE_SCENARIOS * 3];
+    u_p[..u.len()].copy_from_slice(u);
+    a_p[..s].copy_from_slice(alpha);
+    p_p[..params.len()].copy_from_slice(params);
+    // Padding rows must stay numerically benign: x_max=2, total=1.
+    for i in s..MOE_SCENARIOS {
+        p_p[i * 3] = 1.0;
+        p_p[i * 3 + 1] = 2.0;
+        p_p[i * 3 + 2] = 1.0;
+    }
+    let u_lit = xla::Literal::vec1(&u_p).reshape(&[MOE_SCENARIOS as i64, MOE_EXPERTS as i64])?;
+    let a_lit = xla::Literal::vec1(&a_p);
+    let p_lit = xla::Literal::vec1(&p_p).reshape(&[MOE_SCENARIOS as i64, 3])?;
+    let result =
+        exe.execute::<xla::Literal>(&[u_lit, a_lit, p_lit])?[0][0].to_literal_sync()?;
+    let (loads, imb) = result.to_tuple2()?;
+    let loads_v: Vec<f32> = loads.to_vec()?;
+    let imb_v: Vec<f32> = imb.to_vec()?;
+    Ok((loads_v[..s * MOE_EXPERTS].to_vec(), imb_v[..s].to_vec()))
+}
+
+/// [`LatencyOracle`] over the PJRT-executed Pallas interpolation kernel:
+/// the hot path the service uses. Ops map to queries exactly as the
+/// native path does; unprofiled ops use the same SoL fallback.
+pub struct PjrtOracle<'a> {
+    pub svc: &'a PjrtService,
+    pub db: &'a PerfDatabase,
+}
+
+impl LatencyOracle for PjrtOracle<'_> {
+    fn op_latency_us(&self, op: &Op) -> f64 {
+        match query_for(op) {
+            Some(q) => {
+                let lat = self
+                    .svc
+                    .interp(&[q.table as i32], &[q.fx as f32, q.fy as f32, q.fz as f32])
+                    .expect("pjrt interp");
+                lat[0] as f64 * q.scale
+            }
+            None => sol::latency_us(&self.db.cluster, op),
+        }
+    }
+
+    fn op_latencies_us(&self, ops: &[Op]) -> Vec<f64> {
+        // ONE batched PJRT execution for all profiled ops — the whole
+        // point of the AOT kernel (step sweeps collapse to one call).
+        let mut tids = Vec::with_capacity(ops.len());
+        let mut coords = Vec::with_capacity(ops.len() * 3);
+        let mut idx = Vec::with_capacity(ops.len());
+        let mut scales = Vec::with_capacity(ops.len());
+        let mut out = vec![0.0f64; ops.len()];
+        for (i, op) in ops.iter().enumerate() {
+            match query_for(op) {
+                Some(q) => {
+                    tids.push(q.table as i32);
+                    coords.extend_from_slice(&[q.fx as f32, q.fy as f32, q.fz as f32]);
+                    idx.push(i);
+                    scales.push(q.scale);
+                }
+                None => out[i] = sol::latency_us(&self.db.cluster, op),
+            }
+        }
+        if !tids.is_empty() {
+            let lat = self.svc.interp(&tids, &coords).expect("pjrt interp");
+            for (j, &i) in idx.iter().enumerate() {
+                out[i] = lat[j] as f64 * scales[j];
+            }
+        }
+        out
+    }
+
+    fn step_latency_us(&self, ops: &[Op]) -> f64 {
+        self.op_latencies_us(ops)
+            .iter()
+            .zip(ops)
+            .map(|(l, o)| l * o.count() as f64)
+            .sum()
+    }
+}

@@ -1,0 +1,10 @@
+//! TaskRunner (paper §4.1 step 2): construct the space of valid candidate
+//! serving configurations from the workload descriptor, then evaluate
+//! every candidate with the serving-mode models — thousands of
+//! configurations in sub-second time on CPU (paper Table 1).
+
+pub mod runner;
+pub mod space;
+
+pub use runner::{SearchReport, TaskRunner};
+pub use space::SearchSpace;

@@ -1,0 +1,226 @@
+//! TaskRunner: evaluate every candidate configuration against the
+//! workload (paper §4.1 step 3, "InferenceSession will iterate over all
+//! the candidate serving configurations"), in parallel across OS threads.
+
+use std::time::Instant;
+
+use crate::config::{Candidate, ServingMode, WorkloadSpec};
+use crate::hardware::ClusterSpec;
+use crate::models::ModelArch;
+use crate::perfdb::LatencyOracle;
+use crate::perfmodel::{self, disagg, PerfEstimate};
+
+use super::space::SearchSpace;
+
+/// One evaluated candidate.
+#[derive(Clone, Debug)]
+pub struct Evaluated {
+    pub cand: Candidate,
+    pub est: PerfEstimate,
+}
+
+/// Outcome of a full search.
+#[derive(Clone, Debug)]
+pub struct SearchReport {
+    pub evaluated: Vec<Evaluated>,
+    /// Engine-level configurations priced (the paper's "configs" count).
+    pub configs_priced: usize,
+    /// Wall-clock of the whole search, seconds.
+    pub elapsed_s: f64,
+    /// Median per-configuration evaluation time, milliseconds.
+    pub median_config_ms: f64,
+}
+
+/// Drives the search for one workload on one cluster.
+pub struct TaskRunner<'a> {
+    pub model: &'a ModelArch,
+    pub cluster: &'a ClusterSpec,
+    pub space: SearchSpace,
+    pub workload: WorkloadSpec,
+    /// Worker threads (0 = available parallelism).
+    pub threads: usize,
+}
+
+impl<'a> TaskRunner<'a> {
+    pub fn new(
+        model: &'a ModelArch,
+        cluster: &'a ClusterSpec,
+        space: SearchSpace,
+        workload: WorkloadSpec,
+    ) -> Self {
+        TaskRunner { model, cluster, space, workload, threads: 0 }
+    }
+
+    fn thread_count(&self) -> usize {
+        if self.threads > 0 {
+            self.threads
+        } else {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+        }
+    }
+
+    /// Evaluate the full space. The oracle is typically a
+    /// [`crate::perfdb::PerfDatabase`]; passing the silicon instead gives
+    /// the zero-interpolation-error upper bound used in ablations.
+    pub fn run(&self, oracle: &dyn LatencyOracle) -> SearchReport {
+        let t0 = Instant::now();
+        let wl = &self.workload;
+        let mut evaluated: Vec<Evaluated> = Vec::new();
+        let mut per_config_ms: Vec<f64> = Vec::new();
+        let mut configs_priced = 0usize;
+
+        // ---- Aggregated candidates --------------------------------------
+        if self.space.modes.contains(&ServingMode::Aggregated) {
+            let engines = self.space.engines(self.model, self.cluster, wl.isl, wl.osl);
+            configs_priced += engines.len();
+            let n_threads = self.thread_count().min(engines.len().max(1));
+            let chunks: Vec<&[crate::config::EngineConfig]> = engines
+                .chunks(engines.len().div_ceil(n_threads).max(1))
+                .collect();
+            let results: Vec<Vec<(Evaluated, f64)>> = std::thread::scope(|s| {
+                let handles: Vec<_> = chunks
+                    .into_iter()
+                    .map(|chunk| {
+                        s.spawn(move || {
+                            chunk
+                                .iter()
+                                .map(|eng| {
+                                    let t = Instant::now();
+                                    let replicas = (self.cluster.total_gpus()
+                                        / eng.parallel.gpus())
+                                    .max(1);
+                                    let cand =
+                                        Candidate::Aggregated { engine: *eng, replicas };
+                                    let est = perfmodel::estimate(
+                                        oracle,
+                                        self.model,
+                                        self.cluster,
+                                        &cand,
+                                        wl,
+                                    );
+                                    (
+                                        Evaluated { cand, est },
+                                        t.elapsed().as_secs_f64() * 1e3,
+                                    )
+                                })
+                                .collect()
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+            for r in results {
+                for (e, ms) in r {
+                    evaluated.push(e);
+                    per_config_ms.push(ms);
+                }
+            }
+        }
+
+        // ---- Disaggregated candidates ------------------------------------
+        if self.space.modes.contains(&ServingMode::Disaggregated) {
+            let prefill = self.space.prefill_engines(self.model, self.cluster, wl.isl);
+            let decode = self.space.engines(self.model, self.cluster, wl.isl, wl.osl);
+            configs_priced += prefill.len() + decode.len();
+
+            let t_price = Instant::now();
+            let p_prices: Vec<disagg::PoolPrice> = prefill
+                .iter()
+                .map(|e| disagg::price_prefill(oracle, self.model, self.cluster, e, wl))
+                .collect();
+            let d_prices: Vec<disagg::PoolPrice> = decode
+                .iter()
+                .map(|e| disagg::price_decode(oracle, self.model, self.cluster, e, wl))
+                .collect();
+            let priced = prefill.len() + decode.len();
+            if priced > 0 {
+                let each = t_price.elapsed().as_secs_f64() * 1e3 / priced as f64;
+                per_config_ms.extend(std::iter::repeat(each).take(priced));
+            }
+
+            let res = disagg::rate_match(
+                &p_prices,
+                &d_prices,
+                wl,
+                self.cluster.total_gpus(),
+                &[],
+                self.space.max_x,
+                self.space.max_y,
+            );
+            for (x, y, pi, di, est) in res.evaluated {
+                evaluated.push(Evaluated {
+                    cand: Candidate::Disaggregated {
+                        prefill: prefill[pi],
+                        decode: decode[di],
+                        x,
+                        y,
+                    },
+                    est,
+                });
+            }
+        }
+
+        per_config_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = per_config_ms
+            .get(per_config_ms.len() / 2)
+            .copied()
+            .unwrap_or(0.0);
+        SearchReport {
+            evaluated,
+            configs_priced,
+            elapsed_s: t0.elapsed().as_secs_f64(),
+            median_config_ms: median,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frameworks::Framework;
+    use crate::hardware::h100_sxm;
+    use crate::models::by_name;
+    use crate::silicon::Silicon;
+
+    #[test]
+    fn search_produces_both_modes() {
+        let model = by_name("qwen3-32b").unwrap();
+        let cluster = ClusterSpec::new(h100_sxm(), 8, 1);
+        let sil = Silicon::new(cluster, Framework::TrtLlm.profile());
+        let space = SearchSpace::default_for(&model, Framework::TrtLlm);
+        let wl = WorkloadSpec::new("qwen3-32b", 2048, 256, 2000.0, 10.0);
+        let runner = TaskRunner::new(&model, &cluster, space, wl);
+        let report = runner.run(&sil);
+        assert!(report.configs_priced > 10, "{}", report.configs_priced);
+        assert!(report
+            .evaluated
+            .iter()
+            .any(|e| matches!(e.cand, Candidate::Aggregated { .. })));
+        assert!(report
+            .evaluated
+            .iter()
+            .any(|e| matches!(e.cand, Candidate::Disaggregated { .. })));
+        // Every estimate is finite and positive.
+        for e in &report.evaluated {
+            assert!(e.est.ttft_ms.is_finite() && e.est.ttft_ms > 0.0);
+            assert!(e.est.tpot_ms.is_finite() && e.est.tpot_ms > 0.0);
+            assert!(e.est.thru_per_gpu.is_finite() && e.est.thru_per_gpu > 0.0);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_same_oracle() {
+        let model = by_name("llama3.1-8b").unwrap();
+        let cluster = ClusterSpec::new(h100_sxm(), 8, 1);
+        let sil = Silicon::new(cluster, Framework::Vllm.profile());
+        let mut space = SearchSpace::default_for(&model, Framework::Vllm);
+        space.batch = vec![8, 32];
+        let wl = WorkloadSpec::new("llama3.1-8b", 1024, 128, 1000.0, 20.0);
+        let r1 = TaskRunner::new(&model, &cluster, space.clone(), wl.clone()).run(&sil);
+        let r2 = TaskRunner::new(&model, &cluster, space, wl).run(&sil);
+        assert_eq!(r1.evaluated.len(), r2.evaluated.len());
+        for (a, b) in r1.evaluated.iter().zip(&r2.evaluated) {
+            assert_eq!(a.est, b.est);
+        }
+    }
+}

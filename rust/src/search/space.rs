@@ -1,0 +1,222 @@
+//! Search-space enumeration with validity + memory pruning.
+//!
+//! Dimensions: framework × TP × PP × EP × DP × batch × quantization ×
+//! runtime flags (CUDA graph, max-num-tokens) × serving mode — "from
+//! cluster topology down to engine specific flags" (paper §1).
+
+use crate::config::{EngineConfig, ParallelSpec, RuntimeFlags, ServingMode};
+use crate::frameworks::Framework;
+use crate::hardware::ClusterSpec;
+use crate::models::{Dtype, ModelArch};
+use crate::perfmodel::memory;
+
+/// Declarative search space. Empty vectors mean "use defaults".
+#[derive(Clone, Debug)]
+pub struct SearchSpace {
+    pub frameworks: Vec<Framework>,
+    pub tp: Vec<u32>,
+    pub pp: Vec<u32>,
+    pub ep: Vec<u32>,
+    pub dp: Vec<u32>,
+    pub batch: Vec<u32>,
+    pub dtypes: Vec<Dtype>,
+    pub cuda_graph: Vec<bool>,
+    pub max_num_tokens: Vec<u32>,
+    pub modes: Vec<ServingMode>,
+    /// Disaggregated sweep bounds (x ∈ [1, max_x], y ∈ [1, max_y] —
+    /// paper Algorithm 3 uses 32 / 64).
+    pub max_x: u32,
+    pub max_y: u32,
+    /// Prefill-pool batch sizes (kept small: prefill is compute-bound).
+    pub prefill_batch: Vec<u32>,
+}
+
+impl SearchSpace {
+    /// The paper's default sweep (§5.1): TP/EP ∈ {1,2,4,8},
+    /// batch 4–128, aggregated + disaggregated.
+    pub fn default_for(model: &ModelArch, framework: Framework) -> SearchSpace {
+        SearchSpace {
+            frameworks: vec![framework],
+            tp: vec![1, 2, 4, 8],
+            pp: vec![1],
+            ep: if model.is_moe() { vec![1, 2, 4, 8] } else { vec![1] },
+            dp: vec![1],
+            batch: vec![4, 8, 16, 32, 64, 128],
+            dtypes: vec![Dtype::Fp8],
+            cuda_graph: vec![true],
+            max_num_tokens: vec![8192],
+            modes: vec![ServingMode::Aggregated, ServingMode::Disaggregated],
+            max_x: 32,
+            max_y: 64,
+            prefill_batch: vec![1, 2, 4],
+        }
+    }
+
+    /// Is an engine layout structurally valid for this model/cluster?
+    pub fn layout_valid(model: &ModelArch, cluster: &ClusterSpec, p: &ParallelSpec) -> bool {
+        if p.tp == 0 || p.pp == 0 || p.dp == 0 {
+            return false;
+        }
+        // TP must divide the head count.
+        if model.heads % p.tp as u64 != 0 {
+            return false;
+        }
+        // PP must divide layers.
+        if model.num_layers % p.pp as u64 != 0 {
+            return false;
+        }
+        // Engine must fit the cluster.
+        if p.gpus() > cluster.total_gpus() {
+            return false;
+        }
+        // EP only for MoE; experts shard across the TP×DP group.
+        if p.ep > 1 {
+            match &model.moe {
+                None => return false,
+                Some(m) => {
+                    if p.ep as u64 > m.num_experts
+                        || m.num_experts % p.ep as u64 != 0
+                        || p.ep > p.tp * p.dp
+                    {
+                        return false;
+                    }
+                }
+            }
+        }
+        true
+    }
+
+    /// Enumerate all valid aggregated engine configurations (memory
+    /// pruned against the workload's isl+osl footprint).
+    pub fn engines(
+        &self,
+        model: &ModelArch,
+        cluster: &ClusterSpec,
+        isl: u32,
+        osl: u32,
+    ) -> Vec<EngineConfig> {
+        let mut out = Vec::new();
+        let mem = cluster.gpu.mem_bytes();
+        for &fw in &self.frameworks {
+            let fw_prof = fw.profile();
+            for &dt in &self.dtypes {
+                if !cluster.gpu.supports(dt) || !fw_prof.supports_dtype(dt) {
+                    continue;
+                }
+                for &tp in &self.tp {
+                    for &pp in &self.pp {
+                        for &ep in &self.ep {
+                            for &dp in &self.dp {
+                                let p = ParallelSpec { tp, pp, ep, dp };
+                                if !Self::layout_valid(model, cluster, &p) {
+                                    continue;
+                                }
+                                for &mnt in &self.max_num_tokens {
+                                    for &cg in &self.cuda_graph {
+                                        for &b in &self.batch {
+                                            let eng = EngineConfig {
+                                                framework: fw,
+                                                parallel: p,
+                                                batch: b,
+                                                weight_dtype: dt,
+                                                kv_dtype: dt,
+                                                flags: RuntimeFlags {
+                                                    cuda_graph: cg,
+                                                    kv_frac: fw_prof.kv_frac_default,
+                                                    max_num_tokens: mnt,
+                                                    chunked_prefill: fw_prof
+                                                        .chunked_prefill_default,
+                                                },
+                                            };
+                                            if memory::fits(model, mem, &eng, isl, osl) {
+                                                out.push(eng);
+                                            }
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Prefill-pool engine variants (small batch, chunking irrelevant).
+    pub fn prefill_engines(
+        &self,
+        model: &ModelArch,
+        cluster: &ClusterSpec,
+        isl: u32,
+    ) -> Vec<EngineConfig> {
+        let mut sub = self.clone();
+        sub.batch = self.prefill_batch.clone();
+        sub.cuda_graph = vec![true];
+        // Prefill pool holds only in-flight prompts (osl = 1).
+        sub.engines(model, cluster, isl, 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware::{h100_sxm, h200_sxm};
+    use crate::models::by_name;
+
+    #[test]
+    fn dense_model_never_gets_ep() {
+        let m = by_name("qwen3-32b").unwrap();
+        let c = ClusterSpec::new(h100_sxm(), 8, 1);
+        let s = SearchSpace::default_for(&m, Framework::TrtLlm);
+        assert_eq!(s.ep, vec![1]);
+        let mut s2 = s.clone();
+        s2.ep = vec![1, 4];
+        let engines = s2.engines(&m, &c, 1024, 128);
+        assert!(engines.iter().all(|e| e.parallel.ep == 1));
+    }
+
+    #[test]
+    fn tp_must_divide_heads() {
+        let m = by_name("qwen3-32b").unwrap(); // 64 heads
+        let c = ClusterSpec::new(h100_sxm(), 8, 1);
+        assert!(SearchSpace::layout_valid(&m, &c, &ParallelSpec::tp(8)));
+        assert!(!SearchSpace::layout_valid(
+            &m,
+            &c,
+            &ParallelSpec { tp: 3, pp: 1, ep: 1, dp: 1 }
+        ));
+    }
+
+    #[test]
+    fn memory_prunes_infeasible_batches() {
+        let m = by_name("qwen3-32b").unwrap();
+        let c = ClusterSpec::new(h100_sxm(), 8, 1);
+        let mut s = SearchSpace::default_for(&m, Framework::TrtLlm);
+        s.dtypes = vec![Dtype::Fp16];
+        s.batch = vec![1, 4096];
+        let engines = s.engines(&m, &c, 4096, 512);
+        assert!(!engines.is_empty());
+        assert!(engines.iter().all(|e| e.batch == 1 || e.parallel.tp >= 4));
+    }
+
+    #[test]
+    fn cluster_size_bounds_layouts() {
+        let m = by_name("llama3.1-8b").unwrap();
+        let c = ClusterSpec::new(h200_sxm(), 4, 1);
+        let s = SearchSpace::default_for(&m, Framework::Vllm);
+        let engines = s.engines(&m, &c, 1024, 128);
+        assert!(engines.iter().all(|e| e.parallel.gpus() <= 4));
+    }
+
+    #[test]
+    fn moe_gets_ep_variants() {
+        let m = by_name("qwen3-235b").unwrap();
+        let c = ClusterSpec::new(h200_sxm(), 8, 1);
+        let s = SearchSpace::default_for(&m, Framework::TrtLlm);
+        let engines = s.engines(&m, &c, 2048, 256);
+        assert!(engines.iter().any(|e| e.parallel.ep > 1));
+        // ep ≤ tp·dp convention.
+        assert!(engines.iter().all(|e| e.parallel.ep <= e.parallel.tp * e.parallel.dp));
+    }
+}

@@ -1,0 +1,335 @@
+//! Config-search service: the L3 serving coordinator.
+//!
+//! A threaded TCP server speaking JSON-lines: each request carries a
+//! workload descriptor + cluster/framework context; the server runs the
+//! TaskRunner → Pareto pipeline and answers with the top configurations
+//! and ready-to-launch files. Databases are built on demand and cached
+//! per (model, hardware, framework) context — the paper's 5-step
+//! workflow behind one socket.
+//!
+//! When started with an artifacts directory, interpolation queries from
+//! *all* connections funnel through the single PJRT evaluator thread
+//! ([`crate::runtime::PjrtService`]) — a dynamic batcher over the
+//! AOT-compiled Pallas kernel. (The vendored build has no tokio, so
+//! concurrency is plain OS threads; see DESIGN.md.)
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::config::{Candidate, ServingMode, WorkloadSpec};
+use crate::frameworks::Framework;
+use crate::generator;
+use crate::hardware::{gpu_by_name, ClusterSpec};
+use crate::models::{by_name, Dtype};
+use crate::pareto;
+use crate::perfdb::{LatencyOracle, PerfDatabase};
+use crate::runtime::{PjrtOracle, PjrtService};
+use crate::search::{SearchSpace, TaskRunner};
+use crate::silicon::Silicon;
+use crate::util::json::{self, Json};
+
+/// Server configuration.
+#[derive(Clone, Debug, Default)]
+pub struct ServerConfig {
+    /// Bind address, e.g. "127.0.0.1:0" (0 = ephemeral).
+    pub addr: String,
+    /// Artifacts dir for the PJRT-backed hot path (None = native interp).
+    pub artifacts: Option<PathBuf>,
+    pub seed: u64,
+}
+
+type DbKey = (String, String, u32, u32, String);
+
+/// Shared server state (public so in-process embedding — tests, the
+/// serve_e2e example — can drive requests without a socket).
+pub struct State {
+    dbs: Mutex<HashMap<DbKey, Arc<PerfDatabase>>>,
+    /// PJRT evaluator bound to the context named at startup (if any).
+    pjrt: Option<(DbKey, PjrtService)>,
+    seed: u64,
+}
+
+impl State {
+    pub fn new(seed: u64) -> State {
+        State { dbs: Mutex::new(HashMap::new()), pjrt: None, seed }
+    }
+}
+
+/// The running server handle.
+pub struct SearchServer {
+    listener: TcpListener,
+    state: Arc<State>,
+    stop: Arc<AtomicBool>,
+}
+
+impl SearchServer {
+    /// Bind. If `cfg.artifacts` is set, also pre-build the database for
+    /// `pjrt_ctx` and start the PJRT evaluator on its grids.
+    pub fn bind(cfg: &ServerConfig, pjrt_ctx: Option<(&str, &str, u32, u32, Framework)>) -> anyhow::Result<(SearchServer, SocketAddr)> {
+        let listener = TcpListener::bind(&cfg.addr)?;
+        let addr = listener.local_addr()?;
+        let mut dbs = HashMap::new();
+        let mut pjrt = None;
+        if let (Some(dir), Some((model, gpu, gpn, nodes, fw))) = (&cfg.artifacts, pjrt_ctx) {
+            let key: DbKey =
+                (model.into(), gpu.into(), gpn, nodes, fw.name().into());
+            let db = Arc::new(build_db(&key, cfg.seed)?);
+            let svc = PjrtService::start(dir, db.grids().to_vec())?;
+            dbs.insert(key.clone(), db);
+            pjrt = Some((key, svc));
+        }
+        Ok((
+            SearchServer {
+                listener,
+                state: Arc::new(State { dbs: Mutex::new(dbs), pjrt, seed: cfg.seed }),
+                stop: Arc::new(AtomicBool::new(false)),
+            },
+            addr,
+        ))
+    }
+
+    /// Handle to request shutdown from another thread.
+    pub fn stopper(&self) -> Arc<AtomicBool> {
+        self.stop.clone()
+    }
+
+    /// Accept loop (blocks). Each connection gets a thread; each line is
+    /// one request. Returns when the stop flag is set (checked between
+    /// connections — poke it with a dummy connect).
+    pub fn run(self) -> anyhow::Result<()> {
+        for stream in self.listener.incoming() {
+            if self.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            let Ok(stream) = stream else { continue };
+            let state = self.state.clone();
+            std::thread::spawn(move || {
+                let _ = handle_conn(stream, &state);
+            });
+        }
+        Ok(())
+    }
+}
+
+fn handle_conn(stream: TcpStream, state: &State) -> anyhow::Result<()> {
+    let peer = stream.peer_addr()?;
+    log::debug!("connection from {peer}");
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(());
+        }
+        if line.trim().is_empty() {
+            continue;
+        }
+        let resp = match handle_request_line(line.trim(), state) {
+            Ok(j) => j,
+            Err(e) => {
+                let mut o = Json::obj();
+                o.set("status", json::s("error")).set("error", json::s(&format!("{e:#}")));
+                o
+            }
+        };
+        writer.write_all(resp.to_string().as_bytes())?;
+        writer.write_all(b"\n")?;
+    }
+}
+
+fn build_db(key: &DbKey, seed: u64) -> anyhow::Result<PerfDatabase> {
+    let (model_name, gpu_name, gpn, nodes, fw_name) = key;
+    let model =
+        by_name(model_name).ok_or_else(|| anyhow::anyhow!("unknown model '{model_name}'"))?;
+    let gpu = gpu_by_name(gpu_name).ok_or_else(|| anyhow::anyhow!("unknown gpu '{gpu_name}'"))?;
+    let fw = Framework::parse(fw_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown framework '{fw_name}'"))?;
+    let cluster = ClusterSpec::new(gpu, *gpn, *nodes);
+    let silicon = Silicon::new(cluster, fw.profile());
+    Ok(PerfDatabase::build(&silicon, &model, Dtype::Fp8, seed))
+}
+
+/// Handle one JSON request line (exposed for in-process tests).
+pub fn handle_request_line(line: &str, state: &State) -> anyhow::Result<Json> {
+    let req = json::parse(line)?;
+    handle_request(&req, state)
+}
+
+pub fn handle_request(req: &Json, state: &State) -> anyhow::Result<Json> {
+    let t0 = Instant::now();
+    let wl = WorkloadSpec::from_json(req.req("workload")?)?;
+    let gpu_name = req.str_or("gpu", "h100");
+    let gpn = req.f64_or("gpus_per_node", 8.0) as u32;
+    let nodes = req.f64_or("num_nodes", 1.0) as u32;
+    let fw = Framework::parse(req.str_or("framework", "trtllm"))
+        .ok_or_else(|| anyhow::anyhow!("unknown framework"))?;
+    let top_k = req.f64_or("top_k", 5.0) as usize;
+
+    let model =
+        by_name(&wl.model).ok_or_else(|| anyhow::anyhow!("unknown model '{}'", wl.model))?;
+    let gpu =
+        gpu_by_name(gpu_name).ok_or_else(|| anyhow::anyhow!("unknown gpu '{gpu_name}'"))?;
+    let cluster = ClusterSpec::new(gpu, gpn, nodes);
+
+    // Database: cached per context.
+    let key: DbKey =
+        (wl.model.clone(), gpu_name.to_string(), gpn, nodes, fw.name().to_string());
+    let db = {
+        let mut dbs = state.dbs.lock().unwrap();
+        match dbs.get(&key) {
+            Some(db) => db.clone(),
+            None => {
+                let db = Arc::new(build_db(&key, state.seed)?);
+                dbs.insert(key.clone(), db.clone());
+                db
+            }
+        }
+    };
+
+    // Search space (modes overridable per request).
+    let mut space = SearchSpace::default_for(&model, fw);
+    if let Some(modes) = req.get("modes").and_then(|m| m.as_arr()) {
+        space.modes = modes
+            .iter()
+            .filter_map(|m| m.as_str().and_then(ServingMode::parse))
+            .collect();
+        anyhow::ensure!(!space.modes.is_empty(), "no valid modes");
+    }
+
+    let runner = TaskRunner::new(&model, &cluster, space, wl.clone());
+    // PJRT hot path when the request matches the bound context.
+    let report = match &state.pjrt {
+        Some((pk, svc)) if *pk == key => {
+            let oracle = PjrtOracle { svc, db: &db };
+            runner.run(&oracle)
+        }
+        _ => runner.run(db.as_ref() as &dyn LatencyOracle),
+    };
+    let analysis = pareto::analyze(&report.evaluated, &wl.sla);
+
+    // Response.
+    let mut top = Vec::new();
+    for e in analysis.feasible.iter().take(top_k) {
+        let mut o = Json::obj();
+        o.set("config", json::s(&e.cand.label()))
+            .set("mode", json::s(e.cand.mode().name()))
+            .set("gpus", json::num(e.cand.total_gpus() as f64))
+            .set("ttft_ms", json::num(e.est.ttft_ms))
+            .set("tpot_ms", json::num(e.est.tpot_ms))
+            .set("speed", json::num(e.est.speed))
+            .set("thru_per_gpu", json::num(e.est.thru_per_gpu));
+        top.push(o);
+    }
+    let mut resp = Json::obj();
+    resp.set("status", json::s("ok"))
+        .set("configs_priced", json::num(report.configs_priced as f64))
+        .set("candidates", json::num(report.evaluated.len() as f64))
+        .set("feasible", json::num(analysis.feasible.len() as f64))
+        .set("elapsed_ms", json::num(t0.elapsed().as_secs_f64() * 1e3))
+        .set("top", Json::Arr(top));
+    if let Some(id) = req.get("id") {
+        resp.set("id", id.clone());
+    }
+    if let Some(best) = analysis.best() {
+        resp.set("launch", launch_json(&best.cand, &wl));
+    }
+    Ok(resp)
+}
+
+fn launch_json(cand: &Candidate, wl: &WorkloadSpec) -> Json {
+    let bundle = generator::generate(cand, &wl.model, wl);
+    let mut files = Json::obj();
+    for (name, content) in &bundle.files {
+        files.set(name, json::s(content));
+    }
+    files
+}
+
+/// Blocking client helper (used by examples/tests/benches).
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &SocketAddr) -> anyhow::Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        Ok(Client { reader: BufReader::new(stream.try_clone()?), writer: stream })
+    }
+
+    pub fn request(&mut self, req: &Json) -> anyhow::Result<Json> {
+        self.writer.write_all(req.to_string().as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        json::parse(line.trim())
+    }
+}
+
+/// Build a search request JSON.
+pub fn make_request(
+    wl: &WorkloadSpec,
+    gpu: &str,
+    gpn: u32,
+    nodes: u32,
+    fw: Framework,
+    id: u64,
+) -> Json {
+    let mut o = Json::obj();
+    o.set("id", json::num(id as f64))
+        .set("workload", wl.to_json())
+        .set("gpu", json::s(gpu))
+        .set("gpus_per_node", json::num(gpn as f64))
+        .set("num_nodes", json::num(nodes as f64))
+        .set("framework", json::s(fw.name()));
+    o
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn state() -> State {
+        State::new(1)
+    }
+
+    #[test]
+    fn request_roundtrip_in_process() {
+        let st = state();
+        let wl = WorkloadSpec::new("llama3.1-8b", 1024, 128, 2000.0, 10.0);
+        let req = make_request(&wl, "h100", 8, 1, Framework::TrtLlm, 7);
+        let resp = handle_request(&req, &st).unwrap();
+        assert_eq!(resp.req_str("status").unwrap(), "ok");
+        assert_eq!(resp.req_f64("id").unwrap(), 7.0);
+        assert!(resp.req_f64("feasible").unwrap() > 0.0);
+        let top = resp.req("top").unwrap().as_arr().unwrap();
+        assert!(!top.is_empty());
+        assert!(top[0].req_f64("thru_per_gpu").unwrap() > 0.0);
+        assert!(resp.get("launch").is_some());
+    }
+
+    #[test]
+    fn db_cache_reused() {
+        let st = state();
+        let wl = WorkloadSpec::new("llama3.1-8b", 512, 64, 2000.0, 5.0);
+        let req = make_request(&wl, "h100", 8, 1, Framework::TrtLlm, 1);
+        handle_request(&req, &st).unwrap();
+        assert_eq!(st.dbs.lock().unwrap().len(), 1);
+        handle_request(&req, &st).unwrap();
+        assert_eq!(st.dbs.lock().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn bad_model_is_error() {
+        let st = state();
+        let wl = WorkloadSpec::new("not-a-model", 512, 64, 2000.0, 5.0);
+        let req = make_request(&wl, "h100", 8, 1, Framework::TrtLlm, 1);
+        assert!(handle_request(&req, &st).is_err());
+    }
+}

@@ -1,0 +1,126 @@
+//! Attention latency models: compute-bound fused prefill
+//! (FlashAttention-class, paper §4.2 "prefill ... compute intensive")
+//! and memory-bound batched decode (XQA/PagedAttention-class,
+//! "decode ... memory intensive").
+
+use crate::frameworks::FrameworkProfile;
+use crate::hardware::GpuSpec;
+
+/// Fused prefill attention for ONE request, microseconds.
+///
+/// FLOPs = 2 GEMMs (QKᵀ and PV) = 4 · heads · q · kv · head_dim, scaled
+/// by the causal fraction (a causal kernel skips the upper triangle).
+pub fn prefill_us(
+    gpu: &GpuSpec,
+    fw: &FrameworkProfile,
+    q_tokens: u64,
+    kv_len: u64,
+    heads: u64,
+    head_dim: u64,
+    causal_frac: f64,
+) -> f64 {
+    let q = q_tokens.max(1) as f64;
+    let kv = kv_len.max(1) as f64;
+    let flops = 4.0 * heads as f64 * q * kv * head_dim as f64 * causal_frac;
+
+    // Short sequences can't fill the MXU: efficiency ramps with kv.
+    let seq_fill = (kv / 1024.0).clamp(0.15, 1.0);
+    // Few heads (high TP) underfill the grid on small problems.
+    let head_fill = (heads as f64 / 8.0).clamp(0.5, 1.0);
+    let eff = fw.attn_prefill_eff * seq_fill.powf(0.35) * head_fill.powf(0.2);
+
+    let t_compute = flops / (gpu.fp16_tflops * 1e12 * eff) * 1e6;
+
+    // IO: Q/K/V/O streaming (FlashAttention never materializes q×kv).
+    let io_bytes = (2 * q_tokens + 2 * kv_len) as f64 * heads as f64 * head_dim as f64 * 2.0;
+    let t_mem = io_bytes / (gpu.mem_bw_gbs * 1e3);
+
+    t_compute.max(t_mem) + gpu.launch_us
+}
+
+/// Batched decode attention, microseconds: `batch` one-token queries
+/// each reading a `kv_len`-deep cache.
+///
+/// Dominated by KV reads: bytes = batch · kv_len · kv_token_bytes.
+/// Small batches can't saturate HBM (few concurrent CTAs), which is why
+/// real decode kernels show a bandwidth ramp — captured by `bw_fill`.
+pub fn decode_us(
+    gpu: &GpuSpec,
+    fw: &FrameworkProfile,
+    batch: u64,
+    kv_len: u64,
+    heads: u64,
+    head_dim: u64,
+    kv_token_bytes: f64,
+) -> f64 {
+    let b = batch.max(1) as f64;
+    let kv = kv_len.max(1) as f64;
+
+    let bytes = b * kv * kv_token_bytes;
+    // Achievable bandwidth ramps with concurrency (batch × heads CTAs).
+    let ctas = (b * heads as f64 / 8.0).max(1.0);
+    let bw_fill = (ctas / gpu.sm_count as f64).clamp(0.25, 1.0);
+    let t_mem = bytes / (gpu.mem_bw_gbs * 1e3 * fw.attn_decode_eff * bw_fill);
+
+    // Compute side (matters for MLA where per-token math is heavy).
+    let flops = 4.0 * b * heads as f64 * head_dim as f64 * kv;
+    let t_compute = flops / (gpu.fp16_tflops * 1e12 * 0.25) * 1e6; // vector-ish kernel
+
+    t_mem.max(t_compute) + gpu.launch_us
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frameworks::Framework;
+    use crate::hardware::h100_sxm;
+
+    fn fx() -> (GpuSpec, FrameworkProfile) {
+        (h100_sxm(), Framework::TrtLlm.profile())
+    }
+
+    #[test]
+    fn prefill_quadratic_in_seq() {
+        let (g, f) = fx();
+        let t1 = prefill_us(&g, &f, 1024, 1024, 32, 128, 0.5);
+        let t4 = prefill_us(&g, &f, 4096, 4096, 32, 128, 0.5);
+        let r = (t4 - g.launch_us) / (t1 - g.launch_us);
+        assert!(r > 10.0 && r < 20.0, "expected ~16x, got {r}");
+    }
+
+    #[test]
+    fn decode_linear_in_kv_at_saturation() {
+        let (g, f) = fx();
+        let t1 = decode_us(&g, &f, 64, 2048, 32, 128, 4096.0);
+        let t2 = decode_us(&g, &f, 64, 4096, 32, 128, 4096.0);
+        let r = (t2 - g.launch_us) / (t1 - g.launch_us);
+        assert!(r > 1.8 && r < 2.2, "expected ~2x, got {r}");
+    }
+
+    #[test]
+    fn decode_memory_bound_at_big_batch() {
+        let (g, f) = fx();
+        let kv_bytes = 4096.0;
+        let t = decode_us(&g, &f, 128, 4096, 32, 128, kv_bytes);
+        let ideal = 128.0 * 4096.0 * kv_bytes / (g.mem_bw_gbs * 1e3);
+        assert!(t > ideal && t < ideal * 2.0, "t={t} ideal={ideal}");
+    }
+
+    #[test]
+    fn small_batch_decode_underutilizes_bandwidth() {
+        let (g, f) = fx();
+        // Per-request cost should be higher at batch 1 than at batch 64.
+        let per1 = decode_us(&g, &f, 1, 4096, 32, 128, 4096.0);
+        let per64 = decode_us(&g, &f, 64, 4096, 32, 128, 4096.0) / 64.0;
+        assert!(per1 > per64 * 1.5, "b1={per1} b64/64={per64}");
+    }
+
+    #[test]
+    fn causal_halves_prefill_compute() {
+        let (g, f) = fx();
+        let full = prefill_us(&g, &f, 8192, 8192, 32, 128, 1.0);
+        let causal = prefill_us(&g, &f, 8192, 8192, 32, 128, 0.5);
+        let r = (full - g.launch_us) / (causal - g.launch_us);
+        assert!(r > 1.8 && r < 2.2, "got {r}");
+    }
+}

@@ -1,0 +1,121 @@
+//! Communication primitives: ring all-reduce / all-gather, MoE
+//! all-to-all and point-to-point, over a two-level NVLink+IB topology
+//! (paper §4.4 "AllReduce, AllGather, AllToAll, and point-to-point
+//! transfers across message sizes and GPU counts").
+
+use crate::hardware::{ClusterSpec, LinkKind};
+
+/// Protocol/algorithm efficiency of NCCL-class collectives vs raw link BW.
+const COLL_EFF: f64 = 0.80;
+
+fn per_gpu_bw_kbus(c: &ClusterSpec, gpus: u32) -> (f64, f64) {
+    // Returns (bandwidth in bytes/us, base latency us).
+    let link = c.link_for(gpus);
+    let bw = c.p2p_bw_gbs(link) * 1e3 * COLL_EFF; // GB/s -> bytes/us
+    (bw, c.link_latency_us(link))
+}
+
+/// Ring all-reduce of `bytes` (full tensor) across `gpus`, microseconds.
+pub fn allreduce_us(c: &ClusterSpec, bytes: f64, gpus: u32) -> f64 {
+    if gpus <= 1 {
+        return 0.0;
+    }
+    let (bw, lat) = per_gpu_bw_kbus(c, gpus);
+    let g = gpus as f64;
+    // Ring: 2(g-1)/g of the data crosses each link; 2(g-1) latency hops.
+    let t = 2.0 * (g - 1.0) / g * bytes / bw + 2.0 * (g - 1.0) * lat;
+    // Hierarchical penalty when spanning nodes: the IB stage moves
+    // bytes/node_count at far lower bandwidth — dominate via min BW
+    // (already selected) plus an extra intra-node stage.
+    if c.link_for(gpus) == LinkKind::InfiniBand {
+        let intra = allreduce_us(c, bytes, c.gpus_per_node.min(gpus));
+        t + 0.5 * intra
+    } else {
+        t
+    }
+}
+
+/// All-gather where each GPU contributes `bytes` shard, microseconds.
+pub fn allgather_us(c: &ClusterSpec, bytes: f64, gpus: u32) -> f64 {
+    if gpus <= 1 {
+        return 0.0;
+    }
+    let (bw, lat) = per_gpu_bw_kbus(c, gpus);
+    let g = gpus as f64;
+    (g - 1.0) / g * bytes * g / bw + (g - 1.0) * lat
+}
+
+/// All-to-all of `bytes` sent per GPU (MoE dispatch/combine patterns,
+/// DeepEP-style), microseconds.
+pub fn alltoall_us(c: &ClusterSpec, bytes: f64, gpus: u32) -> f64 {
+    if gpus <= 1 {
+        return 0.0;
+    }
+    let (bw, lat) = per_gpu_bw_kbus(c, gpus);
+    let g = gpus as f64;
+    (g - 1.0) / g * bytes / bw + lat * (g - 1.0).sqrt() * 2.0
+}
+
+/// Point-to-point transfer (PP boundary, disaggregated KV transfer).
+pub fn p2p_us(c: &ClusterSpec, bytes: f64, cross_node: bool) -> f64 {
+    let link = if cross_node { LinkKind::InfiniBand } else { LinkKind::NvLink };
+    let bw = c.p2p_bw_gbs(link) * 1e3 * 0.9;
+    c.link_latency_us(link) + bytes / bw
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware::{h100_sxm, ClusterSpec};
+
+    fn cluster(nodes: u32) -> ClusterSpec {
+        ClusterSpec::new(h100_sxm(), 8, nodes)
+    }
+
+    #[test]
+    fn single_gpu_is_free() {
+        let c = cluster(1);
+        assert_eq!(allreduce_us(&c, 1e6, 1), 0.0);
+        assert_eq!(alltoall_us(&c, 1e6, 1), 0.0);
+    }
+
+    #[test]
+    fn allreduce_scales_with_bytes() {
+        let c = cluster(1);
+        // Compare sizes where bandwidth dominates the latency floor.
+        let t1 = allreduce_us(&c, 1e7, 8);
+        let t2 = allreduce_us(&c, 1e9, 8);
+        assert!(t2 > t1 * 20.0, "t1={t1} t2={t2}");
+    }
+
+    #[test]
+    fn cross_node_much_slower() {
+        let c = cluster(2);
+        let intra = allreduce_us(&c, 1e8, 8);
+        let inter = allreduce_us(&c, 1e8, 16);
+        assert!(inter > intra * 3.0, "intra={intra} inter={inter}");
+    }
+
+    #[test]
+    fn small_message_latency_floor() {
+        let c = cluster(1);
+        let t = allreduce_us(&c, 1024.0, 8);
+        assert!(t >= 2.0 * 7.0 * c.nvlink_latency_us * 0.99);
+    }
+
+    #[test]
+    fn p2p_link_selection() {
+        let c = cluster(2);
+        let nv = p2p_us(&c, 1e8, false);
+        let ib = p2p_us(&c, 1e8, true);
+        assert!(ib > nv * 5.0, "nv={nv} ib={ib}");
+    }
+
+    #[test]
+    fn allgather_total_data_scales_with_g() {
+        let c = cluster(1);
+        let t2 = allgather_us(&c, 1e7, 2);
+        let t8 = allgather_us(&c, 1e7, 8);
+        assert!(t8 > t2 * 2.0);
+    }
+}

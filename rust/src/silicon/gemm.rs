@@ -1,0 +1,119 @@
+//! GEMM latency model: roofline + wave quantization + small-M
+//! tensor-core underutilization + launch overhead.
+//!
+//! These are exactly the effects that make "theoretical roofline models
+//! often diverge from production performance" (paper §2.1) — they are the
+//! reason AIConfigurator interpolates *measured* grids instead of
+//! evaluating a formula, and the reason our fidelity experiments have a
+//! non-trivial gap to close.
+
+use crate::frameworks::FrameworkProfile;
+use crate::hardware::GpuSpec;
+use crate::models::Dtype;
+
+/// Tensor-core tile geometry used for quantization effects.
+const TILE_M: u64 = 128;
+const TILE_N: u64 = 128;
+/// Concurrent CTAs per SM for GEMM kernels.
+const CTAS_PER_SM: u64 = 1;
+
+/// Latency of a single `[m,k] x [k,n]` GEMM, microseconds.
+pub fn latency_us(gpu: &GpuSpec, fw: &FrameworkProfile, m: u64, n: u64, k: u64, dtype: Dtype) -> f64 {
+    let (m, n, k) = (m.max(1), n.max(1), k.max(1));
+    let flops = 2.0 * m as f64 * n as f64 * k as f64;
+
+    // -- Compute bound -----------------------------------------------------
+    let peak = gpu.tflops(dtype) * 1e12; // FLOP/s
+    let util = tensor_core_util(gpu, m, n);
+    let t_compute = flops / (peak * fw.gemm_eff * util) * 1e6;
+
+    // -- Memory bound ------------------------------------------------------
+    // bytes / (BW GB/s) in µs = bytes / (BW * 1e9) * 1e6 = bytes / (BW * 1e3).
+    let w_bytes = n as f64 * k as f64 * dtype.bytes();
+    let act_bytes = (m * k + m * n) as f64 * 2.0;
+    let t_mem = (w_bytes + act_bytes) / (gpu.mem_bw_gbs * 1e3) / fw.gemm_eff;
+
+    t_compute.max(t_mem) + gpu.launch_us
+}
+
+/// Effective tensor-core utilization for an (m, n) problem:
+/// wave quantization (last wave underfilled) × intra-tile fill on M.
+fn tensor_core_util(gpu: &GpuSpec, m: u64, n: u64) -> f64 {
+    let tiles_m = m.div_ceil(TILE_M);
+    let tiles_n = n.div_ceil(TILE_N);
+    let tiles = tiles_m * tiles_n;
+    let slots = gpu.sm_count as u64 * CTAS_PER_SM;
+    let waves = tiles.div_ceil(slots);
+    // Fraction of the issued waves' slots actually used (last wave may be
+    // nearly empty — the classic quantization cliff).
+    let wave_util = tiles as f64 / (waves * slots) as f64;
+    // Fill of the M dimension inside a tile (decode GEMMs have m << 128:
+    // tensor cores stream the full K×N weights regardless → bandwidth
+    // bound, but the compute path also can't saturate the MXU).
+    let fill_m = (m as f64 / (tiles_m * TILE_M) as f64).clamp(0.05, 1.0);
+    // Small-m problems additionally pay reduced occupancy.
+    let occ = if m < 16 { 0.6 } else { 1.0 };
+    (wave_util * (0.35 + 0.65 * fill_m) * occ).clamp(0.02, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frameworks::Framework;
+    use crate::hardware::h100_sxm;
+
+    fn fx() -> (GpuSpec, FrameworkProfile) {
+        (h100_sxm(), Framework::TrtLlm.profile())
+    }
+
+    #[test]
+    fn big_gemm_near_peak() {
+        let (g, f) = fx();
+        // 8k^3 fp16 GEMM: should land at 60-95% of peak.
+        let t = latency_us(&g, &f, 8192, 8192, 8192, Dtype::Fp16);
+        let achieved_tflops = 2.0 * 8192f64.powi(3) / (t * 1e-6) / 1e12;
+        assert!(
+            achieved_tflops > 0.6 * g.fp16_tflops && achieved_tflops < g.fp16_tflops,
+            "achieved {achieved_tflops} TFLOPs"
+        );
+    }
+
+    #[test]
+    fn fp8_faster_than_fp16() {
+        let (g, f) = fx();
+        let t16 = latency_us(&g, &f, 4096, 8192, 8192, Dtype::Fp16);
+        let t8 = latency_us(&g, &f, 4096, 8192, 8192, Dtype::Fp8);
+        assert!(t8 < t16 * 0.75, "fp8 {t8} vs fp16 {t16}");
+    }
+
+    #[test]
+    fn small_m_is_bandwidth_bound() {
+        let (g, f) = fx();
+        // m=8 decode GEMM: latency ≈ weight streaming time, not flops.
+        let t = latency_us(&g, &f, 8, 8192, 8192, Dtype::Fp16);
+        let w_time = 8192.0 * 8192.0 * 2.0 / (g.mem_bw_gbs * 1e3);
+        assert!(t > w_time && t < w_time * 3.0 + g.launch_us * 2.0, "t={t} w={w_time}");
+    }
+
+    #[test]
+    fn launch_overhead_floors_tiny_gemms() {
+        let (g, f) = fx();
+        let t = latency_us(&g, &f, 1, 64, 64, Dtype::Fp16);
+        assert!(t >= g.launch_us);
+        assert!(t < g.launch_us * 2.0);
+    }
+
+    #[test]
+    fn wave_quantization_sawtooth_exists() {
+        let (g, f) = fx();
+        // Just past a wave boundary the latency jumps relative to flops.
+        // Use a compute-bound shape: n=k=4096 → 32 column tiles; 132 SMs
+        // fit 4 row tiles per wave (128 tiles). m=512 fills exactly one
+        // wave; m=640 spills into a second, mostly-idle wave.
+        let per_flop = |m: u64| {
+            latency_us(&g, &f, m, 4096, 4096, Dtype::Fp16)
+                / (2.0 * m as f64 * 4096.0 * 4096.0)
+        };
+        assert!(per_flop(640) > per_flop(512) * 1.2);
+    }
+}

@@ -1,0 +1,141 @@
+//! Synthetic silicon: the ground-truth kernel-latency substrate.
+//!
+//! The paper builds its PerfDatabase by profiling real GPUs (~30 GPU-hours
+//! per platform-framework pair, §4.4). This module is the substitution
+//! (DESIGN.md): a parametric model of GPU kernel latency with the
+//! nonlinearities that make naive roofline models diverge from production
+//! — wave quantization, small-M tensor-core underutilization, kernel
+//! launch overhead, hierarchical collective topology, MoE hot-expert
+//! tails, and per-framework kernel efficiency / host overhead.
+//!
+//! Everything downstream treats this module as *opaque hardware*: the
+//! PerfDatabase only observes it through noisy grid profiling
+//! ([`crate::perfdb::builder`]), and the discrete-event simulator uses it
+//! directly (plus jitter) as the stand-in for real engine runs.
+
+pub mod attention;
+pub mod comm;
+pub mod gemm;
+pub mod moe;
+
+use crate::frameworks::FrameworkProfile;
+use crate::hardware::ClusterSpec;
+use crate::ops::Op;
+use crate::util::rng::Rng;
+
+/// Measurement-noise sigma (lognormal) applied when sampling latencies,
+/// mirroring real profiling variance.
+pub const MEASURE_SIGMA: f64 = 0.03;
+
+/// The synthetic hardware+framework under test.
+#[derive(Clone, Debug)]
+pub struct Silicon {
+    pub cluster: ClusterSpec,
+    pub fw: FrameworkProfile,
+}
+
+impl Silicon {
+    pub fn new(cluster: ClusterSpec, fw: FrameworkProfile) -> Self {
+        Silicon { cluster, fw }
+    }
+
+    /// Deterministic (noise-free) latency of one op *instance*,
+    /// microseconds. Multiply by `op.count()` for the full contribution.
+    pub fn op_latency_us(&self, op: &Op) -> f64 {
+        let gpu = &self.cluster.gpu;
+        match *op {
+            Op::Gemm { m, n, k, dtype, .. } => gemm::latency_us(gpu, &self.fw, m, n, k, dtype),
+            Op::AttnPrefill { q_tokens, kv_len, heads, head_dim, causal_frac, .. } => {
+                attention::prefill_us(gpu, &self.fw, q_tokens, kv_len, heads, head_dim, causal_frac)
+            }
+            Op::AttnDecode { batch, kv_len, heads, head_dim, kv_token_bytes, .. } => {
+                attention::decode_us(gpu, &self.fw, batch, kv_len, heads, head_dim, kv_token_bytes)
+            }
+            Op::MoeGemm { tokens, experts, inter, hidden, dtype, imbalance, .. } => {
+                moe::grouped_gemm_us(gpu, &self.fw, tokens, experts, inter, hidden, dtype, imbalance)
+            }
+            Op::AllReduce { bytes, gpus, .. } => comm::allreduce_us(&self.cluster, bytes, gpus),
+            Op::AllGather { bytes, gpus, .. } => comm::allgather_us(&self.cluster, bytes, gpus),
+            Op::AllToAll { bytes, gpus, .. } => comm::alltoall_us(&self.cluster, bytes, gpus),
+            Op::P2p { bytes, cross_node, .. } => comm::p2p_us(&self.cluster, bytes, cross_node),
+            Op::Elementwise { bytes, .. } => {
+                bytes / (gpu.mem_bw_gbs * 1e3) + gpu.launch_us
+            }
+        }
+    }
+
+    /// Total latency of an op list (each op × its count), microseconds.
+    pub fn step_latency_us(&self, ops: &[Op]) -> f64 {
+        ops.iter()
+            .map(|o| self.op_latency_us(o) * o.count() as f64)
+            .sum()
+    }
+
+    /// One noisy "measurement" of an op instance, as a profiler would see.
+    pub fn measure_us(&self, op: &Op, rng: &mut Rng) -> f64 {
+        self.op_latency_us(op) * rng.noise(MEASURE_SIGMA)
+    }
+
+    /// Median of `k` noisy measurements (the profiling strategy the
+    /// database builder uses).
+    pub fn measure_median_us(&self, op: &Op, rng: &mut Rng, k: usize) -> f64 {
+        let mut v: Vec<f64> = (0..k.max(1)).map(|_| self.measure_us(op, rng)).collect();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v[v.len() / 2]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frameworks::Framework;
+    use crate::hardware::h100_sxm;
+    use crate::models::Dtype;
+
+    fn sil() -> Silicon {
+        Silicon::new(
+            ClusterSpec::new(h100_sxm(), 8, 1),
+            Framework::TrtLlm.profile(),
+        )
+    }
+
+    #[test]
+    fn latency_positive_and_monotone_in_m() {
+        let s = sil();
+        let mut last = 0.0;
+        for m in [1u64, 64, 1024, 16384, 262144] {
+            let t = s.op_latency_us(&Op::Gemm { m, n: 8192, k: 8192, dtype: Dtype::Fp16, count: 1 });
+            assert!(t > 0.0 && t >= last, "m={m}: {t} < {last}");
+            last = t;
+        }
+    }
+
+    #[test]
+    fn step_latency_sums_counts() {
+        let s = sil();
+        let op = Op::Elementwise { bytes: 1e6, count: 10 };
+        let single = s.op_latency_us(&op);
+        assert!((s.step_latency_us(&[op]) - 10.0 * single).abs() < 1e-9);
+    }
+
+    #[test]
+    fn measurement_noise_is_small_and_unbiased() {
+        let s = sil();
+        let op = Op::Gemm { m: 4096, n: 4096, k: 4096, dtype: Dtype::Fp16, count: 1 };
+        let truth = s.op_latency_us(&op);
+        let mut rng = Rng::new(9);
+        let n = 2000;
+        let mean: f64 = (0..n).map(|_| s.measure_us(&op, &mut rng)).sum::<f64>() / n as f64;
+        assert!((mean / truth - 1.0).abs() < 0.01, "mean {mean} vs truth {truth}");
+    }
+
+    #[test]
+    fn median_of_measurements_stable() {
+        let s = sil();
+        let op = Op::Elementwise { bytes: 1e7, count: 1 };
+        let truth = s.op_latency_us(&op);
+        let mut rng = Rng::new(5);
+        let med = s.measure_median_us(&op, &mut rng, 5);
+        assert!((med / truth - 1.0).abs() < 0.08);
+    }
+}

@@ -1,0 +1,106 @@
+//! MoE grouped-GEMM latency: weight-streaming bound at low token counts,
+//! compute bound at high counts, with the hot-expert tail of §4.4.1
+//! ("the tail latency caused by the most heavily loaded expert ...
+//! determines overall throughput in practice").
+
+use crate::frameworks::FrameworkProfile;
+use crate::hardware::GpuSpec;
+use crate::models::Dtype;
+
+/// Per-expert kernel dispatch overhead, microseconds (grouped-GEMM
+/// launch + routing bookkeeping).
+const PER_EXPERT_US: f64 = 0.4;
+
+/// Grouped GEMM over `experts` resident experts receiving `tokens`
+/// routed tokens total, gated-FFN shapes (`inter`, `hidden`),
+/// microseconds.
+///
+/// `imbalance` γ ≥ 1 is the hottest-participant load factor from the
+/// power-law routing model: the kernel (or the EP group) finishes when
+/// its most loaded member does, so compute time scales by γ.
+pub fn grouped_gemm_us(
+    gpu: &GpuSpec,
+    fw: &FrameworkProfile,
+    tokens: u64,
+    experts: u64,
+    inter: u64,
+    hidden: u64,
+    dtype: Dtype,
+    imbalance: f64,
+) -> f64 {
+    let t = tokens.max(1) as f64;
+    let e = experts.max(1) as f64;
+    let gamma = imbalance.max(1.0);
+
+    // Gated FFN per token: gate+up (2·inter×hidden) + down (inter×hidden).
+    let flops_per_token = 2.0 * 3.0 * inter as f64 * hidden as f64;
+    // Tail: finish time set by the hottest share of the work.
+    let t_compute = t * flops_per_token * gamma
+        / (gpu.tflops(dtype) * 1e12 * fw.moe_eff * small_batch_util(t, e))
+        * 1e6;
+
+    // Weight streaming: every expert with ≥1 token loads its 3 matrices.
+    // Expected active experts under ~uniform token scatter. Streaming is
+    // a plain sequential read — it does NOT pay the permute/ragged-tiling
+    // penalty that caps the compute path (`fw.moe_eff`), which is why
+    // decode (memory-bound) stays near peak while prefill (compute-bound)
+    // runs at grouped-GEMM efficiency.
+    const STREAM_EFF: f64 = 0.85;
+    let active = e * (1.0 - (-t / e).exp());
+    let w_bytes = active * 3.0 * inter as f64 * hidden as f64 * dtype.bytes();
+    let t_mem = w_bytes / (gpu.mem_bw_gbs * 1e3 * STREAM_EFF);
+
+    t_compute.max(t_mem) + e * PER_EXPERT_US + gpu.launch_us
+}
+
+/// MXU fill for grouped GEMM: tokens-per-expert rows per expert GEMM.
+fn small_batch_util(tokens: f64, experts: f64) -> f64 {
+    let rows = tokens / experts;
+    (rows / 128.0).clamp(0.04, 1.0).powf(0.5)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frameworks::Framework;
+    use crate::hardware::h100_sxm;
+
+    fn fx() -> (GpuSpec, FrameworkProfile) {
+        (h100_sxm(), Framework::TrtLlm.profile())
+    }
+
+    #[test]
+    fn low_tokens_weight_bound() {
+        let (g, f) = fx();
+        // 16 tokens over 128 experts: latency ≈ active-expert weight load.
+        let t = grouped_gemm_us(&g, &f, 16, 128, 1536, 4096, Dtype::Fp8, 1.0);
+        let active = 128.0 * (1.0 - (-16.0f64 / 128.0).exp());
+        let w = active * 3.0 * 1536.0 * 4096.0 * 1.0 / (g.mem_bw_gbs * 1e3 * f.moe_eff);
+        assert!(t > w * 0.9 && t < w * 2.5, "t={t} w={w}");
+    }
+
+    #[test]
+    fn high_tokens_compute_bound_and_linear() {
+        let (g, f) = fx();
+        let t1 = grouped_gemm_us(&g, &f, 65536, 16, 1536, 4096, Dtype::Fp8, 1.0);
+        let t2 = grouped_gemm_us(&g, &f, 131072, 16, 1536, 4096, Dtype::Fp8, 1.0);
+        let r = t2 / t1;
+        assert!(r > 1.7 && r < 2.3, "got {r}");
+    }
+
+    #[test]
+    fn imbalance_inflates_latency() {
+        let (g, f) = fx();
+        let bal = grouped_gemm_us(&g, &f, 32768, 16, 1536, 4096, Dtype::Fp8, 1.0);
+        let hot = grouped_gemm_us(&g, &f, 32768, 16, 1536, 4096, Dtype::Fp8, 2.0);
+        assert!(hot > bal * 1.5, "bal={bal} hot={hot}");
+    }
+
+    #[test]
+    fn imbalance_below_one_clamped() {
+        let (g, f) = fx();
+        let a = grouped_gemm_us(&g, &f, 1024, 16, 1536, 4096, Dtype::Fp8, 0.5);
+        let b = grouped_gemm_us(&g, &f, 1024, 16, 1536, 4096, Dtype::Fp8, 1.0);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,339 @@
+//! Continuous-batching engine simulator (paper Fig 3B): iteration-level
+//! discrete events with chunked-prefill scheduling, paged KV admission
+//! and prefill/decode interference — the behaviours Algorithm 2 only
+//! approximates with its two-phase split and F_corr.
+
+use crate::config::EngineConfig;
+use crate::hardware::ClusterSpec;
+use crate::models::ModelArch;
+use crate::ops::{decompose, StepShape};
+use crate::perfmodel::{memory, moe};
+use crate::silicon::Silicon;
+use crate::util::rng::Rng;
+use crate::workload::Request;
+
+use super::kvcache::KvPool;
+use super::request::ReqState;
+use super::{SimConfig, SimResult};
+
+/// One aggregated engine instance working through a request trace.
+pub struct AggregatedSim<'a> {
+    pub silicon: &'a Silicon,
+    pub model: &'a ModelArch,
+    pub cluster: &'a ClusterSpec,
+    pub eng: EngineConfig,
+    pub cfg: SimConfig,
+}
+
+impl<'a> AggregatedSim<'a> {
+    pub fn new(
+        silicon: &'a Silicon,
+        model: &'a ModelArch,
+        cluster: &'a ClusterSpec,
+        eng: EngineConfig,
+        cfg: SimConfig,
+    ) -> Self {
+        AggregatedSim { silicon, model, cluster, eng, cfg }
+    }
+
+    /// Run a trace to completion (closed or open loop).
+    pub fn run(&self, trace: &[Request]) -> SimResult {
+        let mut rng = Rng::new(self.cfg.seed);
+        let gamma = moe::model_imbalance(self.model, self.eng.parallel.ep, self.cfg.seed);
+        let capacity =
+            memory::kv_capacity_tokens(self.model, self.cluster.gpu.mem_bytes(), &self.eng);
+        let mut pool = KvPool::new(capacity, self.cfg.kv_page_tokens);
+        let fw = self.eng.framework.profile();
+
+        let mut pending: std::collections::VecDeque<Request> =
+            trace.iter().copied().collect();
+        let mut running: Vec<ReqState> = Vec::new();
+        let mut finished: Vec<ReqState> = Vec::new();
+
+        let mut clock_ms = trace.iter().map(|r| r.arrival_ms).fold(f64::INFINITY, f64::min);
+        if !clock_ms.is_finite() {
+            clock_ms = 0.0;
+        }
+        let start_ms = clock_ms;
+        let mut iterations = 0u64;
+        // Prefill gating: engines alternate context-carrying iterations
+        // with pure-decode ones when decoders are present (TRT-LLM-style
+        // TPOT protection + scheduling pipeline delay) — the behaviour
+        // Algorithm 2's F_corr constant term (≈2) reflects.
+        let mut last_had_ctx = false;
+
+        while (!pending.is_empty() || !running.is_empty())
+            && iterations < self.cfg.max_iterations
+        {
+            // ---- Admission: FCFS while batch slots + KV pages allow. ----
+            while running.len() < self.eng.batch as usize {
+                let Some(next) = pending.front() else { break };
+                if next.arrival_ms > clock_ms {
+                    break;
+                }
+                // Reserve the full lifetime footprint up front
+                // (conservative, preemption-free — TRT-LLM style).
+                let footprint = (next.isl + next.osl) as u64;
+                if !pool.can_reserve(footprint) {
+                    break;
+                }
+                pool.reserve(footprint);
+                let mut st = ReqState::new(pending.pop_front().unwrap());
+                st.admitted_ms = Some(clock_ms.max(st.req.arrival_ms));
+                running.push(st);
+            }
+
+            if running.is_empty() {
+                // Idle until the next arrival.
+                if let Some(next) = pending.front() {
+                    clock_ms = clock_ms.max(next.arrival_ms);
+                    continue;
+                }
+                break;
+            }
+
+            // ---- Schedule one iteration. -------------------------------
+            let has_decoders = running.iter().any(|r| r.prefill_done() && !r.done());
+            let gate_ctx = last_had_ctx && has_decoders;
+            let shape = self.schedule(&mut running, gate_ctx);
+            last_had_ctx = shape.ctx_reqs > 0;
+            debug_assert!(shape.total_tokens() > 0);
+
+            let ops = decompose(self.model, self.cluster, &self.eng, &shape, gamma);
+            let mut kernel_us = self.silicon.step_latency_us(&ops);
+            // CUDA-graph replay on pure-decode iterations (same physics
+            // as perfmodel::iteration — mixed steps cannot be graphed).
+            if self.eng.flags.cuda_graph && shape.is_decode_only() {
+                kernel_us -= crate::ops::CUDA_GRAPH_LAUNCH_SAVING
+                    * crate::ops::launch_overhead_us(&ops, self.cluster.gpu.launch_us);
+                kernel_us = kernel_us.max(0.0);
+            }
+            let host_us = fw.iter_host_overhead_us(self.eng.flags.cuda_graph, shape.is_decode_only());
+            let iter_ms =
+                (kernel_us + host_us) / 1000.0 * rng.noise(self.cfg.jitter_sigma);
+            clock_ms += iter_ms;
+            iterations += 1;
+
+            // ---- Apply progress. ----------------------------------------
+            self.apply(&mut running, &shape, clock_ms, gate_ctx);
+
+            // ---- Retire finished requests. ------------------------------
+            let mut i = 0;
+            while i < running.len() {
+                if running[i].done() {
+                    let r = running.swap_remove(i);
+                    pool.release((r.req.isl + r.req.osl) as u64);
+                    finished.push(r);
+                } else {
+                    i += 1;
+                }
+            }
+        }
+
+        let makespan = finished
+            .iter()
+            .filter_map(|r| r.finished_ms)
+            .fold(0.0f64, f64::max)
+            - start_ms;
+        SimResult {
+            ttft_ms: finished.iter().filter_map(|r| r.ttft_ms()).collect(),
+            ttft_adm_ms: finished.iter().filter_map(|r| r.ttft_from_admission_ms()).collect(),
+            tpot_ms: finished.iter().filter_map(|r| r.tpot_ms()).collect(),
+            completed: finished.len(),
+            makespan_ms: makespan.max(0.0),
+            output_tokens: finished.iter().map(|r| r.req.osl as u64).sum(),
+            gpus: self.eng.parallel.gpus(),
+            iterations,
+        }
+    }
+
+    /// Form this iteration's token population (chunked-prefill policy):
+    /// decode slots first (each running decoder advances 1 token), then
+    /// fill the remaining token budget with prompt chunks FCFS.
+    fn schedule(&self, running: &mut [ReqState], gate_ctx: bool) -> StepShape {
+        let budget = self.eng.flags.max_num_tokens as u64;
+        let mut gen_reqs = 0u64;
+        let mut gen_kv_sum = 0u64;
+        for r in running.iter() {
+            if r.prefill_done() && !r.done() {
+                gen_reqs += 1;
+                gen_kv_sum += r.kv_tokens();
+            }
+        }
+        let mut ctx_budget =
+            if gate_ctx { 0 } else { budget.saturating_sub(gen_reqs) };
+        let mut ctx_reqs = 0u32;
+        let mut ctx_q_sum = 0u64;
+        let mut ctx_kv_sum = 0u64;
+        for r in running.iter_mut() {
+            if r.prefill_done() || ctx_budget == 0 {
+                continue;
+            }
+            let chunk = if self.eng.flags.chunked_prefill {
+                r.prefill_remaining().min(ctx_budget)
+            } else if r.prefill_remaining() <= ctx_budget {
+                r.prefill_remaining()
+            } else {
+                // No chunking: a prompt larger than the budget runs alone
+                // in one oversized iteration (engine-enforced).
+                if ctx_reqs == 0 { r.prefill_remaining() } else { 0 }
+            };
+            if chunk == 0 {
+                continue;
+            }
+            ctx_budget = ctx_budget.saturating_sub(chunk);
+            ctx_reqs += 1;
+            ctx_q_sum += chunk;
+            ctx_kv_sum += r.prefilled + chunk;
+            // Stash the chunk in `generated`-adjacent scratch? No — apply()
+            // recomputes the same schedule deterministically.
+        }
+        StepShape {
+            ctx_reqs,
+            ctx_q: if ctx_reqs > 0 { ctx_q_sum / ctx_reqs as u64 } else { 0 },
+            ctx_kv: if ctx_reqs > 0 { ctx_kv_sum / ctx_reqs as u64 } else { 0 },
+            gen_reqs,
+            gen_kv: if gen_reqs > 0 { gen_kv_sum / gen_reqs } else { 0 },
+        }
+    }
+
+    /// Advance request state to match the schedule just executed
+    /// (same traversal order as [`Self::schedule`]).
+    fn apply(&self, running: &mut [ReqState], shape: &StepShape, now_ms: f64, gate_ctx: bool) {
+        // Decoders advance one token.
+        for r in running.iter_mut() {
+            if r.prefill_done() && !r.done() && r.first_token_ms.is_some() {
+                r.generated += 1;
+                if r.generated >= r.req.osl as u64 {
+                    r.finished_ms = Some(now_ms);
+                }
+            }
+        }
+        // Prefill chunks land; requests completing prefill emit their
+        // first token this iteration.
+        if gate_ctx {
+            return;
+        }
+        let budget = self.eng.flags.max_num_tokens as u64;
+        let mut ctx_budget = budget.saturating_sub(shape.gen_reqs);
+        let mut first = true;
+        for r in running.iter_mut() {
+            if r.prefill_done() || r.first_token_ms.is_some() || ctx_budget == 0 {
+                continue;
+            }
+            let chunk = if self.eng.flags.chunked_prefill {
+                r.prefill_remaining().min(ctx_budget)
+            } else if r.prefill_remaining() <= ctx_budget || first {
+                r.prefill_remaining().min(ctx_budget.max(r.prefill_remaining()))
+            } else {
+                0
+            };
+            if chunk == 0 {
+                continue;
+            }
+            first = false;
+            ctx_budget = ctx_budget.saturating_sub(chunk.min(ctx_budget));
+            r.prefilled += chunk;
+            if r.prefill_done() {
+                r.first_token_ms = Some(now_ms);
+                r.generated = 1; // prefill produces the first token
+                if r.generated >= r.req.osl as u64 {
+                    r.finished_ms = Some(now_ms);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ParallelSpec, RuntimeFlags};
+    use crate::frameworks::Framework;
+    use crate::hardware::h100_sxm;
+    use crate::models::{by_name, Dtype};
+    use crate::workload::closed_loop;
+
+    fn fixture(batch: u32) -> (Silicon, ModelArch, ClusterSpec, EngineConfig) {
+        let cluster = ClusterSpec::new(h100_sxm(), 8, 1);
+        (
+            Silicon::new(cluster, Framework::TrtLlm.profile()),
+            by_name("qwen3-32b").unwrap(),
+            cluster,
+            EngineConfig {
+                framework: Framework::TrtLlm,
+                parallel: ParallelSpec::tp(2),
+                batch,
+                weight_dtype: Dtype::Fp8,
+                kv_dtype: Dtype::Fp8,
+                flags: RuntimeFlags::defaults_for(Framework::TrtLlm),
+            },
+        )
+    }
+
+    use crate::models::ModelArch;
+
+    #[test]
+    fn completes_all_requests() {
+        let (sil, m, c, e) = fixture(8);
+        let sim = AggregatedSim::new(&sil, &m, &c, e, SimConfig::default());
+        let res = sim.run(&closed_loop(16, 1024, 64));
+        assert_eq!(res.completed, 16);
+        assert_eq!(res.ttft_ms.len(), 16);
+        assert!(res.makespan_ms > 0.0);
+        assert_eq!(res.output_tokens, 16 * 64);
+        assert!(res.iterations >= 64);
+    }
+
+    #[test]
+    fn ttft_ordering_fcfs() {
+        let (sil, m, c, e) = fixture(4);
+        let sim = AggregatedSim::new(&sil, &m, &c, e, SimConfig::default());
+        let res = sim.run(&closed_loop(8, 2048, 32));
+        // With batch 4 and 8 closed-loop requests, the second wave's TTFT
+        // must exceed the first wave's (they queue).
+        let mut t = res.ttft_ms.clone();
+        t.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert!(t[7] > t[0] * 1.5, "{t:?}");
+    }
+
+    #[test]
+    fn bigger_batch_higher_throughput() {
+        let (sil, m, c, e1) = fixture(2);
+        let (_, _, _, e2) = fixture(32);
+        let sim1 = AggregatedSim::new(&sil, &m, &c, e1, SimConfig::default());
+        let sim32 = AggregatedSim::new(&sil, &m, &c, e2, SimConfig::default());
+        let r1 = sim1.run(&closed_loop(32, 1024, 128));
+        let r32 = sim32.run(&closed_loop(32, 1024, 128));
+        assert!(
+            r32.thru_per_gpu() > r1.thru_per_gpu() * 2.0,
+            "b2={} b32={}",
+            r1.thru_per_gpu(),
+            r32.thru_per_gpu()
+        );
+        // ...at worse per-user latency.
+        assert!(r32.mean_tpot_ms() > r1.mean_tpot_ms());
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let (sil, m, c, e) = fixture(8);
+        let sim = AggregatedSim::new(&sil, &m, &c, e, SimConfig::default());
+        let a = sim.run(&closed_loop(8, 512, 32));
+        let b = sim.run(&closed_loop(8, 512, 32));
+        assert_eq!(a.ttft_ms, b.ttft_ms);
+        assert_eq!(a.makespan_ms, b.makespan_ms);
+    }
+
+    #[test]
+    fn open_loop_respects_arrivals() {
+        let (sil, m, c, e) = fixture(8);
+        let sim = AggregatedSim::new(&sil, &m, &c, e, SimConfig::default());
+        let trace = crate::workload::poisson(2.0, 5.0, 512, 32, 0.0, 3);
+        let res = sim.run(&trace);
+        assert_eq!(res.completed, trace.len());
+        // Low load: TTFT should be near the isolated prefill latency and
+        // small relative to a saturated closed loop.
+        assert!(res.mean_ttft_ms() < 2000.0, "{}", res.mean_ttft_ms());
+    }
+}

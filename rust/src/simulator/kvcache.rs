@@ -1,0 +1,105 @@
+//! Paged KV-cache accounting (PagedAttention-style): tokens are held in
+//! fixed-size pages, so capacity is consumed with page granularity —
+//! one of the real-engine effects the analytical model approximates
+//! away (it budgets exact tokens).
+
+/// Page-granular KV pool for one engine instance.
+#[derive(Clone, Debug)]
+pub struct KvPool {
+    capacity_tokens: u64,
+    page_tokens: u64,
+    used_pages: u64,
+}
+
+impl KvPool {
+    pub fn new(capacity_tokens: u64, page_tokens: u32) -> Self {
+        KvPool { capacity_tokens, page_tokens: page_tokens.max(1) as u64, used_pages: 0 }
+    }
+
+    fn total_pages(&self) -> u64 {
+        self.capacity_tokens / self.page_tokens
+    }
+
+    pub fn pages_for(&self, tokens: u64) -> u64 {
+        tokens.div_ceil(self.page_tokens)
+    }
+
+    /// Can `tokens` more be reserved right now?
+    pub fn can_reserve(&self, tokens: u64) -> bool {
+        self.used_pages + self.pages_for(tokens) <= self.total_pages()
+    }
+
+    /// Reserve pages for `tokens` (caller must have checked).
+    pub fn reserve(&mut self, tokens: u64) {
+        let p = self.pages_for(tokens);
+        debug_assert!(self.used_pages + p <= self.total_pages());
+        self.used_pages += p;
+    }
+
+    /// Release a request's full footprint.
+    pub fn release(&mut self, tokens: u64) {
+        self.used_pages = self.used_pages.saturating_sub(self.pages_for(tokens));
+    }
+
+    /// Grow an existing reservation from `old_tokens` to `new_tokens`
+    /// (decode appends). Returns false if out of pages (preemption
+    /// pressure — the simulator then stalls admission).
+    pub fn grow(&mut self, old_tokens: u64, new_tokens: u64) -> bool {
+        let delta = self.pages_for(new_tokens).saturating_sub(self.pages_for(old_tokens));
+        if self.used_pages + delta > self.total_pages() {
+            return false;
+        }
+        self.used_pages += delta;
+        true
+    }
+
+    pub fn used_tokens_upper(&self) -> u64 {
+        self.used_pages * self.page_tokens
+    }
+
+    pub fn utilization(&self) -> f64 {
+        if self.total_pages() == 0 {
+            1.0
+        } else {
+            self.used_pages as f64 / self.total_pages() as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn page_granularity() {
+        let mut p = KvPool::new(1000, 32); // 31 pages
+        assert_eq!(p.pages_for(1), 1);
+        assert_eq!(p.pages_for(32), 1);
+        assert_eq!(p.pages_for(33), 2);
+        assert!(p.can_reserve(31 * 32));
+        assert!(!p.can_reserve(31 * 32 + 1));
+        p.reserve(100); // 4 pages
+        assert_eq!(p.used_tokens_upper(), 128);
+        p.release(100);
+        assert_eq!(p.used_tokens_upper(), 0);
+    }
+
+    #[test]
+    fn grow_within_page_is_free() {
+        let mut p = KvPool::new(64 * 10, 64);
+        p.reserve(65); // 2 pages
+        assert!(p.grow(65, 66)); // same 2 pages
+        assert_eq!(p.used_tokens_upper(), 128);
+        assert!(p.grow(66, 129)); // 3 pages
+        assert_eq!(p.used_tokens_upper(), 192);
+    }
+
+    #[test]
+    fn grow_fails_when_full() {
+        let mut p = KvPool::new(64 * 2, 64);
+        p.reserve(64);
+        p.reserve(64);
+        assert!(!p.grow(64, 65));
+        assert_eq!(p.utilization(), 1.0);
+    }
+}

@@ -1,0 +1,131 @@
+//! Discrete-event serving simulator — the ground-truth stand-in for real
+//! engine benchmarks (DESIGN.md substitutions).
+//!
+//! Unlike the analytical models of [`crate::perfmodel`], the simulator
+//! executes the *actual* iteration-by-iteration schedule: chunked-prefill
+//! admission, paged KV accounting, prefill/decode interference, queueing,
+//! per-iteration scheduler jitter, and (for disaggregated mode) KV-cache
+//! transfer and pool imbalance. Its iteration latencies come from the
+//! synthetic silicon directly — noise-free truth plus jitter — while the
+//! analytical side only ever sees the noisy profiled grids. The gap
+//! between the two is what the fidelity experiments (Figs 6–8) measure.
+
+pub mod aggregated;
+pub mod disagg;
+pub mod kvcache;
+pub mod request;
+
+use crate::util::stats;
+
+/// Simulator knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct SimConfig {
+    pub seed: u64,
+    /// Per-iteration multiplicative jitter sigma (scheduler variance the
+    /// analytical model cannot see).
+    pub jitter_sigma: f64,
+    /// KV page granularity, tokens (PagedAttention-style allocation).
+    pub kv_page_tokens: u32,
+    /// Hard cap on simulated iterations (runaway guard).
+    pub max_iterations: u64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig { seed: 0xD15C, jitter_sigma: 0.05, kv_page_tokens: 32, max_iterations: 2_000_000 }
+    }
+}
+
+/// Per-run results, per-request metrics included.
+#[derive(Clone, Debug, Default)]
+pub struct SimResult {
+    pub ttft_ms: Vec<f64>,
+    /// TTFT measured from batch-slot admission (AI-Perf concurrency
+    /// semantics); equals `ttft_ms` for requests admitted on arrival.
+    pub ttft_adm_ms: Vec<f64>,
+    pub tpot_ms: Vec<f64>,
+    pub completed: usize,
+    /// Wall-clock from first arrival to last completion, ms.
+    pub makespan_ms: f64,
+    /// Output tokens produced.
+    pub output_tokens: u64,
+    pub gpus: u32,
+    pub iterations: u64,
+}
+
+impl SimResult {
+    pub fn mean_ttft_ms(&self) -> f64 {
+        stats::mean(&self.ttft_ms)
+    }
+
+    /// Mean admission-based TTFT (see `ttft_adm_ms`).
+    pub fn mean_ttft_adm_ms(&self) -> f64 {
+        stats::mean(&self.ttft_adm_ms)
+    }
+
+    pub fn mean_tpot_ms(&self) -> f64 {
+        stats::mean(&self.tpot_ms)
+    }
+
+    pub fn p99_ttft_ms(&self) -> f64 {
+        stats::percentile(&self.ttft_ms, 99.0)
+    }
+
+    /// Generation speed, tokens/s/user (Eq. 1 on measured TPOT).
+    pub fn speed(&self) -> f64 {
+        let t = self.mean_tpot_ms();
+        if t > 0.0 {
+            1000.0 / t
+        } else {
+            0.0
+        }
+    }
+
+    /// System throughput, output tokens/s per GPU.
+    pub fn thru_per_gpu(&self) -> f64 {
+        if self.makespan_ms <= 0.0 || self.gpus == 0 {
+            return 0.0;
+        }
+        self.output_tokens as f64 / (self.makespan_ms / 1000.0) / self.gpus as f64
+    }
+
+    /// Fraction of requests meeting the SLA (goodput numerator).
+    pub fn sla_attainment(&self, sla: &crate::config::Sla) -> f64 {
+        if self.ttft_ms.is_empty() {
+            return 0.0;
+        }
+        let max_tpot = sla.max_tpot_ms();
+        let ok = self
+            .ttft_ms
+            .iter()
+            .zip(&self.tpot_ms)
+            .filter(|(t, p)| **t <= sla.ttft_ms && **p <= max_tpot)
+            .count();
+        ok as f64 / self.ttft_ms.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Sla;
+
+    #[test]
+    fn result_metrics() {
+        let r = SimResult {
+            ttft_ms: vec![500.0, 1500.0],
+            ttft_adm_ms: vec![400.0, 1200.0],
+            tpot_ms: vec![20.0, 40.0],
+            completed: 2,
+            makespan_ms: 10_000.0,
+            output_tokens: 1000,
+            gpus: 2,
+            iterations: 100,
+        };
+        assert_eq!(r.mean_tpot_ms(), 30.0);
+        assert!((r.speed() - 1000.0 / 30.0).abs() < 1e-9);
+        assert_eq!(r.thru_per_gpu(), 50.0);
+        let sla = Sla { ttft_ms: 1000.0, min_speed: 30.0 }; // max tpot 33.3
+        assert_eq!(r.sla_attainment(&sla), 0.5);
+    }
+}

@@ -1,0 +1,99 @@
+//! Per-request lifecycle state inside the simulator.
+
+use crate::workload::Request;
+
+/// Mutable request state while being served.
+#[derive(Clone, Debug)]
+pub struct ReqState {
+    pub req: Request,
+    /// Prompt tokens already prefilled.
+    pub prefilled: u64,
+    /// Output tokens generated so far.
+    pub generated: u64,
+    /// Time the scheduler admitted the request into a batch slot.
+    pub admitted_ms: Option<f64>,
+    /// Time the first token was produced (prefill complete).
+    pub first_token_ms: Option<f64>,
+    /// Completion time.
+    pub finished_ms: Option<f64>,
+    /// For disaggregated mode: when KV arrived at the decode pool.
+    pub kv_ready_ms: Option<f64>,
+}
+
+impl ReqState {
+    pub fn new(req: Request) -> Self {
+        ReqState {
+            req,
+            prefilled: 0,
+            generated: 0,
+            admitted_ms: None,
+            first_token_ms: None,
+            finished_ms: None,
+            kv_ready_ms: None,
+        }
+    }
+
+    pub fn prefill_done(&self) -> bool {
+        self.prefilled >= self.req.isl as u64
+    }
+
+    pub fn done(&self) -> bool {
+        self.finished_ms.is_some()
+    }
+
+    /// Remaining prompt tokens.
+    pub fn prefill_remaining(&self) -> u64 {
+        (self.req.isl as u64).saturating_sub(self.prefilled)
+    }
+
+    /// Current KV footprint in tokens.
+    pub fn kv_tokens(&self) -> u64 {
+        self.prefilled + self.generated
+    }
+
+    /// TTFT relative to arrival (requires first_token_ms set).
+    pub fn ttft_ms(&self) -> Option<f64> {
+        self.first_token_ms.map(|t| t - self.req.arrival_ms)
+    }
+
+    /// TTFT from batch-slot admission — what AI-Perf's concurrency mode
+    /// measures (the "next" request is only issued once a slot frees, so
+    /// client-side queueing is excluded; in-batch context backlog is not).
+    pub fn ttft_from_admission_ms(&self) -> Option<f64> {
+        match (self.first_token_ms, self.admitted_ms) {
+            (Some(f), Some(a)) => Some(f - a.max(self.req.arrival_ms)),
+            _ => None,
+        }
+    }
+
+    /// Mean TPOT over the generated tail (requires completion).
+    pub fn tpot_ms(&self) -> Option<f64> {
+        match (self.first_token_ms, self.finished_ms) {
+            (Some(f), Some(e)) if self.req.osl > 1 => {
+                Some((e - f) / (self.req.osl - 1) as f64)
+            }
+            (Some(_), Some(_)) => Some(0.0),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle() {
+        let mut r = ReqState::new(Request { id: 0, arrival_ms: 100.0, isl: 1000, osl: 11 });
+        assert!(!r.prefill_done());
+        assert_eq!(r.prefill_remaining(), 1000);
+        r.prefilled = 1000;
+        assert!(r.prefill_done());
+        r.first_token_ms = Some(600.0);
+        assert_eq!(r.ttft_ms(), Some(500.0));
+        r.generated = 11;
+        r.finished_ms = Some(850.0);
+        assert_eq!(r.tpot_ms(), Some(25.0));
+        assert_eq!(r.kv_tokens(), 1011);
+    }
+}

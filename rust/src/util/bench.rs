@@ -1,0 +1,112 @@
+//! Minimal benchmark harness (criterion is not in the vendored crate
+//! set — see DESIGN.md). Criterion-like reporting: warmup, N timed
+//! samples, median / mean / p95, printed as
+//! `name                time: [median 1.234 ms]  mean 1.3 ms  p95 1.5 ms`.
+
+use std::time::Instant;
+
+use super::stats;
+
+/// Result of one benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples_ms: Vec<f64>,
+}
+
+impl BenchResult {
+    pub fn median_ms(&self) -> f64 {
+        stats::median(&self.samples_ms)
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        stats::mean(&self.samples_ms)
+    }
+
+    pub fn p95_ms(&self) -> f64 {
+        stats::percentile(&self.samples_ms, 95.0)
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} time: [median {:>10}]  mean {:>10}  p95 {:>10}",
+            self.name,
+            fmt_ms(self.median_ms()),
+            fmt_ms(self.mean_ms()),
+            fmt_ms(self.p95_ms())
+        )
+    }
+}
+
+fn fmt_ms(ms: f64) -> String {
+    if ms < 0.001 {
+        format!("{:.3} µs", ms * 1000.0)
+    } else if ms < 1.0 {
+        format!("{:.1} µs", ms * 1000.0)
+    } else if ms < 1000.0 {
+        format!("{ms:.3} ms")
+    } else {
+        format!("{:.3} s", ms / 1000.0)
+    }
+}
+
+/// Run `f` with `warmup` unmeasured + `samples` measured iterations and
+/// print a criterion-style line. Returns the samples for assertions.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, samples: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut out = Vec::with_capacity(samples);
+    for _ in 0..samples.max(1) {
+        let t = Instant::now();
+        f();
+        out.push(t.elapsed().as_secs_f64() * 1e3);
+    }
+    let r = BenchResult { name: name.to_string(), samples_ms: out };
+    println!("{}", r.report());
+    r
+}
+
+/// Time one invocation (for long-running whole-experiment benches).
+pub fn once<F: FnOnce()>(name: &str, f: F) -> BenchResult {
+    let t = Instant::now();
+    f();
+    let r = BenchResult {
+        name: name.to_string(),
+        samples_ms: vec![t.elapsed().as_secs_f64() * 1e3],
+    };
+    println!("{}", r.report());
+    r
+}
+
+/// Prevent the optimizer from discarding a value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures() {
+        let r = bench("noop-spin", 1, 5, || {
+            let mut s = 0u64;
+            for i in 0..1000 {
+                s = s.wrapping_add(black_box(i));
+            }
+            black_box(s);
+        });
+        assert_eq!(r.samples_ms.len(), 5);
+        assert!(r.median_ms() >= 0.0);
+        assert!(r.p95_ms() >= r.median_ms());
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert!(fmt_ms(0.0005).contains("µs"));
+        assert!(fmt_ms(5.0).contains("ms"));
+        assert!(fmt_ms(5000.0).contains(" s"));
+    }
+}

@@ -1,0 +1,432 @@
+//! Minimal dependency-free JSON (this build environment has no network,
+//! and `serde` is not in the vendored crate set — see DESIGN.md).
+//!
+//! Supports the full JSON data model with a recursive-descent parser and
+//! a compact writer. Used for: perf-database persistence, the AOT
+//! `artifacts/manifest.json` shape contract, workload descriptors, and
+//! the config-search service wire protocol (JSON-lines over TCP).
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// A JSON value. Numbers are f64 (adequate for all our payloads).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    pub fn obj() -> Json {
+        Json::Obj(BTreeMap::new())
+    }
+
+    /// Insert into an object (panics if not an object).
+    pub fn set(&mut self, key: &str, val: Json) -> &mut Self {
+        match self {
+            Json::Obj(m) => {
+                m.insert(key.to_string(), val);
+            }
+            _ => panic!("set() on non-object"),
+        }
+        self
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        self.as_f64().map(|f| f as u64)
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Field access helpers that produce readable errors.
+    pub fn req(&self, key: &str) -> anyhow::Result<&Json> {
+        self.get(key)
+            .ok_or_else(|| anyhow::anyhow!("missing field '{key}'"))
+    }
+
+    pub fn req_f64(&self, key: &str) -> anyhow::Result<f64> {
+        self.req(key)?
+            .as_f64()
+            .ok_or_else(|| anyhow::anyhow!("field '{key}' is not a number"))
+    }
+
+    pub fn req_str(&self, key: &str) -> anyhow::Result<&str> {
+        self.req(key)?
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("field '{key}' is not a string"))
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|j| j.as_f64()).unwrap_or(default)
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).and_then(|j| j.as_str()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(|j| j.as_bool()).unwrap_or(default)
+    }
+
+    /// Serialize compactly.
+    pub fn to_string(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s);
+        s
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => {
+                if n.is_finite() {
+                    if *n == n.trunc() && n.abs() < 1e15 {
+                        let _ = write!(out, "{}", *n as i64);
+                    } else {
+                        let _ = write!(out, "{n}");
+                    }
+                } else {
+                    out.push_str("null"); // JSON has no Inf/NaN
+                }
+            }
+            Json::Str(s) => write_escaped(s, out),
+            Json::Arr(v) => {
+                out.push('[');
+                for (i, x) in v.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    x.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_escaped(k, out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn write_escaped(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+/// Convenience constructors.
+pub fn num(n: f64) -> Json {
+    Json::Num(n)
+}
+pub fn s(v: &str) -> Json {
+    Json::Str(v.to_string())
+}
+pub fn arr<I: IntoIterator<Item = Json>>(it: I) -> Json {
+    Json::Arr(it.into_iter().collect())
+}
+pub fn farr(v: &[f64]) -> Json {
+    Json::Arr(v.iter().map(|x| Json::Num(*x)).collect())
+}
+
+/// Parse a JSON document.
+pub fn parse(input: &str) -> anyhow::Result<Json> {
+    let mut p = Parser {
+        b: input.as_bytes(),
+        i: 0,
+    };
+    p.skip_ws();
+    let v = p.value()?;
+    p.skip_ws();
+    if p.i != p.b.len() {
+        anyhow::bail!("trailing characters at byte {}", p.i);
+    }
+    Ok(v)
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn skip_ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> anyhow::Result<u8> {
+        self.b
+            .get(self.i)
+            .copied()
+            .ok_or_else(|| anyhow::anyhow!("unexpected end of input"))
+    }
+
+    fn expect(&mut self, c: u8) -> anyhow::Result<()> {
+        if self.peek()? == c {
+            self.i += 1;
+            Ok(())
+        } else {
+            anyhow::bail!(
+                "expected '{}' at byte {}, found '{}'",
+                c as char,
+                self.i,
+                self.peek()? as char
+            )
+        }
+    }
+
+    fn value(&mut self) -> anyhow::Result<Json> {
+        self.skip_ws();
+        match self.peek()? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Ok(Json::Str(self.string()?)),
+            b't' => self.lit("true", Json::Bool(true)),
+            b'f' => self.lit("false", Json::Bool(false)),
+            b'n' => self.lit("null", Json::Null),
+            _ => self.number(),
+        }
+    }
+
+    fn lit(&mut self, word: &str, v: Json) -> anyhow::Result<Json> {
+        if self.b[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(v)
+        } else {
+            anyhow::bail!("invalid literal at byte {}", self.i)
+        }
+    }
+
+    fn object(&mut self) -> anyhow::Result<Json> {
+        self.expect(b'{')?;
+        let mut m = BTreeMap::new();
+        self.skip_ws();
+        if self.peek()? == b'}' {
+            self.i += 1;
+            return Ok(Json::Obj(m));
+        }
+        loop {
+            self.skip_ws();
+            let k = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            let v = self.value()?;
+            m.insert(k, v);
+            self.skip_ws();
+            match self.peek()? {
+                b',' => self.i += 1,
+                b'}' => {
+                    self.i += 1;
+                    return Ok(Json::Obj(m));
+                }
+                c => anyhow::bail!("expected ',' or '}}' at byte {}, found '{}'", self.i, c as char),
+            }
+        }
+    }
+
+    fn array(&mut self) -> anyhow::Result<Json> {
+        self.expect(b'[')?;
+        let mut v = Vec::new();
+        self.skip_ws();
+        if self.peek()? == b']' {
+            self.i += 1;
+            return Ok(Json::Arr(v));
+        }
+        loop {
+            v.push(self.value()?);
+            self.skip_ws();
+            match self.peek()? {
+                b',' => self.i += 1,
+                b']' => {
+                    self.i += 1;
+                    return Ok(Json::Arr(v));
+                }
+                c => anyhow::bail!("expected ',' or ']' at byte {}, found '{}'", self.i, c as char),
+            }
+        }
+    }
+
+    fn string(&mut self) -> anyhow::Result<String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            let c = self.peek()?;
+            self.i += 1;
+            match c {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let e = self.peek()?;
+                    self.i += 1;
+                    match e {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b't' => out.push('\t'),
+                        b'r' => out.push('\r'),
+                        b'b' => out.push('\u{8}'),
+                        b'f' => out.push('\u{c}'),
+                        b'u' => {
+                            if self.i + 4 > self.b.len() {
+                                anyhow::bail!("truncated \\u escape");
+                            }
+                            let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])?;
+                            let cp = u32::from_str_radix(hex, 16)?;
+                            self.i += 4;
+                            out.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
+                        }
+                        _ => anyhow::bail!("invalid escape at byte {}", self.i),
+                    }
+                }
+                c => {
+                    // Collect the full UTF-8 sequence.
+                    let start = self.i - 1;
+                    let len = utf8_len(c);
+                    self.i = start + len;
+                    out.push_str(std::str::from_utf8(&self.b[start..self.i])?);
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> anyhow::Result<Json> {
+        let start = self.i;
+        while self.i < self.b.len()
+            && matches!(self.b[self.i], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+        {
+            self.i += 1;
+        }
+        let txt = std::str::from_utf8(&self.b[start..self.i])?;
+        let n: f64 = txt
+            .parse()
+            .map_err(|_| anyhow::anyhow!("invalid number '{txt}' at byte {start}"))?;
+        Ok(Json::Num(n))
+    }
+}
+
+fn utf8_len(first: u8) -> usize {
+    match first {
+        0x00..=0x7F => 1,
+        0xC0..=0xDF => 2,
+        0xE0..=0xEF => 3,
+        _ => 4,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_basic() {
+        let src = r#"{"a": 1, "b": [true, null, "x\ny"], "c": {"d": 2.5}}"#;
+        let v = parse(src).unwrap();
+        assert_eq!(v.req_f64("a").unwrap(), 1.0);
+        assert_eq!(v.get("b").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(v.get("c").unwrap().req_f64("d").unwrap(), 2.5);
+        let re = parse(&v.to_string()).unwrap();
+        assert_eq!(v, re);
+    }
+
+    #[test]
+    fn numbers() {
+        for (txt, want) in [
+            ("0", 0.0),
+            ("-1.5", -1.5),
+            ("1e3", 1000.0),
+            ("2.5E-2", 0.025),
+        ] {
+            assert_eq!(parse(txt).unwrap().as_f64().unwrap(), want);
+        }
+    }
+
+    #[test]
+    fn strings_and_escapes() {
+        let v = parse(r#""aéb\t""#).unwrap();
+        assert_eq!(v.as_str().unwrap(), "a\u{e9}b\t");
+        // Round-trip non-ascii.
+        let j = Json::Str("héllo \"wörld\"".to_string());
+        assert_eq!(parse(&j.to_string()).unwrap(), j);
+    }
+
+    #[test]
+    fn errors() {
+        assert!(parse("{").is_err());
+        assert!(parse("[1,]").is_err());
+        assert!(parse("12 34").is_err());
+        assert!(parse("{'a': 1}").is_err());
+    }
+
+    #[test]
+    fn integer_formatting() {
+        assert_eq!(Json::Num(42.0).to_string(), "42");
+        assert_eq!(Json::Num(0.5).to_string(), "0.5");
+    }
+
+    #[test]
+    fn builder_helpers() {
+        let mut o = Json::obj();
+        o.set("x", num(1.0)).set("y", s("z")).set("a", farr(&[1.0, 2.0]));
+        let p = parse(&o.to_string()).unwrap();
+        assert_eq!(p.req_str("y").unwrap(), "z");
+    }
+}

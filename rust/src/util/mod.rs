@@ -1,0 +1,62 @@
+//! Small shared utilities: deterministic RNG, axis transforms, stats.
+
+pub mod bench;
+pub mod json;
+pub mod rng;
+pub mod stats;
+
+/// Round `x` up to the next multiple of `m` (m > 0).
+pub fn ceil_div(x: u64, m: u64) -> u64 {
+    debug_assert!(m > 0);
+    x.div_ceil(m)
+}
+
+/// `log2` of a positive value, as f64.
+pub fn log2f(x: f64) -> f64 {
+    debug_assert!(x > 0.0, "log2 of non-positive value {x}");
+    x.log2()
+}
+
+/// Logarithmically spaced values from `lo` to `hi` inclusive (`n >= 2`).
+pub fn logspace(lo: f64, hi: f64, n: usize) -> Vec<f64> {
+    assert!(n >= 2 && lo > 0.0 && hi > lo);
+    let (l, h) = (lo.ln(), hi.ln());
+    (0..n)
+        .map(|i| (l + (h - l) * i as f64 / (n - 1) as f64).exp())
+        .collect()
+}
+
+/// Linearly spaced values from `lo` to `hi` inclusive (`n >= 2`).
+pub fn linspace(lo: f64, hi: f64, n: usize) -> Vec<f64> {
+    assert!(n >= 2);
+    (0..n)
+        .map(|i| lo + (hi - lo) * i as f64 / (n - 1) as f64)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_basics() {
+        assert_eq!(ceil_div(0, 4), 0);
+        assert_eq!(ceil_div(1, 4), 1);
+        assert_eq!(ceil_div(4, 4), 1);
+        assert_eq!(ceil_div(5, 4), 2);
+    }
+
+    #[test]
+    fn logspace_endpoints() {
+        let v = logspace(1.0, 1024.0, 11);
+        assert!((v[0] - 1.0).abs() < 1e-9);
+        assert!((v[10] - 1024.0).abs() < 1e-6);
+        assert!((v[5] - 32.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn linspace_endpoints() {
+        let v = linspace(0.0, 10.0, 5);
+        assert_eq!(v, vec![0.0, 2.5, 5.0, 7.5, 10.0]);
+    }
+}

@@ -1,0 +1,155 @@
+//! Deterministic, dependency-free RNG (splitmix64 + xoshiro256**).
+//!
+//! The coordinator owns all randomness (measurement noise in
+//! [`crate::silicon`], scheduler jitter in [`crate::simulator`], uniform
+//! samples fed to the MoE power-law kernel) so every experiment is
+//! reproducible from a single seed.
+
+/// xoshiro256** seeded via splitmix64.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+    /// Cached second Box-Muller variate.
+    spare: Option<f64>,
+}
+
+impl Rng {
+    /// Create an RNG from a 64-bit seed.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let mut next = || {
+            sm = sm.wrapping_add(0x9E37_79B9_7F4A_7C15);
+            let mut z = sm;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+            z ^ (z >> 31)
+        };
+        Rng {
+            s: [next(), next(), next(), next()],
+            spare: None,
+        }
+    }
+
+    /// Next raw 64-bit value.
+    pub fn next_u64(&mut self) -> u64 {
+        let r = self.s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        r
+    }
+
+    /// Uniform f64 in [0, 1).
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f64 in (0, 1) — never exactly 0 (safe for log/power laws).
+    pub fn f64_open(&mut self) -> f64 {
+        ((self.next_u64() >> 11) as f64 + 0.5) * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        // Multiply-shift; bias negligible for our n << 2^64.
+        ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+
+    /// Standard normal via Box-Muller (cached pair).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(v) = self.spare.take() {
+            return v;
+        }
+        let u1 = self.f64_open();
+        let u2 = self.f64();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let (s, c) = (2.0 * std::f64::consts::PI * u2).sin_cos();
+        self.spare = Some(r * s);
+        r * c
+    }
+
+    /// Lognormal multiplicative noise with standard deviation ~`sigma`
+    /// (mean-one for small sigma): `exp(sigma * N(0,1) - sigma^2/2)`.
+    pub fn noise(&mut self, sigma: f64) -> f64 {
+        (sigma * self.normal() - 0.5 * sigma * sigma).exp()
+    }
+
+    /// Exponential variate with the given rate (for Poisson arrivals).
+    pub fn exponential(&mut self, rate: f64) -> f64 {
+        debug_assert!(rate > 0.0);
+        -self.f64_open().ln() / rate
+    }
+
+    /// Fork a child RNG for an independent stream.
+    pub fn fork(&mut self, tag: u64) -> Rng {
+        Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn uniform_range_and_mean() {
+        let mut r = Rng::new(1);
+        let n = 20_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let v = r.f64();
+            assert!((0.0..1.0).contains(&v));
+            sum += v;
+        }
+        assert!((sum / n as f64 - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(2);
+        let n = 50_000;
+        let (mut m1, mut m2) = (0.0, 0.0);
+        for _ in 0..n {
+            let v = r.normal();
+            m1 += v;
+            m2 += v * v;
+        }
+        assert!((m1 / n as f64).abs() < 0.02);
+        assert!((m2 / n as f64 - 1.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn noise_mean_one() {
+        let mut r = Rng::new(3);
+        let n = 50_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            sum += r.noise(0.05);
+        }
+        assert!((sum / n as f64 - 1.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn below_in_range() {
+        let mut r = Rng::new(4);
+        for _ in 0..1000 {
+            assert!(r.below(7) < 7);
+        }
+    }
+}

@@ -1,0 +1,88 @@
+//! Workload descriptors and request traces: the load-generation side of
+//! the ground-truth simulator (the role AI-Perf plays in the paper's
+//! case study — concurrency-matched closed loop with oversampling).
+
+use crate::util::rng::Rng;
+
+/// One request in a trace.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Request {
+    pub id: u64,
+    /// Arrival time, ms from trace start.
+    pub arrival_ms: f64,
+    pub isl: u32,
+    pub osl: u32,
+}
+
+/// Closed-loop trace: `n` identical requests all present at t=0
+/// (concurrency-matched benchmarking; the engine's batch cap enforces
+/// the actual concurrency).
+pub fn closed_loop(n: usize, isl: u32, osl: u32) -> Vec<Request> {
+    (0..n)
+        .map(|i| Request { id: i as u64, arrival_ms: 0.0, isl, osl })
+        .collect()
+}
+
+/// Poisson open-loop trace at `rate_rps`, with ±`len_jitter` uniform
+/// jitter on ISL/OSL (production prompts are not all identical).
+pub fn poisson(
+    rate_rps: f64,
+    duration_s: f64,
+    isl: u32,
+    osl: u32,
+    len_jitter: f64,
+    seed: u64,
+) -> Vec<Request> {
+    assert!(rate_rps > 0.0);
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::new();
+    let mut t_ms = 0.0;
+    let mut id = 0u64;
+    while t_ms < duration_s * 1000.0 {
+        t_ms += rng.exponential(rate_rps) * 1000.0;
+        if t_ms >= duration_s * 1000.0 {
+            break;
+        }
+        let j = |v: u32, rng: &mut Rng| -> u32 {
+            let f = 1.0 + len_jitter * (2.0 * rng.f64() - 1.0);
+            ((v as f64 * f).round() as u32).max(1)
+        };
+        out.push(Request { id, arrival_ms: t_ms, isl: j(isl, &mut rng), osl: j(osl, &mut rng) });
+        id += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn closed_loop_all_at_zero() {
+        let t = closed_loop(10, 1024, 128);
+        assert_eq!(t.len(), 10);
+        assert!(t.iter().all(|r| r.arrival_ms == 0.0 && r.isl == 1024));
+        assert_eq!(t[9].id, 9);
+    }
+
+    #[test]
+    fn poisson_rate_approx() {
+        let t = poisson(50.0, 20.0, 1000, 100, 0.0, 3);
+        let rate = t.len() as f64 / 20.0;
+        assert!((rate - 50.0).abs() < 5.0, "rate={rate}");
+        // Arrivals strictly increasing.
+        assert!(t.windows(2).all(|w| w[0].arrival_ms < w[1].arrival_ms));
+    }
+
+    #[test]
+    fn jitter_spreads_lengths() {
+        let t = poisson(100.0, 5.0, 1000, 100, 0.3, 7);
+        assert!(t.iter().any(|r| r.isl != 1000));
+        assert!(t.iter().all(|r| r.isl >= 700 - 1 && r.isl <= 1300 + 1));
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        assert_eq!(poisson(10.0, 2.0, 100, 10, 0.2, 9), poisson(10.0, 2.0, 100, 10, 0.2, 9));
+    }
+}

@@ -1,0 +1,50 @@
+//! Fidelity regression gates: the quick variants of the paper's
+//! evaluation experiments must stay inside calibrated error envelopes.
+//! (Full paper-scale sweeps run via `examples/fidelity_report.rs --full`
+//! and are recorded in EXPERIMENTS.md.)
+
+use aiconfigurator::experiments::{
+    fig1_pareto, fig5_powerlaw, fig6_agg_fidelity, fig7_disagg_fidelity, fig8_case_study,
+    table1_efficiency,
+};
+
+#[test]
+fn fig6_quick_envelope() {
+    let rep = fig6_agg_fidelity::run(true);
+    let mape = rep.get("tpot_mape_overall").unwrap();
+    assert!(mape < 35.0, "overall TPOT MAPE {mape}% (paper: 7.8%)");
+}
+
+#[test]
+fn fig7_quick_envelope() {
+    let rep = fig7_disagg_fidelity::run(true);
+    assert!(rep.get("points").unwrap() >= 1.0, "no frontier points validated");
+    assert!(rep.get("speed_mape").unwrap() < 40.0);
+}
+
+#[test]
+fn fig8_shape_holds() {
+    let rep = fig8_case_study::run(true);
+    assert!(rep.get("disagg_gain_pct").unwrap() > 25.0, "disagg should win the case study");
+    assert!(rep.get("search_s").unwrap() < 30.0);
+}
+
+#[test]
+fn fig1_crossover_exists() {
+    let rep = fig1_pareto::run(true);
+    assert!(rep.get("disagg_gain_pct_40").unwrap() > 30.0);
+}
+
+#[test]
+fn fig5_skew_table() {
+    let rep = fig5_powerlaw::run(true);
+    assert!(rep.get("top20_share_a1.2").unwrap() > 50.0);
+}
+
+#[test]
+fn table1_quick_envelope() {
+    let rep = table1_efficiency::run(true);
+    for m in ["llama3.1-8b", "qwen3-32b", "qwen3-235b"] {
+        assert!(rep.get(&format!("speedup_{m}")).unwrap() > 1_000.0);
+    }
+}

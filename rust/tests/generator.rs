@@ -1,0 +1,122 @@
+//! Generator integration (paper §4.1 step 5): recommended candidates
+//! become complete, mutually consistent launch bundles on disk for every
+//! backend, including the Dynamo disaggregated deployment spec.
+
+use aiconfigurator::config::{
+    Candidate, EngineConfig, ParallelSpec, RuntimeFlags, WorkloadSpec,
+};
+use aiconfigurator::frameworks::Framework;
+use aiconfigurator::generator;
+use aiconfigurator::models::Dtype;
+
+fn eng(fw: Framework, tp: u32, batch: u32) -> EngineConfig {
+    EngineConfig {
+        framework: fw,
+        parallel: ParallelSpec::tp(tp),
+        batch,
+        weight_dtype: Dtype::Fp8,
+        kv_dtype: Dtype::Fp8,
+        flags: RuntimeFlags::defaults_for(fw),
+    }
+}
+
+fn wl() -> WorkloadSpec {
+    WorkloadSpec::new("qwen3-32b", 4000, 500, 1200.0, 60.0)
+}
+
+#[test]
+fn bundle_written_to_disk_and_complete() {
+    let cand = Candidate::Disaggregated {
+        prefill: eng(Framework::TrtLlm, 1, 1),
+        decode: eng(Framework::TrtLlm, 2, 80),
+        x: 4,
+        y: 2,
+    };
+    let bundle = generator::generate(&cand, "Qwen/Qwen3-32B-FP8", &wl());
+    let dir = std::env::temp_dir().join(format!("aiconf_gen_{}", std::process::id()));
+    bundle.write_to(&dir).unwrap();
+    for (name, content) in &bundle.files {
+        let on_disk = std::fs::read_to_string(dir.join(name)).unwrap();
+        assert_eq!(&on_disk, content, "{name} content mismatch");
+    }
+    // Paper's Table 2 shape: P:4xTP1, D:2xTP2, decode batch 80.
+    let y = bundle.get("dynamo_disagg.yaml").unwrap();
+    assert!(y.contains("replicas: 4") && y.contains("replicas: 2"));
+    assert!(y.contains("max_batch_size: 80"));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn flags_propagate_for_each_backend() {
+    let w = wl();
+    // TRT-LLM: kv fraction + chunked context + cuda graph flags.
+    let mut e = eng(Framework::TrtLlm, 4, 32);
+    e.flags.kv_frac = 0.77;
+    e.flags.cuda_graph = false;
+    let b = generator::generate(&Candidate::Aggregated { engine: e, replicas: 2 }, "m", &w);
+    let sh = b.get("launch_server.sh").unwrap();
+    assert!(sh.contains("0.77"));
+    let yml = b.get("trtllm_server.yaml").unwrap();
+    assert!(yml.contains("cuda_graph_config: null"));
+
+    // vLLM: enforce-eager when graphs are off; chunked prefill flag.
+    let mut e = eng(Framework::Vllm, 2, 64);
+    e.flags.cuda_graph = false;
+    e.flags.chunked_prefill = false;
+    let b = generator::generate(&Candidate::Aggregated { engine: e, replicas: 1 }, "m", &w);
+    let sh = b.get("launch_server.sh").unwrap();
+    assert!(sh.contains("--enforce-eager"));
+    assert!(!sh.contains("--enable-chunked-prefill"));
+
+    // SGLang: ep-size and chunk size surface.
+    let mut e = eng(Framework::Sglang, 8, 16);
+    e.parallel.ep = 8;
+    let b = generator::generate(&Candidate::Aggregated { engine: e, replicas: 1 }, "m", &w);
+    let sh = b.get("launch_server.sh").unwrap();
+    assert!(sh.contains("--ep-size 8"));
+}
+
+#[test]
+fn workload_context_embedded() {
+    let w = wl();
+    for fw in Framework::all() {
+        let b = generator::generate(
+            &Candidate::Aggregated { engine: eng(fw, 2, 8), replicas: 1 },
+            "org/model-x",
+            &w,
+        );
+        let sh = b.get("launch_server.sh").unwrap();
+        assert!(sh.contains("ISL=4000"), "{fw:?}");
+        assert!(sh.contains("org/model-x"), "{fw:?}");
+    }
+}
+
+#[test]
+fn end_to_end_search_to_bundle() {
+    // The pipeline's last mile: search result -> launch bundle.
+    use aiconfigurator::hardware::{h200_sxm, ClusterSpec};
+    use aiconfigurator::models::by_name;
+    use aiconfigurator::pareto;
+    use aiconfigurator::perfdb::PerfDatabase;
+    use aiconfigurator::search::{SearchSpace, TaskRunner};
+    use aiconfigurator::silicon::Silicon;
+
+    let model = by_name("qwen3-32b").unwrap();
+    let cluster = ClusterSpec::new(h200_sxm(), 8, 1);
+    let silicon = Silicon::new(cluster, Framework::TrtLlm.profile());
+    let db = PerfDatabase::build(&silicon, &model, Dtype::Fp8, 1);
+    let w = wl();
+    let report = TaskRunner::new(
+        &model,
+        &cluster,
+        SearchSpace::default_for(&model, Framework::TrtLlm),
+        w.clone(),
+    )
+    .run(&db);
+    let analysis = pareto::analyze(&report.evaluated, &w.sla);
+    let best = analysis.best().expect("feasible");
+    let bundle = generator::generate(&best.cand, "Qwen/Qwen3-32B-FP8", &w);
+    assert!(!bundle.files.is_empty());
+    // Any launch script mentions the model id.
+    assert!(bundle.files.iter().any(|(n, c)| n.ends_with(".sh") && c.contains("Qwen3-32B")));
+}

@@ -1,0 +1,181 @@
+//! Cross-module integration: the full search pipeline over the real
+//! database, database-vs-silicon oracle agreement, and analytical-model
+//! vs simulator consistency on matched configurations.
+
+use aiconfigurator::config::{Candidate, ServingMode, WorkloadSpec};
+use aiconfigurator::frameworks::Framework;
+use aiconfigurator::hardware::{h100_sxm, h200_sxm, ClusterSpec};
+use aiconfigurator::models::{by_name, Dtype};
+use aiconfigurator::pareto;
+use aiconfigurator::perfdb::{LatencyOracle, PerfDatabase};
+use aiconfigurator::perfmodel;
+use aiconfigurator::search::{SearchSpace, TaskRunner};
+use aiconfigurator::silicon::Silicon;
+use aiconfigurator::simulator::{aggregated::AggregatedSim, SimConfig};
+use aiconfigurator::workload::closed_loop;
+
+fn fixture(model: &str, fw: Framework) -> (Silicon, aiconfigurator::models::ModelArch, PerfDatabase)
+{
+    let cluster = ClusterSpec::new(h100_sxm(), 8, 1);
+    let silicon = Silicon::new(cluster, fw.profile());
+    let m = by_name(model).unwrap();
+    let db = PerfDatabase::build(&silicon, &m, Dtype::Fp8, 0xFEED);
+    (silicon, m, db)
+}
+
+#[test]
+fn full_pipeline_dense_model() {
+    let (silicon, model, db) = fixture("qwen3-32b", Framework::TrtLlm);
+    let wl = WorkloadSpec::new("qwen3-32b", 2048, 256, 1500.0, 20.0);
+    let space = SearchSpace::default_for(&model, Framework::TrtLlm);
+    let report = TaskRunner::new(&model, &silicon.cluster, space, wl.clone()).run(&db);
+    assert!(report.configs_priced >= 20);
+    let analysis = pareto::analyze(&report.evaluated, &wl.sla);
+    assert!(!analysis.feasible.is_empty(), "SLA should be satisfiable");
+    let best = analysis.best().unwrap();
+    assert!(best.est.meets(&wl.sla));
+    // Frontier members are all feasible and mutually non-dominated.
+    for &i in &analysis.frontier {
+        assert!(analysis.feasible[i].est.meets(&wl.sla));
+    }
+}
+
+#[test]
+fn db_oracle_tracks_silicon_within_tolerance() {
+    // The product-path oracle (noisy profiled grids + interpolation)
+    // must track the true silicon on step latencies of realistic shapes.
+    let (silicon, model, db) = fixture("qwen3-235b", Framework::TrtLlm);
+    let eng = aiconfigurator::config::EngineConfig {
+        framework: Framework::TrtLlm,
+        parallel: aiconfigurator::config::ParallelSpec { tp: 4, pp: 1, ep: 4, dp: 1 },
+        batch: 32,
+        weight_dtype: Dtype::Fp8,
+        kv_dtype: Dtype::Fp8,
+        flags: aiconfigurator::config::RuntimeFlags::defaults_for(Framework::TrtLlm),
+    };
+    for shape in [
+        aiconfigurator::ops::StepShape::prefill(1, 4096, 4096),
+        aiconfigurator::ops::StepShape::decode(32, 3000),
+        aiconfigurator::ops::StepShape { ctx_reqs: 1, ctx_q: 2048, ctx_kv: 2048, gen_reqs: 31, gen_kv: 2500 },
+    ] {
+        let ops = aiconfigurator::ops::decompose(&model, &silicon.cluster, &eng, &shape, 1.3);
+        let truth = LatencyOracle::step_latency_us(&silicon, &ops);
+        let est = db.step_latency_us(&ops);
+        let err = (est - truth).abs() / truth;
+        assert!(err < 0.25, "shape {shape:?}: est {est:.0} vs truth {truth:.0} ({err:.2})");
+    }
+}
+
+#[test]
+fn analytical_tpot_tracks_simulator_dense() {
+    let (silicon, model, db) = fixture("qwen3-32b", Framework::TrtLlm);
+    let eng = aiconfigurator::config::EngineConfig {
+        framework: Framework::TrtLlm,
+        parallel: aiconfigurator::config::ParallelSpec::tp(2),
+        batch: 16,
+        weight_dtype: Dtype::Fp8,
+        kv_dtype: Dtype::Fp8,
+        flags: aiconfigurator::config::RuntimeFlags::defaults_for(Framework::TrtLlm),
+    };
+    let wl = WorkloadSpec::new("qwen3-32b", 2048, 256, f64::INFINITY, 0.0);
+    let cand = Candidate::Aggregated { engine: eng, replicas: 1 };
+    let est = perfmodel::estimate(&db, &model, &silicon.cluster, &cand, &wl);
+    let sim = AggregatedSim::new(&silicon, &model, &silicon.cluster, eng, SimConfig::default())
+        .run(&closed_loop(32, 2048, 256));
+    let err = (est.tpot_ms - sim.mean_tpot_ms()).abs() / sim.mean_tpot_ms();
+    assert!(
+        err < 0.30,
+        "TPOT model {:.2} vs sim {:.2} ({err:.2})",
+        est.tpot_ms,
+        sim.mean_tpot_ms()
+    );
+}
+
+#[test]
+fn vllm_slower_than_trtllm_same_config() {
+    // Framework heterogeneity must propagate end-to-end.
+    let wl = WorkloadSpec::new("llama3.1-8b", 1024, 128, f64::INFINITY, 0.0);
+    let mut results = Vec::new();
+    for fw in [Framework::TrtLlm, Framework::Vllm] {
+        let (silicon, model, db) = fixture("llama3.1-8b", fw);
+        let eng = aiconfigurator::config::EngineConfig {
+            framework: fw,
+            parallel: aiconfigurator::config::ParallelSpec::tp(1),
+            batch: 8,
+            weight_dtype: Dtype::Fp8,
+            kv_dtype: Dtype::Fp8,
+            flags: aiconfigurator::config::RuntimeFlags::defaults_for(fw),
+        };
+        let cand = Candidate::Aggregated { engine: eng, replicas: 1 };
+        results.push(perfmodel::estimate(&db, &model, &silicon.cluster, &cand, &wl));
+    }
+    assert!(
+        results[1].tpot_ms > results[0].tpot_ms,
+        "vLLM TPOT {} should exceed TRT-LLM {}",
+        results[1].tpot_ms,
+        results[0].tpot_ms
+    );
+}
+
+#[test]
+fn h200_beats_h100_on_decode_heavy_workload() {
+    let model = by_name("qwen3-32b").unwrap();
+    let wl = WorkloadSpec::new("qwen3-32b", 512, 1024, f64::INFINITY, 0.0);
+    let mut thru = Vec::new();
+    for gpu in [h100_sxm(), h200_sxm()] {
+        let cluster = ClusterSpec::new(gpu, 8, 1);
+        let silicon = Silicon::new(cluster, Framework::TrtLlm.profile());
+        let db = PerfDatabase::build(&silicon, &model, Dtype::Fp8, 3);
+        let eng = aiconfigurator::config::EngineConfig {
+            framework: Framework::TrtLlm,
+            parallel: aiconfigurator::config::ParallelSpec::tp(2),
+            batch: 64,
+            weight_dtype: Dtype::Fp8,
+            kv_dtype: Dtype::Fp8,
+            flags: aiconfigurator::config::RuntimeFlags::defaults_for(Framework::TrtLlm),
+        };
+        let cand = Candidate::Aggregated { engine: eng, replicas: 1 };
+        thru.push(perfmodel::estimate(&db, &model, &cluster, &cand, &wl).thru_per_gpu);
+    }
+    assert!(thru[1] > thru[0] * 1.1, "H200 {} vs H100 {}", thru[1], thru[0]);
+}
+
+#[test]
+fn modes_restriction_respected() {
+    let (silicon, model, db) = fixture("llama3.1-8b", Framework::Sglang);
+    let wl = WorkloadSpec::new("llama3.1-8b", 1024, 128, 2000.0, 10.0);
+    let mut space = SearchSpace::default_for(&model, Framework::Sglang);
+    space.modes = vec![ServingMode::Aggregated];
+    let report = TaskRunner::new(&model, &silicon.cluster, space, wl).run(&db);
+    assert!(report
+        .evaluated
+        .iter()
+        .all(|e| matches!(e.cand, Candidate::Aggregated { .. })));
+}
+
+#[test]
+fn db_persistence_roundtrip_via_files() {
+    let (silicon, model, db) = fixture("mixtral-8x7b", Framework::TrtLlm);
+    let dir = std::env::temp_dir().join(format!("aiconf_test_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("db.json");
+    db.save(&path).unwrap();
+    let loaded = PerfDatabase::load(&path, silicon.cluster).unwrap();
+    assert_eq!(loaded.ctx, db.ctx);
+    let op = aiconfigurator::ops::Op::Gemm { m: 333, n: 4096, k: 4096, dtype: Dtype::Fp8, count: 1 };
+    assert!((loaded.op_latency_us(&op) - db.op_latency_us(&op)).abs() < 1e-3);
+    let _ = std::fs::remove_dir_all(&dir);
+    let _ = model;
+}
+
+#[test]
+fn gpt_oss_and_mixtral_search_works() {
+    // Non-headline models exercise the same pipeline.
+    for name in ["gpt-oss-120b", "mixtral-8x7b"] {
+        let (silicon, model, db) = fixture(name, Framework::TrtLlm);
+        let wl = WorkloadSpec::new(name, 1024, 256, f64::INFINITY, 0.0);
+        let space = SearchSpace::default_for(&model, Framework::TrtLlm);
+        let report = TaskRunner::new(&model, &silicon.cluster, space, wl).run(&db);
+        assert!(!report.evaluated.is_empty(), "{name} produced no candidates");
+    }
+}

@@ -1,0 +1,306 @@
+//! Randomized property tests over coordinator invariants (home-grown
+//! harness over the deterministic RNG — proptest is not in the vendored
+//! crate set, see DESIGN.md). Each property runs hundreds of randomized
+//! cases; failures print the violating case.
+
+use aiconfigurator::config::{EngineConfig, ParallelSpec, RuntimeFlags, Sla, WorkloadSpec};
+use aiconfigurator::frameworks::Framework;
+use aiconfigurator::hardware::{h100_sxm, ClusterSpec};
+use aiconfigurator::models::{by_name, Dtype};
+use aiconfigurator::pareto;
+use aiconfigurator::perfdb::query::{flat, trilinear};
+use aiconfigurator::perfdb::tables::{GRID_LEN, NX, NY, NZ};
+use aiconfigurator::perfmodel::{memory, moe, PerfEstimate};
+use aiconfigurator::search::runner::Evaluated;
+use aiconfigurator::simulator::kvcache::KvPool;
+use aiconfigurator::util::json::{self, Json};
+use aiconfigurator::util::rng::Rng;
+
+/// Interpolation output is bounded by the table's min/max (no over- or
+/// under-shoot: trilinear is a convex combination of corner values).
+#[test]
+fn prop_interp_within_table_bounds() {
+    let mut rng = Rng::new(0xB0B);
+    let mut grids = vec![0f32; GRID_LEN];
+    for v in grids.iter_mut() {
+        *v = (rng.f64() * 1e4) as f32;
+    }
+    for _ in 0..500 {
+        let t = rng.below(16) as usize;
+        let fx = rng.f64() * 40.0 - 4.0; // deliberately out of range too
+        let fy = rng.f64() * 40.0 - 4.0;
+        let fz = rng.f64() * 20.0 - 2.0;
+        let v = trilinear(&grids, t, fx, fy, fz);
+        let base = t * NX * NY * NZ;
+        let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+        for &g in &grids[base..base + NX * NY * NZ] {
+            lo = lo.min(g);
+            hi = hi.max(g);
+        }
+        assert!(
+            v >= lo as f64 - 1e-3 && v <= hi as f64 + 1e-3,
+            "t={t} ({fx},{fy},{fz}): {v} outside [{lo},{hi}]"
+        );
+    }
+}
+
+/// Grid-point queries return stored values exactly.
+#[test]
+fn prop_interp_interpolates_grid_points_exactly() {
+    let mut rng = Rng::new(0xC0C);
+    let mut grids = vec![0f32; GRID_LEN];
+    for v in grids.iter_mut() {
+        *v = (rng.f64() * 100.0) as f32;
+    }
+    for _ in 0..500 {
+        let t = rng.below(16) as usize;
+        let (ix, iy, iz) = (rng.below(NX as u64) as usize, rng.below(NY as u64) as usize, rng.below(NZ as u64) as usize);
+        let v = trilinear(&grids, t, ix as f64, iy as f64, iz as f64);
+        assert_eq!(v as f32, grids[flat(t, ix, iy, iz)]);
+    }
+}
+
+/// The Pareto frontier equals the brute-force non-dominated set.
+#[test]
+fn prop_pareto_frontier_equals_bruteforce() {
+    let mut rng = Rng::new(0xD0D);
+    for case in 0..50 {
+        let n = 2 + rng.below(40) as usize;
+        let pts: Vec<PerfEstimate> = (0..n)
+            .map(|_| PerfEstimate {
+                ttft_ms: rng.f64() * 1000.0,
+                tpot_ms: 1.0 + rng.f64() * 100.0,
+                speed: (rng.f64() * 10.0).round() * 10.0, // ties likely
+                thru_per_gpu: (rng.f64() * 10.0).round() * 50.0,
+                concurrency: 1,
+            })
+            .collect();
+        let frontier = pareto::frontier_indices(&pts);
+        // Brute force: i is on the frontier iff nothing strictly dominates.
+        for (i, p) in pts.iter().enumerate() {
+            let dominated = pts.iter().enumerate().any(|(j, q)| {
+                j != i
+                    && q.speed >= p.speed
+                    && q.thru_per_gpu >= p.thru_per_gpu
+                    && (q.speed > p.speed || q.thru_per_gpu > p.thru_per_gpu)
+            });
+            let on_frontier = frontier.iter().any(|&k| {
+                pts[k].speed == p.speed && pts[k].thru_per_gpu == p.thru_per_gpu
+            });
+            assert_eq!(
+                !dominated, on_frontier,
+                "case {case} point {i}: dominated={dominated} frontier={on_frontier}"
+            );
+        }
+    }
+}
+
+/// SLA analysis never returns an infeasible best, and ranking is by
+/// throughput descending.
+#[test]
+fn prop_analyze_respects_sla_and_order() {
+    let mut rng = Rng::new(0xE0E);
+    let eng = EngineConfig {
+        framework: Framework::TrtLlm,
+        parallel: ParallelSpec::tp(1),
+        batch: 1,
+        weight_dtype: Dtype::Fp8,
+        kv_dtype: Dtype::Fp8,
+        flags: RuntimeFlags::defaults_for(Framework::TrtLlm),
+    };
+    for _ in 0..50 {
+        let evs: Vec<Evaluated> = (0..rng.below(30) as usize)
+            .map(|_| Evaluated {
+                cand: aiconfigurator::config::Candidate::Aggregated { engine: eng, replicas: 1 },
+                est: PerfEstimate {
+                    ttft_ms: rng.f64() * 2000.0,
+                    tpot_ms: 1.0 + rng.f64() * 100.0,
+                    speed: rng.f64() * 100.0,
+                    thru_per_gpu: rng.f64() * 1000.0,
+                    concurrency: 1,
+                },
+            })
+            .collect();
+        let sla = Sla { ttft_ms: 500.0 + rng.f64() * 1000.0, min_speed: rng.f64() * 50.0 };
+        let a = pareto::analyze(&evs, &sla);
+        for e in &a.feasible {
+            assert!(e.est.meets(&sla));
+        }
+        for w in a.feasible.windows(2) {
+            assert!(w[0].est.thru_per_gpu >= w[1].est.thru_per_gpu);
+        }
+    }
+}
+
+/// KV pool accounting never exceeds capacity and release restores state.
+#[test]
+fn prop_kvpool_conservation() {
+    let mut rng = Rng::new(0xF0F);
+    for _ in 0..100 {
+        let cap = 1000 + rng.below(100_000);
+        let page = 1 + rng.below(128) as u32;
+        let mut pool = KvPool::new(cap, page);
+        let mut live: Vec<u64> = Vec::new();
+        for _ in 0..200 {
+            if rng.below(2) == 0 {
+                let tokens = 1 + rng.below(5000);
+                if pool.can_reserve(tokens) {
+                    pool.reserve(tokens);
+                    live.push(tokens);
+                }
+            } else if let Some(tokens) = live.pop() {
+                pool.release(tokens);
+            }
+            assert!(pool.utilization() <= 1.0 + 1e-9);
+        }
+        for t in live.drain(..) {
+            pool.release(t);
+        }
+        assert_eq!(pool.used_tokens_upper(), 0, "leaked pages");
+    }
+}
+
+/// Memory model: weights shrink monotonically with TP; KV capacity grows.
+#[test]
+fn prop_memory_monotone_in_tp() {
+    let mut rng = Rng::new(0x101);
+    let models = ["llama3.1-8b", "qwen3-32b", "qwen3-235b", "deepseek-v3"];
+    for _ in 0..40 {
+        let model = by_name(models[rng.below(4) as usize]).unwrap();
+        let dt = [Dtype::Fp16, Dtype::Fp8][rng.below(2) as usize];
+        let mk = |tp: u32| EngineConfig {
+            framework: Framework::TrtLlm,
+            parallel: ParallelSpec::tp(tp),
+            batch: 1,
+            weight_dtype: dt,
+            kv_dtype: dt,
+            flags: RuntimeFlags::defaults_for(Framework::TrtLlm),
+        };
+        let mut last = f64::INFINITY;
+        for tp in [1u32, 2, 4, 8] {
+            if model.heads % tp as u64 != 0 {
+                continue;
+            }
+            let w = memory::weight_bytes_per_gpu(&model, &mk(tp));
+            assert!(w <= last * 1.001, "{}: weights grew at tp={tp}", model.name);
+            last = w;
+        }
+    }
+}
+
+/// MoE token counts conserve the total for arbitrary (t, k, alpha).
+#[test]
+fn prop_moe_counts_conserve() {
+    let mut rng = Rng::new(0x202);
+    for _ in 0..200 {
+        let e = 1 + rng.below(256) as usize;
+        let t = 1 + rng.below(1 << 16);
+        let k = 1 + rng.below(8);
+        let alpha = rng.f64() * 2.0;
+        let counts = moe::token_counts(&mut rng, e, alpha, t, k);
+        assert_eq!(counts.iter().sum::<u64>(), t * k, "e={e} t={t} k={k} a={alpha}");
+    }
+}
+
+/// γ ≥ 1 always, and γ = 1 exactly when ep ≤ 1.
+#[test]
+fn prop_moe_gamma_bounds() {
+    let mut rng = Rng::new(0x303);
+    for _ in 0..100 {
+        let e = 1 + rng.below(256);
+        let ep = 1 + rng.below(16) as u32;
+        let alpha = rng.f64() * 1.8;
+        let g = moe::ep_imbalance(e, alpha, ep, rng.next_u64(), 4);
+        assert!(g >= 1.0 - 1e-9, "gamma {g}");
+        if ep == 1 {
+            assert_eq!(g, 1.0);
+        }
+        // Hottest GPU cannot exceed ep× the mean.
+        assert!(g <= ep as f64 + 1e-9, "gamma {g} > ep {ep}");
+    }
+}
+
+/// JSON writer/parser round-trip on random values.
+#[test]
+fn prop_json_roundtrip() {
+    fn random_json(rng: &mut Rng, depth: u32) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.below(2) == 1),
+            2 => Json::Num((rng.f64() * 2e6 - 1e6).round() / 16.0),
+            3 => Json::Str(format!("s{}-\"é\\{}", rng.below(1000), rng.below(10))),
+            4 => Json::Arr((0..rng.below(5)).map(|_| random_json(rng, depth - 1)).collect()),
+            _ => {
+                let mut o = Json::obj();
+                for i in 0..rng.below(5) {
+                    o.set(&format!("k{i}"), random_json(rng, depth - 1));
+                }
+                o
+            }
+        }
+    }
+    let mut rng = Rng::new(0x404);
+    for _ in 0..300 {
+        let v = random_json(&mut rng, 3);
+        let re = json::parse(&v.to_string()).unwrap();
+        assert_eq!(v, re);
+    }
+}
+
+/// Eq. 2 throughput is monotone: better TPOT (all else equal) never
+/// reduces throughput; more GPUs never increase per-GPU throughput.
+#[test]
+fn prop_eq2_monotonicity() {
+    let mut rng = Rng::new(0x505);
+    for _ in 0..200 {
+        let ttft = rng.f64() * 2000.0;
+        let tpot = 1.0 + rng.f64() * 100.0;
+        let batch = 1 + rng.below(256) as u32;
+        let osl = 2 + rng.below(2048) as u32;
+        let gpus = 1 + rng.below(64) as u32;
+        let base = PerfEstimate::from_latencies(ttft, tpot, batch, osl, gpus);
+        let faster = PerfEstimate::from_latencies(ttft, tpot * 0.9, batch, osl, gpus);
+        assert!(faster.thru_per_gpu >= base.thru_per_gpu);
+        let more_gpus = PerfEstimate::from_latencies(ttft, tpot, batch, osl, gpus + 1);
+        assert!(more_gpus.thru_per_gpu <= base.thru_per_gpu);
+    }
+}
+
+/// Workload JSON round-trip for random descriptors.
+#[test]
+fn prop_workload_roundtrip() {
+    let mut rng = Rng::new(0x606);
+    for _ in 0..100 {
+        let wl = WorkloadSpec::new(
+            ["qwen3-32b", "deepseek-v3"][rng.below(2) as usize],
+            1 + rng.below(65536) as u32,
+            1 + rng.below(8192) as u32,
+            (rng.f64() * 10000.0).round(),
+            (rng.f64() * 200.0).round(),
+        );
+        let back = WorkloadSpec::from_json(&wl.to_json()).unwrap();
+        assert_eq!(back.model, wl.model);
+        assert_eq!(back.isl, wl.isl);
+        assert_eq!(back.osl, wl.osl);
+        assert_eq!(back.sla.ttft_ms, wl.sla.ttft_ms);
+    }
+}
+
+/// Cluster link selection: collectives within a node never use IB.
+#[test]
+fn prop_link_selection() {
+    let mut rng = Rng::new(0x707);
+    for _ in 0..100 {
+        let gpn = 1 + rng.below(16) as u32;
+        let nodes = 1 + rng.below(8) as u32;
+        let c = ClusterSpec::new(h100_sxm(), gpn, nodes);
+        for g in 1..=c.total_gpus() {
+            let link = c.link_for(g);
+            if g <= gpn {
+                assert_eq!(link, aiconfigurator::hardware::LinkKind::NvLink);
+            } else {
+                assert_eq!(link, aiconfigurator::hardware::LinkKind::InfiniBand);
+            }
+        }
+    }
+}

@@ -1,0 +1,204 @@
+//! PJRT runtime integration: the AOT-compiled Pallas kernels must agree
+//! with the native Rust implementations on identical inputs.
+//!
+//! Requires `make artifacts`; every test skips gracefully when the
+//! artifacts are absent (e.g. a cargo-only run).
+
+use aiconfigurator::frameworks::Framework;
+use aiconfigurator::hardware::{h100_sxm, ClusterSpec};
+use aiconfigurator::models::{by_name, Dtype};
+use aiconfigurator::ops::Op;
+use aiconfigurator::perfdb::tables::{query_for, GRID_LEN};
+use aiconfigurator::perfdb::{LatencyOracle, PerfDatabase};
+use aiconfigurator::runtime::{PjrtOracle, PjrtService, MOE_EXPERTS};
+use aiconfigurator::silicon::Silicon;
+use aiconfigurator::util::rng::Rng;
+
+fn artifacts() -> Option<&'static std::path::Path> {
+    let p = std::path::Path::new("artifacts");
+    if p.join("interp.hlo.txt").exists() && p.join("manifest.json").exists() {
+        Some(p)
+    } else {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn db() -> (Silicon, PerfDatabase) {
+    let cluster = ClusterSpec::new(h100_sxm(), 8, 1);
+    let silicon = Silicon::new(cluster, Framework::TrtLlm.profile());
+    let model = by_name("qwen3-235b").unwrap();
+    let db = PerfDatabase::build(&silicon, &model, Dtype::Fp8, 0xBEEF);
+    (silicon, db)
+}
+
+fn random_op(rng: &mut Rng) -> Op {
+    match rng.below(7) {
+        0 => Op::Gemm {
+            m: 1 + rng.below(200_000),
+            n: 64 + rng.below(100_000),
+            k: 64 + rng.below(30_000),
+            dtype: [Dtype::Fp16, Dtype::Fp8, Dtype::Int8, Dtype::Int4][rng.below(4) as usize],
+            count: 1,
+        },
+        1 => Op::AttnPrefill {
+            q_tokens: 1 + rng.below(16_000),
+            kv_len: 16 + rng.below(100_000),
+            heads: 1 + rng.below(128),
+            head_dim: 128,
+            causal_frac: 1.0,
+            count: 1,
+        },
+        2 => Op::AttnDecode {
+            batch: 1 + rng.below(512),
+            kv_len: 16 + rng.below(100_000),
+            heads: 1 + rng.below(128),
+            head_dim: 128,
+            kv_token_bytes: 256.0,
+            count: 1,
+        },
+        3 => Op::MoeGemm {
+            tokens: 1 + rng.below(100_000),
+            experts: 1 + rng.below(256),
+            inter: 1536,
+            hidden: 4096,
+            dtype: Dtype::Fp8,
+            imbalance: 1.0 + rng.f64() * 6.0,
+            count: 1,
+        },
+        4 => Op::AllReduce { bytes: 1e3 + rng.f64() * 1e8, gpus: 2 + rng.below(62) as u32, count: 1 },
+        5 => Op::AllToAll { bytes: 1e3 + rng.f64() * 1e8, gpus: 2 + rng.below(62) as u32, count: 1 },
+        _ => Op::P2p { bytes: 1e3 + rng.f64() * 1e8, cross_node: rng.below(2) == 1, count: 1 },
+    }
+}
+
+#[test]
+fn pjrt_interp_matches_native_on_random_queries() {
+    let Some(dir) = artifacts() else { return };
+    let (_, db) = db();
+    let svc = PjrtService::start(dir, db.grids().to_vec()).unwrap();
+    let oracle = PjrtOracle { svc: &svc, db: &db };
+    let mut rng = Rng::new(99);
+    for i in 0..200 {
+        let op = random_op(&mut rng);
+        if query_for(&op).is_none() {
+            continue;
+        }
+        let native = db.op_latency_us(&op);
+        let pjrt = oracle.op_latency_us(&op);
+        // f32 kernel vs f64 native: allow small relative drift.
+        let err = (native - pjrt).abs() / native.max(1e-9);
+        assert!(err < 1e-3, "case {i} {op:?}: native {native} pjrt {pjrt}");
+    }
+}
+
+#[test]
+fn pjrt_step_latency_batches_correctly() {
+    let Some(dir) = artifacts() else { return };
+    let (silicon, db) = db();
+    let svc = PjrtService::start(dir, db.grids().to_vec()).unwrap();
+    let oracle = PjrtOracle { svc: &svc, db: &db };
+    let model = by_name("qwen3-235b").unwrap();
+    let eng = aiconfigurator::config::EngineConfig {
+        framework: Framework::TrtLlm,
+        parallel: aiconfigurator::config::ParallelSpec { tp: 4, pp: 1, ep: 4, dp: 1 },
+        batch: 16,
+        weight_dtype: Dtype::Fp8,
+        kv_dtype: Dtype::Fp8,
+        flags: aiconfigurator::config::RuntimeFlags::defaults_for(Framework::TrtLlm),
+    };
+    let shape = aiconfigurator::ops::StepShape {
+        ctx_reqs: 1,
+        ctx_q: 2048,
+        ctx_kv: 2048,
+        gen_reqs: 15,
+        gen_kv: 3000,
+    };
+    let ops = aiconfigurator::ops::decompose(&model, &silicon.cluster, &eng, &shape, 1.4);
+    let native = db.step_latency_us(&ops);
+    let pjrt = oracle.step_latency_us(&ops);
+    assert!(
+        (native - pjrt).abs() / native < 1e-3,
+        "native {native} vs pjrt {pjrt}"
+    );
+}
+
+#[test]
+fn pjrt_chunking_beyond_query_batch() {
+    let Some(dir) = artifacts() else { return };
+    let (_, db) = db();
+    let svc = PjrtService::start(dir, db.grids().to_vec()).unwrap();
+    // 20k queries → 3 chunks of 8192 with padding.
+    let n = 20_000;
+    let mut rng = Rng::new(5);
+    let tids: Vec<i32> = (0..n).map(|_| rng.below(14) as i32).collect();
+    let coords: Vec<f32> = (0..n * 3).map(|_| (rng.f64() * 31.0) as f32).collect();
+    let out = svc.interp(&tids, &coords).unwrap();
+    assert_eq!(out.len(), n);
+    // Spot-check a few against native trilinear.
+    for i in [0usize, 4095, 8192, 19_999] {
+        let native = aiconfigurator::perfdb::query::trilinear(
+            db.grids(),
+            tids[i] as usize,
+            coords[i * 3] as f64,
+            coords[i * 3 + 1] as f64,
+            coords[i * 3 + 2] as f64,
+        );
+        assert!(
+            (out[i] as f64 - native).abs() / native.max(1e-9) < 1e-3,
+            "i={i}: {} vs {native}",
+            out[i]
+        );
+    }
+}
+
+#[test]
+fn pjrt_moe_matches_native_sampler_statistics() {
+    let Some(dir) = artifacts() else { return };
+    let svc = PjrtService::start(dir, vec![0f32; GRID_LEN]).unwrap();
+    let mut rng = Rng::new(11);
+    let s = 8;
+    let u: Vec<f32> = (0..s * MOE_EXPERTS).map(|_| rng.f64_open() as f32).collect();
+    let alpha: Vec<f32> = (0..s).map(|i| 0.1 + 0.18 * i as f32).collect();
+    let params: Vec<f32> = (0..s).flat_map(|_| [1.0f32, 100.0, 4096.0]).collect();
+    let (loads, imb) = svc.moe(&u, &alpha, &params).unwrap();
+    for i in 0..s {
+        let sum: f32 = loads[i * MOE_EXPERTS..(i + 1) * MOE_EXPERTS].iter().sum();
+        assert!((sum - 4096.0).abs() < 1.0, "scenario {i} sum {sum}");
+        assert!(imb[i] >= 1.0);
+    }
+    // Imbalance rises with alpha overall (allow local noise).
+    assert!(imb[s - 1] > imb[0], "{imb:?}");
+}
+
+#[test]
+fn pjrt_service_concurrent_clients() {
+    let Some(dir) = artifacts() else { return };
+    let (_, db) = db();
+    let svc = std::sync::Arc::new(PjrtService::start(dir, db.grids().to_vec()).unwrap());
+    let mut handles = Vec::new();
+    for t in 0..4u64 {
+        let svc = svc.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(t);
+            for _ in 0..20 {
+                let n = 16;
+                let tids: Vec<i32> = (0..n).map(|_| rng.below(14) as i32).collect();
+                let coords: Vec<f32> = (0..n * 3).map(|_| (rng.f64() * 15.0) as f32).collect();
+                let out = svc.interp(&tids, &coords).unwrap();
+                assert_eq!(out.len(), n);
+                assert!(out.iter().all(|v| v.is_finite()));
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+}
+
+#[test]
+fn manifest_contract_enforced() {
+    let Some(dir) = artifacts() else { return };
+    let m = aiconfigurator::runtime::Manifest::load(&dir.join("manifest.json")).unwrap();
+    m.check_contract().unwrap();
+}

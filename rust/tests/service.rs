@@ -1,0 +1,101 @@
+//! Config-search service over real TCP: bind on an ephemeral port,
+//! concurrent clients, malformed input, shutdown.
+
+use aiconfigurator::config::WorkloadSpec;
+use aiconfigurator::frameworks::Framework;
+use aiconfigurator::service::{make_request, Client, SearchServer, ServerConfig};
+use aiconfigurator::util::json;
+
+fn start_server() -> (std::net::SocketAddr, std::sync::Arc<std::sync::atomic::AtomicBool>, std::thread::JoinHandle<anyhow::Result<()>>) {
+    let cfg = ServerConfig { addr: "127.0.0.1:0".into(), artifacts: None, seed: 7 };
+    let (server, addr) = SearchServer::bind(&cfg, None).unwrap();
+    let stop = server.stopper();
+    let handle = std::thread::spawn(move || server.run());
+    (addr, stop, handle)
+}
+
+fn shutdown(addr: std::net::SocketAddr, stop: &std::sync::atomic::AtomicBool) {
+    stop.store(true, std::sync::atomic::Ordering::SeqCst);
+    let _ = std::net::TcpStream::connect(addr);
+}
+
+#[test]
+fn tcp_roundtrip_and_reuse() {
+    let (addr, stop, _h) = start_server();
+    let mut client = Client::connect(&addr).unwrap();
+    let wl = WorkloadSpec::new("llama3.1-8b", 1024, 128, 2000.0, 10.0);
+    let req = make_request(&wl, "h100", 8, 1, Framework::TrtLlm, 1);
+    let resp = client.request(&req).unwrap();
+    assert_eq!(resp.req_str("status").unwrap(), "ok");
+    assert!(resp.req_f64("configs_priced").unwrap() > 0.0);
+    // Second request on the same connection (cached DB → much faster).
+    let t = std::time::Instant::now();
+    let resp2 = client.request(&req).unwrap();
+    assert_eq!(resp2.req_str("status").unwrap(), "ok");
+    assert!(t.elapsed().as_secs_f64() < 5.0);
+    shutdown(addr, &stop);
+}
+
+#[test]
+fn concurrent_clients_get_consistent_answers() {
+    let (addr, stop, _h) = start_server();
+    let mut handles = Vec::new();
+    for i in 0..3u64 {
+        handles.push(std::thread::spawn(move || {
+            let mut client = Client::connect(&addr).unwrap();
+            let wl = WorkloadSpec::new("llama3.1-8b", 512, 64, 3000.0, 5.0);
+            let req = make_request(&wl, "h100", 8, 1, Framework::TrtLlm, i);
+            let resp = client.request(&req).unwrap();
+            assert_eq!(resp.req_str("status").unwrap(), "ok");
+            assert_eq!(resp.req_f64("id").unwrap(), i as f64);
+            resp.req("top").unwrap().as_arr().unwrap()[0]
+                .req_f64("thru_per_gpu")
+                .unwrap()
+        }));
+    }
+    let answers: Vec<f64> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    // Deterministic pipeline → identical recommendations.
+    assert!(answers.windows(2).all(|w| (w[0] - w[1]).abs() < 1e-9), "{answers:?}");
+    shutdown(addr, &stop);
+}
+
+#[test]
+fn malformed_requests_yield_errors_not_disconnects() {
+    let (addr, stop, _h) = start_server();
+    let mut client = Client::connect(&addr).unwrap();
+    // Invalid JSON.
+    let resp = client.request(&json::parse(r#"{"workload": 7}"#).unwrap()).unwrap();
+    assert_eq!(resp.req_str("status").unwrap(), "error");
+    // Unknown model.
+    let wl = WorkloadSpec::new("gpt-5", 100, 10, 1000.0, 1.0);
+    let resp = client
+        .request(&make_request(&wl, "h100", 8, 1, Framework::TrtLlm, 9))
+        .unwrap();
+    assert_eq!(resp.req_str("status").unwrap(), "error");
+    assert!(resp.req_str("error").unwrap().contains("gpt-5"));
+    // Connection still usable.
+    let wl = WorkloadSpec::new("llama3.1-8b", 256, 32, 5000.0, 1.0);
+    let ok = client
+        .request(&make_request(&wl, "h100", 8, 1, Framework::TrtLlm, 10))
+        .unwrap();
+    assert_eq!(ok.req_str("status").unwrap(), "ok");
+    shutdown(addr, &stop);
+}
+
+#[test]
+fn launch_bundle_in_response() {
+    let (addr, stop, _h) = start_server();
+    let mut client = Client::connect(&addr).unwrap();
+    let wl = WorkloadSpec::new("llama3.1-8b", 1024, 128, 3000.0, 10.0);
+    let resp = client
+        .request(&make_request(&wl, "h100", 8, 1, Framework::Vllm, 2))
+        .unwrap();
+    let launch = resp.req("launch").unwrap();
+    // vLLM aggregated winner → a launch script with vllm serve; disagg →
+    // a dynamo yaml. Either way the bundle is non-empty.
+    match launch {
+        aiconfigurator::util::json::Json::Obj(m) => assert!(!m.is_empty()),
+        _ => panic!("launch should be an object"),
+    }
+    shutdown(addr, &stop);
+}

@@ -1,0 +1,70 @@
+//! Bench: multi-scenario batch sweep (`TaskRunner::run_sweep`) vs the
+//! same scenarios priced by independent `run` calls. The sweep shares
+//! one structural engine enumeration and a memoized oracle across
+//! scenarios, so repeated operator shapes are priced once — the
+//! acceptance check is that sweeping ≥4 scenarios beats 4 independent
+//! runs on wall-clock.
+//!
+//! Run: `cargo bench --bench sweep`
+
+use aiconfigurator::config::WorkloadSpec;
+use aiconfigurator::frameworks::Framework;
+use aiconfigurator::hardware::{h100_sxm, ClusterSpec};
+use aiconfigurator::models::{by_name, Dtype};
+use aiconfigurator::perfdb::{LatencyOracle, MemoOracle, PerfDatabase};
+use aiconfigurator::search::{SearchSpace, TaskRunner};
+use aiconfigurator::silicon::Silicon;
+use aiconfigurator::util::bench::{bench, black_box};
+
+fn scenarios(model: &str) -> Vec<WorkloadSpec> {
+    // A realistic SLA exploration: same traffic profile family, varied
+    // latency targets plus one longer-context scenario — heavy operator
+    // overlap for the memo, distinct memory pruning per scenario.
+    vec![
+        WorkloadSpec::new(model, 2048, 256, 1500.0, 20.0),
+        WorkloadSpec::new(model, 2048, 256, 1000.0, 40.0),
+        WorkloadSpec::new(model, 2048, 256, f64::INFINITY, 0.0),
+        WorkloadSpec::new(model, 4096, 256, 2000.0, 30.0),
+    ]
+}
+
+fn main() {
+    let cluster = ClusterSpec::new(h100_sxm(), 8, 1);
+    for name in ["llama3.1-8b", "qwen3-32b"] {
+        let model = by_name(name).unwrap();
+        let silicon = Silicon::new(cluster, Framework::TrtLlm.profile());
+        let db = PerfDatabase::build(&silicon, &model, Dtype::Fp8, 1);
+        let space = SearchSpace::default_for(&model, Framework::TrtLlm);
+        let wls = scenarios(name);
+
+        let indep = bench(&format!("independent-runs-x{}/{name}", wls.len()), 1, 8, || {
+            for wl in &wls {
+                let runner = TaskRunner::new(&model, &cluster, space.clone(), wl.clone());
+                black_box(runner.run(&db));
+            }
+        });
+        let swept = bench(&format!("run-sweep-x{}/{name}", wls.len()), 1, 8, || {
+            let runner = TaskRunner::new(&model, &cluster, space.clone(), wls[0].clone());
+            black_box(runner.run_sweep(&db, &wls));
+        });
+        println!(
+            "    -> run_sweep vs {} independent runs: {:.2}x",
+            wls.len(),
+            indep.median_ms() / swept.median_ms()
+        );
+
+        // Memo effectiveness on this space (one sweep, fresh cache).
+        let memo = MemoOracle::new(&db as &dyn LatencyOracle);
+        for wl in &wls {
+            let r = TaskRunner::new(&model, &cluster, space.clone(), wl.clone());
+            black_box(r.run(&memo));
+        }
+        let (hits, misses) = memo.stats();
+        println!(
+            "    -> oracle memo: {} distinct ops, {:.1}% hit rate over {} queries",
+            memo.len(),
+            100.0 * hits as f64 / (hits + misses).max(1) as f64,
+            hits + misses
+        );
+    }
+}

@@ -1,6 +1,9 @@
 //! Bench: Table 1 — configuration-search efficiency. Times the full
 //! paper-scale sweep per model and prints the Table 1 rows plus
-//! criterion-style timings for the search core.
+//! criterion-style timings for the search core, comparing the
+//! work-stealing job-queue engine (`TaskRunner::run`) against the seed's
+//! static-chunk implementation (`TaskRunner::run_baseline`) on the same
+//! space — the wall-clock delta recorded in EXPERIMENTS.md.
 //!
 //! Run: `cargo bench --bench table1_search`
 
@@ -19,7 +22,7 @@ fn main() {
     let rep = table1_efficiency::run(false);
     println!("{}", rep.render());
 
-    println!("--- search-core timings ---");
+    println!("--- search-core timings (seed baseline vs work-stealing pool) ---");
     let cluster = ClusterSpec::new(h100_sxm(), 8, 1);
     for name in ["llama3.1-8b", "qwen3-32b", "qwen3-235b"] {
         let model = by_name(name).unwrap();
@@ -31,10 +34,23 @@ fn main() {
         let dbv = PerfDatabase::build(&silicon, &model, Dtype::Fp8, 1);
         let wl = WorkloadSpec::new(name, 2048, 256, f64::INFINITY, 0.0);
         let space = SearchSpace::default_for(&model, Framework::TrtLlm);
-        bench(&format!("search-sweep/{name}"), 1, 10, || {
-            let runner =
-                TaskRunner::new(&model, &cluster, space.clone(), wl.clone());
+
+        let seed = bench(&format!("search-seed-baseline/{name}"), 1, 10, || {
+            let runner = TaskRunner::new(&model, &cluster, space.clone(), wl.clone());
+            black_box(runner.run_baseline(&dbv));
+        });
+        let pooled = bench(&format!("search-sweep/{name}"), 1, 10, || {
+            let runner = TaskRunner::new(&model, &cluster, space.clone(), wl.clone());
             black_box(runner.run(&dbv));
         });
+        let pruned = bench(&format!("search-sweep-pruned/{name}"), 1, 10, || {
+            let runner = TaskRunner::new(&model, &cluster, space.clone(), wl.clone());
+            black_box(runner.run_pruned(&dbv));
+        });
+        println!(
+            "    -> pool vs seed: {:.2}x  | pool+prune vs seed: {:.2}x",
+            seed.median_ms() / pooled.median_ms(),
+            seed.median_ms() / pruned.median_ms()
+        );
     }
 }

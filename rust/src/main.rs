@@ -3,6 +3,7 @@
 //! Subcommands mirror the paper's workflow (§4.1):
 //!   build-db     offline profiling → perf database JSON (PerfDatabase)
 //!   search       TaskRunner + Pareto analyzer + Generator
+//!   sweep        batch search: many (ISL, OSL, SLA) scenarios, one pass
 //!   simulate     ground-truth discrete-event simulation of one config
 //!   experiment   regenerate a paper table/figure (fig1..fig8, table1)
 //!   serve        run the TCP config-search service
@@ -36,7 +37,13 @@ USAGE:
   aiconfigurator search     --model <name> [--gpu h100] [--gpus-per-node 8]
                             [--nodes 1] [--framework trtllm] --isl N --osl N
                             [--ttft MS] [--speed TOK_S] [--modes agg,disagg]
-                            [--top 5] [--out-dir DIR] [--pjrt ARTIFACTS_DIR]
+                            [--top 5] [--prune] [--out-dir DIR]
+                            [--pjrt ARTIFACTS_DIR]
+  aiconfigurator sweep      --model <name> [--gpu h100] [--gpus-per-node 8]
+                            [--nodes 1] [--framework trtllm] [--prune]
+                            [--modes agg,disagg]
+                            --scenarios ISL:OSL:TTFT:SPEED[,ISL:OSL:TTFT:SPEED...]
+                            (TTFT in ms or 'inf'; SPEED in tokens/s/user or 0)
   aiconfigurator build-db   --model <name> [--gpu h100] [--framework trtllm]
                             [--nodes 1] --out FILE.json
   aiconfigurator simulate   --model <name> [--gpu h100] [--framework trtllm]
@@ -60,6 +67,7 @@ fn main() {
     let (flags, positional) = parse_flags(&args[1..]);
     let result = match cmd.as_str() {
         "search" => cmd_search(&flags),
+        "sweep" => cmd_sweep(&flags),
         "build-db" => cmd_build_db(&flags),
         "simulate" => cmd_simulate(&flags),
         "experiment" => cmd_experiment(&positional, &flags),
@@ -159,21 +167,33 @@ fn cmd_search(f: &HashMap<String, String>) -> anyhow::Result<()> {
     }
 
     let runner = TaskRunner::new(&ctx.model, &ctx.cluster, space, wl.clone());
+    let prune = f.contains_key("prune");
     // Optional PJRT-backed hot path (AOT Pallas kernel via the runtime).
     let report = if let Some(dir) = f.get("pjrt") {
         eprintln!("loading AOT artifacts from {dir} (PJRT interp on the hot path)...");
         let svc = PjrtService::start(std::path::Path::new(dir), db.grids().to_vec())?;
         let oracle = PjrtOracle { svc: &svc, db: &db };
-        runner.run(&oracle)
+        if prune {
+            runner.run_pruned(&oracle)
+        } else {
+            runner.run(&oracle)
+        }
+    } else if prune {
+        runner.run_pruned(&db as &dyn LatencyOracle)
     } else {
         runner.run(&db as &dyn LatencyOracle)
     };
 
     let analysis = pareto::analyze(&report.evaluated, &wl.sla);
     println!(
-        "searched {} configs ({} candidates) in {:.2}s — median {:.2} ms/config; {} SLA-feasible",
+        "searched {} configs ({} candidates{}) in {:.2}s — median {:.2} ms/config; {} SLA-feasible",
         report.configs_priced,
         report.evaluated.len(),
+        if report.pruned > 0 {
+            format!(", {} pruned in-sweep", report.pruned)
+        } else {
+            String::new()
+        },
         report.elapsed_s,
         report.median_config_ms,
         analysis.feasible.len()
@@ -207,6 +227,89 @@ fn cmd_search(f: &HashMap<String, String>) -> anyhow::Result<()> {
     } else {
         println!("no configuration satisfies the SLA — relax --ttft/--speed");
     }
+    Ok(())
+}
+
+/// Parse `ISL:OSL:TTFT:SPEED` (TTFT may be `inf`).
+fn parse_scenario(model: &str, s: &str) -> anyhow::Result<WorkloadSpec> {
+    let parts: Vec<&str> = s.split(':').collect();
+    anyhow::ensure!(
+        parts.len() == 4,
+        "scenario '{s}' must be ISL:OSL:TTFT:SPEED (TTFT in ms or 'inf')"
+    );
+    let isl: u32 =
+        parts[0].parse().map_err(|_| anyhow::anyhow!("bad ISL in scenario '{s}'"))?;
+    let osl: u32 =
+        parts[1].parse().map_err(|_| anyhow::anyhow!("bad OSL in scenario '{s}'"))?;
+    let ttft: f64 = if parts[2].eq_ignore_ascii_case("inf") {
+        f64::INFINITY
+    } else {
+        parts[2].parse().map_err(|_| anyhow::anyhow!("bad TTFT in scenario '{s}'"))?
+    };
+    let speed: f64 =
+        parts[3].parse().map_err(|_| anyhow::anyhow!("bad SPEED in scenario '{s}'"))?;
+    anyhow::ensure!(isl > 0 && osl > 0, "scenario '{s}': ISL and OSL must be positive");
+    anyhow::ensure!(
+        ttft > 0.0 && speed >= 0.0,
+        "scenario '{s}': TTFT must be positive (or 'inf') and SPEED non-negative"
+    );
+    Ok(WorkloadSpec::new(model, isl, osl, ttft, speed))
+}
+
+fn cmd_sweep(f: &HashMap<String, String>) -> anyhow::Result<()> {
+    let ctx = load_ctx(f)?;
+    let raw = f
+        .get("scenarios")
+        .ok_or_else(|| anyhow::anyhow!("--scenarios is required (ISL:OSL:TTFT:SPEED,...)"))?;
+    let scenarios: Vec<WorkloadSpec> = raw
+        .split(',')
+        .filter(|s| !s.trim().is_empty())
+        .map(|s| parse_scenario(ctx.model.name, s.trim()))
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    anyhow::ensure!(!scenarios.is_empty(), "--scenarios named no scenarios");
+
+    eprintln!("building performance database (offline profiling of silicon)...");
+    let db = PerfDatabase::build(&ctx.silicon, &ctx.model, Dtype::Fp8, 0xA1C0);
+
+    let mut space = SearchSpace::default_for(&ctx.model, ctx.framework);
+    if let Some(modes) = f.get("modes") {
+        space.modes = modes.split(',').filter_map(ServingMode::parse).collect();
+        anyhow::ensure!(!space.modes.is_empty(), "--modes must name agg and/or disagg");
+    }
+    let runner = TaskRunner::new(&ctx.model, &ctx.cluster, space, scenarios[0].clone());
+    let opts = aiconfigurator::search::RunOptions { prune: f.contains_key("prune") };
+
+    let t0 = std::time::Instant::now();
+    let reports = runner.run_sweep_with(&db as &dyn LatencyOracle, &scenarios, &opts);
+    let total_s = t0.elapsed().as_secs_f64();
+
+    println!(
+        "{:>6} {:>6} {:>9} {:>8} {:>8} {:>9} {:>7}  best configuration",
+        "isl", "osl", "ttft<=ms", "speed>=", "configs", "feasible", "pruned"
+    );
+    for (wl, report) in scenarios.iter().zip(&reports) {
+        let analysis = pareto::analyze(&report.evaluated, &wl.sla);
+        let best = analysis
+            .best()
+            .map(|b| format!("{:.1} tok/s/GPU  {}", b.est.thru_per_gpu, b.cand.label()))
+            .unwrap_or_else(|| "(none meets the SLA)".to_string());
+        println!(
+            "{:>6} {:>6} {:>9.0} {:>8.1} {:>8} {:>9} {:>7}  {}",
+            wl.isl,
+            wl.osl,
+            wl.sla.ttft_ms,
+            wl.sla.min_speed,
+            report.configs_priced,
+            analysis.feasible.len(),
+            report.pruned,
+            best
+        );
+    }
+    println!(
+        "swept {} scenarios in {:.2}s (shared engine grid + memoized oracle)",
+        scenarios.len(),
+        total_s
+    );
     Ok(())
 }
 

@@ -1,6 +1,12 @@
 //! Pareto Analyzer (paper §4.1 step 4): filter SLA-valid configurations,
 //! extract the throughput-vs-speed Pareto frontier (Fig 1 / Fig 8), and
 //! rank the feasible set by per-GPU system throughput.
+//!
+//! The frontier extraction is a sort-based O(n log n) scan (the seed
+//! implementation was the O(n²) dominated-by-anything filter), and
+//! [`FrontierAccumulator`] provides the *incremental* variant the search
+//! engine uses to discard dominated candidates while the sweep is still
+//! running instead of after it.
 
 use crate::config::Sla;
 use crate::perfmodel::PerfEstimate;
@@ -21,31 +27,58 @@ impl Analysis {
     }
 }
 
-/// Is `a` Pareto-dominated by `b` in (speed, throughput) maximization?
-fn dominated(a: &PerfEstimate, b: &PerfEstimate) -> bool {
-    b.speed >= a.speed
-        && b.thru_per_gpu >= a.thru_per_gpu
-        && (b.speed > a.speed || b.thru_per_gpu > a.thru_per_gpu)
-}
-
 /// Extract the Pareto frontier over (generation speed, per-GPU
 /// throughput) from an arbitrary point set. Returns indices into the
 /// input, sorted by speed ascending.
+///
+/// Identical (speed, thru) pairs are deduplicated deterministically:
+/// the **smallest input index** represents each frontier point (the
+/// seed's retain-based filter kept ties in sort-dependent order; the
+/// tie rule is now explicit and tested).
 pub fn frontier_indices(points: &[PerfEstimate]) -> Vec<usize> {
-    let mut idx: Vec<usize> = (0..points.len()).collect();
-    idx.retain(|&i| !points.iter().enumerate().any(|(j, b)| j != i && dominated(&points[i], b)));
-    // Deduplicate identical (speed, thru) pairs.
+    let n = points.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    // Sort by speed desc, thru desc, index asc — wholly deterministic.
+    let mut idx: Vec<usize> = (0..n).collect();
     idx.sort_by(|&a, &b| {
-        points[a]
+        points[b]
             .speed
-            .partial_cmp(&points[b].speed)
+            .partial_cmp(&points[a].speed)
             .unwrap()
-            .then(points[a].thru_per_gpu.partial_cmp(&points[b].thru_per_gpu).unwrap())
+            .then(points[b].thru_per_gpu.partial_cmp(&points[a].thru_per_gpu).unwrap())
+            .then(a.cmp(&b))
     });
-    idx.dedup_by(|&mut a, &mut b| {
-        points[a].speed == points[b].speed && points[a].thru_per_gpu == points[b].thru_per_gpu
-    });
-    idx
+    // One pass over speed groups: a group survives iff its max throughput
+    // strictly exceeds the best throughput seen at any higher speed
+    // (otherwise some faster point dominates it).
+    let mut out = Vec::new();
+    let mut best_thru_above = f64::NEG_INFINITY;
+    let mut i = 0;
+    while i < n {
+        let speed = points[idx[i]].speed;
+        let mut j = i;
+        while j < n && points[idx[j]].speed == speed {
+            j += 1;
+        }
+        // Within the group the sort puts max-thru first.
+        let group_max_thru = points[idx[i]].thru_per_gpu;
+        if group_max_thru > best_thru_above {
+            let mut rep = usize::MAX;
+            for &k in &idx[i..j] {
+                if points[k].thru_per_gpu == group_max_thru {
+                    rep = rep.min(k);
+                }
+            }
+            out.push(rep);
+            best_thru_above = group_max_thru;
+        }
+        i = j;
+    }
+    // The scan ran speed-descending; report speed-ascending as before.
+    out.reverse();
+    out
 }
 
 /// Analyze a search result against an SLA.
@@ -58,12 +91,69 @@ pub fn analyze(evaluated: &[Evaluated], sla: &Sla) -> Analysis {
     Analysis { feasible, frontier }
 }
 
+/// Incremental (speed, thru) Pareto frontier for in-sweep pruning.
+///
+/// `offer` answers "is this point on the running frontier?" in O(k)
+/// (k = current frontier size, typically tens) and evicts members the
+/// new point dominates. Exact duplicates of a live member are rejected,
+/// so an accumulator-pruned sweep also deduplicates — the frontier and
+/// the argmax are preserved exactly (tested against the unpruned path).
+#[derive(Clone, Debug, Default)]
+pub struct FrontierAccumulator {
+    /// Live frontier points as (speed, thru).
+    pts: Vec<(f64, f64)>,
+    /// How many offers were rejected (dominated or duplicate).
+    rejected: usize,
+}
+
+impl FrontierAccumulator {
+    pub fn new() -> FrontierAccumulator {
+        FrontierAccumulator::default()
+    }
+
+    /// Offer a point. Returns `true` if it joins the running frontier
+    /// (caller keeps it), `false` if it is dominated by — or equal to —
+    /// an existing member (caller discards it).
+    pub fn offer(&mut self, speed: f64, thru: f64) -> bool {
+        for &(s, t) in &self.pts {
+            if s >= speed && t >= thru {
+                self.rejected += 1;
+                return false;
+            }
+        }
+        // Not dominated: evict anything the new point dominates.
+        self.pts.retain(|&(s, t)| !(speed >= s && thru >= t));
+        self.pts.push((speed, thru));
+        true
+    }
+
+    /// Convenience for estimates.
+    pub fn offer_est(&mut self, est: &PerfEstimate) -> bool {
+        self.offer(est.speed, est.thru_per_gpu)
+    }
+
+    /// Current frontier size.
+    pub fn len(&self) -> usize {
+        self.pts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pts.is_empty()
+    }
+
+    /// Points rejected so far (the pruning win).
+    pub fn rejected(&self) -> usize {
+        self.rejected
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::config::{Candidate, EngineConfig, ParallelSpec, RuntimeFlags};
     use crate::frameworks::Framework;
     use crate::models::Dtype;
+    use crate::util::rng::Rng;
 
     fn ev(speed: f64, thru: f64, ttft: f64) -> Evaluated {
         let eng = EngineConfig {
@@ -86,6 +176,31 @@ mod tests {
         }
     }
 
+    /// The seed's O(n²) implementation, kept as the test reference.
+    fn frontier_bruteforce(points: &[PerfEstimate]) -> Vec<usize> {
+        let dominated = |a: &PerfEstimate, b: &PerfEstimate| {
+            b.speed >= a.speed
+                && b.thru_per_gpu >= a.thru_per_gpu
+                && (b.speed > a.speed || b.thru_per_gpu > a.thru_per_gpu)
+        };
+        let mut idx: Vec<usize> = (0..points.len()).collect();
+        idx.retain(|&i| {
+            !points.iter().enumerate().any(|(j, b)| j != i && dominated(&points[i], b))
+        });
+        idx.sort_by(|&a, &b| {
+            points[a]
+                .speed
+                .partial_cmp(&points[b].speed)
+                .unwrap()
+                .then(points[a].thru_per_gpu.partial_cmp(&points[b].thru_per_gpu).unwrap())
+        });
+        idx.dedup_by(|&mut a, &mut b| {
+            points[a].speed == points[b].speed
+                && points[a].thru_per_gpu == points[b].thru_per_gpu
+        });
+        idx
+    }
+
     #[test]
     fn frontier_excludes_dominated() {
         let pts = vec![
@@ -98,6 +213,105 @@ mod tests {
         let f = frontier_indices(&pts);
         assert!(f.contains(&0) && f.contains(&1) && f.contains(&2) && f.contains(&4));
         assert!(!f.contains(&3));
+    }
+
+    #[test]
+    fn sorted_scan_matches_bruteforce_on_random_sets() {
+        let mut rng = Rng::new(0xFA57);
+        for case in 0..200 {
+            let n = 1 + rng.below(120) as usize;
+            let pts: Vec<PerfEstimate> = (0..n)
+                .map(|_| {
+                    // Coarse values make ties and duplicates likely.
+                    ev(
+                        (rng.f64() * 8.0).round() * 5.0,
+                        (rng.f64() * 8.0).round() * 25.0,
+                        100.0,
+                    )
+                    .est
+                })
+                .collect();
+            let fast = frontier_indices(&pts);
+            let slow = frontier_bruteforce(&pts);
+            // Same frontier by value, same order.
+            let val = |v: &[usize]| -> Vec<(f64, f64)> {
+                v.iter().map(|&i| (pts[i].speed, pts[i].thru_per_gpu)).collect()
+            };
+            assert_eq!(val(&fast), val(&slow), "case {case}");
+        }
+    }
+
+    #[test]
+    fn tie_breaking_is_deterministic_smallest_index() {
+        // Three identical frontier points plus a dominated one: exactly
+        // one representative survives and it is the smallest index.
+        let pts = vec![
+            ev(10.0, 50.0, 1.0).est, // duplicate (idx 0) — representative
+            ev(10.0, 50.0, 1.0).est, // duplicate (idx 1)
+            ev(10.0, 50.0, 1.0).est, // duplicate (idx 2)
+            ev(5.0, 40.0, 1.0).est,  // dominated
+            ev(20.0, 20.0, 1.0).est,
+        ];
+        assert_eq!(frontier_indices(&pts), vec![0, 4]);
+        // Same set, duplicates shuffled: representative follows the index.
+        let pts2 = vec![
+            ev(20.0, 20.0, 1.0).est,
+            ev(10.0, 50.0, 1.0).est, // smallest duplicate index now 1
+            ev(10.0, 50.0, 1.0).est,
+        ];
+        assert_eq!(frontier_indices(&pts2), vec![1, 0]);
+    }
+
+    #[test]
+    fn frontier_sorted_by_speed_ascending() {
+        let mut rng = Rng::new(7);
+        let pts: Vec<PerfEstimate> =
+            (0..60).map(|_| ev(1.0 + rng.f64() * 50.0, rng.f64() * 500.0, 1.0).est).collect();
+        let f = frontier_indices(&pts);
+        assert!(f.windows(2).all(|w| pts[w[0]].speed < pts[w[1]].speed));
+    }
+
+    #[test]
+    fn accumulator_matches_batch_frontier() {
+        let mut rng = Rng::new(0xACC);
+        for _ in 0..100 {
+            let n = 1 + rng.below(80) as usize;
+            let pts: Vec<PerfEstimate> = (0..n)
+                .map(|_| {
+                    ev((rng.f64() * 6.0).round() * 7.0, (rng.f64() * 6.0).round() * 13.0, 1.0)
+                        .est
+                })
+                .collect();
+            let mut acc = FrontierAccumulator::new();
+            let mut kept = Vec::new();
+            for (i, p) in pts.iter().enumerate() {
+                if acc.offer_est(p) {
+                    kept.push(i);
+                }
+            }
+            // Every batch-frontier value must be represented among the
+            // kept candidates (the accumulator is a conservative filter:
+            // it may keep points later discovered to be dominated, but
+            // can never lose a frontier point).
+            let batch = frontier_indices(&pts);
+            for &i in &batch {
+                assert!(
+                    kept.iter().any(|&k| {
+                        pts[k].speed == pts[i].speed
+                            && pts[k].thru_per_gpu == pts[i].thru_per_gpu
+                    }),
+                    "lost frontier point {i}"
+                );
+            }
+            assert_eq!(acc.rejected() + kept.len(), n);
+            // And the final frontier of the kept subset equals the batch one.
+            let kept_pts: Vec<PerfEstimate> = kept.iter().map(|&k| pts[k]).collect();
+            let sub = frontier_indices(&kept_pts);
+            let vals = |ids: &[usize], ps: &[PerfEstimate]| -> Vec<(f64, f64)> {
+                ids.iter().map(|&i| (ps[i].speed, ps[i].thru_per_gpu)).collect()
+            };
+            assert_eq!(vals(&sub, &kept_pts), vals(&batch, &pts));
+        }
     }
 
     #[test]
@@ -121,5 +335,6 @@ mod tests {
         let a = analyze(&[], &Sla { ttft_ms: 1.0, min_speed: 1.0 });
         assert!(a.best().is_none());
         assert!(a.frontier.is_empty());
+        assert!(frontier_indices(&[]).is_empty());
     }
 }

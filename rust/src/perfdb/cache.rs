@@ -1,0 +1,271 @@
+//! Memoizing [`LatencyOracle`] wrapper for batch sweeps.
+//!
+//! A multi-scenario sweep ([`crate::search::TaskRunner::run_sweep`])
+//! prices thousands of candidate configurations whose operator lists
+//! overlap heavily — the same GEMM/attention/collective shapes recur
+//! across engines and across (ISL, OSL, SLA) scenarios. Every oracle in
+//! this crate is deterministic per op, so answers can be memoized: the
+//! cache key is the op's full shape **excluding its `count`** (latency
+//! is per instance), with float fields keyed by bit pattern.
+//!
+//! The map is sharded to keep lock contention negligible under the
+//! worker pool, and hit/miss counters are exposed for the sweep bench.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::ops::Op;
+
+use super::LatencyOracle;
+
+const SHARDS: usize = 16;
+
+/// Hashable identity of an op instance (count excluded).
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+struct OpKey {
+    tag: u8,
+    a: u64,
+    b: u64,
+    c: u64,
+    d: u64,
+    e: u64,
+}
+
+fn key_of(op: &Op) -> OpKey {
+    match *op {
+        Op::Gemm { m, n, k, dtype, .. } => {
+            OpKey { tag: 0, a: m, b: n, c: k, d: dtype as u64, e: 0 }
+        }
+        Op::AttnPrefill { q_tokens, kv_len, heads, head_dim, causal_frac, .. } => OpKey {
+            tag: 1,
+            a: q_tokens,
+            b: kv_len,
+            c: heads,
+            d: head_dim,
+            e: causal_frac.to_bits(),
+        },
+        Op::AttnDecode { batch, kv_len, heads, head_dim, kv_token_bytes, .. } => OpKey {
+            tag: 2,
+            a: batch,
+            b: kv_len,
+            c: heads,
+            d: head_dim,
+            e: kv_token_bytes.to_bits(),
+        },
+        Op::MoeGemm { tokens, experts, inter, hidden, dtype, imbalance, .. } => OpKey {
+            tag: 3,
+            a: tokens,
+            b: experts,
+            c: inter ^ (hidden << 32),
+            d: dtype as u64,
+            e: imbalance.to_bits(),
+        },
+        Op::AllReduce { bytes, gpus, .. } => {
+            OpKey { tag: 4, a: bytes.to_bits(), b: gpus as u64, c: 0, d: 0, e: 0 }
+        }
+        Op::AllGather { bytes, gpus, .. } => {
+            OpKey { tag: 5, a: bytes.to_bits(), b: gpus as u64, c: 0, d: 0, e: 0 }
+        }
+        Op::AllToAll { bytes, gpus, .. } => {
+            OpKey { tag: 6, a: bytes.to_bits(), b: gpus as u64, c: 0, d: 0, e: 0 }
+        }
+        Op::P2p { bytes, cross_node, .. } => {
+            OpKey { tag: 7, a: bytes.to_bits(), b: cross_node as u64, c: 0, d: 0, e: 0 }
+        }
+        Op::Elementwise { bytes, .. } => {
+            OpKey { tag: 8, a: bytes.to_bits(), b: 0, c: 0, d: 0, e: 0 }
+        }
+    }
+}
+
+fn shard_of(k: &OpKey) -> usize {
+    use std::hash::{Hash, Hasher};
+    let mut h = std::collections::hash_map::DefaultHasher::new();
+    k.hash(&mut h);
+    (h.finish() as usize) % SHARDS
+}
+
+/// Thread-safe memo over any deterministic oracle.
+pub struct MemoOracle<'a> {
+    inner: &'a dyn LatencyOracle,
+    shards: [Mutex<HashMap<OpKey, f64>>; SHARDS],
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl<'a> MemoOracle<'a> {
+    pub fn new(inner: &'a dyn LatencyOracle) -> MemoOracle<'a> {
+        MemoOracle {
+            inner,
+            shards: std::array::from_fn(|_| Mutex::new(HashMap::new())),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// (hits, misses) so far.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+    }
+
+    /// Distinct ops memoized.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl LatencyOracle for MemoOracle<'_> {
+    fn op_latency_us(&self, op: &Op) -> f64 {
+        let key = key_of(op);
+        let shard = &self.shards[shard_of(&key)];
+        if let Some(&v) = shard.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return v;
+        }
+        // Compute outside the lock: misses on the same key may race and
+        // recompute, but the oracle is deterministic so the value they
+        // insert is identical.
+        let v = self.inner.op_latency_us(op);
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        shard.lock().unwrap().insert(key, v);
+        v
+    }
+
+    /// Answer hits from the memo and forward only the misses to the
+    /// inner oracle **in one batched call**, so backends with per-call
+    /// overhead (the PJRT-executed kernel overrides `op_latencies_us`
+    /// with a single padded execution) keep their batching even when
+    /// wrapped. For loop-based inner oracles this produces the same
+    /// values in the same per-op order as the default implementation.
+    fn op_latencies_us(&self, ops: &[Op]) -> Vec<f64> {
+        let mut out = vec![0.0f64; ops.len()];
+        let mut miss_idx: Vec<usize> = Vec::new();
+        let mut miss_ops: Vec<Op> = Vec::new();
+        for (i, op) in ops.iter().enumerate() {
+            let key = key_of(op);
+            let shard = &self.shards[shard_of(&key)];
+            if let Some(&v) = shard.lock().unwrap().get(&key) {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                out[i] = v;
+            } else {
+                miss_idx.push(i);
+                miss_ops.push(*op);
+            }
+        }
+        if !miss_ops.is_empty() {
+            let vals = self.inner.op_latencies_us(&miss_ops);
+            self.misses.fetch_add(miss_ops.len() as u64, Ordering::Relaxed);
+            for ((&i, op), &v) in miss_idx.iter().zip(&miss_ops).zip(&vals) {
+                out[i] = v;
+                let key = key_of(op);
+                self.shards[shard_of(&key)].lock().unwrap().insert(key, v);
+            }
+        }
+        out
+    }
+
+    /// Route the whole-step sum through the batched path above (the
+    /// default would loop `op_latency_us` and defeat inner batching).
+    fn step_latency_us(&self, ops: &[Op]) -> f64 {
+        self.op_latencies_us(ops)
+            .iter()
+            .zip(ops)
+            .map(|(l, o)| l * o.count() as f64)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frameworks::Framework;
+    use crate::hardware::{h100_sxm, ClusterSpec};
+    use crate::models::Dtype;
+    use crate::silicon::Silicon;
+
+    fn sil() -> Silicon {
+        Silicon::new(ClusterSpec::new(h100_sxm(), 8, 1), Framework::TrtLlm.profile())
+    }
+
+    #[test]
+    fn memo_matches_inner_exactly() {
+        let s = sil();
+        let memo = MemoOracle::new(&s);
+        let ops = [
+            Op::Gemm { m: 128, n: 4096, k: 4096, dtype: Dtype::Fp8, count: 3 },
+            Op::AttnDecode {
+                batch: 16,
+                kv_len: 2048,
+                heads: 32,
+                head_dim: 128,
+                kv_token_bytes: 1024.0,
+                count: 2,
+            },
+            Op::AllReduce { bytes: 1e7, gpus: 8, count: 1 },
+            Op::Elementwise { bytes: 1e6, count: 5 },
+        ];
+        for op in &ops {
+            let truth = LatencyOracle::op_latency_us(&s, op);
+            assert_eq!(memo.op_latency_us(op), truth); // miss
+            assert_eq!(memo.op_latency_us(op), truth); // hit — bit-identical
+        }
+        let (hits, misses) = memo.stats();
+        assert_eq!(misses, ops.len() as u64);
+        assert_eq!(hits, ops.len() as u64);
+        // step_latency_us goes through the memo too.
+        let step_truth = LatencyOracle::step_latency_us(&s, &ops);
+        assert_eq!(memo.step_latency_us(&ops), step_truth);
+    }
+
+    #[test]
+    fn count_is_not_part_of_the_key() {
+        let s = sil();
+        let memo = MemoOracle::new(&s);
+        let a = Op::Gemm { m: 64, n: 512, k: 512, dtype: Dtype::Fp16, count: 1 };
+        let b = Op::Gemm { m: 64, n: 512, k: 512, dtype: Dtype::Fp16, count: 64 };
+        memo.op_latency_us(&a);
+        memo.op_latency_us(&b);
+        assert_eq!(memo.stats(), (1, 1), "same shape at different counts must share an entry");
+        assert_eq!(memo.len(), 1);
+    }
+
+    #[test]
+    fn distinct_shapes_get_distinct_entries() {
+        let s = sil();
+        let memo = MemoOracle::new(&s);
+        memo.op_latency_us(&Op::Gemm { m: 1, n: 512, k: 512, dtype: Dtype::Fp16, count: 1 });
+        memo.op_latency_us(&Op::Gemm { m: 2, n: 512, k: 512, dtype: Dtype::Fp16, count: 1 });
+        memo.op_latency_us(&Op::Gemm { m: 1, n: 512, k: 512, dtype: Dtype::Fp8, count: 1 });
+        assert_eq!(memo.len(), 3);
+    }
+
+    #[test]
+    fn concurrent_use_is_consistent() {
+        let s = sil();
+        let memo = MemoOracle::new(&s);
+        let op = Op::AttnPrefill {
+            q_tokens: 1024,
+            kv_len: 1024,
+            heads: 32,
+            head_dim: 128,
+            causal_frac: 0.5,
+            count: 1,
+        };
+        let truth = LatencyOracle::op_latency_us(&s, &op);
+        std::thread::scope(|sc| {
+            for _ in 0..8 {
+                sc.spawn(|| {
+                    for _ in 0..100 {
+                        assert_eq!(memo.op_latency_us(&op), truth);
+                    }
+                });
+            }
+        });
+        assert_eq!(memo.len(), 1);
+    }
+}

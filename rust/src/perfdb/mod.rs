@@ -14,9 +14,12 @@
 //! semantics, verified against each other in integration tests.
 
 pub mod builder;
+pub mod cache;
 pub mod query;
 pub mod sol;
 pub mod tables;
+
+pub use cache::MemoOracle;
 
 use crate::frameworks::FrameworkProfile;
 use crate::hardware::ClusterSpec;

@@ -120,6 +120,37 @@ pub struct RateMatchResult {
     pub best: Option<usize>,
 }
 
+/// Algorithm 3 with **incremental Pareto pruning**: identical filtering
+/// and sweep order to [`rate_match`] (one shared loop body), but each
+/// composite is offered to a running (speed, throughput) frontier and
+/// discarded immediately when dominated — the evaluated set stays
+/// frontier-sized instead of O(max_x · max_y · pairs). The accumulator
+/// may be shared with the aggregated sweep so pruning is global across
+/// serving modes; `best` is then the argmax over the *kept* composites
+/// (a composite dominated by an externally offered point is discarded
+/// by design).
+pub fn rate_match_pruned(
+    prefill_prices: &[PoolPrice],
+    decode_prices: &[PoolPrice],
+    wl: &WorkloadSpec,
+    max_gpus: u32,
+    g_valid: &[u32],
+    max_x: u32,
+    max_y: u32,
+    acc: &mut crate::pareto::FrontierAccumulator,
+) -> RateMatchResult {
+    rate_match_core(
+        prefill_prices,
+        decode_prices,
+        wl,
+        max_gpus,
+        g_valid,
+        max_x,
+        max_y,
+        Some(acc),
+    )
+}
+
 /// `g_valid` restricts total GPU counts (e.g. multiples available on the
 /// cluster); empty slice = any count up to the cluster size.
 pub fn rate_match(
@@ -130,6 +161,23 @@ pub fn rate_match(
     g_valid: &[u32],
     max_x: u32,
     max_y: u32,
+) -> RateMatchResult {
+    rate_match_core(prefill_prices, decode_prices, wl, max_gpus, g_valid, max_x, max_y, None)
+}
+
+/// One loop body for both variants, so the filters and sweep order can
+/// never desynchronize. Ties on throughput keep the first-seen
+/// composite in either mode.
+#[allow(clippy::too_many_arguments)]
+fn rate_match_core(
+    prefill_prices: &[PoolPrice],
+    decode_prices: &[PoolPrice],
+    wl: &WorkloadSpec,
+    max_gpus: u32,
+    g_valid: &[u32],
+    max_x: u32,
+    max_y: u32,
+    mut acc: Option<&mut crate::pareto::FrontierAccumulator>,
 ) -> RateMatchResult {
     let mut evaluated = Vec::new();
     let mut best: Option<usize> = None;
@@ -155,9 +203,14 @@ pub fn rate_match(
                         continue;
                     }
                     let est = compose(p, d, x, y, wl);
+                    if let Some(acc) = acc.as_deref_mut() {
+                        if !acc.offer_est(&est) {
+                            continue;
+                        }
+                    }
                     evaluated.push((x, y, pi, di, est));
                     let i = evaluated.len() - 1;
-                    if best.is_none_or(|b| est.thru_per_gpu > evaluated[b].4.thru_per_gpu) {
+                    if best.map_or(true, |b| est.thru_per_gpu > evaluated[b].4.thru_per_gpu) {
                         best = Some(i);
                     }
                 }
@@ -222,6 +275,38 @@ mod tests {
         assert!(!res.evaluated.is_empty());
         for (x, y, _, _, _) in &res.evaluated {
             assert_eq!(x * 2 + y * 2, 8);
+        }
+    }
+
+    #[test]
+    fn pruned_rate_match_keeps_best_and_frontier() {
+        let w = wl();
+        let p = [pp(100.0, 5.0, 1), pp(300.0, 8.0, 2)];
+        let d = [pp(25.0, 1.0, 1), pp(40.0, 1.5, 2)];
+        let full = rate_match(&p, &d, &w, 32, &[], 8, 16);
+        let mut acc = crate::pareto::FrontierAccumulator::new();
+        let pruned = rate_match_pruned(&p, &d, &w, 32, &[], 8, 16, &mut acc);
+        assert!(!pruned.evaluated.is_empty());
+        assert!(
+            pruned.evaluated.len() < full.evaluated.len(),
+            "pruning should discard dominated composites ({} vs {})",
+            pruned.evaluated.len(),
+            full.evaluated.len()
+        );
+        // The argmax-throughput composite survives pruning exactly.
+        let best_full = full.evaluated[full.best.unwrap()].4.thru_per_gpu;
+        let best_pruned = pruned.evaluated[pruned.best.unwrap()].4.thru_per_gpu;
+        assert_eq!(best_full, best_pruned);
+        // Every frontier value of the full sweep is present in the pruned set.
+        let ests: Vec<_> = full.evaluated.iter().map(|e| e.4).collect();
+        for &i in &crate::pareto::frontier_indices(&ests) {
+            let e = &full.evaluated[i].4;
+            assert!(
+                pruned.evaluated.iter().any(|(_, _, _, _, q)| {
+                    q.speed == e.speed && q.thru_per_gpu == e.thru_per_gpu
+                }),
+                "frontier point lost in pruning"
+            );
         }
     }
 

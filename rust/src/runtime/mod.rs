@@ -12,12 +12,21 @@
 //! it to the [`LatencyOracle`] interface used by the search path — this
 //! is also exactly the dynamic-batching shape the config-search service
 //! needs (many concurrent searches funneling queries into one executor).
+//!
+//! ## The `pjrt` cargo feature
+//!
+//! The PJRT path needs the `xla` crate (xla_extension bindings), which
+//! is a heavyweight native dependency this offline build does not ship.
+//! The real implementation is therefore gated behind the off-by-default
+//! `pjrt` feature; the default build substitutes API-compatible stubs
+//! whose `PjrtService::start` fails with a clear error, so every caller
+//! (CLI `--pjrt`, service artifacts mode, artifact-gated tests and
+//! examples) compiles unchanged and degrades gracefully to the native
+//! interpolation path.
 
 pub mod manifest;
 
-use std::path::{Path, PathBuf};
-use std::sync::mpsc;
-use std::sync::Mutex;
+use std::path::Path;
 
 use crate::ops::Op;
 use crate::perfdb::tables::{query_for, GRID_LEN};
@@ -35,66 +44,41 @@ pub const QUERY_BATCH_SMALL: usize = 256;
 pub const MOE_SCENARIOS: usize = 256;
 pub const MOE_EXPERTS: usize = 128;
 
-enum Job {
-    Interp {
-        tids: Vec<i32>,
-        coords: Vec<f32>,
-        resp: mpsc::Sender<anyhow::Result<Vec<f32>>>,
-    },
-    Moe {
-        u: Vec<f32>,
-        alpha: Vec<f32>,
-        params: Vec<f32>,
-        resp: mpsc::Sender<anyhow::Result<(Vec<f32>, Vec<f32>)>>,
-    },
-    Shutdown,
-}
+// ---------------------------------------------------------------------------
+// Stub implementation (default build, no `pjrt` feature).
+// ---------------------------------------------------------------------------
 
-/// Thread-safe handle to the PJRT evaluator thread.
+/// Thread-safe handle to the PJRT evaluator thread (stub: the default
+/// build has no XLA runtime; `start` always errors).
+#[cfg(not(feature = "pjrt"))]
 pub struct PjrtService {
-    tx: Mutex<mpsc::Sender<Job>>,
-    handle: Option<std::thread::JoinHandle<()>>,
+    _priv: (),
 }
 
+#[cfg(not(feature = "pjrt"))]
 impl PjrtService {
-    /// Load artifacts from `dir` (expects `interp.hlo.txt`,
-    /// `moe_powerlaw.hlo.txt`, `manifest.json`) and bind the packed
-    /// grids of `db` as the interpolation surface.
+    /// Load artifacts from `dir` and bind `grids` as the interpolation
+    /// surface. The stub validates the payload shape, then reports that
+    /// the runtime is unavailable.
     pub fn start(dir: &Path, grids: Vec<f32>) -> anyhow::Result<PjrtService> {
         anyhow::ensure!(grids.len() == GRID_LEN, "grid payload length {}", grids.len());
-        let m = Manifest::load(&dir.join("manifest.json"))?;
-        m.check_contract()?;
-        let interp_path: PathBuf = dir.join("interp.hlo.txt");
-        let interp_small_path: PathBuf = dir.join("interp_small.hlo.txt");
-        let moe_path: PathBuf = dir.join("moe_powerlaw.hlo.txt");
-        anyhow::ensure!(interp_path.exists(), "missing {}", interp_path.display());
-        anyhow::ensure!(moe_path.exists(), "missing {}", moe_path.display());
-
-        let (tx, rx) = mpsc::channel::<Job>();
-        let (ready_tx, ready_rx) = mpsc::channel::<anyhow::Result<()>>();
-        let handle = std::thread::Builder::new()
-            .name("pjrt-eval".into())
-            .spawn(move || {
-                evaluator_thread(rx, ready_tx, &interp_path, &interp_small_path, &moe_path, grids)
-            })?;
-        ready_rx.recv()??;
-        Ok(PjrtService { tx: Mutex::new(tx), handle: Some(handle) })
+        anyhow::bail!(
+            "PJRT runtime unavailable: aiconfigurator was built without the `pjrt` \
+             feature (artifacts dir: {}). Rebuild with `--features pjrt` and a \
+             vendored `xla` crate, or drop the --pjrt/artifacts option to use the \
+             native interpolation path.",
+            dir.display()
+        )
     }
 
-    /// Evaluate interpolation queries. Arbitrary length — internally
-    /// chunked and padded to the AOT batch (8192).
+    /// Evaluate interpolation queries (stub: unreachable — `start` never
+    /// returns a service).
     pub fn interp(&self, tids: &[i32], coords: &[f32]) -> anyhow::Result<Vec<f32>> {
         anyhow::ensure!(coords.len() == tids.len() * 3, "coords shape mismatch");
-        let (rtx, rrx) = mpsc::channel();
-        self.tx
-            .lock()
-            .unwrap()
-            .send(Job::Interp { tids: tids.to_vec(), coords: coords.to_vec(), resp: rtx })
-            .map_err(|_| anyhow::anyhow!("pjrt evaluator thread gone"))?;
-        rrx.recv()?
+        anyhow::bail!("PJRT runtime unavailable (built without the `pjrt` feature)")
     }
 
-    /// Evaluate MoE power-law scenarios (S ≤ 256 per call; padded).
+    /// Evaluate MoE power-law scenarios (stub).
     pub fn moe(
         &self,
         u: &[f32],
@@ -104,175 +88,298 @@ impl PjrtService {
         let s = alpha.len();
         anyhow::ensure!(s <= MOE_SCENARIOS, "too many scenarios: {s}");
         anyhow::ensure!(u.len() == s * MOE_EXPERTS && params.len() == s * 3, "shape mismatch");
-        let (rtx, rrx) = mpsc::channel();
-        self.tx
-            .lock()
-            .unwrap()
-            .send(Job::Moe {
-                u: u.to_vec(),
-                alpha: alpha.to_vec(),
-                params: params.to_vec(),
-                resp: rtx,
-            })
-            .map_err(|_| anyhow::anyhow!("pjrt evaluator thread gone"))?;
-        rrx.recv()?
+        anyhow::bail!("PJRT runtime unavailable (built without the `pjrt` feature)")
     }
 }
 
-impl Drop for PjrtService {
-    fn drop(&mut self) {
-        let _ = self.tx.lock().unwrap().send(Job::Shutdown);
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
-        }
-    }
-}
-
-fn evaluator_thread(
-    rx: mpsc::Receiver<Job>,
-    ready: mpsc::Sender<anyhow::Result<()>>,
-    interp_path: &Path,
-    interp_small_path: &Path,
-    moe_path: &Path,
-    grids: Vec<f32>,
-) {
-    let init = (|| -> anyhow::Result<_> {
-        let client = xla::PjRtClient::cpu()?;
-        let load = |p: &Path| -> anyhow::Result<xla::PjRtLoadedExecutable> {
-            let proto = xla::HloModuleProto::from_text_file(p)?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            Ok(client.compile(&comp)?)
-        };
-        let interp = load(interp_path)?;
-        // Older artifact sets may lack the small variant; fall back.
-        let interp_small = if interp_small_path.exists() {
-            Some(load(interp_small_path)?)
-        } else {
-            None
-        };
-        let moe = load(moe_path)?;
-        // The grid surface lives on-device for the whole session: one
-        // host->device upload instead of one per execute (§Perf iter 2).
-        let grids_buf = client.buffer_from_host_buffer::<f32>(
-            &grids,
-            &[
-                crate::perfdb::tables::NUM_TABLES,
-                crate::perfdb::tables::NX,
-                crate::perfdb::tables::NY,
-                crate::perfdb::tables::NZ,
-            ],
-            None,
-        )?;
-        Ok((client, interp, interp_small, moe, grids_buf))
-    })();
-    let (client, interp_exe, interp_small_exe, moe_exe, grids_buf) = match init {
-        Ok(v) => {
-            let _ = ready.send(Ok(()));
-            v
-        }
-        Err(e) => {
-            let _ = ready.send(Err(e));
-            return;
-        }
-    };
-
-    while let Ok(job) = rx.recv() {
-        match job {
-            Job::Shutdown => break,
-            Job::Interp { tids, coords, resp } => {
-                let _ = resp.send(run_interp(
-                    &client,
-                    &interp_exe,
-                    interp_small_exe.as_ref(),
-                    &grids_buf,
-                    &tids,
-                    &coords,
-                ));
-            }
-            Job::Moe { u, alpha, params, resp } => {
-                let _ = resp.send(run_moe(&moe_exe, &u, &alpha, &params));
-            }
-        }
-    }
-}
-
-fn run_interp(
-    client: &xla::PjRtClient,
-    exe: &xla::PjRtLoadedExecutable,
-    exe_small: Option<&xla::PjRtLoadedExecutable>,
-    grids: &xla::PjRtBuffer,
-    tids: &[i32],
-    coords: &[f32],
-) -> anyhow::Result<Vec<f32>> {
-    let mut out = Vec::with_capacity(tids.len());
-    let mut chunk_start = 0usize;
-    while chunk_start < tids.len() || (tids.is_empty() && chunk_start == 0) {
-        let remaining = tids.len() - chunk_start;
-        // Pick the variant: pay for 256 slots when ≤256 queries remain.
-        let (the_exe, batch) = match exe_small {
-            Some(s) if remaining <= QUERY_BATCH_SMALL => (s, QUERY_BATCH_SMALL),
-            _ => (exe, QUERY_BATCH),
-        };
-        let end = (chunk_start + batch).min(tids.len());
-        let n = end - chunk_start;
-        let mut t = vec![0i32; batch];
-        let mut c = vec![0f32; batch * 3];
-        t[..n].copy_from_slice(&tids[chunk_start..end]);
-        c[..n * 3].copy_from_slice(&coords[chunk_start * 3..end * 3]);
-        let t_buf = client.buffer_from_host_buffer::<i32>(&t, &[batch], None)?;
-        let c_buf = client.buffer_from_host_buffer::<f32>(&c, &[batch, 3], None)?;
-        // Buffer-level execute: the grid surface is device-resident.
-        let result = the_exe.execute_b::<&xla::PjRtBuffer>(&[grids, &t_buf, &c_buf])?[0][0]
-            .to_literal_sync()?;
-        let lat = result.to_tuple1()?;
-        let v: Vec<f32> = lat.to_vec()?;
-        out.extend_from_slice(&v[..n]);
-        chunk_start = end;
-        if n == 0 {
-            break;
-        }
-    }
-    Ok(out)
-}
-
-fn run_moe(
-    exe: &xla::PjRtLoadedExecutable,
-    u: &[f32],
-    alpha: &[f32],
-    params: &[f32],
-) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
-    let s = alpha.len();
-    let mut u_p = vec![0.5f32; MOE_SCENARIOS * MOE_EXPERTS];
-    let mut a_p = vec![0.5f32; MOE_SCENARIOS];
-    let mut p_p = vec![1.0f32; MOE_SCENARIOS * 3];
-    u_p[..u.len()].copy_from_slice(u);
-    a_p[..s].copy_from_slice(alpha);
-    p_p[..params.len()].copy_from_slice(params);
-    // Padding rows must stay numerically benign: x_max=2, total=1.
-    for i in s..MOE_SCENARIOS {
-        p_p[i * 3] = 1.0;
-        p_p[i * 3 + 1] = 2.0;
-        p_p[i * 3 + 2] = 1.0;
-    }
-    let u_lit = xla::Literal::vec1(&u_p).reshape(&[MOE_SCENARIOS as i64, MOE_EXPERTS as i64])?;
-    let a_lit = xla::Literal::vec1(&a_p);
-    let p_lit = xla::Literal::vec1(&p_p).reshape(&[MOE_SCENARIOS as i64, 3])?;
-    let result =
-        exe.execute::<xla::Literal>(&[u_lit, a_lit, p_lit])?[0][0].to_literal_sync()?;
-    let (loads, imb) = result.to_tuple2()?;
-    let loads_v: Vec<f32> = loads.to_vec()?;
-    let imb_v: Vec<f32> = imb.to_vec()?;
-    Ok((loads_v[..s * MOE_EXPERTS].to_vec(), imb_v[..s].to_vec()))
-}
-
-/// [`LatencyOracle`] over the PJRT-executed Pallas interpolation kernel:
-/// the hot path the service uses. Ops map to queries exactly as the
-/// native path does; unprofiled ops use the same SoL fallback.
+/// [`LatencyOracle`] over the PJRT-executed Pallas interpolation kernel.
+/// In the stub build it answers from the native database instead (it can
+/// never actually be constructed, since [`PjrtService::start`] errors,
+/// but call sites compile unchanged).
+#[cfg(not(feature = "pjrt"))]
 pub struct PjrtOracle<'a> {
     pub svc: &'a PjrtService,
     pub db: &'a PerfDatabase,
 }
 
+#[cfg(not(feature = "pjrt"))]
+impl LatencyOracle for PjrtOracle<'_> {
+    fn op_latency_us(&self, op: &Op) -> f64 {
+        match query_for(op) {
+            Some(q) => self.db.interp(&q) * q.scale,
+            None => sol::latency_us(&self.db.cluster, op),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Real implementation (requires the vendored `xla` crate).
+// ---------------------------------------------------------------------------
+
+#[cfg(feature = "pjrt")]
+mod pjrt_impl {
+    use std::path::{Path, PathBuf};
+    use std::sync::mpsc;
+    use std::sync::Mutex;
+
+    use super::{Manifest, MOE_EXPERTS, MOE_SCENARIOS, QUERY_BATCH, QUERY_BATCH_SMALL};
+    use crate::perfdb::tables::GRID_LEN;
+
+    enum Job {
+        Interp {
+            tids: Vec<i32>,
+            coords: Vec<f32>,
+            resp: mpsc::Sender<anyhow::Result<Vec<f32>>>,
+        },
+        Moe {
+            u: Vec<f32>,
+            alpha: Vec<f32>,
+            params: Vec<f32>,
+            resp: mpsc::Sender<anyhow::Result<(Vec<f32>, Vec<f32>)>>,
+        },
+        Shutdown,
+    }
+
+    /// Thread-safe handle to the PJRT evaluator thread.
+    pub struct PjrtService {
+        tx: Mutex<mpsc::Sender<Job>>,
+        handle: Option<std::thread::JoinHandle<()>>,
+    }
+
+    impl PjrtService {
+        /// Load artifacts from `dir` (expects `interp.hlo.txt`,
+        /// `moe_powerlaw.hlo.txt`, `manifest.json`) and bind the packed
+        /// grids of `db` as the interpolation surface.
+        pub fn start(dir: &Path, grids: Vec<f32>) -> anyhow::Result<PjrtService> {
+            anyhow::ensure!(grids.len() == GRID_LEN, "grid payload length {}", grids.len());
+            let m = Manifest::load(&dir.join("manifest.json"))?;
+            m.check_contract()?;
+            let interp_path: PathBuf = dir.join("interp.hlo.txt");
+            let interp_small_path: PathBuf = dir.join("interp_small.hlo.txt");
+            let moe_path: PathBuf = dir.join("moe_powerlaw.hlo.txt");
+            anyhow::ensure!(interp_path.exists(), "missing {}", interp_path.display());
+            anyhow::ensure!(moe_path.exists(), "missing {}", moe_path.display());
+
+            let (tx, rx) = mpsc::channel::<Job>();
+            let (ready_tx, ready_rx) = mpsc::channel::<anyhow::Result<()>>();
+            let handle = std::thread::Builder::new()
+                .name("pjrt-eval".into())
+                .spawn(move || {
+                    evaluator_thread(
+                        rx,
+                        ready_tx,
+                        &interp_path,
+                        &interp_small_path,
+                        &moe_path,
+                        grids,
+                    )
+                })?;
+            ready_rx.recv()??;
+            Ok(PjrtService { tx: Mutex::new(tx), handle: Some(handle) })
+        }
+
+        /// Evaluate interpolation queries. Arbitrary length — internally
+        /// chunked and padded to the AOT batch (8192).
+        pub fn interp(&self, tids: &[i32], coords: &[f32]) -> anyhow::Result<Vec<f32>> {
+            anyhow::ensure!(coords.len() == tids.len() * 3, "coords shape mismatch");
+            let (rtx, rrx) = mpsc::channel();
+            self.tx
+                .lock()
+                .unwrap()
+                .send(Job::Interp { tids: tids.to_vec(), coords: coords.to_vec(), resp: rtx })
+                .map_err(|_| anyhow::anyhow!("pjrt evaluator thread gone"))?;
+            rrx.recv()?
+        }
+
+        /// Evaluate MoE power-law scenarios (S ≤ 256 per call; padded).
+        pub fn moe(
+            &self,
+            u: &[f32],
+            alpha: &[f32],
+            params: &[f32],
+        ) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
+            let s = alpha.len();
+            anyhow::ensure!(s <= MOE_SCENARIOS, "too many scenarios: {s}");
+            anyhow::ensure!(
+                u.len() == s * MOE_EXPERTS && params.len() == s * 3,
+                "shape mismatch"
+            );
+            let (rtx, rrx) = mpsc::channel();
+            self.tx
+                .lock()
+                .unwrap()
+                .send(Job::Moe {
+                    u: u.to_vec(),
+                    alpha: alpha.to_vec(),
+                    params: params.to_vec(),
+                    resp: rtx,
+                })
+                .map_err(|_| anyhow::anyhow!("pjrt evaluator thread gone"))?;
+            rrx.recv()?
+        }
+    }
+
+    impl Drop for PjrtService {
+        fn drop(&mut self) {
+            let _ = self.tx.lock().unwrap().send(Job::Shutdown);
+            if let Some(h) = self.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+
+    fn evaluator_thread(
+        rx: mpsc::Receiver<Job>,
+        ready: mpsc::Sender<anyhow::Result<()>>,
+        interp_path: &Path,
+        interp_small_path: &Path,
+        moe_path: &Path,
+        grids: Vec<f32>,
+    ) {
+        let init = (|| -> anyhow::Result<_> {
+            let client = xla::PjRtClient::cpu()?;
+            let load = |p: &Path| -> anyhow::Result<xla::PjRtLoadedExecutable> {
+                let proto = xla::HloModuleProto::from_text_file(p)?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                Ok(client.compile(&comp)?)
+            };
+            let interp = load(interp_path)?;
+            // Older artifact sets may lack the small variant; fall back.
+            let interp_small = if interp_small_path.exists() {
+                Some(load(interp_small_path)?)
+            } else {
+                None
+            };
+            let moe = load(moe_path)?;
+            // The grid surface lives on-device for the whole session: one
+            // host->device upload instead of one per execute (§Perf iter 2).
+            let grids_buf = client.buffer_from_host_buffer::<f32>(
+                &grids,
+                &[
+                    crate::perfdb::tables::NUM_TABLES,
+                    crate::perfdb::tables::NX,
+                    crate::perfdb::tables::NY,
+                    crate::perfdb::tables::NZ,
+                ],
+                None,
+            )?;
+            Ok((client, interp, interp_small, moe, grids_buf))
+        })();
+        let (client, interp_exe, interp_small_exe, moe_exe, grids_buf) = match init {
+            Ok(v) => {
+                let _ = ready.send(Ok(()));
+                v
+            }
+            Err(e) => {
+                let _ = ready.send(Err(e));
+                return;
+            }
+        };
+
+        while let Ok(job) = rx.recv() {
+            match job {
+                Job::Shutdown => break,
+                Job::Interp { tids, coords, resp } => {
+                    let _ = resp.send(run_interp(
+                        &client,
+                        &interp_exe,
+                        interp_small_exe.as_ref(),
+                        &grids_buf,
+                        &tids,
+                        &coords,
+                    ));
+                }
+                Job::Moe { u, alpha, params, resp } => {
+                    let _ = resp.send(run_moe(&moe_exe, &u, &alpha, &params));
+                }
+            }
+        }
+    }
+
+    fn run_interp(
+        client: &xla::PjRtClient,
+        exe: &xla::PjRtLoadedExecutable,
+        exe_small: Option<&xla::PjRtLoadedExecutable>,
+        grids: &xla::PjRtBuffer,
+        tids: &[i32],
+        coords: &[f32],
+    ) -> anyhow::Result<Vec<f32>> {
+        let mut out = Vec::with_capacity(tids.len());
+        let mut chunk_start = 0usize;
+        while chunk_start < tids.len() || (tids.is_empty() && chunk_start == 0) {
+            let remaining = tids.len() - chunk_start;
+            // Pick the variant: pay for 256 slots when ≤256 queries remain.
+            let (the_exe, batch) = match exe_small {
+                Some(s) if remaining <= QUERY_BATCH_SMALL => (s, QUERY_BATCH_SMALL),
+                _ => (exe, QUERY_BATCH),
+            };
+            let end = (chunk_start + batch).min(tids.len());
+            let n = end - chunk_start;
+            let mut t = vec![0i32; batch];
+            let mut c = vec![0f32; batch * 3];
+            t[..n].copy_from_slice(&tids[chunk_start..end]);
+            c[..n * 3].copy_from_slice(&coords[chunk_start * 3..end * 3]);
+            let t_buf = client.buffer_from_host_buffer::<i32>(&t, &[batch], None)?;
+            let c_buf = client.buffer_from_host_buffer::<f32>(&c, &[batch, 3], None)?;
+            // Buffer-level execute: the grid surface is device-resident.
+            let result = the_exe.execute_b::<&xla::PjRtBuffer>(&[grids, &t_buf, &c_buf])?[0][0]
+                .to_literal_sync()?;
+            let lat = result.to_tuple1()?;
+            let v: Vec<f32> = lat.to_vec()?;
+            out.extend_from_slice(&v[..n]);
+            chunk_start = end;
+            if n == 0 {
+                break;
+            }
+        }
+        Ok(out)
+    }
+
+    fn run_moe(
+        exe: &xla::PjRtLoadedExecutable,
+        u: &[f32],
+        alpha: &[f32],
+        params: &[f32],
+    ) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
+        let s = alpha.len();
+        let mut u_p = vec![0.5f32; MOE_SCENARIOS * MOE_EXPERTS];
+        let mut a_p = vec![0.5f32; MOE_SCENARIOS];
+        let mut p_p = vec![1.0f32; MOE_SCENARIOS * 3];
+        u_p[..u.len()].copy_from_slice(u);
+        a_p[..s].copy_from_slice(alpha);
+        p_p[..params.len()].copy_from_slice(params);
+        // Padding rows must stay numerically benign: x_max=2, total=1.
+        for i in s..MOE_SCENARIOS {
+            p_p[i * 3] = 1.0;
+            p_p[i * 3 + 1] = 2.0;
+            p_p[i * 3 + 2] = 1.0;
+        }
+        let u_lit =
+            xla::Literal::vec1(&u_p).reshape(&[MOE_SCENARIOS as i64, MOE_EXPERTS as i64])?;
+        let a_lit = xla::Literal::vec1(&a_p);
+        let p_lit = xla::Literal::vec1(&p_p).reshape(&[MOE_SCENARIOS as i64, 3])?;
+        let result =
+            exe.execute::<xla::Literal>(&[u_lit, a_lit, p_lit])?[0][0].to_literal_sync()?;
+        let (loads, imb) = result.to_tuple2()?;
+        let loads_v: Vec<f32> = loads.to_vec()?;
+        let imb_v: Vec<f32> = imb.to_vec()?;
+        Ok((loads_v[..s * MOE_EXPERTS].to_vec(), imb_v[..s].to_vec()))
+    }
+}
+
+#[cfg(feature = "pjrt")]
+pub use pjrt_impl::PjrtService;
+
+/// [`LatencyOracle`] over the PJRT-executed Pallas interpolation kernel:
+/// the hot path the service uses. Ops map to queries exactly as the
+/// native path does; unprofiled ops use the same SoL fallback.
+#[cfg(feature = "pjrt")]
+pub struct PjrtOracle<'a> {
+    pub svc: &'a PjrtService,
+    pub db: &'a PerfDatabase,
+}
+
+#[cfg(feature = "pjrt")]
 impl LatencyOracle for PjrtOracle<'_> {
     fn op_latency_us(&self, op: &Op) -> f64 {
         match query_for(op) {
@@ -321,5 +428,24 @@ impl LatencyOracle for PjrtOracle<'_> {
             .zip(ops)
             .map(|(l, o)| l * o.count() as f64)
             .sum()
+    }
+}
+
+#[cfg(all(test, not(feature = "pjrt")))]
+mod stub_tests {
+    use super::*;
+    use crate::perfdb::tables::GRID_LEN;
+
+    #[test]
+    fn stub_start_reports_missing_feature() {
+        let err = PjrtService::start(Path::new("artifacts"), vec![0f32; GRID_LEN]).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("pjrt"), "unhelpful stub error: {msg}");
+    }
+
+    #[test]
+    fn stub_start_still_validates_grid_shape() {
+        let err = PjrtService::start(Path::new("artifacts"), vec![0f32; 3]).unwrap_err();
+        assert!(err.to_string().contains("grid payload length"));
     }
 }

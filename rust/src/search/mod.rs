@@ -2,9 +2,15 @@
 //! serving configurations from the workload descriptor, then evaluate
 //! every candidate with the serving-mode models — thousands of
 //! configurations in sub-second time on CPU (paper Table 1).
+//!
+//! The evaluation engine drains one unified job queue (aggregated +
+//! prefill + decode candidates) through a work-stealing worker pool,
+//! optionally pruning SLA-infeasible / Pareto-dominated candidates
+//! incrementally, and supports multi-scenario batch sweeps that share
+//! engine enumeration and memoized oracle queries.
 
 pub mod runner;
 pub mod space;
 
-pub use runner::{SearchReport, TaskRunner};
+pub use runner::{RunOptions, SearchReport, TaskRunner};
 pub use space::SearchSpace;

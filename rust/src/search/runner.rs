@@ -1,14 +1,32 @@
 //! TaskRunner: evaluate every candidate configuration against the
 //! workload (paper §4.1 step 3, "InferenceSession will iterate over all
 //! the candidate serving configurations"), in parallel across OS threads.
+//!
+//! The evaluation engine prices aggregated, prefill-pool and decode-pool
+//! candidates from **one unified job queue** drained by the shared
+//! atomic-cursor worker pool ([`crate::util::pool`]). Disaggregated pool
+//! pricing costs far more per job than an aggregated estimate, so the
+//! seed's static chunking (kept as [`TaskRunner::run_baseline`] for the
+//! `table1_search` bench) load-balances poorly; the shared queue keeps
+//! every worker busy until the queue drains.
+//!
+//! Two further engine features ride on the same plumbing:
+//! * **incremental pruning** ([`RunOptions::prune`]): SLA-infeasible and
+//!   Pareto-dominated candidates are discarded while the sweep runs, via
+//!   [`crate::pareto::FrontierAccumulator`];
+//! * **batch sweeps** ([`TaskRunner::run_sweep`]): many (ISL, OSL, SLA)
+//!   scenarios priced in one pass, sharing the structural engine grid and
+//!   a memoized oracle ([`crate::perfdb::MemoOracle`]).
 
 use std::time::Instant;
 
-use crate::config::{Candidate, ServingMode, WorkloadSpec};
+use crate::config::{Candidate, EngineConfig, ServingMode, WorkloadSpec};
 use crate::hardware::ClusterSpec;
 use crate::models::ModelArch;
-use crate::perfdb::LatencyOracle;
+use crate::pareto::FrontierAccumulator;
+use crate::perfdb::{LatencyOracle, MemoOracle};
 use crate::perfmodel::{self, disagg, PerfEstimate};
+use crate::util::pool;
 
 use super::space::SearchSpace;
 
@@ -25,10 +43,45 @@ pub struct SearchReport {
     pub evaluated: Vec<Evaluated>,
     /// Engine-level configurations priced (the paper's "configs" count).
     pub configs_priced: usize,
+    /// Candidates discarded by incremental SLA/Pareto pruning (0 when
+    /// pruning is off).
+    pub pruned: usize,
     /// Wall-clock of the whole search, seconds.
     pub elapsed_s: f64,
     /// Median per-configuration evaluation time, milliseconds.
     pub median_config_ms: f64,
+}
+
+/// Knobs for one search run.
+#[derive(Clone, Debug, Default)]
+pub struct RunOptions {
+    /// Discard SLA-infeasible and Pareto-dominated candidates during the
+    /// sweep (instead of carrying them to the analyzer). The feasible
+    /// frontier and the throughput argmax are preserved exactly; only
+    /// dominated/duplicate interior points are dropped.
+    pub prune: bool,
+}
+
+/// The candidate pools one scenario evaluates.
+struct EnginePools {
+    agg: Vec<EngineConfig>,
+    prefill: Vec<EngineConfig>,
+    decode: Vec<EngineConfig>,
+}
+
+/// A unit of work in the unified queue.
+#[derive(Clone, Copy)]
+enum Job {
+    Agg(usize),
+    Pre(usize),
+    Dec(usize),
+}
+
+/// Result of one job (returned through the worker pool in queue order).
+enum JobOut {
+    Agg(Evaluated),
+    Pre(disagg::PoolPrice),
+    Dec(disagg::PoolPrice),
 }
 
 /// Drives the search for one workload on one cluster.
@@ -59,10 +112,226 @@ impl<'a> TaskRunner<'a> {
         }
     }
 
+    /// Enumerate the candidate pools for one scenario from scratch.
+    fn pools_for(&self, wl: &WorkloadSpec) -> EnginePools {
+        let agg = if self.space.modes.contains(&ServingMode::Aggregated) {
+            self.space.engines(self.model, self.cluster, wl.isl, wl.osl)
+        } else {
+            Vec::new()
+        };
+        let (prefill, decode) = if self.space.modes.contains(&ServingMode::Disaggregated) {
+            (
+                self.space.prefill_engines(self.model, self.cluster, wl.isl),
+                self.space.engines(self.model, self.cluster, wl.isl, wl.osl),
+            )
+        } else {
+            (Vec::new(), Vec::new())
+        };
+        EnginePools { agg, prefill, decode }
+    }
+
     /// Evaluate the full space. The oracle is typically a
     /// [`crate::perfdb::PerfDatabase`]; passing the silicon instead gives
     /// the zero-interpolation-error upper bound used in ablations.
     pub fn run(&self, oracle: &dyn LatencyOracle) -> SearchReport {
+        self.run_with(oracle, &RunOptions::default())
+    }
+
+    /// [`TaskRunner::run`] with incremental SLA/Pareto pruning against
+    /// the workload's SLA.
+    pub fn run_pruned(&self, oracle: &dyn LatencyOracle) -> SearchReport {
+        self.run_with(oracle, &RunOptions { prune: true })
+    }
+
+    /// Evaluate the full space with explicit options.
+    pub fn run_with(&self, oracle: &dyn LatencyOracle, opts: &RunOptions) -> SearchReport {
+        let wl = self.workload.clone();
+        let pools = self.pools_for(&wl);
+        self.run_inner(oracle, &wl, &pools, opts)
+    }
+
+    /// Price many workload scenarios in one pass, sharing the structural
+    /// engine enumeration (grid built once, memory-filtered per
+    /// scenario) and memoizing oracle queries across the whole sweep.
+    /// Produces exactly the same reports as N independent [`Self::run`]
+    /// calls on the same scenarios (regression-tested), only faster.
+    pub fn run_sweep(
+        &self,
+        oracle: &dyn LatencyOracle,
+        scenarios: &[WorkloadSpec],
+    ) -> Vec<SearchReport> {
+        self.run_sweep_with(oracle, scenarios, &RunOptions::default())
+    }
+
+    /// [`Self::run_sweep`] with explicit options (pruning applies per
+    /// scenario, against each scenario's own SLA).
+    pub fn run_sweep_with(
+        &self,
+        oracle: &dyn LatencyOracle,
+        scenarios: &[WorkloadSpec],
+        opts: &RunOptions,
+    ) -> Vec<SearchReport> {
+        let memo = MemoOracle::new(oracle);
+        let agg_mode = self.space.modes.contains(&ServingMode::Aggregated);
+        let disagg_mode = self.space.modes.contains(&ServingMode::Disaggregated);
+        // Workload-independent structural grids, enumerated once.
+        let grid = if agg_mode || disagg_mode {
+            self.space.engine_grid(self.model, self.cluster)
+        } else {
+            Vec::new()
+        };
+        let pre_grid = if disagg_mode {
+            self.space.prefill_space().engine_grid(self.model, self.cluster)
+        } else {
+            Vec::new()
+        };
+        let mem = self.cluster.gpu.mem_bytes();
+        scenarios
+            .iter()
+            .map(|wl| {
+                let fits = |e: &EngineConfig, osl: u32| {
+                    perfmodel::memory::fits(self.model, mem, e, wl.isl, osl)
+                };
+                // Aggregated and decode pools are the same memory-filtered
+                // list (as in pools_for); filter once, share.
+                let filtered: Vec<EngineConfig> =
+                    grid.iter().filter(|e| fits(e, wl.osl)).copied().collect();
+                let pools = EnginePools {
+                    agg: if agg_mode { filtered.clone() } else { Vec::new() },
+                    prefill: pre_grid.iter().filter(|e| fits(e, 1)).copied().collect::<Vec<_>>(),
+                    decode: if disagg_mode { filtered } else { Vec::new() },
+                };
+                self.run_inner(&memo, wl, &pools, opts)
+            })
+            .collect()
+    }
+
+    /// The engine core: one unified job queue over all candidate kinds,
+    /// drained by the shared worker pool, then deterministic assembly
+    /// (aggregated candidates in engine order, disaggregated composites
+    /// in rate-match order — the same order the seed produced).
+    fn run_inner(
+        &self,
+        oracle: &dyn LatencyOracle,
+        wl: &WorkloadSpec,
+        pools: &EnginePools,
+        opts: &RunOptions,
+    ) -> SearchReport {
+        let t0 = Instant::now();
+        let mut jobs: Vec<Job> =
+            Vec::with_capacity(pools.agg.len() + pools.prefill.len() + pools.decode.len());
+        jobs.extend((0..pools.agg.len()).map(Job::Agg));
+        jobs.extend((0..pools.prefill.len()).map(Job::Pre));
+        jobs.extend((0..pools.decode.len()).map(Job::Dec));
+        let configs_priced = jobs.len();
+
+        let total_gpus = self.cluster.total_gpus();
+        let outcomes: Vec<(JobOut, f64)> = pool::scoped_map(&jobs, self.threads, |_, job| {
+            let t = Instant::now();
+            let out = match *job {
+                Job::Agg(i) => {
+                    let eng = &pools.agg[i];
+                    let replicas = (total_gpus / eng.parallel.gpus()).max(1);
+                    let cand = Candidate::Aggregated { engine: *eng, replicas };
+                    let est = perfmodel::estimate(oracle, self.model, self.cluster, &cand, wl);
+                    JobOut::Agg(Evaluated { cand, est })
+                }
+                Job::Pre(i) => JobOut::Pre(disagg::price_prefill(
+                    oracle,
+                    self.model,
+                    self.cluster,
+                    &pools.prefill[i],
+                    wl,
+                )),
+                Job::Dec(i) => JobOut::Dec(disagg::price_decode(
+                    oracle,
+                    self.model,
+                    self.cluster,
+                    &pools.decode[i],
+                    wl,
+                )),
+            };
+            (out, t.elapsed().as_secs_f64() * 1e3)
+        });
+
+        // ---- Deterministic assembly (queue order == input order). ------
+        let mut evaluated: Vec<Evaluated> = Vec::new();
+        let mut per_config_ms: Vec<f64> = Vec::with_capacity(outcomes.len());
+        let mut p_prices: Vec<disagg::PoolPrice> = Vec::with_capacity(pools.prefill.len());
+        let mut d_prices: Vec<disagg::PoolPrice> = Vec::with_capacity(pools.decode.len());
+        let mut acc = FrontierAccumulator::new();
+        let mut pruned = 0usize;
+        for (out, ms) in outcomes {
+            per_config_ms.push(ms);
+            match out {
+                JobOut::Agg(ev) => {
+                    if opts.prune && (!ev.est.meets(&wl.sla) || !acc.offer_est(&ev.est)) {
+                        pruned += 1;
+                    } else {
+                        evaluated.push(ev);
+                    }
+                }
+                JobOut::Pre(p) => p_prices.push(p),
+                JobOut::Dec(d) => d_prices.push(d),
+            }
+        }
+
+        if self.space.modes.contains(&ServingMode::Disaggregated) {
+            let res = if opts.prune {
+                let rejected_before = acc.rejected();
+                let full = disagg::rate_match_pruned(
+                    &p_prices,
+                    &d_prices,
+                    wl,
+                    total_gpus,
+                    &[],
+                    self.space.max_x,
+                    self.space.max_y,
+                    &mut acc,
+                );
+                pruned += acc.rejected() - rejected_before;
+                full
+            } else {
+                disagg::rate_match(
+                    &p_prices,
+                    &d_prices,
+                    wl,
+                    total_gpus,
+                    &[],
+                    self.space.max_x,
+                    self.space.max_y,
+                )
+            };
+            for (x, y, pi, di, est) in res.evaluated {
+                evaluated.push(Evaluated {
+                    cand: Candidate::Disaggregated {
+                        prefill: pools.prefill[pi],
+                        decode: pools.decode[di],
+                        x,
+                        y,
+                    },
+                    est,
+                });
+            }
+        }
+
+        per_config_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = per_config_ms.get(per_config_ms.len() / 2).copied().unwrap_or(0.0);
+        SearchReport {
+            evaluated,
+            configs_priced,
+            pruned,
+            elapsed_s: t0.elapsed().as_secs_f64(),
+            median_config_ms: median,
+        }
+    }
+
+    /// The seed implementation (static-chunk `thread::scope` over the
+    /// aggregated candidates, sequential disaggregated pricing). Kept
+    /// verbatim as the reference baseline for `benches/table1_search.rs`
+    /// so the work-stealing rework's wall-clock win stays measurable;
+    /// produces the same `evaluated` set as [`Self::run`].
+    pub fn run_baseline(&self, oracle: &dyn LatencyOracle) -> SearchReport {
         let t0 = Instant::now();
         let wl = &self.workload;
         let mut evaluated: Vec<Evaluated> = Vec::new();
@@ -74,9 +343,8 @@ impl<'a> TaskRunner<'a> {
             let engines = self.space.engines(self.model, self.cluster, wl.isl, wl.osl);
             configs_priced += engines.len();
             let n_threads = self.thread_count().min(engines.len().max(1));
-            let chunks: Vec<&[crate::config::EngineConfig]> = engines
-                .chunks(engines.len().div_ceil(n_threads).max(1))
-                .collect();
+            let chunks: Vec<&[EngineConfig]> =
+                engines.chunks(engines.len().div_ceil(n_threads).max(1)).collect();
             let results: Vec<Vec<(Evaluated, f64)>> = std::thread::scope(|s| {
                 let handles: Vec<_> = chunks
                     .into_iter()
@@ -86,11 +354,9 @@ impl<'a> TaskRunner<'a> {
                                 .iter()
                                 .map(|eng| {
                                     let t = Instant::now();
-                                    let replicas = (self.cluster.total_gpus()
-                                        / eng.parallel.gpus())
-                                    .max(1);
-                                    let cand =
-                                        Candidate::Aggregated { engine: *eng, replicas };
+                                    let replicas =
+                                        (self.cluster.total_gpus() / eng.parallel.gpus()).max(1);
+                                    let cand = Candidate::Aggregated { engine: *eng, replicas };
                                     let est = perfmodel::estimate(
                                         oracle,
                                         self.model,
@@ -98,10 +364,7 @@ impl<'a> TaskRunner<'a> {
                                         &cand,
                                         wl,
                                     );
-                                    (
-                                        Evaluated { cand, est },
-                                        t.elapsed().as_secs_f64() * 1e3,
-                                    )
+                                    (Evaluated { cand, est }, t.elapsed().as_secs_f64() * 1e3)
                                 })
                                 .collect()
                         })
@@ -161,13 +424,11 @@ impl<'a> TaskRunner<'a> {
         }
 
         per_config_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let median = per_config_ms
-            .get(per_config_ms.len() / 2)
-            .copied()
-            .unwrap_or(0.0);
+        let median = per_config_ms.get(per_config_ms.len() / 2).copied().unwrap_or(0.0);
         SearchReport {
             evaluated,
             configs_priced,
+            pruned: 0,
             elapsed_s: t0.elapsed().as_secs_f64(),
             median_config_ms: median,
         }
@@ -192,6 +453,7 @@ mod tests {
         let runner = TaskRunner::new(&model, &cluster, space, wl);
         let report = runner.run(&sil);
         assert!(report.configs_priced > 10, "{}", report.configs_priced);
+        assert_eq!(report.pruned, 0, "default run must not prune");
         assert!(report
             .evaluated
             .iter()
@@ -222,5 +484,82 @@ mod tests {
         for (a, b) in r1.evaluated.iter().zip(&r2.evaluated) {
             assert_eq!(a.est, b.est);
         }
+    }
+
+    #[test]
+    fn pooled_run_matches_seed_baseline() {
+        let model = by_name("qwen3-32b").unwrap();
+        let cluster = ClusterSpec::new(h100_sxm(), 8, 1);
+        let sil = Silicon::new(cluster, Framework::TrtLlm.profile());
+        let mut space = SearchSpace::default_for(&model, Framework::TrtLlm);
+        space.batch = vec![8, 32, 128];
+        space.max_x = 8;
+        space.max_y = 8;
+        let wl = WorkloadSpec::new("qwen3-32b", 2048, 256, 2000.0, 10.0);
+        let runner = TaskRunner::new(&model, &cluster, space, wl);
+        let pooled = runner.run(&sil);
+        let seed = runner.run_baseline(&sil);
+        assert_eq!(pooled.configs_priced, seed.configs_priced);
+        assert_eq!(pooled.evaluated.len(), seed.evaluated.len());
+        for (a, b) in pooled.evaluated.iter().zip(&seed.evaluated) {
+            assert_eq!(a.cand, b.cand);
+            assert_eq!(a.est, b.est);
+        }
+    }
+
+    #[test]
+    fn single_thread_run_matches_parallel() {
+        let model = by_name("llama3.1-8b").unwrap();
+        let cluster = ClusterSpec::new(h100_sxm(), 8, 1);
+        let sil = Silicon::new(cluster, Framework::TrtLlm.profile());
+        let mut space = SearchSpace::default_for(&model, Framework::TrtLlm);
+        space.batch = vec![8, 64];
+        space.max_x = 4;
+        space.max_y = 4;
+        let wl = WorkloadSpec::new("llama3.1-8b", 1024, 128, 2000.0, 10.0);
+        let mut r1 = TaskRunner::new(&model, &cluster, space.clone(), wl.clone());
+        r1.threads = 1;
+        let mut r8 = TaskRunner::new(&model, &cluster, space, wl);
+        r8.threads = 8;
+        let a = r1.run(&sil);
+        let b = r8.run(&sil);
+        assert_eq!(a.evaluated.len(), b.evaluated.len());
+        for (x, y) in a.evaluated.iter().zip(&b.evaluated) {
+            assert_eq!(x.cand, y.cand);
+            assert_eq!(x.est, y.est);
+        }
+    }
+
+    #[test]
+    fn pruned_run_preserves_frontier_and_best() {
+        let model = by_name("qwen3-32b").unwrap();
+        let cluster = ClusterSpec::new(h100_sxm(), 8, 1);
+        let sil = Silicon::new(cluster, Framework::TrtLlm.profile());
+        let mut space = SearchSpace::default_for(&model, Framework::TrtLlm);
+        space.batch = vec![8, 32, 128];
+        space.max_x = 8;
+        space.max_y = 16;
+        let wl = WorkloadSpec::new("qwen3-32b", 2048, 256, 2000.0, 10.0);
+        let runner = TaskRunner::new(&model, &cluster, space, wl.clone());
+        let full = runner.run(&sil);
+        let pruned = runner.run_pruned(&sil);
+        assert!(pruned.pruned > 0, "pruning should discard something");
+        assert!(pruned.evaluated.len() < full.evaluated.len());
+
+        let a_full = crate::pareto::analyze(&full.evaluated, &wl.sla);
+        let a_pruned = crate::pareto::analyze(&pruned.evaluated, &wl.sla);
+        // Same argmax.
+        assert_eq!(
+            a_full.best().unwrap().est.thru_per_gpu,
+            a_pruned.best().unwrap().est.thru_per_gpu
+        );
+        // Same frontier values.
+        let vals = |a: &crate::pareto::Analysis| -> Vec<(f64, f64)> {
+            a.frontier
+                .iter()
+                .map(|&i| (a.feasible[i].est.speed, a.feasible[i].est.thru_per_gpu))
+                .collect()
+        };
+        assert_eq!(vals(&a_full), vals(&a_pruned));
     }
 }

@@ -86,17 +86,14 @@ impl SearchSpace {
         true
     }
 
-    /// Enumerate all valid aggregated engine configurations (memory
-    /// pruned against the workload's isl+osl footprint).
-    pub fn engines(
-        &self,
-        model: &ModelArch,
-        cluster: &ClusterSpec,
-        isl: u32,
-        osl: u32,
-    ) -> Vec<EngineConfig> {
+    /// Enumerate the **structural** engine grid: every framework ×
+    /// dtype × layout × flag × batch combination that is valid for the
+    /// model and cluster, *before* any workload-dependent memory check.
+    /// Batch sweeps ([`crate::search::TaskRunner::run_sweep`]) enumerate
+    /// this once and re-filter per scenario, since only the memory prune
+    /// depends on (ISL, OSL).
+    pub fn engine_grid(&self, model: &ModelArch, cluster: &ClusterSpec) -> Vec<EngineConfig> {
         let mut out = Vec::new();
-        let mem = cluster.gpu.mem_bytes();
         for &fw in &self.frameworks {
             let fw_prof = fw.profile();
             for &dt in &self.dtypes {
@@ -114,7 +111,7 @@ impl SearchSpace {
                                 for &mnt in &self.max_num_tokens {
                                     for &cg in &self.cuda_graph {
                                         for &b in &self.batch {
-                                            let eng = EngineConfig {
+                                            out.push(EngineConfig {
                                                 framework: fw,
                                                 parallel: p,
                                                 batch: b,
@@ -127,10 +124,7 @@ impl SearchSpace {
                                                     chunked_prefill: fw_prof
                                                         .chunked_prefill_default,
                                                 },
-                                            };
-                                            if memory::fits(model, mem, &eng, isl, osl) {
-                                                out.push(eng);
-                                            }
+                                            });
                                         }
                                     }
                                 }
@@ -143,6 +137,30 @@ impl SearchSpace {
         out
     }
 
+    /// Enumerate all valid aggregated engine configurations (memory
+    /// pruned against the workload's isl+osl footprint).
+    pub fn engines(
+        &self,
+        model: &ModelArch,
+        cluster: &ClusterSpec,
+        isl: u32,
+        osl: u32,
+    ) -> Vec<EngineConfig> {
+        let mem = cluster.gpu.mem_bytes();
+        self.engine_grid(model, cluster)
+            .into_iter()
+            .filter(|eng| memory::fits(model, mem, eng, isl, osl))
+            .collect()
+    }
+
+    /// The prefill-pool sub-space (small batches, CUDA graphs pinned on).
+    pub fn prefill_space(&self) -> SearchSpace {
+        let mut sub = self.clone();
+        sub.batch = self.prefill_batch.clone();
+        sub.cuda_graph = vec![true];
+        sub
+    }
+
     /// Prefill-pool engine variants (small batch, chunking irrelevant).
     pub fn prefill_engines(
         &self,
@@ -150,11 +168,8 @@ impl SearchSpace {
         cluster: &ClusterSpec,
         isl: u32,
     ) -> Vec<EngineConfig> {
-        let mut sub = self.clone();
-        sub.batch = self.prefill_batch.clone();
-        sub.cuda_graph = vec![true];
         // Prefill pool holds only in-flight prompts (osl = 1).
-        sub.engines(model, cluster, isl, 1)
+        self.prefill_space().engines(model, cluster, isl, 1)
     }
 }
 

@@ -117,8 +117,6 @@ impl SearchServer {
 }
 
 fn handle_conn(stream: TcpStream, state: &State) -> anyhow::Result<()> {
-    let peer = stream.peer_addr()?;
-    log::debug!("connection from {peer}");
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = stream;
     let mut line = String::new();
@@ -162,8 +160,57 @@ pub fn handle_request_line(line: &str, state: &State) -> anyhow::Result<Json> {
 }
 
 pub fn handle_request(req: &Json, state: &State) -> anyhow::Result<Json> {
+    // Batch form: {"workloads": [wl, wl, ...]} prices many scenarios in
+    // one sweep (shared engine enumeration + memoized oracle queries).
+    if req.get("workloads").is_some() {
+        return handle_sweep_request(req, state);
+    }
     let t0 = Instant::now();
     let wl = WorkloadSpec::from_json(req.req("workload")?)?;
+    let ctx = request_ctx(req, state, &wl.model)?;
+
+    let runner = TaskRunner::new(&ctx.model, &ctx.cluster, ctx.space.clone(), wl.clone());
+    // PJRT hot path when the request matches the bound context.
+    let report = match &state.pjrt {
+        Some((pk, svc)) if *pk == ctx.key => {
+            let oracle = PjrtOracle { svc, db: &ctx.db };
+            runner.run(&oracle)
+        }
+        _ => runner.run(ctx.db.as_ref() as &dyn LatencyOracle),
+    };
+    let top_k = ctx.top_k;
+    let analysis = pareto::analyze(&report.evaluated, &wl.sla);
+
+    // Response.
+    let mut resp = Json::obj();
+    resp.set("status", json::s("ok"))
+        .set("configs_priced", json::num(report.configs_priced as f64))
+        .set("candidates", json::num(report.evaluated.len() as f64))
+        .set("feasible", json::num(analysis.feasible.len() as f64))
+        .set("elapsed_ms", json::num(t0.elapsed().as_secs_f64() * 1e3))
+        .set("top", top_json(&analysis, top_k));
+    if let Some(id) = req.get("id") {
+        resp.set("id", id.clone());
+    }
+    if let Some(best) = analysis.best() {
+        resp.set("launch", launch_json(&best.cand, &wl));
+    }
+    Ok(resp)
+}
+
+/// Deployment context parsed from a request's shared fields — one
+/// parser for both the single-workload and batch-sweep handlers so the
+/// two paths can never interpret request fields differently.
+struct ReqCtx {
+    model: crate::models::ModelArch,
+    cluster: ClusterSpec,
+    top_k: usize,
+    key: DbKey,
+    db: Arc<PerfDatabase>,
+    space: SearchSpace,
+}
+
+fn request_ctx(req: &Json, state: &State, model_name: &str) -> anyhow::Result<ReqCtx> {
     let gpu_name = req.str_or("gpu", "h100");
     let gpn = req.f64_or("gpus_per_node", 8.0) as u32;
     let nodes = req.f64_or("num_nodes", 1.0) as u32;
@@ -172,25 +219,15 @@ pub fn handle_request(req: &Json, state: &State) -> anyhow::Result<Json> {
     let top_k = req.f64_or("top_k", 5.0) as usize;
 
     let model =
-        by_name(&wl.model).ok_or_else(|| anyhow::anyhow!("unknown model '{}'", wl.model))?;
+        by_name(model_name).ok_or_else(|| anyhow::anyhow!("unknown model '{model_name}'"))?;
     let gpu =
         gpu_by_name(gpu_name).ok_or_else(|| anyhow::anyhow!("unknown gpu '{gpu_name}'"))?;
     let cluster = ClusterSpec::new(gpu, gpn, nodes);
 
     // Database: cached per context.
     let key: DbKey =
-        (wl.model.clone(), gpu_name.to_string(), gpn, nodes, fw.name().to_string());
-    let db = {
-        let mut dbs = state.dbs.lock().unwrap();
-        match dbs.get(&key) {
-            Some(db) => db.clone(),
-            None => {
-                let db = Arc::new(build_db(&key, state.seed)?);
-                dbs.insert(key.clone(), db.clone());
-                db
-            }
-        }
-    };
+        (model_name.to_string(), gpu_name.to_string(), gpn, nodes, fw.name().to_string());
+    let db = db_for(state, &key)?;
 
     // Search space (modes overridable per request).
     let mut space = SearchSpace::default_for(&model, fw);
@@ -201,19 +238,24 @@ pub fn handle_request(req: &Json, state: &State) -> anyhow::Result<Json> {
             .collect();
         anyhow::ensure!(!space.modes.is_empty(), "no valid modes");
     }
+    Ok(ReqCtx { model, cluster, top_k, key, db, space })
+}
 
-    let runner = TaskRunner::new(&model, &cluster, space, wl.clone());
-    // PJRT hot path when the request matches the bound context.
-    let report = match &state.pjrt {
-        Some((pk, svc)) if *pk == key => {
-            let oracle = PjrtOracle { svc, db: &db };
-            runner.run(&oracle)
+/// Fetch (or build and cache) the database for a context key.
+fn db_for(state: &State, key: &DbKey) -> anyhow::Result<Arc<PerfDatabase>> {
+    let mut dbs = state.dbs.lock().unwrap();
+    match dbs.get(key) {
+        Some(db) => Ok(db.clone()),
+        None => {
+            let db = Arc::new(build_db(key, state.seed)?);
+            dbs.insert(key.clone(), db.clone());
+            Ok(db)
         }
-        _ => runner.run(db.as_ref() as &dyn LatencyOracle),
-    };
-    let analysis = pareto::analyze(&report.evaluated, &wl.sla);
+    }
+}
 
-    // Response.
+/// Top-k feasible candidates as a JSON array.
+fn top_json(analysis: &pareto::Analysis, top_k: usize) -> Json {
     let mut top = Vec::new();
     for e in analysis.feasible.iter().take(top_k) {
         let mut o = Json::obj();
@@ -226,18 +268,61 @@ pub fn handle_request(req: &Json, state: &State) -> anyhow::Result<Json> {
             .set("thru_per_gpu", json::num(e.est.thru_per_gpu));
         top.push(o);
     }
+    Json::Arr(top)
+}
+
+/// Batch sweep: price every workload scenario in one TaskRunner pass
+/// (shared engine enumeration + memoized oracle), answering one result
+/// object per scenario.
+fn handle_sweep_request(req: &Json, state: &State) -> anyhow::Result<Json> {
+    let t0 = Instant::now();
+    let wls_json = req
+        .req("workloads")?
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("'workloads' must be an array"))?;
+    anyhow::ensure!(!wls_json.is_empty(), "'workloads' array is empty");
+    let wls: Vec<WorkloadSpec> = wls_json
+        .iter()
+        .map(WorkloadSpec::from_json)
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    anyhow::ensure!(
+        wls.iter().all(|w| w.model == wls[0].model),
+        "all workloads in a sweep must target the same model"
+    );
+    let ctx = request_ctx(req, state, &wls[0].model)?;
+    let top_k = ctx.top_k;
+
+    let runner = TaskRunner::new(&ctx.model, &ctx.cluster, ctx.space.clone(), wls[0].clone());
+    let reports = match &state.pjrt {
+        Some((pk, svc)) if *pk == ctx.key => {
+            let oracle = PjrtOracle { svc, db: &ctx.db };
+            runner.run_sweep(&oracle, &wls)
+        }
+        _ => runner.run_sweep(ctx.db.as_ref() as &dyn LatencyOracle, &wls),
+    };
+
+    let mut results = Vec::new();
+    for (wl, report) in wls.iter().zip(&reports) {
+        let analysis = pareto::analyze(&report.evaluated, &wl.sla);
+        let mut o = Json::obj();
+        o.set("isl", json::num(wl.isl as f64))
+            .set("osl", json::num(wl.osl as f64))
+            .set("configs_priced", json::num(report.configs_priced as f64))
+            .set("candidates", json::num(report.evaluated.len() as f64))
+            .set("feasible", json::num(analysis.feasible.len() as f64))
+            .set("top", top_json(&analysis, top_k));
+        if let Some(best) = analysis.best() {
+            o.set("launch", launch_json(&best.cand, wl));
+        }
+        results.push(o);
+    }
     let mut resp = Json::obj();
     resp.set("status", json::s("ok"))
-        .set("configs_priced", json::num(report.configs_priced as f64))
-        .set("candidates", json::num(report.evaluated.len() as f64))
-        .set("feasible", json::num(analysis.feasible.len() as f64))
+        .set("scenarios", json::num(wls.len() as f64))
         .set("elapsed_ms", json::num(t0.elapsed().as_secs_f64() * 1e3))
-        .set("top", Json::Arr(top));
+        .set("results", Json::Arr(results));
     if let Some(id) = req.get("id") {
         resp.set("id", id.clone());
-    }
-    if let Some(best) = analysis.best() {
-        resp.set("launch", launch_json(&best.cand, &wl));
     }
     Ok(resp)
 }
@@ -323,6 +408,60 @@ mod tests {
         assert_eq!(st.dbs.lock().unwrap().len(), 1);
         handle_request(&req, &st).unwrap();
         assert_eq!(st.dbs.lock().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn sweep_request_matches_independent_requests() {
+        let st = state();
+        let wl_a = WorkloadSpec::new("llama3.1-8b", 1024, 128, 2000.0, 10.0);
+        let wl_b = WorkloadSpec::new("llama3.1-8b", 512, 64, 3000.0, 5.0);
+
+        let mut sweep_req = Json::obj();
+        sweep_req
+            .set("workloads", Json::Arr(vec![wl_a.to_json(), wl_b.to_json()]))
+            .set("gpu", json::s("h100"))
+            .set("gpus_per_node", json::num(8.0))
+            .set("num_nodes", json::num(1.0))
+            .set("framework", json::s("trtllm"));
+        let sweep = handle_request(&sweep_req, &st).unwrap();
+        assert_eq!(sweep.req_str("status").unwrap(), "ok");
+        assert_eq!(sweep.req_f64("scenarios").unwrap(), 2.0);
+        let results = sweep.req("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 2);
+
+        for (wl, res) in [wl_a, wl_b].iter().zip(results) {
+            let single = handle_request(
+                &make_request(wl, "h100", 8, 1, Framework::TrtLlm, 1),
+                &st,
+            )
+            .unwrap();
+            assert_eq!(
+                res.req_f64("feasible").unwrap(),
+                single.req_f64("feasible").unwrap()
+            );
+            let t_sweep = res.req("top").unwrap().as_arr().unwrap()[0]
+                .req_f64("thru_per_gpu")
+                .unwrap();
+            let t_single = single.req("top").unwrap().as_arr().unwrap()[0]
+                .req_f64("thru_per_gpu")
+                .unwrap();
+            assert_eq!(t_sweep, t_single);
+        }
+    }
+
+    #[test]
+    fn sweep_rejects_mixed_models() {
+        let st = state();
+        let mut req = Json::obj();
+        req.set(
+            "workloads",
+            Json::Arr(vec![
+                WorkloadSpec::new("llama3.1-8b", 512, 64, 2000.0, 5.0).to_json(),
+                WorkloadSpec::new("qwen3-32b", 512, 64, 2000.0, 5.0).to_json(),
+            ]),
+        );
+        let err = handle_request(&req, &st).unwrap_err();
+        assert!(err.to_string().contains("same model"));
     }
 
     #[test]

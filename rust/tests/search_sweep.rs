@@ -1,0 +1,138 @@
+//! Regression gates for the parallel search-engine rework: the batch
+//! sweep API must be a pure optimization (bit-identical reports to
+//! independent runs), the pooled engine must match the seed baseline,
+//! and in-sweep pruning must preserve the analysis outcome.
+
+use aiconfigurator::config::WorkloadSpec;
+use aiconfigurator::frameworks::Framework;
+use aiconfigurator::hardware::{h100_sxm, ClusterSpec};
+use aiconfigurator::models::{by_name, Dtype};
+use aiconfigurator::pareto;
+use aiconfigurator::perfdb::{LatencyOracle, MemoOracle, PerfDatabase};
+use aiconfigurator::search::{SearchSpace, TaskRunner};
+use aiconfigurator::silicon::Silicon;
+
+fn fixture(model: &str) -> (ClusterSpec, aiconfigurator::models::ModelArch, PerfDatabase) {
+    let cluster = ClusterSpec::new(h100_sxm(), 8, 1);
+    let silicon = Silicon::new(cluster, Framework::TrtLlm.profile());
+    let m = by_name(model).unwrap();
+    let db = PerfDatabase::build(&silicon, &m, Dtype::Fp8, 0x5EED);
+    (cluster, m, db)
+}
+
+fn scenarios(model: &str) -> Vec<WorkloadSpec> {
+    vec![
+        WorkloadSpec::new(model, 2048, 256, 1500.0, 20.0),
+        WorkloadSpec::new(model, 2048, 256, 1000.0, 40.0),
+        WorkloadSpec::new(model, 1024, 128, f64::INFINITY, 0.0),
+        WorkloadSpec::new(model, 4096, 256, 2000.0, 10.0),
+    ]
+}
+
+#[test]
+fn run_sweep_equals_independent_runs() {
+    let (cluster, model, db) = fixture("llama3.1-8b");
+    let mut space = SearchSpace::default_for(&model, Framework::TrtLlm);
+    space.batch = vec![8, 32, 128];
+    space.max_x = 8;
+    space.max_y = 8;
+    let wls = scenarios("llama3.1-8b");
+
+    let runner = TaskRunner::new(&model, &cluster, space.clone(), wls[0].clone());
+    let swept = runner.run_sweep(&db, &wls);
+    assert_eq!(swept.len(), wls.len());
+
+    for (wl, sweep_report) in wls.iter().zip(&swept) {
+        let single =
+            TaskRunner::new(&model, &cluster, space.clone(), wl.clone()).run(&db);
+        assert_eq!(
+            sweep_report.configs_priced, single.configs_priced,
+            "configs priced diverge for isl={} osl={}",
+            wl.isl, wl.osl
+        );
+        assert_eq!(
+            sweep_report.evaluated.len(),
+            single.evaluated.len(),
+            "candidate counts diverge for isl={} osl={}",
+            wl.isl,
+            wl.osl
+        );
+        for (a, b) in sweep_report.evaluated.iter().zip(&single.evaluated) {
+            assert_eq!(a.cand, b.cand);
+            assert_eq!(a.est, b.est, "estimates must be bit-identical (memoized oracle)");
+        }
+    }
+}
+
+#[test]
+fn sweep_memo_is_transparent() {
+    // A MemoOracle-wrapped run equals the raw-oracle run exactly.
+    let (cluster, model, db) = fixture("llama3.1-8b");
+    let mut space = SearchSpace::default_for(&model, Framework::TrtLlm);
+    space.batch = vec![8, 64];
+    let wl = WorkloadSpec::new("llama3.1-8b", 1024, 128, 2000.0, 10.0);
+    let runner = TaskRunner::new(&model, &cluster, space, wl);
+    let raw = runner.run(&db);
+    let memo = MemoOracle::new(&db as &dyn LatencyOracle);
+    let memod = runner.run(&memo);
+    assert!(memo.len() > 0, "memo should have been populated");
+    for (a, b) in raw.evaluated.iter().zip(&memod.evaluated) {
+        assert_eq!(a.est, b.est);
+    }
+}
+
+#[test]
+fn sweep_repeated_scenario_is_cache_hit_identical() {
+    // The same scenario twice in one sweep: reports must be identical.
+    let (cluster, model, db) = fixture("llama3.1-8b");
+    let mut space = SearchSpace::default_for(&model, Framework::TrtLlm);
+    space.batch = vec![8, 32];
+    let wl = WorkloadSpec::new("llama3.1-8b", 2048, 256, 1500.0, 20.0);
+    let runner = TaskRunner::new(&model, &cluster, space, wl.clone());
+    let reports = runner.run_sweep(&db, &[wl.clone(), wl]);
+    assert_eq!(reports[0].evaluated.len(), reports[1].evaluated.len());
+    for (a, b) in reports[0].evaluated.iter().zip(&reports[1].evaluated) {
+        assert_eq!(a.cand, b.cand);
+        assert_eq!(a.est, b.est);
+    }
+}
+
+#[test]
+fn pruned_sweep_preserves_analysis_per_scenario() {
+    let (cluster, model, db) = fixture("qwen3-32b");
+    let mut space = SearchSpace::default_for(&model, Framework::TrtLlm);
+    space.batch = vec![8, 32, 128];
+    space.max_x = 8;
+    space.max_y = 16;
+    let wls = scenarios("qwen3-32b");
+    let runner = TaskRunner::new(&model, &cluster, space, wls[0].clone());
+    let full = runner.run_sweep(&db, &wls);
+    let pruned = runner.run_sweep_with(
+        &db,
+        &wls,
+        &aiconfigurator::search::RunOptions { prune: true },
+    );
+    for ((wl, f), p) in wls.iter().zip(&full).zip(&pruned) {
+        let af = pareto::analyze(&f.evaluated, &wl.sla);
+        let ap = pareto::analyze(&p.evaluated, &wl.sla);
+        assert!(p.evaluated.len() <= f.evaluated.len());
+        match (af.best(), ap.best()) {
+            (None, None) => {}
+            (Some(a), Some(b)) => {
+                assert_eq!(a.est.thru_per_gpu, b.est.thru_per_gpu);
+                let vals = |a: &pareto::Analysis| -> Vec<(f64, f64)> {
+                    a.frontier
+                        .iter()
+                        .map(|&i| (a.feasible[i].est.speed, a.feasible[i].est.thru_per_gpu))
+                        .collect()
+                };
+                assert_eq!(vals(&af), vals(&ap));
+            }
+            (a, b) => panic!(
+                "pruned feasibility diverged: full={} pruned={}",
+                a.is_some(),
+                b.is_some()
+            ),
+        }
+    }
+}

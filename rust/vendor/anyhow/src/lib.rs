@@ -1,0 +1,123 @@
+//! Minimal, dependency-free shim of the `anyhow` API surface used by
+//! this repository (the build environment has no crates.io access).
+//!
+//! Provides [`Error`], [`Result`], and the `anyhow!` / `bail!` /
+//! `ensure!` macros. Any `std::error::Error + Send + Sync + 'static`
+//! converts into [`Error`] via `?`, and the `{:#}` alternate display
+//! used by the CLI prints the same message as `{}` (this shim keeps a
+//! flat message instead of a context chain — `.context()` is not part
+//! of the subset).
+
+use std::fmt;
+
+/// A flattened error: message only (no backtrace, no cause chain).
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable (mirrors `anyhow::Error::msg`).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// NOTE: `Error` deliberately does NOT implement `std::error::Error`;
+// that is what makes the blanket `From` below coherent (the same trick
+// real anyhow uses).
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `Result` with a defaulted error type, as in anyhow.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: `{}`", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read_to_string("/definitely/not/a/path")?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fail().unwrap_err();
+        assert!(!e.to_string().is_empty());
+    }
+
+    #[test]
+    fn macros() {
+        let e: Error = anyhow!("x = {}", 7);
+        assert_eq!(format!("{e}"), "x = 7");
+        assert_eq!(format!("{e:#}"), "x = 7");
+        assert_eq!(format!("{e:?}"), "x = 7");
+
+        fn f(ok: bool) -> Result<u32> {
+            ensure!(ok, "wanted {}", true);
+            Ok(1)
+        }
+        assert_eq!(f(true).unwrap(), 1);
+        assert!(f(false).is_err());
+
+        fn g() -> Result<()> {
+            bail!("boom {}", 3)
+        }
+        assert_eq!(g().unwrap_err().to_string(), "boom 3");
+    }
+
+    #[test]
+    fn ensure_without_message() {
+        fn f() -> Result<()> {
+            ensure!(1 + 1 == 3);
+            Ok(())
+        }
+        assert!(f().unwrap_err().to_string().contains("condition failed"));
+    }
+}

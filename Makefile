@@ -2,6 +2,7 @@
 #
 #   make verify     tier-1 gate: cargo build --release && cargo test -q
 #   make bench      search-engine benches (table1_search + sweep)
+#   make bench-plan capacity-planner bench (writes BENCH_plan.json)
 #   make bench-all  every bench target
 #   make artifacts  AOT-lower the Pallas kernels to HLO (needs jax; the
 #                   Rust side degrades gracefully when absent)
@@ -10,7 +11,7 @@
 RUST_DIR := rust
 PYTHON   ?= python3
 
-.PHONY: verify build test bench bench-all artifacts fmt clippy clean
+.PHONY: verify build test bench bench-plan bench-all artifacts fmt clippy clean
 
 verify:
 	cd $(RUST_DIR) && cargo build --release && cargo test -q
@@ -25,7 +26,10 @@ bench:
 	cd $(RUST_DIR) && cargo bench --bench table1_search
 	cd $(RUST_DIR) && cargo bench --bench sweep
 
-bench-all: bench
+bench-plan:
+	cd $(RUST_DIR) && cargo bench --bench planner
+
+bench-all: bench bench-plan
 	cd $(RUST_DIR) && cargo bench --bench interp_hot_path
 	cd $(RUST_DIR) && cargo bench --bench simulator
 	cd $(RUST_DIR) && cargo bench --bench experiments

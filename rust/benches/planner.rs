@@ -1,0 +1,105 @@
+//! Bench: capacity planner — cold plan (fresh per-leg memos each call,
+//! the CLI path) vs memo-warm plan (caller-owned memos reused across
+//! plans, the service path). The plan itself is deterministic either
+//! way; the warm path skips re-pricing operator latencies, so repeated
+//! what-if planning (different traffic curves, same fleet) gets cheap.
+//!
+//! Run: `cargo bench --bench planner` (or `make bench-plan`).
+//! Writes the measured medians to ../BENCH_plan.json.
+
+use aiconfigurator::config::WorkloadSpec;
+use aiconfigurator::frameworks::Framework;
+use aiconfigurator::hardware::{a100_sxm, h100_sxm, ClusterSpec};
+use aiconfigurator::models::by_name;
+use aiconfigurator::perfdb::{LatencyOracle, MemoOracle, PerfDatabase};
+use aiconfigurator::planner::{self, PlanSpec, TrafficModel};
+use aiconfigurator::silicon::Silicon;
+use aiconfigurator::util::bench::{bench, black_box};
+use aiconfigurator::util::json::{self, Json};
+
+fn main() {
+    let model_name = "llama3.1-8b";
+    let model = by_name(model_name).unwrap();
+    let framework = Framework::TrtLlm;
+    let legs = [ClusterSpec::new(h100_sxm(), 8, 1), ClusterSpec::new(a100_sxm(), 8, 1)];
+
+    // Databases are the offline artifact; build once outside the timers
+    // (Ampere profiles fp16 — no fp8 on that part).
+    let dbs: Vec<PerfDatabase> = legs
+        .iter()
+        .map(|c| {
+            let sil = Silicon::new(*c, framework.profile());
+            PerfDatabase::build(&sil, &model, c.gpu.preferred_kv_dtype(), 0xA1C0)
+        })
+        .collect();
+    let fleet: Vec<(ClusterSpec, &dyn LatencyOracle)> =
+        legs.iter().zip(&dbs).map(|(c, d)| (*c, d as &dyn LatencyOracle)).collect();
+
+    let spec = PlanSpec::new(
+        WorkloadSpec::new(model_name, 2048, 256, 2000.0, 20.0),
+        TrafficModel::Diurnal { peak_qps: 300.0, trough_qps: 10.0, period_h: 24.0 },
+        24,
+        1.0,
+    );
+
+    let windows = spec.windows;
+    let cold = bench(&format!("plan-cold-{windows}w-2legs/{model_name}"), 1, 8, || {
+        black_box(planner::plan(&model, framework, &spec, &fleet).unwrap());
+    });
+
+    // Warm path: per-leg memos owned by the caller, reused across plans.
+    let memos: Vec<MemoOracle> =
+        fleet.iter().map(|(_, oracle)| MemoOracle::new(*oracle)).collect();
+    let warm_fleet: Vec<(ClusterSpec, &MemoOracle)> =
+        legs.iter().zip(&memos).map(|(c, m)| (*c, m)).collect();
+    // Prime the memos once (unmeasured), then measure steady state.
+    let plan = planner::plan_cached(&model, framework, &spec, &warm_fleet).unwrap();
+    let warm = bench(&format!("plan-warm-{windows}w-2legs/{model_name}"), 1, 8, || {
+        black_box(planner::plan_cached(&model, framework, &spec, &warm_fleet).unwrap());
+    });
+    println!(
+        "    -> memo-warm vs cold plan: {:.2}x  (per-leg memo hit rates: {})",
+        cold.median_ms() / warm.median_ms(),
+        legs.iter()
+            .zip(&memos)
+            .map(|(c, m)| format!("{} {:.1}%", c.gpu.name, 100.0 * m.hit_rate()))
+            .collect::<Vec<_>>()
+            .join(", ")
+    );
+    println!(
+        "    -> schedule: ${:.2} total | static peak ${:.2} ({:.0}% saved) | {} options, {} pruned",
+        plan.total_cost_usd,
+        plan.static_peak_cost_usd,
+        100.0 * plan.elastic_savings_frac(),
+        plan.options_considered,
+        plan.options_pruned
+    );
+    if let Some((gpu, cost)) = &plan.best_homogeneous {
+        println!(
+            "    -> heterogeneity dividend vs all-{gpu}: ${:.2}",
+            cost - plan.total_cost_usd
+        );
+    }
+
+    // Record the run (cwd is rust/ under `cargo bench`).
+    let mut o = Json::obj();
+    o.set("bench", json::s("planner"))
+        .set("model", json::s(model_name))
+        .set("fleet", json::arr([json::s("h100-sxm"), json::s("a100-sxm")]))
+        .set("windows", json::num(windows as f64))
+        .set("cold_plan_ms_median", json::num(cold.median_ms()))
+        .set("warm_plan_ms_median", json::num(warm.median_ms()))
+        .set("warm_speedup", json::num(cold.median_ms() / warm.median_ms()))
+        .set("total_cost_usd", json::num(plan.total_cost_usd))
+        .set("static_peak_cost_usd", json::num(plan.static_peak_cost_usd))
+        .set("options_considered", json::num(plan.options_considered as f64))
+        .set("options_pruned", json::num(plan.options_pruned as f64));
+    if let Some((gpu, cost)) = &plan.best_homogeneous {
+        o.set("best_homogeneous_gpu", json::s(gpu))
+            .set("heterogeneity_dividend_usd", json::num(cost - plan.total_cost_usd));
+    }
+    match std::fs::write("../BENCH_plan.json", o.to_string()) {
+        Ok(()) => println!("    -> wrote ../BENCH_plan.json"),
+        Err(e) => println!("    -> could not write ../BENCH_plan.json: {e}"),
+    }
+}

@@ -29,6 +29,11 @@ pub struct GpuSpec {
     pub sm_count: u32,
     /// Kernel launch overhead, microseconds.
     pub launch_us: f64,
+    /// Representative public-cloud on-demand list price, USD per
+    /// GPU-hour (rounded; the capacity planner prices schedules with
+    /// it, and only the *ratios* between platforms drive its
+    /// heterogeneous-fleet decisions).
+    pub usd_per_hour: f64,
 }
 
 impl GpuSpec {
@@ -52,6 +57,19 @@ impl GpuSpec {
         !matches!(dt, Dtype::Fp8) || self.fp8_tflops > 0.0
     }
 
+    /// The dtype a profiling campaign / engine sweep should default to
+    /// on this part: FP8 where the tensor cores support it, FP16
+    /// otherwise (Ampere). One definition shared by the CLI, the
+    /// service and the benches so mixed-generation fleets price
+    /// identically on every surface.
+    pub fn preferred_kv_dtype(&self) -> Dtype {
+        if self.supports(Dtype::Fp8) {
+            Dtype::Fp8
+        } else {
+            Dtype::Fp16
+        }
+    }
+
     pub fn mem_bytes(&self) -> f64 {
         self.mem_gib * 1024.0 * 1024.0 * 1024.0
     }
@@ -69,6 +87,7 @@ pub fn a100_sxm() -> GpuSpec {
         nvlink_gbs: 300.0,
         sm_count: 108,
         launch_us: 4.0,
+        usd_per_hour: 2.50,
     }
 }
 
@@ -84,6 +103,7 @@ pub fn h100_sxm() -> GpuSpec {
         nvlink_gbs: 450.0,
         sm_count: 132,
         launch_us: 3.0,
+        usd_per_hour: 4.90,
     }
 }
 
@@ -99,6 +119,7 @@ pub fn h200_sxm() -> GpuSpec {
         nvlink_gbs: 450.0,
         sm_count: 132,
         launch_us: 3.0,
+        usd_per_hour: 6.30,
     }
 }
 
@@ -114,6 +135,7 @@ pub fn b200() -> GpuSpec {
         nvlink_gbs: 900.0,
         sm_count: 148,
         launch_us: 3.0,
+        usd_per_hour: 11.00,
     }
 }
 
@@ -167,6 +189,11 @@ impl ClusterSpec {
         self.gpus_per_node * self.num_nodes
     }
 
+    /// On-demand price of the whole cluster, USD per hour.
+    pub fn usd_per_hour(&self) -> f64 {
+        self.gpu.usd_per_hour * self.total_gpus() as f64
+    }
+
     /// Which link class a `gpus`-wide collective uses.
     pub fn link_for(&self, gpus: u32) -> LinkKind {
         if gpus <= self.gpus_per_node {
@@ -211,6 +238,9 @@ mod tests {
         assert_eq!(h100_sxm().tflops(Dtype::Fp8), 1979.0);
         // Ampere fp8 request falls back to the int8 path.
         assert_eq!(a100_sxm().tflops(Dtype::Fp8), 624.0);
+        // Profiling/sweep default follows tensor-core support.
+        assert_eq!(h100_sxm().preferred_kv_dtype(), Dtype::Fp8);
+        assert_eq!(a100_sxm().preferred_kv_dtype(), Dtype::Fp16);
     }
 
     #[test]
@@ -220,6 +250,21 @@ mod tests {
         assert_eq!(c.link_for(8), LinkKind::NvLink);
         assert_eq!(c.link_for(16), LinkKind::InfiniBand);
         assert!(c.p2p_bw_gbs(LinkKind::NvLink) > c.p2p_bw_gbs(LinkKind::InfiniBand));
+    }
+
+    #[test]
+    fn pricing_covers_every_preset_and_prices_clusters() {
+        for n in ["a100", "h100", "h200", "b200"] {
+            assert!(gpu_by_name(n).unwrap().usd_per_hour > 0.0, "{n} has no price");
+        }
+        // Newer platforms list higher (the planner trades that against
+        // their higher throughput).
+        assert!(a100_sxm().usd_per_hour < h100_sxm().usd_per_hour);
+        assert!(h100_sxm().usd_per_hour < h200_sxm().usd_per_hour);
+        assert!(h200_sxm().usd_per_hour < b200().usd_per_hour);
+        // A 2-node 8-GPU/node H100 cluster prices as 16 GPU-hours/hour.
+        let c = ClusterSpec::new(h100_sxm(), 8, 2);
+        assert_eq!(c.usd_per_hour(), 16.0 * h100_sxm().usd_per_hour);
     }
 
     #[test]

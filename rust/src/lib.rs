@@ -22,6 +22,7 @@ pub mod models;
 pub mod ops;
 pub mod pareto;
 pub mod perfdb;
+pub mod planner;
 pub mod perfmodel;
 pub mod runtime;
 pub mod search;

@@ -4,6 +4,8 @@
 //!   build-db     offline profiling → perf database JSON (PerfDatabase)
 //!   search       TaskRunner + Pareto analyzer + Generator
 //!   sweep        batch search: many (ISL, OSL, SLA) scenarios, one pass
+//!   plan         traffic-aware capacity planner: cost-minimal replica
+//!                schedules over dynamic QPS curves (mixed GPU fleets)
 //!   simulate     ground-truth discrete-event simulation of one config
 //!   experiment   regenerate a paper table/figure (fig1..fig8, table1)
 //!   serve        run the TCP config-search service
@@ -14,13 +16,14 @@
 use std::collections::HashMap;
 use std::path::PathBuf;
 
-use aiconfigurator::config::{ServingMode, WorkloadSpec};
+use aiconfigurator::config::{Candidate, ServingMode, WorkloadSpec};
 use aiconfigurator::experiments;
 use aiconfigurator::frameworks::Framework;
 use aiconfigurator::hardware::{gpu_by_name, ClusterSpec};
-use aiconfigurator::models::{by_name, Dtype};
+use aiconfigurator::models::by_name;
 use aiconfigurator::pareto;
 use aiconfigurator::perfdb::{LatencyOracle, PerfDatabase};
+use aiconfigurator::planner::TrafficModel;
 use aiconfigurator::runtime::{PjrtOracle, PjrtService};
 use aiconfigurator::search::{SearchSpace, TaskRunner};
 use aiconfigurator::service::{SearchServer, ServerConfig};
@@ -44,6 +47,16 @@ USAGE:
                             [--modes agg,disagg]
                             --scenarios ISL:OSL:TTFT:SPEED[,ISL:OSL:TTFT:SPEED...]
                             (TTFT in ms or 'inf'; SPEED in tokens/s/user or 0)
+  aiconfigurator plan       --model <name> [--fleet h100,a100] [--gpus-per-node 8]
+                            [--nodes 1] [--framework trtllm] --isl N --osl N
+                            [--ttft MS] [--speed TOK_S]
+                            --traffic diurnal|ramp|bursty
+                              diurnal: --peak-qps Q [--trough-qps Q] [--period-h 24]
+                              ramp:    --start-qps Q --end-qps Q
+                              bursty:  --base-qps Q --burst-qps Q
+                                       [--burst-prob 0.15] [--burst-seed 7]
+                            [--windows 24] [--window-hours 1] [--max-gpus N]
+                            [--no-prune] [--out-dir DIR]
   aiconfigurator build-db   --model <name> [--gpu h100] [--framework trtllm]
                             [--nodes 1] --out FILE.json
   aiconfigurator simulate   --model <name> [--gpu h100] [--framework trtllm]
@@ -55,6 +68,11 @@ USAGE:
 
 Models: llama3.1-8b qwen3-32b qwen3-235b deepseek-v3 mixtral-8x7b gpt-oss-120b
 GPUs:   a100 h100 h200 b200    Frameworks: trtllm vllm sglang
+
+Flags accept both '--key value' and '--key=value'.
+`plan` searches traffic-aware deployment schedules: replicas of the
+cost-optimal engine config (and GPU type — --fleet may mix types) per
+time window, meeting the SLA at minimum $ cost.
 ";
 
 fn main() {
@@ -68,6 +86,7 @@ fn main() {
     let result = match cmd.as_str() {
         "search" => cmd_search(&flags),
         "sweep" => cmd_sweep(&flags),
+        "plan" => cmd_plan(&flags),
         "build-db" => cmd_build_db(&flags),
         "simulate" => cmd_simulate(&flags),
         "experiment" => cmd_experiment(&positional, &flags),
@@ -84,13 +103,20 @@ fn main() {
     }
 }
 
+/// Parse `--key value`, `--key=value` and bare `--switch` flags plus
+/// positionals. `--key=value` binds tighter than the lookahead rule, so
+/// values that themselves start with `--` (or contain `=`) are
+/// expressible: `--scenarios=1024:128:inf:0`.
 fn parse_flags(args: &[String]) -> (HashMap<String, String>, Vec<String>) {
     let mut flags = HashMap::new();
     let mut positional = Vec::new();
     let mut i = 0;
     while i < args.len() {
         if let Some(name) = args[i].strip_prefix("--") {
-            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+            if let Some((key, value)) = name.split_once('=') {
+                flags.insert(key.to_string(), value.to_string());
+                i += 1;
+            } else if i + 1 < args.len() && !args[i + 1].starts_with("--") {
                 flags.insert(name.to_string(), args[i + 1].clone());
                 i += 2;
             } else {
@@ -158,7 +184,7 @@ fn cmd_search(f: &HashMap<String, String>) -> anyhow::Result<()> {
     );
 
     eprintln!("building performance database (offline profiling of silicon)...");
-    let db = PerfDatabase::build(&ctx.silicon, &ctx.model, Dtype::Fp8, 0xA1C0);
+    let db = PerfDatabase::build(&ctx.silicon, &ctx.model, ctx.cluster.gpu.preferred_kv_dtype(), 0xA1C0);
 
     let mut space = SearchSpace::default_for(&ctx.model, ctx.framework);
     if let Some(modes) = f.get("modes") {
@@ -269,7 +295,7 @@ fn cmd_sweep(f: &HashMap<String, String>) -> anyhow::Result<()> {
     anyhow::ensure!(!scenarios.is_empty(), "--scenarios named no scenarios");
 
     eprintln!("building performance database (offline profiling of silicon)...");
-    let db = PerfDatabase::build(&ctx.silicon, &ctx.model, Dtype::Fp8, 0xA1C0);
+    let db = PerfDatabase::build(&ctx.silicon, &ctx.model, ctx.cluster.gpu.preferred_kv_dtype(), 0xA1C0);
 
     let mut space = SearchSpace::default_for(&ctx.model, ctx.framework);
     if let Some(modes) = f.get("modes") {
@@ -313,10 +339,169 @@ fn cmd_sweep(f: &HashMap<String, String>) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Parse the traffic model from `--traffic` + its per-kind flags.
+fn parse_traffic(f: &HashMap<String, String>) -> anyhow::Result<TrafficModel> {
+    let kind = f
+        .get("traffic")
+        .ok_or_else(|| anyhow::anyhow!("--traffic is required (diurnal|ramp|bursty)"))?;
+    let req = |key: &str| -> anyhow::Result<f64> {
+        anyhow::ensure!(f.contains_key(key), "--{key} is required for --traffic {kind}");
+        flag_f64(f, key, 0.0)
+    };
+    let model = match kind.as_str() {
+        "diurnal" => TrafficModel::Diurnal {
+            peak_qps: req("peak-qps")?,
+            trough_qps: flag_f64(f, "trough-qps", 0.0)?,
+            period_h: flag_f64(f, "period-h", 24.0)?,
+        },
+        "ramp" => TrafficModel::Ramp { start_qps: req("start-qps")?, end_qps: req("end-qps")? },
+        "bursty" => TrafficModel::Bursty {
+            base_qps: req("base-qps")?,
+            burst_qps: req("burst-qps")?,
+            burst_prob: flag_f64(f, "burst-prob", 0.15)?,
+            seed: flag_u32(f, "burst-seed", 7)? as u64,
+        },
+        other => anyhow::bail!("unknown --traffic '{other}' (diurnal|ramp|bursty)"),
+    };
+    model.validate()?;
+    Ok(model)
+}
+
+fn cmd_plan(f: &HashMap<String, String>) -> anyhow::Result<()> {
+    let model_name = f.get("model").ok_or_else(|| anyhow::anyhow!("--model is required"))?;
+    let model = by_name(model_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown model '{model_name}' (see --help)"))?;
+    let fw_name = flag(f, "framework", "trtllm");
+    let framework = Framework::parse(fw_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown framework '{fw_name}'"))?;
+    let gpn = flag_u32(f, "gpus-per-node", 8)?;
+    let nodes = flag_u32(f, "nodes", 1)?;
+    let isl = flag_u32(f, "isl", 0)?;
+    let osl = flag_u32(f, "osl", 0)?;
+    anyhow::ensure!(isl > 0 && osl > 0, "--isl and --osl are required");
+    let wl = WorkloadSpec::new(
+        model.name,
+        isl,
+        osl,
+        flag_f64(f, "ttft", f64::INFINITY)?,
+        flag_f64(f, "speed", 0.0)?,
+    );
+    let spec = aiconfigurator::planner::PlanSpec {
+        workload: wl,
+        traffic: parse_traffic(f)?,
+        windows: flag_u32(f, "windows", 24)? as usize,
+        window_h: flag_f64(f, "window-hours", 1.0)?,
+        max_gpus: if f.contains_key("max-gpus") {
+            Some(flag_u32(f, "max-gpus", 0)?)
+        } else {
+            None
+        },
+        prune: !f.contains_key("no-prune"),
+    };
+
+    // One leg per fleet GPU type: profile a database against that
+    // platform's synthetic silicon (Ampere legs profile fp16 — no fp8).
+    let mut legs: Vec<(ClusterSpec, PerfDatabase)> = Vec::new();
+    for name in flag(f, "fleet", "h100").split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        let gpu =
+            gpu_by_name(name).ok_or_else(|| anyhow::anyhow!("unknown gpu '{name}' in --fleet"))?;
+        let cluster = ClusterSpec::new(gpu, gpn, nodes);
+        let silicon = Silicon::new(cluster, framework.profile());
+        eprintln!(
+            "profiling fleet leg {} ({} GPUs @ ${:.2}/h each)...",
+            gpu.name,
+            cluster.total_gpus(),
+            gpu.usd_per_hour
+        );
+        let db = PerfDatabase::build(&silicon, &model, gpu.preferred_kv_dtype(), 0xA1C0);
+        legs.push((cluster, db));
+    }
+    anyhow::ensure!(!legs.is_empty(), "--fleet named no GPU types");
+    let fleet: Vec<(ClusterSpec, &dyn LatencyOracle)> =
+        legs.iter().map(|(c, d)| (*c, d as &dyn LatencyOracle)).collect();
+
+    let t0 = std::time::Instant::now();
+    let plan = aiconfigurator::planner::plan(&model, framework, &spec, &fleet)?;
+    let elapsed = t0.elapsed().as_secs_f64();
+
+    println!(
+        "{:>3} {:>13} {:>9} {:>9} {:>5} {:>5} {:>9}  deployment",
+        "win", "hours", "qps", "gpu", "reps", "gpus", "cost $"
+    );
+    for w in &plan.windows {
+        println!(
+            "{:>3} {:>6.1}-{:<6.1} {:>9.1} {:>9} {:>5} {:>5} {:>9.2}  {}",
+            w.index,
+            w.t_start_h,
+            w.t_end_h,
+            w.demand_qps,
+            w.gpu,
+            w.replicas,
+            w.gpus,
+            w.cost_usd,
+            w.cand.label()
+        );
+    }
+    println!(
+        "planned {} windows in {:.2}s — total ${:.2} ({} options priced, {} pruned on the (cost, capacity, speed, footprint) frontier)",
+        plan.windows.len(),
+        elapsed,
+        plan.total_cost_usd,
+        plan.options_considered,
+        plan.options_pruned
+    );
+    println!(
+        "vs static peak provisioning: ${:.2} ({:.0}% saved by following the traffic)",
+        plan.static_peak_cost_usd,
+        100.0 * plan.elastic_savings_frac()
+    );
+    if let Some((gpu, cost)) = &plan.best_homogeneous {
+        if plan.total_cost_usd < cost - 1e-9 {
+            println!(
+                "vs best homogeneous fleet (all-{gpu}): ${cost:.2} — mixing GPU types saves ${:.2}",
+                cost - plan.total_cost_usd
+            );
+        } else {
+            println!("best homogeneous fleet (all-{gpu}) matches: ${cost:.2}");
+        }
+    }
+
+    if let Some(dir) = f.get("out-dir") {
+        let dirp = std::path::Path::new(dir);
+        std::fs::create_dir_all(dirp)?;
+        std::fs::write(dirp.join("plan.json"), plan.to_json(&spec.workload).to_string())?;
+        std::fs::write(
+            dirp.join("schedule.yaml"),
+            generator::dynamo::plan_schedule_yaml(&plan, model.name, &spec.workload),
+        )?;
+        for w in &plan.windows {
+            // Scale-to-zero windows get no bundle (schedule.yaml marks
+            // them `bundle: ~`) — emitting one would contradict the
+            // schedule's replicas: 0.
+            if w.replicas == 0 {
+                continue;
+            }
+            // Aggregated windows scale by replica count inside the
+            // bundle; disaggregated windows launch `replicas` identical
+            // composites (the schedule.yaml carries the count).
+            let cand = match &w.cand {
+                Candidate::Aggregated { engine, .. } => {
+                    Candidate::Aggregated { engine: *engine, replicas: w.replicas }
+                }
+                c => c.clone(),
+            };
+            let bundle = generator::generate(&cand, model.name, &spec.workload);
+            bundle.write_to(&dirp.join(format!("window_{:02}", w.index)))?;
+        }
+        println!("wrote plan.json, schedule.yaml and per-window launch bundles to {dir}/");
+    }
+    Ok(())
+}
+
 fn cmd_build_db(f: &HashMap<String, String>) -> anyhow::Result<()> {
     let ctx = load_ctx(f)?;
     let out = f.get("out").ok_or_else(|| anyhow::anyhow!("--out is required"))?;
-    let db = PerfDatabase::build(&ctx.silicon, &ctx.model, Dtype::Fp8, 0xA1C0);
+    let db = PerfDatabase::build(&ctx.silicon, &ctx.model, ctx.cluster.gpu.preferred_kv_dtype(), 0xA1C0);
     db.save(std::path::Path::new(out))?;
     println!(
         "profiled {} ({} on {}) -> {out} (simulated campaign cost {:.1} GPU-hours)",
@@ -342,8 +527,8 @@ fn cmd_simulate(f: &HashMap<String, String>) -> anyhow::Result<()> {
             dp: 1,
         },
         batch,
-        weight_dtype: Dtype::Fp8,
-        kv_dtype: Dtype::Fp8,
+        weight_dtype: ctx.cluster.gpu.preferred_kv_dtype(),
+        kv_dtype: ctx.cluster.gpu.preferred_kv_dtype(),
         flags: aiconfigurator::config::RuntimeFlags::defaults_for(ctx.framework),
     };
     let n = flag_u32(f, "requests", 4 * batch)? as usize;
@@ -418,4 +603,80 @@ fn cmd_serve(f: &HashMap<String, String>) -> anyhow::Result<()> {
     let (server, addr) = SearchServer::bind(&cfg, pjrt_ctx)?;
     println!("aiconfigurator service listening on {addr} (JSON-lines)");
     server.run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_flags_space_and_equals_syntax() {
+        let (f, pos) = parse_flags(&argv(&[
+            "--model",
+            "qwen3-32b",
+            "--isl=4000",
+            "--prune",
+            "fig1",
+            "--scenarios=1024:128:inf:0,512:64:1000:20",
+        ]));
+        assert_eq!(f.get("model").unwrap(), "qwen3-32b");
+        assert_eq!(f.get("isl").unwrap(), "4000");
+        assert_eq!(f.get("prune").unwrap(), "true");
+        assert_eq!(f.get("scenarios").unwrap(), "1024:128:inf:0,512:64:1000:20");
+        assert_eq!(pos, vec!["fig1".to_string()]);
+    }
+
+    #[test]
+    fn equals_binds_tighter_than_lookahead() {
+        // Values that start with '--' or contain '=' are expressible
+        // only through the '=' form.
+        let (f, _) = parse_flags(&argv(&["--out-dir=/tmp/a=b", "--tag=", "--speed=-5"]));
+        assert_eq!(f.get("out-dir").unwrap(), "/tmp/a=b");
+        assert_eq!(f.get("tag").unwrap(), "");
+        assert_eq!(f.get("speed").unwrap(), "-5");
+    }
+
+    #[test]
+    fn switch_followed_by_flag_stays_boolean() {
+        let (f, _) = parse_flags(&argv(&["--prune", "--isl", "4000", "--full"]));
+        assert_eq!(f.get("prune").unwrap(), "true");
+        assert_eq!(f.get("isl").unwrap(), "4000");
+        assert_eq!(f.get("full").unwrap(), "true");
+    }
+
+    #[test]
+    fn traffic_flag_parsing() {
+        let mk = |pairs: &[(&str, &str)]| -> HashMap<String, String> {
+            pairs.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect()
+        };
+        let m = parse_traffic(&mk(&[
+            ("traffic", "diurnal"),
+            ("peak-qps", "200"),
+            ("trough-qps", "20"),
+        ]))
+        .unwrap();
+        assert_eq!(
+            m,
+            TrafficModel::Diurnal { peak_qps: 200.0, trough_qps: 20.0, period_h: 24.0 }
+        );
+        let m = parse_traffic(&mk(&[
+            ("traffic", "bursty"),
+            ("base-qps", "30"),
+            ("burst-qps", "300"),
+        ]))
+        .unwrap();
+        assert_eq!(
+            m,
+            TrafficModel::Bursty { base_qps: 30.0, burst_qps: 300.0, burst_prob: 0.15, seed: 7 }
+        );
+        // Missing required knobs and unknown kinds are clean errors.
+        assert!(parse_traffic(&mk(&[("traffic", "diurnal")])).is_err());
+        assert!(parse_traffic(&mk(&[("traffic", "ramp"), ("start-qps", "1")])).is_err());
+        assert!(parse_traffic(&mk(&[("traffic", "square")])).is_err());
+        assert!(parse_traffic(&mk(&[])).is_err());
+    }
 }

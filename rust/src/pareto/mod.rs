@@ -7,6 +7,12 @@
 //! [`FrontierAccumulator`] provides the *incremental* variant the search
 //! engine uses to discard dominated candidates while the sweep is still
 //! running instead of after it.
+//!
+//! Dominance is also exposed in **k-objective** form ([`dominates`],
+//! [`k_frontier_indices`], [`FrontierAccumulator::offer_point`]): the
+//! capacity planner ([`crate::planner`]) prunes deployment options on
+//! the (−cost/hour, request capacity, speed, −GPU footprint) frontier
+//! with exactly the same accumulator the 2-objective sweep path uses.
 
 use crate::config::Sla;
 use crate::perfmodel::PerfEstimate;
@@ -91,17 +97,70 @@ pub fn analyze(evaluated: &[Evaluated], sla: &Sla) -> Analysis {
     Analysis { feasible, frontier }
 }
 
-/// Incremental (speed, thru) Pareto frontier for in-sweep pruning.
+/// k-objective weak dominance: does `a` dominate `b`? All objectives
+/// are maximized; `a` dominates `b` iff `a` is ≥ `b` on every
+/// coordinate and strictly greater on at least one. Callers with a
+/// minimized objective (cost) negate it.
+pub fn dominates(a: &[f64], b: &[f64]) -> bool {
+    debug_assert_eq!(a.len(), b.len(), "objective arity mismatch");
+    let mut strict = false;
+    for (x, y) in a.iter().zip(b) {
+        if x < y {
+            return false;
+        }
+        if x > y {
+            strict = true;
+        }
+    }
+    strict
+}
+
+/// Batch O(n²) k-objective dominance filter: indices of the points not
+/// dominated by any other, in ascending input order. Exact duplicates
+/// are represented once, by the smallest input index (the same tie rule
+/// as [`frontier_indices`]). This is the reference the incremental
+/// [`FrontierAccumulator`] is property-tested against; the planner uses
+/// it on small option sets where O(n²) is irrelevant.
+pub fn k_frontier_indices(points: &[Vec<f64>]) -> Vec<usize> {
+    let n = points.len();
+    let mut out = Vec::new();
+    'outer: for i in 0..n {
+        for j in 0..n {
+            if j != i && dominates(&points[j], &points[i]) {
+                continue 'outer;
+            }
+        }
+        for j in 0..i {
+            if points[j] == points[i] {
+                continue 'outer; // duplicate — smallest index already kept
+            }
+        }
+        out.push(i);
+    }
+    out
+}
+
+/// Incremental k-objective Pareto frontier for in-sweep pruning.
 ///
-/// `offer` answers "is this point on the running frontier?" in O(k)
-/// (k = current frontier size, typically tens) and evicts members the
-/// new point dominates. Exact duplicates of a live member are rejected,
-/// so an accumulator-pruned sweep also deduplicates — the frontier and
-/// the argmax are preserved exactly (tested against the unpruned path).
+/// The arity is fixed by the first `offer_point` (the 2-objective
+/// (speed, thru) convenience [`FrontierAccumulator::offer`] is what the
+/// search engine uses; the capacity planner runs (−cost/h, qps
+/// capacity, speed, −GPU footprint)). `offer_point` answers "is this
+/// point on the running frontier?" in O(k·d) (k = current frontier
+/// size, typically tens) and evicts members the new point dominates.
+/// Exact duplicates of a live member are rejected, so an
+/// accumulator-pruned sweep also deduplicates — the frontier and the
+/// argmax of any single objective are preserved exactly (tested against
+/// the batch filter and the unpruned sweep path).
 #[derive(Clone, Debug, Default)]
 pub struct FrontierAccumulator {
-    /// Live frontier points as (speed, thru).
-    pts: Vec<(f64, f64)>,
+    /// Live frontier points in the 2-objective fast path — the sweep
+    /// engine's (speed, thru) hot loop stays tuple-based and
+    /// allocation-free, exactly as before the k-objective extension.
+    pts2: Vec<(f64, f64)>,
+    /// Live frontier points at any other arity (the planner's
+    /// 4-objective prune).
+    ptsk: Vec<Vec<f64>>,
     /// How many offers were rejected (dominated or duplicate).
     rejected: usize,
 }
@@ -111,19 +170,46 @@ impl FrontierAccumulator {
         FrontierAccumulator::default()
     }
 
-    /// Offer a point. Returns `true` if it joins the running frontier
-    /// (caller keeps it), `false` if it is dominated by — or equal to —
-    /// an existing member (caller discards it).
+    /// The search engine's 2-objective (speed, thru) form — the hot
+    /// path (thousands of offers per sweep), kept allocation-free.
     pub fn offer(&mut self, speed: f64, thru: f64) -> bool {
-        for &(s, t) in &self.pts {
+        // Hard assert (not debug): a release-mode arity mix would
+        // silently split the frontier across the two stores and return
+        // wrong dominance answers. The check is O(1) next to the scan.
+        assert!(self.ptsk.is_empty(), "objective arity changed mid-stream");
+        for &(s, t) in &self.pts2 {
             if s >= speed && t >= thru {
                 self.rejected += 1;
                 return false;
             }
         }
-        // Not dominated: evict anything the new point dominates.
-        self.pts.retain(|&(s, t)| !(speed >= s && thru >= t));
-        self.pts.push((speed, thru));
+        // Not dominated: evict anything the new point weakly dominates.
+        self.pts2.retain(|&(s, t)| !(speed >= s && thru >= t));
+        self.pts2.push((speed, thru));
+        true
+    }
+
+    /// Offer a k-objective point. Returns `true` if it joins the
+    /// running frontier (caller keeps it), `false` if it is weakly
+    /// dominated by — or equal to — an existing member (caller
+    /// discards it). Two-element points take the 2-objective fast
+    /// path; the arity is otherwise fixed by the first offer.
+    pub fn offer_point(&mut self, p: &[f64]) -> bool {
+        if let [speed, thru] = *p {
+            return self.offer(speed, thru);
+        }
+        assert!(
+            self.pts2.is_empty() && (self.ptsk.is_empty() || self.ptsk[0].len() == p.len()),
+            "objective arity changed mid-stream"
+        );
+        for q in &self.ptsk {
+            if q.iter().zip(p).all(|(a, b)| a >= b) {
+                self.rejected += 1;
+                return false;
+            }
+        }
+        self.ptsk.retain(|q| !p.iter().zip(q.iter()).all(|(a, b)| a >= b));
+        self.ptsk.push(p.to_vec());
         true
     }
 
@@ -134,11 +220,11 @@ impl FrontierAccumulator {
 
     /// Current frontier size.
     pub fn len(&self) -> usize {
-        self.pts.len()
+        self.pts2.len() + self.ptsk.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.pts.is_empty()
+        self.pts2.is_empty() && self.ptsk.is_empty()
     }
 
     /// Points rejected so far (the pruning win).
@@ -312,6 +398,89 @@ mod tests {
             };
             assert_eq!(vals(&sub, &kept_pts), vals(&batch, &pts));
         }
+    }
+
+    #[test]
+    fn dominance_requires_one_strict_coordinate() {
+        assert!(dominates(&[2.0, 1.0, 1.0], &[1.0, 1.0, 1.0]));
+        assert!(!dominates(&[1.0, 1.0, 1.0], &[1.0, 1.0, 1.0]), "equal points don't dominate");
+        assert!(!dominates(&[2.0, 0.5, 1.0], &[1.0, 1.0, 1.0]), "trade-off is not dominance");
+        assert!(dominates(&[-1.0, 5.0], &[-2.0, 5.0]), "negated-cost convention");
+    }
+
+    #[test]
+    fn k_frontier_small_pinned() {
+        // (−cost, capacity, speed): a cheap/slow, an expensive/fast, a
+        // strictly-worse one, and a duplicate of the first.
+        let pts = vec![
+            vec![-3.0, 2.0, 10.0],  // frontier (cheap)
+            vec![-10.0, 9.0, 30.0], // frontier (big)
+            vec![-10.0, 9.0, 20.0], // dominated by idx 1
+            vec![-3.0, 2.0, 10.0],  // duplicate of idx 0
+        ];
+        assert_eq!(k_frontier_indices(&pts), vec![0, 1]);
+        assert!(k_frontier_indices(&[]).is_empty());
+    }
+
+    /// The incremental accumulator in 3-D matches the batch O(n²)
+    /// dominance filter on random point sets, including duplicates and
+    /// ties (the satellite property test; mirrored in tests/proptests).
+    #[test]
+    fn k_accumulator_matches_batch_filter() {
+        let mut rng = Rng::new(0x3D3D);
+        for case in 0..150 {
+            let n = 1 + rng.below(60) as usize;
+            // Coarse grid values make ties/duplicates likely; the first
+            // coordinate is negative (the planner's −cost convention).
+            let pts: Vec<Vec<f64>> = (0..n)
+                .map(|_| {
+                    vec![
+                        -(rng.f64() * 5.0).round() * 2.0,
+                        (rng.f64() * 5.0).round() * 3.0,
+                        (rng.f64() * 5.0).round() * 7.0,
+                    ]
+                })
+                .collect();
+            let mut acc = FrontierAccumulator::new();
+            let mut kept = Vec::new();
+            for (i, p) in pts.iter().enumerate() {
+                if acc.offer_point(p) {
+                    kept.push(i);
+                }
+            }
+            assert_eq!(acc.rejected() + kept.len(), n, "case {case}");
+            let batch = k_frontier_indices(&pts);
+            // The accumulator is a conservative filter: every batch-
+            // frontier point survives in `kept` (it may also keep points
+            // later discovered to be dominated, never lose one).
+            for &i in &batch {
+                assert!(kept.iter().any(|&k| pts[k] == pts[i]), "case {case}: lost point {i}");
+            }
+            // And the frontier of the kept subset equals the batch
+            // frontier, value for value, in the same (input) order.
+            let kept_pts: Vec<Vec<f64>> = kept.iter().map(|&k| pts[k].clone()).collect();
+            let sub = k_frontier_indices(&kept_pts);
+            let sub_vals: Vec<&Vec<f64>> = sub.iter().map(|&i| &kept_pts[i]).collect();
+            let batch_vals: Vec<&Vec<f64>> = batch.iter().map(|&i| &pts[i]).collect();
+            assert_eq!(sub_vals, batch_vals, "case {case}");
+        }
+    }
+
+    /// The 2-objective accumulator path is the k=2 special case: same
+    /// kept set whether points go through `offer` or `offer_point`.
+    #[test]
+    fn two_objective_offer_is_k2_special_case() {
+        let mut rng = Rng::new(0x2D2D);
+        let pts: Vec<(f64, f64)> = (0..80)
+            .map(|_| ((rng.f64() * 6.0).round() * 5.0, (rng.f64() * 6.0).round() * 11.0))
+            .collect();
+        let mut a = FrontierAccumulator::new();
+        let mut b = FrontierAccumulator::new();
+        for &(s, t) in &pts {
+            assert_eq!(a.offer(s, t), b.offer_point(&[s, t]));
+        }
+        assert_eq!(a.len(), b.len());
+        assert_eq!(a.rejected(), b.rejected());
     }
 
     #[test]

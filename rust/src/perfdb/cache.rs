@@ -109,6 +109,17 @@ impl<'a> MemoOracle<'a> {
         (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
     }
 
+    /// Fraction of queries answered from the memo so far (0 before any
+    /// query). The capacity planner's memo-warm path reports this.
+    pub fn hit_rate(&self) -> f64 {
+        let (h, m) = self.stats();
+        if h + m == 0 {
+            0.0
+        } else {
+            h as f64 / (h + m) as f64
+        }
+    }
+
     /// Distinct ops memoized.
     pub fn len(&self) -> usize {
         self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
@@ -217,6 +228,7 @@ mod tests {
         let (hits, misses) = memo.stats();
         assert_eq!(misses, ops.len() as u64);
         assert_eq!(hits, ops.len() as u64);
+        assert_eq!(memo.hit_rate(), 0.5);
         // step_latency_us goes through the memo too.
         let step_truth = LatencyOracle::step_latency_us(&s, &ops);
         assert_eq!(memo.step_latency_us(&ops), step_truth);

@@ -1,0 +1,449 @@
+//! Traffic-aware capacity planner: cost/SLA deployment schedules over
+//! dynamic workloads.
+//!
+//! The layer above per-configuration pricing (cf. Vidur's what-if
+//! search and GUIDE's heterogeneous-deployment planning, PAPERS.md):
+//! given a time-varying traffic model ([`traffic::TrafficModel`]), a
+//! candidate fleet of GPU types priced by `usd_per_hour`
+//! ([`crate::hardware::GpuSpec`]) and an SLA, find how many replicas of
+//! which engine configuration — on which GPU type — to run in each
+//! time window so the SLA holds at minimum cost.
+//!
+//! Pipeline per plan:
+//! 1. each fleet leg is priced by the sweep engine
+//!    ([`crate::search::TaskRunner::run_sweep_cached`]); a leg-owned
+//!    [`crate::perfdb::MemoOracle`] is shared across every window of
+//!    the horizon — and across repeated plans when the caller holds
+//!    its memos ([`plan_cached`]; operator latencies are
+//!    cluster-specific, so legs do not share one memo — each leg's is
+//!    reused instead);
+//! 2. SLA-feasible candidates become deployment *units*
+//!    ([`options::PricedOption`]), k-objective-pruned on the
+//!    (−cost/h, capacity, speed, −footprint) frontier
+//!    ([`options::prune_options`] over
+//!    [`crate::pareto::FrontierAccumulator`]);
+//! 3. the per-window min-cost schedule is exact
+//!    ([`schedule::optimize`]; brute-force-pinned in tests), and the
+//!    plan reports the heterogeneity dividend (vs the best
+//!    single-GPU-type schedule) and the elasticity dividend (vs
+//!    statically provisioning the peak for the whole horizon).
+
+pub mod options;
+pub mod schedule;
+pub mod traffic;
+
+pub use options::{options_from_report, prune_options, PricedOption};
+pub use schedule::{choose_window, optimize, replicas_needed, Schedule, WindowChoice};
+pub use traffic::TrafficModel;
+
+use crate::config::{Candidate, WorkloadSpec};
+use crate::frameworks::Framework;
+use crate::hardware::ClusterSpec;
+use crate::models::ModelArch;
+use crate::perfdb::{LatencyOracle, MemoOracle};
+use crate::perfmodel::PerfEstimate;
+use crate::search::{RunOptions, SearchSpace, TaskRunner};
+use crate::util::json::{self, Json};
+
+/// Planner input.
+#[derive(Clone, Debug)]
+pub struct PlanSpec {
+    /// The request shape + SLA every window must serve.
+    pub workload: WorkloadSpec,
+    pub traffic: TrafficModel,
+    /// Number of scheduling windows in the horizon.
+    pub windows: usize,
+    /// Window length, hours.
+    pub window_h: f64,
+    /// Per-window GPU budget across the fleet (None = unbounded).
+    pub max_gpus: Option<u32>,
+    /// k-objective-prune the option set before the window search (the
+    /// optimal schedule is preserved exactly; tested).
+    pub prune: bool,
+}
+
+impl PlanSpec {
+    pub fn new(workload: WorkloadSpec, traffic: TrafficModel, windows: usize, window_h: f64) -> Self {
+        PlanSpec { workload, traffic, windows, window_h, max_gpus: None, prune: true }
+    }
+}
+
+/// One window of the final plan.
+#[derive(Clone, Debug)]
+pub struct WindowPlan {
+    pub index: usize,
+    /// Window span, hours from horizon start.
+    pub t_start_h: f64,
+    pub t_end_h: f64,
+    /// Peak instantaneous demand inside the window (what the planner
+    /// provisions for).
+    pub demand_qps: f64,
+    /// GPU preset name of the chosen option.
+    pub gpu: String,
+    /// The deployment unit (one engine replica / one xPyD composite).
+    pub cand: Candidate,
+    /// Units deployed this window (0 = scale-to-zero).
+    pub replicas: u32,
+    /// Total GPUs this window (u64: replicas × unit GPUs can exceed
+    /// u32 for extreme uncapped demands).
+    pub gpus: u64,
+    /// Aggregate serveable rate, queries/s.
+    pub capacity_qps: f64,
+    /// Per-request projection of the chosen unit.
+    pub est: PerfEstimate,
+    pub cost_usd: f64,
+}
+
+/// A full cost-minimal deployment schedule.
+#[derive(Clone, Debug)]
+pub struct DeploymentPlan {
+    pub windows: Vec<WindowPlan>,
+    pub total_cost_usd: f64,
+    /// Best schedule restricted to a single GPU type (None when no
+    /// single type can serve every window); the gap to `total_cost_usd`
+    /// is the heterogeneity dividend.
+    pub best_homogeneous: Option<(String, f64)>,
+    /// Cost of statically provisioning the peak window's deployment for
+    /// the entire horizon (what a non-traffic-aware search would buy).
+    pub static_peak_cost_usd: f64,
+    /// SLA-feasible options priced across the fleet.
+    pub options_considered: usize,
+    /// Options discarded by the k-objective frontier prune.
+    pub options_pruned: usize,
+}
+
+impl DeploymentPlan {
+    /// Savings of the traffic-aware schedule vs static peak
+    /// provisioning, in [0, 1).
+    pub fn elastic_savings_frac(&self) -> f64 {
+        if self.static_peak_cost_usd > 0.0 {
+            1.0 - self.total_cost_usd / self.static_peak_cost_usd
+        } else {
+            0.0
+        }
+    }
+
+    pub fn to_json(&self, wl: &WorkloadSpec) -> Json {
+        let mut windows = Vec::new();
+        for w in &self.windows {
+            let mut o = Json::obj();
+            o.set("window", json::num(w.index as f64))
+                .set("t_start_h", json::num(w.t_start_h))
+                .set("t_end_h", json::num(w.t_end_h))
+                .set("demand_qps", json::num(w.demand_qps))
+                .set("gpu", json::s(&w.gpu))
+                .set("config", json::s(&w.cand.label()))
+                .set("mode", json::s(w.cand.mode().name()))
+                .set("replicas", json::num(w.replicas as f64))
+                .set("gpus", json::num(w.gpus as f64))
+                .set("capacity_qps", json::num(w.capacity_qps))
+                .set("ttft_ms", json::num(w.est.ttft_ms))
+                .set("speed", json::num(w.est.speed))
+                .set("cost_usd", json::num(w.cost_usd));
+            windows.push(o);
+        }
+        let mut o = Json::obj();
+        o.set("workload", wl.to_json())
+            .set("windows", Json::Arr(windows))
+            .set("total_cost_usd", json::num(self.total_cost_usd))
+            .set("static_peak_cost_usd", json::num(self.static_peak_cost_usd))
+            .set("elastic_savings_frac", json::num(self.elastic_savings_frac()))
+            .set("options_considered", json::num(self.options_considered as f64))
+            .set("options_pruned", json::num(self.options_pruned as f64));
+        if let Some((gpu, cost)) = &self.best_homogeneous {
+            let mut h = Json::obj();
+            h.set("gpu", json::s(gpu)).set("cost_usd", json::num(*cost));
+            o.set("best_homogeneous", h);
+        }
+        o
+    }
+}
+
+/// Plan against caller-owned per-leg memos (the warm path: callers
+/// that reuse memos across plans, as the memo-warm half of
+/// `benches/planner.rs` does). Legs are `(cluster, memo)` pairs; each
+/// memo must wrap an oracle profiled for that cluster.
+pub fn plan_cached(
+    model: &ModelArch,
+    framework: Framework,
+    spec: &PlanSpec,
+    fleet: &[(ClusterSpec, &MemoOracle<'_>)],
+) -> anyhow::Result<DeploymentPlan> {
+    anyhow::ensure!(spec.windows > 0, "plan horizon needs at least one window");
+    // Bounds the per-request work for service callers (a year of hourly
+    // windows is 8760; nobody plans more granularly than this).
+    anyhow::ensure!(
+        spec.windows <= 100_000,
+        "plan horizon of {} windows is unreasonably large (max 100000)",
+        spec.windows
+    );
+    anyhow::ensure!(spec.window_h > 0.0, "window length must be positive hours");
+    anyhow::ensure!(!fleet.is_empty(), "the candidate fleet is empty");
+    spec.traffic.validate()?;
+    let wl = &spec.workload;
+    // Provision each window for its *peak* instantaneous demand — a
+    // midpoint-sampled rising window would run under capacity at its
+    // edges (`TrafficModel::qps_window_peak`).
+    let demands = spec.traffic.qps_window_peak(spec.windows, spec.window_h);
+
+    // 1. Price every fleet leg (one single-scenario sweep per leg; the
+    //    leg's memo keeps repeat plans warm). Reports must be unpruned —
+    //    see `options_from_report`.
+    let mut all: Vec<PricedOption> = Vec::new();
+    for (cluster, memo) in fleet {
+        // Mixed-generation fleets need no special-casing here:
+        // `SearchSpace::engine_grid` falls back to the GPU's preferred
+        // dtype when none of the default sweep dtypes is supported
+        // (FP8 on Ampere), so every leg contributes options.
+        let space = SearchSpace::default_for(model, framework);
+        let runner = TaskRunner::new(model, cluster, space, wl.clone());
+        let reports =
+            runner.run_sweep_cached(memo, std::slice::from_ref(wl), &RunOptions::default());
+        all.extend(options_from_report(&cluster.gpu, wl, &reports[0]));
+    }
+    anyhow::ensure!(
+        !all.is_empty(),
+        "no SLA-feasible deployment option on any fleet leg — relax the SLA or widen the fleet"
+    );
+    let considered = all.len();
+
+    // 2. k-objective frontier prune (schedule-transparent).
+    let kept: Vec<usize> =
+        if spec.prune { prune_options(&all) } else { (0..all.len()).collect() };
+    let pruned_set: Vec<PricedOption> = kept.iter().map(|&i| all[i].clone()).collect();
+
+    // 3. Exact per-window min-cost schedule.
+    let sched = optimize(&pruned_set, &demands, spec.window_h, spec.max_gpus);
+    let mut windows = Vec::with_capacity(spec.windows);
+    for (w, choice) in sched.choices.iter().enumerate() {
+        let c = choice.ok_or_else(|| {
+            anyhow::anyhow!(
+                "window {w} (demand {:.1} QPS) cannot be served by any option (GPU cap: {:?})",
+                demands[w],
+                spec.max_gpus
+            )
+        })?;
+        let o = &pruned_set[c.option];
+        windows.push(WindowPlan {
+            index: w,
+            t_start_h: w as f64 * spec.window_h,
+            t_end_h: (w + 1) as f64 * spec.window_h,
+            demand_qps: demands[w],
+            gpu: o.gpu.clone(),
+            cand: o.cand.clone(),
+            replicas: c.replicas,
+            gpus: c.replicas as u64 * o.unit_gpus as u64,
+            capacity_qps: c.replicas as f64 * o.qps_per_unit,
+            est: o.est,
+            cost_usd: c.cost_usd,
+        });
+    }
+
+    // Reference points: best single-GPU-type schedule and static peak
+    // provisioning (both over the *unpruned* option set, so they are
+    // honest baselines rather than artifacts of the prune).
+    let mut best_homogeneous: Option<(String, f64)> = None;
+    let mut gpu_names: Vec<&str> = all.iter().map(|o| o.gpu.as_str()).collect();
+    gpu_names.sort_unstable();
+    gpu_names.dedup();
+    for name in gpu_names {
+        let subset: Vec<PricedOption> =
+            all.iter().filter(|o| o.gpu == name).cloned().collect();
+        let s = optimize(&subset, &demands, spec.window_h, spec.max_gpus);
+        if s.choices.iter().all(|c| c.is_some())
+            && best_homogeneous.as_ref().map_or(true, |(_, c)| s.total_cost_usd < *c)
+        {
+            best_homogeneous = Some((name.to_string(), s.total_cost_usd));
+        }
+    }
+    let peak = demands.iter().cloned().fold(0.0f64, f64::max);
+    let static_peak_cost_usd = choose_window(&all, peak, spec.window_h, spec.max_gpus)
+        .map(|c| c.cost_usd * spec.windows as f64)
+        .unwrap_or(f64::INFINITY);
+
+    Ok(DeploymentPlan {
+        windows,
+        total_cost_usd: sched.total_cost_usd,
+        best_homogeneous,
+        static_peak_cost_usd,
+        options_considered: considered,
+        options_pruned: considered - kept.len(),
+    })
+}
+
+/// Plan with fresh (cold) memos over plain oracles — the CLI path.
+pub fn plan(
+    model: &ModelArch,
+    framework: Framework,
+    spec: &PlanSpec,
+    fleet: &[(ClusterSpec, &dyn LatencyOracle)],
+) -> anyhow::Result<DeploymentPlan> {
+    let memos: Vec<MemoOracle<'_>> =
+        fleet.iter().map(|(_, oracle)| MemoOracle::new(*oracle)).collect();
+    let legs: Vec<(ClusterSpec, &MemoOracle<'_>)> =
+        fleet.iter().zip(&memos).map(|((cluster, _), memo)| (*cluster, memo)).collect();
+    plan_cached(model, framework, spec, &legs)
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+    use crate::config::{EngineConfig, ParallelSpec, RuntimeFlags};
+    use crate::models::Dtype;
+
+    /// A synthetic option: the schedule layer only reads `unit_gpus`,
+    /// `usd_per_hour`, `qps_per_unit` and the objectives.
+    pub fn opt(gpu: &str, unit_gpus: u32, usd_per_hour: f64, qps: f64, speed: f64) -> PricedOption {
+        let eng = EngineConfig {
+            framework: Framework::TrtLlm,
+            parallel: ParallelSpec::tp(unit_gpus),
+            batch: 16,
+            weight_dtype: Dtype::Fp8,
+            kv_dtype: Dtype::Fp8,
+            flags: RuntimeFlags::defaults_for(Framework::TrtLlm),
+        };
+        PricedOption {
+            gpu: gpu.to_string(),
+            cand: Candidate::Aggregated { engine: eng, replicas: 1 },
+            unit_gpus,
+            usd_per_hour,
+            qps_per_unit: qps,
+            est: PerfEstimate {
+                ttft_ms: 100.0,
+                tpot_ms: 1000.0 / speed,
+                speed,
+                thru_per_gpu: 1.0,
+                concurrency: 16,
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware::{a100_sxm, h100_sxm};
+    use crate::models::by_name;
+    use crate::silicon::Silicon;
+
+    fn spec(windows: usize) -> PlanSpec {
+        PlanSpec::new(
+            WorkloadSpec::new("llama3.1-8b", 1024, 128, 2000.0, 10.0),
+            TrafficModel::Diurnal { peak_qps: 120.0, trough_qps: 5.0, period_h: 24.0 },
+            windows,
+            24.0 / windows as f64,
+        )
+    }
+
+    #[test]
+    fn plan_serves_every_window_and_scales_with_demand() {
+        let model = by_name("llama3.1-8b").unwrap();
+        let cluster = ClusterSpec::new(h100_sxm(), 8, 1);
+        let sil = Silicon::new(cluster, Framework::TrtLlm.profile());
+        let spec = spec(8);
+        let p = plan(&model, Framework::TrtLlm, &spec, &[(cluster, &sil)]).unwrap();
+        assert_eq!(p.windows.len(), 8);
+        assert!(p.total_cost_usd > 0.0);
+        assert!(p.options_considered > 0);
+        let demands = spec.traffic.qps_window_peak(8, 3.0);
+        for (w, d) in p.windows.iter().zip(&demands) {
+            assert_eq!(w.demand_qps, *d);
+            assert!(w.capacity_qps >= w.demand_qps, "window {} under-provisioned", w.index);
+            assert!(w.est.meets(&spec.workload.sla));
+            assert!(w.gpus >= w.replicas as u64, "unit is at least one GPU");
+        }
+        // Min-cost per window is nondecreasing in demand, so the peak
+        // window costs at least the trough window.
+        let peak = p.windows.iter().cloned().fold(None::<WindowPlan>, |m, w| match m {
+            Some(b) if b.demand_qps >= w.demand_qps => Some(b),
+            _ => Some(w),
+        });
+        let trough = p.windows.iter().cloned().fold(None::<WindowPlan>, |m, w| match m {
+            Some(b) if b.demand_qps <= w.demand_qps => Some(b),
+            _ => Some(w),
+        });
+        assert!(peak.unwrap().cost_usd >= trough.unwrap().cost_usd);
+        // The traffic-aware schedule can't cost more than static peak
+        // provisioning, or than the best homogeneous schedule.
+        assert!(p.total_cost_usd <= p.static_peak_cost_usd + 1e-9);
+        let (_, homo) = p.best_homogeneous.clone().unwrap();
+        assert!(p.total_cost_usd <= homo + 1e-9);
+    }
+
+    #[test]
+    fn pruned_plan_equals_exhaustive_plan_end_to_end() {
+        let model = by_name("llama3.1-8b").unwrap();
+        let legs = [
+            ClusterSpec::new(h100_sxm(), 8, 1),
+            ClusterSpec::new(a100_sxm(), 8, 1),
+        ];
+        let sils: Vec<Silicon> =
+            legs.iter().map(|c| Silicon::new(*c, Framework::TrtLlm.profile())).collect();
+        let fleet: Vec<(ClusterSpec, &dyn LatencyOracle)> = legs
+            .iter()
+            .zip(&sils)
+            .map(|(c, s)| (*c, s as &dyn LatencyOracle))
+            .collect();
+        let mut sp = spec(6);
+        sp.prune = true;
+        let pruned = plan(&model, Framework::TrtLlm, &sp, &fleet).unwrap();
+        sp.prune = false;
+        let full = plan(&model, Framework::TrtLlm, &sp, &fleet).unwrap();
+        assert!(pruned.options_pruned > 0, "prune should discard something");
+        assert_eq!(full.options_pruned, 0);
+        assert_eq!(pruned.total_cost_usd, full.total_cost_usd);
+        assert_eq!(pruned.windows.len(), full.windows.len());
+        for (a, b) in pruned.windows.iter().zip(&full.windows) {
+            assert_eq!(a.gpu, b.gpu);
+            assert_eq!(a.cand, b.cand);
+            assert_eq!(a.replicas, b.replicas);
+            assert_eq!(a.cost_usd, b.cost_usd);
+        }
+    }
+
+    #[test]
+    fn warm_memo_plans_are_identical() {
+        let model = by_name("llama3.1-8b").unwrap();
+        let cluster = ClusterSpec::new(h100_sxm(), 8, 1);
+        let sil = Silicon::new(cluster, Framework::TrtLlm.profile());
+        let memo = MemoOracle::new(&sil);
+        let legs: Vec<(ClusterSpec, &MemoOracle<'_>)> = vec![(cluster, &memo)];
+        let sp = spec(4);
+        let a = plan_cached(&model, Framework::TrtLlm, &sp, &legs).unwrap();
+        let b = plan_cached(&model, Framework::TrtLlm, &sp, &legs).unwrap();
+        let (hits, _) = memo.stats();
+        assert!(hits > 0);
+        assert_eq!(a.total_cost_usd, b.total_cost_usd);
+        for (x, y) in a.windows.iter().zip(&b.windows) {
+            assert_eq!(x.cand, y.cand);
+            assert_eq!(x.replicas, y.replicas);
+        }
+    }
+
+    #[test]
+    fn infeasible_sla_is_a_clean_error() {
+        let model = by_name("llama3.1-8b").unwrap();
+        let cluster = ClusterSpec::new(h100_sxm(), 8, 1);
+        let sil = Silicon::new(cluster, Framework::TrtLlm.profile());
+        let mut sp = spec(2);
+        sp.workload.sla.min_speed = 1e9; // nothing generates that fast
+        let err = plan(&model, Framework::TrtLlm, &sp, &[(cluster, &sil)]).unwrap_err();
+        assert!(err.to_string().contains("no SLA-feasible"), "{err:#}");
+    }
+
+    #[test]
+    fn to_json_shape() {
+        let model = by_name("llama3.1-8b").unwrap();
+        let cluster = ClusterSpec::new(h100_sxm(), 8, 1);
+        let sil = Silicon::new(cluster, Framework::TrtLlm.profile());
+        let sp = spec(3);
+        let p = plan(&model, Framework::TrtLlm, &sp, &[(cluster, &sil)]).unwrap();
+        let j = p.to_json(&sp.workload);
+        assert_eq!(j.req("windows").unwrap().as_arr().unwrap().len(), 3);
+        assert!(j.req_f64("total_cost_usd").unwrap() > 0.0);
+        assert!(j.req_f64("static_peak_cost_usd").unwrap() >= j.req_f64("total_cost_usd").unwrap());
+        let w0 = &j.req("windows").unwrap().as_arr().unwrap()[0];
+        assert!(w0.req_f64("replicas").unwrap() >= 0.0);
+        assert!(w0.get("config").is_some());
+    }
+}

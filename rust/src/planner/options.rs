@@ -1,0 +1,210 @@
+//! Deployment options: the supply side of the capacity planner.
+//!
+//! A [`PricedOption`] is one *unit* of deployable capacity — a single
+//! engine replica (aggregated) or one whole (x)P(y)D composite
+//! (disaggregated) — priced in $/hour from the GPU preset's
+//! `usd_per_hour` and rated in sustainable queries/s from the sweep
+//! engine's throughput estimate. The planner scales units per window,
+//! so options from different GPU types mix freely in one schedule.
+//!
+//! [`prune_options`] discards options that can never appear in a
+//! cost-minimal schedule using the k-objective
+//! [`crate::pareto::FrontierAccumulator`] over
+//! (−$/hour, capacity, speed, −GPU footprint). The drop is *provably*
+//! safe under the ceiling replica count: if A costs no more per unit
+//! and serves no fewer QPS per unit than B, then for every demand d,
+//! `ceil(d/cap_A) ≤ ceil(d/cap_B)` and so
+//! `ceil(d/cap_A)·cost_A ≤ ceil(d/cap_B)·cost_B` — A's window cost
+//! never exceeds B's. The footprint objective makes the same argument
+//! hold under a per-window GPU cap (A's footprint
+//! `n_A·gpus_A ≤ n_B·gpus_B` stays cap-feasible whenever B's was), and
+//! the speed objective only ever *keeps more* options. The pruned
+//! planner therefore returns exactly the schedule exhaustive
+//! enumeration finds (regression-tested).
+
+use crate::config::{Candidate, WorkloadSpec};
+use crate::hardware::GpuSpec;
+use crate::pareto::FrontierAccumulator;
+use crate::perfmodel::PerfEstimate;
+use crate::search::SearchReport;
+
+/// One unit of deployable, SLA-feasible capacity.
+#[derive(Clone, Debug)]
+pub struct PricedOption {
+    /// GPU preset name (the fleet leg this option deploys on).
+    pub gpu: String,
+    /// The deployment unit: aggregated candidates are normalized to
+    /// **one** engine replica; disaggregated candidates are one whole
+    /// (x)P(y)D composite.
+    pub cand: Candidate,
+    /// GPUs per unit.
+    pub unit_gpus: u32,
+    /// $/hour per unit (unit_gpus × the GPU's list price).
+    pub usd_per_hour: f64,
+    /// Sustainable request rate per unit, queries/s
+    /// (tokens/s/GPU × unit GPUs ÷ OSL tokens/request).
+    pub qps_per_unit: f64,
+    /// The sweep engine's per-request projection (replica-invariant).
+    pub est: PerfEstimate,
+}
+
+impl PricedOption {
+    /// The planner's maximized objectives: (−cost/h, capacity, speed,
+    /// −GPU footprint). The footprint coordinate exists for the GPU-cap
+    /// safety argument (module docs); within one GPU type it is
+    /// redundant with cost, across types it is not.
+    pub fn objectives(&self) -> [f64; 4] {
+        [-self.usd_per_hour, self.qps_per_unit, self.est.speed, -(self.unit_gpus as f64)]
+    }
+}
+
+/// Extract the SLA-feasible options of one fleet leg from a sweep
+/// report (which must be **unpruned**: the engine's 2-objective
+/// (speed, thru) in-sweep pruning is not cost-aware, so a cheaper
+/// small-footprint option could be lost). Order follows the report.
+pub fn options_from_report(
+    gpu: &GpuSpec,
+    wl: &WorkloadSpec,
+    report: &SearchReport,
+) -> Vec<PricedOption> {
+    let mut out = Vec::new();
+    for e in &report.evaluated {
+        if !e.est.meets(&wl.sla) {
+            continue;
+        }
+        let unit = match &e.cand {
+            Candidate::Aggregated { engine, .. } => {
+                Candidate::Aggregated { engine: *engine, replicas: 1 }
+            }
+            disagg => disagg.clone(),
+        };
+        let unit_gpus = unit.total_gpus();
+        if unit_gpus == 0 || wl.osl == 0 {
+            continue;
+        }
+        let qps = e.est.thru_per_gpu * unit_gpus as f64 / wl.osl as f64;
+        if !qps.is_finite() || qps <= 0.0 {
+            continue;
+        }
+        out.push(PricedOption {
+            gpu: gpu.name.to_string(),
+            cand: unit,
+            unit_gpus,
+            usd_per_hour: unit_gpus as f64 * gpu.usd_per_hour,
+            qps_per_unit: qps,
+            est: e.est,
+        });
+    }
+    out
+}
+
+/// Indices of the options surviving the k-objective frontier prune, in
+/// input order. Mirrors the sweep engine's accumulator discipline:
+/// members later evicted from the running frontier stay *kept* (they
+/// were non-dominated when offered), which is exactly what makes the
+/// exhaustive argmin always survive — see the module docs for the
+/// proof sketch.
+pub fn prune_options(options: &[PricedOption]) -> Vec<usize> {
+    let mut acc = FrontierAccumulator::new();
+    let mut kept = Vec::new();
+    for (i, o) in options.iter().enumerate() {
+        if acc.offer_point(&o.objectives()) {
+            kept.push(i);
+        }
+    }
+    kept
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{EngineConfig, ParallelSpec, RuntimeFlags, Sla};
+    use crate::frameworks::Framework;
+    use crate::hardware::h100_sxm;
+    use crate::models::Dtype;
+    use crate::search::runner::Evaluated;
+
+    fn engine(tp: u32, batch: u32) -> EngineConfig {
+        EngineConfig {
+            framework: Framework::TrtLlm,
+            parallel: ParallelSpec::tp(tp),
+            batch,
+            weight_dtype: Dtype::Fp8,
+            kv_dtype: Dtype::Fp8,
+            flags: RuntimeFlags::defaults_for(Framework::TrtLlm),
+        }
+    }
+
+    fn evaluated(tp: u32, replicas: u32, thru: f64, speed: f64, ttft: f64) -> Evaluated {
+        Evaluated {
+            cand: Candidate::Aggregated { engine: engine(tp, 16), replicas },
+            est: PerfEstimate {
+                ttft_ms: ttft,
+                tpot_ms: 1000.0 / speed,
+                speed,
+                thru_per_gpu: thru,
+                concurrency: 16,
+            },
+        }
+    }
+
+    fn report(evs: Vec<Evaluated>) -> SearchReport {
+        SearchReport {
+            configs_priced: evs.len(),
+            evaluated: evs,
+            pruned: 0,
+            elapsed_s: 0.0,
+            median_config_ms: 0.0,
+        }
+    }
+
+    #[test]
+    fn units_are_single_replicas_priced_by_footprint() {
+        let gpu = h100_sxm();
+        let wl = WorkloadSpec {
+            model: "llama3.1-8b".into(),
+            isl: 1024,
+            osl: 100,
+            prefix: 0,
+            sla: Sla { ttft_ms: 1000.0, min_speed: 10.0 },
+        };
+        // 8 replicas of a TP1 engine at 500 tok/s/GPU: the unit is ONE
+        // replica — 1 GPU, 500/100 = 5 QPS, one GPU-hour of cost.
+        let r = report(vec![
+            evaluated(1, 8, 500.0, 20.0, 500.0),
+            evaluated(4, 2, 300.0, 40.0, 300.0),
+            evaluated(1, 8, 500.0, 20.0, 2000.0), // TTFT violates SLA
+        ]);
+        let opts = options_from_report(&gpu, &wl, &r);
+        assert_eq!(opts.len(), 2, "SLA filter must drop the slow option");
+        assert_eq!(opts[0].unit_gpus, 1);
+        assert!(matches!(opts[0].cand, Candidate::Aggregated { replicas: 1, .. }));
+        assert!((opts[0].qps_per_unit - 5.0).abs() < 1e-9);
+        assert_eq!(opts[0].usd_per_hour, gpu.usd_per_hour);
+        // TP4 unit: 4 GPUs, 300·4/100 = 12 QPS, 4 GPU-hours of cost.
+        assert_eq!(opts[1].unit_gpus, 4);
+        assert!((opts[1].qps_per_unit - 12.0).abs() < 1e-9);
+        assert_eq!(opts[1].usd_per_hour, 4.0 * gpu.usd_per_hour);
+    }
+
+    #[test]
+    fn prune_keeps_cost_capacity_tradeoffs_drops_dominated() {
+        let gpu = h100_sxm();
+        let wl = WorkloadSpec {
+            model: "llama3.1-8b".into(),
+            isl: 1024,
+            osl: 100,
+            prefix: 0,
+            sla: Sla { ttft_ms: f64::INFINITY, min_speed: 0.0 },
+        };
+        let r = report(vec![
+            evaluated(1, 8, 500.0, 20.0, 500.0), // 1 GPU, 5 QPS
+            evaluated(4, 2, 300.0, 20.0, 500.0), // 4 GPUs, 12 QPS — trade-off, kept
+            evaluated(4, 2, 200.0, 20.0, 500.0), // 4 GPUs, 8 QPS — dominated by ↑
+            evaluated(1, 8, 500.0, 20.0, 500.0), // exact duplicate of idx 0 — dropped
+        ]);
+        let opts = options_from_report(&gpu, &wl, &r);
+        assert_eq!(opts.len(), 4);
+        assert_eq!(prune_options(&opts), vec![0, 1]);
+    }
+}

@@ -1,0 +1,236 @@
+//! Schedule optimization: pick a replica count of one deployment option
+//! per traffic window at minimum total cost.
+//!
+//! Windows are independent (no switching cost is modeled — replica
+//! counts change at window boundaries the way autoscalers re-target),
+//! so the globally cost-minimal schedule decomposes into per-window
+//! argmins; [`optimize`] is therefore *exact*, and the brute-force
+//! enumeration in the tests only exists to pin that fact. Ties break
+//! deterministically toward the earliest option in input order, which
+//! is also what makes the pruned planner bit-identical to the
+//! exhaustive one (see [`super::options`]).
+
+use super::options::PricedOption;
+
+/// Replicas of an option needed to serve `demand_qps` (ceiling; 0 when
+/// there is no demand — scale-to-zero). `None` when the count would
+/// overflow the u32 replica granularity — the option simply cannot
+/// serve that demand (a saturating cast here would silently report an
+/// under-provisioned schedule as feasible).
+pub fn replicas_needed(demand_qps: f64, qps_per_unit: f64) -> Option<u32> {
+    if demand_qps <= 0.0 {
+        return Some(0);
+    }
+    debug_assert!(qps_per_unit > 0.0);
+    let n = (demand_qps / qps_per_unit).ceil();
+    if n.is_finite() && n <= u32::MAX as f64 {
+        Some(n as u32)
+    } else {
+        None
+    }
+}
+
+/// One window's decision.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct WindowChoice {
+    /// Index into the option slice handed to [`optimize`].
+    pub option: usize,
+    pub replicas: u32,
+    pub cost_usd: f64,
+}
+
+/// A full schedule over the horizon. `choices[w]` is `None` when no
+/// option can serve window `w` under the GPU cap.
+#[derive(Clone, Debug)]
+pub struct Schedule {
+    pub choices: Vec<Option<WindowChoice>>,
+    /// Sum over the served windows.
+    pub total_cost_usd: f64,
+}
+
+/// Cheapest (option, replicas) for one window, scanning options in
+/// order and keeping the first strict improvement. `max_gpus` caps the
+/// window's total GPU footprint (options needing more are skipped).
+pub fn choose_window(
+    options: &[PricedOption],
+    demand_qps: f64,
+    window_h: f64,
+    max_gpus: Option<u32>,
+) -> Option<WindowChoice> {
+    let mut best: Option<WindowChoice> = None;
+    for (i, o) in options.iter().enumerate() {
+        let Some(n) = replicas_needed(demand_qps, o.qps_per_unit) else {
+            continue; // demand beyond this option's replica range
+        };
+        if let Some(cap) = max_gpus {
+            if n as u64 * o.unit_gpus as u64 > cap as u64 {
+                continue;
+            }
+        }
+        let cost = n as f64 * o.usd_per_hour * window_h;
+        if best.map_or(true, |b| cost < b.cost_usd) {
+            best = Some(WindowChoice { option: i, replicas: n, cost_usd: cost });
+        }
+    }
+    best
+}
+
+/// Exact min-cost schedule for a demand curve (one [`choose_window`]
+/// per window).
+pub fn optimize(
+    options: &[PricedOption],
+    demands_qps: &[f64],
+    window_h: f64,
+    max_gpus: Option<u32>,
+) -> Schedule {
+    let choices: Vec<Option<WindowChoice>> = demands_qps
+        .iter()
+        .map(|&d| choose_window(options, d, window_h, max_gpus))
+        .collect();
+    let total_cost_usd = choices.iter().flatten().map(|c| c.cost_usd).sum();
+    Schedule { choices, total_cost_usd }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::planner::options::prune_options;
+    use crate::planner::testutil::opt;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn replica_ceiling() {
+        assert_eq!(replicas_needed(0.0, 5.0), Some(0));
+        assert_eq!(replicas_needed(-1.0, 5.0), Some(0));
+        assert_eq!(replicas_needed(0.1, 5.0), Some(1));
+        assert_eq!(replicas_needed(5.0, 5.0), Some(1));
+        assert_eq!(replicas_needed(5.01, 5.0), Some(2));
+        assert_eq!(replicas_needed(50.0, 5.0), Some(10));
+        // Beyond u32 granularity: infeasible, never a saturated count.
+        assert_eq!(replicas_needed(1e18, 1e-6), None);
+        assert_eq!(replicas_needed(u32::MAX as f64 * 10.0, 1.0), None);
+    }
+
+    #[test]
+    fn window_picks_min_cost_with_ceiling_effects() {
+        // big: $10/h serves 10 QPS; small: $3/h serves 2 QPS. At 10 QPS
+        // the big unit wins (10 vs 5×3=15); at 1 QPS the small one
+        // (3 vs 10) — the ceiling is what makes both survive.
+        let opts = vec![opt("big", 8, 10.0, 10.0, 30.0), opt("small", 1, 3.0, 2.0, 30.0)];
+        let hi = choose_window(&opts, 10.0, 1.0, None).unwrap();
+        assert_eq!((hi.option, hi.replicas, hi.cost_usd), (0, 1, 10.0));
+        let lo = choose_window(&opts, 1.0, 1.0, None).unwrap();
+        assert_eq!((lo.option, lo.replicas, lo.cost_usd), (1, 1, 3.0));
+        // GPU cap can forbid the big option.
+        let capped = choose_window(&opts, 10.0, 1.0, Some(6)).unwrap();
+        assert_eq!((capped.option, capped.replicas, capped.cost_usd), (1, 5, 15.0));
+        // An impossible cap yields no choice.
+        assert!(choose_window(&opts, 10.0, 1.0, Some(0)).is_none());
+    }
+
+    /// The acceptance pin: a mixed-GPU schedule strictly beats the best
+    /// single-GPU-type schedule on a diurnal-style two-level demand.
+    #[test]
+    fn heterogeneous_fleet_beats_best_homogeneous_pinned() {
+        let opts = vec![opt("h100", 8, 10.0, 10.0, 30.0), opt("a100", 1, 3.0, 2.0, 25.0)];
+        let demands = [10.0, 1.0]; // peak window, trough window
+        let het = optimize(&opts, &demands, 1.0, None);
+        assert_eq!(het.total_cost_usd, 13.0); // 10 (h100 at peak) + 3 (a100 at trough)
+        let homo_h100 = optimize(&opts[..1], &demands, 1.0, None);
+        let homo_a100 = optimize(&opts[1..], &demands, 1.0, None);
+        assert_eq!(homo_h100.total_cost_usd, 20.0);
+        assert_eq!(homo_a100.total_cost_usd, 18.0); // 5×3 + 1×3
+        assert!(het.total_cost_usd < homo_h100.total_cost_usd.min(homo_a100.total_cost_usd));
+        // And the schedule really mixes GPU types across windows.
+        let gpus: Vec<&str> = het
+            .choices
+            .iter()
+            .map(|c| opts[c.unwrap().option].gpu.as_str())
+            .collect();
+        assert_eq!(gpus, vec!["h100", "a100"]);
+    }
+
+    #[test]
+    fn zero_demand_windows_cost_nothing() {
+        let opts = vec![opt("g", 1, 2.0, 4.0, 20.0)];
+        let s = optimize(&opts, &[0.0, 8.0, 0.0], 2.0, None);
+        let c: Vec<(u32, f64)> =
+            s.choices.iter().map(|x| (x.unwrap().replicas, x.unwrap().cost_usd)).collect();
+        assert_eq!(c, vec![(0, 0.0), (2, 8.0), (0, 0.0)]);
+        assert_eq!(s.total_cost_usd, 8.0);
+    }
+
+    /// Brute-force pin of optimality AND prune-transparency: on random
+    /// small grids, (a) every per-window choice is the true argmin over
+    /// all (option, minimal-replica) pairs, and (b) optimizing over the
+    /// k-frontier-pruned option subset returns the *same* schedule —
+    /// same original options, same replicas, same cost.
+    #[test]
+    fn pruned_schedule_matches_exhaustive_bruteforce_on_random_grids() {
+        let mut rng = Rng::new(0x9_1A7);
+        for case in 0..200 {
+            let n_opts = 1 + rng.below(12) as usize;
+            let opts: Vec<PricedOption> = (0..n_opts)
+                .map(|i| {
+                    // Coarse values force cost/capacity ties.
+                    opt(
+                        if i % 2 == 0 { "h100" } else { "a100" },
+                        1 + rng.below(8) as u32,
+                        1.0 + rng.below(6) as f64 * 2.0,
+                        1.0 + rng.below(6) as f64 * 3.0,
+                        10.0 + rng.below(4) as f64 * 10.0,
+                    )
+                })
+                .collect();
+            let windows = 1 + rng.below(6) as usize;
+            let demands: Vec<f64> =
+                (0..windows).map(|_| rng.below(40) as f64).collect();
+            let window_h = 0.5 + rng.f64();
+            let cap = if rng.below(3) == 0 { Some(8 + rng.below(40) as u32) } else { None };
+
+            let full = optimize(&opts, &demands, window_h, cap);
+            // (a) brute force: scan every option for every window.
+            for (w, &d) in demands.iter().enumerate() {
+                let mut best: Option<(usize, u32, f64)> = None;
+                for (i, o) in opts.iter().enumerate() {
+                    let Some(n) = replicas_needed(d, o.qps_per_unit) else { continue };
+                    if let Some(c) = cap {
+                        if n as u64 * o.unit_gpus as u64 > c as u64 {
+                            continue;
+                        }
+                    }
+                    let cost = n as f64 * o.usd_per_hour * window_h;
+                    if best.map_or(true, |(_, _, b)| cost < b) {
+                        best = Some((i, n, cost));
+                    }
+                }
+                match (best, full.choices[w]) {
+                    (None, None) => {}
+                    (Some((i, n, c)), Some(ch)) => {
+                        assert_eq!((i, n), (ch.option, ch.replicas), "case {case} w{w}");
+                        assert_eq!(c, ch.cost_usd, "case {case} w{w}");
+                    }
+                    other => panic!("case {case} w{w}: {other:?}"),
+                }
+            }
+            // (b) prune transparency: identical schedule through the
+            // k-objective frontier subset.
+            let kept = prune_options(&opts);
+            let pruned_opts: Vec<PricedOption> =
+                kept.iter().map(|&i| opts[i].clone()).collect();
+            let pruned = optimize(&pruned_opts, &demands, window_h, cap);
+            assert_eq!(pruned.total_cost_usd, full.total_cost_usd, "case {case}");
+            for (w, (a, b)) in full.choices.iter().zip(&pruned.choices).enumerate() {
+                match (a, b) {
+                    (None, None) => {}
+                    (Some(a), Some(b)) => {
+                        assert_eq!(a.option, kept[b.option], "case {case} w{w}: option");
+                        assert_eq!(a.replicas, b.replicas, "case {case} w{w}: replicas");
+                        assert_eq!(a.cost_usd, b.cost_usd, "case {case} w{w}: cost");
+                    }
+                    other => panic!("case {case} w{w}: {other:?}"),
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,322 @@
+//! Time-varying traffic models: the demand side of the capacity
+//! planner. Each model turns a planning horizon of `windows` windows of
+//! `window_h` hours into a deterministic per-window QPS curve; the
+//! bursty model draws from [`crate::util::rng`] so every curve is
+//! reproducible from its seed. [`TrafficModel::trace`] additionally
+//! materializes the curve as an open-loop request trace
+//! ([`crate::workload::piecewise_poisson`]) for simulator validation of
+//! a planned schedule.
+
+use crate::config::WorkloadSpec;
+use crate::util::json::{self, Json};
+use crate::util::rng::Rng;
+use crate::workload::{self, Request};
+
+/// A deterministic time-varying QPS model over the planning horizon.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TrafficModel {
+    /// Smooth day/night cycle: starts at `trough_qps`, peaks at
+    /// `peak_qps` half a `period_h` in (raised-cosine shape).
+    Diurnal { peak_qps: f64, trough_qps: f64, period_h: f64 },
+    /// Linear ramp from `start_qps` (first window) to `end_qps` (last).
+    Ramp { start_qps: f64, end_qps: f64 },
+    /// Baseline load with randomly placed bursts: each window spikes to
+    /// `burst_qps` with probability `burst_prob`, else runs at
+    /// `base_qps`. Deterministic per `seed`.
+    Bursty { base_qps: f64, burst_qps: f64, burst_prob: f64, seed: u64 },
+}
+
+/// The diurnal raised-cosine demand at `t_h` hours (one definition for
+/// both the representative curve and the window-peak provisioning).
+fn raised_cosine(peak: f64, trough: f64, period_h: f64, t_h: f64) -> f64 {
+    let phase = 2.0 * std::f64::consts::PI * t_h / period_h.max(1e-9);
+    trough + (peak - trough) * 0.5 * (1.0 - phase.cos())
+}
+
+impl TrafficModel {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TrafficModel::Diurnal { .. } => "diurnal",
+            TrafficModel::Ramp { .. } => "ramp",
+            TrafficModel::Bursty { .. } => "bursty",
+        }
+    }
+
+    /// Demand at each window (evaluated at the window midpoint for the
+    /// continuous models), queries/s.
+    pub fn qps_curve(&self, windows: usize, window_h: f64) -> Vec<f64> {
+        assert!(window_h > 0.0, "window length must be positive");
+        match *self {
+            TrafficModel::Diurnal { peak_qps, trough_qps, period_h } => (0..windows)
+                .map(|i| raised_cosine(peak_qps, trough_qps, period_h, (i as f64 + 0.5) * window_h))
+                .collect(),
+            TrafficModel::Ramp { start_qps, end_qps } => (0..windows)
+                .map(|i| {
+                    if windows <= 1 {
+                        start_qps
+                    } else {
+                        start_qps + (end_qps - start_qps) * i as f64 / (windows - 1) as f64
+                    }
+                })
+                .collect(),
+            TrafficModel::Bursty { base_qps, burst_qps, burst_prob, seed } => {
+                let mut rng = Rng::new(seed);
+                (0..windows)
+                    .map(|_| if rng.f64() < burst_prob { burst_qps } else { base_qps })
+                    .collect()
+            }
+        }
+    }
+
+    /// Per-window demand the planner must **provision** for: the
+    /// maximum instantaneous demand inside each window, rather than
+    /// the representative sample [`Self::qps_curve`] reports. A
+    /// midpoint-provisioned rising window would run under-capacity at
+    /// its edges. Closed forms per model:
+    /// - diurnal: max of the window-edge samples, plus the crest value
+    ///   `peak_qps` whenever a crest time (`period·(k + 1/2)`) falls
+    ///   inside the window — exact for the raised cosine;
+    /// - ramp: conservative neighbor-max of the window samples
+    ///   (monotone between samples);
+    /// - bursty: piecewise-constant, so the curve itself.
+    pub fn qps_window_peak(&self, windows: usize, window_h: f64) -> Vec<f64> {
+        match *self {
+            TrafficModel::Diurnal { peak_qps, trough_qps, period_h } => {
+                let period = period_h.max(1e-9);
+                let at = |t_h: f64| raised_cosine(peak_qps, trough_qps, period_h, t_h);
+                (0..windows)
+                    .map(|i| {
+                        let t0 = i as f64 * window_h;
+                        let t1 = (i + 1) as f64 * window_h;
+                        let mut m = at(t0).max(at(t1));
+                        let k = (t0 / period - 0.5).ceil();
+                        let crest = (k + 0.5) * period;
+                        if crest <= t1 {
+                            m = m.max(peak_qps);
+                        }
+                        m
+                    })
+                    .collect()
+            }
+            TrafficModel::Ramp { .. } => {
+                let curve = self.qps_curve(windows, window_h);
+                (0..windows).map(|i| curve[i].max(curve[(i + 1).min(windows - 1)])).collect()
+            }
+            TrafficModel::Bursty { .. } => self.qps_curve(windows, window_h),
+        }
+    }
+
+    /// Materialize the curve as an open-loop Poisson trace (for
+    /// validating a planned schedule against the ground-truth
+    /// simulator).
+    pub fn trace(
+        &self,
+        windows: usize,
+        window_h: f64,
+        wl: &WorkloadSpec,
+        len_jitter: f64,
+        seed: u64,
+    ) -> Vec<Request> {
+        let qps = self.qps_curve(windows, window_h);
+        workload::piecewise_poisson(&qps, window_h * 3600.0, wl.isl, wl.osl, len_jitter, seed)
+    }
+
+    /// Parse from the JSON wire format, e.g.
+    /// `{"kind": "diurnal", "peak_qps": 200, "trough_qps": 20, "period_h": 24}`,
+    /// `{"kind": "ramp", "start_qps": 10, "end_qps": 300}`,
+    /// `{"kind": "bursty", "base_qps": 40, "burst_qps": 400, "burst_prob": 0.2, "seed": 7}`.
+    pub fn from_json(j: &Json) -> anyhow::Result<TrafficModel> {
+        let kind = j.req_str("kind")?;
+        let model = match kind {
+            "diurnal" => TrafficModel::Diurnal {
+                peak_qps: j.req_f64("peak_qps")?,
+                trough_qps: j.f64_or("trough_qps", 0.0),
+                period_h: j.f64_or("period_h", 24.0),
+            },
+            "ramp" => TrafficModel::Ramp {
+                start_qps: j.req_f64("start_qps")?,
+                end_qps: j.req_f64("end_qps")?,
+            },
+            "bursty" => {
+                // The wire format carries numbers as f64, so only
+                // integer seeds up to 2^53 survive the round-trip;
+                // reject anything else rather than silently planning a
+                // different curve than the client asked for.
+                let seed = match j.get("seed") {
+                    None => 7,
+                    Some(v) => {
+                        let f = v
+                            .as_f64()
+                            .ok_or_else(|| anyhow::anyhow!("bursty 'seed' must be a number"))?;
+                        anyhow::ensure!(
+                            f >= 0.0 && f.fract() == 0.0 && f <= 9_007_199_254_740_992.0,
+                            "bursty 'seed' must be a non-negative integer ≤ 2^53 \
+                             (JSON numbers are f64)"
+                        );
+                        f as u64
+                    }
+                };
+                TrafficModel::Bursty {
+                    base_qps: j.req_f64("base_qps")?,
+                    burst_qps: j.req_f64("burst_qps")?,
+                    burst_prob: j.f64_or("burst_prob", 0.15),
+                    seed,
+                }
+            }
+            other => anyhow::bail!("unknown traffic kind '{other}' (diurnal|ramp|bursty)"),
+        };
+        model.validate()?;
+        Ok(model)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("kind", json::s(self.name()));
+        match *self {
+            TrafficModel::Diurnal { peak_qps, trough_qps, period_h } => {
+                o.set("peak_qps", json::num(peak_qps))
+                    .set("trough_qps", json::num(trough_qps))
+                    .set("period_h", json::num(period_h));
+            }
+            TrafficModel::Ramp { start_qps, end_qps } => {
+                o.set("start_qps", json::num(start_qps)).set("end_qps", json::num(end_qps));
+            }
+            TrafficModel::Bursty { base_qps, burst_qps, burst_prob, seed } => {
+                o.set("base_qps", json::num(base_qps))
+                    .set("burst_qps", json::num(burst_qps))
+                    .set("burst_prob", json::num(burst_prob))
+                    .set("seed", json::num(seed as f64));
+            }
+        }
+        o
+    }
+
+    /// Reject curves the planner can't mean anything sensible for.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        let ok = |v: f64| v.is_finite() && v >= 0.0;
+        match *self {
+            TrafficModel::Diurnal { peak_qps, trough_qps, period_h } => {
+                anyhow::ensure!(ok(peak_qps) && ok(trough_qps), "diurnal QPS must be ≥ 0");
+                anyhow::ensure!(peak_qps >= trough_qps, "peak_qps must be ≥ trough_qps");
+                anyhow::ensure!(period_h > 0.0, "period_h must be positive");
+            }
+            TrafficModel::Ramp { start_qps, end_qps } => {
+                anyhow::ensure!(ok(start_qps) && ok(end_qps), "ramp QPS must be ≥ 0");
+            }
+            TrafficModel::Bursty { base_qps, burst_qps, burst_prob, .. } => {
+                anyhow::ensure!(ok(base_qps) && ok(burst_qps), "bursty QPS must be ≥ 0");
+                anyhow::ensure!(
+                    (0.0..=1.0).contains(&burst_prob),
+                    "burst_prob must be in [0, 1]"
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn diurnal_stays_in_band_and_peaks_mid_period() {
+        let m = TrafficModel::Diurnal { peak_qps: 200.0, trough_qps: 20.0, period_h: 24.0 };
+        let q = m.qps_curve(24, 1.0);
+        assert_eq!(q.len(), 24);
+        assert!(q.iter().all(|&v| (20.0..=200.0).contains(&v)));
+        // First window sits near the trough, the mid-period window near
+        // the peak.
+        assert!(q[0] < 30.0, "q0={}", q[0]);
+        assert!(q[11] > 190.0 || q[12] > 190.0, "midday {} {}", q[11], q[12]);
+    }
+
+    #[test]
+    fn ramp_hits_both_endpoints() {
+        let m = TrafficModel::Ramp { start_qps: 10.0, end_qps: 110.0 };
+        let q = m.qps_curve(11, 2.0);
+        assert_eq!(q[0], 10.0);
+        assert_eq!(q[10], 110.0);
+        assert!(q.windows(2).all(|w| w[1] > w[0]));
+        assert_eq!(m.qps_curve(1, 1.0), vec![10.0]);
+    }
+
+    #[test]
+    fn bursty_is_two_level_and_seed_deterministic() {
+        let m = TrafficModel::Bursty { base_qps: 40.0, burst_qps: 400.0, burst_prob: 0.3, seed: 9 };
+        let q = m.qps_curve(200, 0.5);
+        assert!(q.iter().all(|&v| v == 40.0 || v == 400.0));
+        let bursts = q.iter().filter(|&&v| v == 400.0).count();
+        assert!(bursts > 20 && bursts < 120, "burst count {bursts}");
+        assert_eq!(q, m.qps_curve(200, 0.5));
+        let other = TrafficModel::Bursty {
+            base_qps: 40.0,
+            burst_qps: 400.0,
+            burst_prob: 0.3,
+            seed: 10,
+        };
+        assert_ne!(q, other.qps_curve(200, 0.5));
+    }
+
+    #[test]
+    fn window_peak_dominates_curve_and_captures_crests() {
+        // The reviewer-style case: 4 windows of 6 h over a 24 h period.
+        // The crest (t = 12 h) sits on the boundary of windows 1 and 2;
+        // both must provision the full peak, not the midpoint sample.
+        let m = TrafficModel::Diurnal { peak_qps: 300.0, trough_qps: 10.0, period_h: 24.0 };
+        let curve = m.qps_curve(4, 6.0);
+        let peak = m.qps_window_peak(4, 6.0);
+        assert_eq!(peak.len(), 4);
+        for (p, c) in peak.iter().zip(&curve) {
+            assert!(p >= c, "peak {p} < curve sample {c}");
+        }
+        assert_eq!(peak[1], 300.0);
+        assert_eq!(peak[2], 300.0);
+        assert!(curve[1] < 300.0, "midpoint sample must be below the crest");
+        // Monotone ramp: each window provisions for its higher edge.
+        let r = TrafficModel::Ramp { start_qps: 10.0, end_qps: 110.0 };
+        let rc = r.qps_curve(11, 1.0);
+        let rp = r.qps_window_peak(11, 1.0);
+        for i in 0..11 {
+            assert_eq!(rp[i], rc[(i + 1).min(10)]);
+        }
+        // Bursty is piecewise-constant: peak == curve.
+        let b = TrafficModel::Bursty { base_qps: 5.0, burst_qps: 50.0, burst_prob: 0.4, seed: 3 };
+        assert_eq!(b.qps_window_peak(40, 0.5), b.qps_curve(40, 0.5));
+    }
+
+    #[test]
+    fn json_roundtrip_all_kinds() {
+        let models = [
+            TrafficModel::Diurnal { peak_qps: 120.0, trough_qps: 12.0, period_h: 24.0 },
+            TrafficModel::Ramp { start_qps: 5.0, end_qps: 50.0 },
+            TrafficModel::Bursty { base_qps: 30.0, burst_qps: 300.0, burst_prob: 0.2, seed: 3 },
+        ];
+        for m in models {
+            let back = TrafficModel::from_json(&m.to_json()).unwrap();
+            assert_eq!(back, m);
+        }
+        assert!(TrafficModel::from_json(&json::parse(r#"{"kind":"square"}"#).unwrap()).is_err());
+        // Validation rejects inverted diurnal bands.
+        let bad = json::parse(r#"{"kind":"diurnal","peak_qps":1,"trough_qps":9}"#).unwrap();
+        assert!(TrafficModel::from_json(&bad).is_err());
+        // Seeds the f64 wire format would corrupt are rejected, not
+        // silently rewritten.
+        for bad_seed in ["-1", "1.5", "1e17"] {
+            let s = format!(r#"{{"kind":"bursty","base_qps":1,"burst_qps":2,"seed":{bad_seed}}}"#);
+            assert!(TrafficModel::from_json(&json::parse(&s).unwrap()).is_err(), "{bad_seed}");
+        }
+    }
+
+    #[test]
+    fn trace_follows_curve() {
+        let m = TrafficModel::Ramp { start_qps: 0.0, end_qps: 40.0 };
+        let wl = WorkloadSpec::new("llama3.1-8b", 512, 64, 1000.0, 10.0);
+        // Two windows of 1/100 hour (36 s): first silent, second ~40 QPS.
+        let t = m.trace(2, 0.01, &wl, 0.0, 21);
+        assert!(!t.is_empty());
+        assert!(t.iter().all(|r| r.arrival_ms >= 36_000.0));
+        let rate = t.len() as f64 / 36.0;
+        assert!((rate - 40.0).abs() < 10.0, "rate {rate}");
+    }
+}

@@ -13,16 +13,19 @@
 //! is also exactly the dynamic-batching shape the config-search service
 //! needs (many concurrent searches funneling queries into one executor).
 //!
-//! ## The `pjrt` cargo feature
+//! ## The `pjrt` and `xla` cargo features
 //!
 //! The PJRT path needs the `xla` crate (xla_extension bindings), which
 //! is a heavyweight native dependency this offline build does not ship.
 //! The real implementation is therefore gated behind the off-by-default
-//! `pjrt` feature; the default build substitutes API-compatible stubs
-//! whose `PjrtService::start` fails with a clear error, so every caller
-//! (CLI `--pjrt`, service artifacts mode, artifact-gated tests and
-//! examples) compiles unchanged and degrades gracefully to the native
-//! interpolation path.
+//! `xla` feature (which implies `pjrt`); both the default build and a
+//! `--features pjrt` build substitute API-compatible stubs whose
+//! `PjrtService::start` fails with a clear error, so every caller (CLI
+//! `--pjrt`, service artifacts mode, artifact-gated tests and examples)
+//! compiles unchanged and degrades gracefully to the native
+//! interpolation path. CI builds the `--features pjrt` stub path
+//! explicitly (feature-matrix job) so this gating cannot silently rot;
+//! only `--features xla` requires vendoring the native crate.
 
 pub mod manifest;
 
@@ -45,17 +48,18 @@ pub const MOE_SCENARIOS: usize = 256;
 pub const MOE_EXPERTS: usize = 128;
 
 // ---------------------------------------------------------------------------
-// Stub implementation (default build, no `pjrt` feature).
+// Stub implementation (any build without the `xla` feature — including
+// `--features pjrt`, which CI exercises).
 // ---------------------------------------------------------------------------
 
 /// Thread-safe handle to the PJRT evaluator thread (stub: the default
 /// build has no XLA runtime; `start` always errors).
-#[cfg(not(feature = "pjrt"))]
+#[cfg(not(feature = "xla"))]
 pub struct PjrtService {
     _priv: (),
 }
 
-#[cfg(not(feature = "pjrt"))]
+#[cfg(not(feature = "xla"))]
 impl PjrtService {
     /// Load artifacts from `dir` and bind `grids` as the interpolation
     /// surface. The stub validates the payload shape, then reports that
@@ -63,10 +67,10 @@ impl PjrtService {
     pub fn start(dir: &Path, grids: Vec<f32>) -> anyhow::Result<PjrtService> {
         anyhow::ensure!(grids.len() == GRID_LEN, "grid payload length {}", grids.len());
         anyhow::bail!(
-            "PJRT runtime unavailable: aiconfigurator was built without the `pjrt` \
-             feature (artifacts dir: {}). Rebuild with `--features pjrt` and a \
-             vendored `xla` crate, or drop the --pjrt/artifacts option to use the \
-             native interpolation path.",
+            "PJRT runtime unavailable: aiconfigurator was built without the `xla` \
+             feature (artifacts dir: {}). Rebuild with `--features xla` (implies pjrt) \
+             and a vendored `xla` crate, or drop the --pjrt/artifacts option to use \
+             the native interpolation path.",
             dir.display()
         )
     }
@@ -75,7 +79,7 @@ impl PjrtService {
     /// returns a service).
     pub fn interp(&self, tids: &[i32], coords: &[f32]) -> anyhow::Result<Vec<f32>> {
         anyhow::ensure!(coords.len() == tids.len() * 3, "coords shape mismatch");
-        anyhow::bail!("PJRT runtime unavailable (built without the `pjrt` feature)")
+        anyhow::bail!("PJRT runtime unavailable (built without the `xla` feature)")
     }
 
     /// Evaluate MoE power-law scenarios (stub).
@@ -88,7 +92,7 @@ impl PjrtService {
         let s = alpha.len();
         anyhow::ensure!(s <= MOE_SCENARIOS, "too many scenarios: {s}");
         anyhow::ensure!(u.len() == s * MOE_EXPERTS && params.len() == s * 3, "shape mismatch");
-        anyhow::bail!("PJRT runtime unavailable (built without the `pjrt` feature)")
+        anyhow::bail!("PJRT runtime unavailable (built without the `xla` feature)")
     }
 }
 
@@ -96,13 +100,13 @@ impl PjrtService {
 /// In the stub build it answers from the native database instead (it can
 /// never actually be constructed, since [`PjrtService::start`] errors,
 /// but call sites compile unchanged).
-#[cfg(not(feature = "pjrt"))]
+#[cfg(not(feature = "xla"))]
 pub struct PjrtOracle<'a> {
     pub svc: &'a PjrtService,
     pub db: &'a PerfDatabase,
 }
 
-#[cfg(not(feature = "pjrt"))]
+#[cfg(not(feature = "xla"))]
 impl LatencyOracle for PjrtOracle<'_> {
     fn op_latency_us(&self, op: &Op) -> f64 {
         match query_for(op) {
@@ -116,7 +120,7 @@ impl LatencyOracle for PjrtOracle<'_> {
 // Real implementation (requires the vendored `xla` crate).
 // ---------------------------------------------------------------------------
 
-#[cfg(feature = "pjrt")]
+#[cfg(feature = "xla")]
 mod pjrt_impl {
     use std::path::{Path, PathBuf};
     use std::sync::mpsc;
@@ -367,19 +371,19 @@ mod pjrt_impl {
     }
 }
 
-#[cfg(feature = "pjrt")]
+#[cfg(feature = "xla")]
 pub use pjrt_impl::PjrtService;
 
 /// [`LatencyOracle`] over the PJRT-executed Pallas interpolation kernel:
 /// the hot path the service uses. Ops map to queries exactly as the
 /// native path does; unprofiled ops use the same SoL fallback.
-#[cfg(feature = "pjrt")]
+#[cfg(feature = "xla")]
 pub struct PjrtOracle<'a> {
     pub svc: &'a PjrtService,
     pub db: &'a PerfDatabase,
 }
 
-#[cfg(feature = "pjrt")]
+#[cfg(feature = "xla")]
 impl LatencyOracle for PjrtOracle<'_> {
     fn op_latency_us(&self, op: &Op) -> f64 {
         match query_for(op) {
@@ -431,7 +435,7 @@ impl LatencyOracle for PjrtOracle<'_> {
     }
 }
 
-#[cfg(all(test, not(feature = "pjrt")))]
+#[cfg(all(test, not(feature = "xla")))]
 mod stub_tests {
     use super::*;
     use crate::perfdb::tables::GRID_LEN;

@@ -172,6 +172,23 @@ impl<'a> TaskRunner<'a> {
         opts: &RunOptions,
     ) -> Vec<SearchReport> {
         let memo = MemoOracle::new(oracle);
+        self.run_sweep_cached(&memo, scenarios, opts)
+    }
+
+    /// [`Self::run_sweep_with`] against a **caller-owned** memo, so
+    /// several sweeps can share one warm cache: the capacity planner
+    /// ([`crate::planner`]) prices every traffic window of every fleet
+    /// leg through the leg's memo, and callers that hold their memos
+    /// across plans (`planner::plan_cached`; the memo-warm half of
+    /// `benches/planner.rs`) skip straight to cache hits. Results are
+    /// identical to [`Self::run_sweep_with`] — the memo returns
+    /// bit-identical latencies (regression-tested).
+    pub fn run_sweep_cached(
+        &self,
+        memo: &MemoOracle<'_>,
+        scenarios: &[WorkloadSpec],
+        opts: &RunOptions,
+    ) -> Vec<SearchReport> {
         let agg_mode = self.space.modes.contains(&ServingMode::Aggregated);
         let disagg_mode = self.space.modes.contains(&ServingMode::Disaggregated);
         // Workload-independent structural grids, enumerated once.
@@ -201,7 +218,7 @@ impl<'a> TaskRunner<'a> {
                     prefill: pre_grid.iter().filter(|e| fits(e, 1)).copied().collect::<Vec<_>>(),
                     decode: if disagg_mode { filtered } else { Vec::new() },
                 };
-                self.run_inner(&memo, wl, &pools, opts)
+                self.run_inner(memo, wl, &pools, opts)
             })
             .collect()
     }
@@ -527,6 +544,35 @@ mod tests {
         for (x, y) in a.evaluated.iter().zip(&b.evaluated) {
             assert_eq!(x.cand, y.cand);
             assert_eq!(x.est, y.est);
+        }
+    }
+
+    #[test]
+    fn sweep_cached_warm_memo_matches_cold() {
+        let model = by_name("llama3.1-8b").unwrap();
+        let cluster = ClusterSpec::new(h100_sxm(), 8, 1);
+        let sil = Silicon::new(cluster, Framework::TrtLlm.profile());
+        let mut space = SearchSpace::default_for(&model, Framework::TrtLlm);
+        space.batch = vec![8, 32];
+        space.max_x = 4;
+        space.max_y = 4;
+        let wls = vec![
+            WorkloadSpec::new("llama3.1-8b", 1024, 128, 2000.0, 10.0),
+            WorkloadSpec::new("llama3.1-8b", 512, 64, 3000.0, 5.0),
+        ];
+        let runner = TaskRunner::new(&model, &cluster, space, wls[0].clone());
+        let cold = runner.run_sweep(&sil, &wls);
+        let memo = MemoOracle::new(&sil);
+        let first = runner.run_sweep_cached(&memo, &wls, &RunOptions::default());
+        let warm = runner.run_sweep_cached(&memo, &wls, &RunOptions::default());
+        let (hits, _) = memo.stats();
+        assert!(hits > 0, "warm pass must hit the shared memo");
+        for (a, b) in cold.iter().zip(&first).chain(first.iter().zip(&warm)) {
+            assert_eq!(a.evaluated.len(), b.evaluated.len());
+            for (x, y) in a.evaluated.iter().zip(&b.evaluated) {
+                assert_eq!(x.cand, y.cand);
+                assert_eq!(x.est, y.est);
+            }
         }
     }
 

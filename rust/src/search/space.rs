@@ -96,10 +96,25 @@ impl SearchSpace {
         let mut out = Vec::new();
         for &fw in &self.frameworks {
             let fw_prof = fw.profile();
-            for &dt in &self.dtypes {
-                if !cluster.gpu.supports(dt) || !fw_prof.supports_dtype(dt) {
-                    continue;
+            // Dtypes this GPU *and* framework can run, from the
+            // requested list. When none qualify (the FP8-only default
+            // on Ampere), fall back to the GPU's preferred dtype so
+            // every surface — search, sweep, capacity plan — enumerates
+            // a non-empty grid on older parts instead of silently
+            // finding nothing.
+            let mut dtypes: Vec<Dtype> = self
+                .dtypes
+                .iter()
+                .copied()
+                .filter(|&dt| cluster.gpu.supports(dt) && fw_prof.supports_dtype(dt))
+                .collect();
+            if dtypes.is_empty() {
+                let fb = cluster.gpu.preferred_kv_dtype();
+                if cluster.gpu.supports(fb) && fw_prof.supports_dtype(fb) {
+                    dtypes.push(fb);
                 }
+            }
+            for &dt in &dtypes {
                 for &tp in &self.tp {
                     for &pp in &self.pp {
                         for &ep in &self.ep {
@@ -222,6 +237,24 @@ mod tests {
         let s = SearchSpace::default_for(&m, Framework::Vllm);
         let engines = s.engines(&m, &c, 1024, 128);
         assert!(engines.iter().all(|e| e.parallel.gpus() <= 4));
+    }
+
+    #[test]
+    fn unsupported_dtype_list_falls_back_to_preferred() {
+        use crate::hardware::a100_sxm;
+        use crate::models::Dtype;
+        let m = by_name("llama3.1-8b").unwrap();
+        let c = ClusterSpec::new(a100_sxm(), 8, 1);
+        // Default space sweeps FP8 only; Ampere has no FP8 tensor
+        // cores — the grid must fall back to FP16, not come up empty.
+        let s = SearchSpace::default_for(&m, Framework::TrtLlm);
+        assert_eq!(s.dtypes, vec![Dtype::Fp8]);
+        let grid = s.engine_grid(&m, &c);
+        assert!(!grid.is_empty());
+        assert!(grid.iter().all(|e| e.weight_dtype == Dtype::Fp16));
+        // A space that names a supported dtype is untouched.
+        let h = ClusterSpec::new(crate::hardware::h100_sxm(), 8, 1);
+        assert!(s.engine_grid(&m, &h).iter().all(|e| e.weight_dtype == Dtype::Fp8));
     }
 
     #[test]

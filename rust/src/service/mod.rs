@@ -25,7 +25,7 @@ use crate::config::{Candidate, ServingMode, WorkloadSpec};
 use crate::frameworks::Framework;
 use crate::generator;
 use crate::hardware::{gpu_by_name, ClusterSpec};
-use crate::models::{by_name, Dtype};
+use crate::models::by_name;
 use crate::pareto;
 use crate::perfdb::{LatencyOracle, PerfDatabase};
 use crate::runtime::{PjrtOracle, PjrtService};
@@ -150,7 +150,11 @@ fn build_db(key: &DbKey, seed: u64) -> anyhow::Result<PerfDatabase> {
         .ok_or_else(|| anyhow::anyhow!("unknown framework '{fw_name}'"))?;
     let cluster = ClusterSpec::new(gpu, *gpn, *nodes);
     let silicon = Silicon::new(cluster, fw.profile());
-    Ok(PerfDatabase::build(&silicon, &model, Dtype::Fp8, seed))
+    // Ampere has no FP8 tensor cores: `preferred_kv_dtype` profiles
+    // such contexts at FP16 — the same default the CLI `plan` path and
+    // the planner's engine space use, so service plans price a100
+    // fleet legs consistently with the CLI.
+    Ok(PerfDatabase::build(&silicon, &model, gpu.preferred_kv_dtype(), seed))
 }
 
 /// Handle one JSON request line (exposed for in-process tests).
@@ -160,6 +164,11 @@ pub fn handle_request_line(line: &str, state: &State) -> anyhow::Result<Json> {
 }
 
 pub fn handle_request(req: &Json, state: &State) -> anyhow::Result<Json> {
+    // Capacity-plan form: {"plan": {...}} searches a traffic-aware
+    // replica schedule instead of a single-point configuration.
+    if req.get("plan").is_some() {
+        return handle_plan_request(req, state);
+    }
     // Batch form: {"workloads": [wl, wl, ...]} prices many scenarios in
     // one sweep (shared engine enumeration + memoized oracle queries).
     if req.get("workloads").is_some() {
@@ -327,6 +336,78 @@ fn handle_sweep_request(req: &Json, state: &State) -> anyhow::Result<Json> {
     Ok(resp)
 }
 
+/// Capacity-plan request:
+/// `{"plan": {"workload": {...}, "traffic": {"kind": "diurnal", ...},
+///   "windows": 24, "window_hours": 1, "fleet": ["h100", "a100"],
+///   "max_gpus": 64, "prune": true},
+///   "gpus_per_node": 8, "num_nodes": 1, "framework": "trtllm"}`
+/// → the cost-minimal replica schedule ([`crate::planner`]) plus the
+/// Dynamo `DeploymentSchedule` YAML. Fleet-leg databases come from the
+/// same per-context cache the search path uses, so repeated plans skip
+/// re-profiling (the dominant cost); operator-latency memos are
+/// per-request.
+fn handle_plan_request(req: &Json, state: &State) -> anyhow::Result<Json> {
+    let t0 = Instant::now();
+    let p = req.req("plan")?;
+    let wl = WorkloadSpec::from_json(p.req("workload")?)?;
+    let traffic = crate::planner::TrafficModel::from_json(p.req("traffic")?)?;
+    let gpn = req.f64_or("gpus_per_node", 8.0) as u32;
+    let nodes = req.f64_or("num_nodes", 1.0) as u32;
+    let fw = Framework::parse(req.str_or("framework", "trtllm"))
+        .ok_or_else(|| anyhow::anyhow!("unknown framework"))?;
+    let model =
+        by_name(&wl.model).ok_or_else(|| anyhow::anyhow!("unknown model '{}'", wl.model))?;
+
+    let names: Vec<String> = match p.get("fleet") {
+        Some(fj) => {
+            let arr = fj
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("'fleet' must be an array of GPU name strings"))?;
+            anyhow::ensure!(!arr.is_empty(), "'fleet' named no GPU types");
+            arr.iter()
+                .map(|v| {
+                    v.as_str().map(str::to_string).ok_or_else(|| {
+                        anyhow::anyhow!("'fleet' entries must be GPU name strings, got {v:?}")
+                    })
+                })
+                .collect::<anyhow::Result<Vec<_>>>()?
+        }
+        None => vec![req.str_or("gpu", "h100").to_string()],
+    };
+    let mut legs: Vec<(ClusterSpec, Arc<PerfDatabase>)> = Vec::new();
+    for name in &names {
+        let gpu =
+            gpu_by_name(name).ok_or_else(|| anyhow::anyhow!("unknown gpu '{name}' in fleet"))?;
+        let key: DbKey = (wl.model.clone(), name.clone(), gpn, nodes, fw.name().to_string());
+        legs.push((ClusterSpec::new(gpu, gpn, nodes), db_for(state, &key)?));
+    }
+
+    let spec = crate::planner::PlanSpec {
+        workload: wl.clone(),
+        traffic,
+        windows: p.f64_or("windows", 24.0) as usize,
+        window_h: p.f64_or("window_hours", 1.0),
+        max_gpus: p.get("max_gpus").and_then(|v| v.as_f64()).map(|v| v as u32),
+        prune: p.bool_or("prune", true),
+    };
+    let fleet: Vec<(ClusterSpec, &dyn LatencyOracle)> =
+        legs.iter().map(|(c, d)| (*c, d.as_ref() as &dyn LatencyOracle)).collect();
+    let plan = crate::planner::plan(&model, fw, &spec, &fleet)?;
+
+    let mut resp = Json::obj();
+    resp.set("status", json::s("ok"))
+        .set("elapsed_ms", json::num(t0.elapsed().as_secs_f64() * 1e3))
+        .set("plan", plan.to_json(&wl))
+        .set(
+            "schedule_yaml",
+            json::s(&generator::dynamo::plan_schedule_yaml(&plan, &wl.model, &wl)),
+        );
+    if let Some(id) = req.get("id") {
+        resp.set("id", id.clone());
+    }
+    Ok(resp)
+}
+
 fn launch_json(cand: &Candidate, wl: &WorkloadSpec) -> Json {
     let bundle = generator::generate(cand, &wl.model, wl);
     let mut files = Json::obj();
@@ -462,6 +543,82 @@ mod tests {
         );
         let err = handle_request(&req, &st).unwrap_err();
         assert!(err.to_string().contains("same model"));
+    }
+
+    fn plan_request(fleet: &[&str], windows: f64) -> Json {
+        let mut traffic = Json::obj();
+        traffic
+            .set("kind", json::s("diurnal"))
+            .set("peak_qps", json::num(80.0))
+            .set("trough_qps", json::num(4.0))
+            .set("period_h", json::num(24.0));
+        let mut plan = Json::obj();
+        plan.set(
+            "workload",
+            WorkloadSpec::new("llama3.1-8b", 1024, 128, 2000.0, 10.0).to_json(),
+        )
+        .set("traffic", traffic)
+        .set("windows", json::num(windows))
+        .set("window_hours", json::num(24.0 / windows))
+        .set("fleet", Json::Arr(fleet.iter().map(|g| json::s(g)).collect()));
+        let mut req = Json::obj();
+        req.set("plan", plan)
+            .set("gpus_per_node", json::num(8.0))
+            .set("num_nodes", json::num(1.0))
+            .set("framework", json::s("trtllm"))
+            .set("id", json::num(42.0));
+        req
+    }
+
+    #[test]
+    fn plan_request_returns_schedule() {
+        let st = state();
+        let resp = handle_request(&plan_request(&["h100"], 4.0), &st).unwrap();
+        assert_eq!(resp.req_str("status").unwrap(), "ok");
+        assert_eq!(resp.req_f64("id").unwrap(), 42.0);
+        let plan = resp.req("plan").unwrap();
+        let windows = plan.req("windows").unwrap().as_arr().unwrap();
+        assert_eq!(windows.len(), 4);
+        for w in windows {
+            assert!(w.req_f64("capacity_qps").unwrap() >= w.req_f64("demand_qps").unwrap());
+        }
+        assert!(plan.req_f64("total_cost_usd").unwrap() > 0.0);
+        assert!(
+            plan.req_f64("total_cost_usd").unwrap()
+                <= plan.req_f64("static_peak_cost_usd").unwrap() + 1e-9
+        );
+        let yaml = resp.req_str("schedule_yaml").unwrap();
+        assert!(yaml.contains("kind: DeploymentSchedule"));
+        assert!(yaml.contains("- window: 0"));
+        // The leg database landed in the shared cache.
+        assert_eq!(st.dbs.lock().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn plan_request_heterogeneous_fleet_never_loses_to_homogeneous() {
+        let st = state();
+        let resp = handle_request(&plan_request(&["h100", "a100"], 3.0), &st).unwrap();
+        assert_eq!(resp.req_str("status").unwrap(), "ok");
+        let plan = resp.req("plan").unwrap();
+        if let Some(h) = plan.get("best_homogeneous") {
+            assert!(
+                plan.req_f64("total_cost_usd").unwrap() <= h.req_f64("cost_usd").unwrap() + 1e-9
+            );
+        }
+        assert_eq!(st.dbs.lock().unwrap().len(), 2, "one cached db per fleet leg");
+    }
+
+    #[test]
+    fn plan_request_bad_traffic_is_error() {
+        let st = state();
+        let mut req = plan_request(&["h100"], 2.0);
+        // Overwrite traffic with an unknown kind.
+        let mut traffic = Json::obj();
+        traffic.set("kind", json::s("square"));
+        let mut plan = req.req("plan").unwrap().clone();
+        plan.set("traffic", traffic);
+        req.set("plan", plan);
+        assert!(handle_request(&req, &st).is_err());
     }
 
     #[test]

@@ -53,6 +53,51 @@ pub fn poisson(
     out
 }
 
+/// Open-loop trace whose Poisson rate follows a per-window QPS curve
+/// (the capacity planner's traffic models): window `w` spans
+/// `[w·window_s, (w+1)·window_s)` seconds and arrives at `qps[w]`
+/// requests/s, with the same ±`len_jitter` ISL/OSL jitter as
+/// [`poisson`]. Windows with non-positive rate are silent. Deterministic
+/// per seed.
+pub fn piecewise_poisson(
+    qps: &[f64],
+    window_s: f64,
+    isl: u32,
+    osl: u32,
+    len_jitter: f64,
+    seed: u64,
+) -> Vec<Request> {
+    assert!(window_s > 0.0);
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::new();
+    let mut id = 0u64;
+    let j = |v: u32, rng: &mut Rng| -> u32 {
+        let f = 1.0 + len_jitter * (2.0 * rng.f64() - 1.0);
+        ((v as f64 * f).round() as u32).max(1)
+    };
+    for (w, &rate) in qps.iter().enumerate() {
+        if rate <= 0.0 {
+            continue;
+        }
+        let end_ms = (w + 1) as f64 * window_s * 1000.0;
+        let mut t_ms = w as f64 * window_s * 1000.0;
+        loop {
+            t_ms += rng.exponential(rate) * 1000.0;
+            if t_ms >= end_ms {
+                break;
+            }
+            out.push(Request {
+                id,
+                arrival_ms: t_ms,
+                isl: j(isl, &mut rng),
+                osl: j(osl, &mut rng),
+            });
+            id += 1;
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -84,5 +129,37 @@ mod tests {
     #[test]
     fn deterministic_by_seed() {
         assert_eq!(poisson(10.0, 2.0, 100, 10, 0.2, 9), poisson(10.0, 2.0, 100, 10, 0.2, 9));
+    }
+
+    #[test]
+    fn piecewise_rates_follow_the_curve() {
+        // 3 windows of 20 s at 50 / 0 / 10 QPS.
+        let t = piecewise_poisson(&[50.0, 0.0, 10.0], 20.0, 1000, 100, 0.0, 5);
+        let in_window = |w: usize| {
+            t.iter()
+                .filter(|r| {
+                    r.arrival_ms >= w as f64 * 20_000.0 && r.arrival_ms < (w + 1) as f64 * 20_000.0
+                })
+                .count() as f64
+        };
+        assert!((in_window(0) / 20.0 - 50.0).abs() < 8.0, "w0 rate {}", in_window(0) / 20.0);
+        assert_eq!(in_window(1), 0.0, "silent window must be empty");
+        assert!((in_window(2) / 20.0 - 10.0).abs() < 4.0, "w2 rate {}", in_window(2) / 20.0);
+        // Arrivals strictly increasing, ids dense.
+        assert!(t.windows(2).all(|w| w[0].arrival_ms < w[1].arrival_ms));
+        assert_eq!(t.last().unwrap().id as usize, t.len() - 1);
+    }
+
+    #[test]
+    fn piecewise_deterministic_by_seed() {
+        let q = [30.0, 5.0, 80.0];
+        assert_eq!(
+            piecewise_poisson(&q, 10.0, 512, 64, 0.2, 11),
+            piecewise_poisson(&q, 10.0, 512, 64, 0.2, 11)
+        );
+        assert_ne!(
+            piecewise_poisson(&q, 10.0, 512, 64, 0.2, 11),
+            piecewise_poisson(&q, 10.0, 512, 64, 0.2, 12)
+        );
     }
 }

@@ -304,3 +304,57 @@ fn prop_link_selection() {
         }
     }
 }
+
+/// 3-objective (−cost, capacity, speed) incremental frontier: the
+/// accumulator's kept set reduces to exactly the batch O(n²) dominance
+/// filter's frontier, on random sets with deliberate ties/duplicates.
+#[test]
+fn prop_k_accumulator_matches_batch_dominance_filter() {
+    let mut rng = Rng::new(0x3D17);
+    for case in 0..120 {
+        let n = 1 + rng.below(70) as usize;
+        let pts: Vec<Vec<f64>> = (0..n)
+            .map(|_| {
+                vec![
+                    -(rng.f64() * 4.0).round() * 3.0, // −cost/h
+                    (rng.f64() * 4.0).round() * 5.0,  // capacity
+                    (rng.f64() * 4.0).round() * 10.0, // speed
+                ]
+            })
+            .collect();
+        let mut acc = pareto::FrontierAccumulator::new();
+        let kept: Vec<usize> =
+            (0..n).filter(|&i| acc.offer_point(&pts[i])).collect();
+        assert_eq!(acc.rejected() + kept.len(), n, "case {case}");
+        let batch = pareto::k_frontier_indices(&pts);
+        for &i in &batch {
+            assert!(kept.iter().any(|&k| pts[k] == pts[i]), "case {case}: lost {i}");
+        }
+        let kept_pts: Vec<Vec<f64>> = kept.iter().map(|&k| pts[k].clone()).collect();
+        let sub = pareto::k_frontier_indices(&kept_pts);
+        let sub_vals: Vec<&Vec<f64>> = sub.iter().map(|&i| &kept_pts[i]).collect();
+        let batch_vals: Vec<&Vec<f64>> = batch.iter().map(|&i| &pts[i]).collect();
+        assert_eq!(sub_vals, batch_vals, "case {case}");
+    }
+}
+
+/// Window cost under the ceiling replica rule is nonincreasing when an
+/// option weakly dominates another in (−cost, capacity) — the invariant
+/// that makes the planner's k-objective prune schedule-transparent.
+#[test]
+fn prop_dominating_option_never_costs_more_per_window() {
+    let mut rng = Rng::new(0xD0C5);
+    for _ in 0..500 {
+        let cost_a = 1.0 + (rng.f64() * 8.0).round();
+        let cap_a = 1.0 + (rng.f64() * 8.0).round();
+        // B is weakly dominated: costs at least as much, serves no more.
+        let cost_b = cost_a + (rng.f64() * 4.0).round();
+        let cap_b = (cap_a - (rng.f64() * 4.0).round()).max(0.5);
+        let demand = rng.f64() * 50.0;
+        let n = |d: f64, c: f64| if d <= 0.0 { 0.0 } else { (d / c).ceil() };
+        assert!(
+            n(demand, cap_a) * cost_a <= n(demand, cap_b) * cost_b + 1e-12,
+            "d={demand} A=({cost_a},{cap_a}) B=({cost_b},{cap_b})"
+        );
+    }
+}

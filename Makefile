@@ -1,6 +1,7 @@
 # AIConfigurator reproduction — top-level developer targets.
 #
 #   make verify     tier-1 gate: cargo build --release && cargo test -q
+#   make gen-smoke  generator smoke gate (all backends emit resolved flags)
 #   make bench      search-engine benches (table1_search + sweep)
 #   make bench-plan capacity-planner bench (writes BENCH_plan.json)
 #   make bench-all  every bench target
@@ -11,10 +12,13 @@
 RUST_DIR := rust
 PYTHON   ?= python3
 
-.PHONY: verify build test bench bench-plan bench-all artifacts fmt clippy clean
+.PHONY: verify build test gen-smoke bench bench-plan bench-all artifacts fmt clippy clean
 
 verify:
 	cd $(RUST_DIR) && cargo build --release && cargo test -q
+
+gen-smoke:
+	cd $(RUST_DIR) && cargo test --test gen_smoke -- --nocapture
 
 build:
 	cd $(RUST_DIR) && cargo build --release

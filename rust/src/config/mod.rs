@@ -35,6 +35,15 @@ impl ServingMode {
             _ => None,
         }
     }
+
+    /// Whether the TaskRunner can search this mode. `Static` parses (it
+    /// names Algorithm 1's fixed-batch estimation/simulation target)
+    /// but is not a deployable candidate shape, so search surfaces must
+    /// reject it loudly instead of silently pricing nothing — see
+    /// [`crate::search::ensure_searchable_modes`].
+    pub fn searchable(self) -> bool {
+        !matches!(self, ServingMode::Static)
+    }
 }
 
 /// Model-parallel layout of one engine instance.
@@ -93,14 +102,12 @@ pub struct RuntimeFlags {
 }
 
 impl RuntimeFlags {
+    /// The framework's stock flags. Delegates to the backend layer's
+    /// single construction point ([`crate::frameworks::Backend::default_flags`])
+    /// so this and the search grid can never build different
+    /// "defaults".
     pub fn defaults_for(fw: Framework) -> Self {
-        let p = fw.profile();
-        RuntimeFlags {
-            cuda_graph: true,
-            kv_frac: p.kv_frac_default,
-            max_num_tokens: p.max_num_tokens_default,
-            chunked_prefill: p.chunked_prefill_default,
-        }
+        fw.backend().default_flags()
     }
 }
 

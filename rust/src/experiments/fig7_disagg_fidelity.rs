@@ -45,12 +45,12 @@ pub fn run(quick: bool) -> Report {
             e.parallel.gpus() <= 8 && memory::fits(&model, mem, e, isl, osl_eff)
         };
         let prefill: Vec<_> = space
-            .prefill_engines(&model, &cluster, isl)
+            .prefill_engines(&model, &cluster, &wl)
             .into_iter()
             .filter(|e| fits8(e, 1))
             .collect();
         let decode: Vec<_> = space
-            .engines(&model, &cluster, isl, osl)
+            .engines(&model, &cluster, &wl, osl)
             .into_iter()
             .filter(|e| fits8(e, osl))
             .collect();

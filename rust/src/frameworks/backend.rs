@@ -1,0 +1,404 @@
+//! The backend abstraction layer (paper §1: "an abstraction layer that
+//! automatically resolves optimal launch parameters for the target
+//! backend").
+//!
+//! [`Backend`] is the single owner of everything that used to be keyed
+//! on `match framework` across the codebase: the performance profile,
+//! dtype support, the scheduling-overhead model, launch-file emission
+//! (previously `generator/{trtllm,vllm,sglang}.rs`) and — the layer's
+//! point — **analytic launch-flag resolution**. Instead of
+//! cross-producting `kv_frac × max_num_tokens × cuda_graph ×
+//! chunked_prefill` into the search grid (which would multiply the
+//! candidate count by ~50), [`Backend::resolve_flags`] derives each
+//! flag from the deployment's physics:
+//!
+//! * `kv_frac` from the memory model's actual weight footprint
+//!   ([`crate::perfmodel::memory`]): whatever HBM remains after weights
+//!   and the activation/runtime headroom goes to the KV cache, so
+//!   low-TP layouts (heavy per-GPU weights) resolve a *smaller*
+//!   fraction and high-TP layouts a larger one than the one-size
+//!   default.
+//! * `max_num_tokens` from the TTFT budget and chunked-prefill
+//!   scheduling dynamics: small chunks minimize prefill/decode
+//!   interference (TPOT) but multiply the mixed-step count Algorithm 2
+//!   charges TTFT for — the resolver picks the smallest capacity whose
+//!   predicted first-token latency still clears the SLA.
+//! * `cuda_graph` / `chunked_prefill` from per-backend policy
+//!   ([`FlagPolicy`]): graph capture pays off until its per-shape
+//!   memory cost outgrows the launch savings (a batch-size bound that
+//!   differs per runtime), and chunking only matters once a prompt
+//!   exceeds the iteration capacity.
+//!
+//! Adding a fourth framework is one new module implementing this trait
+//! plus a row in [`backend_for`] — no other file changes.
+
+use crate::config::{EngineConfig, ParallelSpec, RuntimeFlags, WorkloadSpec};
+use crate::hardware::ClusterSpec;
+use crate::models::{Dtype, ModelArch};
+use crate::perfmodel::memory;
+
+use super::{Framework, FrameworkProfile};
+
+/// Per-backend policy constants steering analytic flag resolution.
+/// These encode *runtime behaviour* (allocator slack, graph-capture
+/// economics), not silicon performance — that stays in
+/// [`FrameworkProfile`].
+#[derive(Clone, Copy, Debug)]
+pub struct FlagPolicy {
+    /// Runtime headroom the allocator needs beyond the global
+    /// activation reserve, bytes (CUDA-graph capture pools, NCCL
+    /// buffers, fragmentation slack).
+    pub runtime_headroom_bytes: f64,
+    /// Peak activation bytes per in-flight token, per hidden dim, per
+    /// weight byte (bounds the chunked-prefill working set that must
+    /// stay outside the KV budget).
+    pub act_bytes_per_token_hidden: f64,
+    /// Clamp for the resolved KV fraction.
+    pub kv_frac_floor: f64,
+    pub kv_frac_ceil: f64,
+    /// Share of the TTFT budget the resolver lets chunk scheduling
+    /// consume when sizing `max_num_tokens`.
+    pub chunk_ttft_share: f64,
+    /// Token-capacity clamp and rounding quantum.
+    pub min_tokens: u32,
+    pub max_tokens: u32,
+    /// CUDA-graph capture is enabled up to this decode batch size
+    /// (capture memory and replay-table cost grow with batch).
+    pub cuda_graph_max_batch: u32,
+    /// Whether the runtime supports chunked prefill at all.
+    pub supports_chunked_prefill: bool,
+}
+
+/// A serving framework behind the abstraction layer.
+pub trait Backend: Send + Sync {
+    /// The enum tag this backend implements.
+    fn framework(&self) -> Framework;
+
+    /// Kernel-efficiency / scheduling profile (synthetic-silicon
+    /// parameterization; see DESIGN.md).
+    fn profile(&self) -> FrameworkProfile;
+
+    /// Quantization formats the engine can serve.
+    fn supports_dtype(&self, dt: Dtype) -> bool;
+
+    /// Launch-flag resolution policy constants.
+    fn flag_policy(&self) -> FlagPolicy;
+
+    /// Launch-file emission for one engine pool: (filename, contents)
+    /// pairs, `role` ∈ {"server", "prefill", "decode"}. Absorbs the
+    /// old `generator/{trtllm,vllm,sglang}.rs` free functions.
+    fn emit_launch(
+        &self,
+        eng: &EngineConfig,
+        model_hf_id: &str,
+        wl: &WorkloadSpec,
+        role: &str,
+    ) -> Vec<(String, String)>;
+
+    fn name(&self) -> &'static str {
+        self.framework().name()
+    }
+
+    /// The framework's stock flags — the single construction point both
+    /// [`RuntimeFlags::defaults_for`] and the search space route
+    /// through, so the two can never drift again.
+    fn default_flags(&self) -> RuntimeFlags {
+        let p = self.profile();
+        RuntimeFlags {
+            cuda_graph: true,
+            kv_frac: p.kv_frac_default,
+            max_num_tokens: p.max_num_tokens_default,
+            chunked_prefill: p.chunked_prefill_default,
+        }
+    }
+
+    /// Analytically resolve the launch flags for one structural point
+    /// (layout × batch × dtype) under a workload. Deterministic, cheap
+    /// (no oracle queries) and backend-specific via [`FlagPolicy`].
+    fn resolve_flags(
+        &self,
+        model: &ModelArch,
+        cluster: &ClusterSpec,
+        wl: &WorkloadSpec,
+        parallel: &ParallelSpec,
+        batch: u32,
+        weight_dtype: Dtype,
+    ) -> RuntimeFlags {
+        let policy = self.flag_policy();
+        let profile = self.profile();
+        let max_num_tokens = resolve_max_num_tokens(
+            &policy, &profile, model, cluster, wl, parallel, batch, weight_dtype,
+        );
+        let kv_frac = resolve_kv_frac(
+            &policy, model, cluster, parallel, weight_dtype, max_num_tokens,
+        );
+        RuntimeFlags {
+            cuda_graph: batch <= policy.cuda_graph_max_batch,
+            kv_frac,
+            max_num_tokens,
+            // Chunking only matters once a prompt exceeds the iteration
+            // capacity; below that it adds scheduler bookkeeping for
+            // nothing.
+            chunked_prefill: policy.supports_chunked_prefill && wl.isl > max_num_tokens,
+        }
+    }
+}
+
+/// Registry: the trait object for a framework tag. The only place a
+/// new backend has to be wired in.
+pub fn backend_for(fw: Framework) -> &'static dyn Backend {
+    match fw {
+        Framework::TrtLlm => &super::trtllm::TrtLlmBackend,
+        Framework::Vllm => &super::vllm::VllmBackend,
+        Framework::Sglang => &super::sglang::SglangBackend,
+    }
+}
+
+/// First-order (roofline) prefill time per prompt token, milliseconds:
+/// GEMM-bound forward pass of the *active* parameters sharded over TP.
+/// PP stages pipeline across chunks, so they raise throughput but not
+/// single-chunk latency; DP replicates. Good to the ~2× the resolver
+/// needs — it sizes a budget share, it does not price candidates.
+pub fn prefill_ms_per_token(
+    profile: &FrameworkProfile,
+    model: &ModelArch,
+    cluster: &ClusterSpec,
+    parallel: &ParallelSpec,
+    weight_dtype: Dtype,
+) -> f64 {
+    let flops = 2.0 * model.active_params() as f64;
+    let peak = cluster.gpu.tflops(weight_dtype) * 1e12 * profile.gemm_eff;
+    flops / (parallel.tp.max(1) as f64 * peak) * 1e3
+}
+
+/// Predicted TTFT of chunked prefill at capacity `mnt`, following
+/// Algorithm 2's shape: `ceil(ISL/C_ctx)` mixed steps, each costing the
+/// chunk's roofline compute plus one host-scheduling interval, inflated
+/// by the empirical F_corr (which grows as chunking stretches the
+/// context backlog).
+pub fn predicted_ttft_ms(
+    profile: &FrameworkProfile,
+    model: &ModelArch,
+    cluster: &ClusterSpec,
+    wl: &WorkloadSpec,
+    parallel: &ParallelSpec,
+    batch: u32,
+    weight_dtype: Dtype,
+    mnt: u32,
+) -> f64 {
+    let isl = wl.isl.max(1) as u64;
+    let mnt = mnt.max(1) as u64;
+    let per_tok = prefill_ms_per_token(profile, model, cluster, parallel, weight_dtype);
+    let chunks = isl.div_ceil(mnt) as f64;
+    let host_ms = profile.sched_overhead_us / 1000.0;
+    let t_total_ctx = (isl * batch.max(1) as u64).div_ceil(mnt) as f64;
+    let f_corr = (2.0 + (t_total_ctx - 3.0) / 20.0).clamp(1.0, 4.0);
+    (per_tok * isl as f64 + chunks * host_ms) * f_corr
+}
+
+/// Smallest iteration token capacity whose predicted TTFT clears the
+/// budget share. Small capacities minimize prefill/decode interference
+/// (TPOT) and activation memory; the TTFT SLA is what forces them up.
+#[allow(clippy::too_many_arguments)]
+fn resolve_max_num_tokens(
+    policy: &FlagPolicy,
+    profile: &FrameworkProfile,
+    model: &ModelArch,
+    cluster: &ClusterSpec,
+    wl: &WorkloadSpec,
+    parallel: &ParallelSpec,
+    batch: u32,
+    weight_dtype: Dtype,
+) -> u32 {
+    // Decode streams share the iteration budget with the prefill chunk.
+    let floor = policy.min_tokens.max(batch.next_power_of_two());
+    let budget = wl.sla.ttft_ms * policy.chunk_ttft_share;
+    let mut mnt = floor.min(policy.max_tokens);
+    while mnt < policy.max_tokens {
+        let pred = predicted_ttft_ms(
+            profile, model, cluster, wl, parallel, batch, weight_dtype, mnt,
+        );
+        if pred <= budget {
+            break;
+        }
+        mnt = (mnt * 2).min(policy.max_tokens);
+    }
+    mnt
+}
+
+/// KV fraction from the memory model: of the HBM left after weights and
+/// the global activation reserve, keep back the runtime headroom plus
+/// the chunk's activation working set, give the rest to KV. Low-TP
+/// layouts (heavy per-GPU weights ⇒ small `free`) therefore resolve a
+/// smaller fraction than high-TP layouts — exactly the dependence a
+/// per-framework constant cannot express.
+fn resolve_kv_frac(
+    policy: &FlagPolicy,
+    model: &ModelArch,
+    cluster: &ClusterSpec,
+    parallel: &ParallelSpec,
+    weight_dtype: Dtype,
+    max_num_tokens: u32,
+) -> f64 {
+    let mem = cluster.gpu.mem_bytes();
+    let weights = memory::weight_bytes_per_gpu_parts(model, parallel, weight_dtype);
+    let free = mem - weights - memory::ACT_RESERVE_BYTES;
+    if free <= 0.0 {
+        // Infeasible layouts keep the floor; the memory prune removes
+        // them from the grid anyway.
+        return policy.kv_frac_floor;
+    }
+    let act = max_num_tokens as f64
+        * model.hidden as f64
+        * policy.act_bytes_per_token_hidden
+        * weight_dtype.bytes();
+    let frac = (free - policy.runtime_headroom_bytes - act) / free;
+    // Quantize to the 0.01 the launch files print, so emitted bundles
+    // carry the resolved value bit-exactly.
+    (frac.clamp(policy.kv_frac_floor, policy.kv_frac_ceil) * 100.0).floor() / 100.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware::h100_sxm;
+    use crate::models::by_name;
+
+    fn wl(ttft_ms: f64) -> WorkloadSpec {
+        WorkloadSpec::new("qwen3-32b", 4000, 500, ttft_ms, 40.0)
+    }
+
+    #[test]
+    fn defaults_match_profiles_for_every_backend() {
+        for fw in Framework::all() {
+            let be = backend_for(fw);
+            let d = be.default_flags();
+            let p = be.profile();
+            assert!(d.cuda_graph);
+            assert_eq!(d.kv_frac, p.kv_frac_default, "{fw:?}");
+            assert_eq!(d.max_num_tokens, p.max_num_tokens_default, "{fw:?}");
+            assert_eq!(d.chunked_prefill, p.chunked_prefill_default, "{fw:?}");
+            assert_eq!(be.framework(), fw);
+            assert_eq!(be.name(), fw.name());
+        }
+    }
+
+    #[test]
+    fn kv_frac_shrinks_as_weights_grow() {
+        // qwen3-32b on H100: TP1 holds ~33 GB of FP8 weights per GPU,
+        // TP8 ~4 GB — the resolver must hand TP8 a larger KV share.
+        let m = by_name("qwen3-32b").unwrap();
+        let c = ClusterSpec::new(h100_sxm(), 8, 1);
+        let w = wl(1200.0);
+        for fw in Framework::all() {
+            let be = backend_for(fw);
+            let f1 = be.resolve_flags(&m, &c, &w, &ParallelSpec::tp(1), 16, Dtype::Fp8);
+            let f8 = be.resolve_flags(&m, &c, &w, &ParallelSpec::tp(8), 16, Dtype::Fp8);
+            assert!(
+                f1.kv_frac < f8.kv_frac,
+                "{fw:?}: TP1 kv_frac {} !< TP8 kv_frac {}",
+                f1.kv_frac,
+                f8.kv_frac
+            );
+            let pol = be.flag_policy();
+            for f in [f1, f8] {
+                assert!(f.kv_frac >= pol.kv_frac_floor && f.kv_frac <= pol.kv_frac_ceil);
+            }
+        }
+    }
+
+    #[test]
+    fn fp16_weights_shrink_kv_frac_vs_fp8() {
+        let m = by_name("qwen3-32b").unwrap();
+        let c = ClusterSpec::new(h100_sxm(), 8, 1);
+        let w = wl(1200.0);
+        let be = backend_for(Framework::TrtLlm);
+        let f8 = be.resolve_flags(&m, &c, &w, &ParallelSpec::tp(2), 16, Dtype::Fp8);
+        let f16 = be.resolve_flags(&m, &c, &w, &ParallelSpec::tp(2), 16, Dtype::Fp16);
+        assert!(f16.kv_frac < f8.kv_frac, "fp16 {} !< fp8 {}", f16.kv_frac, f8.kv_frac);
+    }
+
+    #[test]
+    fn max_num_tokens_respects_ttft_budget() {
+        let m = by_name("qwen3-32b").unwrap();
+        let c = ClusterSpec::new(h100_sxm(), 8, 1);
+        for fw in Framework::all() {
+            let be = backend_for(fw);
+            let pol = be.flag_policy();
+            let prof = be.profile();
+            let p = ParallelSpec::tp(1);
+            // A loose budget lets the resolver keep chunks small; a
+            // tight one forces capacity up (fewer, bigger chunks).
+            let loose = be.resolve_flags(&m, &c, &wl(f64::INFINITY), &p, 16, Dtype::Fp8);
+            let tight = be.resolve_flags(&m, &c, &wl(300.0), &p, 16, Dtype::Fp8);
+            assert!(
+                tight.max_num_tokens >= loose.max_num_tokens,
+                "{fw:?}: tight {} < loose {}",
+                tight.max_num_tokens,
+                loose.max_num_tokens
+            );
+            // Whenever the budget is satisfiable inside the clamp, the
+            // resolved capacity's predicted TTFT clears it.
+            let w = wl(2000.0);
+            let r = be.resolve_flags(&m, &c, &w, &p, 16, Dtype::Fp8);
+            let pred = predicted_ttft_ms(
+                &prof, &m, &c, &w, &p, 16, Dtype::Fp8, r.max_num_tokens,
+            );
+            if r.max_num_tokens < pol.max_tokens {
+                assert!(
+                    pred <= w.sla.ttft_ms * pol.chunk_ttft_share,
+                    "{fw:?}: predicted {pred} ms over budget at mnt {}",
+                    r.max_num_tokens
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn capacity_never_below_batch_token_demand() {
+        let m = by_name("llama3.1-8b").unwrap();
+        let c = ClusterSpec::new(h100_sxm(), 8, 1);
+        let be = backend_for(Framework::TrtLlm);
+        let w = wl(f64::INFINITY);
+        let f = be.resolve_flags(&m, &c, &w, &ParallelSpec::tp(1), 192, Dtype::Fp8);
+        assert!(f.max_num_tokens >= 192);
+    }
+
+    #[test]
+    fn chunked_prefill_tracks_prompt_vs_capacity() {
+        let m = by_name("qwen3-32b").unwrap();
+        let c = ClusterSpec::new(h100_sxm(), 8, 1);
+        let be = backend_for(Framework::TrtLlm);
+        let p = ParallelSpec::tp(4);
+        // Long prompt over a small resolved capacity → chunking on.
+        let long = WorkloadSpec::new("qwen3-32b", 30_000, 500, f64::INFINITY, 0.0);
+        let f = be.resolve_flags(&m, &c, &long, &p, 8, Dtype::Fp8);
+        assert!(f.max_num_tokens < long.isl);
+        assert!(f.chunked_prefill);
+        // Short prompt that fits one iteration → chunking off.
+        let short = WorkloadSpec::new("qwen3-32b", 512, 128, f64::INFINITY, 0.0);
+        let f = be.resolve_flags(&m, &c, &short, &p, 8, Dtype::Fp8);
+        assert!(f.max_num_tokens >= short.isl);
+        assert!(!f.chunked_prefill);
+    }
+
+    #[test]
+    fn cuda_graph_policy_differs_per_backend() {
+        let caps: Vec<u32> =
+            Framework::all().iter().map(|&fw| backend_for(fw).flag_policy().cuda_graph_max_batch).collect();
+        // TRT-LLM's static-graph runtime captures far larger batches
+        // than the Python-scheduled runtimes.
+        assert!(caps[0] > caps[1] && caps[0] > caps[2], "{caps:?}");
+    }
+
+    #[test]
+    fn resolution_is_deterministic() {
+        let m = by_name("qwen3-32b").unwrap();
+        let c = ClusterSpec::new(h100_sxm(), 8, 1);
+        let w = wl(1200.0);
+        let be = backend_for(Framework::Sglang);
+        let a = be.resolve_flags(&m, &c, &w, &ParallelSpec::tp(2), 32, Dtype::Fp8);
+        let b = be.resolve_flags(&m, &c, &w, &ParallelSpec::tp(2), 32, Dtype::Fp8);
+        assert_eq!(a, b);
+    }
+}

@@ -1,20 +1,34 @@
-//! Inference-framework profiles (paper §3 "Framework Heterogeneity").
+//! Inference-framework backends (paper §3 "Framework Heterogeneity" +
+//! §1's "abstraction layer that automatically resolves optimal launch
+//! parameters for the target backend").
 //!
-//! Each framework exhibits distinct performance characteristics the paper
-//! calls out: TensorRT-LLM (static graph optimization, custom kernels),
-//! vLLM (PagedAttention, Python-based scheduling), SGLang (RadixAttention,
-//! Triton kernels). The profile captures what the operator database and
-//! the serving-mode models need: kernel efficiency multipliers, host
-//! scheduling overheads, CUDA-graph behaviour, and default runtime flags.
+//! Each framework exhibits distinct performance characteristics the
+//! paper calls out: TensorRT-LLM (static graph optimization, custom
+//! kernels), vLLM (PagedAttention, Python-based scheduling), SGLang
+//! (RadixAttention, Triton kernels). All per-framework behaviour —
+//! the performance profile, dtype support, scheduling overheads,
+//! launch-file emission and analytic flag resolution — lives behind
+//! the [`Backend`] trait ([`backend`]), with one module per framework
+//! ([`trtllm`], [`vllm`], [`sglang`]). The [`Framework`] enum remains
+//! the cheap `Copy` tag that configs and wire formats carry;
+//! [`Framework::backend`] is the bridge to the behaviour.
 //!
-//! These profiles parameterize *both* sides of the fidelity experiments:
+//! The profiles parameterize *both* sides of the fidelity experiments:
 //! the synthetic silicon (ground truth) applies them exactly, while the
 //! PerfDatabase observes them only through noisy grid profiling — the
-//! same epistemic split as paper-vs-real-hardware.
+//! same epistemic split as paper-vs-real-hardware (DESIGN.md).
+
+pub mod backend;
+pub mod sglang;
+pub mod trtllm;
+pub mod vllm;
+
+pub use backend::{backend_for, Backend, FlagPolicy};
 
 use crate::models::Dtype;
 
-/// Supported inference backends.
+/// Supported inference backends (the tag; behaviour lives in
+/// [`Backend`]).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Framework {
     TrtLlm,
@@ -44,8 +58,13 @@ impl Framework {
         [Framework::TrtLlm, Framework::Vllm, Framework::Sglang]
     }
 
+    /// The behaviour behind this tag.
+    pub fn backend(self) -> &'static dyn Backend {
+        backend_for(self)
+    }
+
     pub fn profile(self) -> FrameworkProfile {
-        profile(self)
+        self.backend().profile()
     }
 }
 
@@ -78,61 +97,16 @@ pub struct FrameworkProfile {
     pub max_num_tokens_default: u32,
 }
 
-/// Profile database (synthetic-silicon parameterization; see DESIGN.md).
+/// Profile lookup (kept for callers that predate the trait; the data
+/// lives in each backend module).
 pub fn profile(fw: Framework) -> FrameworkProfile {
-    match fw {
-        Framework::TrtLlm => FrameworkProfile {
-            framework: fw,
-            gemm_eff: 0.92,
-            attn_prefill_eff: 0.90,
-            attn_decode_eff: 0.88,
-            // Grouped GEMM pays token permute/dispatch + ragged tiling:
-            // ~55% of dense peak even for large token counts.
-            moe_eff: 0.55,
-            sched_overhead_us: 350.0,
-            no_cudagraph_launch_penalty: 2.2,
-            cudagraph_saving: 0.55,
-            kv_frac_default: 0.90,
-            chunked_prefill_default: true,
-            max_num_tokens_default: 8192,
-        },
-        Framework::Vllm => FrameworkProfile {
-            framework: fw,
-            gemm_eff: 0.88,
-            attn_prefill_eff: 0.86,
-            attn_decode_eff: 0.84,
-            moe_eff: 0.45,
-            sched_overhead_us: 900.0,
-            no_cudagraph_launch_penalty: 2.6,
-            cudagraph_saving: 0.62,
-            kv_frac_default: 0.90,
-            chunked_prefill_default: true,
-            max_num_tokens_default: 8192,
-        },
-        Framework::Sglang => FrameworkProfile {
-            framework: fw,
-            gemm_eff: 0.90,
-            attn_prefill_eff: 0.88,
-            attn_decode_eff: 0.87,
-            moe_eff: 0.50,
-            sched_overhead_us: 550.0,
-            no_cudagraph_launch_penalty: 2.4,
-            cudagraph_saving: 0.60,
-            kv_frac_default: 0.88,
-            chunked_prefill_default: true,
-            max_num_tokens_default: 8192,
-        },
-    }
+    fw.backend().profile()
 }
 
 impl FrameworkProfile {
     /// Quantization formats the engine can serve.
     pub fn supports_dtype(&self, dt: Dtype) -> bool {
-        match self.framework {
-            Framework::TrtLlm => true,
-            // vLLM/SGLang int4 paths exist but we model fp16/fp8/int8.
-            Framework::Vllm | Framework::Sglang => !matches!(dt, Dtype::Int4),
-        }
+        self.framework.backend().supports_dtype(dt)
     }
 
     /// Host overhead of one iteration, given CUDA-graph state and phase.
@@ -184,5 +158,13 @@ mod tests {
         assert!(profile(Framework::TrtLlm).supports_dtype(Dtype::Int4));
         assert!(!profile(Framework::Vllm).supports_dtype(Dtype::Int4));
         assert!(profile(Framework::Sglang).supports_dtype(Dtype::Fp8));
+    }
+
+    #[test]
+    fn profile_tag_round_trips_through_backend() {
+        for fw in Framework::all() {
+            assert_eq!(fw.profile().framework, fw);
+            assert_eq!(fw.backend().framework(), fw);
+        }
     }
 }

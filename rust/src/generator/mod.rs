@@ -1,17 +1,16 @@
 //! Generator (paper §4.1 step 5): convert a recommended candidate into
-//! version-compatible launch files for TensorRT-LLM, vLLM or SGLang,
-//! setting the optimal serving flags (`--enable_cuda_graph`,
-//! `--kv_cache_free_gpu_mem_fraction`, `--enable_chunked_context`,
-//! max-token capacity, parallelism), plus a Dynamo deployment spec for
-//! disaggregated composites.
+//! version-compatible launch files, setting the optimal serving flags
+//! (`--enable_cuda_graph`, `--kv_cache_free_gpu_mem_fraction`,
+//! `--enable_chunked_context`, max-token capacity, parallelism), plus a
+//! Dynamo deployment spec for disaggregated composites.
+//!
+//! Per-framework emission lives behind the backend abstraction layer
+//! ([`crate::frameworks::Backend::emit_launch`]); this module only
+//! assembles bundles, so adding a fourth framework never touches it.
 
 pub mod dynamo;
-pub mod sglang;
-pub mod trtllm;
-pub mod vllm;
 
 use crate::config::{Candidate, EngineConfig, WorkloadSpec};
-use crate::frameworks::Framework;
 
 /// A generated launch bundle: (filename, contents) pairs.
 #[derive(Clone, Debug)]
@@ -65,22 +64,14 @@ fn engine_files(
     wl: &WorkloadSpec,
     role: &str,
 ) -> Vec<(String, String)> {
-    match eng.framework {
-        Framework::TrtLlm => vec![
-            (format!("trtllm_{role}.yaml"), trtllm::extra_llm_api_config(eng, wl)),
-            (format!("launch_{role}.sh"), trtllm::serve_command(eng, model, wl)),
-        ],
-        Framework::Vllm => vec![(format!("launch_{role}.sh"), vllm::serve_command(eng, model, wl))],
-        Framework::Sglang => {
-            vec![(format!("launch_{role}.sh"), sglang::serve_command(eng, model, wl))]
-        }
-    }
+    eng.framework.backend().emit_launch(eng, model, wl, role)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::config::{ParallelSpec, RuntimeFlags, Sla};
+    use crate::frameworks::Framework;
     use crate::models::Dtype;
 
     fn eng(fw: Framework) -> EngineConfig {
@@ -134,6 +125,10 @@ mod tests {
         assert!(y.contains("replicas: 2"));
         assert!(b.get("launch_prefill.sh").is_some());
         assert!(b.get("launch_decode.sh").is_some());
+        // Role-specific sidecars: each TRT-LLM pool script references
+        // its own YAML, not the aggregated server's.
+        assert!(b.get("launch_prefill.sh").unwrap().contains("./trtllm_prefill.yaml"));
+        assert!(b.get("launch_decode.sh").unwrap().contains("./trtllm_decode.yaml"));
     }
 
     #[test]
@@ -144,6 +139,41 @@ mod tests {
             assert!(!b.files.is_empty(), "{fw:?}");
             let sh = b.get("launch_server.sh").unwrap();
             assert!(sh.contains("org/model"));
+        }
+    }
+
+    #[test]
+    fn resolved_flags_emitted_bit_exactly() {
+        // The launch bundle must carry the backend-resolved flag values
+        // verbatim — the abstraction layer's whole contract.
+        use crate::hardware::{h100_sxm, ClusterSpec};
+        use crate::models::by_name;
+        let model = by_name("qwen3-32b").unwrap();
+        let cluster = ClusterSpec::new(h100_sxm(), 8, 1);
+        let w = wl();
+        for fw in Framework::all() {
+            let be = fw.backend();
+            let mut e = eng(fw);
+            e.flags = be.resolve_flags(
+                &model,
+                &cluster,
+                &w,
+                &e.parallel,
+                e.batch,
+                e.weight_dtype,
+            );
+            let b = generate(&Candidate::Aggregated { engine: e, replicas: 1 }, "org/m", &w);
+            let sh = b.get("launch_server.sh").unwrap();
+            assert!(
+                sh.contains(&format!("{:.2}", e.flags.kv_frac)),
+                "{fw:?}: resolved kv_frac {:.2} missing from\n{sh}",
+                e.flags.kv_frac
+            );
+            assert!(
+                sh.contains(&e.flags.max_num_tokens.to_string()),
+                "{fw:?}: resolved max_num_tokens {} missing from\n{sh}",
+                e.flags.max_num_tokens
+            );
         }
     }
 }

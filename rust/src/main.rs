@@ -41,10 +41,14 @@ USAGE:
                             [--nodes 1] [--framework trtllm] --isl N --osl N
                             [--ttft MS] [--speed TOK_S] [--modes agg,disagg]
                             [--top 5] [--prune] [--out-dir DIR]
+                            [--flag-sweep] [--max-num-tokens N[,N...]]
+                            [--kv-frac F[,F...]] [--cuda-graph on|off|both]
                             [--pjrt ARTIFACTS_DIR]
   aiconfigurator sweep      --model <name> [--gpu h100] [--gpus-per-node 8]
                             [--nodes 1] [--framework trtllm] [--prune]
-                            [--modes agg,disagg]
+                            [--modes agg,disagg] [--flag-sweep]
+                            [--max-num-tokens N[,N...]] [--kv-frac F[,F...]]
+                            [--cuda-graph on|off|both]
                             --scenarios ISL:OSL:TTFT:SPEED[,ISL:OSL:TTFT:SPEED...]
                             (TTFT in ms or 'inf'; SPEED in tokens/s/user or 0)
   aiconfigurator plan       --model <name> [--fleet h100,a100] [--gpus-per-node 8]
@@ -61,7 +65,9 @@ USAGE:
                             [--nodes 1] --out FILE.json
   aiconfigurator simulate   --model <name> [--gpu h100] [--framework trtllm]
                             [--tp 1] [--ep 1] [--batch 8] --isl N --osl N
-                            [--requests 32]
+                            [--ttft MS] [--speed TOK_S] [--requests 32]
+                            (--ttft/--speed steer flag resolution so the
+                             simulated engine matches the searched one)
   aiconfigurator experiment <fig1|fig5|fig6|fig7|fig8|table1|all> [--full]
   aiconfigurator serve      [--addr 127.0.0.1:7788] [--pjrt ARTIFACTS_DIR]
                             [--model <name> --gpu h100 --framework trtllm]
@@ -70,6 +76,14 @@ Models: llama3.1-8b qwen3-32b qwen3-235b deepseek-v3 mixtral-8x7b gpt-oss-120b
 GPUs:   a100 h100 h200 b200    Frameworks: trtllm vllm sglang
 
 Flags accept both '--key value' and '--key=value'.
+Launch flags (kv-cache fraction, max-num-tokens, CUDA graphs, chunked
+prefill) are resolved analytically per candidate by the backend layer
+from the memory model and the TTFT budget; pass --max-num-tokens /
+--kv-frac / --cuda-graph to override (comma lists sweep), or
+--flag-sweep to also price framework defaults + no-graph + 2 extra
+token-capacity points per candidate for comparison. Serving modes:
+'agg' and 'disagg' are searchable; 'static' is simulation-only
+(`simulate`) and is rejected by search/sweep.
 `plan` searches traffic-aware deployment schedules: replicas of the
 cost-optimal engine config (and GPU type — --fleet may mix types) per
 time window, meeting the SLA at minimum $ cost.
@@ -170,6 +184,68 @@ fn load_ctx(f: &HashMap<String, String>) -> anyhow::Result<Ctx> {
     Ok(Ctx { model, cluster, framework, silicon: Silicon::new(cluster, framework.profile()) })
 }
 
+/// Parse `--modes` (rejecting unknown tokens and the unsearchable
+/// `static` mode) and the launch-flag override switches into the space.
+fn apply_space_flags(
+    space: &mut SearchSpace,
+    f: &HashMap<String, String>,
+) -> anyhow::Result<()> {
+    if let Some(modes) = f.get("modes") {
+        space.modes = modes
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                ServingMode::parse(s)
+                    .ok_or_else(|| anyhow::anyhow!("unknown serving mode '{s}' in --modes"))
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+    }
+    aiconfigurator::search::ensure_searchable_modes(&space.modes)?;
+    space.flag_sweep = f.contains_key("flag-sweep");
+    if let Some(v) = f.get("max-num-tokens") {
+        space.max_num_tokens = v
+            .split(',')
+            .map(|s| {
+                let n: u32 = s
+                    .trim()
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("--max-num-tokens must be integers, got '{s}'"))?;
+                anyhow::ensure!(n >= 1, "--max-num-tokens values must be positive");
+                Ok(n)
+            })
+            .collect::<anyhow::Result<Vec<u32>>>()?;
+    }
+    if let Some(v) = f.get("kv-frac") {
+        space.kv_frac = v
+            .split(',')
+            .map(|s| {
+                let x: f64 = s
+                    .trim()
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("--kv-frac must be numbers, got '{s}'"))?;
+                anyhow::ensure!(x > 0.0 && x <= 1.0, "--kv-frac values must be in (0, 1]");
+                Ok(x)
+            })
+            .collect::<anyhow::Result<Vec<f64>>>()?;
+    }
+    if let Some(v) = f.get("cuda-graph") {
+        space.cuda_graph = match v.as_str() {
+            "on" | "true" | "1" => vec![true],
+            "off" | "false" | "0" => vec![false],
+            "both" => vec![true, false],
+            other => anyhow::bail!("--cuda-graph must be on|off|both, got '{other}'"),
+        };
+    }
+    Ok(())
+}
+
+fn print_flag_summaries(report: &aiconfigurator::search::SearchReport) {
+    for s in &report.flag_summaries {
+        println!("flags [{}]", s.describe());
+    }
+}
+
 fn cmd_search(f: &HashMap<String, String>) -> anyhow::Result<()> {
     let ctx = load_ctx(f)?;
     let isl = flag_u32(f, "isl", 0)?;
@@ -187,10 +263,7 @@ fn cmd_search(f: &HashMap<String, String>) -> anyhow::Result<()> {
     let db = PerfDatabase::build(&ctx.silicon, &ctx.model, ctx.cluster.gpu.preferred_kv_dtype(), 0xA1C0);
 
     let mut space = SearchSpace::default_for(&ctx.model, ctx.framework);
-    if let Some(modes) = f.get("modes") {
-        space.modes = modes.split(',').filter_map(ServingMode::parse).collect();
-        anyhow::ensure!(!space.modes.is_empty(), "--modes must name agg and/or disagg");
-    }
+    apply_space_flags(&mut space, f)?;
 
     let runner = TaskRunner::new(&ctx.model, &ctx.cluster, space, wl.clone());
     let prune = f.contains_key("prune");
@@ -244,6 +317,7 @@ fn cmd_search(f: &HashMap<String, String>) -> anyhow::Result<()> {
             e.cand.label()
         );
     }
+    print_flag_summaries(&report);
     if let Some(best) = analysis.best() {
         if let Some(dir) = f.get("out-dir") {
             let bundle = generator::generate(&best.cand, ctx.model.name, &wl);
@@ -298,10 +372,7 @@ fn cmd_sweep(f: &HashMap<String, String>) -> anyhow::Result<()> {
     let db = PerfDatabase::build(&ctx.silicon, &ctx.model, ctx.cluster.gpu.preferred_kv_dtype(), 0xA1C0);
 
     let mut space = SearchSpace::default_for(&ctx.model, ctx.framework);
-    if let Some(modes) = f.get("modes") {
-        space.modes = modes.split(',').filter_map(ServingMode::parse).collect();
-        anyhow::ensure!(!space.modes.is_empty(), "--modes must name agg and/or disagg");
-    }
+    apply_space_flags(&mut space, f)?;
     let runner = TaskRunner::new(&ctx.model, &ctx.cluster, space, scenarios[0].clone());
     let opts = aiconfigurator::search::RunOptions { prune: f.contains_key("prune") };
 
@@ -330,6 +401,9 @@ fn cmd_sweep(f: &HashMap<String, String>) -> anyhow::Result<()> {
             report.pruned,
             best
         );
+        for s in &report.flag_summaries {
+            println!("{:>13} flags [{}]", "", s.describe());
+        }
     }
     println!(
         "swept {} scenarios in {:.2}s (shared engine grid + memoized oracle)",
@@ -518,19 +592,39 @@ fn cmd_simulate(f: &HashMap<String, String>) -> anyhow::Result<()> {
     let isl = flag_u32(f, "isl", 1024)?;
     let osl = flag_u32(f, "osl", 128)?;
     let batch = flag_u32(f, "batch", 8)?;
+    let parallel = aiconfigurator::config::ParallelSpec {
+        tp: flag_u32(f, "tp", 1)?,
+        pp: 1,
+        ep: flag_u32(f, "ep", 1)?,
+        dp: 1,
+    };
+    let dt = ctx.cluster.gpu.preferred_kv_dtype();
+    // Launch flags resolved by the backend layer for this workload
+    // shape; pass the same --ttft/--speed as the search to simulate the
+    // exact engine the search priced and emitted.
+    let wl = WorkloadSpec::new(
+        ctx.model.name,
+        isl,
+        osl,
+        flag_f64(f, "ttft", f64::INFINITY)?,
+        flag_f64(f, "speed", 0.0)?,
+    );
+    let flags = ctx
+        .framework
+        .backend()
+        .resolve_flags(&ctx.model, &ctx.cluster, &wl, &parallel, batch, dt);
     let eng = aiconfigurator::config::EngineConfig {
         framework: ctx.framework,
-        parallel: aiconfigurator::config::ParallelSpec {
-            tp: flag_u32(f, "tp", 1)?,
-            pp: 1,
-            ep: flag_u32(f, "ep", 1)?,
-            dp: 1,
-        },
+        parallel,
         batch,
-        weight_dtype: ctx.cluster.gpu.preferred_kv_dtype(),
-        kv_dtype: ctx.cluster.gpu.preferred_kv_dtype(),
-        flags: aiconfigurator::config::RuntimeFlags::defaults_for(ctx.framework),
+        weight_dtype: dt,
+        kv_dtype: dt,
+        flags,
     };
+    eprintln!(
+        "resolved flags: kv_frac {:.2}, max_num_tokens {}, cuda_graph {}, chunked_prefill {}",
+        flags.kv_frac, flags.max_num_tokens, flags.cuda_graph, flags.chunked_prefill
+    );
     let n = flag_u32(f, "requests", 4 * batch)? as usize;
     let sim = AggregatedSim::new(&ctx.silicon, &ctx.model, &ctx.cluster, eng, SimConfig::default());
     let res = sim.run(&closed_loop(n, isl, osl));

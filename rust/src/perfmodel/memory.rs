@@ -4,8 +4,8 @@
 //! pruned", paper §5.2), and the KV budget bounds batch size and the
 //! context-token capacity.
 
-use crate::config::EngineConfig;
-use crate::models::ModelArch;
+use crate::config::{EngineConfig, ParallelSpec};
+use crate::models::{Dtype, ModelArch};
 use crate::ops::kv_bytes_per_gpu_layer;
 
 /// Activation / workspace reserve per GPU, bytes (CUDA context, cublas
@@ -14,10 +14,23 @@ pub const ACT_RESERVE_BYTES: f64 = 4.0 * 1024.0 * 1024.0 * 1024.0;
 
 /// Model weight bytes held by ONE GPU under the engine's parallelism.
 pub fn weight_bytes_per_gpu(model: &ModelArch, eng: &EngineConfig) -> f64 {
-    let tp = eng.parallel.tp as u64;
-    let pp = eng.parallel.pp as u64;
-    let ep = eng.parallel.ep.max(1) as u64;
-    let wb = eng.weight_dtype.bytes();
+    weight_bytes_per_gpu_parts(model, &eng.parallel, eng.weight_dtype)
+}
+
+/// [`weight_bytes_per_gpu`] from the layout parts alone — usable before
+/// an [`EngineConfig`] exists, which is exactly the position the
+/// backend flag resolver ([`crate::frameworks::Backend::resolve_flags`])
+/// is in: flags depend on the weight footprint, the config needs the
+/// flags.
+pub fn weight_bytes_per_gpu_parts(
+    model: &ModelArch,
+    parallel: &ParallelSpec,
+    weight_dtype: Dtype,
+) -> f64 {
+    let tp = parallel.tp as u64;
+    let pp = parallel.pp as u64;
+    let ep = parallel.ep.max(1) as u64;
+    let wb = weight_dtype.bytes();
 
     // Embedding + LM head shard across TP.
     let embed = 2.0 * (model.vocab * model.hidden) as f64 / tp as f64 * wb;

@@ -151,6 +151,7 @@ mod tests {
     fn report(evs: Vec<Evaluated>) -> SearchReport {
         SearchReport {
             configs_priced: evs.len(),
+            flag_summaries: crate::search::flag_summaries(&evs),
             evaluated: evs,
             pruned: 0,
             elapsed_s: 0.0,

@@ -7,10 +7,52 @@
 //! prefill + decode candidates) through a work-stealing worker pool,
 //! optionally pruning SLA-infeasible / Pareto-dominated candidates
 //! incrementally, and supports multi-scenario batch sweeps that share
-//! engine enumeration and memoized oracle queries.
+//! engine enumeration and memoized oracle queries. Launch flags come
+//! from the backend abstraction layer's analytic resolver
+//! ([`crate::frameworks::Backend::resolve_flags`]), re-resolved per
+//! workload scenario.
 
 pub mod runner;
 pub mod space;
 
-pub use runner::{RunOptions, SearchReport, TaskRunner};
+pub use runner::{flag_summaries, FlagSummary, RunOptions, SearchReport, TaskRunner};
 pub use space::SearchSpace;
+
+use crate::config::ServingMode;
+
+/// Reject serving modes the TaskRunner cannot price. `static` parses
+/// (it names Algorithm 1's fixed-batch estimation target) but is not a
+/// searchable deployment shape — without this check a static-mode
+/// request would price *nothing* and report an empty result without
+/// warning. Shared by the CLI and the service so no surface can drift.
+pub fn ensure_searchable_modes(modes: &[ServingMode]) -> anyhow::Result<()> {
+    anyhow::ensure!(!modes.is_empty(), "no serving modes requested");
+    for m in modes {
+        anyhow::ensure!(
+            m.searchable(),
+            "serving mode '{}' is not searchable: static batching is an estimation/simulation \
+             target (use the `simulate` subcommand or perfmodel::static_mode), not a deployable \
+             candidate shape; searchable modes are 'aggregated' and 'disaggregated'",
+            m.name()
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn static_mode_is_rejected_with_clear_error() {
+        let err =
+            ensure_searchable_modes(&[ServingMode::Aggregated, ServingMode::Static]).unwrap_err();
+        assert!(err.to_string().contains("static"), "{err}");
+        assert!(err.to_string().contains("simulate"), "{err}");
+        assert!(ensure_searchable_modes(&[]).is_err());
+        assert!(
+            ensure_searchable_modes(&[ServingMode::Aggregated, ServingMode::Disaggregated])
+                .is_ok()
+        );
+    }
+}

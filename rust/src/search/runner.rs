@@ -20,7 +20,8 @@
 
 use std::time::Instant;
 
-use crate::config::{Candidate, EngineConfig, ServingMode, WorkloadSpec};
+use crate::config::{Candidate, EngineConfig, RuntimeFlags, ServingMode, WorkloadSpec};
+use crate::frameworks::Framework;
 use crate::hardware::ClusterSpec;
 use crate::models::ModelArch;
 use crate::pareto::FrontierAccumulator;
@@ -37,6 +38,89 @@ pub struct Evaluated {
     pub est: PerfEstimate,
 }
 
+/// Resolved-vs-default launch-flag outcome for one framework across a
+/// report's surviving candidates (the backend abstraction layer's
+/// observable win: how far the analytic resolver moved the flags off
+/// the one-size defaults).
+#[derive(Clone, Debug)]
+pub struct FlagSummary {
+    pub framework: Framework,
+    /// The framework's stock flags (what a resolver-less search would
+    /// have pinned everywhere).
+    pub defaults: RuntimeFlags,
+    /// Range of resolved `kv_frac` across candidates.
+    pub kv_frac_min: f64,
+    pub kv_frac_max: f64,
+    /// Range of resolved `max_num_tokens` across candidates.
+    pub mnt_min: u32,
+    pub mnt_max: u32,
+    /// Engines carrying non-default flags / engines total.
+    pub nondefault: usize,
+    pub total: usize,
+}
+
+impl FlagSummary {
+    /// One human-readable delta line for CLIs and logs.
+    pub fn describe(&self) -> String {
+        format!(
+            "{}: kv_frac {:.2}-{:.2} (default {:.2}), max_num_tokens {}-{} (default {}); {}/{} engines off-default",
+            self.framework.name(),
+            self.kv_frac_min,
+            self.kv_frac_max,
+            self.defaults.kv_frac,
+            self.mnt_min,
+            self.mnt_max,
+            self.defaults.max_num_tokens,
+            self.nondefault,
+            self.total,
+        )
+    }
+}
+
+/// Per-framework flag summaries over a set of evaluated candidates
+/// (disaggregated composites contribute both pool engines).
+pub fn flag_summaries(evaluated: &[Evaluated]) -> Vec<FlagSummary> {
+    fn offer(out: &mut Vec<FlagSummary>, eng: &EngineConfig) {
+        let defaults = RuntimeFlags::defaults_for(eng.framework);
+        let idx = match out.iter().position(|s| s.framework == eng.framework) {
+            Some(i) => i,
+            None => {
+                out.push(FlagSummary {
+                    framework: eng.framework,
+                    defaults,
+                    kv_frac_min: f64::INFINITY,
+                    kv_frac_max: f64::NEG_INFINITY,
+                    mnt_min: u32::MAX,
+                    mnt_max: 0,
+                    nondefault: 0,
+                    total: 0,
+                });
+                out.len() - 1
+            }
+        };
+        let s = &mut out[idx];
+        s.kv_frac_min = s.kv_frac_min.min(eng.flags.kv_frac);
+        s.kv_frac_max = s.kv_frac_max.max(eng.flags.kv_frac);
+        s.mnt_min = s.mnt_min.min(eng.flags.max_num_tokens);
+        s.mnt_max = s.mnt_max.max(eng.flags.max_num_tokens);
+        s.total += 1;
+        if eng.flags != defaults {
+            s.nondefault += 1;
+        }
+    }
+    let mut out: Vec<FlagSummary> = Vec::new();
+    for e in evaluated {
+        match &e.cand {
+            Candidate::Aggregated { engine, .. } => offer(&mut out, engine),
+            Candidate::Disaggregated { prefill, decode, .. } => {
+                offer(&mut out, prefill);
+                offer(&mut out, decode);
+            }
+        }
+    }
+    out
+}
+
 /// Outcome of a full search.
 #[derive(Clone, Debug)]
 pub struct SearchReport {
@@ -50,6 +134,8 @@ pub struct SearchReport {
     pub elapsed_s: f64,
     /// Median per-configuration evaluation time, milliseconds.
     pub median_config_ms: f64,
+    /// Per-framework resolved-vs-default flag deltas over `evaluated`.
+    pub flag_summaries: Vec<FlagSummary>,
 }
 
 /// Knobs for one search run.
@@ -112,18 +198,22 @@ impl<'a> TaskRunner<'a> {
         }
     }
 
-    /// Enumerate the candidate pools for one scenario from scratch.
+    /// Enumerate the candidate pools for one scenario from scratch
+    /// (launch flags resolved against this scenario's workload —
+    /// per-scenario, not frozen at grid build).
     fn pools_for(&self, wl: &WorkloadSpec) -> EnginePools {
-        let agg = if self.space.modes.contains(&ServingMode::Aggregated) {
-            self.space.engines(self.model, self.cluster, wl.isl, wl.osl)
+        let agg_mode = self.space.modes.contains(&ServingMode::Aggregated);
+        let disagg_mode = self.space.modes.contains(&ServingMode::Disaggregated);
+        // Aggregated and decode pools are the same memory-filtered list:
+        // enumerate (and flag-resolve) it once, share.
+        let shared = if agg_mode || disagg_mode {
+            self.space.engines(self.model, self.cluster, wl, wl.osl)
         } else {
             Vec::new()
         };
-        let (prefill, decode) = if self.space.modes.contains(&ServingMode::Disaggregated) {
-            (
-                self.space.prefill_engines(self.model, self.cluster, wl.isl),
-                self.space.engines(self.model, self.cluster, wl.isl, wl.osl),
-            )
+        let agg = if agg_mode { shared.clone() } else { Vec::new() };
+        let (prefill, decode) = if disagg_mode {
+            (self.space.prefill_engines(self.model, self.cluster, wl), shared)
         } else {
             (Vec::new(), Vec::new())
         };
@@ -191,14 +281,18 @@ impl<'a> TaskRunner<'a> {
     ) -> Vec<SearchReport> {
         let agg_mode = self.space.modes.contains(&ServingMode::Aggregated);
         let disagg_mode = self.space.modes.contains(&ServingMode::Disaggregated);
-        // Workload-independent structural grids, enumerated once.
-        let grid = if agg_mode || disagg_mode {
-            self.space.engine_grid(self.model, self.cluster)
+        // Workload-independent structural grids, enumerated once; the
+        // backend flag resolver then expands them per scenario, so
+        // flags track each scenario's ISL/SLA instead of being frozen
+        // at grid build.
+        let structural = if agg_mode || disagg_mode {
+            self.space.structural_grid(self.model, self.cluster)
         } else {
             Vec::new()
         };
-        let pre_grid = if disagg_mode {
-            self.space.prefill_space().engine_grid(self.model, self.cluster)
+        let pre_space = self.space.prefill_space();
+        let pre_structural = if disagg_mode {
+            pre_space.structural_grid(self.model, self.cluster)
         } else {
             Vec::new()
         };
@@ -211,8 +305,11 @@ impl<'a> TaskRunner<'a> {
                 };
                 // Aggregated and decode pools are the same memory-filtered
                 // list (as in pools_for); filter once, share.
+                let grid = self.space.expand_flags(&structural, self.model, self.cluster, wl);
                 let filtered: Vec<EngineConfig> =
                     grid.iter().filter(|e| fits(e, wl.osl)).copied().collect();
+                let pre_grid =
+                    pre_space.expand_flags(&pre_structural, self.model, self.cluster, wl);
                 let pools = EnginePools {
                     agg: if agg_mode { filtered.clone() } else { Vec::new() },
                     prefill: pre_grid.iter().filter(|e| fits(e, 1)).copied().collect::<Vec<_>>(),
@@ -335,6 +432,7 @@ impl<'a> TaskRunner<'a> {
         per_config_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let median = per_config_ms.get(per_config_ms.len() / 2).copied().unwrap_or(0.0);
         SearchReport {
+            flag_summaries: flag_summaries(&evaluated),
             evaluated,
             configs_priced,
             pruned,
@@ -357,7 +455,7 @@ impl<'a> TaskRunner<'a> {
 
         // ---- Aggregated candidates --------------------------------------
         if self.space.modes.contains(&ServingMode::Aggregated) {
-            let engines = self.space.engines(self.model, self.cluster, wl.isl, wl.osl);
+            let engines = self.space.engines(self.model, self.cluster, wl, wl.osl);
             configs_priced += engines.len();
             let n_threads = self.thread_count().min(engines.len().max(1));
             let chunks: Vec<&[EngineConfig]> =
@@ -399,8 +497,8 @@ impl<'a> TaskRunner<'a> {
 
         // ---- Disaggregated candidates ------------------------------------
         if self.space.modes.contains(&ServingMode::Disaggregated) {
-            let prefill = self.space.prefill_engines(self.model, self.cluster, wl.isl);
-            let decode = self.space.engines(self.model, self.cluster, wl.isl, wl.osl);
+            let prefill = self.space.prefill_engines(self.model, self.cluster, wl);
+            let decode = self.space.engines(self.model, self.cluster, wl, wl.osl);
             configs_priced += prefill.len() + decode.len();
 
             let t_price = Instant::now();
@@ -443,6 +541,7 @@ impl<'a> TaskRunner<'a> {
         per_config_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let median = per_config_ms.get(per_config_ms.len() / 2).copied().unwrap_or(0.0);
         SearchReport {
+            flag_summaries: flag_summaries(&evaluated),
             evaluated,
             configs_priced,
             pruned: 0,
@@ -574,6 +673,39 @@ mod tests {
                 assert_eq!(x.est, y.est);
             }
         }
+    }
+
+    #[test]
+    fn frontier_carries_resolved_flags_and_report_shows_deltas() {
+        // The paper-level claim behind the backend layer: a
+        // qwen3-32b/H100 search with flag resolution on must place at
+        // least one candidate with non-default kv_frac or
+        // max_num_tokens on the Pareto frontier, and the report must
+        // expose the resolved-vs-default deltas.
+        let model = by_name("qwen3-32b").unwrap();
+        let cluster = ClusterSpec::new(h100_sxm(), 8, 1);
+        let sil = Silicon::new(cluster, Framework::TrtLlm.profile());
+        let space = SearchSpace::default_for(&model, Framework::TrtLlm);
+        let wl = WorkloadSpec::new("qwen3-32b", 4000, 500, 1500.0, 20.0);
+        let runner = TaskRunner::new(&model, &cluster, space, wl.clone());
+        let report = runner.run(&sil);
+
+        assert!(!report.flag_summaries.is_empty());
+        let s = &report.flag_summaries[0];
+        assert_eq!(s.framework, Framework::TrtLlm);
+        assert!(s.nondefault > 0, "{}", s.describe());
+        assert!(s.kv_frac_min <= s.kv_frac_max && s.mnt_min <= s.mnt_max);
+
+        let analysis = crate::pareto::analyze(&report.evaluated, &wl.sla);
+        let off_default = analysis.frontier.iter().any(|&i| {
+            let eng = match &analysis.feasible[i].cand {
+                Candidate::Aggregated { engine, .. } => engine,
+                Candidate::Disaggregated { decode, .. } => decode,
+            };
+            let d = crate::config::RuntimeFlags::defaults_for(eng.framework);
+            eng.flags.kv_frac != d.kv_frac || eng.flags.max_num_tokens != d.max_num_tokens
+        });
+        assert!(off_default, "no frontier candidate left the default flag point");
     }
 
     #[test]

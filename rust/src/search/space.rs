@@ -1,16 +1,26 @@
 //! Search-space enumeration with validity + memory pruning.
 //!
 //! Dimensions: framework × TP × PP × EP × DP × batch × quantization ×
-//! runtime flags (CUDA graph, max-num-tokens) × serving mode — "from
-//! cluster topology down to engine specific flags" (paper §1).
+//! serving mode — "from cluster topology down to engine specific
+//! flags" (paper §1). Runtime flags are NOT cross-producted into the
+//! grid: each structural point gets its flags from the backend
+//! abstraction layer's analytic resolver
+//! ([`crate::frameworks::Backend::resolve_flags`]), which covers the
+//! paper's flag space without exploding the candidate count. Explicit
+//! per-field overrides ([`SearchSpace::cuda_graph`] /
+//! [`SearchSpace::max_num_tokens`] / [`SearchSpace::kv_frac`]) are
+//! still honored, and the opt-in [`SearchSpace::flag_sweep`] mode
+//! additionally enumerates {resolved, framework defaults, no-graph,
+//! halved/doubled token capacity} per point for comparison runs.
 
-use crate::config::{EngineConfig, ParallelSpec, RuntimeFlags, ServingMode};
+use crate::config::{EngineConfig, ParallelSpec, RuntimeFlags, ServingMode, WorkloadSpec};
 use crate::frameworks::Framework;
 use crate::hardware::ClusterSpec;
 use crate::models::{Dtype, ModelArch};
 use crate::perfmodel::memory;
 
-/// Declarative search space. Empty vectors mean "use defaults".
+/// Declarative search space. Empty vectors mean "use defaults" — and
+/// for the flag fields, "resolve analytically per candidate".
 #[derive(Clone, Debug)]
 pub struct SearchSpace {
     pub frameworks: Vec<Framework>,
@@ -20,8 +30,16 @@ pub struct SearchSpace {
     pub dp: Vec<u32>,
     pub batch: Vec<u32>,
     pub dtypes: Vec<Dtype>,
+    /// CUDA-graph override (empty = backend-resolved per candidate).
     pub cuda_graph: Vec<bool>,
+    /// Token-capacity override (empty = backend-resolved per candidate).
     pub max_num_tokens: Vec<u32>,
+    /// KV-fraction override (empty = backend-resolved per candidate).
+    pub kv_frac: Vec<f64>,
+    /// Opt-in: besides the resolved flags, also enumerate the framework
+    /// defaults, a no-graph variant and 2 extra `max_num_tokens` points
+    /// per structural candidate (resolved-vs-default comparisons).
+    pub flag_sweep: bool,
     pub modes: Vec<ServingMode>,
     /// Disaggregated sweep bounds (x ∈ [1, max_x], y ∈ [1, max_y] —
     /// paper Algorithm 3 uses 32 / 64).
@@ -31,9 +49,12 @@ pub struct SearchSpace {
     pub prefill_batch: Vec<u32>,
 }
 
+/// One workload-independent grid point: everything but the flags.
+pub(crate) type StructuralPoint = (Framework, Dtype, ParallelSpec, u32);
+
 impl SearchSpace {
     /// The paper's default sweep (§5.1): TP/EP ∈ {1,2,4,8},
-    /// batch 4–128, aggregated + disaggregated.
+    /// batch 4–128, aggregated + disaggregated, flags resolved.
     pub fn default_for(model: &ModelArch, framework: Framework) -> SearchSpace {
         SearchSpace {
             frameworks: vec![framework],
@@ -43,8 +64,10 @@ impl SearchSpace {
             dp: vec![1],
             batch: vec![4, 8, 16, 32, 64, 128],
             dtypes: vec![Dtype::Fp8],
-            cuda_graph: vec![true],
-            max_num_tokens: vec![8192],
+            cuda_graph: Vec::new(),
+            max_num_tokens: Vec::new(),
+            kv_frac: Vec::new(),
+            flag_sweep: false,
             modes: vec![ServingMode::Aggregated, ServingMode::Disaggregated],
             max_x: 32,
             max_y: 64,
@@ -86,16 +109,20 @@ impl SearchSpace {
         true
     }
 
-    /// Enumerate the **structural** engine grid: every framework ×
-    /// dtype × layout × flag × batch combination that is valid for the
-    /// model and cluster, *before* any workload-dependent memory check.
-    /// Batch sweeps ([`crate::search::TaskRunner::run_sweep`]) enumerate
-    /// this once and re-filter per scenario, since only the memory prune
-    /// depends on (ISL, OSL).
-    pub fn engine_grid(&self, model: &ModelArch, cluster: &ClusterSpec) -> Vec<EngineConfig> {
+    /// Enumerate the workload-independent **structural** grid: every
+    /// framework × dtype × layout × batch combination valid for the
+    /// model and cluster. Batch sweeps enumerate this once and expand
+    /// flags per scenario ([`Self::expand_flags`]), since flag
+    /// resolution and the memory prune are the only
+    /// workload-dependent steps.
+    pub(crate) fn structural_grid(
+        &self,
+        model: &ModelArch,
+        cluster: &ClusterSpec,
+    ) -> Vec<StructuralPoint> {
         let mut out = Vec::new();
         for &fw in &self.frameworks {
-            let fw_prof = fw.profile();
+            let be = fw.backend();
             // Dtypes this GPU *and* framework can run, from the
             // requested list. When none qualify (the FP8-only default
             // on Ampere), fall back to the GPU's preferred dtype so
@@ -106,11 +133,11 @@ impl SearchSpace {
                 .dtypes
                 .iter()
                 .copied()
-                .filter(|&dt| cluster.gpu.supports(dt) && fw_prof.supports_dtype(dt))
+                .filter(|&dt| cluster.gpu.supports(dt) && be.supports_dtype(dt))
                 .collect();
             if dtypes.is_empty() {
                 let fb = cluster.gpu.preferred_kv_dtype();
-                if cluster.gpu.supports(fb) && fw_prof.supports_dtype(fb) {
+                if cluster.gpu.supports(fb) && be.supports_dtype(fb) {
                     dtypes.push(fb);
                 }
             }
@@ -123,25 +150,8 @@ impl SearchSpace {
                                 if !Self::layout_valid(model, cluster, &p) {
                                     continue;
                                 }
-                                for &mnt in &self.max_num_tokens {
-                                    for &cg in &self.cuda_graph {
-                                        for &b in &self.batch {
-                                            out.push(EngineConfig {
-                                                framework: fw,
-                                                parallel: p,
-                                                batch: b,
-                                                weight_dtype: dt,
-                                                kv_dtype: dt,
-                                                flags: RuntimeFlags {
-                                                    cuda_graph: cg,
-                                                    kv_frac: fw_prof.kv_frac_default,
-                                                    max_num_tokens: mnt,
-                                                    chunked_prefill: fw_prof
-                                                        .chunked_prefill_default,
-                                                },
-                                            });
-                                        }
-                                    }
+                                for &b in &self.batch {
+                                    out.push((fw, dt, p, b));
                                 }
                             }
                         }
@@ -152,27 +162,156 @@ impl SearchSpace {
         out
     }
 
+    /// The flag variants of one structural point under a workload:
+    /// the analytically resolved flags, widened by [`Self::flag_sweep`]
+    /// and then narrowed by any explicit user overrides (which replace
+    /// the corresponding resolved field, cross-producted exactly like
+    /// the pre-resolver sweep lists did).
+    pub(crate) fn flag_variants(
+        &self,
+        model: &ModelArch,
+        cluster: &ClusterSpec,
+        wl: &WorkloadSpec,
+        point: &StructuralPoint,
+    ) -> Vec<RuntimeFlags> {
+        let (fw, dt, p, batch) = *point;
+        let be = fw.backend();
+        let pol = be.flag_policy();
+        // A token capacity implies a chunking decision: chunked prefill
+        // engages exactly when the prompt exceeds the capacity. Every
+        // variant built with a capacity other than its base's must
+        // re-derive it, or the model and the emitted launch files
+        // would disagree about chunking.
+        let chunk_for = |mnt: u32| pol.supports_chunked_prefill && wl.isl > mnt;
+        let resolved = be.resolve_flags(model, cluster, wl, &p, batch, dt);
+        let mut bases = vec![resolved];
+        if self.flag_sweep {
+            push_unique(&mut bases, be.default_flags());
+            push_unique(&mut bases, RuntimeFlags { cuda_graph: false, ..resolved });
+            for mnt in [
+                (resolved.max_num_tokens / 2).max(pol.min_tokens),
+                resolved.max_num_tokens.saturating_mul(2).min(pol.max_tokens),
+            ] {
+                if mnt >= batch {
+                    push_unique(
+                        &mut bases,
+                        RuntimeFlags {
+                            max_num_tokens: mnt,
+                            chunked_prefill: chunk_for(mnt),
+                            ..resolved
+                        },
+                    );
+                }
+            }
+        }
+        let mut out = Vec::new();
+        for base in bases {
+            let mnts: Vec<u32> = if self.max_num_tokens.is_empty() {
+                vec![base.max_num_tokens]
+            } else {
+                self.max_num_tokens.clone()
+            };
+            let cgs: Vec<bool> = if self.cuda_graph.is_empty() {
+                vec![base.cuda_graph]
+            } else {
+                self.cuda_graph.clone()
+            };
+            let kvs: Vec<f64> = if self.kv_frac.is_empty() {
+                vec![base.kv_frac]
+            } else {
+                self.kv_frac.clone()
+            };
+            for &mnt in &mnts {
+                for &cg in &cgs {
+                    for &kv in &kvs {
+                        push_unique(
+                            &mut out,
+                            RuntimeFlags {
+                                cuda_graph: cg,
+                                kv_frac: kv,
+                                max_num_tokens: mnt,
+                                // Keep the base's chunking when its
+                                // capacity is kept (preserves the exact
+                                // framework-defaults point in sweeps);
+                                // re-derive for substituted capacities.
+                                chunked_prefill: if mnt == base.max_num_tokens {
+                                    base.chunked_prefill
+                                } else {
+                                    chunk_for(mnt)
+                                },
+                            },
+                        );
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Expand a structural grid into engine configurations for one
+    /// workload (flags resolved per point; no memory filtering).
+    pub(crate) fn expand_flags(
+        &self,
+        points: &[StructuralPoint],
+        model: &ModelArch,
+        cluster: &ClusterSpec,
+        wl: &WorkloadSpec,
+    ) -> Vec<EngineConfig> {
+        let mut out = Vec::new();
+        for point in points {
+            let (fw, dt, p, b) = *point;
+            for flags in self.flag_variants(model, cluster, wl, point) {
+                out.push(EngineConfig {
+                    framework: fw,
+                    parallel: p,
+                    batch: b,
+                    weight_dtype: dt,
+                    kv_dtype: dt,
+                    flags,
+                });
+            }
+        }
+        out
+    }
+
+    /// The full engine grid for one workload: structural enumeration +
+    /// per-point flag resolution, *before* any memory check.
+    pub fn engine_grid(
+        &self,
+        model: &ModelArch,
+        cluster: &ClusterSpec,
+        wl: &WorkloadSpec,
+    ) -> Vec<EngineConfig> {
+        self.expand_flags(&self.structural_grid(model, cluster), model, cluster, wl)
+    }
+
     /// Enumerate all valid aggregated engine configurations (memory
-    /// pruned against the workload's isl+osl footprint).
+    /// pruned against the workload's isl + `mem_osl` footprint —
+    /// `mem_osl` is `wl.osl` for aggregated/decode pools and 1 for
+    /// prefill pools, which hold only in-flight prompts).
     pub fn engines(
         &self,
         model: &ModelArch,
         cluster: &ClusterSpec,
-        isl: u32,
-        osl: u32,
+        wl: &WorkloadSpec,
+        mem_osl: u32,
     ) -> Vec<EngineConfig> {
         let mem = cluster.gpu.mem_bytes();
-        self.engine_grid(model, cluster)
+        self.engine_grid(model, cluster, wl)
             .into_iter()
-            .filter(|eng| memory::fits(model, mem, eng, isl, osl))
+            .filter(|eng| memory::fits(model, mem, eng, wl.isl, mem_osl))
             .collect()
     }
 
-    /// The prefill-pool sub-space (small batches, CUDA graphs pinned on).
+    /// The prefill-pool sub-space: small batches, CUDA graphs pinned on
+    /// — unless the caller overrode the graph axis explicitly, which
+    /// wins for prefill pools too.
     pub fn prefill_space(&self) -> SearchSpace {
         let mut sub = self.clone();
         sub.batch = self.prefill_batch.clone();
-        sub.cuda_graph = vec![true];
+        if sub.cuda_graph.is_empty() {
+            sub.cuda_graph = vec![true];
+        }
         sub
     }
 
@@ -181,10 +320,16 @@ impl SearchSpace {
         &self,
         model: &ModelArch,
         cluster: &ClusterSpec,
-        isl: u32,
+        wl: &WorkloadSpec,
     ) -> Vec<EngineConfig> {
         // Prefill pool holds only in-flight prompts (osl = 1).
-        self.prefill_space().engines(model, cluster, isl, 1)
+        self.prefill_space().engines(model, cluster, wl, 1)
+    }
+}
+
+fn push_unique(v: &mut Vec<RuntimeFlags>, f: RuntimeFlags) {
+    if !v.contains(&f) {
+        v.push(f);
     }
 }
 
@@ -194,6 +339,10 @@ mod tests {
     use crate::hardware::{h100_sxm, h200_sxm};
     use crate::models::by_name;
 
+    fn wl(isl: u32, osl: u32) -> WorkloadSpec {
+        WorkloadSpec::new("m", isl, osl, 1500.0, 20.0)
+    }
+
     #[test]
     fn dense_model_never_gets_ep() {
         let m = by_name("qwen3-32b").unwrap();
@@ -202,7 +351,7 @@ mod tests {
         assert_eq!(s.ep, vec![1]);
         let mut s2 = s.clone();
         s2.ep = vec![1, 4];
-        let engines = s2.engines(&m, &c, 1024, 128);
+        let engines = s2.engines(&m, &c, &wl(1024, 128), 128);
         assert!(engines.iter().all(|e| e.parallel.ep == 1));
     }
 
@@ -225,7 +374,7 @@ mod tests {
         let mut s = SearchSpace::default_for(&m, Framework::TrtLlm);
         s.dtypes = vec![Dtype::Fp16];
         s.batch = vec![1, 4096];
-        let engines = s.engines(&m, &c, 4096, 512);
+        let engines = s.engines(&m, &c, &wl(4096, 512), 512);
         assert!(!engines.is_empty());
         assert!(engines.iter().all(|e| e.batch == 1 || e.parallel.tp >= 4));
     }
@@ -235,7 +384,7 @@ mod tests {
         let m = by_name("llama3.1-8b").unwrap();
         let c = ClusterSpec::new(h200_sxm(), 4, 1);
         let s = SearchSpace::default_for(&m, Framework::Vllm);
-        let engines = s.engines(&m, &c, 1024, 128);
+        let engines = s.engines(&m, &c, &wl(1024, 128), 128);
         assert!(engines.iter().all(|e| e.parallel.gpus() <= 4));
     }
 
@@ -249,12 +398,15 @@ mod tests {
         // cores — the grid must fall back to FP16, not come up empty.
         let s = SearchSpace::default_for(&m, Framework::TrtLlm);
         assert_eq!(s.dtypes, vec![Dtype::Fp8]);
-        let grid = s.engine_grid(&m, &c);
+        let grid = s.engine_grid(&m, &c, &wl(1024, 128));
         assert!(!grid.is_empty());
         assert!(grid.iter().all(|e| e.weight_dtype == Dtype::Fp16));
         // A space that names a supported dtype is untouched.
         let h = ClusterSpec::new(crate::hardware::h100_sxm(), 8, 1);
-        assert!(s.engine_grid(&m, &h).iter().all(|e| e.weight_dtype == Dtype::Fp8));
+        assert!(s
+            .engine_grid(&m, &h, &wl(1024, 128))
+            .iter()
+            .all(|e| e.weight_dtype == Dtype::Fp8));
     }
 
     #[test]
@@ -262,9 +414,105 @@ mod tests {
         let m = by_name("qwen3-235b").unwrap();
         let c = ClusterSpec::new(h200_sxm(), 8, 1);
         let s = SearchSpace::default_for(&m, Framework::TrtLlm);
-        let engines = s.engines(&m, &c, 2048, 256);
+        let engines = s.engines(&m, &c, &wl(2048, 256), 256);
         assert!(engines.iter().any(|e| e.parallel.ep > 1));
         // ep ≤ tp·dp convention.
         assert!(engines.iter().all(|e| e.parallel.ep <= e.parallel.tp * e.parallel.dp));
+    }
+
+    #[test]
+    fn default_grid_carries_resolved_flags() {
+        // The default space resolves flags analytically: the grid must
+        // contain kv_frac / max_num_tokens values that differ from the
+        // framework defaults (TP-dependent), with exactly one flag
+        // variant per structural point.
+        let m = by_name("qwen3-32b").unwrap();
+        let c = ClusterSpec::new(h100_sxm(), 8, 1);
+        let s = SearchSpace::default_for(&m, Framework::TrtLlm);
+        let w = WorkloadSpec::new("qwen3-32b", 4000, 500, 1200.0, 40.0);
+        let grid = s.engine_grid(&m, &c, &w);
+        let structural = s.structural_grid(&m, &c);
+        assert_eq!(grid.len(), structural.len());
+        let d = RuntimeFlags::defaults_for(Framework::TrtLlm);
+        assert!(
+            grid.iter().any(|e| e.flags.kv_frac != d.kv_frac
+                || e.flags.max_num_tokens != d.max_num_tokens),
+            "resolved grid must leave the default flag point"
+        );
+        // kv_frac varies with the layout's weight footprint.
+        let kv_tp1 = grid.iter().find(|e| e.parallel.tp == 1).unwrap().flags.kv_frac;
+        let kv_tp8 = grid.iter().find(|e| e.parallel.tp == 8).unwrap().flags.kv_frac;
+        assert!(kv_tp1 < kv_tp8);
+    }
+
+    #[test]
+    fn explicit_overrides_are_honored() {
+        let m = by_name("llama3.1-8b").unwrap();
+        let c = ClusterSpec::new(h100_sxm(), 8, 1);
+        let mut s = SearchSpace::default_for(&m, Framework::Vllm);
+        s.cuda_graph = vec![true, false];
+        s.max_num_tokens = vec![4096];
+        s.kv_frac = vec![0.8];
+        let w = wl(2048, 256);
+        let grid = s.engine_grid(&m, &c, &w);
+        assert!(grid.iter().all(|e| e.flags.max_num_tokens == 4096));
+        assert!(grid.iter().all(|e| e.flags.kv_frac == 0.8));
+        assert!(grid.iter().any(|e| e.flags.cuda_graph));
+        assert!(grid.iter().any(|e| !e.flags.cuda_graph));
+        // Two graph variants per structural point, nothing more.
+        assert_eq!(grid.len(), 2 * s.structural_grid(&m, &c).len());
+    }
+
+    #[test]
+    fn overridden_capacity_rederives_chunking() {
+        // A capacity override implies a chunking decision: the model
+        // and the emitted launch files must agree on it.
+        let m = by_name("qwen3-32b").unwrap();
+        let c = ClusterSpec::new(h100_sxm(), 8, 1);
+        let mut s = SearchSpace::default_for(&m, Framework::TrtLlm);
+        let w = WorkloadSpec::new("qwen3-32b", 4000, 500, f64::INFINITY, 0.0);
+        // Capacity above the prompt → no chunking anywhere.
+        s.max_num_tokens = vec![8192];
+        assert!(s.engine_grid(&m, &c, &w).iter().all(|e| !e.flags.chunked_prefill));
+        // Capacity below the prompt → chunking on everywhere.
+        s.max_num_tokens = vec![1024];
+        assert!(s
+            .engine_grid(&m, &c, &w)
+            .iter()
+            .all(|e| e.flags.chunked_prefill && e.flags.max_num_tokens == 1024));
+    }
+
+    #[test]
+    fn prefill_space_honors_explicit_graph_override() {
+        let m = by_name("llama3.1-8b").unwrap();
+        let mut s = SearchSpace::default_for(&m, Framework::TrtLlm);
+        // No override: prefill pins graphs on.
+        assert_eq!(s.prefill_space().cuda_graph, vec![true]);
+        // Explicit override wins for the prefill pool too.
+        s.cuda_graph = vec![false];
+        assert_eq!(s.prefill_space().cuda_graph, vec![false]);
+    }
+
+    #[test]
+    fn flag_sweep_adds_default_and_nograph_variants() {
+        let m = by_name("qwen3-32b").unwrap();
+        let c = ClusterSpec::new(h100_sxm(), 8, 1);
+        let mut s = SearchSpace::default_for(&m, Framework::TrtLlm);
+        s.flag_sweep = true;
+        let w = WorkloadSpec::new("qwen3-32b", 4000, 500, 1200.0, 40.0);
+        let grid = s.engine_grid(&m, &c, &w);
+        let plain = {
+            let mut p = s.clone();
+            p.flag_sweep = false;
+            p.engine_grid(&m, &c, &w)
+        };
+        assert!(grid.len() > plain.len(), "sweep must widen the grid");
+        let d = RuntimeFlags::defaults_for(Framework::TrtLlm);
+        assert!(grid.iter().any(|e| e.flags == d), "defaults variant present");
+        assert!(grid.iter().any(|e| !e.flags.cuda_graph), "no-graph variant present");
+        // Multiple token-capacity points around the resolved one.
+        let mnts: std::collections::HashSet<u32> =
+            grid.iter().map(|e| e.flags.max_num_tokens).collect();
+        assert!(mnts.len() >= 2, "{mnts:?}");
     }
 }

@@ -197,7 +197,8 @@ pub fn handle_request(req: &Json, state: &State) -> anyhow::Result<Json> {
         .set("candidates", json::num(report.evaluated.len() as f64))
         .set("feasible", json::num(analysis.feasible.len() as f64))
         .set("elapsed_ms", json::num(t0.elapsed().as_secs_f64() * 1e3))
-        .set("top", top_json(&analysis, top_k));
+        .set("top", top_json(&analysis, top_k))
+        .set("flags", flags_json(&report));
     if let Some(id) = req.get("id") {
         resp.set("id", id.clone());
     }
@@ -238,16 +239,74 @@ fn request_ctx(req: &Json, state: &State, model_name: &str) -> anyhow::Result<Re
         (model_name.to_string(), gpu_name.to_string(), gpn, nodes, fw.name().to_string());
     let db = db_for(state, &key)?;
 
-    // Search space (modes overridable per request).
+    // Search space (modes and launch-flag handling overridable per
+    // request).
     let mut space = SearchSpace::default_for(&model, fw);
     if let Some(modes) = req.get("modes").and_then(|m| m.as_arr()) {
         space.modes = modes
             .iter()
-            .filter_map(|m| m.as_str().and_then(ServingMode::parse))
-            .collect();
-        anyhow::ensure!(!space.modes.is_empty(), "no valid modes");
+            .map(|m| {
+                m.as_str()
+                    .and_then(ServingMode::parse)
+                    .ok_or_else(|| anyhow::anyhow!("unknown serving mode {m:?} in 'modes'"))
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+    }
+    // `static` parses but is not a searchable deployment shape: reject
+    // loudly instead of pricing nothing (see crate::search).
+    crate::search::ensure_searchable_modes(&space.modes)?;
+    // Overrides are validated loudly: a wrong-typed value is an error,
+    // never a silent fall-through to the resolver.
+    if let Some(v) = req.get("flag_sweep") {
+        space.flag_sweep = v
+            .as_bool()
+            .ok_or_else(|| anyhow::anyhow!("'flag_sweep' must be a boolean"))?;
+    }
+    if let Some(flags) = req.get("flags") {
+        if let Some(v) = flags.get("max_num_tokens") {
+            let x = v
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("flags.max_num_tokens must be a number"))?;
+            anyhow::ensure!(
+                x >= 1.0 && x <= u32::MAX as f64 && x.fract() == 0.0,
+                "flags.max_num_tokens must be a positive integer"
+            );
+            space.max_num_tokens = vec![x as u32];
+        }
+        if let Some(v) = flags.get("kv_frac") {
+            let x = v
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("flags.kv_frac must be a number"))?;
+            anyhow::ensure!(x > 0.0 && x <= 1.0, "flags.kv_frac must be in (0, 1]");
+            space.kv_frac = vec![x];
+        }
+        if let Some(v) = flags.get("cuda_graph") {
+            let b = v
+                .as_bool()
+                .ok_or_else(|| anyhow::anyhow!("flags.cuda_graph must be a boolean"))?;
+            space.cuda_graph = vec![b];
+        }
     }
     Ok(ReqCtx { model, cluster, top_k, key, db, space })
+}
+
+/// Per-framework resolved-vs-default flag deltas of a report, as JSON.
+fn flags_json(report: &crate::search::SearchReport) -> Json {
+    let mut arr = Vec::new();
+    for s in &report.flag_summaries {
+        let mut o = Json::obj();
+        o.set("framework", json::s(s.framework.name()))
+            .set("default_kv_frac", json::num(s.defaults.kv_frac))
+            .set("default_max_num_tokens", json::num(s.defaults.max_num_tokens as f64))
+            .set("resolved_kv_frac_min", json::num(s.kv_frac_min))
+            .set("resolved_kv_frac_max", json::num(s.kv_frac_max))
+            .set("resolved_max_num_tokens_min", json::num(s.mnt_min as f64))
+            .set("resolved_max_num_tokens_max", json::num(s.mnt_max as f64))
+            .set("engines_off_default", json::num(s.nondefault as f64))
+            .set("engines_total", json::num(s.total as f64));
+        arr.push(o);
+    }
+    Json::Arr(arr)
 }
 
 /// Fetch (or build and cache) the database for a context key.
@@ -319,7 +378,8 @@ fn handle_sweep_request(req: &Json, state: &State) -> anyhow::Result<Json> {
             .set("configs_priced", json::num(report.configs_priced as f64))
             .set("candidates", json::num(report.evaluated.len() as f64))
             .set("feasible", json::num(analysis.feasible.len() as f64))
-            .set("top", top_json(&analysis, top_k));
+            .set("top", top_json(&analysis, top_k))
+            .set("flags", flags_json(report));
         if let Some(best) = analysis.best() {
             o.set("launch", launch_json(&best.cand, wl));
         }
@@ -627,5 +687,43 @@ mod tests {
         let wl = WorkloadSpec::new("not-a-model", 512, 64, 2000.0, 5.0);
         let req = make_request(&wl, "h100", 8, 1, Framework::TrtLlm, 1);
         assert!(handle_request(&req, &st).is_err());
+    }
+
+    #[test]
+    fn static_mode_request_is_rejected_not_silently_empty() {
+        let st = state();
+        let wl = WorkloadSpec::new("llama3.1-8b", 512, 64, 2000.0, 5.0);
+        let mut req = make_request(&wl, "h100", 8, 1, Framework::TrtLlm, 1);
+        req.set("modes", Json::Arr(vec![json::s("static")]));
+        let err = handle_request(&req, &st).unwrap_err();
+        assert!(err.to_string().contains("static"), "{err}");
+        // Unknown mode strings are also loud errors, not silent drops.
+        let mut req2 = make_request(&wl, "h100", 8, 1, Framework::TrtLlm, 1);
+        req2.set("modes", Json::Arr(vec![json::s("warp-drive")]));
+        assert!(handle_request(&req2, &st).is_err());
+    }
+
+    #[test]
+    fn response_reports_flag_deltas_and_honors_overrides() {
+        let st = state();
+        let wl = WorkloadSpec::new("llama3.1-8b", 1024, 128, 2000.0, 10.0);
+        let resp =
+            handle_request(&make_request(&wl, "h100", 8, 1, Framework::TrtLlm, 1), &st).unwrap();
+        let flags = resp.req("flags").unwrap().as_arr().unwrap();
+        assert_eq!(flags.len(), 1);
+        assert_eq!(flags[0].req_str("framework").unwrap(), "trtllm");
+        assert!(flags[0].req_f64("engines_total").unwrap() > 0.0);
+        assert!(flags[0].req_f64("engines_off_default").unwrap() > 0.0);
+
+        // Per-request overrides pin the flag values across the grid.
+        let mut req = make_request(&wl, "h100", 8, 1, Framework::TrtLlm, 2);
+        let mut over = Json::obj();
+        over.set("max_num_tokens", json::num(4096.0)).set("kv_frac", json::num(0.8));
+        req.set("flags", over);
+        let resp = handle_request(&req, &st).unwrap();
+        let flags = resp.req("flags").unwrap().as_arr().unwrap();
+        assert_eq!(flags[0].req_f64("resolved_max_num_tokens_min").unwrap(), 4096.0);
+        assert_eq!(flags[0].req_f64("resolved_max_num_tokens_max").unwrap(), 4096.0);
+        assert_eq!(flags[0].req_f64("resolved_kv_frac_min").unwrap(), 0.8);
     }
 }

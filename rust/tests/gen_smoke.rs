@@ -1,0 +1,85 @@
+//! Generator smoke gate (CI): the `generate` path must produce a
+//! non-empty launch bundle for ALL three backends on one example
+//! workload, and every emitted launch file must carry the
+//! backend-resolved flag values. Guards the `Backend` trait dispatch
+//! against a backend silently falling out of the registry and against
+//! emission drifting from the resolver.
+
+use aiconfigurator::config::{Candidate, EngineConfig, ParallelSpec, WorkloadSpec};
+use aiconfigurator::frameworks::Framework;
+use aiconfigurator::generator;
+use aiconfigurator::hardware::{h100_sxm, ClusterSpec};
+use aiconfigurator::models::{by_name, Dtype};
+
+#[test]
+fn every_backend_emits_resolved_flags() {
+    let model = by_name("qwen3-32b").unwrap();
+    let cluster = ClusterSpec::new(h100_sxm(), 8, 1);
+    let wl = WorkloadSpec::new("qwen3-32b", 4000, 500, 1200.0, 60.0);
+    let parallel = ParallelSpec::tp(2);
+    let batch = 16;
+
+    for fw in Framework::all() {
+        let be = fw.backend();
+        let flags = be.resolve_flags(&model, &cluster, &wl, &parallel, batch, Dtype::Fp8);
+        let eng = EngineConfig {
+            framework: fw,
+            parallel,
+            batch,
+            weight_dtype: Dtype::Fp8,
+            kv_dtype: Dtype::Fp8,
+            flags,
+        };
+        let bundle = generator::generate(
+            &Candidate::Aggregated { engine: eng, replicas: 2 },
+            "org/example-model",
+            &wl,
+        );
+        assert!(!bundle.files.is_empty(), "{fw:?}: empty launch bundle");
+        let sh = bundle
+            .get("launch_server.sh")
+            .unwrap_or_else(|| panic!("{fw:?}: bundle lacks launch_server.sh"));
+        let kv = format!("{:.2}", flags.kv_frac);
+        let mnt = flags.max_num_tokens.to_string();
+        assert!(sh.contains(&kv), "{fw:?}: launch script omits resolved kv_frac {kv}:\n{sh}");
+        assert!(sh.contains(&mnt), "{fw:?}: launch script omits resolved max_num_tokens {mnt}:\n{sh}");
+        assert!(sh.contains("org/example-model"), "{fw:?}: launch script omits model id");
+        // Every file in the bundle is non-empty.
+        for (name, content) in &bundle.files {
+            assert!(!content.trim().is_empty(), "{fw:?}: {name} is empty");
+        }
+    }
+}
+
+#[test]
+fn disagg_bundle_resolved_flags_per_pool() {
+    // Disaggregated composites resolve flags per pool (prefill batch 1,
+    // decode batch 64) and each pool's launch file carries its own.
+    let model = by_name("qwen3-32b").unwrap();
+    let cluster = ClusterSpec::new(h100_sxm(), 8, 1);
+    let wl = WorkloadSpec::new("qwen3-32b", 4000, 500, 1200.0, 60.0);
+    let be = Framework::TrtLlm.backend();
+    let mk = |p: ParallelSpec, b: u32| EngineConfig {
+        framework: Framework::TrtLlm,
+        parallel: p,
+        batch: b,
+        weight_dtype: Dtype::Fp8,
+        kv_dtype: Dtype::Fp8,
+        flags: be.resolve_flags(&model, &cluster, &wl, &p, b, Dtype::Fp8),
+    };
+    let prefill = mk(ParallelSpec::tp(1), 1);
+    let decode = mk(ParallelSpec::tp(2), 64);
+    let bundle = generator::generate(
+        &Candidate::Disaggregated { prefill, decode, x: 4, y: 2 },
+        "org/example-model",
+        &wl,
+    );
+    let pre = bundle.get("launch_prefill.sh").unwrap();
+    let dec = bundle.get("launch_decode.sh").unwrap();
+    assert!(pre.contains(&format!("{:.2}", prefill.flags.kv_frac)));
+    assert!(dec.contains(&format!("{:.2}", decode.flags.kv_frac)));
+    // TP1 prefill holds heavier weights per GPU than TP2 decode: its
+    // resolved KV fraction must be no larger.
+    assert!(prefill.flags.kv_frac <= decode.flags.kv_frac);
+    assert!(bundle.get("dynamo_disagg.yaml").is_some());
+}

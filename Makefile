@@ -2,23 +2,46 @@
 #
 #   make verify     tier-1 gate: cargo build --release && cargo test -q
 #   make gen-smoke  generator smoke gate (all backends emit resolved flags)
+#   make artifacts-validate  schema-check every committed JSON artifact
+#   make calibrate-smoke     fit the committed measurements end-to-end and
+#                            assert post-fit MAPE < pre-fit MAPE per table
+#   make measurements        regenerate artifacts/measurements (python)
 #   make bench      search-engine benches (table1_search + sweep)
 #   make bench-plan capacity-planner bench (writes BENCH_plan.json)
 #   make bench-all  every bench target
 #   make artifacts  AOT-lower the Pallas kernels to HLO (needs jax; the
 #                   Rust side degrades gracefully when absent)
-#   make fmt/clippy lint helpers mirroring CI
+#   make fmt/clippy lint helpers mirroring CI (clippy is enforced in CI)
 
 RUST_DIR := rust
 PYTHON   ?= python3
 
-.PHONY: verify build test gen-smoke bench bench-plan bench-all artifacts fmt clippy clean
+.PHONY: verify build test gen-smoke artifacts-validate calibrate-smoke measurements \
+        bench bench-plan bench-all artifacts fmt clippy clean
 
 verify:
 	cd $(RUST_DIR) && cargo build --release && cargo test -q
 
 gen-smoke:
 	cd $(RUST_DIR) && cargo test --test gen_smoke -- --nocapture
+
+artifacts-validate:
+	cd $(RUST_DIR) && cargo test --test artifacts -- --nocapture
+
+calibrate-smoke:
+	cd $(RUST_DIR) && cargo run --release -- calibrate \
+		--model qwen3-32b --gpu h100 --framework trtllm \
+		--measurements ../artifacts/measurements \
+		--out target/calibration/h100-sxm.json \
+		--report target/calibration/fidelity.json \
+		--check-improves
+	cd $(RUST_DIR) && cargo run --release -- search \
+		--model qwen3-32b --gpu h100 --framework trtllm \
+		--isl 4000 --osl 500 --ttft 2000 --speed 10 \
+		--calibration target/calibration/h100-sxm.json
+
+measurements:
+	$(PYTHON) python/measurements/synth.py
 
 build:
 	cd $(RUST_DIR) && cargo build --release
@@ -35,6 +58,7 @@ bench-plan:
 
 bench-all: bench bench-plan
 	cd $(RUST_DIR) && cargo bench --bench interp_hot_path
+	cd $(RUST_DIR) && cargo bench --bench calibration
 	cd $(RUST_DIR) && cargo bench --bench simulator
 	cd $(RUST_DIR) && cargo bench --bench experiments
 

@@ -26,6 +26,7 @@ fn main() -> anyhow::Result<()> {
     let cfg = ServerConfig {
         addr: "127.0.0.1:0".into(),
         artifacts: have_artifacts.then(|| artifacts.to_path_buf()),
+        calibration: None,
         seed: 0xA1C0,
     };
     let pjrt_ctx =

@@ -1,0 +1,61 @@
+//! Calibration-pipeline benches: fit cost, composition cost, and the
+//! query-time overhead of the three-tier calibrated lookup vs. the
+//! plain analytic interpolation (the tier chain adds a nearest-cell
+//! probe + hash lookup + atomic bump per query — this bench pins that
+//! it stays in the same order of magnitude).
+//!
+//! Run: `cargo bench --bench calibration`
+
+use aiconfigurator::frameworks::Framework;
+use aiconfigurator::hardware::{h100_sxm, ClusterSpec};
+use aiconfigurator::models::{by_name, Dtype};
+use aiconfigurator::ops::Op;
+use aiconfigurator::perfdb::{calibrate, measure, CalibratedDb, LatencyOracle, PerfDatabase};
+use aiconfigurator::silicon::Silicon;
+use aiconfigurator::util::bench::{bench, black_box};
+
+fn main() {
+    let cluster = ClusterSpec::new(h100_sxm(), 8, 1);
+    let sil = Silicon::new(cluster, Framework::TrtLlm.profile());
+    let model = by_name("qwen3-32b").unwrap();
+    let db = PerfDatabase::build(&sil, &model, Dtype::Fp8, 0xA1C0);
+    let sets = measure::synthesize(&sil, &model, Dtype::Fp8, 7, 48);
+
+    println!("== calibration pipeline ==");
+    bench("fit 14 tables x 48 points", 1, 10, || {
+        black_box(calibrate::fit(&db, &sets).unwrap());
+    });
+
+    let art = calibrate::fit(&db, &sets).unwrap();
+    bench("compose artifact over database", 1, 10, || {
+        black_box(CalibratedDb::compose(db.clone(), &art).unwrap());
+    });
+
+    // Query overhead: a mixed op batch through both oracles.
+    let cal = CalibratedDb::compose(db.clone(), &art).unwrap();
+    let ops: Vec<Op> = (0..512)
+        .map(|i| {
+            let m = 1 + (i as u64 * 37) % 8192;
+            Op::Gemm { m, n: 5120, k: 5120, dtype: Dtype::Fp8, count: 1 }
+        })
+        .collect();
+    bench("512 queries, analytic interp", 2, 20, || {
+        let mut acc = 0.0;
+        for op in &ops {
+            acc += db.op_latency_us(op);
+        }
+        black_box(acc);
+    });
+    bench("512 queries, calibrated 3-tier chain", 2, 20, || {
+        let mut acc = 0.0;
+        for op in &ops {
+            acc += cal.op_latency_us(op);
+        }
+        black_box(acc);
+    });
+    let t = cal.tier_counts();
+    println!(
+        "tier mix over the bench: {} measured / {} calibrated / {} analytic / {} sol",
+        t.measured, t.calibrated, t.analytic, t.sol
+    );
+}

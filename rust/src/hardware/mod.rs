@@ -12,6 +12,12 @@ use crate::models::Dtype;
 /// A single GPU's performance envelope.
 #[derive(Clone, Copy, Debug)]
 pub struct GpuSpec {
+    /// Canonical platform id. This is also the on-disk key the
+    /// calibration layer binds to: measurement sets live at
+    /// `artifacts/measurements/<name>/` and a `CalibrationArtifact`
+    /// only composes over databases profiled for the same `name`
+    /// (`crate::perfdb::measure`, DESIGN.md §6) — renaming a preset is
+    /// a data-format break.
     pub name: &'static str,
     /// HBM capacity in GiB.
     pub mem_gib: f64,

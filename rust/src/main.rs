@@ -2,6 +2,7 @@
 //!
 //! Subcommands mirror the paper's workflow (§4.1):
 //!   build-db     offline profiling → perf database JSON (PerfDatabase)
+//!   calibrate    fit measurement sets into a calibration artifact
 //!   search       TaskRunner + Pareto analyzer + Generator
 //!   sweep        batch search: many (ISL, OSL, SLA) scenarios, one pass
 //!   plan         traffic-aware capacity planner: cost-minimal replica
@@ -14,7 +15,7 @@
 //! clap — see DESIGN.md substitutions.)
 
 use std::collections::HashMap;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 use aiconfigurator::config::{Candidate, ServingMode, WorkloadSpec};
 use aiconfigurator::experiments;
@@ -22,7 +23,9 @@ use aiconfigurator::frameworks::Framework;
 use aiconfigurator::hardware::{gpu_by_name, ClusterSpec};
 use aiconfigurator::models::by_name;
 use aiconfigurator::pareto;
-use aiconfigurator::perfdb::{LatencyOracle, PerfDatabase};
+use aiconfigurator::perfdb::{
+    calibrate, measure, CalibratedDb, CalibrationArtifact, LatencyOracle, PerfDatabase,
+};
 use aiconfigurator::planner::TrafficModel;
 use aiconfigurator::runtime::{PjrtOracle, PjrtService};
 use aiconfigurator::search::{SearchSpace, TaskRunner};
@@ -43,14 +46,26 @@ USAGE:
                             [--top 5] [--prune] [--out-dir DIR]
                             [--flag-sweep] [--max-num-tokens N[,N...]]
                             [--kv-frac F[,F...]] [--cuda-graph on|off|both]
-                            [--pjrt ARTIFACTS_DIR]
+                            [--pjrt ARTIFACTS_DIR] [--calibration FILE.json]
   aiconfigurator sweep      --model <name> [--gpu h100] [--gpus-per-node 8]
                             [--nodes 1] [--framework trtllm] [--prune]
                             [--modes agg,disagg] [--flag-sweep]
                             [--max-num-tokens N[,N...]] [--kv-frac F[,F...]]
-                            [--cuda-graph on|off|both]
+                            [--cuda-graph on|off|both] [--calibration FILE.json]
                             --scenarios ISL:OSL:TTFT:SPEED[,ISL:OSL:TTFT:SPEED...]
                             (TTFT in ms or 'inf'; SPEED in tokens/s/user or 0)
+  aiconfigurator calibrate  --model <name> [--gpu h100] [--framework trtllm]
+                            --measurements DIR (layout DIR/<gpu>/<table>.json)
+                            [--out ARTIFACT.json] [--report FIDELITY.json]
+                            [--synthesize] [--seed 7] [--points 48]
+                            [--check-improves]
+                            (fits per-table log-space corrections of the
+                             analytic fill against measured kernel latencies;
+                             --synthesize first writes a fixed-seed synthetic
+                             measurement set for the context into DIR;
+                             --check-improves exits non-zero unless post-fit
+                             MAPE < pre-fit MAPE for every table — the CI
+                             calibration-smoke gate)
   aiconfigurator plan       --model <name> [--fleet h100,a100] [--gpus-per-node 8]
                             [--nodes 1] [--framework trtllm] --isl N --osl N
                             [--ttft MS] [--speed TOK_S]
@@ -60,7 +75,7 @@ USAGE:
                               bursty:  --base-qps Q --burst-qps Q
                                        [--burst-prob 0.15] [--burst-seed 7]
                             [--windows 24] [--window-hours 1] [--max-gpus N]
-                            [--no-prune] [--out-dir DIR]
+                            [--no-prune] [--out-dir DIR] [--calibration FILE.json]
   aiconfigurator build-db   --model <name> [--gpu h100] [--framework trtllm]
                             [--nodes 1] --out FILE.json
   aiconfigurator simulate   --model <name> [--gpu h100] [--framework trtllm]
@@ -70,6 +85,7 @@ USAGE:
                              simulated engine matches the searched one)
   aiconfigurator experiment <fig1|fig5|fig6|fig7|fig8|table1|all> [--full]
   aiconfigurator serve      [--addr 127.0.0.1:7788] [--pjrt ARTIFACTS_DIR]
+                            [--calibration FILE.json]
                             [--model <name> --gpu h100 --framework trtllm]
 
 Models: llama3.1-8b qwen3-32b qwen3-235b deepseek-v3 mixtral-8x7b gpt-oss-120b
@@ -87,6 +103,10 @@ token-capacity points per candidate for comparison. Serving modes:
 `plan` searches traffic-aware deployment schedules: replicas of the
 cost-optimal engine config (and GPU type — --fleet may mix types) per
 time window, meeting the SLA at minimum $ cost.
+`--calibration` composes a calibration artifact (from `calibrate`) over
+the analytic database: queries then resolve measured cell →
+calibrated-analytic → SoL, and reports carry per-tier query counts
+(plan applies it to the fleet leg whose GPU matches the artifact).
 ";
 
 fn main() {
@@ -101,6 +121,7 @@ fn main() {
         "search" => cmd_search(&flags),
         "sweep" => cmd_sweep(&flags),
         "plan" => cmd_plan(&flags),
+        "calibrate" => cmd_calibrate(&flags),
         "build-db" => cmd_build_db(&flags),
         "simulate" => cmd_simulate(&flags),
         "experiment" => cmd_experiment(&positional, &flags),
@@ -246,6 +267,33 @@ fn print_flag_summaries(report: &aiconfigurator::search::SearchReport) {
     }
 }
 
+fn print_tier_counts(report: &aiconfigurator::search::SearchReport) {
+    if let Some(t) = report.tier_counts {
+        println!(
+            "oracle tiers: {} measured-cell, {} calibrated-analytic, {} analytic, {} SoL ({} queries)",
+            t.measured,
+            t.calibrated,
+            t.analytic,
+            t.sol,
+            t.total()
+        );
+    }
+}
+
+/// Load a `--calibration` artifact and compose it over a freshly
+/// profiled database (context must match — DESIGN.md compatibility
+/// rules).
+fn load_calibrated(path: &str, db: PerfDatabase) -> anyhow::Result<CalibratedDb> {
+    let art = CalibrationArtifact::load(Path::new(path))?;
+    eprintln!(
+        "calibration: {} tables fitted, {} measured cells ({})",
+        art.fits.len(),
+        art.measured_cells.len(),
+        art.provenance
+    );
+    CalibratedDb::compose(db, &art)
+}
+
 fn cmd_search(f: &HashMap<String, String>) -> anyhow::Result<()> {
     let ctx = load_ctx(f)?;
     let isl = flag_u32(f, "isl", 0)?;
@@ -269,6 +317,11 @@ fn cmd_search(f: &HashMap<String, String>) -> anyhow::Result<()> {
     let prune = f.contains_key("prune");
     // Optional PJRT-backed hot path (AOT Pallas kernel via the runtime).
     let report = if let Some(dir) = f.get("pjrt") {
+        anyhow::ensure!(
+            !f.contains_key("calibration"),
+            "--calibration is not supported with --pjrt: the AOT kernel interpolates the \
+             analytic grids (drop one of the two flags)"
+        );
         eprintln!("loading AOT artifacts from {dir} (PJRT interp on the hot path)...");
         let svc = PjrtService::start(std::path::Path::new(dir), db.grids().to_vec())?;
         let oracle = PjrtOracle { svc: &svc, db: &db };
@@ -276,6 +329,13 @@ fn cmd_search(f: &HashMap<String, String>) -> anyhow::Result<()> {
             runner.run_pruned(&oracle)
         } else {
             runner.run(&oracle)
+        }
+    } else if let Some(path) = f.get("calibration") {
+        let cal = load_calibrated(path, db)?;
+        if prune {
+            runner.run_pruned(&cal)
+        } else {
+            runner.run(&cal)
         }
     } else if prune {
         runner.run_pruned(&db as &dyn LatencyOracle)
@@ -318,6 +378,7 @@ fn cmd_search(f: &HashMap<String, String>) -> anyhow::Result<()> {
         );
     }
     print_flag_summaries(&report);
+    print_tier_counts(&report);
     if let Some(best) = analysis.best() {
         if let Some(dir) = f.get("out-dir") {
             let bundle = generator::generate(&best.cand, ctx.model.name, &wl);
@@ -377,7 +438,12 @@ fn cmd_sweep(f: &HashMap<String, String>) -> anyhow::Result<()> {
     let opts = aiconfigurator::search::RunOptions { prune: f.contains_key("prune") };
 
     let t0 = std::time::Instant::now();
-    let reports = runner.run_sweep_with(&db as &dyn LatencyOracle, &scenarios, &opts);
+    let reports = if let Some(path) = f.get("calibration") {
+        let cal = load_calibrated(path, db)?;
+        runner.run_sweep_with(&cal, &scenarios, &opts)
+    } else {
+        runner.run_sweep_with(&db as &dyn LatencyOracle, &scenarios, &opts)
+    };
     let total_s = t0.elapsed().as_secs_f64();
 
     println!(
@@ -403,6 +469,12 @@ fn cmd_sweep(f: &HashMap<String, String>) -> anyhow::Result<()> {
         );
         for s in &report.flag_summaries {
             println!("{:>13} flags [{}]", "", s.describe());
+        }
+        if let Some(t) = report.tier_counts {
+            println!(
+                "{:>13} tiers [{} measured, {} calibrated, {} analytic, {} SoL]",
+                "", t.measured, t.calibrated, t.analytic, t.sol
+            );
         }
     }
     println!(
@@ -475,7 +547,13 @@ fn cmd_plan(f: &HashMap<String, String>) -> anyhow::Result<()> {
 
     // One leg per fleet GPU type: profile a database against that
     // platform's synthetic silicon (Ampere legs profile fp16 — no fp8).
-    let mut legs: Vec<(ClusterSpec, PerfDatabase)> = Vec::new();
+    // A `--calibration` artifact is composed over the leg whose GPU it
+    // was fitted for; other legs stay analytic.
+    let artifact = match f.get("calibration") {
+        Some(path) => Some(CalibrationArtifact::load(Path::new(path))?),
+        None => None,
+    };
+    let mut legs: Vec<(ClusterSpec, Box<dyn LatencyOracle>)> = Vec::new();
     for name in flag(f, "fleet", "h100").split(',').map(str::trim).filter(|s| !s.is_empty()) {
         let gpu =
             gpu_by_name(name).ok_or_else(|| anyhow::anyhow!("unknown gpu '{name}' in --fleet"))?;
@@ -488,11 +566,30 @@ fn cmd_plan(f: &HashMap<String, String>) -> anyhow::Result<()> {
             gpu.usd_per_hour
         );
         let db = PerfDatabase::build(&silicon, &model, gpu.preferred_kv_dtype(), 0xA1C0);
-        legs.push((cluster, db));
+        let oracle: Box<dyn LatencyOracle> = match &artifact {
+            Some(art) if art.gpu == gpu.name => {
+                eprintln!(
+                    "  composing calibration over the {} leg ({} tables, {} measured cells)",
+                    gpu.name,
+                    art.fits.len(),
+                    art.measured_cells.len()
+                );
+                Box::new(CalibratedDb::compose(db, art)?)
+            }
+            _ => Box::new(db),
+        };
+        legs.push((cluster, oracle));
     }
     anyhow::ensure!(!legs.is_empty(), "--fleet named no GPU types");
+    if let Some(art) = &artifact {
+        anyhow::ensure!(
+            legs.iter().any(|(c, _)| c.gpu.name == art.gpu),
+            "--calibration artifact is for gpu '{}' but the fleet has no such leg",
+            art.gpu
+        );
+    }
     let fleet: Vec<(ClusterSpec, &dyn LatencyOracle)> =
-        legs.iter().map(|(c, d)| (*c, d as &dyn LatencyOracle)).collect();
+        legs.iter().map(|(c, d)| (*c, d.as_ref())).collect();
 
     let t0 = std::time::Instant::now();
     let plan = aiconfigurator::planner::plan(&model, framework, &spec, &fleet)?;
@@ -539,6 +636,14 @@ fn cmd_plan(f: &HashMap<String, String>) -> anyhow::Result<()> {
             println!("best homogeneous fleet (all-{gpu}) matches: ${cost:.2}");
         }
     }
+    for (c, o) in &legs {
+        if let Some(t) = o.provenance_counts() {
+            println!(
+                "{} leg oracle tiers: {} measured-cell, {} calibrated-analytic, {} analytic, {} SoL",
+                c.gpu.name, t.measured, t.calibrated, t.analytic, t.sol
+            );
+        }
+    }
 
     if let Some(dir) = f.get("out-dir") {
         let dirp = std::path::Path::new(dir);
@@ -568,6 +673,103 @@ fn cmd_plan(f: &HashMap<String, String>) -> anyhow::Result<()> {
             bundle.write_to(&dirp.join(format!("window_{:02}", w.index)))?;
         }
         println!("wrote plan.json, schedule.yaml and per-window launch bundles to {dir}/");
+    }
+    Ok(())
+}
+
+/// Fit a calibration artifact from a measurement directory, print and
+/// optionally persist the fidelity report. With `--check-improves`,
+/// exit non-zero unless every fitted table's post-fit MAPE beats its
+/// pre-fit MAPE (the CI calibration-smoke gate).
+fn cmd_calibrate(f: &HashMap<String, String>) -> anyhow::Result<()> {
+    let ctx = load_ctx(f)?;
+    let dt = ctx.cluster.gpu.preferred_kv_dtype();
+    let meas = f
+        .get("measurements")
+        .ok_or_else(|| anyhow::anyhow!("--measurements is required (DIR/<gpu>/<table>.json)"))?;
+    let dir = Path::new(meas);
+
+    if f.contains_key("synthesize") {
+        let seed = flag_u32(f, "seed", 7)? as u64;
+        let points = flag_u32(f, "points", 48)? as usize;
+        anyhow::ensure!(points >= 1, "--points must be positive");
+        let sets = measure::synthesize(&ctx.silicon, &ctx.model, dt, seed, points);
+        measure::write_sets(dir, &sets)?;
+        println!(
+            "synthesized {} measurement sets ({} points each, seed {seed}) into {}/{}/",
+            sets.len(),
+            points,
+            meas,
+            ctx.cluster.gpu.name
+        );
+    }
+
+    eprintln!("building analytic database (offline profiling of silicon)...");
+    let db = PerfDatabase::build(&ctx.silicon, &ctx.model, dt, 0xA1C0);
+    let sets = measure::load_dir(dir, ctx.cluster.gpu.name)?;
+    let n_points: usize = sets.iter().map(|s| s.entries.len()).sum();
+    let mut art = calibrate::fit(&db, &sets)?;
+    art.provenance = format!("{} from {}", art.provenance, meas);
+
+    use aiconfigurator::perfdb::tables::{NX, NY, NZ};
+    println!(
+        "{:<13} {:>7} {:>9} {:>10} {:>10} {:>8}  correction@mid",
+        "table", "points", "outliers", "pre MAPE", "post MAPE", "clamped"
+    );
+    for t in &art.fits {
+        println!(
+            "{:<13} {:>7} {:>9} {:>9.1}% {:>9.1}% {:>8}  x{:.3}",
+            t.table.name(),
+            t.n_points,
+            t.n_outliers,
+            t.pre_mape * 100.0,
+            t.post_mape * 100.0,
+            t.clamped_axes.iter().filter(|&&c| c).count(),
+            t.factor_at(NX / 2, NY / 2, NZ / 2)
+        );
+    }
+    println!(
+        "fitted {} tables from {} measurements ({} / {} / {} / {})",
+        art.fits.len(),
+        n_points,
+        ctx.cluster.gpu.name,
+        ctx.model.name,
+        ctx.framework.name(),
+        dt.name()
+    );
+
+    if let Some(out) = f.get("out") {
+        art.save(Path::new(out))?;
+        println!("wrote calibration artifact to {out}");
+    }
+    if let Some(rep) = f.get("report") {
+        let path = Path::new(rep);
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, art.fidelity_json().to_string())?;
+        println!("wrote fidelity report to {rep}");
+    }
+    if f.contains_key("check-improves") {
+        anyhow::ensure!(
+            art.all_tables_improve(),
+            "calibration did NOT improve every table: {}",
+            art.fits
+                .iter()
+                .filter(|t| t.post_mape >= t.pre_mape)
+                .map(|t| format!(
+                    "{} (pre {:.1}% -> post {:.1}%)",
+                    t.table.name(),
+                    t.pre_mape * 100.0,
+                    t.post_mape * 100.0
+                ))
+                .collect::<Vec<_>>()
+                .join(", ")
+        );
+        println!(
+            "check passed: post-fit MAPE < pre-fit MAPE for all {} fitted tables",
+            art.fits.len()
+        );
     }
     Ok(())
 }
@@ -676,9 +878,19 @@ fn cmd_experiment(pos: &[String], f: &HashMap<String, String>) -> anyhow::Result
 }
 
 fn cmd_serve(f: &HashMap<String, String>) -> anyhow::Result<()> {
+    // PJRT answers the bound context from the uncalibrated analytic
+    // grids, which would silently shadow a calibration artifact for
+    // exactly the context it was fitted for — reject the combination
+    // loudly, as `search` does.
+    anyhow::ensure!(
+        !(f.contains_key("pjrt") && f.contains_key("calibration")),
+        "--calibration is not supported with --pjrt: the AOT kernel would answer the \
+         bound context from the uncalibrated grids (drop one of the two flags)"
+    );
     let cfg = ServerConfig {
         addr: flag(f, "addr", "127.0.0.1:7788").to_string(),
         artifacts: f.get("pjrt").map(PathBuf::from),
+        calibration: f.get("calibration").map(PathBuf::from),
         seed: 0xA1C0,
     };
     let pjrt_ctx = if cfg.artifacts.is_some() {

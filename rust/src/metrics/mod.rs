@@ -48,7 +48,7 @@ pub fn banded_mape(pred: &[f64], truth: &[f64], band_key: &[f64], lo: f64, hi: f
     let mut p = Vec::new();
     let mut t = Vec::new();
     for i in 0..pred.len() {
-        if band_key[i] >= lo && band_key[i] <= hi {
+        if (lo..=hi).contains(&band_key[i]) {
             p.push(pred[i]);
             t.push(truth[i]);
         }

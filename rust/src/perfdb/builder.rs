@@ -67,9 +67,31 @@ pub fn build(silicon: &Silicon, model: &ModelArch, kv_dtype: Dtype, seed: u64) -
     PerfDatabase::new(ctx, grids, silicon.cluster, sim_cost_s / 3600.0)
 }
 
+/// Profile the analytic fill as [`build`], then compose a calibration
+/// artifact on top — the three-tier lookup chain (measured cell →
+/// calibrated-analytic → SoL) described in [`super::calibrate`].
+pub fn build_calibrated(
+    silicon: &Silicon,
+    model: &ModelArch,
+    kv_dtype: Dtype,
+    seed: u64,
+    artifact: &super::calibrate::CalibrationArtifact,
+) -> anyhow::Result<super::calibrate::CalibratedDb> {
+    super::calibrate::CalibratedDb::compose(build(silicon, model, kv_dtype, seed), artifact)
+}
+
 /// Reconstruct the representative op for a grid point — the exact
-/// inverse of [`super::tables::query_for`]'s coordinate mapping.
-fn op_for_point(id: TableId, model: &ModelArch, kv_dtype: Dtype, x: f64, y: f64, z: f64) -> Op {
+/// inverse of [`super::tables::query_for`]'s coordinate mapping. Also
+/// used by [`super::measure`] to turn measurement-file coordinates back
+/// into ops, so measurements and profiling agree on op semantics.
+pub(crate) fn op_for_point(
+    id: TableId,
+    model: &ModelArch,
+    kv_dtype: Dtype,
+    x: f64,
+    y: f64,
+    z: f64,
+) -> Op {
     use TableId::*;
     match id {
         GemmFp16 | GemmFp8 | GemmInt8 | GemmInt4 => {

@@ -189,6 +189,13 @@ impl LatencyOracle for MemoOracle<'_> {
             .map(|(l, o)| l * o.count() as f64)
             .sum()
     }
+
+    /// Forward provenance accounting to the wrapped oracle. Memo hits
+    /// never reach it, so under a memo the tier counts are
+    /// unique-shape counts, not raw query counts.
+    fn provenance_counts(&self) -> Option<super::TierSnapshot> {
+        self.inner.provenance_counts()
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,997 @@
+//! Calibration pipeline: turn measurement sets ([`super::measure`])
+//! into a correction on top of the analytic fill, so database answers
+//! carry measurement signal instead of validating the model against
+//! itself (paper pillar 2: "a calibrated kernel-level performance
+//! database"; Vidur's profiled-then-interpolated tables are the prior
+//! art for why this transfers across hardware).
+//!
+//! Per [`TableId`], measurements are binned into the compiled
+//! `16×32×32×16` grid geometry and a **least-squares correction** is
+//! fitted in log space: `measured ≈ analytic · exp(c₀ + c₁·x̂ + c₂·ŷ +
+//! c₃·ẑ)` with normalized grid coordinates `x̂ = fx/(NX−1)` etc. —
+//! a multiplicative scale plus a mild per-axis tilt. The fit is
+//! weighted by repeat counts, rejects outliers by median-absolute-
+//! deviation in log space, and clamps any axis tilt that would break
+//! the analytic table's monotonicity (a correction must not make
+//! latency *decrease* with problem size where the model says it grows).
+//!
+//! The result is a versioned [`CalibrationArtifact`] {scale factors,
+//! residual stats, measured-cell overlay, provenance} that
+//! [`CalibratedDb`] composes over a [`PerfDatabase`] with a three-tier
+//! lookup chain, every query tagged with its provenance tier:
+//!
+//! 1. **measured** — the query lands (within [`MEASURED_SNAP`] grid
+//!    units) on a cell that was directly measured: answer the binned
+//!    measurement itself;
+//! 2. **calibrated** — trilinear interpolation over the correction-
+//!    scaled analytic grid;
+//! 3. **analytic** — tables with no measurements interpolate the plain
+//!    analytic fill;
+//! 4. **sol** — op classes outside the tables fall back to the
+//!    Speed-of-Light roofline ([`super::sol`]), as before.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::ops::Op;
+use crate::util::json::{self, Json};
+use crate::util::stats;
+
+use super::measure::MeasurementSet;
+use super::query::{flat, nearest_cell, trilinear};
+use super::tables::{query_for, spec, TableId, GRID_LEN, NUM_TABLES, NX, NY, NZ};
+use super::{sol, LatencyOracle, PerfDatabase};
+
+/// Artifact format version; bump on any incompatible change.
+pub const ARTIFACT_VERSION: u32 = 1;
+
+/// Maximum per-axis distance (grid units) at which a query is served
+/// by the measured-cell tier instead of interpolation.
+pub const MEASURED_SNAP: f64 = 0.25;
+
+/// Outlier rejection: drop points whose log-residual exceeds
+/// `OUTLIER_MAD_K · 1.4826 · MAD` (floored at [`OUTLIER_FLOOR`] log
+/// units ≈ 10%, so clean low-noise sets don't reject their own tails).
+pub const OUTLIER_MAD_K: f64 = 3.0;
+pub const OUTLIER_FLOOR: f64 = 0.10;
+
+/// A per-axis tilt is clamped to zero when it lowers the fraction of
+/// monotone adjacent cell pairs by more than this, relative to the
+/// analytic grid.
+pub const MONO_TOL: f64 = 0.02;
+
+/// Below this many points a table gets a constant-only fit (no tilts).
+pub const MIN_POINTS_FULL_FIT: usize = 8;
+
+/// The fitted correction for one table.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TableFit {
+    pub table: TableId,
+    /// Log-space coefficients `[c0, cx, cy, cz]` over normalized grid
+    /// coordinates; the multiplicative factor at a cell is
+    /// `exp(c0 + cx·x̂ + cy·ŷ + cz·ẑ)`.
+    pub coeffs: [f64; 4],
+    /// Points used by the final fit (after outlier rejection).
+    pub n_points: usize,
+    pub n_outliers: usize,
+    /// Axis tilts zeroed by the monotonicity check (x, y, z).
+    pub clamped_axes: [bool; 3],
+    /// Mean |analytic − measured| / measured before the fit (inliers).
+    pub pre_mape: f64,
+    /// Same, after applying the fitted correction.
+    pub post_mape: f64,
+    /// Stddev of log residuals after the fit.
+    pub resid_log_std: f64,
+}
+
+impl TableFit {
+    /// Multiplicative correction factor at integer cell coordinates.
+    pub fn factor_at(&self, ix: usize, iy: usize, iz: usize) -> f64 {
+        let [c0, cx, cy, cz] = self.coeffs;
+        (c0 + cx * ix as f64 / (NX - 1) as f64
+            + cy * iy as f64 / (NY - 1) as f64
+            + cz * iz as f64 / (NZ - 1) as f64)
+            .exp()
+    }
+
+    fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("table", json::s(self.table.name()))
+            .set("coeffs", json::farr(&self.coeffs))
+            .set("n_points", json::num(self.n_points as f64))
+            .set("n_outliers", json::num(self.n_outliers as f64))
+            .set(
+                "clamped_axes",
+                Json::Arr(self.clamped_axes.iter().map(|&b| Json::Bool(b)).collect()),
+            )
+            .set("pre_mape", json::num(self.pre_mape))
+            .set("post_mape", json::num(self.post_mape))
+            .set("resid_log_std", json::num(self.resid_log_std));
+        o
+    }
+
+    fn from_json(j: &Json) -> anyhow::Result<TableFit> {
+        let tname = j.req_str("table")?;
+        let table = TableId::parse(tname)
+            .ok_or_else(|| anyhow::anyhow!("unknown table '{tname}' in calibration fit"))?;
+        let cs = j
+            .req("coeffs")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("'coeffs' must be an array"))?;
+        anyhow::ensure!(cs.len() == 4, "'coeffs' must have 4 entries, got {}", cs.len());
+        let mut coeffs = [0.0; 4];
+        for (i, c) in cs.iter().enumerate() {
+            coeffs[i] = c
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("'coeffs[{i}]' is not a number"))?;
+            anyhow::ensure!(coeffs[i].is_finite(), "'coeffs[{i}]' is not finite");
+        }
+        let ca = j
+            .req("clamped_axes")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("'clamped_axes' must be an array"))?;
+        anyhow::ensure!(ca.len() == 3, "'clamped_axes' must have 3 entries");
+        let mut clamped_axes = [false; 3];
+        for (i, c) in ca.iter().enumerate() {
+            clamped_axes[i] = c
+                .as_bool()
+                .ok_or_else(|| anyhow::anyhow!("'clamped_axes[{i}]' is not a bool"))?;
+        }
+        Ok(TableFit {
+            table,
+            coeffs,
+            n_points: j.req_f64("n_points")? as usize,
+            n_outliers: j.f64_or("n_outliers", 0.0) as usize,
+            clamped_axes,
+            pre_mape: j.req_f64("pre_mape")?,
+            post_mape: j.req_f64("post_mape")?,
+            resid_log_std: j.f64_or("resid_log_std", 0.0),
+        })
+    }
+}
+
+/// The versioned, self-contained output of a calibration run: enough
+/// to calibrate any freshly profiled database for the *same context*
+/// without re-reading the measurement files.
+#[derive(Clone, Debug)]
+pub struct CalibrationArtifact {
+    pub gpu: String,
+    /// Cluster topology the fit was taken on. Collective-table
+    /// corrections depend on it (NVLink vs IB latencies), so it is part
+    /// of the compatibility context, not metadata.
+    pub gpus_per_node: u32,
+    pub num_nodes: u32,
+    pub model: String,
+    pub framework: String,
+    pub kv_dtype: String,
+    /// Free-form: measurement source, point counts, generator seeds.
+    pub provenance: String,
+    pub fits: Vec<TableFit>,
+    /// Directly measured cells: (flat grid index, median measured µs).
+    pub measured_cells: Vec<(usize, f64)>,
+}
+
+impl CalibrationArtifact {
+    /// True when every fitted table's post-fit MAPE beat its pre-fit
+    /// MAPE — the CI calibration-smoke gate.
+    pub fn all_tables_improve(&self) -> bool {
+        !self.fits.is_empty() && self.fits.iter().all(|f| f.post_mape < f.pre_mape)
+    }
+
+    /// Per-table pre/post fidelity summary (the `calibrate` CLI's
+    /// report file; also uploaded by the CI smoke job).
+    pub fn fidelity_json(&self) -> Json {
+        let pre: Vec<f64> = self.fits.iter().map(|f| f.pre_mape).collect();
+        let post: Vec<f64> = self.fits.iter().map(|f| f.post_mape).collect();
+        let mut o = Json::obj();
+        o.set("gpu", json::s(&self.gpu))
+            .set("model", json::s(&self.model))
+            .set("framework", json::s(&self.framework))
+            .set("kv_dtype", json::s(&self.kv_dtype))
+            .set("mean_pre_mape", json::num(stats::mean(&pre)))
+            .set("mean_post_mape", json::num(stats::mean(&post)))
+            .set("improves", Json::Bool(self.all_tables_improve()))
+            .set("tables", Json::Arr(self.fits.iter().map(|f| f.to_json()).collect()));
+        o
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("version", json::num(ARTIFACT_VERSION as f64))
+            .set(
+                "shape",
+                json::farr(&[NUM_TABLES as f64, NX as f64, NY as f64, NZ as f64]),
+            )
+            .set("gpu", json::s(&self.gpu))
+            .set("gpus_per_node", json::num(self.gpus_per_node as f64))
+            .set("num_nodes", json::num(self.num_nodes as f64))
+            .set("model", json::s(&self.model))
+            .set("framework", json::s(&self.framework))
+            .set("kv_dtype", json::s(&self.kv_dtype))
+            .set("provenance", json::s(&self.provenance))
+            .set("fits", Json::Arr(self.fits.iter().map(|f| f.to_json()).collect()))
+            .set(
+                "measured_cells",
+                Json::Arr(
+                    self.measured_cells
+                        .iter()
+                        .map(|&(i, us)| json::farr(&[i as f64, us]))
+                        .collect(),
+                ),
+            );
+        o
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<CalibrationArtifact> {
+        let version = j.req_f64("version")? as u32;
+        anyhow::ensure!(
+            version == ARTIFACT_VERSION,
+            "calibration artifact version {version} != supported {ARTIFACT_VERSION}"
+        );
+        let shape = j.req("shape")?.as_arr().ok_or_else(|| anyhow::anyhow!("bad shape"))?;
+        let dims: Vec<u64> = shape.iter().filter_map(|x| x.as_u64()).collect();
+        anyhow::ensure!(
+            dims == [NUM_TABLES as u64, NX as u64, NY as u64, NZ as u64],
+            "calibration artifact grid shape {dims:?} does not match the compiled contract"
+        );
+        let fits = j
+            .req("fits")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("'fits' must be an array"))?
+            .iter()
+            .map(TableFit::from_json)
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let mut seen = Vec::new();
+        for f in &fits {
+            anyhow::ensure!(!seen.contains(&f.table), "duplicate fit for table {}", f.table.name());
+            seen.push(f.table);
+        }
+        let mut measured_cells = Vec::new();
+        for (i, c) in j
+            .req("measured_cells")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("'measured_cells' must be an array"))?
+            .iter()
+            .enumerate()
+        {
+            let pair = c
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("'measured_cells[{i}]' must be [index, us]"))?;
+            anyhow::ensure!(pair.len() == 2, "'measured_cells[{i}]' must be [index, us]");
+            let idx = pair[0]
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("bad measured cell index at {i}"))?;
+            let us = pair[1]
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("bad measured cell value at {i}"))?;
+            anyhow::ensure!(
+                idx.fract() == 0.0 && idx >= 0.0 && (idx as usize) < GRID_LEN,
+                "measured cell index {idx} out of range"
+            );
+            anyhow::ensure!(us.is_finite() && us > 0.0, "measured cell value {us} invalid");
+            measured_cells.push((idx as usize, us));
+        }
+        Ok(CalibrationArtifact {
+            gpu: j.req_str("gpu")?.to_string(),
+            gpus_per_node: j.req_f64("gpus_per_node")? as u32,
+            num_nodes: j.req_f64("num_nodes")? as u32,
+            model: j.req_str("model")?.to_string(),
+            framework: j.req_str("framework")?.to_string(),
+            kv_dtype: j.req_str("kv_dtype")?.to_string(),
+            provenance: j.str_or("provenance", "").to_string(),
+            fits,
+            measured_cells,
+        })
+    }
+
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<CalibrationArtifact> {
+        let txt = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        Self::from_json(&json::parse(&txt).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fitting
+// ---------------------------------------------------------------------------
+
+/// One binned measurement, ready for regression.
+struct FitPoint {
+    /// Design row [1, x̂, ŷ, ẑ].
+    phi: [f64; 4],
+    /// ln(measured / analytic).
+    y: f64,
+    /// Weight (repeat count).
+    w: f64,
+    us: f64,
+    analytic: f64,
+    cell: usize,
+    /// Max per-axis distance to the nearest cell, grid units.
+    dist: f64,
+}
+
+/// Fit a calibration artifact from measurement sets against a freshly
+/// profiled analytic database. Compatibility is strict: every set must
+/// record the database's own (gpu, model, framework, kv_dtype) context
+/// — measurements bind to the context they were taken in (DESIGN.md).
+pub fn fit(db: &PerfDatabase, sets: &[MeasurementSet]) -> anyhow::Result<CalibrationArtifact> {
+    anyhow::ensure!(!sets.is_empty(), "no measurement sets to fit");
+    for set in sets {
+        anyhow::ensure!(
+            set.gpu == db.ctx.gpu
+                && set.model == db.ctx.model
+                && set.framework == db.ctx.framework
+                && set.kv_dtype == db.ctx.kv_dtype,
+            "measurement set for table '{}' was taken in context \
+             (gpu={}, model={}, framework={}, kv_dtype={}) but the database context is \
+             (gpu={}, model={}, framework={}, kv_dtype={})",
+            set.table.name(),
+            set.gpu,
+            set.model,
+            set.framework,
+            set.kv_dtype,
+            db.ctx.gpu,
+            db.ctx.model,
+            db.ctx.framework,
+            db.ctx.kv_dtype,
+        );
+    }
+
+    // Merge sets per table (multiple files for one table are allowed
+    // when measurements come from several campaigns).
+    let mut by_table: Vec<(TableId, Vec<FitPoint>)> = Vec::new();
+    let mut total_points = 0usize;
+    for set in sets {
+        let s = spec(set.table);
+        let t = set.table as usize;
+        let slot = match by_table.iter().position(|(id, _)| *id == set.table) {
+            Some(i) => i,
+            None => {
+                by_table.push((set.table, Vec::new()));
+                by_table.len() - 1
+            }
+        };
+        let pts = &mut by_table[slot].1;
+        for e in &set.entries {
+            let (fx, fy, fz) = (s.x.frac(e.x), s.y.frac(e.y), s.z.frac(e.z));
+            let analytic = trilinear(db.grids(), t, fx, fy, fz);
+            if analytic <= 0.0 || e.us <= 0.0 {
+                continue; // zero-latency cells (e.g. 1-GPU collectives) carry no signal
+            }
+            let ((cx, cy, cz), dist) = nearest_cell(fx, fy, fz);
+            pts.push(FitPoint {
+                phi: [
+                    1.0,
+                    fx / (NX - 1) as f64,
+                    fy / (NY - 1) as f64,
+                    fz / (NZ - 1) as f64,
+                ],
+                y: (e.us / analytic).ln(),
+                w: e.n.max(1) as f64,
+                us: e.us,
+                analytic,
+                cell: flat(t, cx, cy, cz),
+                dist,
+            });
+            total_points += 1;
+        }
+    }
+    anyhow::ensure!(total_points > 0, "measurement sets contained no usable points");
+
+    let mut fits = Vec::new();
+    let mut measured_cells: Vec<(usize, f64)> = Vec::new();
+    for (table, pts) in &by_table {
+        if pts.is_empty() {
+            continue;
+        }
+        let (fit, cells) = fit_table(db, *table, pts);
+        measured_cells.extend(cells);
+        fits.push(fit);
+    }
+    fits.sort_by_key(|f| f.table as usize);
+    measured_cells.sort_by(|a, b| a.0.cmp(&b.0));
+    Ok(CalibrationArtifact {
+        gpu: db.ctx.gpu.clone(),
+        gpus_per_node: db.ctx.gpus_per_node,
+        num_nodes: db.ctx.num_nodes,
+        model: db.ctx.model.clone(),
+        framework: db.ctx.framework.clone(),
+        kv_dtype: db.ctx.kv_dtype.clone(),
+        provenance: format!(
+            "fit from {} tables / {} points",
+            fits.len(),
+            total_points
+        ),
+        fits,
+        measured_cells,
+    })
+}
+
+/// Fit one table: weighted least squares in log space with outlier
+/// rejection and per-axis monotonicity clamping. Also returns the
+/// measured-cell overlay (inlier points that sit on a grid cell —
+/// rejected outliers must never be served verbatim).
+fn fit_table(
+    db: &PerfDatabase,
+    table: TableId,
+    pts: &[FitPoint],
+) -> (TableFit, Vec<(usize, f64)>) {
+    let s = spec(table);
+    // Active design columns: intercept always; an axis only when the
+    // points actually vary along it (degenerate axes — the collectives'
+    // z — would make the normal equations singular).
+    let variance = |col: usize| -> f64 {
+        let vals: Vec<f64> = pts.iter().map(|p| p.phi[col]).collect();
+        stats::stddev(&vals)
+    };
+    let mut active = [true, false, false, false];
+    if pts.len() >= MIN_POINTS_FULL_FIT {
+        for a in 0..3 {
+            // A physically degenerate axis never gets a tilt even if
+            // numeric jitter gives its coordinates spread.
+            let degenerate = match a {
+                0 => s.x.hi <= s.x.lo,
+                1 => s.y.hi <= s.y.lo,
+                _ => s.z.hi <= s.z.lo,
+            };
+            active[a + 1] = !degenerate && variance(a + 1) > 1e-9;
+        }
+    }
+
+    let mut used: Vec<&FitPoint> = pts.iter().collect();
+    let mut coeffs = wls(&used, &active);
+
+    // ---- Outlier rejection (one MAD pass) ------------------------------
+    let resid: Vec<f64> = used.iter().map(|p| p.y - dot(&coeffs, &p.phi)).collect();
+    let med = stats::median(&resid);
+    let abs_dev: Vec<f64> = resid.iter().map(|r| (r - med).abs()).collect();
+    let thr = (OUTLIER_MAD_K * 1.4826 * stats::median(&abs_dev)).max(OUTLIER_FLOOR);
+    let inliers: Vec<&FitPoint> = used
+        .iter()
+        .zip(&resid)
+        .filter(|(_, r)| (*r - med).abs() <= thr)
+        .map(|(p, _)| *p)
+        .collect();
+    let n_outliers = used.len() - inliers.len();
+    if n_outliers > 0 && inliers.len() >= 2 {
+        used = inliers;
+        coeffs = wls(&used, &active);
+    }
+
+    // ---- Per-axis monotonicity check ----------------------------------
+    // A correction tilt must not break the analytic table's ordering:
+    // compare the fraction of monotone (nondecreasing) adjacent cell
+    // pairs along each axis, before vs after applying the correction,
+    // and zero the tilt of any axis that degrades it.
+    let t = table as usize;
+    let base = &db.grids()[t * NX * NY * NZ..(t + 1) * NX * NY * NZ];
+    let mut clamped = [false; 3];
+    for _round in 0..3 {
+        let fit = TableFit {
+            table,
+            coeffs,
+            n_points: used.len(),
+            n_outliers,
+            clamped_axes: clamped,
+            pre_mape: 0.0,
+            post_mape: 0.0,
+            resid_log_std: 0.0,
+        };
+        let cal: Vec<f32> = calibrated_slice(base, &fit);
+        let mut worst: Option<usize> = None;
+        let mut worst_drop = MONO_TOL;
+        for a in 0..3 {
+            if !active[a + 1] || clamped[a] || coeffs[a + 1] == 0.0 {
+                continue;
+            }
+            let drop = mono_frac(base, a) - mono_frac(&cal, a);
+            if drop > worst_drop {
+                worst_drop = drop;
+                worst = Some(a);
+            }
+        }
+        match worst {
+            Some(a) => {
+                clamped[a] = true;
+                active[a + 1] = false;
+                coeffs = wls(&used, &active);
+            }
+            None => break,
+        }
+    }
+
+    // ---- Residual stats ------------------------------------------------
+    let pre: Vec<f64> = used.iter().map(|p| (p.analytic - p.us).abs() / p.us).collect();
+    let post: Vec<f64> = used
+        .iter()
+        .map(|p| {
+            let corrected = p.analytic * dot(&coeffs, &p.phi).exp();
+            (corrected - p.us).abs() / p.us
+        })
+        .collect();
+    let final_resid: Vec<f64> = used.iter().map(|p| p.y - dot(&coeffs, &p.phi)).collect();
+
+    // Measured-cell overlay from the surviving points.
+    let mut by_cell: HashMap<usize, Vec<f64>> = HashMap::new();
+    for p in used.iter().filter(|p| p.dist <= MEASURED_SNAP) {
+        by_cell.entry(p.cell).or_default().push(p.us);
+    }
+    let mut cells: Vec<(usize, f64)> =
+        by_cell.into_iter().map(|(c, vals)| (c, stats::median(&vals))).collect();
+    cells.sort_by(|a, b| a.0.cmp(&b.0));
+
+    (
+        TableFit {
+            table,
+            coeffs,
+            n_points: used.len(),
+            n_outliers,
+            clamped_axes: clamped,
+            pre_mape: stats::mean(&pre),
+            post_mape: stats::mean(&post),
+            resid_log_std: stats::stddev(&final_resid),
+        },
+        cells,
+    )
+}
+
+fn dot(c: &[f64; 4], phi: &[f64; 4]) -> f64 {
+    c[0] * phi[0] + c[1] * phi[1] + c[2] * phi[2] + c[3] * phi[3]
+}
+
+/// Weighted least squares over the active design columns (normal
+/// equations + Gaussian elimination; at most 4×4). Falls back to the
+/// weighted-mean intercept if the system is singular.
+fn wls(pts: &[&FitPoint], active: &[bool; 4]) -> [f64; 4] {
+    let cols: Vec<usize> = (0..4).filter(|&c| active[c]).collect();
+    let k = cols.len();
+    let mut a = vec![vec![0.0f64; k]; k];
+    let mut b = vec![0.0f64; k];
+    for p in pts {
+        for (i, &ci) in cols.iter().enumerate() {
+            for (j, &cj) in cols.iter().enumerate() {
+                a[i][j] += p.w * p.phi[ci] * p.phi[cj];
+            }
+            b[i] += p.w * p.phi[ci] * p.y;
+        }
+    }
+    let mut out = [0.0f64; 4];
+    match gauss_solve(&mut a, &mut b) {
+        Some(x) => {
+            for (i, &ci) in cols.iter().enumerate() {
+                out[ci] = x[i];
+            }
+        }
+        None => {
+            // Singular: constant-only calibration.
+            let wsum: f64 = pts.iter().map(|p| p.w).sum();
+            if wsum > 0.0 {
+                out[0] = pts.iter().map(|p| p.w * p.y).sum::<f64>() / wsum;
+            }
+        }
+    }
+    out
+}
+
+/// In-place Gaussian elimination with partial pivoting; `None` when the
+/// system is singular.
+fn gauss_solve(a: &mut [Vec<f64>], b: &mut [f64]) -> Option<Vec<f64>> {
+    let n = b.len();
+    for col in 0..n {
+        let pivot = (col..n).max_by(|&i, &j| {
+            a[i][col].abs().partial_cmp(&a[j][col].abs()).unwrap()
+        })?;
+        if a[pivot][col].abs() < 1e-12 {
+            return None;
+        }
+        a.swap(col, pivot);
+        b.swap(col, pivot);
+        for row in (col + 1)..n {
+            let f = a[row][col] / a[col][col];
+            for c in col..n {
+                a[row][c] -= f * a[col][c];
+            }
+            b[row] -= f * b[col];
+        }
+    }
+    let mut x = vec![0.0f64; n];
+    for row in (0..n).rev() {
+        let mut acc = b[row];
+        for c in (row + 1)..n {
+            acc -= a[row][c] * x[c];
+        }
+        x[row] = acc / a[row][row];
+    }
+    Some(x)
+}
+
+/// One table's grid slice with the fitted correction applied.
+fn calibrated_slice(base: &[f32], fit: &TableFit) -> Vec<f32> {
+    let mut out = vec![0f32; NX * NY * NZ];
+    for ix in 0..NX {
+        for iy in 0..NY {
+            for iz in 0..NZ {
+                let i = (ix * NY + iy) * NZ + iz;
+                out[i] = (base[i] as f64 * fit.factor_at(ix, iy, iz)) as f32;
+            }
+        }
+    }
+    out
+}
+
+/// Fraction of adjacent cell pairs along `axis` (0=x, 1=y, 2=z) that
+/// are nondecreasing, over one table's `[NX, NY, NZ]` slice.
+fn mono_frac(slice: &[f32], axis: usize) -> f64 {
+    let idx = |ix: usize, iy: usize, iz: usize| (ix * NY + iy) * NZ + iz;
+    let (mut ok, mut total) = (0usize, 0usize);
+    let (lx, ly, lz) = match axis {
+        0 => (NX - 1, NY, NZ),
+        1 => (NX, NY - 1, NZ),
+        _ => (NX, NY, NZ - 1),
+    };
+    for ix in 0..lx {
+        for iy in 0..ly {
+            for iz in 0..lz {
+                let a = slice[idx(ix, iy, iz)] as f64;
+                let b = match axis {
+                    0 => slice[idx(ix + 1, iy, iz)],
+                    1 => slice[idx(ix, iy + 1, iz)],
+                    _ => slice[idx(ix, iy, iz + 1)],
+                } as f64;
+                if b >= a * (1.0 - 1e-9) {
+                    ok += 1;
+                }
+                total += 1;
+            }
+        }
+    }
+    if total == 0 {
+        1.0
+    } else {
+        ok as f64 / total as f64
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Three-tier lookup
+// ---------------------------------------------------------------------------
+
+/// Which tier of the lookup chain answered queries so far. Obtained via
+/// [`LatencyOracle::provenance_counts`]; subtract two snapshots to get
+/// the counts of one search (`SearchReport::tier_counts`). Note that a
+/// memoizing wrapper ([`super::MemoOracle`]) only forwards cache
+/// *misses*, so counts under a memo are unique-shape counts.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TierSnapshot {
+    /// Queries answered by a directly measured cell.
+    pub measured: u64,
+    /// Queries interpolated on the correction-scaled analytic grid.
+    pub calibrated: u64,
+    /// Queries interpolated on the plain analytic grid (tables with no
+    /// measurements).
+    pub analytic: u64,
+    /// Queries answered by the Speed-of-Light roofline fallback.
+    pub sol: u64,
+}
+
+impl TierSnapshot {
+    pub fn total(&self) -> u64 {
+        self.measured + self.calibrated + self.analytic + self.sol
+    }
+
+    /// Counts accumulated since an `earlier` snapshot.
+    pub fn since(&self, earlier: &TierSnapshot) -> TierSnapshot {
+        TierSnapshot {
+            measured: self.measured - earlier.measured,
+            calibrated: self.calibrated - earlier.calibrated,
+            analytic: self.analytic - earlier.analytic,
+            sol: self.sol - earlier.sol,
+        }
+    }
+}
+
+#[derive(Default)]
+struct TierCounters {
+    measured: AtomicU64,
+    calibrated: AtomicU64,
+    analytic: AtomicU64,
+    sol: AtomicU64,
+}
+
+/// A [`PerfDatabase`] with a calibration artifact composed on top:
+/// the three-tier lookup chain with per-query provenance accounting.
+pub struct CalibratedDb {
+    pub base: PerfDatabase,
+    /// Full packed grid with per-table corrections applied (tables
+    /// without a fit keep their analytic values).
+    cal_grids: Vec<f32>,
+    /// Directly measured cells (flat index → median measured µs).
+    measured: HashMap<usize, f64>,
+    /// Which tables carry a fitted correction.
+    has_fit: [bool; NUM_TABLES],
+    tiers: TierCounters,
+}
+
+impl CalibratedDb {
+    /// Compose an artifact over a freshly profiled database. Strictly
+    /// validates the compatibility rules (DESIGN.md): format version
+    /// and grid shape are checked at artifact load; the full profiling
+    /// context must match here.
+    pub fn compose(base: PerfDatabase, artifact: &CalibrationArtifact) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            artifact.gpu == base.ctx.gpu
+                && artifact.gpus_per_node == base.ctx.gpus_per_node
+                && artifact.num_nodes == base.ctx.num_nodes
+                && artifact.model == base.ctx.model
+                && artifact.framework == base.ctx.framework
+                && artifact.kv_dtype == base.ctx.kv_dtype,
+            "calibration artifact context (gpu={} {}x{}, model={}, framework={}, kv_dtype={}) \
+             does not match the database context (gpu={} {}x{}, model={}, framework={}, \
+             kv_dtype={}) — collective corrections bind to the topology they were fitted on",
+            artifact.gpu,
+            artifact.num_nodes,
+            artifact.gpus_per_node,
+            artifact.model,
+            artifact.framework,
+            artifact.kv_dtype,
+            base.ctx.gpu,
+            base.ctx.num_nodes,
+            base.ctx.gpus_per_node,
+            base.ctx.model,
+            base.ctx.framework,
+            base.ctx.kv_dtype,
+        );
+        let mut cal_grids = base.grids().to_vec();
+        let mut has_fit = [false; NUM_TABLES];
+        for fit in &artifact.fits {
+            let t = fit.table as usize;
+            has_fit[t] = true;
+            let start = t * NX * NY * NZ;
+            let slice = calibrated_slice(&cal_grids[start..start + NX * NY * NZ], fit);
+            cal_grids[start..start + NX * NY * NZ].copy_from_slice(&slice);
+        }
+        Ok(CalibratedDb {
+            base,
+            cal_grids,
+            measured: artifact.measured_cells.iter().copied().collect(),
+            has_fit,
+            tiers: TierCounters::default(),
+        })
+    }
+
+    /// Tier counts accumulated over this database's lifetime.
+    pub fn tier_counts(&self) -> TierSnapshot {
+        TierSnapshot {
+            measured: self.tiers.measured.load(Ordering::Relaxed),
+            calibrated: self.tiers.calibrated.load(Ordering::Relaxed),
+            analytic: self.tiers.analytic.load(Ordering::Relaxed),
+            sol: self.tiers.sol.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Cloning duplicates the composed grids/overlay but starts the tier
+/// counters at zero: a clone is a private accounting scope. The service
+/// relies on this — it caches one composition per context and hands
+/// each request a clone, so concurrent requests sharing a context
+/// cannot cross-attribute each other's tier counts.
+impl Clone for CalibratedDb {
+    fn clone(&self) -> Self {
+        CalibratedDb {
+            base: self.base.clone(),
+            cal_grids: self.cal_grids.clone(),
+            measured: self.measured.clone(),
+            has_fit: self.has_fit,
+            tiers: TierCounters::default(),
+        }
+    }
+}
+
+impl LatencyOracle for CalibratedDb {
+    fn op_latency_us(&self, op: &Op) -> f64 {
+        match query_for(op) {
+            Some(q) => {
+                let t = q.table as usize;
+                let ((cx, cy, cz), dist) = nearest_cell(q.fx, q.fy, q.fz);
+                if dist <= MEASURED_SNAP {
+                    if let Some(&us) = self.measured.get(&flat(t, cx, cy, cz)) {
+                        self.tiers.measured.fetch_add(1, Ordering::Relaxed);
+                        return us * q.scale;
+                    }
+                }
+                let v = trilinear(&self.cal_grids, t, q.fx, q.fy, q.fz) * q.scale;
+                if self.has_fit[t] {
+                    self.tiers.calibrated.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    self.tiers.analytic.fetch_add(1, Ordering::Relaxed);
+                }
+                v
+            }
+            None => {
+                self.tiers.sol.fetch_add(1, Ordering::Relaxed);
+                sol::latency_us(&self.base.cluster, op)
+            }
+        }
+    }
+
+    fn provenance_counts(&self) -> Option<TierSnapshot> {
+        Some(self.tier_counts())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frameworks::Framework;
+    use crate::hardware::{h100_sxm, ClusterSpec};
+    use crate::models::{by_name, Dtype};
+    use crate::perfdb::measure;
+    use crate::silicon::Silicon;
+
+    fn ctx() -> (Silicon, crate::models::ModelArch) {
+        let cluster = ClusterSpec::new(h100_sxm(), 8, 1);
+        (Silicon::new(cluster, Framework::TrtLlm.profile()), by_name("qwen3-32b").unwrap())
+    }
+
+    fn db(sil: &Silicon, model: &crate::models::ModelArch) -> PerfDatabase {
+        PerfDatabase::build(sil, model, Dtype::Fp8, 0xA1C0)
+    }
+
+    #[test]
+    fn gauss_solves_small_systems() {
+        let mut a = vec![vec![2.0, 1.0], vec![1.0, 3.0]];
+        let mut b = vec![5.0, 10.0];
+        let x = gauss_solve(&mut a, &mut b).unwrap();
+        assert!((x[0] - 1.0).abs() < 1e-12 && (x[1] - 3.0).abs() < 1e-12);
+        // Singular system is refused.
+        let mut a = vec![vec![1.0, 2.0], vec![2.0, 4.0]];
+        let mut b = vec![1.0, 2.0];
+        assert!(gauss_solve(&mut a, &mut b).is_none());
+    }
+
+    #[test]
+    fn fit_recovers_injected_constant_factor() {
+        let (sil, model) = ctx();
+        let d = db(&sil, &model);
+        // Pure scale, no tilt, modest noise: the fit must recover the
+        // injected factor within 2% per table.
+        let sets = measure::synthesize_with(&sil, &model, Dtype::Fp8, 42, 48, &|_| (1.25, 0.0), 0.02);
+        let art = fit(&d, &sets).unwrap();
+        assert_eq!(art.fits.len(), TableId::all_active().len());
+        for f in &art.fits {
+            // Evaluate the fitted correction mid-grid, where the
+            // regression estimate is tightest; the injected truth is a
+            // uniform 1.25 everywhere.
+            let recovered = f.factor_at(NX / 2, NY / 2, NZ / 2);
+            assert!(
+                (recovered / 1.25 - 1.0).abs() < 0.02,
+                "{}: recovered {recovered:.4}, want 1.25",
+                f.table.name()
+            );
+            assert!(f.post_mape < f.pre_mape, "{}: {f:?}", f.table.name());
+        }
+        assert!(art.all_tables_improve());
+    }
+
+    #[test]
+    fn fit_survives_corrupted_measurements() {
+        let (sil, model) = ctx();
+        let d = db(&sil, &model);
+        let mut sets =
+            measure::synthesize_with(&sil, &model, Dtype::Fp8, 9, 48, &|_| (1.3, 0.0), 0.02);
+        // Corrupt one gemm point by 10x — a botched harness run.
+        let gemm = sets.iter_mut().find(|s| s.table == TableId::GemmFp16).unwrap();
+        gemm.entries[0].us *= 10.0;
+        let art = fit(&d, &sets).unwrap();
+        let f = art.fits.iter().find(|f| f.table == TableId::GemmFp16).unwrap();
+        assert!(f.n_outliers >= 1, "the corrupted point must be rejected: {f:?}");
+        assert!(f.n_points >= 44, "rejection must not gut the table: {f:?}");
+        let recovered = f.factor_at(NX / 2, NY / 2, NZ / 2);
+        assert!((recovered / 1.3 - 1.0).abs() < 0.02, "recovered {recovered}");
+        // The rejected point must not be served verbatim by the overlay.
+        let bad = &sets.iter().find(|s| s.table == TableId::GemmFp16).unwrap().entries[0];
+        let s = spec(TableId::GemmFp16);
+        let ((cx, cy, cz), _) = nearest_cell(s.x.frac(bad.x), s.y.frac(bad.y), s.z.frac(bad.z));
+        let cell = flat(TableId::GemmFp16 as usize, cx, cy, cz);
+        assert!(
+            !art.measured_cells.iter().any(|&(c, _)| c == cell),
+            "outlier landed in the measured-cell overlay"
+        );
+    }
+
+    #[test]
+    fn monotonicity_clamp_blocks_inverting_tilts() {
+        let (sil, model) = ctx();
+        let d = db(&sil, &model);
+        // A violently negative x-tilt would make latency shrink with
+        // problem size; the clamp must zero it.
+        let sets =
+            measure::synthesize_with(&sil, &model, Dtype::Fp8, 5, 64, &|_| (1.3, -3.0), 0.01);
+        let art = fit(&d, &sets).unwrap();
+        let f = art.fits.iter().find(|f| f.table == TableId::GemmFp16).unwrap();
+        assert!(f.clamped_axes[0], "x tilt must be clamped: {f:?}");
+        assert_eq!(f.coeffs[1], 0.0);
+    }
+
+    #[test]
+    fn artifact_json_round_trip() {
+        let (sil, model) = ctx();
+        let d = db(&sil, &model);
+        let sets = measure::synthesize(&sil, &model, Dtype::Fp8, 11, 16);
+        let art = fit(&d, &sets).unwrap();
+        let back = CalibrationArtifact::from_json(&art.to_json()).unwrap();
+        assert_eq!(back.gpu, art.gpu);
+        assert_eq!(back.fits, art.fits);
+        assert_eq!(back.measured_cells, art.measured_cells);
+    }
+
+    #[test]
+    fn compose_rejects_context_mismatch() {
+        let (sil, model) = ctx();
+        let d = db(&sil, &model);
+        let sets = measure::synthesize(&sil, &model, Dtype::Fp8, 11, 8);
+        let mut art = fit(&d, &sets).unwrap();
+        art.gpu = "b200".to_string();
+        assert!(CalibratedDb::compose(db(&sil, &model), &art).is_err());
+        // Topology is part of the context: collective corrections
+        // fitted on 1 node must not compose onto a 2-node database.
+        let mut art2 = fit(&d, &sets).unwrap();
+        assert_eq!((art2.gpus_per_node, art2.num_nodes), (8, 1));
+        art2.num_nodes = 2;
+        assert!(CalibratedDb::compose(db(&sil, &model), &art2).is_err());
+    }
+
+    #[test]
+    fn calibrated_interp_applies_factor_and_counts_tiers() {
+        let (sil, model) = ctx();
+        let d = db(&sil, &model);
+        let sets = measure::synthesize_with(&sil, &model, Dtype::Fp8, 21, 48, &|_| (1.25, 0.0), 0.02);
+        let art = fit(&d, &sets).unwrap();
+        let plain = db(&sil, &model);
+        let cal = CalibratedDb::compose(db(&sil, &model), &art).unwrap();
+        // An off-grid query (not near any measured cell) must be scaled
+        // by ~the injected factor relative to the analytic answer.
+        let op = Op::Gemm { m: 3000, n: 10240, k: 5120, dtype: Dtype::Fp8, count: 1 };
+        let a = plain.op_latency_us(&op);
+        let c = cal.op_latency_us(&op);
+        assert!((c / a / 1.25 - 1.0).abs() < 0.03, "a={a} c={c}");
+        // Elementwise is SoL on both.
+        let e = Op::Elementwise { bytes: 1e8, count: 1 };
+        assert_eq!(cal.op_latency_us(&e), plain.op_latency_us(&e));
+        let t = cal.tier_counts();
+        assert_eq!(t.sol, 1);
+        assert_eq!(t.calibrated + t.measured, 1);
+        assert_eq!(t.total(), 2);
+        // The uncalibrated database reports no provenance.
+        assert!(plain.provenance_counts().is_none());
+        assert!(cal.provenance_counts().is_some());
+    }
+
+    #[test]
+    fn mono_frac_detects_order() {
+        let mut slice = vec![0f32; NX * NY * NZ];
+        for ix in 0..NX {
+            for iy in 0..NY {
+                for iz in 0..NZ {
+                    slice[(ix * NY + iy) * NZ + iz] = ix as f32;
+                }
+            }
+        }
+        assert_eq!(mono_frac(&slice, 0), 1.0);
+        assert_eq!(mono_frac(&slice, 1), 1.0); // constant along y counts as monotone
+        // Strictly decreasing along x.
+        for v in slice.iter_mut() {
+            *v = -*v;
+        }
+        assert_eq!(mono_frac(&slice, 0), 0.0);
+    }
+}

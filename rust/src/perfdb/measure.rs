@@ -1,0 +1,385 @@
+//! Kernel-latency measurement sets: the versioned on-disk format that
+//! feeds the calibration pipeline ([`super::calibrate`]).
+//!
+//! A measurement file is one `(gpu, table)` pair's worth of observed
+//! kernel latencies at explicit table coordinates:
+//!
+//! ```json
+//! {
+//!   "version": 1,
+//!   "table": "gemm_fp16",
+//!   "gpu": "h100-sxm",
+//!   "model": "qwen3-32b",
+//!   "framework": "trtllm",
+//!   "kv_dtype": "fp8",
+//!   "generator": "free-form provenance string",
+//!   "entries": [ {"x": 1.0, "y": 64.0, "z": 64.0, "us": 12.3, "n": 3} ]
+//! }
+//! ```
+//!
+//! Coordinates are *physical* axis values in the table's own units
+//! (`perfdb/tables.rs::spec` — e.g. m/n/k for GEMM tables), exactly the
+//! values a profiling harness sweeps; `us` is the measured per-instance
+//! latency in microseconds (median over `n` repeats). Files live at
+//! `artifacts/measurements/<gpu>/<table>.json`. Real GPU traces and the
+//! committed synthetic set (`python/measurements/synth.py`) share this
+//! format; [`synthesize`] produces the same thing hermetically from the
+//! synthetic silicon for tests and for bootstrapping new platforms.
+
+use std::path::Path;
+
+use crate::models::{Dtype, ModelArch};
+use crate::silicon::Silicon;
+use crate::util::json::{self, Json};
+use crate::util::rng::Rng;
+
+use super::builder::op_for_point;
+use super::tables::{spec, TableId, NX, NY, NZ};
+
+/// On-disk format version; bump on any incompatible change.
+pub const FORMAT_VERSION: u32 = 1;
+
+/// One observed latency at explicit table coordinates.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Measurement {
+    /// Physical axis coordinates (table units, see `tables::spec`).
+    pub x: f64,
+    pub y: f64,
+    pub z: f64,
+    /// Measured per-instance latency, microseconds (median of `n`).
+    pub us: f64,
+    /// Repeat count behind `us` — the fit weights points by it.
+    pub n: u32,
+}
+
+/// All measurements for one `(gpu, table)` pair, plus the context they
+/// were taken in.
+#[derive(Clone, Debug)]
+pub struct MeasurementSet {
+    pub table: TableId,
+    pub gpu: String,
+    pub model: String,
+    pub framework: String,
+    pub kv_dtype: String,
+    /// Free-form provenance (harness name, seed, trace id, ...).
+    pub generator: String,
+    pub entries: Vec<Measurement>,
+}
+
+impl MeasurementSet {
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("version", json::num(FORMAT_VERSION as f64))
+            .set("table", json::s(self.table.name()))
+            .set("gpu", json::s(&self.gpu))
+            .set("model", json::s(&self.model))
+            .set("framework", json::s(&self.framework))
+            .set("kv_dtype", json::s(&self.kv_dtype))
+            .set("generator", json::s(&self.generator))
+            .set(
+                "entries",
+                Json::Arr(
+                    self.entries
+                        .iter()
+                        .map(|e| {
+                            let mut m = Json::obj();
+                            m.set("x", json::num(e.x))
+                                .set("y", json::num(e.y))
+                                .set("z", json::num(e.z))
+                                .set("us", json::num(e.us))
+                                .set("n", json::num(e.n as f64));
+                            m
+                        })
+                        .collect(),
+                ),
+            );
+        o
+    }
+
+    /// Parse + validate one measurement document.
+    pub fn from_json(j: &Json) -> anyhow::Result<MeasurementSet> {
+        let version = j.req_f64("version")? as u32;
+        anyhow::ensure!(
+            version == FORMAT_VERSION,
+            "measurement format version {version} != supported {FORMAT_VERSION}"
+        );
+        let tname = j.req_str("table")?;
+        let table = TableId::parse(tname)
+            .ok_or_else(|| anyhow::anyhow!("unknown measurement table '{tname}'"))?;
+        let entries_j = j
+            .req("entries")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("'entries' must be an array"))?;
+        let mut entries = Vec::with_capacity(entries_j.len());
+        for (i, e) in entries_j.iter().enumerate() {
+            let m = Measurement {
+                x: e.req_f64("x")?,
+                y: e.req_f64("y")?,
+                z: e.req_f64("z")?,
+                us: e.req_f64("us")?,
+                n: e.f64_or("n", 1.0) as u32,
+            };
+            anyhow::ensure!(
+                m.us.is_finite() && m.us > 0.0,
+                "entry {i} of table '{tname}': 'us' must be positive and finite, got {}",
+                m.us
+            );
+            anyhow::ensure!(
+                m.x.is_finite() && m.y.is_finite() && m.z.is_finite(),
+                "entry {i} of table '{tname}': non-finite coordinate"
+            );
+            anyhow::ensure!(m.n >= 1, "entry {i} of table '{tname}': 'n' must be >= 1");
+            entries.push(m);
+        }
+        Ok(MeasurementSet {
+            table,
+            gpu: j.req_str("gpu")?.to_string(),
+            model: j.req_str("model")?.to_string(),
+            framework: j.req_str("framework")?.to_string(),
+            kv_dtype: j.req_str("kv_dtype")?.to_string(),
+            generator: j.str_or("generator", "").to_string(),
+            entries,
+        })
+    }
+
+    pub fn parse(txt: &str) -> anyhow::Result<MeasurementSet> {
+        Self::from_json(&json::parse(txt)?)
+    }
+}
+
+/// Load every measurement set under `dir/<gpu>/` (one file per table).
+/// Errors are loud: a malformed or mis-labelled file names itself.
+pub fn load_dir(dir: &Path, gpu: &str) -> anyhow::Result<Vec<MeasurementSet>> {
+    let gdir = dir.join(gpu);
+    anyhow::ensure!(
+        gdir.is_dir(),
+        "no measurement directory for gpu '{gpu}' at {} (expected <dir>/<gpu>/<table>.json)",
+        gdir.display()
+    );
+    let mut paths: Vec<std::path::PathBuf> = std::fs::read_dir(&gdir)?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().is_some_and(|x| x == "json"))
+        .collect();
+    paths.sort();
+    anyhow::ensure!(!paths.is_empty(), "no .json measurement files in {}", gdir.display());
+    let mut sets = Vec::new();
+    for p in paths {
+        let txt = std::fs::read_to_string(&p)?;
+        let set = MeasurementSet::parse(&txt)
+            .map_err(|e| anyhow::anyhow!("{}: {e}", p.display()))?;
+        anyhow::ensure!(
+            set.gpu == gpu,
+            "{}: file is under gpu dir '{gpu}' but records gpu '{}'",
+            p.display(),
+            set.gpu
+        );
+        let expect = format!("{}.json", set.table.name());
+        anyhow::ensure!(
+            p.file_name().is_some_and(|f| f == expect.as_str()),
+            "{}: file name does not match its table '{}'",
+            p.display(),
+            set.table.name()
+        );
+        sets.push(set);
+    }
+    Ok(sets)
+}
+
+/// Write sets as `dir/<gpu>/<table>.json`.
+pub fn write_sets(dir: &Path, sets: &[MeasurementSet]) -> anyhow::Result<()> {
+    for set in sets {
+        let gdir = dir.join(&set.gpu);
+        std::fs::create_dir_all(&gdir)?;
+        let path = gdir.join(format!("{}.json", set.table.name()));
+        std::fs::write(&path, set.to_json().to_string())?;
+    }
+    Ok(())
+}
+
+/// Ground-truth miscalibration injected by the default synthetic
+/// measurement model: per-table `(scale factor, x-tilt)` — measured =
+/// silicon × factor × exp(tilt · fx/(NX-1)) × lognormal noise. Loosely
+/// shaped like real analytic-model error: GEMM efficiency misjudged by
+/// a constant, attention slightly shape-dependent, collectives worst
+/// (topology effects the analytic model undersells).
+pub fn default_bias(id: TableId) -> (f64, f64) {
+    use TableId::*;
+    match id {
+        GemmFp16 | GemmFp8 | GemmInt8 | GemmInt4 => (1.28, 0.10),
+        AttnPrefill => (1.17, 0.08),
+        AttnDecode => (1.22, 0.06),
+        MoeFp16 | MoeFp8 | MoeInt8 | MoeInt4 => (1.31, 0.12),
+        AllReduce | AllGather | AllToAll => (1.40, 0.05),
+        P2p => (1.26, 0.0),
+    }
+}
+
+/// Synthesize a measurement set per table by "measuring" the silicon at
+/// random grid points through a fixed-seed multiplicative bias + noise
+/// model. Deterministic per seed. `bias` maps a table to its
+/// `(factor, x_tilt)` ground truth (see [`default_bias`]); tests inject
+/// a known factor here and assert the fit recovers it.
+pub fn synthesize_with(
+    silicon: &Silicon,
+    model: &ModelArch,
+    kv_dtype: Dtype,
+    seed: u64,
+    points_per_table: usize,
+    bias: &dyn Fn(TableId) -> (f64, f64),
+    sigma: f64,
+) -> Vec<MeasurementSet> {
+    const REPEATS: usize = 3;
+    let mut rng = Rng::new(seed);
+    let mut sets = Vec::new();
+    for id in TableId::all_active() {
+        let s = spec(id);
+        let (factor, tilt) = bias(id);
+        let degenerate_z = s.z.hi <= s.z.lo;
+        let mut cells: Vec<(usize, usize, usize)> = Vec::new();
+        let mut attempts = 0usize;
+        while cells.len() < points_per_table && attempts < points_per_table * 20 {
+            attempts += 1;
+            let c = (
+                rng.below(NX as u64) as usize,
+                rng.below(NY as u64) as usize,
+                if degenerate_z { 0 } else { rng.below(NZ as u64) as usize },
+            );
+            if !cells.contains(&c) {
+                cells.push(c);
+            }
+        }
+        let mut entries = Vec::with_capacity(cells.len());
+        for (ix, iy, iz) in cells {
+            let (xv, yv, zv) = (s.x.value(ix), s.y.value(iy), s.z.value(iz));
+            let op = op_for_point(id, model, kv_dtype, xv, yv, zv);
+            let truth = silicon.op_latency_us(&op);
+            let corrected = truth * factor * (tilt * ix as f64 / (NX - 1) as f64).exp();
+            // Median of noisy repeats, as a real harness reports.
+            let mut draws: Vec<f64> =
+                (0..REPEATS).map(|_| corrected * rng.noise(sigma)).collect();
+            draws.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            entries.push(Measurement {
+                x: xv,
+                y: yv,
+                z: zv,
+                us: draws[REPEATS / 2],
+                n: REPEATS as u32,
+            });
+        }
+        sets.push(MeasurementSet {
+            table: id,
+            gpu: silicon.cluster.gpu.name.to_string(),
+            model: model.name.to_string(),
+            framework: silicon.fw.framework.name().to_string(),
+            kv_dtype: kv_dtype.name().to_string(),
+            generator: format!("synthesize(seed={seed}, sigma={sigma})"),
+            entries,
+        });
+    }
+    sets
+}
+
+/// [`synthesize_with`] under the default bias model and 3% noise.
+pub fn synthesize(
+    silicon: &Silicon,
+    model: &ModelArch,
+    kv_dtype: Dtype,
+    seed: u64,
+    points_per_table: usize,
+) -> Vec<MeasurementSet> {
+    synthesize_with(silicon, model, kv_dtype, seed, points_per_table, &default_bias, 0.03)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frameworks::Framework;
+    use crate::hardware::{h100_sxm, ClusterSpec};
+    use crate::models::by_name;
+
+    fn sil() -> Silicon {
+        Silicon::new(ClusterSpec::new(h100_sxm(), 8, 1), Framework::TrtLlm.profile())
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let set = MeasurementSet {
+            table: TableId::GemmFp8,
+            gpu: "h100-sxm".into(),
+            model: "qwen3-32b".into(),
+            framework: "trtllm".into(),
+            kv_dtype: "fp8".into(),
+            generator: "test".into(),
+            entries: vec![
+                Measurement { x: 128.0, y: 4096.0, z: 4096.0, us: 42.5, n: 3 },
+                Measurement { x: 1.0, y: 64.0, z: 64.0, us: 3.1, n: 1 },
+            ],
+        };
+        let back = MeasurementSet::parse(&set.to_json().to_string()).unwrap();
+        assert_eq!(back.table, set.table);
+        assert_eq!(back.entries, set.entries);
+        assert_eq!(back.kv_dtype, "fp8");
+    }
+
+    #[test]
+    fn validation_rejects_bad_documents() {
+        // Wrong version.
+        assert!(MeasurementSet::parse(
+            r#"{"version": 99, "table": "gemm_fp16", "gpu": "g", "model": "m",
+                "framework": "f", "kv_dtype": "fp16", "entries": []}"#
+        )
+        .is_err());
+        // Unknown table.
+        assert!(MeasurementSet::parse(
+            r#"{"version": 1, "table": "nope", "gpu": "g", "model": "m",
+                "framework": "f", "kv_dtype": "fp16", "entries": []}"#
+        )
+        .is_err());
+        // Non-positive latency.
+        assert!(MeasurementSet::parse(
+            r#"{"version": 1, "table": "gemm_fp16", "gpu": "g", "model": "m",
+                "framework": "f", "kv_dtype": "fp16",
+                "entries": [{"x": 1, "y": 64, "z": 64, "us": 0, "n": 3}]}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn synthesize_is_deterministic_and_biased() {
+        let s = sil();
+        let model = by_name("qwen3-32b").unwrap();
+        let a = synthesize(&s, &model, Dtype::Fp8, 7, 12);
+        let b = synthesize(&s, &model, Dtype::Fp8, 7, 12);
+        assert_eq!(a.len(), TableId::all_active().len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.entries, y.entries, "same seed must reproduce bit-identically");
+        }
+        // The injected bias is visible: measured / silicon clusters near
+        // the table factor, never near 1.0.
+        let gemm = a.iter().find(|t| t.table == TableId::GemmFp16).unwrap();
+        for e in &gemm.entries {
+            let op = op_for_point(TableId::GemmFp16, &model, Dtype::Fp8, e.x, e.y, e.z);
+            let ratio = e.us / s.op_latency_us(&op);
+            assert!(ratio > 1.1 && ratio < 1.7, "ratio {ratio}");
+        }
+    }
+
+    #[test]
+    fn write_and_load_dir_round_trip() {
+        let s = sil();
+        let model = by_name("llama3.1-8b").unwrap();
+        let sets = synthesize(&s, &model, Dtype::Fp8, 3, 6);
+        let dir = std::env::temp_dir().join(format!("aicfg_meas_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        write_sets(&dir, &sets).unwrap();
+        let back = load_dir(&dir, "h100-sxm").unwrap();
+        assert_eq!(back.len(), sets.len());
+        for b in &back {
+            let orig = sets.iter().find(|s| s.table == b.table).unwrap();
+            assert_eq!(b.entries, orig.entries);
+        }
+        // Unknown gpu dir is a loud error.
+        assert!(load_dir(&dir, "b200").is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -8,6 +8,12 @@
 //! strategies the paper lists (exhaustive profiling, interpolation,
 //! SoL estimation).
 //!
+//! On top of the analytic fill, external kernel measurements
+//! ([`measure`]) can be fitted into a correction ([`calibrate`]) —
+//! [`CalibratedDb`] then answers through a three-tier chain (measured
+//! cell → calibrated-analytic → SoL), tagging every query with its
+//! provenance tier.
+//!
 //! Two query backends exist: the native Rust interpolator here (used by
 //! the CLI search path and as the perf baseline) and the AOT-compiled
 //! Pallas kernel executed through PJRT ([`crate::runtime`]) — identical
@@ -15,11 +21,14 @@
 
 pub mod builder;
 pub mod cache;
+pub mod calibrate;
+pub mod measure;
 pub mod query;
 pub mod sol;
 pub mod tables;
 
 pub use cache::MemoOracle;
+pub use calibrate::{CalibratedDb, CalibrationArtifact, TierSnapshot};
 
 use crate::frameworks::FrameworkProfile;
 use crate::hardware::ClusterSpec;
@@ -48,6 +57,16 @@ pub trait LatencyOracle: Sync {
         ops.iter()
             .map(|o| self.op_latency_us(o) * o.count() as f64)
             .sum()
+    }
+
+    /// Cumulative per-tier query counts, for oracles that track the
+    /// provenance of their answers (measured / calibrated / analytic /
+    /// SoL — see [`calibrate::CalibratedDb`]). `None` for oracles with
+    /// a single data source; wrappers forward to their inner oracle.
+    /// Callers snapshot before/after a search and subtract
+    /// ([`TierSnapshot::since`]) to attribute counts to one run.
+    fn provenance_counts(&self) -> Option<TierSnapshot> {
+        None
     }
 }
 

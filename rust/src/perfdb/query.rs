@@ -47,6 +47,19 @@ pub fn flat(table: usize, ix: usize, iy: usize, iz: usize) -> usize {
     ((table * NX + ix) * NY + iy) * NZ + iz
 }
 
+/// Nearest grid cell to fractional coordinates, plus the largest
+/// per-axis distance to it (in grid units). The calibration layer's
+/// measured-cell tier fires only when that distance is small — a query
+/// essentially *at* a measured point ([`crate::perfdb::calibrate`]).
+#[inline]
+pub fn nearest_cell(fx: f64, fy: f64, fz: f64) -> ((usize, usize, usize), f64) {
+    let cx = fx.round().clamp(0.0, (NX - 1) as f64);
+    let cy = fy.round().clamp(0.0, (NY - 1) as f64);
+    let cz = fz.round().clamp(0.0, (NZ - 1) as f64);
+    let dist = (fx - cx).abs().max((fy - cy).abs()).max((fz - cz).abs());
+    ((cx as usize, cy as usize, cz as usize), dist)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -91,6 +104,19 @@ mod tests {
         let g = linear_grid(1.0, 0.0, 0.0, 0.0);
         assert_eq!(trilinear(&g, 0, -5.0, 0.0, 0.0), 0.0);
         assert_eq!(trilinear(&g, 0, 1e9, 0.0, 0.0), (NX - 1) as f64);
+    }
+
+    #[test]
+    fn nearest_cell_rounds_and_reports_distance() {
+        let ((x, y, z), d) = nearest_cell(5.1, 6.9, 2.0);
+        assert_eq!((x, y, z), (5, 7, 2));
+        assert!((d - 0.1).abs() < 1e-9, "d={d}");
+        // Clamped at the edges; distance measured to the clamped cell.
+        let ((x, _, _), d) = nearest_cell(-0.4, 0.0, 0.0);
+        assert_eq!(x, 0);
+        assert!((d - 0.4).abs() < 1e-9);
+        let ((x, _, _), _) = nearest_cell(1e9, 0.0, 0.0);
+        assert_eq!(x, NX - 1);
     }
 
     #[test]

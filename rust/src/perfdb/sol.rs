@@ -4,6 +4,8 @@
 //!
 //! Pure roofline — no framework efficiency, no quantization effects —
 //! which is exactly why profiled tables are preferred when available.
+//! In the calibrated lookup chain ([`super::calibrate::CalibratedDb`])
+//! this is the last tier: measured cell → calibrated-analytic → SoL.
 
 use crate::hardware::ClusterSpec;
 use crate::models::Dtype;

@@ -60,6 +60,34 @@ impl TableId {
             MoeFp16, MoeFp8, MoeInt8, MoeInt4, AllReduce, AllGather, AllToAll, P2p,
         ]
     }
+
+    /// Stable on-disk name for this table — used by the measurement
+    /// files (`artifacts/measurements/<gpu>/<table>.json`) and the
+    /// calibration artifact, so renames here are format breaks.
+    pub fn name(self) -> &'static str {
+        use TableId::*;
+        match self {
+            GemmFp16 => "gemm_fp16",
+            GemmFp8 => "gemm_fp8",
+            GemmInt8 => "gemm_int8",
+            GemmInt4 => "gemm_int4",
+            AttnPrefill => "attn_prefill",
+            AttnDecode => "attn_decode",
+            MoeFp16 => "moe_fp16",
+            MoeFp8 => "moe_fp8",
+            MoeInt8 => "moe_int8",
+            MoeInt4 => "moe_int4",
+            AllReduce => "allreduce",
+            AllGather => "allgather",
+            AllToAll => "alltoall",
+            P2p => "p2p",
+        }
+    }
+
+    /// Inverse of [`TableId::name`].
+    pub fn parse(s: &str) -> Option<TableId> {
+        TableId::all_active().into_iter().find(|id| id.name() == s)
+    }
 }
 
 /// One grid axis: physical range + spacing. A degenerate axis
@@ -278,5 +306,17 @@ mod tests {
             assert_eq!(s.y.n, NY);
             assert_eq!(s.z.n, NZ);
         }
+    }
+
+    #[test]
+    fn table_names_round_trip_and_are_unique() {
+        let mut seen = Vec::new();
+        for id in TableId::all_active() {
+            let n = id.name();
+            assert!(!seen.contains(&n), "duplicate table name {n}");
+            seen.push(n);
+            assert_eq!(TableId::parse(n), Some(id));
+        }
+        assert_eq!(TableId::parse("warp_drive"), None);
     }
 }

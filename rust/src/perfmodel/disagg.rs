@@ -210,7 +210,11 @@ fn rate_match_core(
                     }
                     evaluated.push((x, y, pi, di, est));
                     let i = evaluated.len() - 1;
-                    if best.map_or(true, |b| est.thru_per_gpu > evaluated[b].4.thru_per_gpu) {
+                    let improves = match best {
+                        Some(b) => est.thru_per_gpu > evaluated[b].4.thru_per_gpu,
+                        None => true,
+                    };
+                    if improves {
                         best = Some(i);
                     }
                 }

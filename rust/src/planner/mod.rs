@@ -250,9 +250,11 @@ pub fn plan_cached(
         let subset: Vec<PricedOption> =
             all.iter().filter(|o| o.gpu == name).cloned().collect();
         let s = optimize(&subset, &demands, spec.window_h, spec.max_gpus);
-        if s.choices.iter().all(|c| c.is_some())
-            && best_homogeneous.as_ref().map_or(true, |(_, c)| s.total_cost_usd < *c)
-        {
+        let improves = match &best_homogeneous {
+            Some((_, c)) => s.total_cost_usd < *c,
+            None => true,
+        };
+        if s.choices.iter().all(|c| c.is_some()) && improves {
             best_homogeneous = Some((name.to_string(), s.total_cost_usd));
         }
     }

@@ -156,6 +156,7 @@ mod tests {
             pruned: 0,
             elapsed_s: 0.0,
             median_config_ms: 0.0,
+            tier_counts: None,
         }
     }
 

@@ -68,7 +68,11 @@ pub fn choose_window(
             }
         }
         let cost = n as f64 * o.usd_per_hour * window_h;
-        if best.map_or(true, |b| cost < b.cost_usd) {
+        let improves = match best {
+            Some(b) => cost < b.cost_usd,
+            None => true,
+        };
+        if improves {
             best = Some(WindowChoice { option: i, replicas: n, cost_usd: cost });
         }
     }
@@ -200,7 +204,11 @@ mod tests {
                         }
                     }
                     let cost = n as f64 * o.usd_per_hour * window_h;
-                    if best.map_or(true, |(_, _, b)| cost < b) {
+                    let improves = match best {
+                        Some((_, _, b)) => cost < b,
+                        None => true,
+                    };
+                    if improves {
                         best = Some((i, n, cost));
                     }
                 }

@@ -25,7 +25,7 @@ use crate::frameworks::Framework;
 use crate::hardware::ClusterSpec;
 use crate::models::ModelArch;
 use crate::pareto::FrontierAccumulator;
-use crate::perfdb::{LatencyOracle, MemoOracle};
+use crate::perfdb::{LatencyOracle, MemoOracle, TierSnapshot};
 use crate::perfmodel::{self, disagg, PerfEstimate};
 use crate::util::pool;
 
@@ -136,6 +136,11 @@ pub struct SearchReport {
     pub median_config_ms: f64,
     /// Per-framework resolved-vs-default flag deltas over `evaluated`.
     pub flag_summaries: Vec<FlagSummary>,
+    /// Per-tier oracle query counts for this run (measured / calibrated
+    /// / analytic / SoL), when the oracle tracks provenance
+    /// ([`crate::perfdb::CalibratedDb`]); `None` for single-source
+    /// oracles. Under a memoized sweep these are unique-shape counts.
+    pub tier_counts: Option<TierSnapshot>,
 }
 
 /// Knobs for one search run.
@@ -332,6 +337,7 @@ impl<'a> TaskRunner<'a> {
         opts: &RunOptions,
     ) -> SearchReport {
         let t0 = Instant::now();
+        let tiers_before = oracle.provenance_counts();
         let mut jobs: Vec<Job> =
             Vec::with_capacity(pools.agg.len() + pools.prefill.len() + pools.decode.len());
         jobs.extend((0..pools.agg.len()).map(Job::Agg));
@@ -431,6 +437,10 @@ impl<'a> TaskRunner<'a> {
 
         per_config_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let median = per_config_ms.get(per_config_ms.len() / 2).copied().unwrap_or(0.0);
+        let tier_counts = match (tiers_before, oracle.provenance_counts()) {
+            (Some(before), Some(after)) => Some(after.since(&before)),
+            _ => None,
+        };
         SearchReport {
             flag_summaries: flag_summaries(&evaluated),
             evaluated,
@@ -438,6 +448,7 @@ impl<'a> TaskRunner<'a> {
             pruned,
             elapsed_s: t0.elapsed().as_secs_f64(),
             median_config_ms: median,
+            tier_counts,
         }
     }
 
@@ -448,6 +459,7 @@ impl<'a> TaskRunner<'a> {
     /// produces the same `evaluated` set as [`Self::run`].
     pub fn run_baseline(&self, oracle: &dyn LatencyOracle) -> SearchReport {
         let t0 = Instant::now();
+        let tiers_before = oracle.provenance_counts();
         let wl = &self.workload;
         let mut evaluated: Vec<Evaluated> = Vec::new();
         let mut per_config_ms: Vec<f64> = Vec::new();
@@ -513,7 +525,7 @@ impl<'a> TaskRunner<'a> {
             let priced = prefill.len() + decode.len();
             if priced > 0 {
                 let each = t_price.elapsed().as_secs_f64() * 1e3 / priced as f64;
-                per_config_ms.extend(std::iter::repeat(each).take(priced));
+                per_config_ms.extend((0..priced).map(|_| each));
             }
 
             let res = disagg::rate_match(
@@ -540,6 +552,10 @@ impl<'a> TaskRunner<'a> {
 
         per_config_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let median = per_config_ms.get(per_config_ms.len() / 2).copied().unwrap_or(0.0);
+        let tier_counts = match (tiers_before, oracle.provenance_counts()) {
+            (Some(before), Some(after)) => Some(after.since(&before)),
+            _ => None,
+        };
         SearchReport {
             flag_summaries: flag_summaries(&evaluated),
             evaluated,
@@ -547,6 +563,7 @@ impl<'a> TaskRunner<'a> {
             pruned: 0,
             elapsed_s: t0.elapsed().as_secs_f64(),
             median_config_ms: median,
+            tier_counts,
         }
     }
 }

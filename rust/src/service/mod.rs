@@ -27,7 +27,7 @@ use crate::generator;
 use crate::hardware::{gpu_by_name, ClusterSpec};
 use crate::models::by_name;
 use crate::pareto;
-use crate::perfdb::{LatencyOracle, PerfDatabase};
+use crate::perfdb::{CalibratedDb, CalibrationArtifact, LatencyOracle, PerfDatabase};
 use crate::runtime::{PjrtOracle, PjrtService};
 use crate::search::{SearchSpace, TaskRunner};
 use crate::silicon::Silicon;
@@ -40,6 +40,10 @@ pub struct ServerConfig {
     pub addr: String,
     /// Artifacts dir for the PJRT-backed hot path (None = native interp).
     pub artifacts: Option<PathBuf>,
+    /// Calibration artifact (from the `calibrate` CLI): composed over
+    /// the database of every request whose context matches the
+    /// artifact's; other contexts stay analytic.
+    pub calibration: Option<PathBuf>,
     pub seed: u64,
 }
 
@@ -49,6 +53,10 @@ type DbKey = (String, String, u32, u32, String);
 /// serve_e2e example — can drive requests without a socket).
 pub struct State {
     dbs: Mutex<HashMap<DbKey, Arc<PerfDatabase>>>,
+    /// Calibrated composition per context, built lazily from `artifact`.
+    cals: Mutex<HashMap<DbKey, Arc<CalibratedDb>>>,
+    /// Calibration artifact loaded at startup (if any).
+    artifact: Option<CalibrationArtifact>,
     /// PJRT evaluator bound to the context named at startup (if any).
     pjrt: Option<(DbKey, PjrtService)>,
     seed: u64,
@@ -56,7 +64,21 @@ pub struct State {
 
 impl State {
     pub fn new(seed: u64) -> State {
-        State { dbs: Mutex::new(HashMap::new()), pjrt: None, seed }
+        State {
+            dbs: Mutex::new(HashMap::new()),
+            cals: Mutex::new(HashMap::new()),
+            artifact: None,
+            pjrt: None,
+            seed,
+        }
+    }
+
+    /// A state whose matching-context requests answer through the
+    /// calibrated three-tier chain.
+    pub fn with_calibration(seed: u64, artifact: CalibrationArtifact) -> State {
+        let mut st = State::new(seed);
+        st.artifact = Some(artifact);
+        st
     }
 }
 
@@ -83,10 +105,20 @@ impl SearchServer {
             dbs.insert(key.clone(), db);
             pjrt = Some((key, svc));
         }
+        let artifact = match &cfg.calibration {
+            Some(path) => Some(CalibrationArtifact::load(path)?),
+            None => None,
+        };
         Ok((
             SearchServer {
                 listener,
-                state: Arc::new(State { dbs: Mutex::new(dbs), pjrt, seed: cfg.seed }),
+                state: Arc::new(State {
+                    dbs: Mutex::new(dbs),
+                    cals: Mutex::new(HashMap::new()),
+                    artifact,
+                    pjrt,
+                    seed: cfg.seed,
+                }),
                 stop: Arc::new(AtomicBool::new(false)),
             },
             addr,
@@ -179,13 +211,17 @@ pub fn handle_request(req: &Json, state: &State) -> anyhow::Result<Json> {
     let ctx = request_ctx(req, state, &wl.model)?;
 
     let runner = TaskRunner::new(&ctx.model, &ctx.cluster, ctx.space.clone(), wl.clone());
-    // PJRT hot path when the request matches the bound context.
+    // PJRT hot path when the request matches the bound context;
+    // calibrated chain when the context matches the loaded artifact.
     let report = match &state.pjrt {
         Some((pk, svc)) if *pk == ctx.key => {
             let oracle = PjrtOracle { svc, db: &ctx.db };
             runner.run(&oracle)
         }
-        _ => runner.run(ctx.db.as_ref() as &dyn LatencyOracle),
+        _ => match &ctx.cal {
+            Some(cal) => runner.run(cal.as_ref()),
+            None => runner.run(ctx.db.as_ref() as &dyn LatencyOracle),
+        },
     };
     let top_k = ctx.top_k;
     let analysis = pareto::analyze(&report.evaluated, &wl.sla);
@@ -199,6 +235,9 @@ pub fn handle_request(req: &Json, state: &State) -> anyhow::Result<Json> {
         .set("elapsed_ms", json::num(t0.elapsed().as_secs_f64() * 1e3))
         .set("top", top_json(&analysis, top_k))
         .set("flags", flags_json(&report));
+    if let Some(t) = report.tier_counts {
+        resp.set("tiers", tiers_json(&t));
+    }
     if let Some(id) = req.get("id") {
         resp.set("id", id.clone());
     }
@@ -217,6 +256,9 @@ struct ReqCtx {
     top_k: usize,
     key: DbKey,
     db: Arc<PerfDatabase>,
+    /// Calibrated composition when the server's artifact matches this
+    /// request's context (answers then carry provenance tiers).
+    cal: Option<Arc<CalibratedDb>>,
     space: SearchSpace,
 }
 
@@ -238,6 +280,7 @@ fn request_ctx(req: &Json, state: &State, model_name: &str) -> anyhow::Result<Re
     let key: DbKey =
         (model_name.to_string(), gpu_name.to_string(), gpn, nodes, fw.name().to_string());
     let db = db_for(state, &key)?;
+    let cal = calibrated_for(state, &key, &db)?;
 
     // Search space (modes and launch-flag handling overridable per
     // request).
@@ -268,7 +311,7 @@ fn request_ctx(req: &Json, state: &State, model_name: &str) -> anyhow::Result<Re
                 .as_f64()
                 .ok_or_else(|| anyhow::anyhow!("flags.max_num_tokens must be a number"))?;
             anyhow::ensure!(
-                x >= 1.0 && x <= u32::MAX as f64 && x.fract() == 0.0,
+                (1.0..=u32::MAX as f64).contains(&x) && x.fract() == 0.0,
                 "flags.max_num_tokens must be a positive integer"
             );
             space.max_num_tokens = vec![x as u32];
@@ -287,7 +330,49 @@ fn request_ctx(req: &Json, state: &State, model_name: &str) -> anyhow::Result<Re
             space.cuda_graph = vec![b];
         }
     }
-    Ok(ReqCtx { model, cluster, top_k, key, db, space })
+    Ok(ReqCtx { model, cluster, top_k, key, db, cal, space })
+}
+
+/// Per-tier oracle query counts of a report, as JSON.
+fn tiers_json(t: &crate::perfdb::TierSnapshot) -> Json {
+    let mut o = Json::obj();
+    o.set("measured", json::num(t.measured as f64))
+        .set("calibrated", json::num(t.calibrated as f64))
+        .set("analytic", json::num(t.analytic as f64))
+        .set("sol", json::num(t.sol as f64));
+    o
+}
+
+/// Lazily compose (and cache) the server's calibration artifact over a
+/// context's database. `None` when no artifact is loaded or its
+/// profiling context differs from this request's. The returned value
+/// is a **clone** of the cached composition (grids copied by value,
+/// tier counters fresh), so each request accounts its own tier counts
+/// even when concurrent requests share a context. The ~2 MB grid copy
+/// is deliberate: it costs ~0.1 ms against a search that runs for
+/// hundreds, and keeps CalibratedDb free of interior Arcs.
+fn calibrated_for(
+    state: &State,
+    key: &DbKey,
+    db: &Arc<PerfDatabase>,
+) -> anyhow::Result<Option<Arc<CalibratedDb>>> {
+    let Some(art) = &state.artifact else { return Ok(None) };
+    let matches = art.gpu == db.ctx.gpu
+        && art.gpus_per_node == db.ctx.gpus_per_node
+        && art.num_nodes == db.ctx.num_nodes
+        && art.model == db.ctx.model
+        && art.framework == db.ctx.framework
+        && art.kv_dtype == db.ctx.kv_dtype;
+    if !matches {
+        return Ok(None);
+    }
+    let mut cals = state.cals.lock().unwrap();
+    if let Some(c) = cals.get(key) {
+        return Ok(Some(Arc::new((**c).clone())));
+    }
+    let c = Arc::new(CalibratedDb::compose((**db).clone(), art)?);
+    cals.insert(key.clone(), c.clone());
+    Ok(Some(Arc::new((*c).clone())))
 }
 
 /// Per-framework resolved-vs-default flag deltas of a report, as JSON.
@@ -366,7 +451,10 @@ fn handle_sweep_request(req: &Json, state: &State) -> anyhow::Result<Json> {
             let oracle = PjrtOracle { svc, db: &ctx.db };
             runner.run_sweep(&oracle, &wls)
         }
-        _ => runner.run_sweep(ctx.db.as_ref() as &dyn LatencyOracle, &wls),
+        _ => match &ctx.cal {
+            Some(cal) => runner.run_sweep(cal.as_ref(), &wls),
+            None => runner.run_sweep(ctx.db.as_ref() as &dyn LatencyOracle, &wls),
+        },
     };
 
     let mut results = Vec::new();
@@ -380,6 +468,9 @@ fn handle_sweep_request(req: &Json, state: &State) -> anyhow::Result<Json> {
             .set("feasible", json::num(analysis.feasible.len() as f64))
             .set("top", top_json(&analysis, top_k))
             .set("flags", flags_json(report));
+        if let Some(t) = report.tier_counts {
+            o.set("tiers", tiers_json(&t));
+        }
         if let Some(best) = analysis.best() {
             o.set("launch", launch_json(&best.cand, wl));
         }
@@ -434,12 +525,17 @@ fn handle_plan_request(req: &Json, state: &State) -> anyhow::Result<Json> {
         }
         None => vec![req.str_or("gpu", "h100").to_string()],
     };
-    let mut legs: Vec<(ClusterSpec, Arc<PerfDatabase>)> = Vec::new();
+    let mut legs: Vec<(ClusterSpec, Arc<dyn LatencyOracle>)> = Vec::new();
     for name in &names {
         let gpu =
             gpu_by_name(name).ok_or_else(|| anyhow::anyhow!("unknown gpu '{name}' in fleet"))?;
         let key: DbKey = (wl.model.clone(), name.clone(), gpn, nodes, fw.name().to_string());
-        legs.push((ClusterSpec::new(gpu, gpn, nodes), db_for(state, &key)?));
+        let db = db_for(state, &key)?;
+        let oracle: Arc<dyn LatencyOracle> = match calibrated_for(state, &key, &db)? {
+            Some(cal) => cal,
+            None => db,
+        };
+        legs.push((ClusterSpec::new(gpu, gpn, nodes), oracle));
     }
 
     let spec = crate::planner::PlanSpec {
@@ -451,7 +547,7 @@ fn handle_plan_request(req: &Json, state: &State) -> anyhow::Result<Json> {
         prune: p.bool_or("prune", true),
     };
     let fleet: Vec<(ClusterSpec, &dyn LatencyOracle)> =
-        legs.iter().map(|(c, d)| (*c, d.as_ref() as &dyn LatencyOracle)).collect();
+        legs.iter().map(|(c, d)| (*c, d.as_ref())).collect();
     let plan = crate::planner::plan(&model, fw, &spec, &fleet)?;
 
     let mut resp = Json::obj();
@@ -701,6 +797,50 @@ mod tests {
         let mut req2 = make_request(&wl, "h100", 8, 1, Framework::TrtLlm, 1);
         req2.set("modes", Json::Arr(vec![json::s("warp-drive")]));
         assert!(handle_request(&req2, &st).is_err());
+    }
+
+    #[test]
+    fn calibrated_state_reports_tiers_for_matching_context_only() {
+        use crate::models::Dtype;
+        // Fit an artifact for the llama3.1-8b/h100/trtllm/fp8 context.
+        let cluster = ClusterSpec::new(gpu_by_name("h100").unwrap(), 8, 1);
+        let sil = Silicon::new(cluster, Framework::TrtLlm.profile());
+        let model = by_name("llama3.1-8b").unwrap();
+        let db = PerfDatabase::build(&sil, &model, Dtype::Fp8, 1);
+        let sets = crate::perfdb::measure::synthesize(&sil, &model, Dtype::Fp8, 3, 12);
+        let art = crate::perfdb::calibrate::fit(&db, &sets).unwrap();
+        let st = State::with_calibration(1, art);
+
+        let wl = WorkloadSpec::new("llama3.1-8b", 512, 64, 2000.0, 5.0);
+        let resp =
+            handle_request(&make_request(&wl, "h100", 8, 1, Framework::TrtLlm, 1), &st).unwrap();
+        assert_eq!(resp.req_str("status").unwrap(), "ok");
+        let tiers = resp.req("tiers").unwrap();
+        assert!(
+            tiers.req_f64("calibrated").unwrap() + tiers.req_f64("measured").unwrap() > 0.0,
+            "calibrated context must answer through the calibrated tiers"
+        );
+        // The composition is cached, and each request gets a private
+        // accounting scope: an identical second request reports the
+        // same tier volume, not a cumulative one.
+        let resp_again =
+            handle_request(&make_request(&wl, "h100", 8, 1, Framework::TrtLlm, 2), &st).unwrap();
+        assert_eq!(st.cals.lock().unwrap().len(), 1);
+        let t2 = resp_again.req("tiers").unwrap();
+        let total = |t: &Json| {
+            t.req_f64("measured").unwrap()
+                + t.req_f64("calibrated").unwrap()
+                + t.req_f64("analytic").unwrap()
+                + t.req_f64("sol").unwrap()
+        };
+        assert_eq!(total(tiers), total(t2), "tier counts must be per-request");
+        // A different model context stays analytic — no tiers reported.
+        let wl2 = WorkloadSpec::new("qwen3-32b", 512, 64, 2000.0, 5.0);
+        let resp2 =
+            handle_request(&make_request(&wl2, "h100", 8, 1, Framework::TrtLlm, 3), &st).unwrap();
+        assert_eq!(resp2.req_str("status").unwrap(), "ok");
+        assert!(resp2.get("tiers").is_none());
+        assert_eq!(st.cals.lock().unwrap().len(), 1);
     }
 
     #[test]

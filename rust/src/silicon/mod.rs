@@ -10,8 +10,12 @@
 //!
 //! Everything downstream treats this module as *opaque hardware*: the
 //! PerfDatabase only observes it through noisy grid profiling
-//! ([`crate::perfdb::builder`]), and the discrete-event simulator uses it
-//! directly (plus jitter) as the stand-in for real engine runs.
+//! ([`crate::perfdb::builder`]), the measurement synthesizer samples it
+//! through the same noise model to emit external measurement sets
+//! ([`crate::perfdb::measure`] — the committed set under
+//! `artifacts/measurements/` is a biased mirror of these kernels), and
+//! the discrete-event simulator uses it directly (plus jitter) as the
+//! stand-in for real engine runs.
 
 pub mod attention;
 pub mod comm;

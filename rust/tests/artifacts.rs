@@ -1,0 +1,194 @@
+//! Schema checks for every committed JSON artifact (the CI
+//! `artifacts-validate` job): `BENCH_*.json` at the repo root, the
+//! kernel-measurement sets under `artifacts/measurements/`, any
+//! committed calibration artifacts under `artifacts/calibration/`, and
+//! the AOT manifest if present — so a hand-edited file fails CI with a
+//! named path instead of silently rotting until a downstream consumer
+//! trips over it.
+
+use std::path::{Path, PathBuf};
+
+use aiconfigurator::hardware::gpu_by_name;
+use aiconfigurator::models::{by_name, Dtype};
+use aiconfigurator::frameworks::Framework;
+use aiconfigurator::perfdb::measure;
+use aiconfigurator::perfdb::CalibrationArtifact;
+use aiconfigurator::runtime::Manifest;
+use aiconfigurator::util::json::{self, Json};
+
+fn repo_root() -> PathBuf {
+    // CARGO_MANIFEST_DIR is <repo>/rust.
+    Path::new(env!("CARGO_MANIFEST_DIR")).parent().unwrap().to_path_buf()
+}
+
+/// Every `BENCH_*.json` at the repo root must be a flat object with a
+/// `bench` name string; metric values are numbers, strings, bools,
+/// nulls or arrays of those (pending benches commit nulls until a
+/// toolchain-equipped machine overwrites them with measured medians).
+#[test]
+fn bench_artifacts_are_wellformed() {
+    let root = repo_root();
+    let mut found = 0;
+    for entry in std::fs::read_dir(&root).unwrap() {
+        let path = entry.unwrap().path();
+        let name = path.file_name().unwrap().to_string_lossy().to_string();
+        if !(name.starts_with("BENCH_") && name.ends_with(".json")) {
+            continue;
+        }
+        found += 1;
+        let txt = std::fs::read_to_string(&path).unwrap();
+        let j = json::parse(&txt).unwrap_or_else(|e| panic!("{name}: invalid JSON: {e}"));
+        assert!(
+            j.req_str("bench").is_ok(),
+            "{name}: missing required string field 'bench'"
+        );
+        let Json::Obj(map) = &j else {
+            panic!("{name}: top level must be an object");
+        };
+        for (k, v) in map {
+            let flat_ok = |x: &Json| {
+                matches!(x, Json::Null | Json::Bool(_) | Json::Num(_) | Json::Str(_))
+            };
+            let ok = match v {
+                Json::Arr(items) => items.iter().all(flat_ok),
+                other => flat_ok(other),
+            };
+            assert!(ok, "{name}: field '{k}' must be a flat value or array of flat values");
+        }
+    }
+    assert!(found >= 1, "no BENCH_*.json found at {}", root.display());
+}
+
+/// The committed BENCH_plan.json placeholder (or its measured
+/// overwrite) must keep the keys benches/planner.rs writes.
+#[test]
+fn bench_plan_keeps_its_contract() {
+    let txt = std::fs::read_to_string(repo_root().join("BENCH_plan.json")).unwrap();
+    let j = json::parse(&txt).unwrap();
+    assert_eq!(j.req_str("bench").unwrap(), "planner");
+    for key in [
+        "cold_plan_ms_median",
+        "warm_plan_ms_median",
+        "warm_speedup",
+        "total_cost_usd",
+        "static_peak_cost_usd",
+        "options_considered",
+        "options_pruned",
+    ] {
+        let v = j.req(key).unwrap_or_else(|e| panic!("BENCH_plan.json: {e}"));
+        assert!(
+            matches!(v, Json::Null | Json::Num(_)),
+            "BENCH_plan.json: '{key}' must be a number or null (pending)"
+        );
+    }
+}
+
+/// Every measurement set under artifacts/measurements/<gpu>/ parses,
+/// validates, names a known context, and matches its directory/file
+/// placement (measure::load_dir enforces gpu + table-name agreement).
+#[test]
+fn measurement_sets_validate() {
+    let dir = repo_root().join("artifacts").join("measurements");
+    assert!(
+        dir.is_dir(),
+        "artifacts/measurements is committed by this repo and must exist"
+    );
+    let mut gpus = 0;
+    for entry in std::fs::read_dir(&dir).unwrap() {
+        let gpu_dir = entry.unwrap().path();
+        if !gpu_dir.is_dir() {
+            continue;
+        }
+        gpus += 1;
+        let gpu = gpu_dir.file_name().unwrap().to_string_lossy().to_string();
+        assert!(
+            gpu_by_name(&gpu).is_some(),
+            "measurement dir '{gpu}' does not name a known GPU"
+        );
+        let sets = measure::load_dir(&dir, &gpu)
+            .unwrap_or_else(|e| panic!("loading measurements for {gpu}: {e}"));
+        assert!(!sets.is_empty());
+        for set in &sets {
+            assert!(
+                by_name(&set.model).is_some(),
+                "{gpu}/{}: unknown model '{}'",
+                set.table.name(),
+                set.model
+            );
+            assert!(
+                Framework::parse(&set.framework).is_some(),
+                "{gpu}/{}: unknown framework '{}'",
+                set.table.name(),
+                set.framework
+            );
+            assert!(
+                Dtype::parse(&set.kv_dtype).is_some(),
+                "{gpu}/{}: unknown kv dtype '{}'",
+                set.table.name(),
+                set.kv_dtype
+            );
+            assert!(
+                !set.entries.is_empty(),
+                "{gpu}/{}: empty measurement set",
+                set.table.name()
+            );
+        }
+    }
+    assert!(gpus >= 1, "artifacts/measurements has no <gpu> directories");
+}
+
+/// Committed calibration artifacts (if any) must load — version, grid
+/// shape, fit tables and measured cells are all validated by
+/// CalibrationArtifact::load.
+#[test]
+fn calibration_artifacts_validate() {
+    let dir = repo_root().join("artifacts").join("calibration");
+    if !dir.is_dir() {
+        return; // none committed (CI writes its own under rust/target)
+    }
+    for entry in std::fs::read_dir(&dir).unwrap() {
+        let path = entry.unwrap().path();
+        if path.extension().is_some_and(|x| x == "json") {
+            CalibrationArtifact::load(&path)
+                .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+        }
+    }
+}
+
+/// The AOT manifest (if `make artifacts` has been run) must agree with
+/// the compiled-in grid geometry.
+#[test]
+fn aot_manifest_matches_contract_when_present() {
+    let path = repo_root().join("artifacts").join("manifest.json");
+    if !path.exists() {
+        return;
+    }
+    let m = Manifest::load(&path).unwrap();
+    m.check_contract().unwrap();
+}
+
+/// Catch-all: every .json anywhere under artifacts/ at least parses.
+#[test]
+fn all_artifact_json_parses() {
+    fn walk(dir: &Path, out: &mut Vec<PathBuf>) {
+        for entry in std::fs::read_dir(dir).unwrap() {
+            let p = entry.unwrap().path();
+            if p.is_dir() {
+                walk(&p, out);
+            } else if p.extension().is_some_and(|x| x == "json") {
+                out.push(p);
+            }
+        }
+    }
+    let dir = repo_root().join("artifacts");
+    if !dir.is_dir() {
+        return;
+    }
+    let mut files = Vec::new();
+    walk(&dir, &mut files);
+    assert!(!files.is_empty(), "artifacts/ exists but holds no JSON");
+    for p in files {
+        let txt = std::fs::read_to_string(&p).unwrap();
+        json::parse(&txt).unwrap_or_else(|e| panic!("{}: invalid JSON: {e}", p.display()));
+    }
+}

@@ -7,7 +7,7 @@ use aiconfigurator::service::{make_request, Client, SearchServer, ServerConfig};
 use aiconfigurator::util::json;
 
 fn start_server() -> (std::net::SocketAddr, std::sync::Arc<std::sync::atomic::AtomicBool>, std::thread::JoinHandle<anyhow::Result<()>>) {
-    let cfg = ServerConfig { addr: "127.0.0.1:0".into(), artifacts: None, seed: 7 };
+    let cfg = ServerConfig { addr: "127.0.0.1:0".into(), artifacts: None, calibration: None, seed: 7 };
     let (server, addr) = SearchServer::bind(&cfg, None).unwrap();
     let stop = server.stopper();
     let handle = std::thread::spawn(move || server.run());

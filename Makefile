@@ -6,8 +6,11 @@
 #   make calibrate-smoke     fit the committed measurements end-to-end and
 #                            assert post-fit MAPE < pre-fit MAPE per table
 #   make measurements        regenerate artifacts/measurements (python)
+#   make topo-smoke topology gate: every fabric preset's cost tables +
+#                   a fabric-aware search end-to-end (mirrors CI)
 #   make bench      search-engine benches (table1_search + sweep)
 #   make bench-plan capacity-planner bench (writes BENCH_plan.json)
+#   make bench-topo topology bench (writes BENCH_topology.json)
 #   make bench-all  every bench target
 #   make artifacts  AOT-lower the Pallas kernels to HLO (needs jax; the
 #                   Rust side degrades gracefully when absent)
@@ -16,8 +19,8 @@
 RUST_DIR := rust
 PYTHON   ?= python3
 
-.PHONY: verify build test gen-smoke artifacts-validate calibrate-smoke measurements \
-        bench bench-plan bench-all artifacts fmt clippy clean
+.PHONY: verify build test gen-smoke artifacts-validate calibrate-smoke topo-smoke \
+        measurements bench bench-plan bench-topo bench-all artifacts fmt clippy clean
 
 verify:
 	cd $(RUST_DIR) && cargo build --release && cargo test -q
@@ -40,6 +43,16 @@ calibrate-smoke:
 		--isl 4000 --osl 500 --ttft 2000 --speed 10 \
 		--calibration target/calibration/h100-sxm.json
 
+topo-smoke:
+	cd $(RUST_DIR) && cargo run --release -- topo --fabric all --gpu h100 --nodes 4
+	cd $(RUST_DIR) && cargo run --release -- search \
+		--model qwen3-32b --gpu gb200-nvl72 --fabric gb200-nvl72 \
+		--gpus-per-node 4 --nodes 4 \
+		--isl 4000 --osl 500 --ttft 2000 --speed 10
+	cd $(RUST_DIR) && cargo run --release -- search \
+		--model qwen3-32b --gpu h100 --fabric hgx-h100 --nodes 2 \
+		--isl 2048 --osl 256
+
 measurements:
 	$(PYTHON) python/measurements/synth.py
 
@@ -56,7 +69,10 @@ bench:
 bench-plan:
 	cd $(RUST_DIR) && cargo bench --bench planner
 
-bench-all: bench bench-plan
+bench-topo:
+	cd $(RUST_DIR) && cargo bench --bench topology
+
+bench-all: bench bench-plan bench-topo
 	cd $(RUST_DIR) && cargo bench --bench interp_hot_path
 	cd $(RUST_DIR) && cargo bench --bench calibration
 	cd $(RUST_DIR) && cargo bench --bench simulator

@@ -23,7 +23,8 @@ fn main() {
         let mut eng = EngineConfig{ framework: Framework::TrtLlm,
             parallel: ParallelSpec{tp,pp:1,ep,dp:1}, batch: conc,
             weight_dtype: Dtype::Fp8, kv_dtype: Dtype::Fp8,
-            flags: RuntimeFlags::defaults_for(Framework::TrtLlm)};
+            flags: RuntimeFlags::defaults_for(Framework::TrtLlm),
+            placement: aiconfigurator::topology::Placement::packed()};
         eng.batch = conc;
         if !SearchSpace::layout_valid(&model, &cluster, &eng.parallel) ||
            !memory::fits(&model, cluster.gpu.mem_bytes(), &eng, isl, osl) { continue; }

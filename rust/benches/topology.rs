@@ -1,0 +1,108 @@
+//! Bench: topology subsystem — placement enumeration over a parallel
+//! shape grid, and the structural-grid build with the placement axis on
+//! (tiered 2-node fabric) vs off (legacy), which bounds the search-side
+//! cost of pricing placements.
+//!
+//! Run: `cargo bench --bench topology` (or `make bench-topo`).
+//! Writes the measured medians to ../BENCH_topology.json.
+
+use aiconfigurator::config::ParallelSpec;
+use aiconfigurator::frameworks::Framework;
+use aiconfigurator::hardware::{h100_sxm, ClusterSpec};
+use aiconfigurator::models::by_name;
+use aiconfigurator::search::SearchSpace;
+use aiconfigurator::silicon::comm;
+use aiconfigurator::topology::{fabric, placement};
+use aiconfigurator::util::bench::{bench, black_box};
+use aiconfigurator::util::json::{self, Json};
+
+fn shape_grid() -> Vec<ParallelSpec> {
+    let mut shapes = Vec::new();
+    for tp in [1u32, 2, 4, 8, 16] {
+        for pp in [1u32, 2, 4] {
+            for ep in [1u32, 4, 8] {
+                if ep <= tp {
+                    shapes.push(ParallelSpec { tp, pp, ep, dp: 1 });
+                }
+            }
+        }
+    }
+    shapes
+}
+
+fn main() {
+    let shapes = shape_grid();
+    let fabrics = fabric::all();
+    let clusters: Vec<ClusterSpec> = fabrics
+        .iter()
+        .map(|f| ClusterSpec::with_fabric(h100_sxm(), 8, 4, *f))
+        .collect();
+
+    // 1. Placement enumeration across every preset × shape.
+    let mut placements_total = 0usize;
+    for c in &clusters {
+        for p in &shapes {
+            placements_total += placement::enumerate(c, p).len();
+        }
+    }
+    let enumerate = bench(
+        &format!("placement-enumerate/{}shapes-x{}fabrics", shapes.len(), fabrics.len()),
+        10,
+        50,
+        || {
+            for c in &clusters {
+                for p in &shapes {
+                    black_box(placement::enumerate(c, p));
+                }
+            }
+        },
+    );
+
+    // 2. Collective pricing over the placed paths (the per-candidate
+    // hot cost the search pays on tiered fabrics).
+    let hgx = ClusterSpec::with_fabric(h100_sxm(), 8, 4, fabric::hgx_h100());
+    let price = bench("collective-price/hgx-h100-16gpu", 10, 50, || {
+        for bytes in [4096.0, 1048576.0, 3.3e7, 1e9] {
+            black_box(comm::allreduce_placed_us(&hgx, bytes, 16, 2, 4));
+            black_box(comm::alltoall_placed_us(&hgx, bytes, 16, 2, 4));
+            black_box(comm::allgather_placed_us(&hgx, bytes, 16, 2, 4));
+        }
+    });
+
+    // 3. Structural-grid build: placement axis on vs off.
+    let model = by_name("qwen3-32b").unwrap();
+    let space = SearchSpace::default_for(&model, Framework::TrtLlm);
+    let legacy = ClusterSpec::new(h100_sxm(), 8, 2);
+    let tiered = ClusterSpec::with_fabric(h100_sxm(), 8, 2, fabric::hgx_h100());
+    let wl = aiconfigurator::config::WorkloadSpec::new("qwen3-32b", 2048, 256, 2000.0, 20.0);
+    let grid_legacy = bench("engine-grid/legacy-2node", 3, 20, || {
+        black_box(space.engine_grid(&model, &legacy, &wl));
+    });
+    let grid_tiered = bench("engine-grid/hgx-h100-2node", 3, 20, || {
+        black_box(space.engine_grid(&model, &tiered, &wl));
+    });
+    let n_legacy = space.engine_grid(&model, &legacy, &wl).len();
+    let n_tiered = space.engine_grid(&model, &tiered, &wl).len();
+    println!(
+        "    -> grid {} engines (legacy) vs {} engines (tiered, placement axis on)",
+        n_legacy, n_tiered
+    );
+
+    // Record the run (cwd is rust/ under `cargo bench`).
+    let mut o = Json::obj();
+    o.set("bench", json::s("topology"))
+        .set(
+            "fabrics",
+            Json::Arr(fabrics.iter().map(|f| json::s(f.name)).collect()),
+        )
+        .set("shapes", json::num(shapes.len() as f64))
+        .set("placements_total", json::num(placements_total as f64))
+        .set("enumerate_ms_median", json::num(enumerate.median_ms()))
+        .set("collective_price_ms_median", json::num(price.median_ms()))
+        .set("grid_legacy_ms_median", json::num(grid_legacy.median_ms()))
+        .set("grid_tiered_ms_median", json::num(grid_tiered.median_ms()))
+        .set("grid_legacy_engines", json::num(n_legacy as f64))
+        .set("grid_tiered_engines", json::num(n_tiered as f64));
+    std::fs::write("../BENCH_topology.json", o.to_string()).expect("write BENCH_topology.json");
+    println!("    -> wrote ../BENCH_topology.json");
+}

@@ -5,6 +5,7 @@
 
 use crate::frameworks::Framework;
 use crate::models::Dtype;
+use crate::topology::Placement;
 use crate::util::json::{self, Json};
 
 /// Serving architectures modeled by AIConfigurator (paper Fig 3).
@@ -123,17 +124,27 @@ pub struct EngineConfig {
     /// KV-cache dtype.
     pub kv_dtype: Dtype,
     pub flags: RuntimeFlags,
+    /// Where the parallel groups land on the fabric
+    /// ([`crate::topology::placement::enumerate`]). [`Placement::packed`]
+    /// on legacy fabrics — the seed's implicit layout.
+    pub placement: Placement,
 }
 
 impl EngineConfig {
     pub fn label(&self) -> String {
+        let place = if self.placement == Placement::packed() {
+            String::new()
+        } else {
+            format!("-{}", self.placement.label())
+        };
         format!(
-            "{}-{}-b{}-{}{}",
+            "{}-{}-b{}-{}{}{}",
             self.framework.name(),
             self.parallel.label(),
             self.batch,
             self.weight_dtype.name(),
             if self.flags.cuda_graph { "" } else { "-nograph" },
+            place,
         )
     }
 }
@@ -281,6 +292,7 @@ mod tests {
             weight_dtype: Dtype::Fp8,
             kv_dtype: Dtype::Fp8,
             flags: RuntimeFlags::defaults_for(Framework::TrtLlm),
+            placement: Placement::packed(),
         };
         let agg = Candidate::Aggregated { engine: e, replicas: 4 };
         assert_eq!(agg.total_gpus(), 8);

@@ -43,6 +43,7 @@ pub fn engine(fw: Framework, tp: u32, ep: u32, batch: u32) -> EngineConfig {
         weight_dtype: Dtype::Fp8,
         kv_dtype: Dtype::Fp8,
         flags: RuntimeFlags::defaults_for(fw),
+        placement: crate::topology::Placement::packed(),
     }
 }
 

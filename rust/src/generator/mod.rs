@@ -40,8 +40,8 @@ pub fn generate(cand: &Candidate, model_hf_id: &str, wl: &WorkloadSpec) -> Launc
             files.push((
                 "README.launch.md".to_string(),
                 format!(
-                    "# AIConfigurator recommendation\n\nMode: aggregated, {replicas} replica(s) of {}\nWorkload: ISL={} OSL={} | SLA: TTFT<={}ms speed>={} tok/s/user\n",
-                    engine.label(), wl.isl, wl.osl, wl.sla.ttft_ms, wl.sla.min_speed
+                    "# AIConfigurator recommendation\n\nMode: aggregated, {replicas} replica(s) of {}\nPlacement: {}\nWorkload: ISL={} OSL={} | SLA: TTFT<={}ms speed>={} tok/s/user\n",
+                    engine.label(), engine.placement.label(), wl.isl, wl.osl, wl.sla.ttft_ms, wl.sla.min_speed
                 ),
             ));
             LaunchBundle { files }
@@ -87,6 +87,7 @@ mod tests {
                 max_num_tokens: 8192,
                 chunked_prefill: true,
             },
+            placement: crate::topology::Placement::packed(),
         }
     }
 

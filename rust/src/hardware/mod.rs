@@ -8,6 +8,7 @@
 //! (DESIGN.md).
 
 use crate::models::Dtype;
+use crate::topology::FabricSpec;
 
 /// A single GPU's performance envelope.
 #[derive(Clone, Copy, Debug)]
@@ -145,14 +146,84 @@ pub fn b200() -> GpuSpec {
     }
 }
 
+/// NVIDIA B200 SXM 180GB (air-cooled HGX B200 board: slightly smaller
+/// HBM stack and lower sustained clocks than the reference `b200`).
+pub fn b200_sxm() -> GpuSpec {
+    GpuSpec {
+        name: "b200-sxm",
+        mem_gib: 180.0,
+        mem_bw_gbs: 7700.0,
+        fp16_tflops: 2250.0,
+        fp8_tflops: 4500.0,
+        int8_tops: 4500.0,
+        nvlink_gbs: 900.0,
+        sm_count: 148,
+        launch_us: 3.0,
+        usd_per_hour: 10.50,
+    }
+}
+
+/// NVIDIA GB200 (NVL72 rack, Blackwell + Grace): the liquid-cooled
+/// part behind the `gb200-nvl72` wide-domain fabric preset — higher
+/// sustained clocks and HBM3e than the air-cooled SXM boards.
+pub fn gb200_nvl72() -> GpuSpec {
+    GpuSpec {
+        name: "gb200-nvl72",
+        mem_gib: 186.0,
+        mem_bw_gbs: 8000.0,
+        fp16_tflops: 2450.0,
+        fp8_tflops: 4900.0,
+        int8_tops: 4900.0,
+        nvlink_gbs: 900.0,
+        sm_count: 148,
+        launch_us: 3.0,
+        usd_per_hour: 13.50,
+    }
+}
+
 pub fn gpu_by_name(name: &str) -> Option<GpuSpec> {
     match name.to_ascii_lowercase().as_str() {
         "a100" | "a100-sxm" => Some(a100_sxm()),
         "h100" | "h100-sxm" => Some(h100_sxm()),
         "h200" | "h200-sxm" => Some(h200_sxm()),
         "b200" => Some(b200()),
+        "b200-sxm" => Some(b200_sxm()),
+        "gb200" | "gb200-nvl72" => Some(gb200_nvl72()),
         _ => None,
     }
+}
+
+/// One parsed fleet-leg spec: `GPU[@FABRIC]`.
+#[derive(Clone, Debug)]
+pub struct FleetLeg {
+    pub gpu: GpuSpec,
+    pub fabric: crate::topology::FabricSpec,
+    /// The GPU token exactly as given (aliases preserved — service
+    /// cache keys use it, so "h100" and "h100-sxm" behave as the
+    /// caller wrote them).
+    pub gpu_name: String,
+    pub fabric_name: String,
+}
+
+/// Parse a fleet-leg spec `GPU[@FABRIC]` — one grammar shared by the
+/// CLI's `--fleet` and the service's `"fleet"` entries, so the two
+/// surfaces can never drift. A bare GPU name keeps the legacy flat
+/// topology.
+pub fn parse_fleet_leg(spec: &str, gpus_per_node: u32) -> anyhow::Result<FleetLeg> {
+    let (gpu_name, fabric_name) = match spec.split_once('@') {
+        Some((g, f)) => (g, f),
+        None => (spec, "legacy"),
+    };
+    let gpu = gpu_by_name(gpu_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown gpu '{gpu_name}' in fleet"))?;
+    let fabric = crate::topology::fabric::by_name(fabric_name, gpus_per_node)
+        .ok_or_else(|| anyhow::anyhow!("unknown fabric '{fabric_name}' in fleet"))?;
+    Ok(FleetLeg {
+        gpu,
+        fabric,
+        gpu_name: gpu_name.to_string(),
+        fabric_name: fabric_name.to_string(),
+    })
 }
 
 /// Link class a collective runs over — decides effective bandwidth.
@@ -164,35 +235,57 @@ pub enum LinkKind {
     InfiniBand,
 }
 
-/// A homogeneous cluster: `num_nodes` nodes of `gpus_per_node` GPUs.
+/// A homogeneous cluster: `num_nodes` nodes of `gpus_per_node` GPUs,
+/// wired by a [`FabricSpec`].
 #[derive(Clone, Copy, Debug)]
 pub struct ClusterSpec {
     pub gpu: GpuSpec,
     pub gpus_per_node: u32,
     pub num_nodes: u32,
-    /// Per-GPU InfiniBand bandwidth (unidirectional), GB/s.
-    /// 400 Gb/s NDR per GPU = 50 GB/s.
-    pub ib_gbs: f64,
-    /// Base latency of an IB hop, microseconds.
-    pub ib_latency_us: f64,
-    /// Base latency of an NVLink hop, microseconds.
-    pub nvlink_latency_us: f64,
+    /// The interconnect tiers (NVLink-domain width, intra-node link,
+    /// IB rails, optional pod fabric). [`ClusterSpec::new`] installs
+    /// the legacy back-compat fabric — the seed's three hard-coded
+    /// link constants, priced bit-for-bit by the legacy flat model.
+    pub fabric: FabricSpec,
 }
 
 impl ClusterSpec {
+    /// Back-compat constructor: the seed's flat NVLink-vs-IB topology
+    /// (one 50 GB/s IB rail at 8 µs, NVLink at 2 µs, domain = node).
+    /// Pinned equivalent to the pre-fabric behavior in
+    /// `tests/topology.rs`.
     pub fn new(gpu: GpuSpec, gpus_per_node: u32, num_nodes: u32) -> Self {
-        ClusterSpec {
-            gpu,
-            gpus_per_node,
-            num_nodes,
-            ib_gbs: 50.0,
-            ib_latency_us: 8.0,
-            nvlink_latency_us: 2.0,
-        }
+        Self::with_fabric(gpu, gpus_per_node, num_nodes, FabricSpec::legacy(gpus_per_node))
+    }
+
+    /// A cluster wired by an explicit fabric (the `--fabric` path).
+    pub fn with_fabric(
+        gpu: GpuSpec,
+        gpus_per_node: u32,
+        num_nodes: u32,
+        fabric: FabricSpec,
+    ) -> Self {
+        ClusterSpec { gpu, gpus_per_node, num_nodes, fabric }
     }
 
     pub fn total_gpus(&self) -> u32 {
         self.gpus_per_node * self.num_nodes
+    }
+
+    /// GPUs reachable over the fast (NVLink/PCIe) tier from one GPU —
+    /// the NVLink-domain width clamped to the cluster.
+    pub fn domain_size(&self) -> u32 {
+        self.fabric.nvlink_domain.min(self.total_gpus()).max(1)
+    }
+
+    /// Intra-domain bandwidth, GB/s: the fabric's tier override (PCIe
+    /// boxes) or the GPU's own NVLink datasheet number.
+    pub fn nvlink_bw_gbs(&self) -> f64 {
+        if self.fabric.intra_gbs > 0.0 {
+            self.fabric.intra_gbs
+        } else {
+            self.gpu.nvlink_gbs
+        }
     }
 
     /// On-demand price of the whole cluster, USD per hour.
@@ -200,9 +293,10 @@ impl ClusterSpec {
         self.gpu.usd_per_hour * self.total_gpus() as f64
     }
 
-    /// Which link class a `gpus`-wide collective uses.
+    /// Which link class a `gpus`-wide (naturally packed) collective
+    /// uses.
     pub fn link_for(&self, gpus: u32) -> LinkKind {
-        if gpus <= self.gpus_per_node {
+        if gpus <= self.domain_size() {
             LinkKind::NvLink
         } else {
             LinkKind::InfiniBand
@@ -212,15 +306,15 @@ impl ClusterSpec {
     /// Effective point-to-point bandwidth between two specific GPUs.
     pub fn p2p_bw_gbs(&self, link: LinkKind) -> f64 {
         match link {
-            LinkKind::NvLink => self.gpu.nvlink_gbs,
-            LinkKind::InfiniBand => self.ib_gbs,
+            LinkKind::NvLink => self.nvlink_bw_gbs(),
+            LinkKind::InfiniBand => self.fabric.rail_gbs,
         }
     }
 
     pub fn link_latency_us(&self, link: LinkKind) -> f64 {
         match link {
-            LinkKind::NvLink => self.nvlink_latency_us,
-            LinkKind::InfiniBand => self.ib_latency_us,
+            LinkKind::NvLink => self.fabric.intra_latency_us,
+            LinkKind::InfiniBand => self.fabric.ib_latency_us,
         }
     }
 }
@@ -231,10 +325,42 @@ mod tests {
 
     #[test]
     fn registry() {
-        for n in ["a100", "h100", "h200", "b200"] {
-            assert!(gpu_by_name(n).is_some());
+        for n in ["a100", "h100", "h200", "b200", "b200-sxm", "gb200-nvl72", "gb200"] {
+            assert!(gpu_by_name(n).is_some(), "{n} missing from the registry");
         }
         assert!(gpu_by_name("v100").is_none());
+    }
+
+    #[test]
+    fn blackwell_presets_have_matching_silicon_for_wide_fabrics() {
+        // The gb200-nvl72 fabric preset needs silicon whose NVLink
+        // tier actually spans the 72-GPU domain, and the SXM part must
+        // stay the cheaper, slightly narrower board.
+        let gb = gb200_nvl72();
+        assert_eq!(gb.name, "gb200-nvl72");
+        assert!(gb.supports(Dtype::Fp8) && gb.fp8_tflops > b200().fp8_tflops);
+        assert!(gb.nvlink_gbs >= 900.0);
+        let sxm = b200_sxm();
+        assert!(sxm.mem_gib < b200().mem_gib);
+        assert!(sxm.usd_per_hour < b200().usd_per_hour);
+        assert!(gb.usd_per_hour > b200().usd_per_hour);
+        // Cost accounting flows through clusters like every other part.
+        let c = ClusterSpec::new(gb, 4, 18); // 72 GPUs, one NVL72 rack
+        assert_eq!(c.total_gpus(), 72);
+        assert_eq!(c.usd_per_hour(), 72.0 * gb.usd_per_hour);
+    }
+
+    #[test]
+    fn fleet_leg_grammar() {
+        let leg = parse_fleet_leg("h100", 8).unwrap();
+        assert_eq!(leg.gpu.name, "h100-sxm");
+        assert_eq!(leg.fabric.name, "legacy");
+        assert_eq!(leg.gpu_name, "h100", "aliases are preserved verbatim");
+        let leg = parse_fleet_leg("a100@a100-pcie", 8).unwrap();
+        assert_eq!(leg.fabric.name, "a100-pcie");
+        assert!(leg.fabric.placement_aware());
+        assert!(parse_fleet_leg("h100@warp-fabric", 8).is_err());
+        assert!(parse_fleet_leg("v100", 8).is_err());
     }
 
     #[test]
@@ -260,7 +386,7 @@ mod tests {
 
     #[test]
     fn pricing_covers_every_preset_and_prices_clusters() {
-        for n in ["a100", "h100", "h200", "b200"] {
+        for n in ["a100", "h100", "h200", "b200", "b200-sxm", "gb200-nvl72"] {
             assert!(gpu_by_name(n).unwrap().usd_per_hour > 0.0, "{n} has no price");
         }
         // Newer platforms list higher (the planner trades that against

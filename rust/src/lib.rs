@@ -29,5 +29,6 @@ pub mod search;
 pub mod service;
 pub mod silicon;
 pub mod simulator;
+pub mod topology;
 pub mod util;
 pub mod workload;

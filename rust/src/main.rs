@@ -41,19 +41,25 @@ aiconfigurator — lightning-fast LLM serving configuration search (reproduction
 
 USAGE:
   aiconfigurator search     --model <name> [--gpu h100] [--gpus-per-node 8]
-                            [--nodes 1] [--framework trtllm] --isl N --osl N
+                            [--nodes 1] [--fabric NAME] [--framework trtllm]
+                            --isl N --osl N
                             [--ttft MS] [--speed TOK_S] [--modes agg,disagg]
                             [--top 5] [--prune] [--out-dir DIR]
                             [--flag-sweep] [--max-num-tokens N[,N...]]
                             [--kv-frac F[,F...]] [--cuda-graph on|off|both]
                             [--pjrt ARTIFACTS_DIR] [--calibration FILE.json]
   aiconfigurator sweep      --model <name> [--gpu h100] [--gpus-per-node 8]
-                            [--nodes 1] [--framework trtllm] [--prune]
-                            [--modes agg,disagg] [--flag-sweep]
+                            [--nodes 1] [--fabric NAME] [--framework trtllm]
+                            [--prune] [--modes agg,disagg] [--flag-sweep]
                             [--max-num-tokens N[,N...]] [--kv-frac F[,F...]]
                             [--cuda-graph on|off|both] [--calibration FILE.json]
                             --scenarios ISL:OSL:TTFT:SPEED[,ISL:OSL:TTFT:SPEED...]
                             (TTFT in ms or 'inf'; SPEED in tokens/s/user or 0)
+  aiconfigurator topo       [--fabric NAME|all] [--gpu h100] [--gpus-per-node 8]
+                            [--nodes 2] [--group 16]
+                            (prints each fabric preset, the placements it
+                             enumerates for sample parallel shapes, and the
+                             per-collective per-algorithm cost tables)
   aiconfigurator calibrate  --model <name> [--gpu h100] [--framework trtllm]
                             --measurements DIR (layout DIR/<gpu>/<table>.json)
                             [--out ARTIFACT.json] [--report FIDELITY.json]
@@ -66,7 +72,8 @@ USAGE:
                              --check-improves exits non-zero unless post-fit
                              MAPE < pre-fit MAPE for every table — the CI
                              calibration-smoke gate)
-  aiconfigurator plan       --model <name> [--fleet h100,a100] [--gpus-per-node 8]
+  aiconfigurator plan       --model <name> [--fleet h100,a100@a100-pcie]
+                            [--gpus-per-node 8]
                             [--nodes 1] [--framework trtllm] --isl N --osl N
                             [--ttft MS] [--speed TOK_S]
                             --traffic diurnal|ramp|bursty
@@ -89,7 +96,13 @@ USAGE:
                             [--model <name> --gpu h100 --framework trtllm]
 
 Models: llama3.1-8b qwen3-32b qwen3-235b deepseek-v3 mixtral-8x7b gpt-oss-120b
-GPUs:   a100 h100 h200 b200    Frameworks: trtllm vllm sglang
+GPUs:   a100 h100 h200 b200 b200-sxm gb200-nvl72    Frameworks: trtllm vllm sglang
+Fabrics: legacy (default) hgx-h100 gb200-nvl72 a100-pcie dgx-multirail
+         (--fabric switches to tiered, placement-aware pricing: the
+          search then enumerates rank layouts — TP inside vs spanning
+          NVLink domains, rail striping — as a structural axis and the
+          chosen placement is reported and emitted; `plan` fleet legs
+          take per-leg fabrics as GPU@FABRIC)
 
 Flags accept both '--key value' and '--key=value'.
 Launch flags (kv-cache fraction, max-num-tokens, CUDA graphs, chunked
@@ -120,6 +133,7 @@ fn main() {
     let result = match cmd.as_str() {
         "search" => cmd_search(&flags),
         "sweep" => cmd_sweep(&flags),
+        "topo" => cmd_topo(&flags),
         "plan" => cmd_plan(&flags),
         "calibrate" => cmd_calibrate(&flags),
         "build-db" => cmd_build_db(&flags),
@@ -184,11 +198,77 @@ fn flag_f64(f: &HashMap<String, String>, k: &str, default: f64) -> anyhow::Resul
     }
 }
 
+/// The one comma-list value parser: every list-valued option
+/// (`--max-num-tokens`, `--kv-frac`, `--scenarios`, `--fleet`, `topo`'s
+/// shape lists) goes through here, so a new option can never fork the
+/// `--key=value` list grammar again (it used to be re-implemented per
+/// flag).
+fn parse_list<T>(
+    raw: &str,
+    what: &str,
+    parse: impl Fn(&str) -> anyhow::Result<T>,
+) -> anyhow::Result<Vec<T>> {
+    let items: Vec<T> = raw
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(&parse)
+        .collect::<anyhow::Result<Vec<T>>>()
+        .map_err(|e| anyhow::anyhow!("--{what}: {e:#}"))?;
+    anyhow::ensure!(!items.is_empty(), "--{what} named no values");
+    Ok(items)
+}
+
+/// Table of the search-space list flags: (flag name, setter). Driven by
+/// [`apply_space_flags`]; each setter funnels through [`parse_list`].
+type SpaceFlagSetter = fn(&mut SearchSpace, &str) -> anyhow::Result<()>;
+const SPACE_LIST_FLAGS: &[(&str, SpaceFlagSetter)] = &[
+    ("max-num-tokens", |space, v| {
+        space.max_num_tokens = parse_list(v, "max-num-tokens", |s| {
+            let n: u32 = s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("must be integers, got '{s}'"))?;
+            anyhow::ensure!(n >= 1, "values must be positive");
+            Ok(n)
+        })?;
+        Ok(())
+    }),
+    ("kv-frac", |space, v| {
+        space.kv_frac = parse_list(v, "kv-frac", |s| {
+            let x: f64 =
+                s.parse().map_err(|_| anyhow::anyhow!("must be numbers, got '{s}'"))?;
+            anyhow::ensure!(x > 0.0 && x <= 1.0, "values must be in (0, 1]");
+            Ok(x)
+        })?;
+        Ok(())
+    }),
+    ("cuda-graph", |space, v| {
+        space.cuda_graph = match v {
+            "on" | "true" | "1" => vec![true],
+            "off" | "false" | "0" => vec![false],
+            "both" => vec![true, false],
+            other => anyhow::bail!("--cuda-graph must be on|off|both, got '{other}'"),
+        };
+        Ok(())
+    }),
+];
+
 struct Ctx {
     model: aiconfigurator::models::ModelArch,
     cluster: ClusterSpec,
     framework: Framework,
     silicon: Silicon,
+}
+
+/// Resolve `--fabric` (default: the legacy flat topology) against a
+/// node width.
+fn fabric_flag(
+    f: &HashMap<String, String>,
+    gpus_per_node: u32,
+) -> anyhow::Result<aiconfigurator::topology::FabricSpec> {
+    let name = flag(f, "fabric", "legacy");
+    aiconfigurator::topology::fabric::by_name(name, gpus_per_node)
+        .ok_or_else(|| anyhow::anyhow!("unknown fabric '{name}' (see --help for presets)"))
 }
 
 fn load_ctx(f: &HashMap<String, String>) -> anyhow::Result<Ctx> {
@@ -197,8 +277,9 @@ fn load_ctx(f: &HashMap<String, String>) -> anyhow::Result<Ctx> {
         .ok_or_else(|| anyhow::anyhow!("unknown model '{model_name}' (see --help)"))?;
     let gpu_name = flag(f, "gpu", "h100");
     let gpu = gpu_by_name(gpu_name).ok_or_else(|| anyhow::anyhow!("unknown gpu '{gpu_name}'"))?;
+    let gpn = flag_u32(f, "gpus-per-node", 8)?;
     let cluster =
-        ClusterSpec::new(gpu, flag_u32(f, "gpus-per-node", 8)?, flag_u32(f, "nodes", 1)?);
+        ClusterSpec::with_fabric(gpu, gpn, flag_u32(f, "nodes", 1)?, fabric_flag(f, gpn)?);
     let fw_name = flag(f, "framework", "trtllm");
     let framework = Framework::parse(fw_name)
         .ok_or_else(|| anyhow::anyhow!("unknown framework '{fw_name}'"))?;
@@ -224,39 +305,10 @@ fn apply_space_flags(
     }
     aiconfigurator::search::ensure_searchable_modes(&space.modes)?;
     space.flag_sweep = f.contains_key("flag-sweep");
-    if let Some(v) = f.get("max-num-tokens") {
-        space.max_num_tokens = v
-            .split(',')
-            .map(|s| {
-                let n: u32 = s
-                    .trim()
-                    .parse()
-                    .map_err(|_| anyhow::anyhow!("--max-num-tokens must be integers, got '{s}'"))?;
-                anyhow::ensure!(n >= 1, "--max-num-tokens values must be positive");
-                Ok(n)
-            })
-            .collect::<anyhow::Result<Vec<u32>>>()?;
-    }
-    if let Some(v) = f.get("kv-frac") {
-        space.kv_frac = v
-            .split(',')
-            .map(|s| {
-                let x: f64 = s
-                    .trim()
-                    .parse()
-                    .map_err(|_| anyhow::anyhow!("--kv-frac must be numbers, got '{s}'"))?;
-                anyhow::ensure!(x > 0.0 && x <= 1.0, "--kv-frac values must be in (0, 1]");
-                Ok(x)
-            })
-            .collect::<anyhow::Result<Vec<f64>>>()?;
-    }
-    if let Some(v) = f.get("cuda-graph") {
-        space.cuda_graph = match v.as_str() {
-            "on" | "true" | "1" => vec![true],
-            "off" | "false" | "0" => vec![false],
-            "both" => vec![true, false],
-            other => anyhow::bail!("--cuda-graph must be on|off|both, got '{other}'"),
-        };
+    for (key, set) in SPACE_LIST_FLAGS {
+        if let Some(v) = f.get(*key) {
+            set(space, v)?;
+        }
     }
     Ok(())
 }
@@ -322,6 +374,11 @@ fn cmd_search(f: &HashMap<String, String>) -> anyhow::Result<()> {
             "--calibration is not supported with --pjrt: the AOT kernel interpolates the \
              analytic grids (drop one of the two flags)"
         );
+        anyhow::ensure!(
+            !f.contains_key("fabric"),
+            "--fabric is not supported with --pjrt: the AOT kernel prices the packed \
+             layout only (drop one of the two flags)"
+        );
         eprintln!("loading AOT artifacts from {dir} (PJRT interp on the hot path)...");
         let svc = PjrtService::start(std::path::Path::new(dir), db.grids().to_vec())?;
         let oracle = PjrtOracle { svc: &svc, db: &db };
@@ -331,6 +388,11 @@ fn cmd_search(f: &HashMap<String, String>) -> anyhow::Result<()> {
             runner.run(&oracle)
         }
     } else if let Some(path) = f.get("calibration") {
+        anyhow::ensure!(
+            !ctx.cluster.fabric.placement_aware(),
+            "--calibration is not supported with a tiered --fabric: artifacts are fitted \
+             against legacy-fabric grids (drop one of the two flags)"
+        );
         let cal = load_calibrated(path, db)?;
         if prune {
             runner.run_pruned(&cal)
@@ -422,12 +484,8 @@ fn cmd_sweep(f: &HashMap<String, String>) -> anyhow::Result<()> {
     let raw = f
         .get("scenarios")
         .ok_or_else(|| anyhow::anyhow!("--scenarios is required (ISL:OSL:TTFT:SPEED,...)"))?;
-    let scenarios: Vec<WorkloadSpec> = raw
-        .split(',')
-        .filter(|s| !s.trim().is_empty())
-        .map(|s| parse_scenario(ctx.model.name, s.trim()))
-        .collect::<anyhow::Result<Vec<_>>>()?;
-    anyhow::ensure!(!scenarios.is_empty(), "--scenarios named no scenarios");
+    let scenarios: Vec<WorkloadSpec> =
+        parse_list(raw, "scenarios", |s| parse_scenario(ctx.model.name, s))?;
 
     eprintln!("building performance database (offline profiling of silicon)...");
     let db = PerfDatabase::build(&ctx.silicon, &ctx.model, ctx.cluster.gpu.preferred_kv_dtype(), 0xA1C0);
@@ -439,6 +497,11 @@ fn cmd_sweep(f: &HashMap<String, String>) -> anyhow::Result<()> {
 
     let t0 = std::time::Instant::now();
     let reports = if let Some(path) = f.get("calibration") {
+        anyhow::ensure!(
+            !ctx.cluster.fabric.placement_aware(),
+            "--calibration is not supported with a tiered --fabric: artifacts are fitted \
+             against legacy-fabric grids (drop one of the two flags)"
+        );
         let cal = load_calibrated(path, db)?;
         runner.run_sweep_with(&cal, &scenarios, &opts)
     } else {
@@ -482,6 +545,82 @@ fn cmd_sweep(f: &HashMap<String, String>) -> anyhow::Result<()> {
         scenarios.len(),
         total_s
     );
+    Ok(())
+}
+
+/// `topo`: print the fabric presets, the placements they enumerate for
+/// sample parallel shapes, and per-collective per-algorithm cost
+/// tables over the placed link path.
+fn cmd_topo(f: &HashMap<String, String>) -> anyhow::Result<()> {
+    use aiconfigurator::config::ParallelSpec;
+    use aiconfigurator::topology::{collective, fabric, placement};
+
+    let gpu_name = flag(f, "gpu", "h100");
+    let gpu = gpu_by_name(gpu_name).ok_or_else(|| anyhow::anyhow!("unknown gpu '{gpu_name}'"))?;
+    let gpn = flag_u32(f, "gpus-per-node", 8)?;
+    let nodes = flag_u32(f, "nodes", 2)?;
+    let which = flag(f, "fabric", "all");
+    let fabrics: Vec<aiconfigurator::topology::FabricSpec> = if which == "all" {
+        let mut v = vec![aiconfigurator::topology::FabricSpec::legacy(gpn)];
+        v.extend(fabric::all());
+        v
+    } else {
+        vec![fabric_flag(f, gpn)?]
+    };
+
+    for fb in fabrics {
+        let cluster = ClusterSpec::with_fabric(gpu, gpn, nodes, fb);
+        println!(
+            "fabric {:<14} domain {:>3} GPUs | intra {:>5.0} GB/s @{:.1}us | {}x{:.0} GB/s IB @{:.1}us{}{}",
+            fb.name,
+            cluster.domain_size(),
+            cluster.nvlink_bw_gbs(),
+            fb.intra_latency_us,
+            fb.rails,
+            fb.rail_gbs,
+            fb.ib_latency_us,
+            if fb.pod_nodes > 0 {
+                format!(" | pods of {} nodes ({:.0} GB/s spine)", fb.pod_nodes, fb.pod_gbs)
+            } else {
+                String::new()
+            },
+            if fb.placement_aware() { "" } else { " | legacy flat model" },
+        );
+
+        // Placement enumeration for sample shapes on this geometry.
+        for (tp, pp, ep) in [(8u32, 1u32, 1u32), (8, 2, 1), (4, 2, 1), (4, 1, 4)] {
+            let p = ParallelSpec { tp, pp, ep, dp: 1 };
+            if p.gpus() > cluster.total_gpus() {
+                continue;
+            }
+            let pls = placement::enumerate(&cluster, &p);
+            let labels: Vec<String> = pls.iter().map(|pl| pl.label()).collect();
+            println!("  placements tp{tp} pp{pp} ep{ep}: {}", labels.join(" | "));
+        }
+
+        // Per-collective, per-algorithm cost table for one group.
+        let group = flag_u32(f, "group", 16)?.min(cluster.total_gpus()).max(2);
+        let span = placement::natural_span(&cluster, group);
+        let rails = fb.rails;
+        println!(
+            "  costs, {group}-GPU group (span {span}, rails {rails}), microseconds:");
+        let sizes: &[(f64, &str)] = &[
+            (64.0 * 1024.0, "64KiB"),
+            (1048576.0, "1MiB"),
+            (16.0 * 1048576.0, "16MiB"),
+            (256.0 * 1048576.0, "256MiB"),
+            (1.074e9, "1GiB"),
+        ];
+        let header: Vec<&str> =
+            collective::algo_table(&cluster, group, span, rails, 1.0).iter().map(|r| r.0).collect();
+        println!("  {:>8} {}", "bytes", header.iter().map(|h| format!("{h:>22}")).collect::<String>());
+        for &(bytes, label) in sizes {
+            let row = collective::algo_table(&cluster, group, span, rails, bytes);
+            let cells: String = row.iter().map(|(_, us)| format!("{us:>22.1}")).collect();
+            println!("  {label:>8} {cells}");
+        }
+        println!();
+    }
     Ok(())
 }
 
@@ -553,15 +692,27 @@ fn cmd_plan(f: &HashMap<String, String>) -> anyhow::Result<()> {
         Some(path) => Some(CalibrationArtifact::load(Path::new(path))?),
         None => None,
     };
+    // Fleet legs parse as GPU[@FABRIC] (shared grammar with the
+    // service — `hardware::parse_fleet_leg`): a bare name keeps the
+    // legacy flat topology, `@` wires the leg with a named tiered
+    // fabric — mixed fleets may mix fabrics.
+    let legs_spec: Vec<aiconfigurator::hardware::FleetLeg> =
+        parse_list(flag(f, "fleet", "h100"), "fleet", |name| {
+            aiconfigurator::hardware::parse_fleet_leg(name, gpn)
+        })?;
     let mut legs: Vec<(ClusterSpec, Box<dyn LatencyOracle>)> = Vec::new();
-    for name in flag(f, "fleet", "h100").split(',').map(str::trim).filter(|s| !s.is_empty()) {
-        let gpu =
-            gpu_by_name(name).ok_or_else(|| anyhow::anyhow!("unknown gpu '{name}' in --fleet"))?;
-        let cluster = ClusterSpec::new(gpu, gpn, nodes);
+    for leg in legs_spec {
+        let (gpu, fabric) = (leg.gpu, leg.fabric);
+        let cluster = ClusterSpec::with_fabric(gpu, gpn, nodes, fabric);
         let silicon = Silicon::new(cluster, framework.profile());
         eprintln!(
-            "profiling fleet leg {} ({} GPUs @ ${:.2}/h each)...",
+            "profiling fleet leg {}{} ({} GPUs @ ${:.2}/h each)...",
             gpu.name,
+            if fabric.placement_aware() {
+                format!(" on {}", fabric.name)
+            } else {
+                String::new()
+            },
             cluster.total_gpus(),
             gpu.usd_per_hour
         );
@@ -822,6 +973,7 @@ fn cmd_simulate(f: &HashMap<String, String>) -> anyhow::Result<()> {
         weight_dtype: dt,
         kv_dtype: dt,
         flags,
+        placement: aiconfigurator::topology::Placement::packed(),
     };
     eprintln!(
         "resolved flags: kv_frac {:.2}, max_num_tokens {}, cuda_graph {}, chunked_prefill {}",
@@ -952,6 +1104,37 @@ mod tests {
         assert_eq!(f.get("prune").unwrap(), "true");
         assert_eq!(f.get("isl").unwrap(), "4000");
         assert_eq!(f.get("full").unwrap(), "true");
+    }
+
+    #[test]
+    fn space_flag_table_drives_list_overrides() {
+        // One table, one list grammar: the same machinery parses every
+        // list-valued option (the pre-topo code re-implemented the
+        // comma grammar per flag).
+        let model = by_name("llama3.1-8b").unwrap();
+        let mut space = SearchSpace::default_for(&model, Framework::TrtLlm);
+        let mut f = HashMap::new();
+        f.insert("max-num-tokens".to_string(), "2048, 4096".to_string());
+        f.insert("kv-frac".to_string(), "0.85".to_string());
+        f.insert("cuda-graph".to_string(), "both".to_string());
+        apply_space_flags(&mut space, &f).unwrap();
+        assert_eq!(space.max_num_tokens, vec![2048, 4096]);
+        assert_eq!(space.kv_frac, vec![0.85]);
+        assert_eq!(space.cuda_graph, vec![true, false]);
+        // Bad values stay loud errors through the table.
+        let mut bad = HashMap::new();
+        bad.insert("kv-frac".to_string(), "1.5".to_string());
+        assert!(apply_space_flags(&mut space, &bad).is_err());
+        let mut empty = HashMap::new();
+        empty.insert("max-num-tokens".to_string(), " , ".to_string());
+        assert!(apply_space_flags(&mut space, &empty).is_err());
+    }
+
+    #[test]
+    fn parse_list_trims_and_rejects_empty() {
+        let v = parse_list("a, b ,c", "x", |s| Ok(s.to_string())).unwrap();
+        assert_eq!(v, vec!["a", "b", "c"]);
+        assert!(parse_list("", "x", |s| Ok(s.to_string())).is_err());
     }
 
     #[test]

@@ -59,12 +59,19 @@ pub enum Op {
         imbalance: f64,
         count: u32,
     },
-    /// Ring all-reduce of `bytes` across `gpus`.
-    AllReduce { bytes: f64, gpus: u32, count: u32 },
-    /// All-gather of `bytes` (per-GPU shard) across `gpus`.
-    AllGather { bytes: f64, gpus: u32, count: u32 },
-    /// All-to-all (MoE dispatch/combine) of `bytes` per GPU.
-    AllToAll { bytes: f64, gpus: u32, count: u32 },
+    /// All-reduce of `bytes` across `gpus`. `span` = NVLink domains
+    /// the group's ranks are placed across (1 = packed; the cost model
+    /// clamps up to the minimum feasible span), `rails` = IB rails a
+    /// cross-domain stage stripes over. Both come from the engine's
+    /// [`crate::topology::Placement`] and are ignored by the legacy
+    /// flat fabric model.
+    AllReduce { bytes: f64, gpus: u32, span: u32, rails: u32, count: u32 },
+    /// All-gather of `bytes` (per-GPU shard) across `gpus` (placement
+    /// fields as in [`Op::AllReduce`]).
+    AllGather { bytes: f64, gpus: u32, span: u32, rails: u32, count: u32 },
+    /// All-to-all (MoE dispatch/combine) of `bytes` per GPU (placement
+    /// fields as in [`Op::AllReduce`]).
+    AllToAll { bytes: f64, gpus: u32, span: u32, rails: u32, count: u32 },
     /// Point-to-point transfer (PP stage boundary, KV-cache transfer).
     P2p { bytes: f64, cross_node: bool, count: u32 },
     /// Bandwidth-bound elementwise/norm/embedding traffic.
@@ -154,6 +161,10 @@ pub fn decompose(
     let pp = eng.parallel.pp as u64;
     let ep = eng.parallel.ep.max(1) as u64;
     let wdt = eng.weight_dtype;
+    // Rank layout: where the TP/EP groups land on the fabric. The
+    // legacy cost model ignores the spans, so packed placements price
+    // bit-for-bit as the seed did.
+    let pl = eng.placement;
 
     let tokens = shape.total_tokens();
     if tokens == 0 {
@@ -217,6 +228,8 @@ pub fn decompose(
         ops.push(Op::AllReduce {
             bytes: tokens as f64 * model.hidden as f64 * ACT_BYTES,
             gpus: tp as u32,
+            span: pl.tp_span,
+            rails: pl.rails,
             count: layers_u32,
         });
     }
@@ -239,9 +252,15 @@ pub fn decompose(
             }
             // Dispatch: each token's hidden vector to top_k experts.
             if ep > 1 {
-                let bytes = tokens as f64 * moe.top_k as f64 * model.hidden as f64 * ACT_BYTES
-                    / ep as f64;
-                ops.push(Op::AllToAll { bytes, gpus: ep as u32, count: moe_layers });
+                let bytes =
+                    crate::perfmodel::moe::dispatch_bytes_per_gpu(tokens, moe.top_k, model.hidden, ep);
+                ops.push(Op::AllToAll {
+                    bytes,
+                    gpus: ep as u32,
+                    span: pl.ep_span,
+                    rails: pl.rails,
+                    count: moe_layers,
+                });
             }
             // Grouped GEMM over resident experts. EP shards experts across
             // the TP×DP group; without EP, TP shards each expert's FFN.
@@ -267,9 +286,15 @@ pub fn decompose(
             }
             // Combine.
             if ep > 1 {
-                let bytes = tokens as f64 * moe.top_k as f64 * model.hidden as f64 * ACT_BYTES
-                    / ep as f64;
-                ops.push(Op::AllToAll { bytes, gpus: ep as u32, count: moe_layers });
+                let bytes =
+                    crate::perfmodel::moe::dispatch_bytes_per_gpu(tokens, moe.top_k, model.hidden, ep);
+                ops.push(Op::AllToAll {
+                    bytes,
+                    gpus: ep as u32,
+                    span: pl.ep_span,
+                    rails: pl.rails,
+                    count: moe_layers,
+                });
             }
         }
     }
@@ -279,6 +304,8 @@ pub fn decompose(
         ops.push(Op::AllReduce {
             bytes: tokens as f64 * model.hidden as f64 * ACT_BYTES,
             gpus: tp as u32,
+            span: pl.tp_span,
+            rails: pl.rails,
             count: layers_u32,
         });
     }
@@ -308,6 +335,8 @@ pub fn decompose(
         ops.push(Op::AllGather {
             bytes: sampled as f64 * (model.vocab / tp) as f64 * ACT_BYTES,
             gpus: tp as u32,
+            span: pl.tp_span,
+            rails: pl.rails,
             count: 1,
         });
     }
@@ -315,7 +344,12 @@ pub fn decompose(
     // --- Pipeline-parallel stage boundaries -------------------------------
     if pp > 1 {
         let bytes = tokens as f64 * model.hidden as f64 * ACT_BYTES;
-        let cross = eng.parallel.gpus() > cluster.gpus_per_node;
+        // Interleaved placements co-locate consecutive stages per
+        // domain, turning the boundary into an intra-domain hop;
+        // otherwise stages stack domain-by-domain and the boundary
+        // crosses once the instance outgrows one NVLink domain (the
+        // seed rule — `domain == node` on the legacy fabric).
+        let cross = !pl.interleave_pp && eng.parallel.gpus() > cluster.domain_size();
         ops.push(Op::P2p { bytes, cross_node: cross, count: (pp - 1) as u32 });
     }
 
@@ -367,6 +401,7 @@ mod tests {
             weight_dtype: Dtype::Fp16,
             kv_dtype: Dtype::Fp16,
             flags: RuntimeFlags::defaults_for(Framework::TrtLlm),
+            placement: crate::topology::Placement::packed(),
         }
     }
 
@@ -439,6 +474,35 @@ mod tests {
         assert_eq!(kv_bytes_per_gpu_layer(&m, Dtype::Fp16, 8), 1152.0);
         let g = by_name("qwen3-32b").unwrap();
         assert_eq!(kv_bytes_per_gpu_layer(&g, Dtype::Fp16, 8), 4096.0 / 8.0);
+    }
+
+    #[test]
+    fn placement_spans_ride_on_the_comm_ops() {
+        use crate::topology::Placement;
+        let m = by_name("qwen3-235b").unwrap();
+        let mut e = eng(4, 8);
+        e.parallel.pp = 2;
+        e.placement =
+            Placement { tp_span: 2, ep_span: 2, interleave_pp: true, rails: 4 };
+        let ops = decompose(&m, &cluster(), &e, &StepShape::decode(16, 2048), 1.2);
+        for o in &ops {
+            match o {
+                Op::AllReduce { span, rails, .. } | Op::AllGather { span, rails, .. } => {
+                    assert_eq!((*span, *rails), (2, 4));
+                }
+                Op::AllToAll { span, rails, .. } => assert_eq!((*span, *rails), (2, 4)),
+                // Interleaved stages keep the PP boundary intra-domain.
+                Op::P2p { cross_node, .. } => assert!(!cross_node),
+                _ => {}
+            }
+        }
+        // Packed default derives the seed's PP crossing rule.
+        let mut packed = eng(4, 1);
+        packed.parallel.pp = 4; // 16 GPUs > 8-GPU domain
+        let ops = decompose(&m, &cluster(), &packed, &StepShape::decode(16, 2048), 1.0);
+        assert!(ops
+            .iter()
+            .any(|o| matches!(o, Op::P2p { cross_node: true, .. })));
     }
 
     #[test]

@@ -249,6 +249,7 @@ mod tests {
             weight_dtype: Dtype::Fp8,
             kv_dtype: Dtype::Fp8,
             flags: RuntimeFlags::defaults_for(Framework::TrtLlm),
+            placement: crate::topology::Placement::packed(),
         };
         Evaluated {
             cand: Candidate::Aggregated { engine: eng, replicas: 1 },

@@ -157,9 +157,14 @@ pub(crate) fn op_for_point(
         // power of two turns the grid into flat plateaus, so power-of-two
         // queries interpolate exactly instead of straddling the cliff
         // (e.g. gpus=8 blending with a cross-node gpus=9 sample).
-        AllReduce => Op::AllReduce { bytes: x, gpus: snap_pow2(y), count: 1 },
-        AllGather => Op::AllGather { bytes: x, gpus: snap_pow2(y), count: 1 },
-        AllToAll => Op::AllToAll { bytes: x, gpus: snap_pow2(y), count: 1 },
+        // Span 1 = "naturally packed": the collective cost model clamps
+        // the span up to the minimum feasible value for the group
+        // width, so the profiled baseline is the packed layout — the
+        // one [`crate::topology::collective::placement_factor`] scales
+        // placed queries off of.
+        AllReduce => Op::AllReduce { bytes: x, gpus: snap_pow2(y), span: 1, rails: 1, count: 1 },
+        AllGather => Op::AllGather { bytes: x, gpus: snap_pow2(y), span: 1, rails: 1, count: 1 },
+        AllToAll => Op::AllToAll { bytes: x, gpus: snap_pow2(y), span: 1, rails: 1, count: 1 },
         P2p => Op::P2p { bytes: x, cross_node: y >= 0.5, count: 1 },
     }
 }

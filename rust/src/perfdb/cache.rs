@@ -61,14 +61,16 @@ fn key_of(op: &Op) -> OpKey {
             d: dtype as u64,
             e: imbalance.to_bits(),
         },
-        Op::AllReduce { bytes, gpus, .. } => {
-            OpKey { tag: 4, a: bytes.to_bits(), b: gpus as u64, c: 0, d: 0, e: 0 }
+        // The placement (span, rails) is part of the price: two
+        // layouts of the same group must never share a memo slot.
+        Op::AllReduce { bytes, gpus, span, rails, .. } => {
+            OpKey { tag: 4, a: bytes.to_bits(), b: gpus as u64, c: span as u64, d: rails as u64, e: 0 }
         }
-        Op::AllGather { bytes, gpus, .. } => {
-            OpKey { tag: 5, a: bytes.to_bits(), b: gpus as u64, c: 0, d: 0, e: 0 }
+        Op::AllGather { bytes, gpus, span, rails, .. } => {
+            OpKey { tag: 5, a: bytes.to_bits(), b: gpus as u64, c: span as u64, d: rails as u64, e: 0 }
         }
-        Op::AllToAll { bytes, gpus, .. } => {
-            OpKey { tag: 6, a: bytes.to_bits(), b: gpus as u64, c: 0, d: 0, e: 0 }
+        Op::AllToAll { bytes, gpus, span, rails, .. } => {
+            OpKey { tag: 6, a: bytes.to_bits(), b: gpus as u64, c: span as u64, d: rails as u64, e: 0 }
         }
         Op::P2p { bytes, cross_node, .. } => {
             OpKey { tag: 7, a: bytes.to_bits(), b: cross_node as u64, c: 0, d: 0, e: 0 }
@@ -224,7 +226,7 @@ mod tests {
                 kv_token_bytes: 1024.0,
                 count: 2,
             },
-            Op::AllReduce { bytes: 1e7, gpus: 8, count: 1 },
+            Op::AllReduce { bytes: 1e7, gpus: 8, span: 1, rails: 1, count: 1 },
             Op::Elementwise { bytes: 1e6, count: 5 },
         ];
         for op in &ops {

@@ -727,6 +727,19 @@ impl CalibratedDb {
     /// and grid shape are checked at artifact load; the full profiling
     /// context must match here.
     pub fn compose(base: PerfDatabase, artifact: &CalibrationArtifact) -> anyhow::Result<Self> {
+        // The artifact format carries no fabric field: every existing
+        // artifact was fitted against legacy-fabric analytic grids
+        // (flat ring collectives). Composing those corrections onto a
+        // tiered database would scale min-cost tiered predictions by
+        // coefficients fitted on a different cost model — reject
+        // loudly until the format grows a fabric context.
+        anyhow::ensure!(
+            !base.cluster.fabric.placement_aware(),
+            "calibration artifacts bind to the legacy fabric they were fitted on; composing \
+             onto a '{}' tiered-fabric database is not supported (drop --fabric or the \
+             calibration artifact)",
+            base.cluster.fabric.name,
+        );
         anyhow::ensure!(
             artifact.gpu == base.ctx.gpu
                 && artifact.gpus_per_node == base.ctx.gpus_per_node
@@ -800,15 +813,21 @@ impl LatencyOracle for CalibratedDb {
     fn op_latency_us(&self, op: &Op) -> f64 {
         match query_for(op) {
             Some(q) => {
+                // Measured and calibrated comm entries hold the packed
+                // layout; placed collectives scale by the analytic
+                // placement factor exactly as the uncalibrated
+                // database does (1.0 on legacy fabrics).
+                let place =
+                    crate::topology::collective::placement_factor(&self.base.cluster, op);
                 let t = q.table as usize;
                 let ((cx, cy, cz), dist) = nearest_cell(q.fx, q.fy, q.fz);
                 if dist <= MEASURED_SNAP {
                     if let Some(&us) = self.measured.get(&flat(t, cx, cy, cz)) {
                         self.tiers.measured.fetch_add(1, Ordering::Relaxed);
-                        return us * q.scale;
+                        return us * q.scale * place;
                     }
                 }
-                let v = trilinear(&self.cal_grids, t, q.fx, q.fy, q.fz) * q.scale;
+                let v = trilinear(&self.cal_grids, t, q.fx, q.fy, q.fz) * q.scale * place;
                 if self.has_fit[t] {
                     self.tiers.calibrated.fetch_add(1, Ordering::Relaxed);
                 } else {
@@ -932,6 +951,25 @@ mod tests {
         assert_eq!(back.gpu, art.gpu);
         assert_eq!(back.fits, art.fits);
         assert_eq!(back.measured_cells, art.measured_cells);
+    }
+
+    #[test]
+    fn compose_rejects_tiered_fabric_databases() {
+        // Artifacts carry no fabric field: they were fitted against
+        // legacy-fabric grids and must not scale tiered predictions.
+        let (sil, model) = ctx();
+        let sets = measure::synthesize(&sil, &model, Dtype::Fp8, 11, 8);
+        let art = fit(&db(&sil, &model), &sets).unwrap();
+        let tiered = ClusterSpec::with_fabric(
+            h100_sxm(),
+            8,
+            1,
+            crate::topology::fabric::hgx_h100(),
+        );
+        let tsil = Silicon::new(tiered, Framework::TrtLlm.profile());
+        let tdb = PerfDatabase::build(&tsil, &model, Dtype::Fp8, 0xA1C0);
+        let err = CalibratedDb::compose(tdb, &art).unwrap_err();
+        assert!(err.to_string().contains("legacy fabric"), "{err}");
     }
 
     #[test]

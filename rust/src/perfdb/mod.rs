@@ -185,7 +185,16 @@ impl PerfDatabase {
 impl LatencyOracle for PerfDatabase {
     fn op_latency_us(&self, op: &Op) -> f64 {
         match query_for(op) {
-            Some(q) => self.interp(&q) * q.scale,
+            // The profiled comm tables hold the naturally packed
+            // layout; a placed collective scales that baseline by the
+            // analytic placement factor (1.0 on legacy fabrics and for
+            // packed/non-collective ops), so the database prices
+            // placements without re-profiling per layout.
+            Some(q) => {
+                self.interp(&q)
+                    * q.scale
+                    * crate::topology::collective::placement_factor(&self.cluster, op)
+            }
             None => sol::latency_us(&self.cluster, op),
         }
     }

@@ -13,6 +13,12 @@ use crate::ops::Op;
 
 /// Roofline latency bound for any op, microseconds.
 pub fn latency_us(cluster: &ClusterSpec, op: &Op) -> f64 {
+    // Tiered fabrics bound collectives over the placement's link path
+    // (latency-free ideal links, min over algorithms); legacy fabrics
+    // keep the seed's flat roofline below, bit-for-bit.
+    if let Some(bound) = crate::topology::collective::sol_bound_us(cluster, op) {
+        return bound;
+    }
     let gpu = &cluster.gpu;
     let bw = gpu.mem_bw_gbs * 1e3; // bytes/us
     match *op {
@@ -75,7 +81,7 @@ mod tests {
         for op in [
             Op::Gemm { m: 4096, n: 8192, k: 8192, dtype: Dtype::Fp16, count: 1 },
             Op::AttnDecode { batch: 64, kv_len: 4096, heads: 32, head_dim: 128, kv_token_bytes: 4096.0, count: 1 },
-            Op::AllReduce { bytes: 1e7, gpus: 8, count: 1 },
+            Op::AllReduce { bytes: 1e7, gpus: 8, span: 1, rails: 1, count: 1 },
         ] {
             let sol = latency_us(&c, &op);
             let real = sil.op_latency_us(&op);

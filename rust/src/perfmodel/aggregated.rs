@@ -111,6 +111,7 @@ mod tests {
                 weight_dtype: Dtype::Fp8,
                 kv_dtype: Dtype::Fp8,
                 flags: RuntimeFlags::defaults_for(Framework::TrtLlm),
+                placement: crate::topology::Placement::packed(),
             },
         )
     }

@@ -30,6 +30,11 @@ pub struct PoolPrice {
     /// Sustained request rate of ONE worker, requests/s.
     pub req_rate: f64,
     pub gpus: u32,
+    /// KV-cache bytes one request ships to the decode pool (prefill
+    /// pools only; 0 for decode pools). Priced over the fabric path by
+    /// [`compose_on`] on tiered fabrics — legacy fabrics keep the
+    /// seed's β_TTFT-only correction bit-for-bit.
+    pub kv_bytes: f64,
 }
 
 /// Price a prefill engine: batch `b_pre` prompts prefilled per step.
@@ -48,6 +53,7 @@ pub fn price_prefill(
         latency_ms: lat,
         req_rate: eng.batch as f64 / (lat / 1000.0),
         gpus: eng.parallel.gpus(),
+        kv_bytes: model.kv_bytes_per_token(eng.kv_dtype) * wl.isl.max(1) as f64,
     }
 }
 
@@ -69,6 +75,7 @@ pub fn price_decode(
         // Each worker completes B requests every OSL·TPOT ms.
         req_rate: eng.batch as f64 / (osl * tpot / 1000.0),
         gpus: eng.parallel.gpus(),
+        kv_bytes: 0.0,
     }
 }
 
@@ -86,10 +93,38 @@ pub fn estimate_composite(
 ) -> PerfEstimate {
     let p = price_prefill(oracle, model, cluster, prefill, wl);
     let d = price_decode(oracle, model, cluster, decode, wl);
-    compose(&p, &d, x, y, wl)
+    compose_on(cluster, &p, &d, x, y, wl)
 }
 
-/// Rate-match a priced pool pair into a PerfEstimate.
+/// [`compose`] with the KV-transfer path priced over the cluster's
+/// fabric. The seed's β_TTFT surcharge stands in for queueing *and*
+/// the KV transfer; on a tiered fabric the transfer is priced
+/// physically — NVLink when the whole (x)P(y)D composite fits one
+/// NVLink domain, an IB rail when it spans domains — and the TTFT
+/// charges whichever of {β surcharge, physical transfer} is larger
+/// instead of stacking both (no double count). Legacy fabrics price
+/// exactly as [`compose`] (pinned).
+pub fn compose_on(
+    cluster: &ClusterSpec,
+    p: &PoolPrice,
+    d: &PoolPrice,
+    x: u32,
+    y: u32,
+    wl: &WorkloadSpec,
+) -> PerfEstimate {
+    let mut est = compose(p, d, x, y, wl);
+    if cluster.fabric.placement_aware() && p.kv_bytes > 0.0 {
+        let spans = x * p.gpus + y * d.gpus > cluster.domain_size();
+        let transfer_ms =
+            crate::topology::collective::p2p_us(cluster, p.kv_bytes, spans, 1) / 1000.0;
+        let surcharge_ms = (BETA_TTFT - 1.0) * p.latency_ms;
+        est.ttft_ms = p.latency_ms + surcharge_ms.max(transfer_ms);
+    }
+    est
+}
+
+/// Rate-match a priced pool pair into a PerfEstimate (the seed's
+/// fabric-blind composition: β_TTFT absorbs the KV transfer).
 pub fn compose(p: &PoolPrice, d: &PoolPrice, x: u32, y: u32, wl: &WorkloadSpec) -> PerfEstimate {
     let g_total = x * p.gpus + y * d.gpus;
     let r_pre = p.req_rate * x as f64 * ALPHA_PRE;
@@ -130,6 +165,7 @@ pub struct RateMatchResult {
 /// (a composite dominated by an externally offered point is discarded
 /// by design).
 pub fn rate_match_pruned(
+    cluster: &ClusterSpec,
     prefill_prices: &[PoolPrice],
     decode_prices: &[PoolPrice],
     wl: &WorkloadSpec,
@@ -140,6 +176,7 @@ pub fn rate_match_pruned(
     acc: &mut crate::pareto::FrontierAccumulator,
 ) -> RateMatchResult {
     rate_match_core(
+        cluster,
         prefill_prices,
         decode_prices,
         wl,
@@ -154,6 +191,7 @@ pub fn rate_match_pruned(
 /// `g_valid` restricts total GPU counts (e.g. multiples available on the
 /// cluster); empty slice = any count up to the cluster size.
 pub fn rate_match(
+    cluster: &ClusterSpec,
     prefill_prices: &[PoolPrice],
     decode_prices: &[PoolPrice],
     wl: &WorkloadSpec,
@@ -162,7 +200,7 @@ pub fn rate_match(
     max_x: u32,
     max_y: u32,
 ) -> RateMatchResult {
-    rate_match_core(prefill_prices, decode_prices, wl, max_gpus, g_valid, max_x, max_y, None)
+    rate_match_core(cluster, prefill_prices, decode_prices, wl, max_gpus, g_valid, max_x, max_y, None)
 }
 
 /// One loop body for both variants, so the filters and sweep order can
@@ -170,6 +208,7 @@ pub fn rate_match(
 /// composite in either mode.
 #[allow(clippy::too_many_arguments)]
 fn rate_match_core(
+    cluster: &ClusterSpec,
     prefill_prices: &[PoolPrice],
     decode_prices: &[PoolPrice],
     wl: &WorkloadSpec,
@@ -202,7 +241,7 @@ fn rate_match_core(
                     if !g_valid.is_empty() && !g_valid.contains(&g_total) {
                         continue;
                     }
-                    let est = compose(p, d, x, y, wl);
+                    let est = compose_on(cluster, p, d, x, y, wl);
                     if let Some(acc) = acc.as_deref_mut() {
                         if !acc.offer_est(&est) {
                             continue;
@@ -240,7 +279,11 @@ mod tests {
     }
 
     fn pp(lat: f64, rate: f64, gpus: u32) -> PoolPrice {
-        PoolPrice { latency_ms: lat, req_rate: rate, gpus }
+        PoolPrice { latency_ms: lat, req_rate: rate, gpus, kv_bytes: 0.0 }
+    }
+
+    fn legacy_cluster() -> ClusterSpec {
+        ClusterSpec::new(crate::hardware::h100_sxm(), 8, 4)
     }
 
     #[test]
@@ -256,9 +299,61 @@ mod tests {
     }
 
     #[test]
+    fn tiered_fabric_prices_spanning_kv_transfer() {
+        let w = wl();
+        // A fast prefill pool (20 ms) shipping ~2 GB of KV: the β
+        // surcharge (0.8 × 20 = 16 ms) is below the physical transfer,
+        // so the fabric path decides the TTFT.
+        let mut p = pp(20.0, 3.0, 2);
+        p.kv_bytes = 2e9;
+        let d = pp(25.0, 1.0, 2);
+        let tiered = ClusterSpec::with_fabric(
+            crate::hardware::h100_sxm(),
+            8,
+            4,
+            crate::topology::fabric::hgx_h100(),
+        );
+        // Legacy composition is pinned: β_TTFT only, no fabric term.
+        assert_eq!(
+            compose_on(&legacy_cluster(), &p, &d, 4, 4, &w).ttft_ms,
+            compose(&p, &d, 4, 4, &w).ttft_ms
+        );
+        // In-domain composite pays the NVLink hop; a domain-spanning
+        // one pays the IB rail — materially dearer. Neither stacks the
+        // β surcharge on top of the physical transfer (no double
+        // count): TTFT never exceeds latency + max(surcharge, transfer).
+        let near = compose_on(&tiered, &p, &d, 1, 1, &w);
+        let far = compose_on(&tiered, &p, &d, 4, 4, &w);
+        assert!(
+            far.ttft_ms > near.ttft_ms + 20.0,
+            "near={} far={}",
+            near.ttft_ms,
+            far.ttft_ms
+        );
+        let transfer_ib_ms =
+            (tiered.fabric.ib_latency_us + 2e9 / (tiered.fabric.rail_gbs * 1e3 * 0.9)) / 1000.0;
+        assert!(
+            far.ttft_ms <= p.latency_ms + transfer_ib_ms + 1.0,
+            "β surcharge stacked on the physical transfer: {}",
+            far.ttft_ms
+        );
+        // A slow prefill pool keeps the β floor: the surcharge already
+        // covers a cheap in-domain hop.
+        let mut slow = pp(300.0, 3.0, 2);
+        slow.kv_bytes = 2e9;
+        let floor = compose_on(&tiered, &slow, &d, 1, 1, &w);
+        assert!(
+            (floor.ttft_ms - compose(&slow, &d, 1, 1, &w).ttft_ms).abs() < 1e-9,
+            "β floor lost: {}",
+            floor.ttft_ms
+        );
+    }
+
+    #[test]
     fn filter_rejects_slow_pools() {
         let w = wl(); // TTFT ≤ 1200 → prefill lat ≤ 666.7; TPOT ≤ 50
         let res = rate_match(
+            &legacy_cluster(),
             &[pp(700.0, 2.0, 1), pp(300.0, 3.0, 1)],
             &[pp(60.0, 1.0, 2), pp(30.0, 1.0, 2)],
             &w,
@@ -275,7 +370,8 @@ mod tests {
     #[test]
     fn g_valid_restricts_totals() {
         let w = wl();
-        let res = rate_match(&[pp(100.0, 5.0, 2)], &[pp(25.0, 1.0, 2)], &w, 64, &[8], 8, 8);
+        let res =
+            rate_match(&legacy_cluster(), &[pp(100.0, 5.0, 2)], &[pp(25.0, 1.0, 2)], &w, 64, &[8], 8, 8);
         assert!(!res.evaluated.is_empty());
         for (x, y, _, _, _) in &res.evaluated {
             assert_eq!(x * 2 + y * 2, 8);
@@ -287,9 +383,9 @@ mod tests {
         let w = wl();
         let p = [pp(100.0, 5.0, 1), pp(300.0, 8.0, 2)];
         let d = [pp(25.0, 1.0, 1), pp(40.0, 1.5, 2)];
-        let full = rate_match(&p, &d, &w, 32, &[], 8, 16);
+        let full = rate_match(&legacy_cluster(), &p, &d, &w, 32, &[], 8, 16);
         let mut acc = crate::pareto::FrontierAccumulator::new();
-        let pruned = rate_match_pruned(&p, &d, &w, 32, &[], 8, 16, &mut acc);
+        let pruned = rate_match_pruned(&legacy_cluster(), &p, &d, &w, 32, &[], 8, 16, &mut acc);
         assert!(!pruned.evaluated.is_empty());
         assert!(
             pruned.evaluated.len() < full.evaluated.len(),
@@ -318,6 +414,7 @@ mod tests {
     fn best_maximizes_per_gpu_throughput() {
         let w = wl();
         let res = rate_match(
+            &legacy_cluster(),
             &[pp(100.0, 5.0, 1)],
             &[pp(25.0, 1.0, 1)],
             &w,

@@ -99,6 +99,7 @@ mod tests {
             weight_dtype: dt,
             kv_dtype: dt,
             flags: RuntimeFlags::defaults_for(Framework::TrtLlm),
+            placement: crate::topology::Placement::packed(),
         }
     }
 

@@ -101,6 +101,16 @@ pub fn model_imbalance(model: &ModelArch, ep: u32, seed: u64) -> f64 {
     }
 }
 
+/// Bytes one GPU contributes to a MoE dispatch (or combine) all-to-all:
+/// every token's hidden vector travels to its `top_k` experts, sharded
+/// over the EP group. One definition shared by both the dispatch and
+/// combine legs of [`crate::ops::decompose`], so the two directions
+/// can never drift apart; the placement layer then prices the
+/// all-to-all over the EP group's span and rails.
+pub fn dispatch_bytes_per_gpu(tokens: u64, top_k: u64, hidden: u64, ep: u64) -> f64 {
+    tokens as f64 * top_k as f64 * hidden as f64 * crate::ops::ACT_BYTES / ep.max(1) as f64
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -303,6 +303,7 @@ pub(crate) mod testutil {
             weight_dtype: Dtype::Fp8,
             kv_dtype: Dtype::Fp8,
             flags: RuntimeFlags::defaults_for(Framework::TrtLlm),
+            placement: crate::topology::Placement::packed(),
         };
         PricedOption {
             gpu: gpu.to_string(),

@@ -400,6 +400,7 @@ impl<'a> TaskRunner<'a> {
             let res = if opts.prune {
                 let rejected_before = acc.rejected();
                 let full = disagg::rate_match_pruned(
+                    self.cluster,
                     &p_prices,
                     &d_prices,
                     wl,
@@ -413,6 +414,7 @@ impl<'a> TaskRunner<'a> {
                 full
             } else {
                 disagg::rate_match(
+                    self.cluster,
                     &p_prices,
                     &d_prices,
                     wl,
@@ -529,6 +531,7 @@ impl<'a> TaskRunner<'a> {
             }
 
             let res = disagg::rate_match(
+                self.cluster,
                 &p_prices,
                 &d_prices,
                 wl,

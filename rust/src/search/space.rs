@@ -18,6 +18,7 @@ use crate::frameworks::Framework;
 use crate::hardware::ClusterSpec;
 use crate::models::{Dtype, ModelArch};
 use crate::perfmodel::memory;
+use crate::topology::placement;
 
 /// Declarative search space. Empty vectors mean "use defaults" — and
 /// for the flag fields, "resolve analytically per candidate".
@@ -49,7 +50,12 @@ pub struct SearchSpace {
     pub prefill_batch: Vec<u32>,
 }
 
-/// One workload-independent grid point: everything but the flags.
+/// One workload-independent grid point: everything but the flags and
+/// the placement. The [`crate::topology::Placement`] axis is expanded
+/// per point by [`SearchSpace::expand_flags`] ([`placement::enumerate`]) — flags
+/// don't depend on where ranks land, so resolution runs once per point
+/// and the layouts share it; legacy fabrics enumerate a single packed
+/// layout, leaving legacy grids unchanged.
 pub(crate) type StructuralPoint = (Framework, Dtype, ParallelSpec, u32);
 
 impl SearchSpace {
@@ -260,15 +266,23 @@ impl SearchSpace {
         let mut out = Vec::new();
         for point in points {
             let (fw, dt, p, b) = *point;
-            for flags in self.flag_variants(model, cluster, wl, point) {
-                out.push(EngineConfig {
-                    framework: fw,
-                    parallel: p,
-                    batch: b,
-                    weight_dtype: dt,
-                    kv_dtype: dt,
-                    flags,
-                });
+            // Flags are placement-independent: resolve once per point,
+            // then expand the structural placement axis — how the
+            // shape's ranks land on the fabric ([`placement::enumerate`];
+            // exactly [packed] on legacy fabrics).
+            let variants = self.flag_variants(model, cluster, wl, point);
+            for pl in placement::enumerate(cluster, &p) {
+                for &flags in &variants {
+                    out.push(EngineConfig {
+                        framework: fw,
+                        parallel: p,
+                        batch: b,
+                        weight_dtype: dt,
+                        kv_dtype: dt,
+                        flags,
+                        placement: pl,
+                    });
+                }
             }
         }
         out
@@ -418,6 +432,43 @@ mod tests {
         assert!(engines.iter().any(|e| e.parallel.ep > 1));
         // ep ≤ tp·dp convention.
         assert!(engines.iter().all(|e| e.parallel.ep <= e.parallel.tp * e.parallel.dp));
+    }
+
+    #[test]
+    fn tiered_fabric_widens_grid_with_placements() {
+        use crate::topology::{fabric, Placement};
+        let m = by_name("qwen3-32b").unwrap();
+        let legacy = ClusterSpec::new(h100_sxm(), 8, 2);
+        let tiered = ClusterSpec::with_fabric(h100_sxm(), 8, 2, fabric::hgx_h100());
+        let mut s = SearchSpace::default_for(&m, Framework::TrtLlm);
+        s.tp = vec![8];
+        s.pp = vec![1, 2];
+        let w = wl(2048, 256);
+        // Legacy: every engine is packed (seed grid), one per point.
+        let g_legacy = s.engine_grid(&m, &legacy, &w);
+        assert!(g_legacy.iter().all(|e| e.placement == Placement::packed()));
+        assert_eq!(g_legacy.len(), s.structural_grid(&m, &legacy).len());
+        // Tiered: the same TP8PP2 shape expands into several layouts…
+        let g_tiered = s.engine_grid(&m, &tiered, &w);
+        assert!(g_tiered.len() > g_legacy.len());
+        let shape = ParallelSpec { tp: 8, pp: 2, ep: 1, dp: 1 };
+        let layouts: std::collections::HashSet<Placement> = g_tiered
+            .iter()
+            .filter(|e| e.parallel == shape)
+            .map(|e| e.placement)
+            .collect();
+        assert!(layouts.len() >= 2, "{layouts:?}");
+        // …sharing one resolved flag set per structural point.
+        for e in &g_tiered {
+            let packed = g_tiered.iter().find(|o| {
+                o.parallel == e.parallel
+                    && o.batch == e.batch
+                    && o.placement == Placement::packed()
+            });
+            if let Some(p0) = packed {
+                assert_eq!(p0.flags, e.flags, "placements must not fork the flags");
+            }
+        }
     }
 
     #[test]

@@ -47,7 +47,10 @@ pub struct ServerConfig {
     pub seed: u64,
 }
 
-type DbKey = (String, String, u32, u32, String);
+/// (model, gpu, gpus_per_node, num_nodes, framework, fabric) — the
+/// fabric name is part of the cache key: the same GPU pool wired as
+/// `legacy` and as `gb200-nvl72` profiles different comm tables.
+type DbKey = (String, String, u32, u32, String, String);
 
 /// Shared server state (public so in-process embedding — tests, the
 /// serve_e2e example — can drive requests without a socket).
@@ -99,7 +102,7 @@ impl SearchServer {
         let mut pjrt = None;
         if let (Some(dir), Some((model, gpu, gpn, nodes, fw))) = (&cfg.artifacts, pjrt_ctx) {
             let key: DbKey =
-                (model.into(), gpu.into(), gpn, nodes, fw.name().into());
+                (model.into(), gpu.into(), gpn, nodes, fw.name().into(), "legacy".into());
             let db = Arc::new(build_db(&key, cfg.seed)?);
             let svc = PjrtService::start(dir, db.grids().to_vec())?;
             dbs.insert(key.clone(), db);
@@ -174,13 +177,15 @@ fn handle_conn(stream: TcpStream, state: &State) -> anyhow::Result<()> {
 }
 
 fn build_db(key: &DbKey, seed: u64) -> anyhow::Result<PerfDatabase> {
-    let (model_name, gpu_name, gpn, nodes, fw_name) = key;
+    let (model_name, gpu_name, gpn, nodes, fw_name, fabric_name) = key;
     let model =
         by_name(model_name).ok_or_else(|| anyhow::anyhow!("unknown model '{model_name}'"))?;
     let gpu = gpu_by_name(gpu_name).ok_or_else(|| anyhow::anyhow!("unknown gpu '{gpu_name}'"))?;
     let fw = Framework::parse(fw_name)
         .ok_or_else(|| anyhow::anyhow!("unknown framework '{fw_name}'"))?;
-    let cluster = ClusterSpec::new(gpu, *gpn, *nodes);
+    let fabric = crate::topology::fabric::by_name(fabric_name, *gpn)
+        .ok_or_else(|| anyhow::anyhow!("unknown fabric '{fabric_name}'"))?;
+    let cluster = ClusterSpec::with_fabric(gpu, *gpn, *nodes, fabric);
     let silicon = Silicon::new(cluster, fw.profile());
     // Ampere has no FP8 tensor cores: `preferred_kv_dtype` profiles
     // such contexts at FP16 — the same default the CLI `plan` path and
@@ -269,16 +274,30 @@ fn request_ctx(req: &Json, state: &State, model_name: &str) -> anyhow::Result<Re
     let fw = Framework::parse(req.str_or("framework", "trtllm"))
         .ok_or_else(|| anyhow::anyhow!("unknown framework"))?;
     let top_k = req.f64_or("top_k", 5.0) as usize;
+    // Optional tiered fabric ("hgx-h100", "gb200-nvl72", ...); absent =
+    // the legacy flat topology, bit-for-bit the pre-fabric behavior.
+    let fabric_name = req.str_or("fabric", "legacy").to_string();
+    let fabric = crate::topology::fabric::by_name(&fabric_name, gpn)
+        .ok_or_else(|| anyhow::anyhow!("unknown fabric '{fabric_name}'"))?;
+    // A PJRT-bound server answers its context from the AOT kernel,
+    // which prices the packed layout only: reject fabric requests
+    // loudly (the CLI does the same for --fabric with --pjrt) instead
+    // of silently falling through to a different oracle.
+    anyhow::ensure!(
+        state.pjrt.is_none() || !fabric.placement_aware(),
+        "'fabric' is not supported on a PJRT-bound server: the AOT kernel prices the \
+         packed layout only (restart without --pjrt or drop the fabric field)"
+    );
 
     let model =
         by_name(model_name).ok_or_else(|| anyhow::anyhow!("unknown model '{model_name}'"))?;
     let gpu =
         gpu_by_name(gpu_name).ok_or_else(|| anyhow::anyhow!("unknown gpu '{gpu_name}'"))?;
-    let cluster = ClusterSpec::new(gpu, gpn, nodes);
+    let cluster = ClusterSpec::with_fabric(gpu, gpn, nodes, fabric);
 
     // Database: cached per context.
     let key: DbKey =
-        (model_name.to_string(), gpu_name.to_string(), gpn, nodes, fw.name().to_string());
+        (model_name.to_string(), gpu_name.to_string(), gpn, nodes, fw.name().to_string(), fabric_name);
     let db = db_for(state, &key)?;
     let cal = calibrated_for(state, &key, &db)?;
 
@@ -357,6 +376,13 @@ fn calibrated_for(
     db: &Arc<PerfDatabase>,
 ) -> anyhow::Result<Option<Arc<CalibratedDb>>> {
     let Some(art) = &state.artifact else { return Ok(None) };
+    // Artifacts are fitted against legacy-fabric grids; tiered-fabric
+    // contexts stay analytic (same "silently analytic on non-matching
+    // context" contract as the other fields — `CalibratedDb::compose`
+    // would reject the combination loudly).
+    if db.cluster.fabric.placement_aware() {
+        return Ok(None);
+    }
     let matches = art.gpu == db.ctx.gpu
         && art.gpus_per_node == db.ctx.gpus_per_node
         && art.num_nodes == db.ctx.num_nodes
@@ -411,9 +437,16 @@ fn db_for(state: &State, key: &DbKey) -> anyhow::Result<Arc<PerfDatabase>> {
 fn top_json(analysis: &pareto::Analysis, top_k: usize) -> Json {
     let mut top = Vec::new();
     for e in analysis.feasible.iter().take(top_k) {
+        // The chosen rank layout (EXPERIMENTS.md "placement" field):
+        // the decode pool's placement for disaggregated composites.
+        let placement = match &e.cand {
+            Candidate::Aggregated { engine, .. } => engine.placement,
+            Candidate::Disaggregated { decode, .. } => decode.placement,
+        };
         let mut o = Json::obj();
         o.set("config", json::s(&e.cand.label()))
             .set("mode", json::s(e.cand.mode().name()))
+            .set("placement", json::s(&placement.label()))
             .set("gpus", json::num(e.cand.total_gpus() as f64))
             .set("ttft_ms", json::num(e.est.ttft_ms))
             .set("tpot_ms", json::num(e.est.tpot_ms))
@@ -527,15 +560,19 @@ fn handle_plan_request(req: &Json, state: &State) -> anyhow::Result<Json> {
     };
     let mut legs: Vec<(ClusterSpec, Arc<dyn LatencyOracle>)> = Vec::new();
     for name in &names {
-        let gpu =
-            gpu_by_name(name).ok_or_else(|| anyhow::anyhow!("unknown gpu '{name}' in fleet"))?;
-        let key: DbKey = (wl.model.clone(), name.clone(), gpn, nodes, fw.name().to_string());
+        // Per-leg fabrics: "h100@gb200-nvl72" wires this leg's cluster
+        // with a named tiered fabric; a bare GPU name keeps the legacy
+        // flat topology (grammar shared with the CLI's --fleet —
+        // `hardware::parse_fleet_leg`).
+        let leg = crate::hardware::parse_fleet_leg(name, gpn)?;
+        let key: DbKey =
+            (wl.model.clone(), leg.gpu_name, gpn, nodes, fw.name().to_string(), leg.fabric_name);
         let db = db_for(state, &key)?;
         let oracle: Arc<dyn LatencyOracle> = match calibrated_for(state, &key, &db)? {
             Some(cal) => cal,
             None => db,
         };
-        legs.push((ClusterSpec::new(gpu, gpn, nodes), oracle));
+        legs.push((ClusterSpec::with_fabric(leg.gpu, gpn, nodes, leg.fabric), oracle));
     }
 
     let spec = crate::planner::PlanSpec {
@@ -841,6 +878,31 @@ mod tests {
         assert_eq!(resp2.req_str("status").unwrap(), "ok");
         assert!(resp2.get("tiers").is_none());
         assert_eq!(st.cals.lock().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn fabric_request_reports_placements_and_caches_separately() {
+        let st = state();
+        let wl = WorkloadSpec::new("llama3.1-8b", 1024, 128, f64::INFINITY, 0.0);
+        let mut req = make_request(&wl, "h100", 8, 2, Framework::TrtLlm, 9);
+        req.set("fabric", json::s("hgx-h100"));
+        let resp = handle_request(&req, &st).unwrap();
+        assert_eq!(resp.req_str("status").unwrap(), "ok");
+        let top = resp.req("top").unwrap().as_arr().unwrap();
+        assert!(!top.is_empty());
+        for t in top {
+            assert!(t.req_str("placement").is_ok(), "placement field missing: {t:?}");
+        }
+        // The same context on the legacy fabric is a different cache
+        // entry (different comm tables).
+        let legacy = handle_request(&make_request(&wl, "h100", 8, 2, Framework::TrtLlm, 10), &st)
+            .unwrap();
+        assert_eq!(legacy.req_str("status").unwrap(), "ok");
+        assert_eq!(st.dbs.lock().unwrap().len(), 2);
+        // Unknown fabrics are loud errors, not silent legacy fallbacks.
+        let mut bad = make_request(&wl, "h100", 8, 1, Framework::TrtLlm, 11);
+        bad.set("fabric", json::s("warp-fabric"));
+        assert!(handle_request(&bad, &st).is_err());
     }
 
     #[test]

@@ -1,66 +1,58 @@
-//! Communication primitives: ring all-reduce / all-gather, MoE
-//! all-to-all and point-to-point, over a two-level NVLink+IB topology
-//! (paper §4.4 "AllReduce, AllGather, AllToAll, and point-to-point
-//! transfers across message sizes and GPU counts").
+//! Communication primitives (paper §4.4 "AllReduce, AllGather,
+//! AllToAll, and point-to-point transfers across message sizes and GPU
+//! counts").
+//!
+//! Since the topology subsystem landed, the cost models live in
+//! [`crate::topology::collective`]: legacy (flat NVLink-vs-IB) fabrics
+//! price through the seed's closed-form ring formulas bit-for-bit,
+//! tiered fabrics through per-algorithm min-cost selection over the
+//! placement's link path. This module keeps the seed's public entry
+//! points (packed placement) and adds the `_placed` variants the op
+//! pricing uses.
 
-use crate::hardware::{ClusterSpec, LinkKind};
+use crate::hardware::ClusterSpec;
+use crate::topology::collective;
 
-/// Protocol/algorithm efficiency of NCCL-class collectives vs raw link BW.
-const COLL_EFF: f64 = 0.80;
+/// Protocol/algorithm efficiency of NCCL-class collectives vs raw link
+/// BW (re-exported from the topology layer — one constant, two eras).
+pub const COLL_EFF: f64 = collective::COLL_EFF;
 
-fn per_gpu_bw_kbus(c: &ClusterSpec, gpus: u32) -> (f64, f64) {
-    // Returns (bandwidth in bytes/us, base latency us).
-    let link = c.link_for(gpus);
-    let bw = c.p2p_bw_gbs(link) * 1e3 * COLL_EFF; // GB/s -> bytes/us
-    (bw, c.link_latency_us(link))
-}
-
-/// Ring all-reduce of `bytes` (full tensor) across `gpus`, microseconds.
+/// Ring all-reduce of `bytes` (full tensor) across `gpus`,
+/// microseconds, at the packed placement.
 pub fn allreduce_us(c: &ClusterSpec, bytes: f64, gpus: u32) -> f64 {
-    if gpus <= 1 {
-        return 0.0;
-    }
-    let (bw, lat) = per_gpu_bw_kbus(c, gpus);
-    let g = gpus as f64;
-    // Ring: 2(g-1)/g of the data crosses each link; 2(g-1) latency hops.
-    let t = 2.0 * (g - 1.0) / g * bytes / bw + 2.0 * (g - 1.0) * lat;
-    // Hierarchical penalty when spanning nodes: the IB stage moves
-    // bytes/node_count at far lower bandwidth — dominate via min BW
-    // (already selected) plus an extra intra-node stage.
-    if c.link_for(gpus) == LinkKind::InfiniBand {
-        let intra = allreduce_us(c, bytes, c.gpus_per_node.min(gpus));
-        t + 0.5 * intra
-    } else {
-        t
-    }
+    collective::allreduce_us(c, bytes, gpus, 1, 1)
 }
 
 /// All-gather where each GPU contributes `bytes` shard, microseconds.
 pub fn allgather_us(c: &ClusterSpec, bytes: f64, gpus: u32) -> f64 {
-    if gpus <= 1 {
-        return 0.0;
-    }
-    let (bw, lat) = per_gpu_bw_kbus(c, gpus);
-    let g = gpus as f64;
-    (g - 1.0) / g * bytes * g / bw + (g - 1.0) * lat
+    collective::allgather_us(c, bytes, gpus, 1, 1)
 }
 
 /// All-to-all of `bytes` sent per GPU (MoE dispatch/combine patterns,
 /// DeepEP-style), microseconds.
 pub fn alltoall_us(c: &ClusterSpec, bytes: f64, gpus: u32) -> f64 {
-    if gpus <= 1 {
-        return 0.0;
-    }
-    let (bw, lat) = per_gpu_bw_kbus(c, gpus);
-    let g = gpus as f64;
-    (g - 1.0) / g * bytes / bw + lat * (g - 1.0).sqrt() * 2.0
+    collective::alltoall_us(c, bytes, gpus, 1, 1)
+}
+
+/// Placed all-reduce: the group spread over `span` NVLink domains with
+/// `rails`-way striping (see [`crate::topology::Placement`]).
+pub fn allreduce_placed_us(c: &ClusterSpec, bytes: f64, gpus: u32, span: u32, rails: u32) -> f64 {
+    collective::allreduce_us(c, bytes, gpus, span, rails)
+}
+
+/// Placed all-gather.
+pub fn allgather_placed_us(c: &ClusterSpec, bytes: f64, gpus: u32, span: u32, rails: u32) -> f64 {
+    collective::allgather_us(c, bytes, gpus, span, rails)
+}
+
+/// Placed all-to-all.
+pub fn alltoall_placed_us(c: &ClusterSpec, bytes: f64, gpus: u32, span: u32, rails: u32) -> f64 {
+    collective::alltoall_us(c, bytes, gpus, span, rails)
 }
 
 /// Point-to-point transfer (PP boundary, disaggregated KV transfer).
 pub fn p2p_us(c: &ClusterSpec, bytes: f64, cross_node: bool) -> f64 {
-    let link = if cross_node { LinkKind::InfiniBand } else { LinkKind::NvLink };
-    let bw = c.p2p_bw_gbs(link) * 1e3 * 0.9;
-    c.link_latency_us(link) + bytes / bw
+    collective::p2p_us(c, bytes, cross_node, 1)
 }
 
 #[cfg(test)]
@@ -100,7 +92,7 @@ mod tests {
     fn small_message_latency_floor() {
         let c = cluster(1);
         let t = allreduce_us(&c, 1024.0, 8);
-        assert!(t >= 2.0 * 7.0 * c.nvlink_latency_us * 0.99);
+        assert!(t >= 2.0 * 7.0 * c.fabric.intra_latency_us * 0.99);
     }
 
     #[test]
@@ -117,5 +109,15 @@ mod tests {
         let t2 = allgather_us(&c, 1e7, 2);
         let t8 = allgather_us(&c, 1e7, 8);
         assert!(t8 > t2 * 2.0);
+    }
+
+    #[test]
+    fn placed_variants_match_packed_on_legacy_fabric() {
+        // The legacy model ignores spans: every placement prices
+        // identically (the seed behavior, bit-for-bit).
+        let c = cluster(2);
+        assert_eq!(allreduce_placed_us(&c, 1e8, 16, 2, 1), allreduce_us(&c, 1e8, 16));
+        assert_eq!(alltoall_placed_us(&c, 1e7, 8, 2, 4), alltoall_us(&c, 1e7, 8));
+        assert_eq!(allgather_placed_us(&c, 1e7, 16, 2, 4), allgather_us(&c, 1e7, 16));
     }
 }

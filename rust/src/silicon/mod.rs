@@ -58,9 +58,15 @@ impl Silicon {
             Op::MoeGemm { tokens, experts, inter, hidden, dtype, imbalance, .. } => {
                 moe::grouped_gemm_us(gpu, &self.fw, tokens, experts, inter, hidden, dtype, imbalance)
             }
-            Op::AllReduce { bytes, gpus, .. } => comm::allreduce_us(&self.cluster, bytes, gpus),
-            Op::AllGather { bytes, gpus, .. } => comm::allgather_us(&self.cluster, bytes, gpus),
-            Op::AllToAll { bytes, gpus, .. } => comm::alltoall_us(&self.cluster, bytes, gpus),
+            Op::AllReduce { bytes, gpus, span, rails, .. } => {
+                comm::allreduce_placed_us(&self.cluster, bytes, gpus, span, rails)
+            }
+            Op::AllGather { bytes, gpus, span, rails, .. } => {
+                comm::allgather_placed_us(&self.cluster, bytes, gpus, span, rails)
+            }
+            Op::AllToAll { bytes, gpus, span, rails, .. } => {
+                comm::alltoall_placed_us(&self.cluster, bytes, gpus, span, rails)
+            }
             Op::P2p { bytes, cross_node, .. } => comm::p2p_us(&self.cluster, bytes, cross_node),
             Op::Elementwise { bytes, .. } => {
                 bytes / (gpu.mem_bw_gbs * 1e3) + gpu.launch_us

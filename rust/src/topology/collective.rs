@@ -1,0 +1,603 @@
+//! Per-algorithm collective cost models over a placement's link path.
+//!
+//! Paper §4.4 prices "AllReduce, AllGather, AllToAll, and
+//! point-to-point transfers across message sizes and GPU counts"; this
+//! module adds the *where*: every cost is computed over the
+//! [`LinkPath`] a placement induces (ranks per NVLink domain, domains
+//! spanned, rails striped), and the exported entry points select the
+//! min-cost algorithm per message size — flat ring vs tree vs
+//! hierarchical two-stage for all-reduce/all-gather, pairwise vs
+//! hierarchical (rail-striped) for all-to-all.
+//!
+//! The seed's closed-form flat formulas are kept verbatim as the
+//! [`FabricModel::Legacy`](crate::topology::fabric::FabricModel) path
+//! (bit-for-bit, pinned in `tests/topology.rs`);
+//! [`crate::silicon::comm`] delegates here for both models.
+
+use crate::hardware::{ClusterSpec, LinkKind};
+use crate::ops::Op;
+
+/// Protocol/algorithm efficiency of NCCL-class collectives vs raw link
+/// bandwidth (shared with the legacy formulas — same constant the seed
+/// used).
+pub const COLL_EFF: f64 = 0.80;
+/// Point-to-point protocol efficiency (KV transfer, PP boundary).
+pub const P2P_EFF: f64 = 0.9;
+
+// ---------------------------------------------------------------------------
+// Legacy (seed) formulas — the flat NVLink-vs-IB switch, bit-for-bit.
+// ---------------------------------------------------------------------------
+
+fn legacy_bw_lat(c: &ClusterSpec, gpus: u32) -> (f64, f64) {
+    let link = c.link_for(gpus);
+    let bw = c.p2p_bw_gbs(link) * 1e3 * COLL_EFF; // GB/s -> bytes/us
+    (bw, c.link_latency_us(link))
+}
+
+/// The seed's ring all-reduce (with its hierarchical cross-node
+/// penalty), microseconds.
+pub fn legacy_allreduce_us(c: &ClusterSpec, bytes: f64, gpus: u32) -> f64 {
+    if gpus <= 1 {
+        return 0.0;
+    }
+    let (bw, lat) = legacy_bw_lat(c, gpus);
+    let g = gpus as f64;
+    let t = 2.0 * (g - 1.0) / g * bytes / bw + 2.0 * (g - 1.0) * lat;
+    if c.link_for(gpus) == LinkKind::InfiniBand {
+        let intra = legacy_allreduce_us(c, bytes, c.gpus_per_node.min(gpus));
+        t + 0.5 * intra
+    } else {
+        t
+    }
+}
+
+/// The seed's all-gather (each GPU contributes a `bytes` shard).
+pub fn legacy_allgather_us(c: &ClusterSpec, bytes: f64, gpus: u32) -> f64 {
+    if gpus <= 1 {
+        return 0.0;
+    }
+    let (bw, lat) = legacy_bw_lat(c, gpus);
+    let g = gpus as f64;
+    (g - 1.0) / g * bytes * g / bw + (g - 1.0) * lat
+}
+
+/// The seed's all-to-all (`bytes` sent per GPU).
+pub fn legacy_alltoall_us(c: &ClusterSpec, bytes: f64, gpus: u32) -> f64 {
+    if gpus <= 1 {
+        return 0.0;
+    }
+    let (bw, lat) = legacy_bw_lat(c, gpus);
+    let g = gpus as f64;
+    (g - 1.0) / g * bytes / bw + lat * (g - 1.0).sqrt() * 2.0
+}
+
+/// The seed's point-to-point transfer.
+pub fn legacy_p2p_us(c: &ClusterSpec, bytes: f64, cross: bool) -> f64 {
+    let link = if cross { LinkKind::InfiniBand } else { LinkKind::NvLink };
+    let bw = c.p2p_bw_gbs(link) * 1e3 * P2P_EFF;
+    c.link_latency_us(link) + bytes / bw
+}
+
+// ---------------------------------------------------------------------------
+// Tiered path construction.
+// ---------------------------------------------------------------------------
+
+/// The link path a placed group communicates over. Bandwidths are
+/// effective bytes/µs (protocol efficiency applied).
+#[derive(Clone, Copy, Debug)]
+pub struct LinkPath {
+    /// Group width (ranks).
+    pub ranks: f64,
+    /// Ranks per NVLink domain.
+    pub per_domain: f64,
+    /// Domains spanned (clamped to the feasible range — a requested
+    /// span below the natural minimum prices as naturally packed).
+    pub span: f64,
+    pub intra_bw: f64,
+    pub intra_lat: f64,
+    /// Per-GPU single-rail bandwidth across domains.
+    pub inter_bw: f64,
+    /// Rails a cross-domain stage stripes over (>= 1).
+    pub rails: f64,
+    pub inter_lat: f64,
+}
+
+impl LinkPath {
+    /// Leader-aggregated bandwidth of a hierarchical inter stage.
+    fn agg_bw(&self) -> f64 {
+        self.inter_bw * self.rails
+    }
+
+    /// The ideal-link version of this path (latency-free, efficiency
+    /// 1.0) — the Speed-of-Light bound used by
+    /// [`crate::perfdb::sol`] on tiered fabrics.
+    pub fn bound(&self) -> LinkPath {
+        LinkPath {
+            intra_bw: self.intra_bw / COLL_EFF,
+            inter_bw: self.inter_bw / COLL_EFF,
+            intra_lat: 0.0,
+            inter_lat: 0.0,
+            ..*self
+        }
+    }
+
+    fn crosses(&self) -> bool {
+        self.span > 1.0
+    }
+}
+
+/// Build the link path of a `gpus`-wide group placed over `span`
+/// domains with `rails`-way striping. Spans clamp into the feasible
+/// range, so ops constructed with the packed default price as
+/// naturally packed.
+pub fn path_for(c: &ClusterSpec, gpus: u32, span: u32, rails: u32) -> LinkPath {
+    let g = gpus.max(1);
+    let natural = super::placement::natural_span(c, g);
+    let ndom = super::placement::num_domains(c);
+    let span = span.max(natural).min(ndom).min(g);
+    let per_domain = g.div_ceil(span);
+    let f = &c.fabric;
+    let rails = rails.clamp(1, f.rails.max(1));
+    // Second-level fabric: a group spanning more nodes than one pod
+    // pays the spine on its inter stage.
+    let nodes = g.div_ceil(c.gpus_per_node.max(1));
+    let (rail_gbs, inter_lat) = if f.pod_nodes > 0 && nodes > f.pod_nodes {
+        (f.pod_gbs, f.pod_latency_us)
+    } else {
+        (f.rail_gbs, f.ib_latency_us)
+    };
+    LinkPath {
+        ranks: g as f64,
+        per_domain: per_domain as f64,
+        span: span as f64,
+        intra_bw: c.nvlink_bw_gbs() * 1e3 * COLL_EFF,
+        intra_lat: f.intra_latency_us,
+        inter_bw: rail_gbs * 1e3 * COLL_EFF,
+        rails: rails as f64,
+        inter_lat,
+    }
+}
+
+/// Ring all-reduce primitive: 2(g-1)/g of the data per link, 2(g-1)
+/// latency hops.
+fn ring_allreduce(bytes: f64, g: f64, bw: f64, lat: f64) -> f64 {
+    if g <= 1.0 {
+        return 0.0;
+    }
+    2.0 * (g - 1.0) / g * bytes / bw + 2.0 * (g - 1.0) * lat
+}
+
+fn ring_allgather(bytes: f64, g: f64, bw: f64, lat: f64) -> f64 {
+    if g <= 1.0 {
+        return 0.0;
+    }
+    (g - 1.0) * (bytes / bw + lat)
+}
+
+fn bottleneck(p: &LinkPath) -> (f64, f64) {
+    if p.crosses() {
+        (p.inter_bw, p.inter_lat)
+    } else {
+        (p.intra_bw, p.intra_lat)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tiered algorithms (each public so the `topo` cost tables and the
+// property tests can inspect the selection).
+// ---------------------------------------------------------------------------
+
+/// Flat ring all-reduce over the path's bottleneck link.
+pub fn allreduce_flat_us(p: &LinkPath, bytes: f64) -> f64 {
+    let (bw, lat) = bottleneck(p);
+    ring_allreduce(bytes, p.ranks, bw, lat)
+}
+
+/// Binary-tree all-reduce (reduce + broadcast): latency-optimal for
+/// small messages, bandwidth-poor for large ones.
+pub fn allreduce_tree_us(p: &LinkPath, bytes: f64) -> f64 {
+    if p.ranks <= 1.0 {
+        return 0.0;
+    }
+    let (bw, lat) = bottleneck(p);
+    let stages = 2.0 * p.ranks.log2().ceil().max(1.0);
+    stages * (bytes / bw + lat)
+}
+
+/// Hierarchical two-stage all-reduce: ring reduce-scatter/all-gather
+/// inside each NVLink domain, then a rail-striped ring all-reduce of
+/// the per-domain shards across domains.
+pub fn allreduce_hier_us(p: &LinkPath, bytes: f64) -> f64 {
+    if !p.crosses() {
+        return allreduce_flat_us(p, bytes);
+    }
+    ring_allreduce(bytes, p.per_domain, p.intra_bw, p.intra_lat)
+        + ring_allreduce(bytes / p.per_domain, p.span, p.agg_bw(), p.inter_lat)
+}
+
+/// Flat ring all-gather of per-GPU `bytes` shards.
+pub fn allgather_flat_us(p: &LinkPath, bytes: f64) -> f64 {
+    let (bw, lat) = bottleneck(p);
+    ring_allgather(bytes, p.ranks, bw, lat)
+}
+
+/// Hierarchical all-gather: intra-domain ring, then domain shards
+/// exchanged across rails.
+pub fn allgather_hier_us(p: &LinkPath, bytes: f64) -> f64 {
+    if !p.crosses() {
+        return allgather_flat_us(p, bytes);
+    }
+    ring_allgather(bytes, p.per_domain, p.intra_bw, p.intra_lat)
+        + (p.span - 1.0) * (p.per_domain * bytes / p.agg_bw() + p.inter_lat)
+}
+
+/// Pairwise all-to-all: every rank exchanges with every other over the
+/// bottleneck link (the seed's cost shape).
+pub fn alltoall_flat_us(p: &LinkPath, bytes: f64) -> f64 {
+    if p.ranks <= 1.0 {
+        return 0.0;
+    }
+    let (bw, lat) = bottleneck(p);
+    (p.ranks - 1.0) / p.ranks * bytes / bw + lat * (p.ranks - 1.0).sqrt() * 2.0
+}
+
+/// Hierarchical all-to-all: the local fraction moves on NVLink, the
+/// remote fraction is gathered per domain and striped across rails
+/// (DeepEP/PXN-style). Rail striping shares the domain's rails among
+/// its senders, so it wins on wide-rail fabrics and loses when one
+/// rail per GPU is already available — min-cost selection decides.
+pub fn alltoall_hier_us(p: &LinkPath, bytes: f64) -> f64 {
+    if !p.crosses() {
+        return alltoall_flat_us(p, bytes);
+    }
+    let local = (p.per_domain - 1.0).max(0.0) / (p.ranks - 1.0);
+    let remote = 1.0 - local;
+    let remote_bw = p.agg_bw() / p.per_domain;
+    bytes * local / p.intra_bw
+        + 2.0 * (p.per_domain - 1.0).max(0.0).sqrt() * p.intra_lat
+        + bytes * remote / remote_bw
+        + 2.0 * (p.span - 1.0).sqrt() * p.inter_lat
+}
+
+// ---------------------------------------------------------------------------
+// Min-cost entry points (model dispatch).
+// ---------------------------------------------------------------------------
+
+/// All-reduce of `bytes` across a placed group, microseconds.
+pub fn allreduce_us(c: &ClusterSpec, bytes: f64, gpus: u32, span: u32, rails: u32) -> f64 {
+    if gpus <= 1 {
+        return 0.0;
+    }
+    if !c.fabric.placement_aware() {
+        return legacy_allreduce_us(c, bytes, gpus);
+    }
+    let p = path_for(c, gpus, span, rails);
+    allreduce_flat_us(&p, bytes)
+        .min(allreduce_tree_us(&p, bytes))
+        .min(allreduce_hier_us(&p, bytes))
+}
+
+/// All-gather where each GPU contributes a `bytes` shard.
+pub fn allgather_us(c: &ClusterSpec, bytes: f64, gpus: u32, span: u32, rails: u32) -> f64 {
+    if gpus <= 1 {
+        return 0.0;
+    }
+    if !c.fabric.placement_aware() {
+        return legacy_allgather_us(c, bytes, gpus);
+    }
+    let p = path_for(c, gpus, span, rails);
+    allgather_flat_us(&p, bytes).min(allgather_hier_us(&p, bytes))
+}
+
+/// All-to-all of `bytes` sent per GPU (MoE dispatch/combine).
+pub fn alltoall_us(c: &ClusterSpec, bytes: f64, gpus: u32, span: u32, rails: u32) -> f64 {
+    if gpus <= 1 {
+        return 0.0;
+    }
+    if !c.fabric.placement_aware() {
+        return legacy_alltoall_us(c, bytes, gpus);
+    }
+    let p = path_for(c, gpus, span, rails);
+    alltoall_flat_us(&p, bytes).min(alltoall_hier_us(&p, bytes))
+}
+
+/// Point-to-point transfer over the fabric path (PP stage boundary,
+/// disaggregated KV transfer). `cross` = the endpoints live in
+/// different NVLink domains.
+pub fn p2p_us(c: &ClusterSpec, bytes: f64, cross: bool, rails: u32) -> f64 {
+    if !c.fabric.placement_aware() {
+        return legacy_p2p_us(c, bytes, cross);
+    }
+    if cross {
+        let p = path_for(c, c.domain_size().saturating_mul(2).max(2), 2, rails);
+        let bw = p.inter_bw / COLL_EFF * P2P_EFF * p.rails;
+        p.inter_lat + bytes / bw
+    } else {
+        let bw = c.nvlink_bw_gbs() * 1e3 * P2P_EFF;
+        c.fabric.intra_latency_us + bytes / bw
+    }
+}
+
+/// The ratio a placement moves a collective's cost off its naturally
+/// packed baseline — how [`crate::perfdb::PerfDatabase`] (profiled at
+/// the packed layout) prices placed ops without re-profiling: the
+/// interpolated base latency is scaled by this analytic factor. 1.0 on
+/// legacy fabrics, for non-collective ops, and for packed placements.
+pub fn placement_factor(c: &ClusterSpec, op: &Op) -> f64 {
+    if !c.fabric.placement_aware() {
+        return 1.0;
+    }
+    // Packed ops (the majority of grid points) would compute identical
+    // placed and packed costs — skip both evaluations on the query hot
+    // path. Exact: the ratio below is 1.0 bit-for-bit in this case.
+    match *op {
+        Op::AllReduce { span, rails, .. }
+        | Op::AllGather { span, rails, .. }
+        | Op::AllToAll { span, rails, .. }
+            if span <= 1 && rails <= 1 =>
+        {
+            return 1.0;
+        }
+        _ => {}
+    }
+    let ratio = |placed: f64, packed: f64| {
+        if packed > 0.0 && placed.is_finite() {
+            placed / packed
+        } else {
+            1.0
+        }
+    };
+    match *op {
+        Op::AllReduce { bytes, gpus, span, rails, .. } => ratio(
+            allreduce_us(c, bytes, gpus, span, rails),
+            allreduce_us(c, bytes, gpus, 1, 1),
+        ),
+        Op::AllGather { bytes, gpus, span, rails, .. } => ratio(
+            allgather_us(c, bytes, gpus, span, rails),
+            allgather_us(c, bytes, gpus, 1, 1),
+        ),
+        Op::AllToAll { bytes, gpus, span, rails, .. } => ratio(
+            alltoall_us(c, bytes, gpus, span, rails),
+            alltoall_us(c, bytes, gpus, 1, 1),
+        ),
+        _ => 1.0,
+    }
+}
+
+/// Speed-of-Light bound of a placed collective on a tiered fabric
+/// (latency-free, efficiency-1 links, min over algorithms). `None` on
+/// legacy fabrics — [`crate::perfdb::sol`] keeps the seed's roofline
+/// there.
+pub fn sol_bound_us(c: &ClusterSpec, op: &Op) -> Option<f64> {
+    if !c.fabric.placement_aware() {
+        return None;
+    }
+    Some(match *op {
+        Op::AllReduce { bytes, gpus, span, rails, .. } => {
+            if gpus <= 1 {
+                0.0
+            } else {
+                let p = path_for(c, gpus, span, rails).bound();
+                allreduce_flat_us(&p, bytes)
+                    .min(allreduce_tree_us(&p, bytes))
+                    .min(allreduce_hier_us(&p, bytes))
+            }
+        }
+        Op::AllGather { bytes, gpus, span, rails, .. }
+        | Op::AllToAll { bytes, gpus, span, rails, .. } => {
+            if gpus <= 1 {
+                0.0
+            } else {
+                let p = path_for(c, gpus, span, rails).bound();
+                match op {
+                    Op::AllGather { .. } => {
+                        allgather_flat_us(&p, bytes).min(allgather_hier_us(&p, bytes))
+                    }
+                    _ => alltoall_flat_us(&p, bytes).min(alltoall_hier_us(&p, bytes)),
+                }
+            }
+        }
+        Op::P2p { bytes, cross_node, .. } => {
+            let link = if cross_node {
+                c.fabric.rail_gbs
+            } else {
+                c.nvlink_bw_gbs()
+            };
+            bytes / (link * 1e3)
+        }
+        _ => return None,
+    })
+}
+
+/// One row per (collective, algorithm): the cost table the `topo`
+/// subcommand prints for a preset.
+pub fn algo_table(
+    c: &ClusterSpec,
+    gpus: u32,
+    span: u32,
+    rails: u32,
+    bytes: f64,
+) -> Vec<(&'static str, f64)> {
+    if !c.fabric.placement_aware() {
+        return vec![
+            ("allreduce/ring(legacy)", legacy_allreduce_us(c, bytes, gpus)),
+            ("allgather/ring(legacy)", legacy_allgather_us(c, bytes, gpus)),
+            ("alltoall/pairwise(legacy)", legacy_alltoall_us(c, bytes, gpus)),
+        ];
+    }
+    let p = path_for(c, gpus, span, rails);
+    vec![
+        ("allreduce/ring", allreduce_flat_us(&p, bytes)),
+        ("allreduce/tree", allreduce_tree_us(&p, bytes)),
+        ("allreduce/hier", allreduce_hier_us(&p, bytes)),
+        ("allgather/ring", allgather_flat_us(&p, bytes)),
+        ("allgather/hier", allgather_hier_us(&p, bytes)),
+        ("alltoall/pairwise", alltoall_flat_us(&p, bytes)),
+        ("alltoall/hier", alltoall_hier_us(&p, bytes)),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware::h100_sxm;
+    use crate::topology::fabric;
+    use crate::util::rng::Rng;
+
+    fn hgx(nodes: u32) -> ClusterSpec {
+        ClusterSpec::with_fabric(h100_sxm(), 8, nodes, fabric::hgx_h100())
+    }
+
+    #[test]
+    fn single_rank_is_free_in_both_models() {
+        let legacy = ClusterSpec::new(h100_sxm(), 8, 2);
+        let tiered = hgx(2);
+        for c in [legacy, tiered] {
+            assert_eq!(allreduce_us(&c, 1e8, 1, 1, 1), 0.0);
+            assert_eq!(alltoall_us(&c, 1e8, 1, 1, 1), 0.0);
+            assert_eq!(allgather_us(&c, 1e8, 1, 1, 1), 0.0);
+        }
+    }
+
+    #[test]
+    fn hier_allreduce_never_exceeds_flat_ring_cross_node() {
+        // Property (satellite): on cross-node groups of every tiered
+        // preset, the hierarchical two-stage all-reduce is at most the
+        // flat cross-fabric ring, across message sizes, group widths
+        // and rail choices (power-of-two groups — the widths the
+        // profiled grid snaps to).
+        let mut rng = Rng::new(0x70F0);
+        for f in fabric::all() {
+            let c = ClusterSpec::with_fabric(h100_sxm(), 8, 16, f);
+            for _ in 0..200 {
+                let bytes = 10f64.powf(2.0 + 7.0 * rng.f64()); // 100 B .. 1 GB
+                let g = 2u32.pow(1 + rng.below(7) as u32); // 2 .. 128
+                if g <= c.domain_size() {
+                    continue; // intra-domain: hier == flat by definition
+                }
+                let span = super::super::placement::natural_span(&c, g)
+                    * (1 + rng.below(2) as u32);
+                let rails = 1 + rng.below(c.fabric.rails as u64) as u32;
+                let p = path_for(&c, g, span, rails);
+                let hier = allreduce_hier_us(&p, bytes);
+                let flat = allreduce_flat_us(&p, bytes);
+                assert!(
+                    hier <= flat * (1.0 + 1e-9),
+                    "{}: g={g} span={span} rails={rails} bytes={bytes:.0}: hier={hier} flat={flat}",
+                    c.fabric.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn min_cost_selection_tracks_message_size() {
+        // Small messages: tree (latency-optimal) beats ring; large
+        // messages: hierarchical (bandwidth-optimal) wins on a
+        // cross-node path.
+        let c = hgx(2);
+        let p = path_for(&c, 16, 2, 4);
+        assert!(allreduce_tree_us(&p, 1024.0) < allreduce_flat_us(&p, 1024.0));
+        assert!(allreduce_hier_us(&p, 1e9) < allreduce_tree_us(&p, 1e9));
+        // The dispatcher equals the component minimum.
+        for bytes in [1024.0, 1e6, 1e9] {
+            let sel = allreduce_us(&c, bytes, 16, 2, 4);
+            let min = allreduce_flat_us(&p, bytes)
+                .min(allreduce_tree_us(&p, bytes))
+                .min(allreduce_hier_us(&p, bytes));
+            assert_eq!(sel, min);
+        }
+    }
+
+    #[test]
+    fn rails_help_large_cross_domain_collectives() {
+        let c = ClusterSpec::with_fabric(h100_sxm(), 8, 4, fabric::dgx_multirail());
+        let one = allreduce_us(&c, 1e9, 32, 4, 1);
+        let eight = allreduce_us(&c, 1e9, 32, 4, 8);
+        assert!(eight < one, "striping must help: r1={one} r8={eight}");
+        let a2a_one = alltoall_us(&c, 1e8, 32, 4, 1);
+        let a2a_eight = alltoall_us(&c, 1e8, 32, 4, 8);
+        assert!(a2a_eight <= a2a_one, "a2a r1={a2a_one} r8={a2a_eight}");
+    }
+
+    #[test]
+    fn span_clamps_to_natural() {
+        // A packed-constructed op on a group wider than a domain prices
+        // as naturally packed, not as an impossible single-domain group.
+        let c = hgx(2);
+        let under = path_for(&c, 16, 1, 1);
+        assert_eq!(under.span, 2.0);
+        assert_eq!(under.per_domain, 8.0);
+        let over = path_for(&c, 4, 64, 1);
+        assert!(over.span <= 2.0);
+    }
+
+    #[test]
+    fn wide_domain_prices_everything_on_nvlink() {
+        let c = ClusterSpec::with_fabric(h100_sxm(), 4, 8, fabric::gb200_nvl72());
+        // 32 GPUs inside one NVL72 domain: far cheaper than the same
+        // group on an hgx fabric of the same GPU count.
+        let wide = allreduce_us(&c, 1e8, 32, 1, 1);
+        let narrow = allreduce_us(&hgx(4), 1e8, 32, 1, 1);
+        assert!(wide < narrow * 0.8, "wide={wide} narrow={narrow}");
+    }
+
+    #[test]
+    fn pod_spine_penalizes_very_wide_groups() {
+        // Two-node pods: a 16-GPU group stays inside one pod, a 32-GPU
+        // group (4 nodes) crosses the spine and pays its
+        // bandwidth/latency on the inter stage.
+        let mut f = fabric::dgx_multirail();
+        f.pod_nodes = 2;
+        f.rails = 1;
+        let c = ClusterSpec::with_fabric(h100_sxm(), 8, 4, f);
+        let in_pod = allreduce_us(&c, 1e8, 16, 2, 1);
+        let cross_pod = allreduce_us(&c, 1e8, 32, 4, 1);
+        assert!(cross_pod > in_pod * 1.5, "in={in_pod} cross={cross_pod}");
+    }
+
+    #[test]
+    fn placement_factor_is_one_when_packed_or_legacy() {
+        let legacy = ClusterSpec::new(h100_sxm(), 8, 2);
+        let op = Op::AllReduce { bytes: 1e8, gpus: 16, span: 2, rails: 1, count: 1 };
+        assert_eq!(placement_factor(&legacy, &op), 1.0);
+        let tiered = hgx(2);
+        let packed = Op::AllReduce { bytes: 1e8, gpus: 8, span: 1, rails: 1, count: 1 };
+        assert_eq!(placement_factor(&tiered, &packed), 1.0);
+        // A TP8 group forced across two domains prices worse than
+        // packed — the factor exceeds 1.
+        let spanned = Op::AllReduce { bytes: 1e8, gpus: 8, span: 2, rails: 1, count: 1 };
+        assert!(placement_factor(&tiered, &spanned) > 1.0);
+        // Rail striping on a cross-node group prices better — below 1.
+        let striped = Op::AllToAll { bytes: 1e8, gpus: 16, span: 2, rails: 4, count: 1 };
+        assert!(placement_factor(&tiered, &striped) <= 1.0);
+    }
+
+    #[test]
+    fn sol_bound_is_below_the_model() {
+        let c = hgx(2);
+        for (gpus, span, rails) in [(8u32, 1u32, 1u32), (16, 2, 1), (16, 2, 4)] {
+            for bytes in [1e4, 1e6, 1e8] {
+                let op = Op::AllReduce { bytes, gpus, span, rails, count: 1 };
+                let bound = sol_bound_us(&c, &op).unwrap();
+                let model = allreduce_us(&c, bytes, gpus, span, rails);
+                assert!(bound <= model * (1.0 + 1e-9), "bound={bound} model={model}");
+            }
+        }
+        // Legacy fabrics answer None (seed roofline kept).
+        let legacy = ClusterSpec::new(h100_sxm(), 8, 2);
+        let op = Op::AllReduce { bytes: 1e6, gpus: 16, span: 2, rails: 1, count: 1 };
+        assert!(sol_bound_us(&legacy, &op).is_none());
+    }
+
+    #[test]
+    fn p2p_cross_domain_pays_the_rail() {
+        let c = hgx(2);
+        let nv = p2p_us(&c, 1e8, false, 1);
+        let ib = p2p_us(&c, 1e8, true, 1);
+        assert!(ib > nv * 5.0, "nv={nv} ib={ib}");
+        // Legacy model keeps the seed formula bit-for-bit.
+        let legacy = ClusterSpec::new(h100_sxm(), 8, 2);
+        assert_eq!(p2p_us(&legacy, 1e8, true, 1), legacy_p2p_us(&legacy, 1e8, true));
+    }
+}

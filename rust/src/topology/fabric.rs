@@ -1,0 +1,218 @@
+//! Tiered fabric descriptions (paper §1 "from cluster topology down to
+//! engine-specific flags").
+//!
+//! The seed modeled topology as a single flat NVLink-vs-IB switch
+//! ([`crate::hardware::ClusterSpec::link_for`]): every group of the
+//! same size priced identically regardless of where its ranks land, and
+//! wide-NVLink (GB200 NVL72-class), PCIe-only and multi-rail IB fabrics
+//! were unrepresentable. A [`FabricSpec`] names the tiers explicitly:
+//! the NVLink-domain width, the intra-domain link, the per-GPU IB rail
+//! and how many rails a cross-domain stage may stripe over, plus an
+//! optional second-level (pod/spine) fabric.
+//!
+//! Two pricing models coexist:
+//! * [`FabricModel::Legacy`] reproduces the seed's flat switch
+//!   **bit-for-bit** (pinned by `tests/topology.rs`) — it is what
+//!   [`crate::hardware::ClusterSpec::new`] builds, so every existing
+//!   surface prices exactly as before;
+//! * [`FabricModel::Tiered`] enables placement-aware pricing
+//!   ([`super::placement`], [`super::collective`]), selected by the
+//!   named presets / `--fabric`.
+
+/// Which cost model prices collectives over this fabric.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FabricModel {
+    /// The seed's flat NVLink-vs-IB switch. Placement enumeration
+    /// collapses to the packed layout and every collective uses the
+    /// original closed-form ring formulas.
+    Legacy,
+    /// Tiered, placement-aware pricing: per-algorithm cost models with
+    /// min-cost selection over the placement's link path.
+    Tiered,
+}
+
+/// A tiered interconnect description. `Copy` on purpose: it rides
+/// inside [`crate::hardware::ClusterSpec`] everywhere a cluster goes.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FabricSpec {
+    /// Preset id (stable CLI / service name).
+    pub name: &'static str,
+    /// GPUs wired into one NVLink/NVSwitch domain. 1 = no NVLink
+    /// (PCIe-only boxes); may exceed the GPUs per node (GB200 NVL72:
+    /// one 72-GPU domain spanning 18 compute trays).
+    pub nvlink_domain: u32,
+    /// Intra-domain bandwidth override, GB/s per GPU. 0.0 = use the
+    /// GPU's own `nvlink_gbs` datasheet number (NVSwitch-class parts);
+    /// a positive value models a slower tier (PCIe).
+    pub intra_gbs: f64,
+    /// Base latency of an intra-domain hop, microseconds.
+    pub intra_latency_us: f64,
+    /// Per-GPU bandwidth of one IB rail (unidirectional), GB/s.
+    pub rail_gbs: f64,
+    /// Independent IB rails per node that a cross-domain stage may
+    /// stripe over (hierarchical leader stages aggregate up to this
+    /// many; flat algorithms always pay the single per-GPU rail).
+    pub rails: u32,
+    /// Base latency of an IB hop, microseconds.
+    pub ib_latency_us: f64,
+    /// Second-level fabric: nodes per pod (0 = single-level). Groups
+    /// spanning more nodes than one pod pay the spine's
+    /// bandwidth/latency on their inter stage.
+    pub pod_nodes: u32,
+    /// Spine bandwidth per GPU, GB/s (used when `pod_nodes > 0`).
+    pub pod_gbs: f64,
+    /// Spine hop latency, microseconds.
+    pub pod_latency_us: f64,
+    pub model: FabricModel,
+}
+
+impl FabricSpec {
+    /// The back-compat fabric [`crate::hardware::ClusterSpec::new`]
+    /// builds: exactly the three hard-coded link constants the seed
+    /// carried (NVLink = the GPU's datasheet number at 2 µs, one
+    /// 50 GB/s IB rail at 8 µs), priced by the legacy flat model.
+    pub const fn legacy(gpus_per_node: u32) -> FabricSpec {
+        FabricSpec {
+            name: "legacy",
+            nvlink_domain: gpus_per_node,
+            intra_gbs: 0.0,
+            intra_latency_us: 2.0,
+            rail_gbs: 50.0,
+            rails: 1,
+            ib_latency_us: 8.0,
+            pod_nodes: 0,
+            pod_gbs: 0.0,
+            pod_latency_us: 0.0,
+            model: FabricModel::Legacy,
+        }
+    }
+
+    /// Placement-aware pricing on?
+    pub fn placement_aware(&self) -> bool {
+        self.model == FabricModel::Tiered
+    }
+}
+
+/// HGX H100/H200 baseboard: 8-GPU NVSwitch domain, 4×400G compute
+/// rails per node.
+pub fn hgx_h100() -> FabricSpec {
+    FabricSpec {
+        name: "hgx-h100",
+        nvlink_domain: 8,
+        intra_gbs: 0.0,
+        intra_latency_us: 2.0,
+        rail_gbs: 50.0,
+        rails: 4,
+        ib_latency_us: 8.0,
+        pod_nodes: 0,
+        pod_gbs: 0.0,
+        pod_latency_us: 0.0,
+        model: FabricModel::Tiered,
+    }
+}
+
+/// GB200 NVL72 rack: one 72-GPU NVLink5 domain spanning 18 compute
+/// trays (4 GPUs/tray), 4 rails per tray beyond the rack.
+pub fn gb200_nvl72() -> FabricSpec {
+    FabricSpec {
+        name: "gb200-nvl72",
+        nvlink_domain: 72,
+        intra_gbs: 0.0,
+        intra_latency_us: 1.5,
+        rail_gbs: 50.0,
+        rails: 4,
+        ib_latency_us: 8.0,
+        pod_nodes: 0,
+        pod_gbs: 0.0,
+        pod_latency_us: 0.0,
+        model: FabricModel::Tiered,
+    }
+}
+
+/// PCIe-only A100 servers: no NVLink domain, PCIe gen4 x16 between
+/// GPUs in a node, a single 200G rail out.
+pub fn a100_pcie() -> FabricSpec {
+    FabricSpec {
+        name: "a100-pcie",
+        nvlink_domain: 1,
+        intra_gbs: 28.0,
+        intra_latency_us: 6.0,
+        rail_gbs: 25.0,
+        rails: 1,
+        ib_latency_us: 10.0,
+        pod_nodes: 0,
+        pod_gbs: 0.0,
+        pod_latency_us: 0.0,
+        model: FabricModel::Tiered,
+    }
+}
+
+/// DGX-class multi-rail pod: 8-GPU NVSwitch domain, 8×400G rails per
+/// node, 32-node pods behind a 2:1-oversubscribed spine.
+pub fn dgx_multirail() -> FabricSpec {
+    FabricSpec {
+        name: "dgx-multirail",
+        nvlink_domain: 8,
+        intra_gbs: 0.0,
+        intra_latency_us: 2.0,
+        rail_gbs: 50.0,
+        rails: 8,
+        ib_latency_us: 8.0,
+        pod_nodes: 32,
+        pod_gbs: 25.0,
+        pod_latency_us: 16.0,
+        model: FabricModel::Tiered,
+    }
+}
+
+/// Every named preset (the `topo` subcommand iterates this; `legacy`
+/// is constructed per cluster geometry and listed separately).
+pub fn all() -> Vec<FabricSpec> {
+    vec![hgx_h100(), gb200_nvl72(), a100_pcie(), dgx_multirail()]
+}
+
+/// Resolve a fabric by CLI/service name. `legacy` needs the cluster's
+/// `gpus_per_node` to pin the domain width.
+pub fn by_name(name: &str, gpus_per_node: u32) -> Option<FabricSpec> {
+    let n = name.to_ascii_lowercase();
+    if n == "legacy" {
+        return Some(FabricSpec::legacy(gpus_per_node));
+    }
+    all().into_iter().find(|f| f.name == n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_roundtrip() {
+        for f in all() {
+            let back = by_name(f.name, 8).unwrap();
+            assert_eq!(back, f, "{} does not round-trip", f.name);
+            assert!(back.placement_aware(), "{} presets are tiered", f.name);
+        }
+        assert!(by_name("warp-fabric", 8).is_none());
+    }
+
+    #[test]
+    fn legacy_matches_seed_constants() {
+        let f = by_name("legacy", 4).unwrap();
+        assert_eq!(f.model, FabricModel::Legacy);
+        assert!(!f.placement_aware());
+        assert_eq!(f.nvlink_domain, 4);
+        assert_eq!(f.rail_gbs, 50.0);
+        assert_eq!(f.ib_latency_us, 8.0);
+        assert_eq!(f.intra_latency_us, 2.0);
+        assert_eq!(f.rails, 1);
+    }
+
+    #[test]
+    fn preset_shapes() {
+        assert_eq!(gb200_nvl72().nvlink_domain, 72);
+        assert_eq!(a100_pcie().nvlink_domain, 1);
+        assert!(a100_pcie().intra_gbs > 0.0, "PCIe tier overrides the GPU NVLink number");
+        assert!(dgx_multirail().rails > hgx_h100().rails);
+        assert!(dgx_multirail().pod_nodes > 0 && hgx_h100().pod_nodes == 0);
+    }
+}

@@ -1,0 +1,27 @@
+//! Topology-aware placement & collective-cost subsystem.
+//!
+//! The paper's headline claim is rapid exploration "from cluster
+//! topology down to engine-specific flags"; this subsystem supplies the
+//! topology half:
+//!
+//! * [`fabric`] — tiered [`FabricSpec`] descriptions (NVLink-domain
+//!   width, intra-node tier, per-node IB rails, optional second-level
+//!   pod fabric) with named presets, replacing the seed's three
+//!   hard-coded `ClusterSpec` link constants (kept bit-for-bit behind
+//!   [`crate::hardware::ClusterSpec::new`]);
+//! * [`placement`] — maps a `(tp, pp, ep, dp)` shape onto the fabric,
+//!   enumerating the distinct feasible rank layouts
+//!   ([`Placement`]) the search prices as a structural axis;
+//! * [`collective`] — per-algorithm cost models (flat ring, tree,
+//!   hierarchical two-stage, pairwise vs rail-striped hierarchical
+//!   all-to-all) with min-cost selection per message size over the
+//!   placement's link path. [`crate::silicon::comm`] delegates here;
+//!   [`crate::perfdb`] prices placed collectives by scaling its
+//!   profiled packed baseline with [`collective::placement_factor`].
+
+pub mod collective;
+pub mod fabric;
+pub mod placement;
+
+pub use fabric::{FabricModel, FabricSpec};
+pub use placement::Placement;

@@ -83,6 +83,54 @@ fn bench_plan_keeps_its_contract() {
     }
 }
 
+/// The committed BENCH_topology.json placeholder (or its measured
+/// overwrite) must keep the keys benches/topology.rs writes, and its
+/// fabric list must name real presets.
+#[test]
+fn bench_topology_keeps_its_contract() {
+    let txt = std::fs::read_to_string(repo_root().join("BENCH_topology.json")).unwrap();
+    let j = json::parse(&txt).unwrap();
+    assert_eq!(j.req_str("bench").unwrap(), "topology");
+    for key in [
+        "shapes",
+        "placements_total",
+        "enumerate_ms_median",
+        "collective_price_ms_median",
+        "grid_legacy_ms_median",
+        "grid_tiered_ms_median",
+        "grid_legacy_engines",
+        "grid_tiered_engines",
+    ] {
+        let v = j.req(key).unwrap_or_else(|e| panic!("BENCH_topology.json: {e}"));
+        assert!(
+            matches!(v, Json::Null | Json::Num(_)),
+            "BENCH_topology.json: '{key}' must be a number or null (pending)"
+        );
+    }
+    let fabrics = j
+        .req("fabrics")
+        .unwrap()
+        .as_arr()
+        .expect("BENCH_topology.json: 'fabrics' must be an array");
+    assert!(!fabrics.is_empty());
+    for f in fabrics {
+        let name = f.as_str().expect("fabric entries must be strings");
+        assert!(
+            aiconfigurator::topology::fabric::by_name(name, 8).is_some(),
+            "BENCH_topology.json names unknown fabric '{name}'"
+        );
+    }
+    // A measured run must report at least two placements per shape on
+    // average across the tiered presets (the axis exists); the pending
+    // placeholder carries nulls and is exempt.
+    if let (Some(shapes), Some(total)) = (
+        j.req("shapes").unwrap().as_f64(),
+        j.req("placements_total").unwrap().as_f64(),
+    ) {
+        assert!(total >= shapes, "fewer placements than shapes: {total} < {shapes}");
+    }
+}
+
 /// Every measurement set under artifacts/measurements/<gpu>/ parses,
 /// validates, names a known context, and matches its directory/file
 /// placement (measure::load_dir enforces gpu + table-name agreement).

@@ -29,6 +29,7 @@ fn every_backend_emits_resolved_flags() {
             weight_dtype: Dtype::Fp8,
             kv_dtype: Dtype::Fp8,
             flags,
+            placement: aiconfigurator::topology::Placement::packed(),
         };
         let bundle = generator::generate(
             &Candidate::Aggregated { engine: eng, replicas: 2 },
@@ -66,6 +67,7 @@ fn disagg_bundle_resolved_flags_per_pool() {
         weight_dtype: Dtype::Fp8,
         kv_dtype: Dtype::Fp8,
         flags: be.resolve_flags(&model, &cluster, &wl, &p, b, Dtype::Fp8),
+        placement: aiconfigurator::topology::Placement::packed(),
     };
     let prefill = mk(ParallelSpec::tp(1), 1);
     let decode = mk(ParallelSpec::tp(2), 64);

@@ -17,6 +17,7 @@ fn eng(fw: Framework, tp: u32, batch: u32) -> EngineConfig {
         weight_dtype: Dtype::Fp8,
         kv_dtype: Dtype::Fp8,
         flags: RuntimeFlags::defaults_for(fw),
+        placement: aiconfigurator::topology::Placement::packed(),
     }
 }
 

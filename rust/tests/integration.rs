@@ -52,6 +52,7 @@ fn db_oracle_tracks_silicon_within_tolerance() {
         weight_dtype: Dtype::Fp8,
         kv_dtype: Dtype::Fp8,
         flags: aiconfigurator::config::RuntimeFlags::defaults_for(Framework::TrtLlm),
+        placement: aiconfigurator::topology::Placement::packed(),
     };
     for shape in [
         aiconfigurator::ops::StepShape::prefill(1, 4096, 4096),
@@ -76,6 +77,7 @@ fn analytical_tpot_tracks_simulator_dense() {
         weight_dtype: Dtype::Fp8,
         kv_dtype: Dtype::Fp8,
         flags: aiconfigurator::config::RuntimeFlags::defaults_for(Framework::TrtLlm),
+        placement: aiconfigurator::topology::Placement::packed(),
     };
     let wl = WorkloadSpec::new("qwen3-32b", 2048, 256, f64::INFINITY, 0.0);
     let cand = Candidate::Aggregated { engine: eng, replicas: 1 };
@@ -105,6 +107,7 @@ fn vllm_slower_than_trtllm_same_config() {
             weight_dtype: Dtype::Fp8,
             kv_dtype: Dtype::Fp8,
             flags: aiconfigurator::config::RuntimeFlags::defaults_for(fw),
+            placement: aiconfigurator::topology::Placement::packed(),
         };
         let cand = Candidate::Aggregated { engine: eng, replicas: 1 };
         results.push(perfmodel::estimate(&db, &model, &silicon.cluster, &cand, &wl));
@@ -133,6 +136,7 @@ fn h200_beats_h100_on_decode_heavy_workload() {
             weight_dtype: Dtype::Fp8,
             kv_dtype: Dtype::Fp8,
             flags: aiconfigurator::config::RuntimeFlags::defaults_for(Framework::TrtLlm),
+            placement: aiconfigurator::topology::Placement::packed(),
         };
         let cand = Candidate::Aggregated { engine: eng, replicas: 1 };
         thru.push(perfmodel::estimate(&db, &model, &cluster, &cand, &wl).thru_per_gpu);

@@ -107,6 +107,7 @@ fn prop_analyze_respects_sla_and_order() {
         weight_dtype: Dtype::Fp8,
         kv_dtype: Dtype::Fp8,
         flags: RuntimeFlags::defaults_for(Framework::TrtLlm),
+        placement: aiconfigurator::topology::Placement::packed(),
     };
     for _ in 0..50 {
         let evs: Vec<Evaluated> = (0..rng.below(30) as usize)
@@ -175,6 +176,7 @@ fn prop_memory_monotone_in_tp() {
             weight_dtype: dt,
             kv_dtype: dt,
             flags: RuntimeFlags::defaults_for(Framework::TrtLlm),
+            placement: aiconfigurator::topology::Placement::packed(),
         };
         let mut last = f64::INFINITY;
         for tp in [1u32, 2, 4, 8] {

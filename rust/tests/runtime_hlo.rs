@@ -66,8 +66,8 @@ fn random_op(rng: &mut Rng) -> Op {
             imbalance: 1.0 + rng.f64() * 6.0,
             count: 1,
         },
-        4 => Op::AllReduce { bytes: 1e3 + rng.f64() * 1e8, gpus: 2 + rng.below(62) as u32, count: 1 },
-        5 => Op::AllToAll { bytes: 1e3 + rng.f64() * 1e8, gpus: 2 + rng.below(62) as u32, count: 1 },
+        4 => Op::AllReduce { bytes: 1e3 + rng.f64() * 1e8, gpus: 2 + rng.below(62) as u32, span: 1, rails: 1, count: 1 },
+        5 => Op::AllToAll { bytes: 1e3 + rng.f64() * 1e8, gpus: 2 + rng.below(62) as u32, span: 1, rails: 1, count: 1 },
         _ => Op::P2p { bytes: 1e3 + rng.f64() * 1e8, cross_node: rng.below(2) == 1, count: 1 },
     }
 }
@@ -106,6 +106,7 @@ fn pjrt_step_latency_batches_correctly() {
         weight_dtype: Dtype::Fp8,
         kv_dtype: Dtype::Fp8,
         flags: aiconfigurator::config::RuntimeFlags::defaults_for(Framework::TrtLlm),
+        placement: aiconfigurator::topology::Placement::packed(),
     };
     let shape = aiconfigurator::ops::StepShape {
         ctx_reqs: 1,

@@ -1,0 +1,274 @@
+//! Topology subsystem integration gates.
+//!
+//! 1. **Pinned legacy equivalence**: `ClusterSpec::new` (the back-compat
+//!    constructor) prices every collective bit-for-bit as the seed's
+//!    hard-coded formulas — the constants and closed forms are copied
+//!    into this file verbatim so a drift in the delegation chain
+//!    (`silicon::comm` → `topology::collective`) fails loudly.
+//! 2. **Acceptance**: a search over a 2-node tiered fabric prices at
+//!    least two *distinct placements* of the same (tp, pp) shape with
+//!    different latencies, the chosen placement is visible in the
+//!    `SearchReport` candidates, and emitted launch bundles carry it.
+//! 3. The profiled database distinguishes placements (packed baseline ×
+//!    analytic placement factor) while staying placement-blind on the
+//!    legacy fabric.
+
+use std::collections::HashSet;
+
+use aiconfigurator::config::{Candidate, ParallelSpec, ServingMode, WorkloadSpec};
+use aiconfigurator::frameworks::Framework;
+use aiconfigurator::hardware::{h100_sxm, ClusterSpec};
+use aiconfigurator::models::by_name;
+use aiconfigurator::ops::Op;
+use aiconfigurator::perfdb::{LatencyOracle, PerfDatabase};
+use aiconfigurator::search::{SearchSpace, TaskRunner};
+use aiconfigurator::silicon::{comm, Silicon};
+use aiconfigurator::topology::{fabric, FabricSpec, Placement};
+
+// ---- 1. Pinned legacy equivalence -----------------------------------------
+
+/// The seed's constants, frozen here on purpose.
+const SEED_IB_GBS: f64 = 50.0;
+const SEED_IB_LAT_US: f64 = 8.0;
+const SEED_NVLINK_LAT_US: f64 = 2.0;
+const SEED_COLL_EFF: f64 = 0.80;
+
+fn seed_bw_lat(c: &ClusterSpec, gpus: u32) -> (f64, f64) {
+    if gpus <= c.gpus_per_node {
+        (c.gpu.nvlink_gbs * 1e3 * SEED_COLL_EFF, SEED_NVLINK_LAT_US)
+    } else {
+        (SEED_IB_GBS * 1e3 * SEED_COLL_EFF, SEED_IB_LAT_US)
+    }
+}
+
+/// Verbatim copy of the seed's `silicon::comm::allreduce_us`.
+fn seed_allreduce_us(c: &ClusterSpec, bytes: f64, gpus: u32) -> f64 {
+    if gpus <= 1 {
+        return 0.0;
+    }
+    let (bw, lat) = seed_bw_lat(c, gpus);
+    let g = gpus as f64;
+    let t = 2.0 * (g - 1.0) / g * bytes / bw + 2.0 * (g - 1.0) * lat;
+    if gpus > c.gpus_per_node {
+        t + 0.5 * seed_allreduce_us(c, bytes, c.gpus_per_node.min(gpus))
+    } else {
+        t
+    }
+}
+
+fn seed_allgather_us(c: &ClusterSpec, bytes: f64, gpus: u32) -> f64 {
+    if gpus <= 1 {
+        return 0.0;
+    }
+    let (bw, lat) = seed_bw_lat(c, gpus);
+    let g = gpus as f64;
+    (g - 1.0) / g * bytes * g / bw + (g - 1.0) * lat
+}
+
+fn seed_alltoall_us(c: &ClusterSpec, bytes: f64, gpus: u32) -> f64 {
+    if gpus <= 1 {
+        return 0.0;
+    }
+    let (bw, lat) = seed_bw_lat(c, gpus);
+    let g = gpus as f64;
+    (g - 1.0) / g * bytes / bw + lat * (g - 1.0).sqrt() * 2.0
+}
+
+fn seed_p2p_us(c: &ClusterSpec, bytes: f64, cross: bool) -> f64 {
+    let (bw, lat) = if cross {
+        (SEED_IB_GBS * 1e3 * 0.9, SEED_IB_LAT_US)
+    } else {
+        (c.gpu.nvlink_gbs * 1e3 * 0.9, SEED_NVLINK_LAT_US)
+    };
+    lat + bytes / bw
+}
+
+#[test]
+fn default_fabric_is_bit_for_bit_the_seed_topology() {
+    for nodes in [1u32, 2, 4] {
+        let c = ClusterSpec::new(h100_sxm(), 8, nodes);
+        // The two constructors are the same cluster.
+        let via_fabric = ClusterSpec::with_fabric(h100_sxm(), 8, nodes, FabricSpec::legacy(8));
+        assert_eq!(c.fabric, via_fabric.fabric);
+        for gpus in [1u32, 2, 4, 8, 16, 32] {
+            if gpus > c.total_gpus() {
+                continue;
+            }
+            for bytes in [512.0, 65536.0, 1e6, 3.3e7, 1e9] {
+                assert_eq!(
+                    comm::allreduce_us(&c, bytes, gpus),
+                    seed_allreduce_us(&c, bytes, gpus),
+                    "allreduce nodes={nodes} gpus={gpus} bytes={bytes}"
+                );
+                assert_eq!(
+                    comm::allgather_us(&c, bytes, gpus),
+                    seed_allgather_us(&c, bytes, gpus),
+                    "allgather nodes={nodes} gpus={gpus} bytes={bytes}"
+                );
+                assert_eq!(
+                    comm::alltoall_us(&c, bytes, gpus),
+                    seed_alltoall_us(&c, bytes, gpus),
+                    "alltoall nodes={nodes} gpus={gpus} bytes={bytes}"
+                );
+                assert_eq!(comm::p2p_us(&c, bytes, false), seed_p2p_us(&c, bytes, false));
+                assert_eq!(comm::p2p_us(&c, bytes, true), seed_p2p_us(&c, bytes, true));
+            }
+        }
+    }
+}
+
+#[test]
+fn legacy_silicon_ignores_placement_spans() {
+    // Ops constructed with any span/rails price identically on the
+    // legacy fabric — the whole back-compat contract for candidates
+    // built outside the placement enumerator.
+    let c = ClusterSpec::new(h100_sxm(), 8, 2);
+    let sil = Silicon::new(c, Framework::TrtLlm.profile());
+    for (span, rails) in [(1u32, 1u32), (2, 1), (2, 4), (16, 8)] {
+        let op = Op::AllReduce { bytes: 1e7, gpus: 16, span, rails, count: 1 };
+        let base = Op::AllReduce { bytes: 1e7, gpus: 16, span: 1, rails: 1, count: 1 };
+        assert_eq!(
+            LatencyOracle::op_latency_us(&sil, &op),
+            LatencyOracle::op_latency_us(&sil, &base)
+        );
+    }
+}
+
+#[test]
+fn legacy_search_is_identical_through_both_constructors() {
+    let model = by_name("qwen3-32b").unwrap();
+    let a = ClusterSpec::new(h100_sxm(), 8, 2);
+    let b = ClusterSpec::with_fabric(h100_sxm(), 8, 2, FabricSpec::legacy(8));
+    let wl = WorkloadSpec::new("qwen3-32b", 2048, 256, 2000.0, 10.0);
+    let mut space = SearchSpace::default_for(&model, Framework::TrtLlm);
+    space.batch = vec![8, 32];
+    space.max_x = 4;
+    space.max_y = 4;
+    let run = |c: &ClusterSpec| {
+        let sil = Silicon::new(*c, Framework::TrtLlm.profile());
+        TaskRunner::new(&model, c, space.clone(), wl.clone()).run(&sil)
+    };
+    let ra = run(&a);
+    let rb = run(&b);
+    assert_eq!(ra.evaluated.len(), rb.evaluated.len());
+    for (x, y) in ra.evaluated.iter().zip(&rb.evaluated) {
+        assert_eq!(x.cand, y.cand);
+        assert_eq!(x.est, y.est);
+    }
+    // Every candidate is packed — the placement axis is invisible on
+    // the legacy fabric.
+    for e in &ra.evaluated {
+        let eng = match &e.cand {
+            Candidate::Aggregated { engine, .. } => engine,
+            Candidate::Disaggregated { decode, .. } => decode,
+        };
+        assert_eq!(eng.placement, Placement::packed());
+    }
+}
+
+// ---- 2. Acceptance: placements priced, reported, emitted ------------------
+
+#[test]
+fn two_node_fabric_search_prices_distinct_placements() {
+    let model = by_name("qwen3-32b").unwrap();
+    let cluster = ClusterSpec::with_fabric(h100_sxm(), 8, 2, fabric::hgx_h100());
+    let sil = Silicon::new(cluster, Framework::TrtLlm.profile());
+    let mut space = SearchSpace::default_for(&model, Framework::TrtLlm);
+    space.tp = vec![8];
+    space.pp = vec![2];
+    space.batch = vec![16];
+    space.modes = vec![ServingMode::Aggregated];
+    let wl = WorkloadSpec::new("qwen3-32b", 2048, 256, f64::INFINITY, 0.0);
+    let report = TaskRunner::new(&model, &cluster, space, wl.clone()).run(&sil);
+
+    // The same (tp=8, pp=2) shape appears under several rank layouts…
+    let shape = ParallelSpec { tp: 8, pp: 2, ep: 1, dp: 1 };
+    let placed: Vec<_> = report
+        .evaluated
+        .iter()
+        .filter_map(|e| match &e.cand {
+            Candidate::Aggregated { engine, .. } if engine.parallel == shape => {
+                Some((engine.placement, e.est.tpot_ms, e.est.ttft_ms))
+            }
+            _ => None,
+        })
+        .collect();
+    let layouts: HashSet<Placement> = placed.iter().map(|(pl, _, _)| *pl).collect();
+    assert!(layouts.len() >= 2, "placements priced: {layouts:?}");
+    // …with genuinely different prices.
+    let prices: HashSet<u64> = placed.iter().map(|(_, tpot, _)| tpot.to_bits()).collect();
+    assert!(prices.len() >= 2, "all placements priced identically: {placed:?}");
+
+    // The chosen placement is visible in the report: candidate labels
+    // name the non-packed layouts.
+    assert!(
+        report.evaluated.iter().any(|e| e.cand.label().contains("tp2dom")
+            || e.cand.label().contains("-r4")),
+        "no placement label in the report"
+    );
+
+    // …and rides into the emitted launch bundle.
+    let spanned = report
+        .evaluated
+        .iter()
+        .find(|e| matches!(&e.cand, Candidate::Aggregated { engine, .. }
+            if engine.placement != Placement::packed()))
+        .expect("a non-packed candidate");
+    let bundle = aiconfigurator::generator::generate(&spanned.cand, model.name, &wl);
+    let readme = bundle.get("README.launch.md").unwrap();
+    let eng = match &spanned.cand {
+        Candidate::Aggregated { engine, .. } => engine,
+        _ => unreachable!(),
+    };
+    assert!(
+        readme.contains(&format!("Placement: {}", eng.placement.label())),
+        "launch README missing placement: {readme}"
+    );
+}
+
+#[test]
+fn disagg_bundle_carries_pool_placements() {
+    let model = by_name("qwen3-32b").unwrap();
+    let cluster = ClusterSpec::with_fabric(h100_sxm(), 8, 2, fabric::hgx_h100());
+    let sil = Silicon::new(cluster, Framework::TrtLlm.profile());
+    let mut space = SearchSpace::default_for(&model, Framework::TrtLlm);
+    space.batch = vec![16];
+    space.max_x = 4;
+    space.max_y = 4;
+    space.modes = vec![ServingMode::Disaggregated];
+    let wl = WorkloadSpec::new("qwen3-32b", 2048, 256, f64::INFINITY, 0.0);
+    let report = TaskRunner::new(&model, &cluster, space, wl.clone()).run(&sil);
+    let best = report
+        .evaluated
+        .iter()
+        .find(|e| matches!(e.cand, Candidate::Disaggregated { .. }))
+        .expect("a disaggregated composite");
+    let bundle = aiconfigurator::generator::generate(&best.cand, model.name, &wl);
+    let yaml = bundle.get("dynamo_disagg.yaml").unwrap();
+    assert!(yaml.contains("placement: "), "dynamo spec missing placement: {yaml}");
+}
+
+// ---- 3. Database placement sensitivity ------------------------------------
+
+#[test]
+fn database_scales_packed_baseline_by_placement_factor() {
+    let model = by_name("llama3.1-8b").unwrap();
+    let tiered = ClusterSpec::with_fabric(h100_sxm(), 8, 2, fabric::hgx_h100());
+    let sil = Silicon::new(tiered, Framework::TrtLlm.profile());
+    let db = PerfDatabase::build(&sil, &model, aiconfigurator::models::Dtype::Fp8, 0xA1C0);
+    let packed = Op::AllReduce { bytes: 1e7, gpus: 8, span: 1, rails: 1, count: 1 };
+    let spanned = Op::AllReduce { bytes: 1e7, gpus: 8, span: 2, rails: 1, count: 1 };
+    let base = db.op_latency_us(&packed);
+    let placed = db.op_latency_us(&spanned);
+    assert!(placed > base * 1.2, "db must price the spanning layout dearer: {base} vs {placed}");
+    // The scaling matches the analytic factor exactly.
+    let factor =
+        aiconfigurator::topology::collective::placement_factor(&tiered, &spanned);
+    assert!((placed / base - factor).abs() < 1e-9, "{placed}/{base} != {factor}");
+
+    // Legacy databases stay placement-blind.
+    let legacy = ClusterSpec::new(h100_sxm(), 8, 2);
+    let lsil = Silicon::new(legacy, Framework::TrtLlm.profile());
+    let ldb = PerfDatabase::build(&lsil, &model, aiconfigurator::models::Dtype::Fp8, 0xA1C0);
+    assert_eq!(ldb.op_latency_us(&packed), ldb.op_latency_us(&spanned));
+}

@@ -8,9 +8,12 @@
 #   make measurements        regenerate artifacts/measurements (python)
 #   make topo-smoke topology gate: every fabric preset's cost tables +
 #                   a fabric-aware search end-to-end (mirrors CI)
+#   make service-smoke  service pipeline gate: TCP protocol tests + the
+#                   in-process coalescing/shedding/LRU load tests
 #   make bench      search-engine benches (table1_search + sweep)
 #   make bench-plan capacity-planner bench (writes BENCH_plan.json)
 #   make bench-topo topology bench (writes BENCH_topology.json)
+#   make bench-service  closed-loop service bench (writes BENCH_service.json)
 #   make bench-all  every bench target
 #   make artifacts  AOT-lower the Pallas kernels to HLO (needs jax; the
 #                   Rust side degrades gracefully when absent)
@@ -20,7 +23,8 @@ RUST_DIR := rust
 PYTHON   ?= python3
 
 .PHONY: verify build test gen-smoke artifacts-validate calibrate-smoke topo-smoke \
-        measurements bench bench-plan bench-topo bench-all artifacts fmt clippy clean
+        service-smoke measurements bench bench-plan bench-topo bench-service \
+        bench-all artifacts fmt clippy clean
 
 verify:
 	cd $(RUST_DIR) && cargo build --release && cargo test -q
@@ -53,6 +57,9 @@ topo-smoke:
 		--model qwen3-32b --gpu h100 --fabric hgx-h100 --nodes 2 \
 		--isl 2048 --osl 256
 
+service-smoke:
+	cd $(RUST_DIR) && cargo test --test service --test service_load -- --nocapture
+
 measurements:
 	$(PYTHON) python/measurements/synth.py
 
@@ -72,7 +79,10 @@ bench-plan:
 bench-topo:
 	cd $(RUST_DIR) && cargo bench --bench topology
 
-bench-all: bench bench-plan bench-topo
+bench-service:
+	cd $(RUST_DIR) && cargo bench --bench service
+
+bench-all: bench bench-plan bench-topo bench-service
 	cd $(RUST_DIR) && cargo bench --bench interp_hot_path
 	cd $(RUST_DIR) && cargo bench --bench calibration
 	cd $(RUST_DIR) && cargo bench --bench simulator

@@ -26,8 +26,8 @@ fn main() -> anyhow::Result<()> {
     let cfg = ServerConfig {
         addr: "127.0.0.1:0".into(),
         artifacts: have_artifacts.then(|| artifacts.to_path_buf()),
-        calibration: None,
         seed: 0xA1C0,
+        ..Default::default()
     };
     let pjrt_ctx =
         have_artifacts.then_some(("qwen3-32b", "h100", 8u32, 1u32, Framework::TrtLlm));

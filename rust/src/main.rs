@@ -29,6 +29,7 @@ use aiconfigurator::perfdb::{
 use aiconfigurator::planner::TrafficModel;
 use aiconfigurator::runtime::{PjrtOracle, PjrtService};
 use aiconfigurator::search::{SearchSpace, TaskRunner};
+use aiconfigurator::service::protocol::SpaceOverrides;
 use aiconfigurator::service::{SearchServer, ServerConfig};
 use aiconfigurator::silicon::Silicon;
 use aiconfigurator::simulator::aggregated::AggregatedSim;
@@ -92,8 +93,12 @@ USAGE:
                              simulated engine matches the searched one)
   aiconfigurator experiment <fig1|fig5|fig6|fig7|fig8|table1|all> [--full]
   aiconfigurator serve      [--addr 127.0.0.1:7788] [--pjrt ARTIFACTS_DIR]
-                            [--calibration FILE.json]
+                            [--calibration FILE.json] [--workers N]
+                            [--queue-limit N] [--cache-cap N]
                             [--model <name> --gpu h100 --framework trtllm]
+                            (v2 JSON-lines protocol with bounded worker
+                             pool, request coalescing, warm LRU database
+                             cache and a 'stats' observability request)
 
 Models: llama3.1-8b qwen3-32b qwen3-235b deepseek-v3 mixtral-8x7b gpt-oss-120b
 GPUs:   a100 h100 h200 b200 b200-sxm gb200-nvl72    Frameworks: trtllm vllm sglang
@@ -219,36 +224,33 @@ fn parse_list<T>(
     Ok(items)
 }
 
-/// Table of the search-space list flags: (flag name, setter). Driven by
-/// [`apply_space_flags`]; each setter funnels through [`parse_list`].
-type SpaceFlagSetter = fn(&mut SearchSpace, &str) -> anyhow::Result<()>;
+/// Table of the search-space list flags: (flag name, setter into the
+/// shared [`SpaceOverrides`]). Driven by [`apply_space_flags`]; each
+/// setter funnels through [`parse_list`] and stays parse-only — the
+/// range rules (token counts positive, kv fractions in (0, 1]) live in
+/// [`SpaceOverrides::apply`], shared with the service protocol, so the
+/// two frontends can never drift.
+type SpaceFlagSetter = fn(&mut SpaceOverrides, &str) -> anyhow::Result<()>;
 const SPACE_LIST_FLAGS: &[(&str, SpaceFlagSetter)] = &[
-    ("max-num-tokens", |space, v| {
-        space.max_num_tokens = parse_list(v, "max-num-tokens", |s| {
-            let n: u32 = s
-                .parse()
-                .map_err(|_| anyhow::anyhow!("must be integers, got '{s}'"))?;
-            anyhow::ensure!(n >= 1, "values must be positive");
-            Ok(n)
-        })?;
+    ("max-num-tokens", |ov, v| {
+        ov.max_num_tokens = Some(parse_list(v, "max-num-tokens", |s| {
+            s.parse::<u32>().map_err(|_| anyhow::anyhow!("must be integers, got '{s}'"))
+        })?);
         Ok(())
     }),
-    ("kv-frac", |space, v| {
-        space.kv_frac = parse_list(v, "kv-frac", |s| {
-            let x: f64 =
-                s.parse().map_err(|_| anyhow::anyhow!("must be numbers, got '{s}'"))?;
-            anyhow::ensure!(x > 0.0 && x <= 1.0, "values must be in (0, 1]");
-            Ok(x)
-        })?;
+    ("kv-frac", |ov, v| {
+        ov.kv_frac = Some(parse_list(v, "kv-frac", |s| {
+            s.parse::<f64>().map_err(|_| anyhow::anyhow!("must be numbers, got '{s}'"))
+        })?);
         Ok(())
     }),
-    ("cuda-graph", |space, v| {
-        space.cuda_graph = match v {
+    ("cuda-graph", |ov, v| {
+        ov.cuda_graph = Some(match v {
             "on" | "true" | "1" => vec![true],
             "off" | "false" | "0" => vec![false],
             "both" => vec![true, false],
             other => anyhow::bail!("--cuda-graph must be on|off|both, got '{other}'"),
-        };
+        });
         Ok(())
     }),
 ];
@@ -287,30 +289,33 @@ fn load_ctx(f: &HashMap<String, String>) -> anyhow::Result<Ctx> {
 }
 
 /// Parse `--modes` (rejecting unknown tokens and the unsearchable
-/// `static` mode) and the launch-flag override switches into the space.
+/// `static` mode) and the launch-flag override switches into the space,
+/// through the same [`SpaceOverrides`] the service protocol applies.
 fn apply_space_flags(
     space: &mut SearchSpace,
     f: &HashMap<String, String>,
 ) -> anyhow::Result<()> {
+    let mut ov = SpaceOverrides::default();
     if let Some(modes) = f.get("modes") {
-        space.modes = modes
-            .split(',')
-            .map(str::trim)
-            .filter(|s| !s.is_empty())
-            .map(|s| {
-                ServingMode::parse(s)
-                    .ok_or_else(|| anyhow::anyhow!("unknown serving mode '{s}' in --modes"))
-            })
-            .collect::<anyhow::Result<Vec<_>>>()?;
+        ov.modes = Some(
+            modes
+                .split(',')
+                .map(str::trim)
+                .filter(|s| !s.is_empty())
+                .map(|s| {
+                    ServingMode::parse(s)
+                        .ok_or_else(|| anyhow::anyhow!("unknown serving mode '{s}' in --modes"))
+                })
+                .collect::<anyhow::Result<Vec<_>>>()?,
+        );
     }
-    aiconfigurator::search::ensure_searchable_modes(&space.modes)?;
-    space.flag_sweep = f.contains_key("flag-sweep");
+    ov.flag_sweep = Some(f.contains_key("flag-sweep"));
     for (key, set) in SPACE_LIST_FLAGS {
         if let Some(v) = f.get(*key) {
-            set(space, v)?;
+            set(&mut ov, v)?;
         }
     }
-    Ok(())
+    ov.apply(space)
 }
 
 fn print_flag_summaries(report: &aiconfigurator::search::SearchReport) {
@@ -1044,6 +1049,11 @@ fn cmd_serve(f: &HashMap<String, String>) -> anyhow::Result<()> {
         artifacts: f.get("pjrt").map(PathBuf::from),
         calibration: f.get("calibration").map(PathBuf::from),
         seed: 0xA1C0,
+        // 0 = the pipeline defaults (min(4, cores) workers, backlog 64,
+        // 8 warm contexts).
+        workers: flag_u32(f, "workers", 0)? as usize,
+        queue_limit: flag_u32(f, "queue-limit", 0)? as usize,
+        cache_cap: flag_u32(f, "cache-cap", 0)? as usize,
     };
     let pjrt_ctx = if cfg.artifacts.is_some() {
         let model = f.get("model").map(String::as_str).unwrap_or("qwen3-32b");

@@ -88,22 +88,23 @@ fn shard_of(k: &OpKey) -> usize {
     (h.finish() as usize) % SHARDS
 }
 
-/// Thread-safe memo over any deterministic oracle.
-pub struct MemoOracle<'a> {
-    inner: &'a dyn LatencyOracle,
+/// The sharded memo table itself, separable from any one oracle: the
+/// service's warm cache keeps one `MemoStore` per deployment context
+/// and wraps it around that context's oracle per request
+/// ([`MemoOracle::with_store`]), so repeated requests start hot. A
+/// store must only ever be shared between oracles that answer
+/// identically for the same op (the keyed fields exclude which oracle
+/// priced the op).
+#[derive(Default)]
+pub struct MemoStore {
     shards: [Mutex<HashMap<OpKey, f64>>; SHARDS],
     hits: AtomicU64,
     misses: AtomicU64,
 }
 
-impl<'a> MemoOracle<'a> {
-    pub fn new(inner: &'a dyn LatencyOracle) -> MemoOracle<'a> {
-        MemoOracle {
-            inner,
-            shards: std::array::from_fn(|_| Mutex::new(HashMap::new())),
-            hits: AtomicU64::new(0),
-            misses: AtomicU64::new(0),
-        }
+impl MemoStore {
+    pub fn new() -> MemoStore {
+        MemoStore::default()
     }
 
     /// (hits, misses) so far.
@@ -132,19 +133,73 @@ impl<'a> MemoOracle<'a> {
     }
 }
 
+/// Owned-or-borrowed store, so the plain `MemoOracle::new` path keeps
+/// its zero-setup ergonomics while the service shares one store across
+/// requests.
+enum StoreRef<'a> {
+    Owned(MemoStore),
+    Shared(&'a MemoStore),
+}
+
+/// Thread-safe memo over any deterministic oracle.
+pub struct MemoOracle<'a> {
+    inner: &'a dyn LatencyOracle,
+    store: StoreRef<'a>,
+}
+
+impl<'a> MemoOracle<'a> {
+    /// Memoize over a fresh private store (dies with the oracle).
+    pub fn new(inner: &'a dyn LatencyOracle) -> MemoOracle<'a> {
+        MemoOracle { inner, store: StoreRef::Owned(MemoStore::new()) }
+    }
+
+    /// Memoize into a longer-lived shared store: hits accumulated by
+    /// previous wrappers of the same store answer immediately.
+    pub fn with_store(inner: &'a dyn LatencyOracle, store: &'a MemoStore) -> MemoOracle<'a> {
+        MemoOracle { inner, store: StoreRef::Shared(store) }
+    }
+
+    fn store(&self) -> &MemoStore {
+        match &self.store {
+            StoreRef::Owned(s) => s,
+            StoreRef::Shared(s) => s,
+        }
+    }
+
+    /// (hits, misses) of the backing store so far.
+    pub fn stats(&self) -> (u64, u64) {
+        self.store().stats()
+    }
+
+    /// See [`MemoStore::hit_rate`].
+    pub fn hit_rate(&self) -> f64 {
+        self.store().hit_rate()
+    }
+
+    /// Distinct ops memoized in the backing store.
+    pub fn len(&self) -> usize {
+        self.store().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.store().is_empty()
+    }
+}
+
 impl LatencyOracle for MemoOracle<'_> {
     fn op_latency_us(&self, op: &Op) -> f64 {
+        let st = self.store();
         let key = key_of(op);
-        let shard = &self.shards[shard_of(&key)];
+        let shard = &st.shards[shard_of(&key)];
         if let Some(&v) = shard.lock().unwrap().get(&key) {
-            self.hits.fetch_add(1, Ordering::Relaxed);
+            st.hits.fetch_add(1, Ordering::Relaxed);
             return v;
         }
         // Compute outside the lock: misses on the same key may race and
         // recompute, but the oracle is deterministic so the value they
         // insert is identical.
         let v = self.inner.op_latency_us(op);
-        self.misses.fetch_add(1, Ordering::Relaxed);
+        st.misses.fetch_add(1, Ordering::Relaxed);
         shard.lock().unwrap().insert(key, v);
         v
     }
@@ -156,14 +211,15 @@ impl LatencyOracle for MemoOracle<'_> {
     /// wrapped. For loop-based inner oracles this produces the same
     /// values in the same per-op order as the default implementation.
     fn op_latencies_us(&self, ops: &[Op]) -> Vec<f64> {
+        let st = self.store();
         let mut out = vec![0.0f64; ops.len()];
         let mut miss_idx: Vec<usize> = Vec::new();
         let mut miss_ops: Vec<Op> = Vec::new();
         for (i, op) in ops.iter().enumerate() {
             let key = key_of(op);
-            let shard = &self.shards[shard_of(&key)];
+            let shard = &st.shards[shard_of(&key)];
             if let Some(&v) = shard.lock().unwrap().get(&key) {
-                self.hits.fetch_add(1, Ordering::Relaxed);
+                st.hits.fetch_add(1, Ordering::Relaxed);
                 out[i] = v;
             } else {
                 miss_idx.push(i);
@@ -172,11 +228,11 @@ impl LatencyOracle for MemoOracle<'_> {
         }
         if !miss_ops.is_empty() {
             let vals = self.inner.op_latencies_us(&miss_ops);
-            self.misses.fetch_add(miss_ops.len() as u64, Ordering::Relaxed);
+            st.misses.fetch_add(miss_ops.len() as u64, Ordering::Relaxed);
             for ((&i, op), &v) in miss_idx.iter().zip(&miss_ops).zip(&vals) {
                 out[i] = v;
                 let key = key_of(op);
-                self.shards[shard_of(&key)].lock().unwrap().insert(key, v);
+                st.shards[shard_of(&key)].lock().unwrap().insert(key, v);
             }
         }
         out
@@ -288,5 +344,25 @@ mod tests {
             }
         });
         assert_eq!(memo.len(), 1);
+    }
+
+    #[test]
+    fn shared_store_survives_its_wrappers() {
+        let s = sil();
+        let store = MemoStore::new();
+        let op = Op::Gemm { m: 256, n: 1024, k: 1024, dtype: Dtype::Fp8, count: 1 };
+        let truth = LatencyOracle::op_latency_us(&s, &op);
+        {
+            let memo = MemoOracle::with_store(&s, &store);
+            assert_eq!(memo.op_latency_us(&op), truth); // miss
+        }
+        {
+            // A fresh wrapper of the same store answers from the memo.
+            let memo = MemoOracle::with_store(&s, &store);
+            assert_eq!(memo.op_latency_us(&op), truth);
+            assert_eq!(memo.stats(), (1, 1));
+        }
+        assert_eq!(store.len(), 1);
+        assert_eq!(store.hit_rate(), 0.5);
     }
 }

@@ -27,7 +27,7 @@ pub mod query;
 pub mod sol;
 pub mod tables;
 
-pub use cache::MemoOracle;
+pub use cache::{MemoOracle, MemoStore};
 pub use calibrate::{CalibratedDb, CalibrationArtifact, TierSnapshot};
 
 use crate::frameworks::FrameworkProfile;

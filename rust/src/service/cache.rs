@@ -1,0 +1,275 @@
+//! Shared warm-entry cache: one capacity-bounded LRU of profiled
+//! databases for the whole server, replacing the per-`State` unbounded
+//! maps that previously grew one `PerfDatabase` (+ calibration
+//! composition) per context forever.
+//!
+//! Each entry bundles everything warm for one [`DbKey`] context: the
+//! analytic database, the calibrated composition when the server's
+//! artifact matches, and a shared operator-latency [`MemoStore`] so
+//! repeated requests against the context start with a hot memo instead
+//! of an empty one (calibrated contexts opt out — see DESIGN.md §8 on
+//! per-request tier accounting).
+//!
+//! Builds are single-flight: concurrent misses on one key elect one
+//! builder and the rest wait on a condvar, so a thundering herd on a
+//! cold context profiles the ~2 s database once, not N times.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::perfdb::{CalibratedDb, MemoStore, PerfDatabase};
+
+use super::stats::CacheGauges;
+
+/// (model, gpu, gpus_per_node, num_nodes, framework, fabric) — the
+/// fabric name is part of the cache key: the same GPU pool wired as
+/// `legacy` and as `gb200-nvl72` profiles different comm tables.
+pub type DbKey = (String, String, u32, u32, String, String);
+
+/// Everything warm for one context.
+pub struct WarmEntry {
+    pub db: Arc<PerfDatabase>,
+    /// Calibrated composition when the server's artifact matches this
+    /// context (answers then carry provenance tiers).
+    pub cal: Option<Arc<CalibratedDb>>,
+    /// Cross-request operator-latency memo for the plain-analytic and
+    /// PJRT oracles of this context.
+    pub memo: MemoStore,
+}
+
+struct Slot {
+    entry: Arc<WarmEntry>,
+    /// LRU stamp: bumped on every hit from a monotonic tick.
+    stamp: u64,
+}
+
+struct Inner {
+    map: HashMap<DbKey, Slot>,
+    /// Keys currently being built by some thread (single-flight).
+    building: HashSet<DbKey>,
+    tick: u64,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+/// Capacity-bounded LRU of [`WarmEntry`] keyed by [`DbKey`].
+pub struct WarmCache {
+    inner: Mutex<Inner>,
+    built: Condvar,
+    cap: usize,
+}
+
+impl WarmCache {
+    pub fn new(cap: usize) -> WarmCache {
+        WarmCache {
+            inner: Mutex::new(Inner {
+                map: HashMap::new(),
+                building: HashSet::new(),
+                tick: 0,
+                hits: 0,
+                misses: 0,
+                evictions: 0,
+            }),
+            built: Condvar::new(),
+            cap: cap.max(1),
+        }
+    }
+
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// (hits, misses, evictions) so far. A request that waited for
+    /// another thread's in-flight build counts as the miss it was when
+    /// it arrived.
+    pub fn stats(&self) -> (u64, u64, u64) {
+        let g = self.inner.lock().unwrap();
+        (g.hits, g.misses, g.evictions)
+    }
+
+    pub fn gauges(&self) -> CacheGauges {
+        let g = self.inner.lock().unwrap();
+        CacheGauges {
+            entries: g.map.len(),
+            cap: self.cap,
+            hits: g.hits,
+            misses: g.misses,
+            evictions: g.evictions,
+        }
+    }
+
+    /// Look up without touching LRU order or counters (tests, metrics).
+    pub fn peek(&self, key: &DbKey) -> Option<Arc<WarmEntry>> {
+        self.inner.lock().unwrap().map.get(key).map(|s| s.entry.clone())
+    }
+
+    /// Pre-insert an entry built outside the cache (the PJRT context at
+    /// bind time). Subject to the same capacity bound as built entries.
+    pub fn seed(&self, key: DbKey, entry: WarmEntry) {
+        let mut g = self.inner.lock().unwrap();
+        g.tick += 1;
+        let stamp = g.tick;
+        g.map.insert(key, Slot { entry: Arc::new(entry), stamp });
+        Self::evict_over_cap(&mut g, self.cap);
+    }
+
+    /// Fetch the warm entry for `key`, building it with `build` on a
+    /// miss. The build runs outside the lock; concurrent misses on the
+    /// same key wait for the elected builder instead of duplicating the
+    /// profiling work. Build errors propagate to every waiter as their
+    /// own retry (the key is released, so a later request re-attempts).
+    pub fn get_or_build(
+        &self,
+        key: &DbKey,
+        build: impl FnOnce() -> anyhow::Result<WarmEntry>,
+    ) -> anyhow::Result<Arc<WarmEntry>> {
+        {
+            let mut g = self.inner.lock().unwrap();
+            loop {
+                if let Some(slot) = g.map.get(key) {
+                    let entry = slot.entry.clone();
+                    g.tick += 1;
+                    let stamp = g.tick;
+                    g.map.get_mut(key).unwrap().stamp = stamp;
+                    g.hits += 1;
+                    return Ok(entry);
+                }
+                if g.building.contains(key) {
+                    // Someone else is building this context: wait, then
+                    // re-check (the build may also have failed).
+                    g = self.built.wait(g).unwrap();
+                    continue;
+                }
+                g.misses += 1;
+                g.building.insert(key.clone());
+                break;
+            }
+        }
+        let built = build();
+        let mut g = self.inner.lock().unwrap();
+        g.building.remove(key);
+        self.built.notify_all();
+        match built {
+            Ok(entry) => {
+                g.tick += 1;
+                let stamp = g.tick;
+                let entry = Arc::new(entry);
+                g.map.insert(key.clone(), Slot { entry: entry.clone(), stamp });
+                Self::evict_over_cap(&mut g, self.cap);
+                Ok(entry)
+            }
+            Err(e) => Err(e),
+        }
+    }
+
+    fn evict_over_cap(g: &mut Inner, cap: usize) {
+        while g.map.len() > cap {
+            let Some(oldest) =
+                g.map.iter().min_by_key(|(_, s)| s.stamp).map(|(k, _)| k.clone())
+            else {
+                return;
+            };
+            g.map.remove(&oldest);
+            g.evictions += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frameworks::Framework;
+    use crate::hardware::{gpu_by_name, ClusterSpec};
+    use crate::models::by_name;
+    use crate::silicon::Silicon;
+
+    fn key(model: &str, gpn: u32) -> DbKey {
+        (model.into(), "h100".into(), gpn, 1, "trtllm".into(), "legacy".into())
+    }
+
+    fn entry() -> WarmEntry {
+        let cluster = ClusterSpec::new(gpu_by_name("h100").unwrap(), 8, 1);
+        let sil = Silicon::new(cluster, Framework::TrtLlm.profile());
+        let model = by_name("llama3.1-8b").unwrap();
+        let db = PerfDatabase::build(&sil, &model, crate::models::Dtype::Fp8, 1);
+        WarmEntry { db: Arc::new(db), cal: None, memo: MemoStore::new() }
+    }
+
+    #[test]
+    fn lru_evicts_the_least_recent_key() {
+        let cache = WarmCache::new(2);
+        let db = entry().db;
+        let build = |db: &Arc<PerfDatabase>| {
+            let db = db.clone();
+            move || Ok(WarmEntry { db, cal: None, memo: MemoStore::new() })
+        };
+        cache.get_or_build(&key("a", 8), build(&db)).unwrap();
+        cache.get_or_build(&key("b", 8), build(&db)).unwrap();
+        // Touch "a", then insert "c": "b" is the LRU victim.
+        cache.get_or_build(&key("a", 8), build(&db)).unwrap();
+        cache.get_or_build(&key("c", 8), build(&db)).unwrap();
+        assert_eq!(cache.len(), 2);
+        assert!(cache.peek(&key("a", 8)).is_some());
+        assert!(cache.peek(&key("b", 8)).is_none(), "LRU key must be evicted");
+        assert!(cache.peek(&key("c", 8)).is_some());
+        let (hits, misses, evictions) = cache.stats();
+        assert_eq!((hits, misses, evictions), (1, 3, 1));
+    }
+
+    #[test]
+    fn build_errors_release_the_key_for_retry() {
+        let cache = WarmCache::new(2);
+        let k = key("a", 8);
+        assert!(cache
+            .get_or_build(&k, || anyhow::bail!("profiling failed"))
+            .is_err());
+        assert!(cache.peek(&k).is_none());
+        // The key is not wedged: a later build succeeds.
+        let e = entry();
+        let db = e.db.clone();
+        cache
+            .get_or_build(&k, move || Ok(WarmEntry { db, cal: None, memo: MemoStore::new() }))
+            .unwrap();
+        assert!(cache.peek(&k).is_some());
+    }
+
+    #[test]
+    fn concurrent_misses_build_once() {
+        let cache = Arc::new(WarmCache::new(4));
+        let e = entry();
+        let db = e.db.clone();
+        let builds = Arc::new(std::sync::atomic::AtomicU64::new(0));
+        std::thread::scope(|sc| {
+            for _ in 0..8 {
+                let cache = cache.clone();
+                let db = db.clone();
+                let builds = builds.clone();
+                sc.spawn(move || {
+                    cache
+                        .get_or_build(&key("a", 8), move || {
+                            builds.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+                            // Widen the race window so waiters pile up.
+                            std::thread::sleep(std::time::Duration::from_millis(20));
+                            Ok(WarmEntry { db, cal: None, memo: MemoStore::new() })
+                        })
+                        .unwrap();
+                });
+            }
+        });
+        assert_eq!(
+            builds.load(std::sync::atomic::Ordering::SeqCst),
+            1,
+            "single-flight: one elected builder"
+        );
+        assert_eq!(cache.len(), 1);
+    }
+}

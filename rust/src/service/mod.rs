@@ -1,37 +1,67 @@
 //! Config-search service: the L3 serving coordinator.
 //!
-//! A threaded TCP server speaking JSON-lines: each request carries a
-//! workload descriptor + cluster/framework context; the server runs the
-//! TaskRunner → Pareto pipeline and answers with the top configurations
-//! and ready-to-launch files. Databases are built on demand and cached
-//! per (model, hardware, framework) context — the paper's 5-step
-//! workflow behind one socket.
+//! A threaded TCP server speaking JSON-lines — now a production-shaped
+//! request pipeline rather than a per-connection loop:
+//!
+//! * [`protocol`] — the versioned envelope (v2 `{"v":2,"op":...}` with
+//!   typed errors; legacy bare requests answer as v1) and the
+//!   normalized [`protocol::RequestKey`] identity of a request.
+//! * [`pool`] — a bounded worker pool with load-shedding admission
+//!   control, plus the coalescer that lets identical in-flight requests
+//!   share one computation.
+//! * [`cache`] — one capacity-bounded LRU of warm per-context entries
+//!   (profiled database + calibrated composition + operator memo),
+//!   shared by every connection.
+//! * [`stats`] — lock-free counters/histograms behind the `stats`
+//!   request and its `/metrics`-style text dump.
+//!
+//! Connections feed lines into the shared [`Pipeline`]; each request is
+//! keyed, coalesced, admitted (or shed with a typed `overloaded`
+//! error), and answered by a pool worker running the TaskRunner →
+//! Pareto pipeline — the paper's 5-step workflow behind one socket.
 //!
 //! When started with an artifacts directory, interpolation queries from
 //! *all* connections funnel through the single PJRT evaluator thread
 //! ([`crate::runtime::PjrtService`]) — a dynamic batcher over the
 //! AOT-compiled Pallas kernel. (The vendored build has no tokio, so
-//! concurrency is plain OS threads; see DESIGN.md.)
+//! concurrency is plain OS threads; see DESIGN.md §8.)
 
-use std::collections::HashMap;
+pub mod cache;
+pub mod pool;
+pub mod protocol;
+pub mod stats;
+
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::Instant;
 
-use crate::config::{Candidate, ServingMode, WorkloadSpec};
+use crate::config::{Candidate, WorkloadSpec};
 use crate::frameworks::Framework;
 use crate::generator;
 use crate::hardware::{gpu_by_name, ClusterSpec};
 use crate::models::by_name;
 use crate::pareto;
-use crate::perfdb::{CalibratedDb, CalibrationArtifact, LatencyOracle, PerfDatabase};
+use crate::perfdb::{
+    CalibratedDb, CalibrationArtifact, LatencyOracle, MemoOracle, MemoStore, PerfDatabase,
+};
 use crate::runtime::{PjrtOracle, PjrtService};
-use crate::search::{SearchSpace, TaskRunner};
+use crate::search::{RunOptions, SearchReport, TaskRunner};
 use crate::silicon::Silicon;
 use crate::util::json::{self, Json};
+
+pub use cache::{DbKey, WarmCache, WarmEntry};
+pub use pool::{Coalescer, ServicePool, Ticket};
+pub use protocol::{Envelope, ErrCode, OpKind, ServiceError};
+pub use stats::ServiceStats;
+
+/// Default resident contexts in the warm cache. A warm entry is a full
+/// profiled database (a few MB + ~seconds of profiling to rebuild), so
+/// the default is small; `--cache-cap` raises it for fleet-wide
+/// servers.
+pub const DEFAULT_CACHE_CAP: usize = 8;
 
 /// Server configuration.
 #[derive(Clone, Debug, Default)]
@@ -45,19 +75,21 @@ pub struct ServerConfig {
     /// artifact's; other contexts stay analytic.
     pub calibration: Option<PathBuf>,
     pub seed: u64,
+    /// Pool workers (0 = min(4, hardware threads)).
+    pub workers: usize,
+    /// Admission backlog limit before shedding (0 = 64).
+    pub queue_limit: usize,
+    /// Warm-cache capacity in contexts (0 = [`DEFAULT_CACHE_CAP`]).
+    pub cache_cap: usize,
 }
-
-/// (model, gpu, gpus_per_node, num_nodes, framework, fabric) — the
-/// fabric name is part of the cache key: the same GPU pool wired as
-/// `legacy` and as `gb200-nvl72` profiles different comm tables.
-type DbKey = (String, String, u32, u32, String, String);
 
 /// Shared server state (public so in-process embedding — tests, the
 /// serve_e2e example — can drive requests without a socket).
 pub struct State {
-    dbs: Mutex<HashMap<DbKey, Arc<PerfDatabase>>>,
-    /// Calibrated composition per context, built lazily from `artifact`.
-    cals: Mutex<HashMap<DbKey, Arc<CalibratedDb>>>,
+    /// Warm per-context entries, shared by all connections.
+    cache: WarmCache,
+    /// Service counters (shared by the pipeline and direct embedding).
+    pub stats: ServiceStats,
     /// Calibration artifact loaded at startup (if any).
     artifact: Option<CalibrationArtifact>,
     /// PJRT evaluator bound to the context named at startup (if any).
@@ -67,28 +99,224 @@ pub struct State {
 
 impl State {
     pub fn new(seed: u64) -> State {
-        State {
-            dbs: Mutex::new(HashMap::new()),
-            cals: Mutex::new(HashMap::new()),
-            artifact: None,
-            pjrt: None,
-            seed,
-        }
+        State::with_caps(seed, None, DEFAULT_CACHE_CAP)
     }
 
     /// A state whose matching-context requests answer through the
     /// calibrated three-tier chain.
     pub fn with_calibration(seed: u64, artifact: CalibrationArtifact) -> State {
-        let mut st = State::new(seed);
-        st.artifact = Some(artifact);
-        st
+        State::with_caps(seed, Some(artifact), DEFAULT_CACHE_CAP)
+    }
+
+    /// Full-control constructor (tests size the cache down to force
+    /// eviction).
+    pub fn with_caps(
+        seed: u64,
+        artifact: Option<CalibrationArtifact>,
+        cache_cap: usize,
+    ) -> State {
+        State {
+            cache: WarmCache::new(cache_cap),
+            stats: ServiceStats::new(),
+            artifact,
+            pjrt: None,
+            seed,
+        }
+    }
+
+    pub fn cache(&self) -> &WarmCache {
+        &self.cache
+    }
+
+    /// The warm entry for a context: cache hit, or a single-flight
+    /// build of database + calibrated composition + memo store.
+    fn entry_for(&self, key: &DbKey) -> anyhow::Result<Arc<WarmEntry>> {
+        self.cache.get_or_build(key, || {
+            let db = Arc::new(build_db(key, self.seed)?);
+            let cal = self.compose_cal(&db)?;
+            Ok(WarmEntry { db, cal, memo: MemoStore::new() })
+        })
+    }
+
+    /// Compose the server's calibration artifact over a context's
+    /// database. `None` when no artifact is loaded or its profiling
+    /// context differs from this request's.
+    fn compose_cal(&self, db: &Arc<PerfDatabase>) -> anyhow::Result<Option<Arc<CalibratedDb>>> {
+        let Some(art) = &self.artifact else { return Ok(None) };
+        // Artifacts are fitted against legacy-fabric grids; tiered-fabric
+        // contexts stay analytic (same "silently analytic on non-matching
+        // context" contract as the other fields — `CalibratedDb::compose`
+        // would reject the combination loudly).
+        if db.cluster.fabric.placement_aware() {
+            return Ok(None);
+        }
+        let matches = art.gpu == db.ctx.gpu
+            && art.gpus_per_node == db.ctx.gpus_per_node
+            && art.num_nodes == db.ctx.num_nodes
+            && art.model == db.ctx.model
+            && art.framework == db.ctx.framework
+            && art.kv_dtype == db.ctx.kv_dtype;
+        if !matches {
+            return Ok(None);
+        }
+        Ok(Some(Arc::new(CalibratedDb::compose((**db).clone(), art)?)))
+    }
+}
+
+/// The request pipeline every connection feeds into: envelope parsing →
+/// coalescing → bounded-pool admission → dispatch → response stamping.
+pub struct Pipeline {
+    state: Arc<State>,
+    pool: ServicePool,
+    coalescer: Coalescer,
+}
+
+impl Pipeline {
+    /// `workers`/`queue_limit` as in [`ServerConfig`] (0 = defaults).
+    pub fn new(state: Arc<State>, workers: usize, queue_limit: usize) -> Pipeline {
+        Pipeline { state, pool: ServicePool::new(workers, queue_limit), coalescer: Coalescer::new() }
+    }
+
+    pub fn state(&self) -> &Arc<State> {
+        &self.state
+    }
+
+    /// Jobs admitted but not yet running (the shed gauge).
+    pub fn queue_depth(&self) -> usize {
+        self.pool.depth()
+    }
+
+    /// One raw line from a connection (may be blank → `None`, invalid
+    /// UTF-8 or unparseable JSON → typed error response).
+    pub fn handle_line_bytes(&self, buf: &[u8]) -> Option<Json> {
+        let Ok(line) = std::str::from_utf8(buf) else {
+            self.state.stats.malformed.fetch_add(1, Ordering::Relaxed);
+            self.state.stats.errors.fetch_add(1, Ordering::Relaxed);
+            return Some(protocol::error_response(
+                None,
+                &ServiceError::bad_request("request line is not valid UTF-8"),
+            ));
+        };
+        let line = line.trim();
+        if line.is_empty() {
+            return None;
+        }
+        Some(self.handle_line(line))
+    }
+
+    /// One request line (non-blank).
+    pub fn handle_line(&self, line: &str) -> Json {
+        match json::parse(line) {
+            Ok(req) => self.handle(&req),
+            Err(e) => {
+                self.state.stats.malformed.fetch_add(1, Ordering::Relaxed);
+                self.state.stats.errors.fetch_add(1, Ordering::Relaxed);
+                protocol::error_response(
+                    None,
+                    &ServiceError::bad_request(format!("unparseable request line: {e:#}")),
+                )
+            }
+        }
+    }
+
+    /// One parsed request through the full pipeline.
+    pub fn handle(&self, req: &Json) -> Json {
+        let t0 = Instant::now();
+        let env = match protocol::parse_envelope(req) {
+            Ok(env) => env,
+            Err(err) => {
+                self.state.stats.errors.fetch_add(1, Ordering::Relaxed);
+                return protocol::error_for_request(req, &err);
+            }
+        };
+        // Stats answer inline — observability must not queue behind the
+        // very backlog it reports.
+        if env.op == OpKind::Stats {
+            self.state.stats.bump(OpKind::Stats);
+            return protocol::stamp(self.stats_payload(), &env);
+        }
+        // Key before admission, so identical requests coalesce even
+        // when the queue is full (followers ride the in-flight leader
+        // for free instead of being shed).
+        let key = match protocol::request_key(&env) {
+            Ok(k) => k,
+            Err(e) => {
+                self.state.stats.errors.fetch_add(1, Ordering::Relaxed);
+                return protocol::error_response(
+                    Some(&env),
+                    &ServiceError::bad_request(format!("{e:#}")),
+                );
+            }
+        };
+        let result = match self.coalescer.join(&key) {
+            Ticket::Follower(flight) => {
+                self.state.stats.coalesce_followers.fetch_add(1, Ordering::Relaxed);
+                self.state.stats.bump(env.op);
+                flight.wait()
+            }
+            Ticket::Leader(lead) => {
+                let (tx, rx) = std::sync::mpsc::channel();
+                let state = self.state.clone();
+                let (op, body) = (env.op, env.body.clone());
+                let admitted = self.pool.try_submit(Box::new(move || {
+                    let res = dispatch(op, &body, &state)
+                        .map_err(|e| ServiceError::bad_request(format!("{e:#}")));
+                    let _ = tx.send(res);
+                }));
+                if !admitted {
+                    self.state.stats.shed.fetch_add(1, Ordering::Relaxed);
+                    self.state.stats.errors.fetch_add(1, Ordering::Relaxed);
+                    let err = ServiceError::overloaded(format!(
+                        "request shed: admission queue at its limit of {} (retry, raise \
+                         --queue-limit, or add workers)",
+                        self.pool.queue_limit()
+                    ));
+                    // Followers that latched on while we held the lead
+                    // get the same typed refusal instead of hanging.
+                    lead.publish(Err(err.clone()));
+                    return protocol::error_response(Some(&env), &err);
+                }
+                self.state.stats.coalesce_leaders.fetch_add(1, Ordering::Relaxed);
+                let res = rx.recv().unwrap_or_else(|_| {
+                    Err(ServiceError::internal("worker dropped the result (job panicked?)"))
+                });
+                lead.publish(res.clone());
+                res
+            }
+        };
+        match result {
+            Ok(payload) => {
+                self.state
+                    .stats
+                    .record_latency(env.op, t0.elapsed().as_secs_f64() * 1e3);
+                protocol::stamp(payload, &env)
+            }
+            Err(err) => {
+                self.state.stats.errors.fetch_add(1, Ordering::Relaxed);
+                protocol::error_response(Some(&env), &err)
+            }
+        }
+    }
+
+    fn stats_payload(&self) -> Json {
+        let cache = self.state.cache.gauges();
+        let pool = stats::PoolGauges {
+            queue_depth: self.pool.depth(),
+            queue_limit: self.pool.queue_limit(),
+            workers: self.pool.workers(),
+        };
+        let mut o = Json::obj();
+        o.set("status", json::s("ok"))
+            .set("stats", self.state.stats.to_json(&cache, Some(&pool)))
+            .set("metrics_text", json::s(&self.state.stats.render_metrics(&cache, Some(&pool))));
+        o
     }
 }
 
 /// The running server handle.
 pub struct SearchServer {
     listener: TcpListener,
-    state: Arc<State>,
+    pipeline: Arc<Pipeline>,
     stop: Arc<AtomicBool>,
 }
 
@@ -98,34 +326,24 @@ impl SearchServer {
     pub fn bind(cfg: &ServerConfig, pjrt_ctx: Option<(&str, &str, u32, u32, Framework)>) -> anyhow::Result<(SearchServer, SocketAddr)> {
         let listener = TcpListener::bind(&cfg.addr)?;
         let addr = listener.local_addr()?;
-        let mut dbs = HashMap::new();
-        let mut pjrt = None;
+        let artifact = match &cfg.calibration {
+            Some(path) => Some(CalibrationArtifact::load(path)?),
+            None => None,
+        };
+        let cache_cap = if cfg.cache_cap == 0 { DEFAULT_CACHE_CAP } else { cfg.cache_cap };
+        let mut state = State::with_caps(cfg.seed, artifact, cache_cap);
         if let (Some(dir), Some((model, gpu, gpn, nodes, fw))) = (&cfg.artifacts, pjrt_ctx) {
             let key: DbKey =
                 (model.into(), gpu.into(), gpn, nodes, fw.name().into(), "legacy".into());
             let db = Arc::new(build_db(&key, cfg.seed)?);
             let svc = PjrtService::start(dir, db.grids().to_vec())?;
-            dbs.insert(key.clone(), db);
-            pjrt = Some((key, svc));
+            state
+                .cache
+                .seed(key.clone(), WarmEntry { db, cal: None, memo: MemoStore::new() });
+            state.pjrt = Some((key, svc));
         }
-        let artifact = match &cfg.calibration {
-            Some(path) => Some(CalibrationArtifact::load(path)?),
-            None => None,
-        };
-        Ok((
-            SearchServer {
-                listener,
-                state: Arc::new(State {
-                    dbs: Mutex::new(dbs),
-                    cals: Mutex::new(HashMap::new()),
-                    artifact,
-                    pjrt,
-                    seed: cfg.seed,
-                }),
-                stop: Arc::new(AtomicBool::new(false)),
-            },
-            addr,
-        ))
+        let pipeline = Arc::new(Pipeline::new(Arc::new(state), cfg.workers, cfg.queue_limit));
+        Ok((SearchServer { listener, pipeline, stop: Arc::new(AtomicBool::new(false)) }, addr))
     }
 
     /// Handle to request shutdown from another thread.
@@ -133,44 +351,47 @@ impl SearchServer {
         self.stop.clone()
     }
 
-    /// Accept loop (blocks). Each connection gets a thread; each line is
-    /// one request. Returns when the stop flag is set (checked between
-    /// connections — poke it with a dummy connect).
+    /// The shared pipeline (for in-process embedding alongside the
+    /// socket, e.g. a health prober reading `stats`).
+    pub fn pipeline(&self) -> Arc<Pipeline> {
+        self.pipeline.clone()
+    }
+
+    /// Accept loop (blocks). Each connection gets a reader thread; all
+    /// of them feed the shared pipeline. Returns when the stop flag is
+    /// set (checked between connections — poke it with a dummy
+    /// connect).
     pub fn run(self) -> anyhow::Result<()> {
         for stream in self.listener.incoming() {
             if self.stop.load(Ordering::SeqCst) {
                 break;
             }
             let Ok(stream) = stream else { continue };
-            let state = self.state.clone();
+            let pipeline = self.pipeline.clone();
             std::thread::spawn(move || {
-                let _ = handle_conn(stream, &state);
+                let _ = handle_conn(stream, &pipeline);
             });
         }
         Ok(())
     }
 }
 
-fn handle_conn(stream: TcpStream, state: &State) -> anyhow::Result<()> {
+/// Read lines, answer each through the pipeline. Malformed lines (bad
+/// JSON, invalid UTF-8) get a typed error reply and the loop continues
+/// — only genuine socket I/O failures (or EOF) end the connection.
+fn handle_conn(stream: TcpStream, pipeline: &Pipeline) -> anyhow::Result<()> {
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = stream;
-    let mut line = String::new();
+    let mut buf = Vec::new();
     loop {
-        line.clear();
-        if reader.read_line(&mut line)? == 0 {
+        buf.clear();
+        // read_until, not read_line: a line of invalid UTF-8 must reach
+        // the pipeline as a malformed request, not kill the connection
+        // loop as an I/O error with no reply.
+        if reader.read_until(b'\n', &mut buf)? == 0 {
             return Ok(());
         }
-        if line.trim().is_empty() {
-            continue;
-        }
-        let resp = match handle_request_line(line.trim(), state) {
-            Ok(j) => j,
-            Err(e) => {
-                let mut o = Json::obj();
-                o.set("status", json::s("error")).set("error", json::s(&format!("{e:#}")));
-                o
-            }
-        };
+        let Some(resp) = pipeline.handle_line_bytes(&buf) else { continue };
         writer.write_all(resp.to_string().as_bytes())?;
         writer.write_all(b"\n")?;
     }
@@ -200,156 +421,121 @@ pub fn handle_request_line(line: &str, state: &State) -> anyhow::Result<Json> {
     handle_request(&req, state)
 }
 
+/// Version-aware single-request entry point for in-process embedding
+/// (no pool, no coalescing — the [`Pipeline`] adds those): parse the
+/// envelope, dispatch, stamp the response with `v`/`id`.
 pub fn handle_request(req: &Json, state: &State) -> anyhow::Result<Json> {
-    // Capacity-plan form: {"plan": {...}} searches a traffic-aware
-    // replica schedule instead of a single-point configuration.
-    if req.get("plan").is_some() {
-        return handle_plan_request(req, state);
+    let env = protocol::parse_envelope(req).map_err(|e| anyhow::anyhow!("{}", e.message))?;
+    let payload = dispatch(env.op, &env.body, state)?;
+    Ok(protocol::stamp(payload, &env))
+}
+
+/// Version-blind operation dispatch. Payloads carry no `v`/`id` — the
+/// caller stamps them (so a coalesced payload can be fanned out to
+/// waiters holding different ids).
+fn dispatch(op: OpKind, body: &Json, state: &State) -> anyhow::Result<Json> {
+    state.stats.bump(op);
+    match op {
+        OpKind::Search => handle_search_request(body, state),
+        OpKind::Sweep => handle_sweep_request(body, state),
+        OpKind::Plan => handle_plan_request(body, state),
+        OpKind::Stats => {
+            // Stats without a pipeline (direct embedding): no queue to
+            // report.
+            let cache = state.cache.gauges();
+            let mut o = Json::obj();
+            o.set("status", json::s("ok"))
+                .set("stats", state.stats.to_json(&cache, None))
+                .set("metrics_text", json::s(&state.stats.render_metrics(&cache, None)));
+            Ok(o)
+        }
     }
-    // Batch form: {"workloads": [wl, wl, ...]} prices many scenarios in
-    // one sweep (shared engine enumeration + memoized oracle queries).
-    if req.get("workloads").is_some() {
-        return handle_sweep_request(req, state);
+}
+
+/// Reject placement-aware fabrics on a PJRT-bound server: the AOT
+/// kernel prices the packed layout only (the CLI does the same for
+/// --fabric with --pjrt) — reject loudly instead of silently falling
+/// through to a different oracle.
+fn ensure_pjrt_fabric_ok(state: &State, pc: &protocol::ParsedContext) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        state.pjrt.is_none() || !pc.placement_aware,
+        "'fabric' is not supported on a PJRT-bound server: the AOT kernel prices the \
+         packed layout only (restart without --pjrt or drop the fabric field)"
+    );
+    Ok(())
+}
+
+/// Run scenarios against the context's warm entry with the right
+/// oracle chain. All three chains go through `run_sweep_cached`, which
+/// produces exactly the same reports as independent `run` calls
+/// (regression-tested in crate::search):
+///
+/// * PJRT-bound context → PJRT oracle over the **shared** warm memo.
+/// * Calibrated context → a per-request clone of the cached composition
+///   with a **fresh private** memo, so tier counts stay per-request and
+///   deterministic (unique-shape counts; see DESIGN.md §8).
+/// * Plain analytic → the database over the **shared** warm memo.
+fn run_reports(
+    state: &State,
+    key: &DbKey,
+    entry: &WarmEntry,
+    runner: &TaskRunner,
+    wls: &[WorkloadSpec],
+) -> Vec<SearchReport> {
+    let opts = RunOptions::default();
+    match &state.pjrt {
+        Some((pk, svc)) if pk == key => {
+            let oracle = PjrtOracle { svc, db: &entry.db };
+            let memo = MemoOracle::with_store(&oracle, &entry.memo);
+            runner.run_sweep_cached(&memo, wls, &opts)
+        }
+        _ => match &entry.cal {
+            Some(cal) => {
+                // The ~2 MB grid copy is deliberate: it costs ~0.1 ms
+                // against a search that runs for hundreds, and keeps
+                // CalibratedDb free of interior Arcs.
+                let cal = (**cal).clone();
+                let memo = MemoOracle::new(&cal);
+                runner.run_sweep_cached(&memo, wls, &opts)
+            }
+            None => {
+                let memo = MemoOracle::with_store(entry.db.as_ref(), &entry.memo);
+                runner.run_sweep_cached(&memo, wls, &opts)
+            }
+        },
     }
+}
+
+fn handle_search_request(req: &Json, state: &State) -> anyhow::Result<Json> {
     let t0 = Instant::now();
     let wl = WorkloadSpec::from_json(req.req("workload")?)?;
-    let ctx = request_ctx(req, state, &wl.model)?;
+    let pc = protocol::parse_context(req, &wl.model)?;
+    ensure_pjrt_fabric_ok(state, &pc)?;
+    let key = pc.db_key();
+    let entry = state.entry_for(&key)?;
 
-    let runner = TaskRunner::new(&ctx.model, &ctx.cluster, ctx.space.clone(), wl.clone());
-    // PJRT hot path when the request matches the bound context;
-    // calibrated chain when the context matches the loaded artifact.
-    let report = match &state.pjrt {
-        Some((pk, svc)) if *pk == ctx.key => {
-            let oracle = PjrtOracle { svc, db: &ctx.db };
-            runner.run(&oracle)
-        }
-        _ => match &ctx.cal {
-            Some(cal) => runner.run(cal.as_ref()),
-            None => runner.run(ctx.db.as_ref() as &dyn LatencyOracle),
-        },
-    };
-    let top_k = ctx.top_k;
+    let runner = TaskRunner::new(&pc.model, &pc.cluster, pc.space.clone(), wl.clone());
+    let report = run_reports(state, &key, &entry, &runner, std::slice::from_ref(&wl))
+        .pop()
+        .expect("one scenario in, one report out");
     let analysis = pareto::analyze(&report.evaluated, &wl.sla);
 
-    // Response.
     let mut resp = Json::obj();
     resp.set("status", json::s("ok"))
         .set("configs_priced", json::num(report.configs_priced as f64))
         .set("candidates", json::num(report.evaluated.len() as f64))
         .set("feasible", json::num(analysis.feasible.len() as f64))
         .set("elapsed_ms", json::num(t0.elapsed().as_secs_f64() * 1e3))
-        .set("top", top_json(&analysis, top_k))
+        .set("top", top_json(&analysis, pc.top_k))
         .set("flags", flags_json(&report));
     if let Some(t) = report.tier_counts {
+        state.stats.add_tiers(&t);
         resp.set("tiers", tiers_json(&t));
-    }
-    if let Some(id) = req.get("id") {
-        resp.set("id", id.clone());
     }
     if let Some(best) = analysis.best() {
         resp.set("launch", launch_json(&best.cand, &wl));
     }
     Ok(resp)
-}
-
-/// Deployment context parsed from a request's shared fields — one
-/// parser for both the single-workload and batch-sweep handlers so the
-/// two paths can never interpret request fields differently.
-struct ReqCtx {
-    model: crate::models::ModelArch,
-    cluster: ClusterSpec,
-    top_k: usize,
-    key: DbKey,
-    db: Arc<PerfDatabase>,
-    /// Calibrated composition when the server's artifact matches this
-    /// request's context (answers then carry provenance tiers).
-    cal: Option<Arc<CalibratedDb>>,
-    space: SearchSpace,
-}
-
-fn request_ctx(req: &Json, state: &State, model_name: &str) -> anyhow::Result<ReqCtx> {
-    let gpu_name = req.str_or("gpu", "h100");
-    let gpn = req.f64_or("gpus_per_node", 8.0) as u32;
-    let nodes = req.f64_or("num_nodes", 1.0) as u32;
-    let fw = Framework::parse(req.str_or("framework", "trtllm"))
-        .ok_or_else(|| anyhow::anyhow!("unknown framework"))?;
-    let top_k = req.f64_or("top_k", 5.0) as usize;
-    // Optional tiered fabric ("hgx-h100", "gb200-nvl72", ...); absent =
-    // the legacy flat topology, bit-for-bit the pre-fabric behavior.
-    let fabric_name = req.str_or("fabric", "legacy").to_string();
-    let fabric = crate::topology::fabric::by_name(&fabric_name, gpn)
-        .ok_or_else(|| anyhow::anyhow!("unknown fabric '{fabric_name}'"))?;
-    // A PJRT-bound server answers its context from the AOT kernel,
-    // which prices the packed layout only: reject fabric requests
-    // loudly (the CLI does the same for --fabric with --pjrt) instead
-    // of silently falling through to a different oracle.
-    anyhow::ensure!(
-        state.pjrt.is_none() || !fabric.placement_aware(),
-        "'fabric' is not supported on a PJRT-bound server: the AOT kernel prices the \
-         packed layout only (restart without --pjrt or drop the fabric field)"
-    );
-
-    let model =
-        by_name(model_name).ok_or_else(|| anyhow::anyhow!("unknown model '{model_name}'"))?;
-    let gpu =
-        gpu_by_name(gpu_name).ok_or_else(|| anyhow::anyhow!("unknown gpu '{gpu_name}'"))?;
-    let cluster = ClusterSpec::with_fabric(gpu, gpn, nodes, fabric);
-
-    // Database: cached per context.
-    let key: DbKey =
-        (model_name.to_string(), gpu_name.to_string(), gpn, nodes, fw.name().to_string(), fabric_name);
-    let db = db_for(state, &key)?;
-    let cal = calibrated_for(state, &key, &db)?;
-
-    // Search space (modes and launch-flag handling overridable per
-    // request).
-    let mut space = SearchSpace::default_for(&model, fw);
-    if let Some(modes) = req.get("modes").and_then(|m| m.as_arr()) {
-        space.modes = modes
-            .iter()
-            .map(|m| {
-                m.as_str()
-                    .and_then(ServingMode::parse)
-                    .ok_or_else(|| anyhow::anyhow!("unknown serving mode {m:?} in 'modes'"))
-            })
-            .collect::<anyhow::Result<Vec<_>>>()?;
-    }
-    // `static` parses but is not a searchable deployment shape: reject
-    // loudly instead of pricing nothing (see crate::search).
-    crate::search::ensure_searchable_modes(&space.modes)?;
-    // Overrides are validated loudly: a wrong-typed value is an error,
-    // never a silent fall-through to the resolver.
-    if let Some(v) = req.get("flag_sweep") {
-        space.flag_sweep = v
-            .as_bool()
-            .ok_or_else(|| anyhow::anyhow!("'flag_sweep' must be a boolean"))?;
-    }
-    if let Some(flags) = req.get("flags") {
-        if let Some(v) = flags.get("max_num_tokens") {
-            let x = v
-                .as_f64()
-                .ok_or_else(|| anyhow::anyhow!("flags.max_num_tokens must be a number"))?;
-            anyhow::ensure!(
-                (1.0..=u32::MAX as f64).contains(&x) && x.fract() == 0.0,
-                "flags.max_num_tokens must be a positive integer"
-            );
-            space.max_num_tokens = vec![x as u32];
-        }
-        if let Some(v) = flags.get("kv_frac") {
-            let x = v
-                .as_f64()
-                .ok_or_else(|| anyhow::anyhow!("flags.kv_frac must be a number"))?;
-            anyhow::ensure!(x > 0.0 && x <= 1.0, "flags.kv_frac must be in (0, 1]");
-            space.kv_frac = vec![x];
-        }
-        if let Some(v) = flags.get("cuda_graph") {
-            let b = v
-                .as_bool()
-                .ok_or_else(|| anyhow::anyhow!("flags.cuda_graph must be a boolean"))?;
-            space.cuda_graph = vec![b];
-        }
-    }
-    Ok(ReqCtx { model, cluster, top_k, key, db, cal, space })
 }
 
 /// Per-tier oracle query counts of a report, as JSON.
@@ -362,47 +548,8 @@ fn tiers_json(t: &crate::perfdb::TierSnapshot) -> Json {
     o
 }
 
-/// Lazily compose (and cache) the server's calibration artifact over a
-/// context's database. `None` when no artifact is loaded or its
-/// profiling context differs from this request's. The returned value
-/// is a **clone** of the cached composition (grids copied by value,
-/// tier counters fresh), so each request accounts its own tier counts
-/// even when concurrent requests share a context. The ~2 MB grid copy
-/// is deliberate: it costs ~0.1 ms against a search that runs for
-/// hundreds, and keeps CalibratedDb free of interior Arcs.
-fn calibrated_for(
-    state: &State,
-    key: &DbKey,
-    db: &Arc<PerfDatabase>,
-) -> anyhow::Result<Option<Arc<CalibratedDb>>> {
-    let Some(art) = &state.artifact else { return Ok(None) };
-    // Artifacts are fitted against legacy-fabric grids; tiered-fabric
-    // contexts stay analytic (same "silently analytic on non-matching
-    // context" contract as the other fields — `CalibratedDb::compose`
-    // would reject the combination loudly).
-    if db.cluster.fabric.placement_aware() {
-        return Ok(None);
-    }
-    let matches = art.gpu == db.ctx.gpu
-        && art.gpus_per_node == db.ctx.gpus_per_node
-        && art.num_nodes == db.ctx.num_nodes
-        && art.model == db.ctx.model
-        && art.framework == db.ctx.framework
-        && art.kv_dtype == db.ctx.kv_dtype;
-    if !matches {
-        return Ok(None);
-    }
-    let mut cals = state.cals.lock().unwrap();
-    if let Some(c) = cals.get(key) {
-        return Ok(Some(Arc::new((**c).clone())));
-    }
-    let c = Arc::new(CalibratedDb::compose((**db).clone(), art)?);
-    cals.insert(key.clone(), c.clone());
-    Ok(Some(Arc::new((*c).clone())))
-}
-
 /// Per-framework resolved-vs-default flag deltas of a report, as JSON.
-fn flags_json(report: &crate::search::SearchReport) -> Json {
+fn flags_json(report: &SearchReport) -> Json {
     let mut arr = Vec::new();
     for s in &report.flag_summaries {
         let mut o = Json::obj();
@@ -418,19 +565,6 @@ fn flags_json(report: &crate::search::SearchReport) -> Json {
         arr.push(o);
     }
     Json::Arr(arr)
-}
-
-/// Fetch (or build and cache) the database for a context key.
-fn db_for(state: &State, key: &DbKey) -> anyhow::Result<Arc<PerfDatabase>> {
-    let mut dbs = state.dbs.lock().unwrap();
-    match dbs.get(key) {
-        Some(db) => Ok(db.clone()),
-        None => {
-            let db = Arc::new(build_db(key, state.seed)?);
-            dbs.insert(key.clone(), db.clone());
-            Ok(db)
-        }
-    }
 }
 
 /// Top-k feasible candidates as a JSON array.
@@ -462,33 +596,14 @@ fn top_json(analysis: &pareto::Analysis, top_k: usize) -> Json {
 /// object per scenario.
 fn handle_sweep_request(req: &Json, state: &State) -> anyhow::Result<Json> {
     let t0 = Instant::now();
-    let wls_json = req
-        .req("workloads")?
-        .as_arr()
-        .ok_or_else(|| anyhow::anyhow!("'workloads' must be an array"))?;
-    anyhow::ensure!(!wls_json.is_empty(), "'workloads' array is empty");
-    let wls: Vec<WorkloadSpec> = wls_json
-        .iter()
-        .map(WorkloadSpec::from_json)
-        .collect::<anyhow::Result<Vec<_>>>()?;
-    anyhow::ensure!(
-        wls.iter().all(|w| w.model == wls[0].model),
-        "all workloads in a sweep must target the same model"
-    );
-    let ctx = request_ctx(req, state, &wls[0].model)?;
-    let top_k = ctx.top_k;
+    let wls = protocol::parse_sweep_workloads(req)?;
+    let pc = protocol::parse_context(req, &wls[0].model)?;
+    ensure_pjrt_fabric_ok(state, &pc)?;
+    let key = pc.db_key();
+    let entry = state.entry_for(&key)?;
 
-    let runner = TaskRunner::new(&ctx.model, &ctx.cluster, ctx.space.clone(), wls[0].clone());
-    let reports = match &state.pjrt {
-        Some((pk, svc)) if *pk == ctx.key => {
-            let oracle = PjrtOracle { svc, db: &ctx.db };
-            runner.run_sweep(&oracle, &wls)
-        }
-        _ => match &ctx.cal {
-            Some(cal) => runner.run_sweep(cal.as_ref(), &wls),
-            None => runner.run_sweep(ctx.db.as_ref() as &dyn LatencyOracle, &wls),
-        },
-    };
+    let runner = TaskRunner::new(&pc.model, &pc.cluster, pc.space.clone(), wls[0].clone());
+    let reports = run_reports(state, &key, &entry, &runner, &wls);
 
     let mut results = Vec::new();
     for (wl, report) in wls.iter().zip(&reports) {
@@ -499,9 +614,10 @@ fn handle_sweep_request(req: &Json, state: &State) -> anyhow::Result<Json> {
             .set("configs_priced", json::num(report.configs_priced as f64))
             .set("candidates", json::num(report.evaluated.len() as f64))
             .set("feasible", json::num(analysis.feasible.len() as f64))
-            .set("top", top_json(&analysis, top_k))
+            .set("top", top_json(&analysis, pc.top_k))
             .set("flags", flags_json(report));
         if let Some(t) = report.tier_counts {
+            state.stats.add_tiers(&t);
             o.set("tiers", tiers_json(&t));
         }
         if let Some(best) = analysis.best() {
@@ -514,9 +630,6 @@ fn handle_sweep_request(req: &Json, state: &State) -> anyhow::Result<Json> {
         .set("scenarios", json::num(wls.len() as f64))
         .set("elapsed_ms", json::num(t0.elapsed().as_secs_f64() * 1e3))
         .set("results", Json::Arr(results));
-    if let Some(id) = req.get("id") {
-        resp.set("id", id.clone());
-    }
     Ok(resp)
 }
 
@@ -527,7 +640,7 @@ fn handle_sweep_request(req: &Json, state: &State) -> anyhow::Result<Json> {
 ///   "gpus_per_node": 8, "num_nodes": 1, "framework": "trtllm"}`
 /// → the cost-minimal replica schedule ([`crate::planner`]) plus the
 /// Dynamo `DeploymentSchedule` YAML. Fleet-leg databases come from the
-/// same per-context cache the search path uses, so repeated plans skip
+/// same warm cache the search path uses, so repeated plans skip
 /// re-profiling (the dominant cost); operator-latency memos are
 /// per-request.
 fn handle_plan_request(req: &Json, state: &State) -> anyhow::Result<Json> {
@@ -535,10 +648,7 @@ fn handle_plan_request(req: &Json, state: &State) -> anyhow::Result<Json> {
     let p = req.req("plan")?;
     let wl = WorkloadSpec::from_json(p.req("workload")?)?;
     let traffic = crate::planner::TrafficModel::from_json(p.req("traffic")?)?;
-    let gpn = req.f64_or("gpus_per_node", 8.0) as u32;
-    let nodes = req.f64_or("num_nodes", 1.0) as u32;
-    let fw = Framework::parse(req.str_or("framework", "trtllm"))
-        .ok_or_else(|| anyhow::anyhow!("unknown framework"))?;
+    let (gpn, nodes, fw) = protocol::parse_cluster_base(req)?;
     let model =
         by_name(&wl.model).ok_or_else(|| anyhow::anyhow!("unknown model '{}'", wl.model))?;
 
@@ -567,10 +677,11 @@ fn handle_plan_request(req: &Json, state: &State) -> anyhow::Result<Json> {
         let leg = crate::hardware::parse_fleet_leg(name, gpn)?;
         let key: DbKey =
             (wl.model.clone(), leg.gpu_name, gpn, nodes, fw.name().to_string(), leg.fabric_name);
-        let db = db_for(state, &key)?;
-        let oracle: Arc<dyn LatencyOracle> = match calibrated_for(state, &key, &db)? {
-            Some(cal) => cal,
-            None => db,
+        let entry = state.entry_for(&key)?;
+        let oracle: Arc<dyn LatencyOracle> = match &entry.cal {
+            // Per-request clone: private tier counters (DESIGN.md §8).
+            Some(cal) => Arc::new((**cal).clone()),
+            None => entry.db.clone(),
         };
         legs.push((ClusterSpec::with_fabric(leg.gpu, gpn, nodes, leg.fabric), oracle));
     }
@@ -595,9 +706,6 @@ fn handle_plan_request(req: &Json, state: &State) -> anyhow::Result<Json> {
             "schedule_yaml",
             json::s(&generator::dynamo::plan_schedule_yaml(&plan, &wl.model, &wl)),
         );
-    if let Some(id) = req.get("id") {
-        resp.set("id", id.clone());
-    }
     Ok(resp)
 }
 
@@ -631,7 +739,7 @@ impl Client {
     }
 }
 
-/// Build a search request JSON.
+/// Build a legacy (v1) search request JSON.
 pub fn make_request(
     wl: &WorkloadSpec,
     gpu: &str,
@@ -650,12 +758,30 @@ pub fn make_request(
     o
 }
 
+/// Build the same search request as a v2 envelope.
+pub fn make_request_v2(
+    wl: &WorkloadSpec,
+    gpu: &str,
+    gpn: u32,
+    nodes: u32,
+    fw: Framework,
+    id: u64,
+) -> Json {
+    let mut o = make_request(wl, gpu, gpn, nodes, fw, id);
+    o.set("v", json::num(2.0)).set("op", json::s("search"));
+    o
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     fn state() -> State {
         State::new(1)
+    }
+
+    fn legacy_key(model: &str) -> DbKey {
+        (model.into(), "h100".into(), 8, 1, "trtllm".into(), "legacy".into())
     }
 
     #[test]
@@ -666,6 +792,7 @@ mod tests {
         let resp = handle_request(&req, &st).unwrap();
         assert_eq!(resp.req_str("status").unwrap(), "ok");
         assert_eq!(resp.req_f64("id").unwrap(), 7.0);
+        assert_eq!(resp.req_f64("v").unwrap(), 1.0, "legacy requests answer tagged v1");
         assert!(resp.req_f64("feasible").unwrap() > 0.0);
         let top = resp.req("top").unwrap().as_arr().unwrap();
         assert!(!top.is_empty());
@@ -674,14 +801,36 @@ mod tests {
     }
 
     #[test]
+    fn v2_envelope_answers_like_v1() {
+        let st = state();
+        let wl = WorkloadSpec::new("llama3.1-8b", 1024, 128, 2000.0, 10.0);
+        let v1 = handle_request(&make_request(&wl, "h100", 8, 1, Framework::TrtLlm, 7), &st)
+            .unwrap();
+        let v2 = handle_request(&make_request_v2(&wl, "h100", 8, 1, Framework::TrtLlm, 7), &st)
+            .unwrap();
+        assert_eq!(v2.req_f64("v").unwrap(), 2.0);
+        // Identical payload modulo the envelope tag and wall clock.
+        let strip = |mut j: Json| {
+            if let Json::Obj(m) = &mut j {
+                m.remove("v");
+                m.remove("elapsed_ms");
+            }
+            j
+        };
+        assert_eq!(strip(v1), strip(v2));
+    }
+
+    #[test]
     fn db_cache_reused() {
         let st = state();
         let wl = WorkloadSpec::new("llama3.1-8b", 512, 64, 2000.0, 5.0);
         let req = make_request(&wl, "h100", 8, 1, Framework::TrtLlm, 1);
         handle_request(&req, &st).unwrap();
-        assert_eq!(st.dbs.lock().unwrap().len(), 1);
+        assert_eq!(st.cache().len(), 1);
         handle_request(&req, &st).unwrap();
-        assert_eq!(st.dbs.lock().unwrap().len(), 1);
+        assert_eq!(st.cache().len(), 1);
+        let (hits, misses, _) = st.cache().stats();
+        assert_eq!((hits, misses), (1, 1));
     }
 
     #[test]
@@ -783,8 +932,8 @@ mod tests {
         let yaml = resp.req_str("schedule_yaml").unwrap();
         assert!(yaml.contains("kind: DeploymentSchedule"));
         assert!(yaml.contains("- window: 0"));
-        // The leg database landed in the shared cache.
-        assert_eq!(st.dbs.lock().unwrap().len(), 1);
+        // The leg database landed in the shared warm cache.
+        assert_eq!(st.cache().len(), 1);
     }
 
     #[test]
@@ -798,7 +947,7 @@ mod tests {
                 plan.req_f64("total_cost_usd").unwrap() <= h.req_f64("cost_usd").unwrap() + 1e-9
             );
         }
-        assert_eq!(st.dbs.lock().unwrap().len(), 2, "one cached db per fleet leg");
+        assert_eq!(st.cache().len(), 2, "one cached db per fleet leg");
     }
 
     #[test]
@@ -857,12 +1006,13 @@ mod tests {
             tiers.req_f64("calibrated").unwrap() + tiers.req_f64("measured").unwrap() > 0.0,
             "calibrated context must answer through the calibrated tiers"
         );
-        // The composition is cached, and each request gets a private
-        // accounting scope: an identical second request reports the
-        // same tier volume, not a cumulative one.
+        // The composition is cached in the warm entry, and each request
+        // gets a private accounting scope: an identical second request
+        // reports the same tier volume, not a cumulative one.
         let resp_again =
             handle_request(&make_request(&wl, "h100", 8, 1, Framework::TrtLlm, 2), &st).unwrap();
-        assert_eq!(st.cals.lock().unwrap().len(), 1);
+        let entry = st.cache().peek(&legacy_key("llama3.1-8b")).unwrap();
+        assert!(entry.cal.is_some(), "matching context caches its composition");
         let t2 = resp_again.req("tiers").unwrap();
         let total = |t: &Json| {
             t.req_f64("measured").unwrap()
@@ -877,7 +1027,8 @@ mod tests {
             handle_request(&make_request(&wl2, "h100", 8, 1, Framework::TrtLlm, 3), &st).unwrap();
         assert_eq!(resp2.req_str("status").unwrap(), "ok");
         assert!(resp2.get("tiers").is_none());
-        assert_eq!(st.cals.lock().unwrap().len(), 1);
+        let entry2 = st.cache().peek(&legacy_key("qwen3-32b")).unwrap();
+        assert!(entry2.cal.is_none(), "non-matching context stays analytic");
     }
 
     #[test]
@@ -898,7 +1049,7 @@ mod tests {
         let legacy = handle_request(&make_request(&wl, "h100", 8, 2, Framework::TrtLlm, 10), &st)
             .unwrap();
         assert_eq!(legacy.req_str("status").unwrap(), "ok");
-        assert_eq!(st.dbs.lock().unwrap().len(), 2);
+        assert_eq!(st.cache().len(), 2);
         // Unknown fabrics are loud errors, not silent legacy fallbacks.
         let mut bad = make_request(&wl, "h100", 8, 1, Framework::TrtLlm, 11);
         bad.set("fabric", json::s("warp-fabric"));
@@ -927,5 +1078,25 @@ mod tests {
         assert_eq!(flags[0].req_f64("resolved_max_num_tokens_min").unwrap(), 4096.0);
         assert_eq!(flags[0].req_f64("resolved_max_num_tokens_max").unwrap(), 4096.0);
         assert_eq!(flags[0].req_f64("resolved_kv_frac_min").unwrap(), 0.8);
+    }
+
+    #[test]
+    fn stats_request_reports_counts_without_a_pipeline() {
+        let st = state();
+        let wl = WorkloadSpec::new("llama3.1-8b", 512, 64, 2000.0, 5.0);
+        handle_request(&make_request(&wl, "h100", 8, 1, Framework::TrtLlm, 1), &st).unwrap();
+        let req = json::parse(r#"{"v": 2, "op": "stats", "id": 5}"#).unwrap();
+        let resp = handle_request(&req, &st).unwrap();
+        assert_eq!(resp.req_str("status").unwrap(), "ok");
+        assert_eq!(resp.req_f64("id").unwrap(), 5.0);
+        let stats = resp.req("stats").unwrap();
+        assert_eq!(
+            stats.req("requests").unwrap().req("search").unwrap().req_f64("count").unwrap(),
+            1.0
+        );
+        assert_eq!(stats.req("cache").unwrap().req_f64("entries").unwrap(), 1.0);
+        // No pipeline → no pool gauges.
+        assert!(stats.get("pool").is_none());
+        assert!(resp.req_str("metrics_text").unwrap().contains("aiconf_requests_total"));
     }
 }

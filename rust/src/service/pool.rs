@@ -1,0 +1,339 @@
+//! Bounded worker pool + request coalescer for the service pipeline.
+//!
+//! [`crate::util::pool::scoped_map`] is a fork-join helper: workers are
+//! born and die inside one call, which is right for a single search's
+//! internal parallelism but wrong for a server — there the pool must
+//! outlive any one request, bound *admission* (not just concurrency),
+//! and shed load instead of queueing unboundedly. [`ServicePool`] is
+//! that long-lived variant: a fixed worker set over a bounded
+//! `VecDeque`, where [`ServicePool::try_submit`] refuses work the
+//! moment the backlog hits the configured limit, so an overloaded
+//! server answers "overloaded" in microseconds instead of timing out
+//! every client equally. Worker sizing reuses
+//! [`crate::util::pool::effective_threads`]; each job is itself a
+//! multi-threaded search, so the default worker count stays small.
+//!
+//! [`Coalescer`] is the companion admission optimization: requests with
+//! the same normalized [`RequestKey`] elect one *leader* whose
+//! computation is fanned out to every concurrent *follower*, so a
+//! thundering herd of identical searches costs one search.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use crate::util::json::Json;
+
+use super::protocol::{RequestKey, ServiceError};
+
+/// One unit of pool work.
+pub type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct QueueState {
+    jobs: VecDeque<Job>,
+    shutdown: bool,
+}
+
+struct Shared {
+    queue: Mutex<QueueState>,
+    ready: Condvar,
+}
+
+/// Long-lived bounded worker pool with load-shedding admission.
+pub struct ServicePool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+    workers: usize,
+    queue_limit: usize,
+}
+
+impl ServicePool {
+    /// `workers = 0` sizes to min(4, hardware threads): each job is an
+    /// internally parallel search, so a few concurrent jobs already
+    /// saturate the machine. `queue_limit` bounds the *backlog* (jobs
+    /// admitted but not yet running); 0 means the default of 64.
+    pub fn new(workers: usize, queue_limit: usize) -> ServicePool {
+        let workers = if workers == 0 {
+            crate::util::pool::effective_threads(0, 4)
+        } else {
+            workers
+        };
+        let queue_limit = if queue_limit == 0 { 64 } else { queue_limit };
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(QueueState { jobs: VecDeque::new(), shutdown: false }),
+            ready: Condvar::new(),
+        });
+        let handles = (0..workers)
+            .map(|_| {
+                let shared = shared.clone();
+                std::thread::spawn(move || worker_loop(&shared))
+            })
+            .collect();
+        ServicePool { shared, handles, workers, queue_limit }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    pub fn queue_limit(&self) -> usize {
+        self.queue_limit
+    }
+
+    /// Jobs admitted but not yet picked up by a worker.
+    pub fn depth(&self) -> usize {
+        self.shared.queue.lock().unwrap().jobs.len()
+    }
+
+    /// Admit a job, or refuse it (`false`) when the backlog is at the
+    /// limit — the caller turns that into a typed `overloaded` error.
+    pub fn try_submit(&self, job: Job) -> bool {
+        let mut q = self.shared.queue.lock().unwrap();
+        if q.jobs.len() >= self.queue_limit || q.shutdown {
+            return false;
+        }
+        q.jobs.push_back(job);
+        drop(q);
+        self.shared.ready.notify_one();
+        true
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if q.shutdown {
+                    return;
+                }
+                if let Some(job) = q.jobs.pop_front() {
+                    break job;
+                }
+                q = shared.ready.wait(q).unwrap();
+            }
+        };
+        // A panicking job must not take the worker down with it; the
+        // leader guard (below) turns the lost result into a typed
+        // internal error for the waiters.
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+    }
+}
+
+impl Drop for ServicePool {
+    fn drop(&mut self) {
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.shutdown = true;
+            // Pending jobs are dropped; their leader guards publish
+            // internal errors so no follower hangs on a dead pool.
+            q.jobs.clear();
+        }
+        self.shared.ready.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// The shared result slot of one coalesced computation.
+pub struct Flight {
+    slot: Mutex<Option<Result<Json, ServiceError>>>,
+    done: Condvar,
+}
+
+impl Flight {
+    fn new() -> Flight {
+        Flight { slot: Mutex::new(None), done: Condvar::new() }
+    }
+
+    /// Block until the leader publishes, then take a copy.
+    pub fn wait(&self) -> Result<Json, ServiceError> {
+        let mut slot = self.slot.lock().unwrap();
+        loop {
+            if let Some(res) = slot.as_ref() {
+                return res.clone();
+            }
+            slot = self.done.wait(slot).unwrap();
+        }
+    }
+}
+
+/// What `join` handed this request: compute (leader) or wait (follower).
+pub enum Ticket<'a> {
+    Leader(LeadGuard<'a>),
+    Follower(Arc<Flight>),
+}
+
+/// The leader's obligation to publish. Dropping without publishing
+/// (worker panic, shed after election, dropped queue) publishes a typed
+/// internal error so followers never hang.
+pub struct LeadGuard<'a> {
+    coalescer: &'a Coalescer,
+    key: String,
+    flight: Arc<Flight>,
+    published: bool,
+}
+
+impl LeadGuard<'_> {
+    /// Deliver the computation to every waiter and retire the flight.
+    pub fn publish(mut self, res: Result<Json, ServiceError>) {
+        self.publish_inner(res);
+    }
+
+    fn publish_inner(&mut self, res: Result<Json, ServiceError>) {
+        if self.published {
+            return;
+        }
+        self.published = true;
+        // Retire the flight *before* filling the slot: a request
+        // arriving after this point starts a fresh computation instead
+        // of latching onto a finished one (results may be cached
+        // upstream, but the coalescer itself only dedups in-flight
+        // work).
+        self.coalescer.inflight.lock().unwrap().remove(&self.key);
+        *self.flight.slot.lock().unwrap() = Some(res);
+        self.flight.done.notify_all();
+    }
+}
+
+impl Drop for LeadGuard<'_> {
+    fn drop(&mut self) {
+        self.publish_inner(Err(ServiceError::internal(
+            "request leader aborted before publishing a result",
+        )));
+    }
+}
+
+/// In-flight request deduplication by normalized [`RequestKey`].
+#[derive(Default)]
+pub struct Coalescer {
+    inflight: Mutex<HashMap<String, Arc<Flight>>>,
+}
+
+impl Coalescer {
+    pub fn new() -> Coalescer {
+        Coalescer::default()
+    }
+
+    /// Number of distinct computations currently in flight.
+    pub fn inflight(&self) -> usize {
+        self.inflight.lock().unwrap().len()
+    }
+
+    /// Join the flight for `key`: the first caller becomes the leader,
+    /// everyone else a follower of the leader's flight.
+    pub fn join(&self, key: &RequestKey) -> Ticket<'_> {
+        let mut map = self.inflight.lock().unwrap();
+        if let Some(flight) = map.get(key.as_str()) {
+            return Ticket::Follower(flight.clone());
+        }
+        let flight = Arc::new(Flight::new());
+        map.insert(key.as_str().to_string(), flight.clone());
+        Ticket::Leader(LeadGuard {
+            coalescer: self,
+            key: key.as_str().to_string(),
+            flight,
+            published: false,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    #[test]
+    fn pool_runs_jobs_and_sheds_over_limit() {
+        let pool = ServicePool::new(2, 2);
+        assert_eq!(pool.workers(), 2);
+        let done = Arc::new(AtomicU64::new(0));
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        let blocking_job = |done: &Arc<AtomicU64>, gate: &Arc<(Mutex<bool>, Condvar)>| {
+            let done = done.clone();
+            let gate = gate.clone();
+            Box::new(move || {
+                let (lock, cv) = &*gate;
+                let mut open = lock.lock().unwrap();
+                while !*open {
+                    open = cv.wait(open).unwrap();
+                }
+                done.fetch_add(1, Ordering::SeqCst);
+            }) as Job
+        };
+        // Two blocking jobs occupy both workers (wait for pickup so the
+        // queue-limit check below sees an empty backlog)...
+        for _ in 0..2 {
+            assert!(pool.try_submit(blocking_job(&done, &gate)));
+            let t0 = std::time::Instant::now();
+            while pool.depth() > 0 && t0.elapsed().as_secs() < 5 {
+                std::thread::yield_now();
+            }
+            assert_eq!(pool.depth(), 0, "a free worker must pick the job up");
+        }
+        // ...two more fill the backlog to its limit...
+        for _ in 0..2 {
+            assert!(pool.try_submit(blocking_job(&done, &gate)));
+        }
+        // ...and anything beyond is shed.
+        assert!(!pool.try_submit(Box::new(|| {})), "backlog at limit must shed");
+        // Open the gate; all admitted blocking jobs finish.
+        *gate.0.lock().unwrap() = true;
+        gate.1.notify_all();
+        let t0 = std::time::Instant::now();
+        while done.load(Ordering::SeqCst) < 4 && t0.elapsed().as_secs() < 5 {
+            std::thread::yield_now();
+        }
+        assert_eq!(done.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn pool_survives_panicking_jobs() {
+        let pool = ServicePool::new(1, 8);
+        assert!(pool.try_submit(Box::new(|| panic!("job blew up"))));
+        let done = Arc::new(AtomicU64::new(0));
+        let d = done.clone();
+        assert!(pool.try_submit(Box::new(move || {
+            d.fetch_add(1, Ordering::SeqCst);
+        })));
+        let t0 = std::time::Instant::now();
+        while done.load(Ordering::SeqCst) == 0 && t0.elapsed().as_secs() < 5 {
+            std::thread::yield_now();
+        }
+        assert_eq!(done.load(Ordering::SeqCst), 1, "worker must outlive a panicking job");
+    }
+
+    #[test]
+    fn coalescer_elects_one_leader_and_fans_out() {
+        let co = Coalescer::new();
+        let key = RequestKey::test_key("k1");
+        let Ticket::Leader(lead) = co.join(&key) else {
+            panic!("first joiner must lead");
+        };
+        let Ticket::Follower(flight) = co.join(&key) else {
+            panic!("second joiner must follow");
+        };
+        assert_eq!(co.inflight(), 1);
+        let other = RequestKey::test_key("k2");
+        assert!(matches!(co.join(&other), Ticket::Leader(_)), "distinct keys don't coalesce");
+
+        lead.publish(Ok(json::num(42.0)));
+        assert_eq!(flight.wait().unwrap(), json::num(42.0));
+        // The flight retired: a new joiner recomputes.
+        assert!(matches!(co.join(&key), Ticket::Leader(_)));
+    }
+
+    #[test]
+    fn dropped_leader_publishes_internal_error() {
+        let co = Coalescer::new();
+        let key = RequestKey::test_key("k");
+        let Ticket::Leader(lead) = co.join(&key) else { panic!() };
+        let Ticket::Follower(flight) = co.join(&key) else { panic!() };
+        drop(lead);
+        let err = flight.wait().unwrap_err();
+        assert_eq!(err.code, super::super::protocol::ErrCode::Internal);
+        assert_eq!(co.inflight(), 0);
+    }
+}

@@ -1,0 +1,629 @@
+//! Versioned wire protocol for the L3 service.
+//!
+//! Two request dialects share one dispatch path:
+//!
+//! * **v2 envelope** — `{"v": 2, "id": ..., "op": "search" | "sweep" |
+//!   "plan" | "stats", ...}` with typed error responses
+//!   `{"v": 2, "id": ..., "error": {"code": ..., "message": ...}}`.
+//! * **legacy (v1)** — the original bare requests: the operation is
+//!   inferred from which field is present (`plan` → plan, `workloads` →
+//!   sweep, `workload` → search). Responses keep their original shape
+//!   (string `error`, flat `status`) and are tagged `"v": 1`; pinned
+//!   tests hold the rest of the v1 payload byte-compatible.
+//!
+//! The v1 → v2 mapping table lives in DESIGN.md §8. This module also
+//! owns [`RequestKey`] — the normalized identity the coalescer uses to
+//! detect identical in-flight requests — and [`SpaceOverrides`], the one
+//! code path through which both the CLI flags and service requests
+//! mutate a [`SearchSpace`], so the two frontends can never diverge on
+//! validation.
+
+use crate::config::{ServingMode, WorkloadSpec};
+use crate::frameworks::Framework;
+use crate::hardware::{gpu_by_name, ClusterSpec};
+use crate::models::{by_name, ModelArch};
+use crate::search::SearchSpace;
+use crate::util::json::{self, Json};
+
+/// The four operations the service answers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OpKind {
+    Search,
+    Sweep,
+    Plan,
+    Stats,
+}
+
+impl OpKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            OpKind::Search => "search",
+            OpKind::Sweep => "sweep",
+            OpKind::Plan => "plan",
+            OpKind::Stats => "stats",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<OpKind> {
+        match s {
+            "search" => Some(OpKind::Search),
+            "sweep" => Some(OpKind::Sweep),
+            "plan" => Some(OpKind::Plan),
+            "stats" => Some(OpKind::Stats),
+            _ => None,
+        }
+    }
+}
+
+/// Machine-readable error class carried by v2 error responses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrCode {
+    /// The request is malformed or names unknown entities.
+    BadRequest,
+    /// Admission control shed the request (queue over its limit).
+    Overloaded,
+    /// `"v"` names a protocol version this server does not speak.
+    UnsupportedVersion,
+    /// A v2 envelope named an unknown `"op"`.
+    UnsupportedOp,
+    /// The server failed while computing (worker panic, lost result).
+    Internal,
+}
+
+impl ErrCode {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ErrCode::BadRequest => "bad_request",
+            ErrCode::Overloaded => "overloaded",
+            ErrCode::UnsupportedVersion => "unsupported_version",
+            ErrCode::UnsupportedOp => "unsupported_op",
+            ErrCode::Internal => "internal",
+        }
+    }
+}
+
+/// A typed service error: code for machines, message for humans. v1
+/// clients see only the message (their `error` field is a string).
+#[derive(Clone, Debug)]
+pub struct ServiceError {
+    pub code: ErrCode,
+    pub message: String,
+}
+
+impl ServiceError {
+    pub fn bad_request(message: impl Into<String>) -> ServiceError {
+        ServiceError { code: ErrCode::BadRequest, message: message.into() }
+    }
+
+    pub fn overloaded(message: impl Into<String>) -> ServiceError {
+        ServiceError { code: ErrCode::Overloaded, message: message.into() }
+    }
+
+    pub fn internal(message: impl Into<String>) -> ServiceError {
+        ServiceError { code: ErrCode::Internal, message: message.into() }
+    }
+}
+
+/// A parsed request envelope: protocol version, correlation id, the
+/// operation, and the body the operation handlers read fields from.
+/// For v1 the body is the whole bare request (field names are shared
+/// between the dialects, so handlers are version-blind).
+#[derive(Clone, Debug)]
+pub struct Envelope {
+    pub v: u8,
+    pub id: Option<Json>,
+    pub op: OpKind,
+    pub body: Json,
+}
+
+/// Infer the operation of a bare (v1) request from its fields.
+fn infer_legacy_op(req: &Json) -> Result<OpKind, ServiceError> {
+    if req.get("plan").is_some() {
+        Ok(OpKind::Plan)
+    } else if req.get("workloads").is_some() {
+        Ok(OpKind::Sweep)
+    } else if req.get("workload").is_some() {
+        Ok(OpKind::Search)
+    } else {
+        Err(ServiceError::bad_request(
+            "request names no operation: send a v2 envelope {\"v\":2,\"op\":...} or a \
+             legacy 'workload'/'workloads'/'plan' field",
+        ))
+    }
+}
+
+/// Parse a request into an [`Envelope`], classifying it as v1 or v2.
+pub fn parse_envelope(req: &Json) -> Result<Envelope, ServiceError> {
+    let id = req.get("id").cloned();
+    let version = match req.get("v") {
+        None => 1,
+        Some(v) => {
+            let x = v.as_f64().filter(|x| x.fract() == 0.0).ok_or_else(|| {
+                ServiceError::bad_request("'v' must be an integer protocol version")
+            })?;
+            x as i64
+        }
+    };
+    match version {
+        1 => Ok(Envelope { v: 1, id, op: infer_legacy_op(req)?, body: req.clone() }),
+        2 => {
+            let op_name = req.get("op").and_then(|o| o.as_str()).ok_or_else(|| {
+                ServiceError::bad_request("a v2 envelope requires an 'op' string")
+            })?;
+            let op = OpKind::parse(op_name).ok_or_else(|| ServiceError {
+                code: ErrCode::UnsupportedOp,
+                message: format!("unknown op '{op_name}' (expected search|sweep|plan|stats)"),
+            })?;
+            Ok(Envelope { v: 2, id, op, body: req.clone() })
+        }
+        other => Err(ServiceError {
+            code: ErrCode::UnsupportedVersion,
+            message: format!("unsupported protocol version {other} (this server speaks v1 and v2)"),
+        }),
+    }
+}
+
+/// Tag a success payload with the request's protocol version and echo
+/// its correlation id. Handlers produce version-blind payloads; this is
+/// the only place response envelopes are stamped.
+pub fn stamp(mut payload: Json, env: &Envelope) -> Json {
+    payload.set("v", json::num(env.v as f64));
+    if let Some(id) = &env.id {
+        payload.set("id", id.clone());
+    }
+    payload
+}
+
+/// Error response in the dialect the request spoke. v1 keeps the
+/// original flat string shape (plus the `"v"` tag); v2 carries the
+/// typed `{code, message}` object.
+pub fn error_response(env: Option<&Envelope>, err: &ServiceError) -> Json {
+    match env {
+        Some(e) if e.v == 1 => {
+            let mut o = Json::obj();
+            o.set("v", json::num(1.0))
+                .set("status", json::s("error"))
+                .set("error", json::s(&err.message));
+            if let Some(id) = &e.id {
+                o.set("id", id.clone());
+            }
+            o
+        }
+        other => {
+            let mut detail = Json::obj();
+            detail
+                .set("code", json::s(err.code.as_str()))
+                .set("message", json::s(&err.message));
+            let mut o = Json::obj();
+            o.set("v", json::num(2.0)).set("status", json::s("error")).set("error", detail);
+            if let Some(id) = other.and_then(|e| e.id.as_ref()) {
+                o.set("id", id.clone());
+            }
+            o
+        }
+    }
+}
+
+/// Error response for a request that failed before an [`Envelope`]
+/// existed (unparseable JSON, bad `"v"` field, no recognizable op).
+/// Requests that did not explicitly ask for v2 answer in the v1 shape —
+/// the legacy dialect is the default, so pre-v2 clients keep seeing
+/// string errors for garbage input.
+pub fn error_for_request(req: &Json, err: &ServiceError) -> Json {
+    let asked_v2 = matches!(req.get("v").and_then(|v| v.as_f64()), Some(x) if x >= 2.0);
+    if asked_v2 {
+        let env = Envelope { v: 2, id: req.get("id").cloned(), op: OpKind::Stats, body: Json::Null };
+        error_response(Some(&env), err)
+    } else {
+        let env = Envelope { v: 1, id: req.get("id").cloned(), op: OpKind::Stats, body: Json::Null };
+        error_response(Some(&env), err)
+    }
+}
+
+/// Normalized identity of a request for the coalescer: two requests
+/// with the same key are guaranteed to produce the same payload (modulo
+/// the stamped `v`/`id` and the wall-clock `elapsed_ms`), so in-flight
+/// duplicates share one computation. Built from the *parsed* structs —
+/// not raw text — so default-elision, field order and v1-vs-v2 framing
+/// all normalize away.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct RequestKey(String);
+
+impl RequestKey {
+    pub fn as_str(&self) -> &str {
+        &self.0
+    }
+
+    pub fn into_string(self) -> String {
+        self.0
+    }
+
+    /// Opaque key for unit tests that don't want to build a request.
+    #[cfg(test)]
+    pub(crate) fn test_key(s: &str) -> RequestKey {
+        RequestKey(s.to_string())
+    }
+}
+
+/// Compute the coalescing key for an envelope. Errors here are the
+/// same validation errors the handler would raise, surfaced before the
+/// request is queued.
+pub fn request_key(env: &Envelope) -> anyhow::Result<RequestKey> {
+    let body = &env.body;
+    let key = match env.op {
+        OpKind::Search => {
+            let wl = WorkloadSpec::from_json(body.req("workload")?)?;
+            let pc = parse_context(body, &wl.model)?;
+            format!("search|{}|{}", pc.norm_json().to_string(), wl.to_json().to_string())
+        }
+        OpKind::Sweep => {
+            let wls = parse_sweep_workloads(body)?;
+            let pc = parse_context(body, &wls[0].model)?;
+            let scenarios: Vec<String> =
+                wls.iter().map(|w| w.to_json().to_string()).collect();
+            format!("sweep|{}|{}", pc.norm_json().to_string(), scenarios.join(";"))
+        }
+        OpKind::Plan => {
+            // Plans have no single normalized context (per-leg fabrics);
+            // key on the canonical body minus the envelope fields. The
+            // BTreeMap behind Json::Obj serializes keys sorted, so field
+            // order normalizes away even without full parsing.
+            let mut b = body.clone();
+            if let Json::Obj(m) = &mut b {
+                m.remove("v");
+                m.remove("id");
+                m.remove("op");
+            }
+            format!("plan|{}", b.to_string())
+        }
+        OpKind::Stats => "stats".to_string(),
+    };
+    Ok(RequestKey(key))
+}
+
+/// Workloads of a sweep request, validated (non-empty, one model).
+pub fn parse_sweep_workloads(body: &Json) -> anyhow::Result<Vec<WorkloadSpec>> {
+    let wls_json = body
+        .req("workloads")?
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("'workloads' must be an array"))?;
+    anyhow::ensure!(!wls_json.is_empty(), "'workloads' array is empty");
+    let wls: Vec<WorkloadSpec> = wls_json
+        .iter()
+        .map(WorkloadSpec::from_json)
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    anyhow::ensure!(
+        wls.iter().all(|w| w.model == wls[0].model),
+        "all workloads in a sweep must target the same model"
+    );
+    Ok(wls)
+}
+
+/// The cluster trio shared by every operation — `plan` reads exactly
+/// these three fields, search/sweep read them plus the GPU/fabric pair
+/// (a plan's GPUs and fabrics are per fleet leg).
+pub fn parse_cluster_base(req: &Json) -> anyhow::Result<(u32, u32, Framework)> {
+    let gpn = req.f64_or("gpus_per_node", 8.0) as u32;
+    let nodes = req.f64_or("num_nodes", 1.0) as u32;
+    let fw_name = req.str_or("framework", "trtllm");
+    let fw = Framework::parse(fw_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown framework '{fw_name}'"))?;
+    Ok((gpn, nodes, fw))
+}
+
+/// Search-space overrides: the one validated mutation path shared by
+/// the CLI flags (`--modes`, `--flag-sweep`, `--max-num-tokens`,
+/// `--kv-frac`, `--cuda-graph`) and the service request fields
+/// (`modes`, `flag_sweep`, `flags.*`). Both frontends parse into this
+/// struct and call [`SpaceOverrides::apply`], so range rules (token
+/// counts positive, kv fractions in (0, 1], no `static` mode) can never
+/// fork between them again.
+#[derive(Clone, Debug, Default)]
+pub struct SpaceOverrides {
+    pub modes: Option<Vec<ServingMode>>,
+    pub flag_sweep: Option<bool>,
+    pub max_num_tokens: Option<Vec<u32>>,
+    pub kv_frac: Option<Vec<f64>>,
+    pub cuda_graph: Option<Vec<bool>>,
+}
+
+impl SpaceOverrides {
+    /// Parse the service-request form. Overrides are validated loudly:
+    /// a wrong-typed value is an error, never a silent fall-through to
+    /// the resolver.
+    pub fn from_request(req: &Json) -> anyhow::Result<SpaceOverrides> {
+        let mut ov = SpaceOverrides::default();
+        if let Some(modes) = req.get("modes") {
+            let arr = modes
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("'modes' must be an array of strings"))?;
+            ov.modes = Some(
+                arr.iter()
+                    .map(|m| {
+                        m.as_str().and_then(ServingMode::parse).ok_or_else(|| {
+                            anyhow::anyhow!("unknown serving mode {m:?} in 'modes'")
+                        })
+                    })
+                    .collect::<anyhow::Result<Vec<_>>>()?,
+            );
+        }
+        if let Some(v) = req.get("flag_sweep") {
+            ov.flag_sweep = Some(
+                v.as_bool()
+                    .ok_or_else(|| anyhow::anyhow!("'flag_sweep' must be a boolean"))?,
+            );
+        }
+        if let Some(flags) = req.get("flags") {
+            if let Some(v) = flags.get("max_num_tokens") {
+                let x = v
+                    .as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("flags.max_num_tokens must be a number"))?;
+                anyhow::ensure!(
+                    (1.0..=u32::MAX as f64).contains(&x) && x.fract() == 0.0,
+                    "flags.max_num_tokens must be a positive integer"
+                );
+                ov.max_num_tokens = Some(vec![x as u32]);
+            }
+            if let Some(v) = flags.get("kv_frac") {
+                let x = v
+                    .as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("flags.kv_frac must be a number"))?;
+                ov.kv_frac = Some(vec![x]);
+            }
+            if let Some(v) = flags.get("cuda_graph") {
+                let b = v
+                    .as_bool()
+                    .ok_or_else(|| anyhow::anyhow!("flags.cuda_graph must be a boolean"))?;
+                ov.cuda_graph = Some(vec![b]);
+            }
+        }
+        Ok(ov)
+    }
+
+    /// Apply to a space, enforcing the shared range rules.
+    pub fn apply(&self, space: &mut SearchSpace) -> anyhow::Result<()> {
+        if let Some(modes) = &self.modes {
+            space.modes = modes.clone();
+        }
+        // `static` parses but is not a searchable deployment shape:
+        // reject loudly instead of pricing nothing (see crate::search).
+        crate::search::ensure_searchable_modes(&space.modes)?;
+        if let Some(fs) = self.flag_sweep {
+            space.flag_sweep = fs;
+        }
+        if let Some(mnt) = &self.max_num_tokens {
+            anyhow::ensure!(!mnt.is_empty(), "max_num_tokens named no values");
+            anyhow::ensure!(mnt.iter().all(|&n| n >= 1), "max_num_tokens values must be positive");
+            space.max_num_tokens = mnt.clone();
+        }
+        if let Some(kv) = &self.kv_frac {
+            anyhow::ensure!(!kv.is_empty(), "kv_frac named no values");
+            anyhow::ensure!(
+                kv.iter().all(|&x| x > 0.0 && x <= 1.0),
+                "kv_frac values must be in (0, 1]"
+            );
+            space.kv_frac = kv.clone();
+        }
+        if let Some(cg) = &self.cuda_graph {
+            space.cuda_graph = cg.clone();
+        }
+        Ok(())
+    }
+}
+
+/// Deployment context parsed from a request's shared fields — one
+/// parser for the search and sweep handlers *and* the coalescing-key
+/// builder, so no two paths can interpret request fields differently.
+/// Pure: resolving the warm database/calibration for the context is the
+/// server state's job ([`super::State`]).
+pub struct ParsedContext {
+    pub model: ModelArch,
+    pub model_name: String,
+    pub gpu_name: String,
+    pub fabric_name: String,
+    pub gpn: u32,
+    pub nodes: u32,
+    pub fw: Framework,
+    pub cluster: ClusterSpec,
+    pub top_k: usize,
+    pub space: SearchSpace,
+    /// Tiered fabrics price rank layouts; a PJRT-bound server must
+    /// reject them (the AOT kernel prices the packed layout only).
+    pub placement_aware: bool,
+}
+
+impl ParsedContext {
+    /// The warm-cache key for this context.
+    pub fn db_key(&self) -> super::DbKey {
+        (
+            self.model_name.clone(),
+            self.gpu_name.clone(),
+            self.gpn,
+            self.nodes,
+            self.fw.name().to_string(),
+            self.fabric_name.clone(),
+        )
+    }
+
+    /// Canonical JSON of everything that shapes the answer (defaults
+    /// resolved, fields sorted by the BTreeMap serializer) — the
+    /// context half of a search/sweep [`RequestKey`].
+    pub fn norm_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("model", json::s(&self.model_name))
+            .set("gpu", json::s(&self.gpu_name))
+            .set("gpus_per_node", json::num(self.gpn as f64))
+            .set("num_nodes", json::num(self.nodes as f64))
+            .set("framework", json::s(self.fw.name()))
+            .set("fabric", json::s(&self.fabric_name))
+            .set("top_k", json::num(self.top_k as f64))
+            .set(
+                "modes",
+                json::arr(self.space.modes.iter().map(|m| json::s(m.name()))),
+            )
+            .set("flag_sweep", Json::Bool(self.space.flag_sweep))
+            .set(
+                "max_num_tokens",
+                json::arr(self.space.max_num_tokens.iter().map(|&n| json::num(n as f64))),
+            )
+            .set("kv_frac", json::farr(&self.space.kv_frac))
+            .set(
+                "cuda_graph",
+                json::arr(self.space.cuda_graph.iter().map(|&b| Json::Bool(b))),
+            );
+        o
+    }
+}
+
+/// Parse the shared search/sweep context fields of a request.
+pub fn parse_context(req: &Json, model_name: &str) -> anyhow::Result<ParsedContext> {
+    let (gpn, nodes, fw) = parse_cluster_base(req)?;
+    let gpu_name = req.str_or("gpu", "h100").to_string();
+    let top_k = req.f64_or("top_k", 5.0) as usize;
+    // Optional tiered fabric ("hgx-h100", "gb200-nvl72", ...); absent =
+    // the legacy flat topology, bit-for-bit the pre-fabric behavior.
+    let fabric_name = req.str_or("fabric", "legacy").to_string();
+    let fabric = crate::topology::fabric::by_name(&fabric_name, gpn)
+        .ok_or_else(|| anyhow::anyhow!("unknown fabric '{fabric_name}'"))?;
+    let model =
+        by_name(model_name).ok_or_else(|| anyhow::anyhow!("unknown model '{model_name}'"))?;
+    let gpu =
+        gpu_by_name(&gpu_name).ok_or_else(|| anyhow::anyhow!("unknown gpu '{gpu_name}'"))?;
+    let cluster = ClusterSpec::with_fabric(gpu, gpn, nodes, fabric);
+    let mut space = SearchSpace::default_for(&model, fw);
+    SpaceOverrides::from_request(req)?.apply(&mut space)?;
+    Ok(ParsedContext {
+        model,
+        model_name: model_name.to_string(),
+        gpu_name,
+        fabric_name,
+        gpn,
+        nodes,
+        fw,
+        cluster,
+        top_k,
+        space,
+        placement_aware: fabric.placement_aware(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn v2_envelope_parses_and_v1_is_inferred() {
+        let v2 = json::parse(r#"{"v": 2, "id": 7, "op": "search", "workload": {}}"#).unwrap();
+        let env = parse_envelope(&v2).unwrap();
+        assert_eq!(env.v, 2);
+        assert_eq!(env.op, OpKind::Search);
+        assert_eq!(env.id.as_ref().and_then(|i| i.as_f64()), Some(7.0));
+
+        let v1 = json::parse(r#"{"workloads": [], "id": 3}"#).unwrap();
+        let env = parse_envelope(&v1).unwrap();
+        assert_eq!(env.v, 1);
+        assert_eq!(env.op, OpKind::Sweep);
+
+        let plan = json::parse(r#"{"plan": {}}"#).unwrap();
+        assert_eq!(parse_envelope(&plan).unwrap().op, OpKind::Plan);
+    }
+
+    #[test]
+    fn bad_versions_and_ops_are_typed_errors() {
+        let v9 = json::parse(r#"{"v": 9, "op": "search"}"#).unwrap();
+        assert_eq!(parse_envelope(&v9).unwrap_err().code, ErrCode::UnsupportedVersion);
+
+        let noop = json::parse(r#"{"v": 2, "id": 1}"#).unwrap();
+        assert_eq!(parse_envelope(&noop).unwrap_err().code, ErrCode::BadRequest);
+
+        let weird = json::parse(r#"{"v": 2, "op": "warp"}"#).unwrap();
+        assert_eq!(parse_envelope(&weird).unwrap_err().code, ErrCode::UnsupportedOp);
+
+        let bare = json::parse(r#"{"hello": 1}"#).unwrap();
+        assert_eq!(parse_envelope(&bare).unwrap_err().code, ErrCode::BadRequest);
+    }
+
+    #[test]
+    fn error_responses_match_the_request_dialect() {
+        let err = ServiceError::bad_request("boom");
+        let v1 = json::parse(r#"{"workload": {}, "id": 4}"#).unwrap();
+        let env = parse_envelope(&v1).unwrap();
+        let resp = error_response(Some(&env), &err);
+        assert_eq!(resp.req_str("status").unwrap(), "error");
+        assert_eq!(resp.req_str("error").unwrap(), "boom");
+        assert_eq!(resp.req_f64("v").unwrap(), 1.0);
+
+        let v2 = json::parse(r#"{"v": 2, "op": "search", "id": 4}"#).unwrap();
+        let env = parse_envelope(&v2).unwrap();
+        let resp = error_response(Some(&env), &err);
+        assert_eq!(resp.req("error").unwrap().req_str("code").unwrap(), "bad_request");
+        assert_eq!(resp.req("error").unwrap().req_str("message").unwrap(), "boom");
+        assert_eq!(resp.req_f64("id").unwrap(), 4.0);
+        assert_eq!(resp.req_f64("v").unwrap(), 2.0);
+    }
+
+    #[test]
+    fn request_key_normalizes_versions_defaults_and_field_order() {
+        let wl = WorkloadSpec::new("llama3.1-8b", 512, 64, 2000.0, 5.0);
+        // v1 with defaults elided vs v2 with defaults spelled out, in a
+        // different field order: one key.
+        let mut v1 = Json::obj();
+        v1.set("workload", wl.to_json()).set("id", json::num(1.0));
+        let mut v2 = Json::obj();
+        v2.set("v", json::num(2.0))
+            .set("op", json::s("search"))
+            .set("id", json::num(99.0))
+            .set("framework", json::s("trtllm"))
+            .set("gpu", json::s("h100"))
+            .set("gpus_per_node", json::num(8.0))
+            .set("num_nodes", json::num(1.0))
+            .set("workload", wl.to_json());
+        let k1 = request_key(&parse_envelope(&v1).unwrap()).unwrap();
+        let k2 = request_key(&parse_envelope(&v2).unwrap()).unwrap();
+        assert_eq!(k1, k2);
+
+        // A different workload is a different key.
+        let wl2 = WorkloadSpec::new("llama3.1-8b", 1024, 64, 2000.0, 5.0);
+        let mut other = Json::obj();
+        other.set("workload", wl2.to_json());
+        let k3 = request_key(&parse_envelope(&other).unwrap()).unwrap();
+        assert_ne!(k1, k3);
+
+        // So is the same workload with a space override.
+        let mut pinned = Json::obj();
+        let mut flags = Json::obj();
+        flags.set("kv_frac", json::num(0.8));
+        pinned.set("workload", wl.to_json()).set("flags", flags);
+        let k4 = request_key(&parse_envelope(&pinned).unwrap()).unwrap();
+        assert_ne!(k1, k4);
+    }
+
+    #[test]
+    fn space_overrides_validate_ranges_for_both_frontends() {
+        let model = by_name("llama3.1-8b").unwrap();
+        let mut space = SearchSpace::default_for(&model, Framework::TrtLlm);
+        let ov = SpaceOverrides { kv_frac: Some(vec![1.5]), ..Default::default() };
+        assert!(ov.apply(&mut space).is_err(), "kv_frac > 1 must be rejected");
+        let ov = SpaceOverrides { max_num_tokens: Some(vec![0]), ..Default::default() };
+        assert!(ov.apply(&mut space).is_err(), "zero token budget must be rejected");
+        let ov = SpaceOverrides {
+            kv_frac: Some(vec![0.8]),
+            max_num_tokens: Some(vec![4096]),
+            flag_sweep: Some(true),
+            ..Default::default()
+        };
+        ov.apply(&mut space).unwrap();
+        assert_eq!(space.kv_frac, vec![0.8]);
+        assert_eq!(space.max_num_tokens, vec![4096]);
+        assert!(space.flag_sweep);
+    }
+
+    #[test]
+    fn plan_keys_ignore_envelope_fields() {
+        let a = json::parse(r#"{"plan": {"windows": 4}, "id": 1}"#).unwrap();
+        let b = json::parse(r#"{"v": 2, "op": "plan", "plan": {"windows": 4}, "id": 2}"#).unwrap();
+        let ka = request_key(&parse_envelope(&a).unwrap()).unwrap();
+        let kb = request_key(&parse_envelope(&b).unwrap()).unwrap();
+        assert_eq!(ka, kb);
+    }
+}

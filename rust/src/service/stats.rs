@@ -1,0 +1,375 @@
+//! Service observability: lock-free counters and latency histograms
+//! behind the `stats` request and the `/metrics`-style text dump.
+//!
+//! Everything here is `AtomicU64` — recording a request costs a handful
+//! of relaxed atomic adds, so the hot path never takes a lock for
+//! accounting. Latencies land in a log-spaced histogram (3 buckets per
+//! octave from ~4 µs to ~8 s), from which p50/p99 are read as bucket
+//! midpoints: quantiles are approximate to within one bucket width
+//! (~26%), which is plenty to tell a 100 ms search from a 2 s sweep.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::perfdb::TierSnapshot;
+use crate::util::json::{self, Json};
+
+use super::protocol::OpKind;
+
+const BUCKETS: usize = 64;
+/// Buckets per octave: resolution of the latency histogram.
+const PER_OCTAVE: f64 = 3.0;
+/// Shift so bucket 0 sits at ~2^-8 ms (≈ 4 µs).
+const OFFSET: f64 = 24.0;
+
+/// Fixed-bucket log-2 latency histogram (milliseconds).
+pub struct Histogram {
+    buckets: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+}
+
+// [AtomicU64; 64] has no Default impl (std stops at 32): build by hand.
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+        }
+    }
+}
+
+fn bucket_of(ms: f64) -> usize {
+    if ms <= 0.0 {
+        return 0;
+    }
+    let idx = (ms.log2() * PER_OCTAVE + OFFSET).floor();
+    idx.clamp(0.0, (BUCKETS - 1) as f64) as usize
+}
+
+/// Geometric midpoint of a bucket, in ms.
+fn bucket_value(i: usize) -> f64 {
+    2f64.powf((i as f64 + 0.5 - OFFSET) / PER_OCTAVE)
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram::default()
+    }
+
+    pub fn record(&self, ms: f64) {
+        self.buckets[bucket_of(ms)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add((ms * 1e3).max(0.0) as u64, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum_us.load(Ordering::Relaxed) as f64 / 1e3 / n as f64
+        }
+    }
+
+    /// Approximate percentile (`p` in [0, 100]): the midpoint of the
+    /// bucket holding the rank-th observation. 0 when empty.
+    pub fn percentile(&self, p: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let rank = ((p / 100.0) * total as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= rank {
+                return bucket_value(i);
+            }
+        }
+        bucket_value(BUCKETS - 1)
+    }
+}
+
+/// Per-operation counters: answered requests and their latency.
+#[derive(Default)]
+pub struct OpStat {
+    pub count: AtomicU64,
+    pub latency: Histogram,
+}
+
+/// All service-level counters. Gauges that live elsewhere (queue depth,
+/// cache occupancy) are passed in at snapshot time — see
+/// [`PoolGauges`]/[`CacheGauges`].
+#[derive(Default)]
+pub struct ServiceStats {
+    pub search: OpStat,
+    pub sweep: OpStat,
+    pub plan: OpStat,
+    pub stats_reqs: AtomicU64,
+    /// Error responses of any kind (typed, legacy, shed).
+    pub errors: AtomicU64,
+    /// Lines that never became a request (bad JSON, invalid UTF-8).
+    pub malformed: AtomicU64,
+    /// Requests refused by admission control.
+    pub shed: AtomicU64,
+    /// Coalesced groups: one leader computes...
+    pub coalesce_leaders: AtomicU64,
+    /// ...and each follower reuses the leader's payload.
+    pub coalesce_followers: AtomicU64,
+    /// Oracle provenance totals across all answered searches/sweeps
+    /// (measured, calibrated, analytic, SoL).
+    tiers: [AtomicU64; 4],
+}
+
+impl ServiceStats {
+    pub fn new() -> ServiceStats {
+        ServiceStats::default()
+    }
+
+    fn op_stat(&self, op: OpKind) -> Option<&OpStat> {
+        match op {
+            OpKind::Search => Some(&self.search),
+            OpKind::Sweep => Some(&self.sweep),
+            OpKind::Plan => Some(&self.plan),
+            OpKind::Stats => None,
+        }
+    }
+
+    /// Count one answered request of `op`.
+    pub fn bump(&self, op: OpKind) {
+        match self.op_stat(op) {
+            Some(s) => {
+                s.count.fetch_add(1, Ordering::Relaxed);
+            }
+            None => {
+                self.stats_reqs.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Record end-to-end latency for an answered `op` request.
+    pub fn record_latency(&self, op: OpKind, ms: f64) {
+        if let Some(s) = self.op_stat(op) {
+            s.latency.record(ms);
+        }
+    }
+
+    pub fn add_tiers(&self, t: &TierSnapshot) {
+        for (slot, v) in self.tiers.iter().zip([t.measured, t.calibrated, t.analytic, t.sol]) {
+            slot.fetch_add(v, Ordering::Relaxed);
+        }
+    }
+
+    /// Fraction of search/sweep/plan requests answered without a fresh
+    /// computation (0 before any coalescing).
+    pub fn coalesce_rate(&self) -> f64 {
+        let l = self.coalesce_leaders.load(Ordering::Relaxed);
+        let f = self.coalesce_followers.load(Ordering::Relaxed);
+        if l + f == 0 {
+            0.0
+        } else {
+            f as f64 / (l + f) as f64
+        }
+    }
+
+    /// Snapshot as the `stats` response body. Queue/cache gauges are
+    /// owned by the pipeline and warm cache respectively and passed in;
+    /// `pool` is `None` when stats are read outside a pipeline (the
+    /// in-process `handle_request` path has no queue).
+    pub fn to_json(&self, cache: &CacheGauges, pool: Option<&PoolGauges>) -> Json {
+        let ld = |a: &AtomicU64| a.load(Ordering::Relaxed) as f64;
+        let mut requests = Json::obj();
+        for (name, s) in
+            [("search", &self.search), ("sweep", &self.sweep), ("plan", &self.plan)]
+        {
+            let mut o = Json::obj();
+            o.set("count", json::num(ld(&s.count)))
+                .set("p50_ms", json::num(s.latency.percentile(50.0)))
+                .set("p99_ms", json::num(s.latency.percentile(99.0)))
+                .set("mean_ms", json::num(s.latency.mean_ms()));
+            requests.set(name, o);
+        }
+        requests.set("stats", json::num(ld(&self.stats_reqs)));
+
+        let mut coalesce = Json::obj();
+        coalesce
+            .set("leaders", json::num(ld(&self.coalesce_leaders)))
+            .set("followers", json::num(ld(&self.coalesce_followers)))
+            .set("rate", json::num(self.coalesce_rate()));
+
+        let mut cache_o = Json::obj();
+        cache_o
+            .set("entries", json::num(cache.entries as f64))
+            .set("capacity", json::num(cache.cap as f64))
+            .set("hits", json::num(cache.hits as f64))
+            .set("misses", json::num(cache.misses as f64))
+            .set("evictions", json::num(cache.evictions as f64))
+            .set("hit_rate", json::num(cache.hit_rate()));
+
+        let mut tiers = Json::obj();
+        for (name, slot) in
+            ["measured", "calibrated", "analytic", "sol"].iter().zip(&self.tiers)
+        {
+            tiers.set(name, json::num(ld(slot)));
+        }
+
+        let mut o = Json::obj();
+        o.set("requests", requests)
+            .set("errors", json::num(ld(&self.errors)))
+            .set("malformed", json::num(ld(&self.malformed)))
+            .set("shed", json::num(ld(&self.shed)))
+            .set("coalesce", coalesce)
+            .set("cache", cache_o)
+            .set("tiers", tiers);
+        if let Some(p) = pool {
+            let mut po = Json::obj();
+            po.set("queue_depth", json::num(p.queue_depth as f64))
+                .set("queue_limit", json::num(p.queue_limit as f64))
+                .set("workers", json::num(p.workers as f64));
+            o.set("pool", po);
+        }
+        o
+    }
+
+    /// Prometheus-style exposition text (one gauge/counter per line),
+    /// the `metrics_text` field of a `stats` response.
+    pub fn render_metrics(&self, cache: &CacheGauges, pool: Option<&PoolGauges>) -> String {
+        let ld = |a: &AtomicU64| a.load(Ordering::Relaxed);
+        let mut out = String::new();
+        for (name, s) in
+            [("search", &self.search), ("sweep", &self.sweep), ("plan", &self.plan)]
+        {
+            out.push_str(&format!(
+                "aiconf_requests_total{{op=\"{name}\"}} {}\n",
+                ld(&s.count)
+            ));
+            for (q, p) in [("0.5", 50.0), ("0.99", 99.0)] {
+                out.push_str(&format!(
+                    "aiconf_request_latency_ms{{op=\"{name}\",quantile=\"{q}\"}} {:.3}\n",
+                    s.latency.percentile(p)
+                ));
+            }
+        }
+        out.push_str(&format!("aiconf_requests_total{{op=\"stats\"}} {}\n", ld(&self.stats_reqs)));
+        out.push_str(&format!("aiconf_errors_total {}\n", ld(&self.errors)));
+        out.push_str(&format!("aiconf_malformed_total {}\n", ld(&self.malformed)));
+        out.push_str(&format!("aiconf_shed_total {}\n", ld(&self.shed)));
+        out.push_str(&format!(
+            "aiconf_coalesce_total{{role=\"leader\"}} {}\n",
+            ld(&self.coalesce_leaders)
+        ));
+        out.push_str(&format!(
+            "aiconf_coalesce_total{{role=\"follower\"}} {}\n",
+            ld(&self.coalesce_followers)
+        ));
+        out.push_str(&format!("aiconf_cache_entries {}\n", cache.entries));
+        out.push_str(&format!("aiconf_cache_capacity {}\n", cache.cap));
+        out.push_str(&format!("aiconf_cache_hits_total {}\n", cache.hits));
+        out.push_str(&format!("aiconf_cache_misses_total {}\n", cache.misses));
+        out.push_str(&format!("aiconf_cache_evictions_total {}\n", cache.evictions));
+        for (name, slot) in
+            ["measured", "calibrated", "analytic", "sol"].iter().zip(&self.tiers)
+        {
+            out.push_str(&format!(
+                "aiconf_oracle_queries_total{{tier=\"{name}\"}} {}\n",
+                ld(slot)
+            ));
+        }
+        if let Some(p) = pool {
+            out.push_str(&format!("aiconf_queue_depth {}\n", p.queue_depth));
+            out.push_str(&format!("aiconf_queue_limit {}\n", p.queue_limit));
+            out.push_str(&format!("aiconf_pool_workers {}\n", p.workers));
+        }
+        out
+    }
+}
+
+/// Point-in-time worker-pool gauges (owned by the pipeline).
+pub struct PoolGauges {
+    pub queue_depth: usize,
+    pub queue_limit: usize,
+    pub workers: usize,
+}
+
+/// Point-in-time warm-cache gauges (owned by [`super::cache::WarmCache`]).
+pub struct CacheGauges {
+    pub entries: usize,
+    pub cap: usize,
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+impl CacheGauges {
+    pub fn hit_rate(&self) -> f64 {
+        if self.hits + self.misses == 0 {
+            0.0
+        } else {
+            self.hits as f64 / (self.hits + self.misses) as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_percentiles_bracket_the_data() {
+        let h = Histogram::new();
+        for _ in 0..90 {
+            h.record(10.0);
+        }
+        for _ in 0..10 {
+            h.record(1000.0);
+        }
+        assert_eq!(h.count(), 100);
+        let p50 = h.percentile(50.0);
+        let p99 = h.percentile(99.0);
+        // Log-bucket midpoints: within ~26% of the true value.
+        assert!((7.0..14.0).contains(&p50), "p50 = {p50}");
+        assert!((700.0..1400.0).contains(&p99), "p99 = {p99}");
+        assert!(h.mean_ms() > p50 && h.mean_ms() < p99);
+        assert_eq!(Histogram::new().percentile(99.0), 0.0);
+    }
+
+    #[test]
+    fn histogram_extremes_clamp() {
+        let h = Histogram::new();
+        h.record(0.0);
+        h.record(-3.0);
+        h.record(1e12);
+        assert_eq!(h.count(), 3);
+        assert!(h.percentile(100.0) > 0.0);
+    }
+
+    #[test]
+    fn stats_snapshot_has_the_advertised_fields() {
+        let st = ServiceStats::new();
+        st.bump(OpKind::Search);
+        st.record_latency(OpKind::Search, 120.0);
+        st.coalesce_leaders.fetch_add(1, Ordering::Relaxed);
+        st.coalesce_followers.fetch_add(3, Ordering::Relaxed);
+        st.add_tiers(&TierSnapshot { measured: 5, calibrated: 7, analytic: 2, sol: 1 });
+        let cache = CacheGauges { entries: 2, cap: 8, hits: 9, misses: 3, evictions: 1 };
+        let pool = PoolGauges { queue_depth: 4, queue_limit: 64, workers: 2 };
+        let j = st.to_json(&cache, Some(&pool));
+        assert_eq!(j.req("requests").unwrap().req("search").unwrap().req_f64("count").unwrap(), 1.0);
+        assert!(j.req("requests").unwrap().req("search").unwrap().req_f64("p50_ms").unwrap() > 0.0);
+        assert_eq!(j.req("coalesce").unwrap().req_f64("rate").unwrap(), 0.75);
+        assert_eq!(j.req("cache").unwrap().req_f64("hit_rate").unwrap(), 0.75);
+        assert_eq!(j.req("pool").unwrap().req_f64("queue_depth").unwrap(), 4.0);
+        assert_eq!(j.req("tiers").unwrap().req_f64("calibrated").unwrap(), 7.0);
+
+        let text = st.render_metrics(&cache, Some(&pool));
+        assert!(text.contains("aiconf_requests_total{op=\"search\"} 1"));
+        assert!(text.contains("aiconf_queue_depth 4"));
+        assert!(text.contains("aiconf_coalesce_total{role=\"follower\"} 3"));
+        assert!(text.contains("aiconf_oracle_queries_total{tier=\"measured\"} 5"));
+    }
+}

@@ -83,6 +83,44 @@ fn bench_plan_keeps_its_contract() {
     }
 }
 
+/// The committed BENCH_service.json placeholder (or its measured
+/// overwrite) must keep the keys benches/service.rs writes; a measured
+/// run must additionally prove the closed loop coalesced and shed
+/// nothing under its oversized admission queue.
+#[test]
+fn bench_service_keeps_its_contract() {
+    let txt = std::fs::read_to_string(repo_root().join("BENCH_service.json")).unwrap();
+    let j = json::parse(&txt).unwrap();
+    assert_eq!(j.req_str("bench").unwrap(), "service");
+    for key in [
+        "clients",
+        "requests_total",
+        "elapsed_s",
+        "throughput_rps",
+        "p50_ms",
+        "p99_ms",
+        "coalesce_rate",
+        "cache_hit_rate",
+        "shed_total",
+        "errors",
+    ] {
+        let v = j.req(key).unwrap_or_else(|e| panic!("BENCH_service.json: {e}"));
+        assert!(
+            matches!(v, Json::Null | Json::Num(_)),
+            "BENCH_service.json: '{key}' must be a number or null (pending)"
+        );
+    }
+    // A measured run (non-null requests_total) must show coalescing and
+    // a clean, unshed mix — the bench's own acceptance bar.
+    if let Some(total) = j.req("requests_total").unwrap().as_f64() {
+        assert!(total >= 100.0, "closed loop must drive hundreds of requests");
+        assert!(j.req_f64("coalesce_rate").unwrap() > 0.0);
+        assert!(j.req_f64("cache_hit_rate").unwrap() > 0.5);
+        assert_eq!(j.req_f64("shed_total").unwrap(), 0.0);
+        assert_eq!(j.req_f64("errors").unwrap(), 0.0);
+    }
+}
+
 /// The committed BENCH_topology.json placeholder (or its measured
 /// overwrite) must keep the keys benches/topology.rs writes, and its
 /// fabric list must name real presets.

@@ -3,11 +3,11 @@
 
 use aiconfigurator::config::WorkloadSpec;
 use aiconfigurator::frameworks::Framework;
-use aiconfigurator::service::{make_request, Client, SearchServer, ServerConfig};
+use aiconfigurator::service::{make_request, make_request_v2, Client, SearchServer, ServerConfig};
 use aiconfigurator::util::json;
 
 fn start_server() -> (std::net::SocketAddr, std::sync::Arc<std::sync::atomic::AtomicBool>, std::thread::JoinHandle<anyhow::Result<()>>) {
-    let cfg = ServerConfig { addr: "127.0.0.1:0".into(), artifacts: None, calibration: None, seed: 7 };
+    let cfg = ServerConfig { addr: "127.0.0.1:0".into(), seed: 7, ..Default::default() };
     let (server, addr) = SearchServer::bind(&cfg, None).unwrap();
     let stop = server.stopper();
     let handle = std::thread::spawn(move || server.run());
@@ -79,6 +79,56 @@ fn malformed_requests_yield_errors_not_disconnects() {
         .request(&make_request(&wl, "h100", 8, 1, Framework::TrtLlm, 10))
         .unwrap();
     assert_eq!(ok.req_str("status").unwrap(), "ok");
+    shutdown(addr, &stop);
+}
+
+#[test]
+fn v2_protocol_smoke_over_tcp() {
+    use std::io::{BufRead, BufReader, Write};
+    let (addr, stop, _h) = start_server();
+    let mut client = Client::connect(&addr).unwrap();
+    let wl = WorkloadSpec::new("llama3.1-8b", 1024, 128, 2000.0, 10.0);
+
+    // v1 and v2 answer the same search; only the envelope tag differs.
+    let v1 = client.request(&make_request(&wl, "h100", 8, 1, Framework::TrtLlm, 1)).unwrap();
+    let v2 = client.request(&make_request_v2(&wl, "h100", 8, 1, Framework::TrtLlm, 2)).unwrap();
+    assert_eq!(v1.req_f64("v").unwrap(), 1.0);
+    assert_eq!(v2.req_f64("v").unwrap(), 2.0);
+    assert_eq!(v2.req_f64("id").unwrap(), 2.0);
+    assert_eq!(v1.req_f64("feasible").unwrap(), v2.req_f64("feasible").unwrap());
+
+    // Unsupported version → typed error, connection survives.
+    let resp = client.request(&json::parse(r#"{"v": 3, "op": "search", "id": 4}"#).unwrap()).unwrap();
+    assert_eq!(resp.req_str("status").unwrap(), "error");
+    assert_eq!(resp.req("error").unwrap().req_str("code").unwrap(), "unsupported_version");
+    assert_eq!(resp.req_f64("id").unwrap(), 4.0);
+
+    // A line of invalid UTF-8 gets a typed reply instead of killing the
+    // connection loop (raw socket: Client only writes valid JSON).
+    let mut raw = std::net::TcpStream::connect(addr).unwrap();
+    raw.write_all(&[0xff, 0xfe, 0xfd, b'\n']).unwrap();
+    let mut reader = BufReader::new(raw.try_clone().unwrap());
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let resp = json::parse(line.trim()).unwrap();
+    assert_eq!(resp.req_str("status").unwrap(), "error");
+    assert_eq!(resp.req("error").unwrap().req_str("code").unwrap(), "bad_request");
+    // ...and the same connection still answers real requests.
+    raw.write_all(b"not json either\n").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert_eq!(json::parse(line.trim()).unwrap().req_str("status").unwrap(), "error");
+
+    // The stats request reports what this test did.
+    let stats = client.request(&json::parse(r#"{"v": 2, "op": "stats", "id": 9}"#).unwrap()).unwrap();
+    assert_eq!(stats.req_str("status").unwrap(), "ok");
+    let s = stats.req("stats").unwrap();
+    assert!(s.req("requests").unwrap().req("search").unwrap().req_f64("count").unwrap() >= 2.0);
+    assert!(s.req("requests").unwrap().req("search").unwrap().req_f64("p50_ms").unwrap() > 0.0);
+    assert!(s.req("malformed").unwrap().as_f64().unwrap() >= 2.0);
+    assert!(s.req("pool").unwrap().req_f64("workers").unwrap() >= 1.0);
+    assert_eq!(s.req("cache").unwrap().req_f64("entries").unwrap(), 1.0);
+    assert!(stats.req_str("metrics_text").unwrap().contains("aiconf_shed_total"));
     shutdown(addr, &stop);
 }
 

@@ -1,0 +1,194 @@
+//! Concurrency contracts of the service pipeline: request coalescing,
+//! load shedding, warm-cache LRU eviction, and v1/v2 equivalence —
+//! driven in-process (no sockets) so the tests control worker counts
+//! and queue limits precisely.
+
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Barrier};
+
+use aiconfigurator::config::WorkloadSpec;
+use aiconfigurator::frameworks::Framework;
+use aiconfigurator::service::{handle_request, make_request, make_request_v2, Pipeline, State};
+use aiconfigurator::util::json::{self, Json};
+
+/// A fast search request: single mode, small model.
+fn search_req(isl: u32, id: u64) -> Json {
+    let wl = WorkloadSpec::new("llama3.1-8b", isl, 64, 2000.0, 5.0);
+    let mut req = make_request(&wl, "h100", 8, 1, Framework::TrtLlm, id);
+    req.set("modes", Json::Arr(vec![json::s("agg")]));
+    req
+}
+
+/// Drop the envelope/wall-clock fields that legitimately differ between
+/// two answers to the same logical request.
+fn strip_volatile(mut j: Json) -> Json {
+    if let Json::Obj(m) = &mut j {
+        m.remove("v");
+        m.remove("id");
+        m.remove("elapsed_ms");
+    }
+    j
+}
+
+#[test]
+fn coalesced_requests_share_one_computation_and_payload() {
+    let pipeline = Pipeline::new(Arc::new(State::new(5)), 2, 64);
+    // Fire salvos of identical requests (distinct ids — the coalescing
+    // key ignores them) until at least one follower latched onto a
+    // leader's flight. The first salvo almost always coalesces (the
+    // leader holds the flight for the whole search), but the contract
+    // is probabilistic per salvo, so retry a few times.
+    let threads = 8usize;
+    let mut rounds = 0usize;
+    let mut responses = Vec::new();
+    while pipeline.state().stats.coalesce_followers.load(Ordering::Relaxed) == 0 {
+        rounds += 1;
+        assert!(rounds <= 5, "no coalescing after {threads}x{rounds} identical requests");
+        let barrier = Barrier::new(threads);
+        responses = std::thread::scope(|sc| {
+            let handles: Vec<_> = (0..threads)
+                .map(|i| {
+                    let (pipeline, barrier) = (&pipeline, &barrier);
+                    sc.spawn(move || {
+                        barrier.wait();
+                        pipeline.handle(&search_req(1024, i as u64))
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+    }
+    let stats = &pipeline.state().stats;
+    let leaders = stats.coalesce_leaders.load(Ordering::Relaxed);
+    let followers = stats.coalesce_followers.load(Ordering::Relaxed);
+    let total = (rounds * threads) as u64;
+    assert!(followers >= 1);
+    assert!(
+        leaders < total,
+        "coalescing must run fewer computations ({leaders}) than requests ({total})"
+    );
+    // Every coalesced answer is bit-identical to an uncoalesced run of
+    // the same request (modulo envelope + wall clock).
+    let lone = strip_volatile(pipeline.handle(&search_req(1024, 999)));
+    for r in responses {
+        assert_eq!(r.req_str("status").unwrap(), "ok");
+        assert_eq!(strip_volatile(r), lone, "coalesced payload must match uncoalesced");
+    }
+}
+
+#[test]
+fn overload_sheds_with_typed_errors_instead_of_hanging() {
+    // One worker, backlog of one: concurrent distinct requests (unique
+    // isl → unique coalescing keys) must overflow admission.
+    let pipeline = Pipeline::new(Arc::new(State::new(6)), 1, 1);
+    // Warm the context first so the salvo doesn't serialize on the
+    // single-flight database build.
+    assert_eq!(pipeline.handle(&search_req(4096, 0)).req_str("status").unwrap(), "ok");
+
+    // Salvos of concurrent *distinct* v2 requests (unique isl per
+    // request → unique coalescing keys). With one worker and a backlog
+    // of one, a simultaneous salvo of 6 must overflow admission; retry
+    // a few salvos in case the worker drains unusually fast.
+    let threads = 6usize;
+    let mut rounds = 0usize;
+    let mut responses: Vec<Json> = Vec::new();
+    while pipeline.state().stats.shed.load(Ordering::Relaxed) == 0 {
+        rounds += 1;
+        assert!(rounds <= 5, "no shedding after {rounds} salvos at queue_limit=1");
+        let barrier = Barrier::new(threads);
+        responses = std::thread::scope(|sc| {
+            let handles: Vec<_> = (0..threads)
+                .map(|i| {
+                    let (pipeline, barrier) = (&pipeline, &barrier);
+                    sc.spawn(move || {
+                        barrier.wait();
+                        // Distinct isl per thread and per round.
+                        let isl = 256 + 64 * (rounds * threads + i) as u32;
+                        let wl = WorkloadSpec::new("llama3.1-8b", isl, 64, 2000.0, 5.0);
+                        let mut req =
+                            make_request_v2(&wl, "h100", 8, 1, Framework::TrtLlm, i as u64);
+                        req.set("modes", Json::Arr(vec![json::s("agg")]));
+                        pipeline.handle(&req)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+    }
+    let shed: Vec<&Json> =
+        responses.iter().filter(|r| r.req_str("status").unwrap() == "error").collect();
+    let ok = responses.iter().filter(|r| r.req_str("status").unwrap() == "ok").count();
+    assert!(!shed.is_empty(), "at least one request of the salvo must be shed");
+    assert!(ok >= 1, "admitted requests must still be answered");
+    for r in &shed {
+        // The v2 dialect carries the typed refusal, not a hang and not
+        // a bare string.
+        let err = r.req("error").unwrap();
+        assert_eq!(err.req_str("code").unwrap(), "overloaded", "{r:?}");
+        assert!(err.req_str("message").unwrap().contains("queue"), "{r:?}");
+    }
+    assert!(pipeline.state().stats.shed.load(Ordering::Relaxed) >= 1);
+    assert!(pipeline.state().stats.errors.load(Ordering::Relaxed) >= 1);
+}
+
+#[test]
+fn warm_cache_evicts_lru_context_but_keeps_hit_rate() {
+    // Capacity 2, three contexts (distinct gpus_per_node): the access
+    // pattern A B A C A keeps the hot context resident and evicts the
+    // cold one.
+    let st = State::with_caps(7, None, 2);
+    let req_for = |gpn: u32, id: u64| {
+        let wl = WorkloadSpec::new("llama3.1-8b", 512, 64, 2000.0, 5.0);
+        let mut req = make_request(&wl, "h100", gpn, 1, Framework::TrtLlm, id);
+        req.set("modes", Json::Arr(vec![json::s("agg")]));
+        req
+    };
+    for (i, gpn) in [8u32, 4, 8, 2, 8].iter().enumerate() {
+        let resp = handle_request(&req_for(*gpn, i as u64), &st).unwrap();
+        assert_eq!(resp.req_str("status").unwrap(), "ok");
+        assert!(st.cache().len() <= 2, "cache must stay within its capacity");
+    }
+    let (hits, misses, evictions) = st.cache().stats();
+    assert_eq!(misses, 3, "three distinct contexts were built");
+    assert_eq!(hits, 2, "the hot context must be answered warm");
+    assert!(evictions >= 1, "capacity 2 with 3 contexts must evict");
+    let key_of = |gpn: u32| {
+        ("llama3.1-8b".to_string(), "h100".to_string(), gpn, 1, "trtllm".to_string(), "legacy".to_string())
+    };
+    assert!(st.cache().peek(&key_of(8)).is_some(), "the hot context stays resident");
+    assert!(st.cache().peek(&key_of(4)).is_none(), "the LRU context is evicted");
+}
+
+#[test]
+fn v1_and_v2_envelopes_answer_equivalently() {
+    let pipeline = Pipeline::new(Arc::new(State::new(8)), 0, 0);
+    let wl = WorkloadSpec::new("llama3.1-8b", 768, 96, 2000.0, 5.0);
+    let mut v1 = make_request(&wl, "h100", 8, 1, Framework::TrtLlm, 1);
+    v1.set("modes", Json::Arr(vec![json::s("agg")]));
+    let mut v2 = make_request_v2(&wl, "h100", 8, 1, Framework::TrtLlm, 2);
+    v2.set("modes", Json::Arr(vec![json::s("agg")]));
+
+    let r1 = pipeline.handle(&v1);
+    let r2 = pipeline.handle(&v2);
+    assert_eq!(r1.req_f64("v").unwrap(), 1.0);
+    assert_eq!(r2.req_f64("v").unwrap(), 2.0);
+    assert_eq!(r1.req_f64("id").unwrap(), 1.0);
+    assert_eq!(r2.req_f64("id").unwrap(), 2.0);
+    assert_eq!(
+        strip_volatile(r1),
+        strip_volatile(r2),
+        "the two dialects must answer byte-identically modulo the envelope"
+    );
+
+    // The stats op reports the traffic above with queue gauges and
+    // latency quantiles.
+    let stats = pipeline.handle(&json::parse(r#"{"v": 2, "op": "stats"}"#).unwrap());
+    assert_eq!(stats.req_str("status").unwrap(), "ok");
+    let s = stats.req("stats").unwrap();
+    assert_eq!(s.req("requests").unwrap().req("search").unwrap().req_f64("count").unwrap(), 2.0);
+    assert!(s.req("requests").unwrap().req("search").unwrap().req_f64("p50_ms").unwrap() > 0.0);
+    assert!(s.req("pool").unwrap().req_f64("queue_depth").unwrap() >= 0.0);
+    assert!(s.req("pool").unwrap().req_f64("queue_limit").unwrap() >= 1.0);
+    assert_eq!(s.req("cache").unwrap().req_f64("entries").unwrap(), 1.0);
+    assert!(stats.req_str("metrics_text").unwrap().contains("aiconf_queue_depth"));
+}

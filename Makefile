@@ -10,10 +10,14 @@
 #                   a fabric-aware search end-to-end (mirrors CI)
 #   make service-smoke  service pipeline gate: TCP protocol tests + the
 #                   in-process coalescing/shedding/LRU load tests
+#   make validate-smoke  fleet-replay gate: plan against the committed
+#                   trace spec, replay it benign (optimism gap <= 10%)
+#                   and injected (failures degrade gracefully)
 #   make bench      search-engine benches (table1_search + sweep)
 #   make bench-plan capacity-planner bench (writes BENCH_plan.json)
 #   make bench-topo topology bench (writes BENCH_topology.json)
 #   make bench-service  closed-loop service bench (writes BENCH_service.json)
+#   make bench-validate  fleet-replay bench (writes BENCH_validate.json)
 #   make bench-all  every bench target
 #   make artifacts  AOT-lower the Pallas kernels to HLO (needs jax; the
 #                   Rust side degrades gracefully when absent)
@@ -23,8 +27,8 @@ RUST_DIR := rust
 PYTHON   ?= python3
 
 .PHONY: verify build test gen-smoke artifacts-validate calibrate-smoke topo-smoke \
-        service-smoke measurements bench bench-plan bench-topo bench-service \
-        bench-all artifacts fmt clippy clean
+        service-smoke validate-smoke measurements bench bench-plan bench-topo \
+        bench-service bench-validate bench-all artifacts fmt clippy clean
 
 verify:
 	cd $(RUST_DIR) && cargo build --release && cargo test -q
@@ -60,6 +64,20 @@ topo-smoke:
 service-smoke:
 	cd $(RUST_DIR) && cargo test --test service --test service_load -- --nocapture
 
+validate-smoke:
+	cd $(RUST_DIR) && cargo run --release -- validate \
+		--model llama3.1-8b --fleet h100 --framework trtllm \
+		--isl 256 --osl 32 --ttft 5000 --speed 2 \
+		--trace-spec ../artifacts/traces/diurnal-smoke.json \
+		--out target/validate/benign.json \
+		--check-gap 0.10
+	cd $(RUST_DIR) && cargo run --release -- validate \
+		--model llama3.1-8b --fleet h100 --framework trtllm \
+		--isl 256 --osl 32 --ttft 5000 --speed 2 \
+		--trace-spec ../artifacts/traces/diurnal-smoke.json \
+		--scale-lag 30 --failure-rate 50 --restart 30 \
+		--out target/validate/injected.json
+
 measurements:
 	$(PYTHON) python/measurements/synth.py
 
@@ -82,7 +100,10 @@ bench-topo:
 bench-service:
 	cd $(RUST_DIR) && cargo bench --bench service
 
-bench-all: bench bench-plan bench-topo bench-service
+bench-validate:
+	cd $(RUST_DIR) && cargo bench --bench validate
+
+bench-all: bench bench-plan bench-topo bench-service bench-validate
 	cd $(RUST_DIR) && cargo bench --bench interp_hot_path
 	cd $(RUST_DIR) && cargo bench --bench calibration
 	cd $(RUST_DIR) && cargo bench --bench simulator

@@ -1,0 +1,104 @@
+//! Bench: fleet replay (`validate`) — plan once, then measure the
+//! discrete-event replay of the plan's own trace through the fleet,
+//! benign (faithful-execution) vs injected (lag + failures). The
+//! replay is the expensive half of `aiconfigurator validate`; the plan
+//! itself is covered by benches/planner.rs.
+//!
+//! Run: `cargo bench --bench validate` (or `make bench-validate`).
+//! Writes the measured medians to ../BENCH_validate.json.
+
+use aiconfigurator::config::WorkloadSpec;
+use aiconfigurator::fleetsim::{self, FleetConfig, FleetLeg};
+use aiconfigurator::frameworks::Framework;
+use aiconfigurator::hardware::{h100_sxm, ClusterSpec};
+use aiconfigurator::models::by_name;
+use aiconfigurator::perfdb::{LatencyOracle, PerfDatabase};
+use aiconfigurator::planner::{self, PlanSpec, TrafficModel};
+use aiconfigurator::silicon::Silicon;
+use aiconfigurator::util::bench::{bench, black_box};
+use aiconfigurator::util::json::{self, Json};
+
+fn main() {
+    let model_name = "llama3.1-8b";
+    let model = by_name(model_name).unwrap();
+    let framework = Framework::TrtLlm;
+    let cluster = ClusterSpec::new(h100_sxm(), 8, 1);
+    let sil = Silicon::new(cluster, framework.profile());
+    let db = PerfDatabase::build(&sil, &model, cluster.gpu.preferred_kv_dtype(), 0xA1C0);
+    let fleet: Vec<(ClusterSpec, &dyn LatencyOracle)> = vec![(cluster, &db)];
+
+    // A short diurnal horizon: 6 windows of 72 s at 1-10 QPS keeps the
+    // trace in the low thousands of requests.
+    let wl = WorkloadSpec::new(model_name, 512, 64, 2000.0, 10.0);
+    let windows = 6usize;
+    let window_h = 0.02;
+    let spec = PlanSpec::new(
+        wl.clone(),
+        TrafficModel::Diurnal { peak_qps: 10.0, trough_qps: 1.0, period_h: windows as f64 * window_h },
+        windows,
+        window_h,
+    );
+    let plan = planner::plan(&model, framework, &spec, &fleet).unwrap();
+    let trace = spec.traffic.trace(windows, window_h, &wl, 0.1, 0xD15C);
+    let legs = [FleetLeg { name: cluster.gpu.name.to_string(), cluster, silicon: &sil }];
+
+    let benign_cfg = FleetConfig::default();
+    let benign = bench(
+        &format!("validate-benign-{}req-{windows}w/{model_name}", trace.len()),
+        1,
+        5,
+        || {
+            black_box(
+                fleetsim::replay(&model, &spec, &plan, &legs, &trace, &benign_cfg).unwrap(),
+            );
+        },
+    );
+
+    let mut injected_cfg = benign_cfg;
+    injected_cfg.scale_lag_s = 60.0;
+    injected_cfg.failure_rate_per_replica_h = 2.0;
+    injected_cfg.restart_s = 60.0;
+    let injected = bench(
+        &format!("validate-injected-{}req-{windows}w/{model_name}", trace.len()),
+        1,
+        5,
+        || {
+            black_box(
+                fleetsim::replay(&model, &spec, &plan, &legs, &trace, &injected_cfg).unwrap(),
+            );
+        },
+    );
+
+    let rep = fleetsim::replay(&model, &spec, &plan, &legs, &trace, &benign_cfg).unwrap();
+    let rep_inj = fleetsim::replay(&model, &spec, &plan, &legs, &trace, &injected_cfg).unwrap();
+    println!(
+        "    -> benign: promised {:.4} achieved {:.4} gap {:+.4} | injected: achieved {:.4} \
+         ({} failures)",
+        rep.promised_attainment,
+        rep.achieved_attainment,
+        rep.optimism_gap,
+        rep_inj.achieved_attainment,
+        rep_inj.failures,
+    );
+    println!(
+        "    -> replay rate: {:.0} trace-requests/s benign, {:.0} injected",
+        trace.len() as f64 / (benign.median_ms() / 1e3),
+        trace.len() as f64 / (injected.median_ms() / 1e3),
+    );
+
+    // Record the run (cwd is rust/ under `cargo bench`).
+    let mut o = Json::obj();
+    o.set("bench", json::s("validate"))
+        .set("model", json::s(model_name))
+        .set("windows", json::num(windows as f64))
+        .set("trace_requests", json::num(trace.len() as f64))
+        .set("replay_benign_ms_median", json::num(benign.median_ms()))
+        .set("replay_injected_ms_median", json::num(injected.median_ms()))
+        .set("benign_optimism_gap", json::num(rep.optimism_gap))
+        .set("injected_achieved_attainment", json::num(rep_inj.achieved_attainment))
+        .set("injected_failures", json::num(rep_inj.failures as f64));
+    match std::fs::write("../BENCH_validate.json", o.to_string()) {
+        Ok(()) => println!("    -> wrote ../BENCH_validate.json"),
+        Err(e) => println!("    -> could not write ../BENCH_validate.json: {e}"),
+    }
+}

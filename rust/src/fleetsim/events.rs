@@ -1,0 +1,89 @@
+//! Fleet lifecycle events, flattened from the replica timelines into
+//! one time-ordered stream (the event log a real autoscaler would
+//! emit; the report's failure/restart counters come from here).
+
+use super::lifecycle::{ReplicaTimeline, SpanEnd};
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FleetEvent {
+    /// Replica begins serving (first span of an up-interval).
+    ScaleUp { t_ms: f64, segment: usize, replica: usize },
+    /// Replica drains and leaves the fleet (scheduled).
+    ScaleDown { t_ms: f64, segment: usize, replica: usize },
+    /// Injected failure: hard stop, in-flight work preempted.
+    Failure { t_ms: f64, segment: usize, replica: usize },
+    /// Replica back after restart downtime.
+    Restart { t_ms: f64, segment: usize, replica: usize },
+}
+
+impl FleetEvent {
+    pub fn t_ms(&self) -> f64 {
+        match self {
+            FleetEvent::ScaleUp { t_ms, .. }
+            | FleetEvent::ScaleDown { t_ms, .. }
+            | FleetEvent::Failure { t_ms, .. }
+            | FleetEvent::Restart { t_ms, .. } => *t_ms,
+        }
+    }
+}
+
+/// Time-ordered event stream for a set of timelines.
+pub fn collect(timelines: &[ReplicaTimeline]) -> Vec<FleetEvent> {
+    let mut out = Vec::new();
+    for tl in timelines {
+        for &t in &tl.failures {
+            out.push(FleetEvent::Failure { t_ms: t, segment: tl.segment, replica: tl.replica });
+        }
+        for &t in &tl.restarts {
+            out.push(FleetEvent::Restart { t_ms: t, segment: tl.segment, replica: tl.replica });
+        }
+        // Span starts that are not restarts are scale-ups; scheduled
+        // (non-failure) span ends are scale-downs.
+        for s in &tl.spans {
+            if !tl.restarts.iter().any(|&r| (r - s.from_ms).abs() < 1e-9) {
+                out.push(FleetEvent::ScaleUp {
+                    t_ms: s.from_ms,
+                    segment: tl.segment,
+                    replica: tl.replica,
+                });
+            }
+            if matches!(s.end, SpanEnd::ScaleDown | SpanEnd::SegmentEnd) {
+                out.push(FleetEvent::ScaleDown {
+                    t_ms: s.to_ms,
+                    segment: tl.segment,
+                    replica: tl.replica,
+                });
+            }
+        }
+    }
+    out.sort_by(|a, b| a.t_ms().partial_cmp(&b.t_ms()).unwrap());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleetsim::lifecycle::Span;
+
+    #[test]
+    fn failure_and_restart_order() {
+        let tl = ReplicaTimeline {
+            segment: 0,
+            replica: 0,
+            spans: vec![
+                Span { from_ms: 0.0, to_ms: 50.0, end: SpanEnd::Failure },
+                Span { from_ms: 60.0, to_ms: 100.0, end: SpanEnd::Horizon },
+            ],
+            lag: Vec::new(),
+            failures: vec![50.0],
+            restarts: vec![60.0],
+        };
+        let ev = collect(&[tl]);
+        assert_eq!(ev.len(), 3); // ScaleUp@0, Failure@50, Restart@60
+        assert!(matches!(ev[0], FleetEvent::ScaleUp { t_ms, .. } if t_ms == 0.0));
+        assert!(matches!(ev[1], FleetEvent::Failure { t_ms, .. } if t_ms == 50.0));
+        assert!(matches!(ev[2], FleetEvent::Restart { t_ms, .. } if t_ms == 60.0));
+        let ts: Vec<f64> = ev.iter().map(|e| e.t_ms()).collect();
+        assert!(ts.windows(2).all(|w| w[0] <= w[1]));
+    }
+}

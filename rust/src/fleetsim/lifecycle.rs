@@ -1,0 +1,307 @@
+//! Replica lifecycle: when each replica of a deployment segment is
+//! actually able to serve.
+//!
+//! The planner's schedule says *how many* replicas each window wants;
+//! this module turns that into per-replica availability **spans** by
+//! applying the physics the analytic plan ignores:
+//!
+//! - **Scale-up lag** — a replica whose up-interval starts after t=0
+//!   (scale-out inside a segment, or a segment boundary swapping
+//!   engines) spends `scale_lag_ms` launching before it serves. The
+//!   horizon start is treated as pre-provisioned (no lag at t=0).
+//! - **Failure injection** — with `failure_rate_per_replica_h > 0`,
+//!   each replica draws exponential inter-failure times from its own
+//!   deterministic stream; a failure hard-ends the span (in-flight
+//!   requests are preempted), the replica restarts after `restart_ms`.
+//!
+//! Replica identity is per *segment* ([`DeploymentPlan::segments`]):
+//! windows that deploy the same unit on the same GPU keep their
+//! replicas; replica `r` is planned-up in window `w` iff
+//! `r < fleet_size(w)`.
+
+use crate::planner::DeploymentPlan;
+use crate::util::rng::Rng;
+
+use super::FleetConfig;
+
+/// How an availability span ends.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpanEnd {
+    /// The plan horizon ends; the replica drains in-flight work.
+    Horizon,
+    /// The schedule scales this replica in; it drains.
+    ScaleDown,
+    /// The segment ends (different unit next window); it drains.
+    SegmentEnd,
+    /// Injected failure: a hard stop. Requests still in flight at
+    /// `to_ms` are preempted, not completed.
+    Failure,
+}
+
+/// One contiguous run of serving time for one replica.
+#[derive(Clone, Copy, Debug)]
+pub struct Span {
+    pub from_ms: f64,
+    pub to_ms: f64,
+    pub end: SpanEnd,
+}
+
+impl Span {
+    pub fn contains(&self, t_ms: f64) -> bool {
+        t_ms >= self.from_ms && t_ms < self.to_ms
+    }
+}
+
+/// One replica's full availability timeline inside a segment.
+#[derive(Clone, Debug)]
+pub struct ReplicaTimeline {
+    /// Index into [`DeploymentPlan::segments`].
+    pub segment: usize,
+    /// Replica index within the segment's fleet.
+    pub replica: usize,
+    pub spans: Vec<Span>,
+    /// Launch intervals `[start, start+lag)` during which this replica
+    /// was planned-up but not yet serving (scale-lag attribution).
+    pub lag: Vec<(f64, f64)>,
+    /// Failure instants (events/report).
+    pub failures: Vec<f64>,
+    /// Successful restart instants (failure + downtime still inside an
+    /// up-interval).
+    pub restarts: Vec<f64>,
+}
+
+/// Decorrelate per-(segment, replica) failure streams while keeping
+/// the degenerate stream 0 at (0, 0) irrelevant here (failures only
+/// sample when the rate is positive).
+fn failure_seed(base: u64, segment: usize, replica: usize) -> u64 {
+    base ^ (segment as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ (replica as u64).wrapping_mul(0xBF58_476D_1CE4_E5B9)
+        ^ 0xF1EE_7515
+}
+
+/// Effective fleet size of a window: scheduled units × engines per
+/// unit (an aggregated unit may carry its own replica count; a
+/// disaggregated unit is one xPyD composite).
+pub fn fleet_size(plan: &DeploymentPlan, window: usize) -> usize {
+    let w = &plan.windows[window];
+    let per_unit = match &w.cand {
+        crate::config::Candidate::Aggregated { replicas, .. } => (*replicas).max(1),
+        crate::config::Candidate::Disaggregated { .. } => 1,
+    };
+    w.replicas as usize * per_unit as usize
+}
+
+/// Build every replica's timeline for every segment of the plan.
+pub fn build_timelines(plan: &DeploymentPlan, cfg: &FleetConfig) -> Vec<ReplicaTimeline> {
+    let window_ms = plan
+        .windows
+        .first()
+        .map(|w| (w.t_end_h - w.t_start_h) * 3_600_000.0)
+        .unwrap_or(0.0);
+    let horizon_ms = plan.windows.len() as f64 * window_ms;
+    let lag_ms = cfg.scale_lag_s * 1000.0;
+    let restart_ms = cfg.restart_s * 1000.0;
+    let rate_per_ms = cfg.failure_rate_per_replica_h / 3_600_000.0;
+
+    let mut out = Vec::new();
+    for (seg, (w0, w1)) in plan.segments().iter().copied().enumerate() {
+        let fleet = (w0..=w1).map(|w| fleet_size(plan, w)).max().unwrap_or(0);
+        for r in 0..fleet {
+            // Raw planned-up intervals: maximal runs of windows wanting
+            // replica r.
+            let mut raw: Vec<(f64, f64, SpanEnd)> = Vec::new();
+            let mut w = w0;
+            while w <= w1 {
+                if r < fleet_size(plan, w) {
+                    let start = w as f64 * window_ms;
+                    while w + 1 <= w1 && r < fleet_size(plan, w + 1) {
+                        w += 1;
+                    }
+                    let to = (w + 1) as f64 * window_ms;
+                    let end = if w + 1 >= plan.windows.len() {
+                        SpanEnd::Horizon
+                    } else if w == w1 {
+                        SpanEnd::SegmentEnd
+                    } else {
+                        SpanEnd::ScaleDown
+                    };
+                    raw.push((start, to.min(horizon_ms), end));
+                }
+                w += 1;
+            }
+
+            let mut tl = ReplicaTimeline {
+                segment: seg,
+                replica: r,
+                spans: Vec::new(),
+                lag: Vec::new(),
+                failures: Vec::new(),
+                restarts: Vec::new(),
+            };
+            let mut rng = Rng::new(failure_seed(cfg.seed, seg, r));
+            for (start, to, end) in raw {
+                // Scale-up lag at every interval start except the
+                // pre-provisioned horizon start.
+                let mut from = start;
+                if start > 0.0 && lag_ms > 0.0 {
+                    let up = (start + lag_ms).min(to);
+                    tl.lag.push((start, up));
+                    from = up;
+                }
+                if from >= to {
+                    continue;
+                }
+                if rate_per_ms <= 0.0 {
+                    tl.spans.push(Span { from_ms: from, to_ms: to, end });
+                    continue;
+                }
+                // Failure walk: exponential inter-failure gaps, hard
+                // span end at each failure, restart after downtime.
+                let mut t = from;
+                loop {
+                    let t_f = t + rng.exponential(rate_per_ms);
+                    if t_f >= to {
+                        tl.spans.push(Span { from_ms: t, to_ms: to, end });
+                        break;
+                    }
+                    tl.spans.push(Span { from_ms: t, to_ms: t_f, end: SpanEnd::Failure });
+                    tl.failures.push(t_f);
+                    t = t_f + restart_ms;
+                    if t >= to {
+                        break;
+                    }
+                    tl.restarts.push(t);
+                }
+            }
+            out.push(tl);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Candidate;
+    use crate::planner::testutil::opt;
+    use crate::planner::WindowPlan;
+    use crate::simulator::SimConfig;
+
+    fn plan_with_replicas(reps: &[u32]) -> DeploymentPlan {
+        let o = opt("h100", 1, 2.0, 10.0, 20.0);
+        let windows = reps
+            .iter()
+            .enumerate()
+            .map(|(i, &r)| WindowPlan {
+                index: i,
+                t_start_h: i as f64,
+                t_end_h: (i + 1) as f64,
+                demand_qps: 5.0,
+                gpu: "h100".into(),
+                cand: o.cand.clone(),
+                replicas: r,
+                gpus: r as u64,
+                capacity_qps: r as f64 * 10.0,
+                est: o.est,
+                cost_usd: r as f64 * 2.0,
+            })
+            .collect();
+        DeploymentPlan {
+            windows,
+            total_cost_usd: 0.0,
+            best_homogeneous: None,
+            static_peak_cost_usd: 0.0,
+            options_considered: 1,
+            options_pruned: 0,
+        }
+    }
+
+    fn cfg() -> FleetConfig {
+        FleetConfig {
+            seed: 7,
+            scale_lag_s: 0.0,
+            failure_rate_per_replica_h: 0.0,
+            restart_s: 10.0,
+            sim: SimConfig::default(),
+        }
+    }
+
+    #[test]
+    fn steady_plan_is_one_span_per_replica() {
+        let plan = plan_with_replicas(&[2, 2, 2]);
+        let tls = build_timelines(&plan, &cfg());
+        assert_eq!(tls.len(), 2);
+        for tl in &tls {
+            assert_eq!(tl.spans.len(), 1);
+            assert_eq!(tl.spans[0].from_ms, 0.0);
+            assert_eq!(tl.spans[0].to_ms, 3.0 * 3_600_000.0);
+            assert_eq!(tl.spans[0].end, SpanEnd::Horizon);
+            assert!(tl.lag.is_empty());
+        }
+    }
+
+    #[test]
+    fn scale_out_incurs_lag_only_after_t0() {
+        let plan = plan_with_replicas(&[1, 2, 2]);
+        let mut c = cfg();
+        c.scale_lag_s = 60.0;
+        let tls = build_timelines(&plan, &c);
+        // Replica 0 up from t=0 with no lag; replica 1 joins at window 1
+        // and pays 60 s of launch time first.
+        assert!(tls[0].lag.is_empty());
+        assert_eq!(tls[1].lag.len(), 1);
+        let (l0, l1) = tls[1].lag[0];
+        assert_eq!(l0, 3_600_000.0);
+        assert_eq!(l1, 3_600_000.0 + 60_000.0);
+        assert_eq!(tls[1].spans[0].from_ms, l1);
+    }
+
+    #[test]
+    fn scale_down_and_horizon_ends_are_typed() {
+        let plan = plan_with_replicas(&[2, 1, 2]);
+        let tls = build_timelines(&plan, &cfg());
+        // Replica 1 serves windows 0 and 2 as two intervals.
+        assert_eq!(tls[1].spans.len(), 2);
+        assert_eq!(tls[1].spans[0].end, SpanEnd::ScaleDown);
+        assert_eq!(tls[1].spans[1].end, SpanEnd::Horizon);
+    }
+
+    #[test]
+    fn segment_boundary_ends_spans() {
+        let o2 = opt("a100", 2, 1.0, 8.0, 15.0);
+        let mut plan = plan_with_replicas(&[1, 1]);
+        plan.windows[1].gpu = "a100".into();
+        plan.windows[1].cand = o2.cand.clone();
+        assert_eq!(plan.segments(), vec![(0, 0), (1, 1)]);
+        let tls = build_timelines(&plan, &cfg());
+        assert_eq!(tls.len(), 2);
+        assert_eq!(tls[0].spans[0].end, SpanEnd::SegmentEnd);
+        assert_eq!(tls[1].spans[0].end, SpanEnd::Horizon);
+    }
+
+    #[test]
+    fn failures_split_spans_deterministically() {
+        let plan = plan_with_replicas(&[1, 1, 1, 1]);
+        let mut c = cfg();
+        c.failure_rate_per_replica_h = 2.0; // expect ~8 failures in 4 h
+        let a = build_timelines(&plan, &c);
+        let b = build_timelines(&plan, &c);
+        assert_eq!(a[0].failures.len(), b[0].failures.len());
+        assert!(!a[0].failures.is_empty(), "2/h over 4 h should fail at least once");
+        // Every failure hard-ends a span and downtime precedes the next.
+        for (i, s) in a[0].spans.iter().enumerate() {
+            assert!(s.from_ms < s.to_ms);
+            if s.end == SpanEnd::Failure {
+                if let Some(n) = a[0].spans.get(i + 1) {
+                    assert!(n.from_ms >= s.to_ms + c.restart_s * 1000.0 - 1e-6);
+                }
+            }
+        }
+        // Aggregated unit with inner replicas expands the fleet.
+        let mut p2 = plan_with_replicas(&[1]);
+        if let Candidate::Aggregated { replicas, .. } = &mut p2.windows[0].cand {
+            *replicas = 3;
+        }
+        assert_eq!(fleet_size(&p2, 0), 3);
+    }
+}

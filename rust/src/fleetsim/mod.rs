@@ -1,0 +1,440 @@
+//! Fleet-level replay: execute a planner schedule against a long
+//! multi-tenant trace and measure what the fleet *actually* delivers.
+//!
+//! The capacity planner ([`crate::planner`]) promises each window an
+//! SLA-feasible deployment with capacity ≥ peak demand — an analytic
+//! promise that ignores queueing at window edges, replica scale-up
+//! lag, KV-transfer contention between replicas sharing a fabric, and
+//! failures. This module replays the plan's own traffic (one shared
+//! trace builder: [`crate::planner::TrafficModel::trace`] →
+//! [`crate::workload::piecewise_poisson`]) through the schedule:
+//!
+//! 1. [`lifecycle`] turns the per-window replica counts into
+//!    per-replica availability spans (lag + seeded failure injection);
+//! 2. [`router`] assigns each arrival to the least-loaded live replica
+//!    (typed drops when none is up);
+//! 3. each replica's assigned sub-trace runs through the *existing*
+//!    engine simulators ([`crate::simulator::aggregated::AggregatedSim`]
+//!    / [`crate::simulator::disagg::DisaggSim`]) — per-replica service
+//!    times are composed, never re-modelled;
+//! 4. a post-pass prices KV-transfer contention between co-scheduled
+//!    disaggregated replicas via the same fabric formula the engine
+//!    itself uses ([`DisaggSim::kv_transfer_ms`]);
+//! 5. [`report`] rolls everything into per-window achieved-vs-promised
+//!    attainment with the optimism gap broken down by cause.
+//!
+//! Composition is exactness-preserving: a fleet of one replica with
+//! zero lag, zero failures and no contention reduces to a single
+//! engine run over the identical trace with the identical seed, so the
+//! degenerate fleet reproduces `simulator/` metrics bit-for-bit
+//! (pinned in `tests/fleetsim.rs`).
+
+pub mod events;
+pub mod lifecycle;
+pub mod report;
+pub mod router;
+
+pub use report::{Cause, CauseCounts, RequestOutcome, ValidationReport, WindowReport};
+
+use std::collections::BTreeMap;
+
+use crate::config::Candidate;
+use crate::hardware::ClusterSpec;
+use crate::models::ModelArch;
+use crate::planner::{DeploymentPlan, PlanSpec};
+use crate::silicon::Silicon;
+use crate::simulator::aggregated::AggregatedSim;
+use crate::simulator::disagg::DisaggSim;
+use crate::simulator::{ReqMetric, SimConfig};
+use crate::workload::Request;
+
+use lifecycle::SpanEnd;
+use router::Route;
+
+/// Fleet replay knobs. The defaults are the *faithful-execution*
+/// configuration: no lag, no failures — any optimism gap measured
+/// there is pure queueing/contention, i.e. the planner's own analytic
+/// error.
+#[derive(Clone, Copy, Debug)]
+pub struct FleetConfig {
+    /// Seeds failure sampling (trace and engine seeds are separate:
+    /// the trace carries its own seed, engines use `sim.seed`).
+    pub seed: u64,
+    /// Replica launch time, seconds (weights load + warmup). Applied
+    /// to every up-interval starting after t=0.
+    pub scale_lag_s: f64,
+    /// Poisson failure rate per replica, failures/hour. 0 disables
+    /// injection.
+    pub failure_rate_per_replica_h: f64,
+    /// Downtime between a failure and the replica serving again, s.
+    pub restart_s: f64,
+    /// Per-replica engine simulator config ([`SimConfig`]); the seed
+    /// is decorrelated per (segment, replica, span) stream with the
+    /// degenerate stream (0,0,0) left untouched.
+    pub sim: SimConfig,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            seed: 0xF1EE7,
+            scale_lag_s: 0.0,
+            failure_rate_per_replica_h: 0.0,
+            restart_s: 120.0,
+            sim: SimConfig::default(),
+        }
+    }
+}
+
+impl FleetConfig {
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.scale_lag_s.is_finite() && self.scale_lag_s >= 0.0,
+            "scale_lag_s must be finite and non-negative"
+        );
+        anyhow::ensure!(
+            self.failure_rate_per_replica_h.is_finite()
+                && self.failure_rate_per_replica_h >= 0.0,
+            "failure_rate_per_replica_h must be finite and non-negative"
+        );
+        anyhow::ensure!(
+            self.restart_s.is_finite() && self.restart_s >= 0.0,
+            "restart_s must be finite and non-negative"
+        );
+        Ok(())
+    }
+}
+
+/// One GPU type's execution substrate, keyed by the plan's `gpu` name.
+/// The silicon must be profiled for `cluster` (same invariant as the
+/// planner's fleet legs).
+pub struct FleetLeg<'a> {
+    pub name: String,
+    pub cluster: ClusterSpec,
+    pub silicon: &'a Silicon,
+}
+
+/// Decorrelate per-(segment, replica, span) engine seeds. Identically
+/// zero at (0, 0, 0) so the degenerate single-replica fleet runs its
+/// engine with `cfg.sim.seed` itself — the equivalence pin depends on
+/// this.
+fn span_seed(segment: usize, replica: usize, span: usize) -> u64 {
+    (segment as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ (replica as u64).wrapping_mul(0xBF58_476D_1CE4_E5B9)
+        ^ (span as u64).wrapping_mul(0x94D0_49BB_1331_11EB)
+}
+
+/// Replay `trace` through `plan` on `legs`; the verdict is the report.
+pub fn replay(
+    model: &ModelArch,
+    spec: &PlanSpec,
+    plan: &DeploymentPlan,
+    legs: &[FleetLeg<'_>],
+    trace: &[Request],
+    cfg: &FleetConfig,
+) -> anyhow::Result<ValidationReport> {
+    cfg.validate()?;
+    anyhow::ensure!(!plan.windows.is_empty(), "cannot replay an empty plan");
+    let window_ms = (plan.windows[0].t_end_h - plan.windows[0].t_start_h) * 3_600_000.0;
+    anyhow::ensure!(window_ms > 0.0, "plan windows must have positive length");
+    let leg_of = |gpu: &str| legs.iter().find(|l| l.name == gpu);
+    for w in &plan.windows {
+        anyhow::ensure!(
+            leg_of(&w.gpu).is_some(),
+            "plan window {} deploys on '{}' but no such fleet leg was supplied",
+            w.index,
+            w.gpu
+        );
+    }
+
+    let segments = plan.segments();
+    let mut seg_of_window = vec![0usize; plan.windows.len()];
+    for (si, (a, b)) in segments.iter().enumerate() {
+        for w in *a..=*b {
+            seg_of_window[w] = si;
+        }
+    }
+    let last = plan.windows.len() - 1;
+    let window_of = |t_ms: f64| ((t_ms / window_ms).floor() as usize).min(last);
+
+    let timelines = lifecycle::build_timelines(plan, cfg);
+    let routes = router::route(trace, &timelines, window_of, |w| seg_of_window[w]);
+
+    // Group each (timeline, span)'s sub-trace, preserving arrival order.
+    let mut groups: BTreeMap<(usize, usize), Vec<Request>> = BTreeMap::new();
+    for (r, route) in trace.iter().zip(&routes) {
+        if let Route::Assigned { timeline, span } = route {
+            groups.entry((*timeline, *span)).or_default().push(*r);
+        }
+    }
+
+    // Run every sub-trace through the engine simulator of its segment.
+    let mut metrics: BTreeMap<u64, ReqMetric> = BTreeMap::new();
+    // (start_ms, end_ms, timeline, id, transfer_ms) per disagg transfer.
+    let mut transfers_by_seg: BTreeMap<usize, Vec<(f64, f64, usize, u64, f64)>> =
+        BTreeMap::new();
+    for ((ti, si), sub) in &groups {
+        let tl = &timelines[*ti];
+        let (w0, _) = segments[tl.segment];
+        let win = &plan.windows[w0];
+        let leg = leg_of(&win.gpu).unwrap();
+        let mut sim_cfg = cfg.sim;
+        sim_cfg.seed ^= span_seed(tl.segment, tl.replica, *si);
+        let result = match &win.cand {
+            Candidate::Aggregated { engine, .. } => {
+                AggregatedSim::new(leg.silicon, model, &leg.cluster, *engine, sim_cfg)
+                    .run(sub)
+            }
+            Candidate::Disaggregated { prefill, decode, x, y } => {
+                let dsim = DisaggSim::new(
+                    leg.silicon,
+                    model,
+                    &leg.cluster,
+                    *prefill,
+                    *decode,
+                    *x,
+                    *y,
+                    sim_cfg,
+                );
+                let res = dsim.run(sub);
+                let by_id: BTreeMap<u64, ReqMetric> =
+                    res.requests.iter().map(|m| (m.id, *m)).collect();
+                for req in sub {
+                    if let Some(m) = by_id.get(&req.id) {
+                        let t = dsim.kv_transfer_ms(req.isl);
+                        let end = m.arrival_ms + m.ttft_ms;
+                        transfers_by_seg.entry(tl.segment).or_default().push((
+                            end - t,
+                            end,
+                            *ti,
+                            req.id,
+                            t,
+                        ));
+                    }
+                }
+                res
+            }
+        };
+        for m in &result.requests {
+            metrics.insert(m.id, *m);
+        }
+    }
+
+    // Contention surcharge: transfers of *different* replicas in the
+    // same segment overlap on the shared fabric and serialize. Each
+    // transfer pays its own duration once more per overlapping
+    // other-replica transfer (sorted-boundary counting, O(n log n)).
+    let mut extra: BTreeMap<u64, f64> = BTreeMap::new();
+    for tr in transfers_by_seg.values() {
+        let mut starts: Vec<f64> = tr.iter().map(|t| t.0).collect();
+        let mut ends: Vec<f64> = tr.iter().map(|t| t.1).collect();
+        starts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        ends.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut by_tl: BTreeMap<usize, (Vec<f64>, Vec<f64>)> = BTreeMap::new();
+        for (s, e, ti, _, _) in tr {
+            let ent = by_tl.entry(*ti).or_default();
+            ent.0.push(*s);
+            ent.1.push(*e);
+        }
+        for ent in by_tl.values_mut() {
+            ent.0.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            ent.1.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        }
+        let overlap = |starts: &[f64], ends: &[f64], s: f64, e: f64| -> usize {
+            let began = starts.partition_point(|&x| x < e);
+            let finished = ends.partition_point(|&x| x <= s);
+            began.saturating_sub(finished)
+        };
+        for (s, e, ti, id, t_ms) in tr {
+            let all = overlap(&starts, &ends, *s, *e);
+            let (os, oe) = &by_tl[ti];
+            let own = overlap(os, oe, *s, *e);
+            let others = all.saturating_sub(own);
+            if others > 0 {
+                extra.insert(*id, t_ms * others as f64);
+            }
+        }
+    }
+
+    // Per-request outcomes with cause attribution.
+    let sla = &spec.workload.sla;
+    let max_tpot = sla.max_tpot_ms();
+    let in_lag_of_segment = |seg: usize, t: f64| {
+        timelines
+            .iter()
+            .filter(|tl| tl.segment == seg)
+            .any(|tl| tl.lag.iter().any(|&(a, b)| t >= a && t < b))
+    };
+    let mut outcomes = Vec::with_capacity(trace.len());
+    for (r, route) in trace.iter().zip(&routes) {
+        let window = window_of(r.arrival_ms);
+        let outcome = match route {
+            Route::Dropped(cause) => RequestOutcome {
+                id: r.id,
+                window,
+                arrival_ms: r.arrival_ms,
+                ttft_ms: None,
+                tpot_ms: None,
+                finished_ms: None,
+                met: false,
+                cause: Some(*cause),
+            },
+            Route::Assigned { timeline, span } => {
+                let tl = &timelines[*timeline];
+                let sp = &tl.spans[*span];
+                match metrics.get(&r.id) {
+                    // Hard-ended span: completions past the failure
+                    // instant never happened — the request is preempted.
+                    Some(m) if sp.end == SpanEnd::Failure && m.finished_ms > sp.to_ms => {
+                        RequestOutcome {
+                            id: r.id,
+                            window,
+                            arrival_ms: r.arrival_ms,
+                            ttft_ms: None,
+                            tpot_ms: None,
+                            finished_ms: None,
+                            met: false,
+                            cause: Some(Cause::Failure),
+                        }
+                    }
+                    Some(m) => {
+                        let surcharge = extra.get(&r.id).copied().unwrap_or(0.0);
+                        let ttft = m.ttft_ms + surcharge;
+                        let met = ttft <= sla.ttft_ms && m.tpot_ms <= max_tpot;
+                        let cause = if met {
+                            None
+                        } else if in_lag_of_segment(tl.segment, r.arrival_ms) {
+                            Some(Cause::ScaleLag)
+                        } else if m.ttft_ms <= sla.ttft_ms && m.tpot_ms <= max_tpot {
+                            // Only the contention surcharge broke it.
+                            Some(Cause::Contention)
+                        } else {
+                            Some(Cause::Queueing)
+                        };
+                        RequestOutcome {
+                            id: r.id,
+                            window,
+                            arrival_ms: r.arrival_ms,
+                            ttft_ms: Some(ttft),
+                            tpot_ms: Some(m.tpot_ms),
+                            finished_ms: Some(m.finished_ms + surcharge),
+                            met,
+                            cause,
+                        }
+                    }
+                    // The engine hit its iteration cap before finishing
+                    // this request: count it as a queueing loss.
+                    None => RequestOutcome {
+                        id: r.id,
+                        window,
+                        arrival_ms: r.arrival_ms,
+                        ttft_ms: None,
+                        tpot_ms: None,
+                        finished_ms: None,
+                        met: false,
+                        cause: Some(Cause::Queueing),
+                    },
+                }
+            }
+        };
+        outcomes.push(outcome);
+    }
+
+    let failures = timelines.iter().map(|t| t.failures.len()).sum();
+    let restarts = timelines.iter().map(|t| t.restarts.len()).sum();
+    Ok(ValidationReport::build(outcomes, plan, failures, restarts))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::WorkloadSpec;
+    use crate::frameworks::Framework;
+    use crate::hardware::h100_sxm;
+    use crate::models::by_name;
+    use crate::planner::testutil::opt;
+    use crate::planner::{TrafficModel, WindowPlan};
+
+    fn tiny_plan(replicas: u32, windows: usize) -> DeploymentPlan {
+        // A real engine config (TP2 on H100) behind a synthetic window
+        // schedule — replay only reads gpu/cand/replicas per window.
+        let o = opt("h100", 2, 2.0, 50.0, 25.0);
+        let wins = (0..windows)
+            .map(|i| WindowPlan {
+                index: i,
+                t_start_h: i as f64 * 0.01,
+                t_end_h: (i + 1) as f64 * 0.01,
+                demand_qps: 2.0,
+                gpu: "h100".into(),
+                cand: o.cand.clone(),
+                replicas,
+                gpus: (replicas * 2) as u64,
+                capacity_qps: replicas as f64 * 50.0,
+                est: o.est,
+                cost_usd: 1.0,
+            })
+            .collect();
+        DeploymentPlan {
+            windows: wins,
+            total_cost_usd: 1.0,
+            best_homogeneous: None,
+            static_peak_cost_usd: 2.0,
+            options_considered: 1,
+            options_pruned: 0,
+        }
+    }
+
+    fn fixture() -> (crate::models::ModelArch, ClusterSpec, Silicon, PlanSpec) {
+        let cluster = ClusterSpec::new(h100_sxm(), 8, 1);
+        let sil = Silicon::new(cluster, Framework::TrtLlm.profile());
+        let wl = WorkloadSpec::new("llama3.1-8b", 256, 32, 5000.0, 5.0);
+        let spec = PlanSpec::new(
+            wl,
+            TrafficModel::Ramp { start_qps: 2.0, end_qps: 2.0 },
+            2,
+            0.01,
+        );
+        (by_name("llama3.1-8b").unwrap(), cluster, sil, spec)
+    }
+
+    #[test]
+    fn replay_reports_full_attainment_when_overprovisioned() {
+        let (model, cluster, sil, spec) = fixture();
+        let plan = tiny_plan(2, 2);
+        let trace = spec.traffic.trace(2, 0.01, &spec.workload, 0.0, 42);
+        assert!(!trace.is_empty());
+        let legs =
+            [FleetLeg { name: "h100".into(), cluster, silicon: &sil }];
+        let rep = replay(&model, &spec, &plan, &legs, &trace, &FleetConfig::default())
+            .unwrap();
+        assert_eq!(rep.offered, trace.len());
+        assert_eq!(rep.completed, trace.len());
+        assert_eq!(rep.dropped, 0);
+        assert_eq!(rep.failures, 0);
+        assert!(rep.achieved_attainment > 0.9, "{}", rep.achieved_attainment);
+        assert!(rep.optimism_gap.abs() <= 0.1, "{}", rep.optimism_gap);
+        assert_eq!(rep.windows.len(), 2);
+        let j = rep.to_json();
+        assert_eq!(j.req_f64("offered").unwrap() as usize, trace.len());
+        assert!(rep.render().contains("optimism gap"));
+    }
+
+    #[test]
+    fn missing_leg_is_a_clean_error() {
+        let (model, cluster, sil, spec) = fixture();
+        let plan = tiny_plan(1, 2);
+        let trace = spec.traffic.trace(2, 0.01, &spec.workload, 0.0, 42);
+        let legs =
+            [FleetLeg { name: "a100".into(), cluster, silicon: &sil }];
+        let err = replay(&model, &spec, &plan, &legs, &trace, &FleetConfig::default())
+            .unwrap_err();
+        assert!(err.to_string().contains("no such fleet leg"), "{err:#}");
+    }
+
+    #[test]
+    fn span_seed_degenerate_stream_is_zero() {
+        assert_eq!(span_seed(0, 0, 0), 0);
+        assert_ne!(span_seed(0, 1, 0), span_seed(0, 0, 0));
+        assert_ne!(span_seed(1, 0, 0), span_seed(0, 1, 0));
+    }
+}

@@ -1,0 +1,358 @@
+//! Typed validation report: achieved vs promised SLA attainment per
+//! window, with every miss attributed to a cause.
+//!
+//! The headline number is the **optimism gap** — the planner's promised
+//! attainment minus what the fleet replay achieved. A positive gap
+//! means the analytic plan was optimistic; the per-cause breakdown
+//! ([`CauseCounts`]) says *why*: window-edge queueing the per-window
+//! peak provisioning cannot see, replica scale-up lag, KV-transfer
+//! contention on the shared fabric, or injected failures.
+
+use crate::util::json::{self, Json};
+use crate::util::stats;
+
+/// Why a request missed its SLA (or never completed). Precedence when
+/// several apply: `Failure` > `ScaleLag` > `Contention` > `Queueing`
+/// (the most structural cause wins; queueing is the residual).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Cause {
+    /// Queueing delay the analytic per-window capacity check cannot
+    /// see: arrivals bunching at window edges, FCFS head-of-line
+    /// blocking, KV-pool admission stalls.
+    Queueing,
+    /// The request arrived while planned replicas were still launching
+    /// (scale-up lag), or was dropped because none was up yet.
+    ScaleLag,
+    /// The KV-transfer contention surcharge on the shared fabric pushed
+    /// an otherwise-passing TTFT over the SLA (disaggregated only).
+    Contention,
+    /// A replica failure: the request was preempted mid-flight, or
+    /// dropped because every eligible replica was down.
+    Failure,
+}
+
+impl Cause {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Cause::Queueing => "queueing",
+            Cause::ScaleLag => "scale_lag",
+            Cause::Contention => "contention",
+            Cause::Failure => "failure",
+        }
+    }
+}
+
+/// Miss tally by cause.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CauseCounts {
+    pub queueing: usize,
+    pub scale_lag: usize,
+    pub contention: usize,
+    pub failure: usize,
+}
+
+impl CauseCounts {
+    pub fn add(&mut self, c: Cause) {
+        match c {
+            Cause::Queueing => self.queueing += 1,
+            Cause::ScaleLag => self.scale_lag += 1,
+            Cause::Contention => self.contention += 1,
+            Cause::Failure => self.failure += 1,
+        }
+    }
+
+    pub fn total(&self) -> usize {
+        self.queueing + self.scale_lag + self.contention + self.failure
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("queueing", json::num(self.queueing as f64))
+            .set("scale_lag", json::num(self.scale_lag as f64))
+            .set("contention", json::num(self.contention as f64))
+            .set("failure", json::num(self.failure as f64));
+        o
+    }
+}
+
+/// One request's fate under replay. Latency fields are `None` for
+/// requests that never completed (dropped at the router, or preempted
+/// by a failure mid-flight).
+#[derive(Clone, Copy, Debug)]
+pub struct RequestOutcome {
+    pub id: u64,
+    /// Plan window the arrival falls in.
+    pub window: usize,
+    pub arrival_ms: f64,
+    /// TTFT including any contention surcharge.
+    pub ttft_ms: Option<f64>,
+    pub tpot_ms: Option<f64>,
+    pub finished_ms: Option<f64>,
+    /// Completed within the SLA.
+    pub met: bool,
+    /// Why it missed (None iff `met`).
+    pub cause: Option<Cause>,
+}
+
+impl RequestOutcome {
+    pub fn completed(&self) -> bool {
+        self.finished_ms.is_some()
+    }
+}
+
+/// Achieved vs promised attainment for one plan window.
+#[derive(Clone, Debug)]
+pub struct WindowReport {
+    pub index: usize,
+    pub t_start_h: f64,
+    pub t_end_h: f64,
+    pub demand_qps: f64,
+    pub capacity_qps: f64,
+    /// Requests arriving in the window.
+    pub offered: usize,
+    pub completed: usize,
+    /// What the planner promised (1.0 for provisioned windows — every
+    /// scheduled option is SLA-feasible with capacity ≥ peak demand;
+    /// 0.0 for scale-to-zero windows that still saw arrivals).
+    pub promised_attainment: f64,
+    pub achieved_attainment: f64,
+    /// `promised − achieved` (positive = planner optimistic here).
+    pub gap: f64,
+    pub mean_ttft_ms: f64,
+    pub p99_ttft_ms: f64,
+    pub mean_tpot_ms: f64,
+    pub misses: CauseCounts,
+}
+
+/// The full fleet-replay verdict on one deployment plan.
+#[derive(Clone, Debug)]
+pub struct ValidationReport {
+    pub windows: Vec<WindowReport>,
+    pub offered: usize,
+    pub completed: usize,
+    /// Turned away at the router (no replica up).
+    pub dropped: usize,
+    /// Killed mid-flight by a replica failure.
+    pub preempted: usize,
+    /// Injected replica failures / successful restarts.
+    pub failures: usize,
+    pub restarts: usize,
+    /// Request-weighted across windows.
+    pub promised_attainment: f64,
+    pub achieved_attainment: f64,
+    /// `promised − achieved`, the headline number.
+    pub optimism_gap: f64,
+    /// SLA-meeting completions per second of replay.
+    pub goodput_qps: f64,
+    /// First arrival to last completion, ms.
+    pub makespan_ms: f64,
+    pub misses: CauseCounts,
+    /// Per-request detail (arrival order). Not serialized — traces run
+    /// to millions of requests; JSON carries the window rollup.
+    pub requests: Vec<RequestOutcome>,
+}
+
+impl ValidationReport {
+    /// Assemble the per-window rollup and headline numbers from
+    /// per-request outcomes (met/cause already attributed) and the
+    /// plan's windows.
+    pub fn build(
+        mut requests: Vec<RequestOutcome>,
+        plan: &crate::planner::DeploymentPlan,
+        failures: usize,
+        restarts: usize,
+    ) -> ValidationReport {
+        requests.sort_by(|a, b| a.arrival_ms.partial_cmp(&b.arrival_ms).unwrap());
+        let mut windows = Vec::with_capacity(plan.windows.len());
+        let mut misses = CauseCounts::default();
+        let mut offered_total = 0usize;
+        let mut met_total = 0usize;
+        let mut promised_weighted = 0.0f64;
+        for w in &plan.windows {
+            let reqs: Vec<&RequestOutcome> =
+                requests.iter().filter(|r| r.window == w.index).collect();
+            let offered = reqs.len();
+            let completed = reqs.iter().filter(|r| r.completed()).count();
+            let met = reqs.iter().filter(|r| r.met).count();
+            let promised = if offered == 0 {
+                1.0
+            } else if w.replicas == 0 {
+                0.0
+            } else {
+                1.0
+            };
+            let achieved =
+                if offered == 0 { 1.0 } else { met as f64 / offered as f64 };
+            let ttfts: Vec<f64> = reqs.iter().filter_map(|r| r.ttft_ms).collect();
+            let tpots: Vec<f64> = reqs.iter().filter_map(|r| r.tpot_ms).collect();
+            let mut wm = CauseCounts::default();
+            for r in &reqs {
+                if let Some(c) = r.cause {
+                    wm.add(c);
+                    misses.add(c);
+                }
+            }
+            offered_total += offered;
+            met_total += met;
+            promised_weighted += promised * offered as f64;
+            windows.push(WindowReport {
+                index: w.index,
+                t_start_h: w.t_start_h,
+                t_end_h: w.t_end_h,
+                demand_qps: w.demand_qps,
+                capacity_qps: w.capacity_qps,
+                offered,
+                completed,
+                promised_attainment: promised,
+                achieved_attainment: achieved,
+                gap: promised - achieved,
+                mean_ttft_ms: stats::mean(&ttfts),
+                p99_ttft_ms: stats::percentile(&ttfts, 99.0),
+                mean_tpot_ms: stats::mean(&tpots),
+                misses: wm,
+            });
+        }
+        let completed = requests.iter().filter(|r| r.completed()).count();
+        let preempted = requests
+            .iter()
+            .filter(|r| !r.completed() && r.cause == Some(Cause::Failure))
+            .count();
+        let dropped = requests.len() - completed - preempted;
+        let start = requests.iter().map(|r| r.arrival_ms).fold(f64::INFINITY, f64::min);
+        let end = requests.iter().filter_map(|r| r.finished_ms).fold(0.0f64, f64::max);
+        let makespan_ms = if start.is_finite() { (end - start.min(end)).max(0.0) } else { 0.0 };
+        let promised = if offered_total > 0 {
+            promised_weighted / offered_total as f64
+        } else {
+            1.0
+        };
+        let achieved = if offered_total > 0 {
+            met_total as f64 / offered_total as f64
+        } else {
+            1.0
+        };
+        ValidationReport {
+            windows,
+            offered: offered_total,
+            completed,
+            dropped,
+            preempted,
+            failures,
+            restarts,
+            promised_attainment: promised,
+            achieved_attainment: achieved,
+            optimism_gap: promised - achieved,
+            goodput_qps: if makespan_ms > 0.0 {
+                met_total as f64 / (makespan_ms / 1000.0)
+            } else {
+                0.0
+            },
+            makespan_ms,
+            misses,
+            requests,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut windows = Vec::new();
+        for w in &self.windows {
+            let mut o = Json::obj();
+            o.set("window", json::num(w.index as f64))
+                .set("t_start_h", json::num(w.t_start_h))
+                .set("t_end_h", json::num(w.t_end_h))
+                .set("demand_qps", json::num(w.demand_qps))
+                .set("capacity_qps", json::num(w.capacity_qps))
+                .set("offered", json::num(w.offered as f64))
+                .set("completed", json::num(w.completed as f64))
+                .set("promised_attainment", json::num(w.promised_attainment))
+                .set("achieved_attainment", json::num(w.achieved_attainment))
+                .set("gap", json::num(w.gap))
+                .set("mean_ttft_ms", json::num(w.mean_ttft_ms))
+                .set("p99_ttft_ms", json::num(w.p99_ttft_ms))
+                .set("mean_tpot_ms", json::num(w.mean_tpot_ms))
+                .set("misses", w.misses.to_json());
+            windows.push(o);
+        }
+        let mut o = Json::obj();
+        o.set("windows", Json::Arr(windows))
+            .set("offered", json::num(self.offered as f64))
+            .set("completed", json::num(self.completed as f64))
+            .set("dropped", json::num(self.dropped as f64))
+            .set("preempted", json::num(self.preempted as f64))
+            .set("failures", json::num(self.failures as f64))
+            .set("restarts", json::num(self.restarts as f64))
+            .set("promised_attainment", json::num(self.promised_attainment))
+            .set("achieved_attainment", json::num(self.achieved_attainment))
+            .set("optimism_gap", json::num(self.optimism_gap))
+            .set("goodput_qps", json::num(self.goodput_qps))
+            .set("makespan_ms", json::num(self.makespan_ms))
+            .set("misses", self.misses.to_json());
+        o
+    }
+
+    /// Human-readable window table + headline summary (CLI output).
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        s.push_str(
+            "window    span h   offered  done   promised  achieved      gap  \
+             q/lag/con/fail\n",
+        );
+        for w in &self.windows {
+            s.push_str(&format!(
+                "{:>6}  {:>4.1}-{:<4.1}  {:>7}  {:>5}  {:>8.3}  {:>8.3}  {:>+7.3}  \
+                 {}/{}/{}/{}\n",
+                w.index,
+                w.t_start_h,
+                w.t_end_h,
+                w.offered,
+                w.completed,
+                w.promised_attainment,
+                w.achieved_attainment,
+                w.gap,
+                w.misses.queueing,
+                w.misses.scale_lag,
+                w.misses.contention,
+                w.misses.failure,
+            ));
+        }
+        s.push_str(&format!(
+            "\noffered {}  completed {}  dropped {}  preempted {}  failures {} \
+             (restarts {})\n",
+            self.offered, self.completed, self.dropped, self.preempted, self.failures,
+            self.restarts,
+        ));
+        s.push_str(&format!(
+            "promised {:.4}  achieved {:.4}  optimism gap {:+.4}\n",
+            self.promised_attainment, self.achieved_attainment, self.optimism_gap,
+        ));
+        s.push_str(&format!(
+            "goodput {:.2} qps over {:.1} s  |  misses by cause: queueing {}  \
+             scale-lag {}  contention {}  failure {}\n",
+            self.goodput_qps,
+            self.makespan_ms / 1000.0,
+            self.misses.queueing,
+            self.misses.scale_lag,
+            self.misses.contention,
+            self.misses.failure,
+        ));
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cause_counts_tally() {
+        let mut c = CauseCounts::default();
+        c.add(Cause::Queueing);
+        c.add(Cause::Failure);
+        c.add(Cause::Failure);
+        assert_eq!(c.total(), 3);
+        assert_eq!(c.failure, 2);
+        let j = c.to_json();
+        assert_eq!(j.req_f64("failure").unwrap(), 2.0);
+        assert_eq!(j.req_f64("contention").unwrap(), 0.0);
+    }
+}

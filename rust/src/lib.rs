@@ -14,6 +14,7 @@
 
 pub mod config;
 pub mod experiments;
+pub mod fleetsim;
 pub mod frameworks;
 pub mod generator;
 pub mod hardware;

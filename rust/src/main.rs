@@ -7,6 +7,8 @@
 //!   sweep        batch search: many (ISL, OSL, SLA) scenarios, one pass
 //!   plan         traffic-aware capacity planner: cost-minimal replica
 //!                schedules over dynamic QPS curves (mixed GPU fleets)
+//!   validate     fleet-level replay of a planned schedule: achieved vs
+//!                promised SLA attainment, optimism gap by cause
 //!   simulate     ground-truth discrete-event simulation of one config
 //!   experiment   regenerate a paper table/figure (fig1..fig8, table1)
 //!   serve        run the TCP config-search service
@@ -84,13 +86,35 @@ USAGE:
                                        [--burst-prob 0.15] [--burst-seed 7]
                             [--windows 24] [--window-hours 1] [--max-gpus N]
                             [--no-prune] [--out-dir DIR] [--calibration FILE.json]
+  aiconfigurator validate   --model <name> [--fleet h100,a100@a100-pcie]
+                            [--gpus-per-node 8] [--nodes 1] [--framework trtllm]
+                            --isl N --osl N [--ttft MS] [--speed TOK_S]
+                            (--traffic ... as `plan`  |  --trace-spec FILE.json)
+                            [--windows 24] [--window-hours 1] [--max-gpus N]
+                            [--no-prune] [--seed N] [--len-jitter F]
+                            [--scale-lag SECONDS] [--failure-rate PER_REPLICA_H]
+                            [--restart SECONDS] [--calibration FILE.json]
+                            [--out REPORT.json] [--check-gap FRAC]
+                            (plans as `plan` would, then replays a trace drawn
+                             from the plan's own traffic model through the
+                             fleet simulator — router, replica lifecycle,
+                             scale-up lag, KV-transfer contention, seeded
+                             failure injection. Reports per-window achieved vs
+                             promised SLA attainment and the optimism gap
+                             broken down by queueing/scale-lag/contention/
+                             failure. --trace-spec pins traffic+windows+seed
+                             from a committed JSON spec; --check-gap exits
+                             non-zero when the gap exceeds FRAC — the CI
+                             validate-smoke gate)
   aiconfigurator build-db   --model <name> [--gpu h100] [--framework trtllm]
                             [--nodes 1] --out FILE.json
   aiconfigurator simulate   --model <name> [--gpu h100] [--framework trtllm]
                             [--tp 1] [--ep 1] [--batch 8] --isl N --osl N
                             [--ttft MS] [--speed TOK_S] [--requests 32]
+                            [--seed N]
                             (--ttft/--speed steer flag resolution so the
-                             simulated engine matches the searched one)
+                             simulated engine matches the searched one;
+                             --seed pins the scheduler-jitter stream)
   aiconfigurator experiment <fig1|fig5|fig6|fig7|fig8|table1|all> [--full]
   aiconfigurator serve      [--addr 127.0.0.1:7788] [--pjrt ARTIFACTS_DIR]
                             [--calibration FILE.json] [--workers N]
@@ -140,6 +164,7 @@ fn main() {
         "sweep" => cmd_sweep(&flags),
         "topo" => cmd_topo(&flags),
         "plan" => cmd_plan(&flags),
+        "validate" => cmd_validate(&flags),
         "calibrate" => cmd_calibrate(&flags),
         "build-db" => cmd_build_db(&flags),
         "simulate" => cmd_simulate(&flags),
@@ -200,6 +225,13 @@ fn flag_f64(f: &HashMap<String, String>, k: &str, default: f64) -> anyhow::Resul
     match f.get(k) {
         None => Ok(default),
         Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{k} must be a number, got '{v}'")),
+    }
+}
+
+fn flag_u64(f: &HashMap<String, String>, k: &str, default: u64) -> anyhow::Result<u64> {
+    match f.get(k) {
+        None => Ok(default),
+        Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{k} must be an integer, got '{v}'")),
     }
 }
 
@@ -657,15 +689,17 @@ fn parse_traffic(f: &HashMap<String, String>) -> anyhow::Result<TrafficModel> {
     Ok(model)
 }
 
-fn cmd_plan(f: &HashMap<String, String>) -> anyhow::Result<()> {
+/// Parse the flags shared by `plan` and `validate` into (model,
+/// framework, workload).
+fn parse_plan_workload(
+    f: &HashMap<String, String>,
+) -> anyhow::Result<(aiconfigurator::models::ModelArch, Framework, WorkloadSpec)> {
     let model_name = f.get("model").ok_or_else(|| anyhow::anyhow!("--model is required"))?;
     let model = by_name(model_name)
         .ok_or_else(|| anyhow::anyhow!("unknown model '{model_name}' (see --help)"))?;
     let fw_name = flag(f, "framework", "trtllm");
     let framework = Framework::parse(fw_name)
         .ok_or_else(|| anyhow::anyhow!("unknown framework '{fw_name}'"))?;
-    let gpn = flag_u32(f, "gpus-per-node", 8)?;
-    let nodes = flag_u32(f, "nodes", 1)?;
     let isl = flag_u32(f, "isl", 0)?;
     let osl = flag_u32(f, "osl", 0)?;
     anyhow::ensure!(isl > 0 && osl > 0, "--isl and --osl are required");
@@ -676,23 +710,30 @@ fn cmd_plan(f: &HashMap<String, String>) -> anyhow::Result<()> {
         flag_f64(f, "ttft", f64::INFINITY)?,
         flag_f64(f, "speed", 0.0)?,
     );
-    let spec = aiconfigurator::planner::PlanSpec {
-        workload: wl,
-        traffic: parse_traffic(f)?,
-        windows: flag_u32(f, "windows", 24)? as usize,
-        window_h: flag_f64(f, "window-hours", 1.0)?,
-        max_gpus: if f.contains_key("max-gpus") {
-            Some(flag_u32(f, "max-gpus", 0)?)
-        } else {
-            None
-        },
-        prune: !f.contains_key("no-prune"),
-    };
+    Ok((model, framework, wl))
+}
 
-    // One leg per fleet GPU type: profile a database against that
-    // platform's synthetic silicon (Ampere legs profile fp16 — no fp8).
-    // A `--calibration` artifact is composed over the leg whose GPU it
-    // was fitted for; other legs stay analytic.
+/// One priced fleet leg with its execution substrate kept alive — the
+/// planner consumes the oracle; `validate` additionally replays on the
+/// leg's silicon.
+struct PlanLeg {
+    cluster: ClusterSpec,
+    silicon: Silicon,
+    oracle: Box<dyn LatencyOracle>,
+}
+
+/// Build the fleet legs for `plan`/`validate`: one leg per `--fleet`
+/// GPU type, each profiled against that platform's synthetic silicon
+/// (Ampere legs profile fp16 — no fp8). A `--calibration` artifact is
+/// composed over the leg whose GPU it was fitted for; other legs stay
+/// analytic.
+fn build_fleet_legs(
+    f: &HashMap<String, String>,
+    model: &aiconfigurator::models::ModelArch,
+    framework: Framework,
+) -> anyhow::Result<Vec<PlanLeg>> {
+    let gpn = flag_u32(f, "gpus-per-node", 8)?;
+    let nodes = flag_u32(f, "nodes", 1)?;
     let artifact = match f.get("calibration") {
         Some(path) => Some(CalibrationArtifact::load(Path::new(path))?),
         None => None,
@@ -705,7 +746,7 @@ fn cmd_plan(f: &HashMap<String, String>) -> anyhow::Result<()> {
         parse_list(flag(f, "fleet", "h100"), "fleet", |name| {
             aiconfigurator::hardware::parse_fleet_leg(name, gpn)
         })?;
-    let mut legs: Vec<(ClusterSpec, Box<dyn LatencyOracle>)> = Vec::new();
+    let mut legs: Vec<PlanLeg> = Vec::new();
     for leg in legs_spec {
         let (gpu, fabric) = (leg.gpu, leg.fabric);
         let cluster = ClusterSpec::with_fabric(gpu, gpn, nodes, fabric);
@@ -721,7 +762,7 @@ fn cmd_plan(f: &HashMap<String, String>) -> anyhow::Result<()> {
             cluster.total_gpus(),
             gpu.usd_per_hour
         );
-        let db = PerfDatabase::build(&silicon, &model, gpu.preferred_kv_dtype(), 0xA1C0);
+        let db = PerfDatabase::build(&silicon, model, gpu.preferred_kv_dtype(), 0xA1C0);
         let oracle: Box<dyn LatencyOracle> = match &artifact {
             Some(art) if art.gpu == gpu.name => {
                 eprintln!(
@@ -734,18 +775,36 @@ fn cmd_plan(f: &HashMap<String, String>) -> anyhow::Result<()> {
             }
             _ => Box::new(db),
         };
-        legs.push((cluster, oracle));
+        legs.push(PlanLeg { cluster, silicon, oracle });
     }
     anyhow::ensure!(!legs.is_empty(), "--fleet named no GPU types");
     if let Some(art) = &artifact {
         anyhow::ensure!(
-            legs.iter().any(|(c, _)| c.gpu.name == art.gpu),
+            legs.iter().any(|l| l.cluster.gpu.name == art.gpu),
             "--calibration artifact is for gpu '{}' but the fleet has no such leg",
             art.gpu
         );
     }
+    Ok(legs)
+}
+
+fn cmd_plan(f: &HashMap<String, String>) -> anyhow::Result<()> {
+    let (model, framework, wl) = parse_plan_workload(f)?;
+    let spec = aiconfigurator::planner::PlanSpec {
+        workload: wl,
+        traffic: parse_traffic(f)?,
+        windows: flag_u32(f, "windows", 24)? as usize,
+        window_h: flag_f64(f, "window-hours", 1.0)?,
+        max_gpus: if f.contains_key("max-gpus") {
+            Some(flag_u32(f, "max-gpus", 0)?)
+        } else {
+            None
+        },
+        prune: !f.contains_key("no-prune"),
+    };
+    let legs = build_fleet_legs(f, &model, framework)?;
     let fleet: Vec<(ClusterSpec, &dyn LatencyOracle)> =
-        legs.iter().map(|(c, d)| (*c, d.as_ref())).collect();
+        legs.iter().map(|l| (l.cluster, l.oracle.as_ref())).collect();
 
     let t0 = std::time::Instant::now();
     let plan = aiconfigurator::planner::plan(&model, framework, &spec, &fleet)?;
@@ -792,11 +851,11 @@ fn cmd_plan(f: &HashMap<String, String>) -> anyhow::Result<()> {
             println!("best homogeneous fleet (all-{gpu}) matches: ${cost:.2}");
         }
     }
-    for (c, o) in &legs {
-        if let Some(t) = o.provenance_counts() {
+    for l in &legs {
+        if let Some(t) = l.oracle.provenance_counts() {
             println!(
                 "{} leg oracle tiers: {} measured-cell, {} calibrated-analytic, {} analytic, {} SoL",
-                c.gpu.name, t.measured, t.calibrated, t.analytic, t.sol
+                l.cluster.gpu.name, t.measured, t.calibrated, t.analytic, t.sol
             );
         }
     }
@@ -829,6 +888,148 @@ fn cmd_plan(f: &HashMap<String, String>) -> anyhow::Result<()> {
             bundle.write_to(&dirp.join(format!("window_{:02}", w.index)))?;
         }
         println!("wrote plan.json, schedule.yaml and per-window launch bundles to {dir}/");
+    }
+    Ok(())
+}
+
+/// Load a committed trace spec: a small JSON file pinning the traffic
+/// model, horizon and seeds so CI replays the *same* trace every run
+/// (`artifacts/traces/*.json`). Returns
+/// (traffic, windows, window_hours, len_jitter, seed).
+fn load_trace_spec(path: &Path) -> anyhow::Result<(TrafficModel, usize, f64, f64, u64)> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("cannot read trace spec {}: {e}", path.display()))?;
+    let j = aiconfigurator::util::json::parse(&text)?;
+    anyhow::ensure!(
+        j.str_or("kind", "") == "trace-spec",
+        "{} is not a trace spec (want \"kind\": \"trace-spec\")",
+        path.display()
+    );
+    let traffic = TrafficModel::from_json(j.req("traffic")?)?;
+    traffic.validate()?;
+    let windows = j.req_f64("windows")? as usize;
+    let window_h = j.req_f64("window_hours")?;
+    anyhow::ensure!(windows > 0, "trace spec: windows must be positive");
+    anyhow::ensure!(window_h > 0.0, "trace spec: window_hours must be positive");
+    let len_jitter = j.f64_or("len_jitter", 0.0);
+    anyhow::ensure!(
+        (0.0..1.0).contains(&len_jitter),
+        "trace spec: len_jitter must be in [0, 1)"
+    );
+    let seed = j.f64_or("seed", 0.0);
+    anyhow::ensure!(
+        seed >= 0.0 && seed.fract() == 0.0 && seed < 9.007199254740992e15,
+        "trace spec: seed must be a non-negative integer"
+    );
+    Ok((traffic, windows, window_h, len_jitter, seed as u64))
+}
+
+/// `validate`: plan exactly as `plan` would, then replay a trace drawn
+/// from the plan's own traffic model through the fleet simulator
+/// ([`aiconfigurator::fleetsim`]) and report achieved vs promised SLA
+/// attainment — the planner's optimism gap, by cause.
+fn cmd_validate(f: &HashMap<String, String>) -> anyhow::Result<()> {
+    use aiconfigurator::fleetsim;
+
+    let (model, framework, wl) = parse_plan_workload(f)?;
+    let seed = flag_u64(f, "seed", 0xD15C)?;
+    // Horizon + trace source: a committed spec file pins everything;
+    // otherwise the same --traffic flags as `plan`, seeded by --seed.
+    let (traffic, windows, window_h, len_jitter, trace_seed) = match f.get("trace-spec") {
+        Some(path) => load_trace_spec(Path::new(path))?,
+        None => (
+            parse_traffic(f)?,
+            flag_u32(f, "windows", 24)? as usize,
+            flag_f64(f, "window-hours", 1.0)?,
+            flag_f64(f, "len-jitter", 0.0)?,
+            seed,
+        ),
+    };
+    let spec = aiconfigurator::planner::PlanSpec {
+        workload: wl.clone(),
+        traffic,
+        windows,
+        window_h,
+        max_gpus: if f.contains_key("max-gpus") {
+            Some(flag_u32(f, "max-gpus", 0)?)
+        } else {
+            None
+        },
+        prune: !f.contains_key("no-prune"),
+    };
+    let legs = build_fleet_legs(f, &model, framework)?;
+    let fleet: Vec<(ClusterSpec, &dyn LatencyOracle)> =
+        legs.iter().map(|l| (l.cluster, l.oracle.as_ref())).collect();
+
+    let t0 = std::time::Instant::now();
+    let plan = aiconfigurator::planner::plan(&model, framework, &spec, &fleet)?;
+    let trace = spec.traffic.trace(windows, window_h, &wl, len_jitter, trace_seed);
+    anyhow::ensure!(
+        !trace.is_empty(),
+        "the materialized trace is empty — raise the traffic rates or widen the windows"
+    );
+    eprintln!(
+        "replaying {} requests over {} windows ({} segment(s))...",
+        trace.len(),
+        windows,
+        plan.segments().len()
+    );
+    let cfg = fleetsim::FleetConfig {
+        seed,
+        scale_lag_s: flag_f64(f, "scale-lag", 0.0)?,
+        failure_rate_per_replica_h: flag_f64(f, "failure-rate", 0.0)?,
+        restart_s: flag_f64(f, "restart", 120.0)?,
+        sim: SimConfig { seed, ..SimConfig::default() },
+    };
+    let fleet_legs: Vec<fleetsim::FleetLeg<'_>> = legs
+        .iter()
+        .map(|l| fleetsim::FleetLeg {
+            name: l.cluster.gpu.name.to_string(),
+            cluster: l.cluster,
+            silicon: &l.silicon,
+        })
+        .collect();
+    let report = fleetsim::replay(&model, &spec, &plan, &fleet_legs, &trace, &cfg)?;
+    let elapsed = t0.elapsed().as_secs_f64();
+
+    print!("{}", report.render());
+    println!(
+        "validated the plan in {:.2}s (plan ${:.2}; injection: lag {}s, {}/replica-h, restart {}s)",
+        elapsed,
+        plan.total_cost_usd,
+        cfg.scale_lag_s,
+        cfg.failure_rate_per_replica_h,
+        cfg.restart_s
+    );
+
+    if let Some(out) = f.get("out") {
+        let path = Path::new(out);
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, report.to_json().to_string())?;
+        println!("wrote validation report to {out}");
+    }
+    if f.contains_key("check-gap") {
+        let max_gap = flag_f64(f, "check-gap", 0.1)?;
+        anyhow::ensure!(
+            report.optimism_gap <= max_gap,
+            "optimism gap {:.4} exceeds the allowed {:.4}: the planner promised {:.4} \
+             attainment but the fleet achieved {:.4} (misses: {} queueing, {} scale-lag, \
+             {} contention, {} failure)",
+            report.optimism_gap,
+            max_gap,
+            report.promised_attainment,
+            report.achieved_attainment,
+            report.misses.queueing,
+            report.misses.scale_lag,
+            report.misses.contention,
+            report.misses.failure
+        );
+        println!(
+            "check passed: optimism gap {:.4} <= {:.4}",
+            report.optimism_gap, max_gap
+        );
     }
     Ok(())
 }
@@ -985,7 +1186,12 @@ fn cmd_simulate(f: &HashMap<String, String>) -> anyhow::Result<()> {
         flags.kv_frac, flags.max_num_tokens, flags.cuda_graph, flags.chunked_prefill
     );
     let n = flag_u32(f, "requests", 4 * batch)? as usize;
-    let sim = AggregatedSim::new(&ctx.silicon, &ctx.model, &ctx.cluster, eng, SimConfig::default());
+    // User-settable jitter seed (was hard-coded to the SimConfig
+    // default): same seed ⇒ bit-identical metrics, different seed ⇒ a
+    // different scheduler-jitter stream (pinned in tests/fleetsim.rs).
+    let sim_cfg =
+        SimConfig { seed: flag_u64(f, "seed", SimConfig::default().seed)?, ..SimConfig::default() };
+    let sim = AggregatedSim::new(&ctx.silicon, &ctx.model, &ctx.cluster, eng, sim_cfg);
     let res = sim.run(&closed_loop(n, isl, osl));
     print_sim(&res);
     Ok(())

@@ -123,6 +123,32 @@ impl DeploymentPlan {
         }
     }
 
+    /// Maximal runs of consecutive windows deploying the *same unit on
+    /// the same GPU type* (replica counts may differ): the granularity
+    /// at which replicas keep their identity when a schedule is
+    /// executed. Scaling inside a segment adds/removes replicas of a
+    /// running deployment; a segment boundary tears the fleet down and
+    /// launches a different engine. [`crate::fleetsim`] replays each
+    /// segment as one fleet of persistent replicas. Returns inclusive
+    /// `(first, last)` window-index pairs covering the horizon.
+    pub fn segments(&self) -> Vec<(usize, usize)> {
+        let mut out: Vec<(usize, usize)> = Vec::new();
+        for (w, win) in self.windows.iter().enumerate() {
+            match out.last_mut() {
+                Some((_, last))
+                    if *last + 1 == w && {
+                        let prev = &self.windows[*last];
+                        prev.gpu == win.gpu && prev.cand == win.cand
+                    } =>
+                {
+                    *last = w;
+                }
+                _ => out.push((w, w)),
+            }
+        }
+        out
+    }
+
     pub fn to_json(&self, wl: &WorkloadSpec) -> Json {
         let mut windows = Vec::new();
         for w in &self.windows {

@@ -109,6 +109,16 @@ impl TrafficModel {
     /// Materialize the curve as an open-loop Poisson trace (for
     /// validating a planned schedule against the ground-truth
     /// simulator).
+    ///
+    /// This is the **single** trace builder: both the planner-side
+    /// tooling and the fleet replay ([`crate::fleetsim::replay`]) must
+    /// come through here so a plan is always validated against traffic
+    /// drawn from its own model. Delegates to
+    /// [`workload::piecewise_poisson`]; `len_jitter` is that
+    /// function's ±fraction uniform ISL/OSL jitter (0.2 ⇒ each
+    /// request's lengths are drawn uniformly within ±20% of the
+    /// workload's nominal lengths, floored at 1 token). Deterministic
+    /// per `seed`.
     pub fn trace(
         &self,
         windows: usize,

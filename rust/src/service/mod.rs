@@ -439,6 +439,7 @@ fn dispatch(op: OpKind, body: &Json, state: &State) -> anyhow::Result<Json> {
         OpKind::Search => handle_search_request(body, state),
         OpKind::Sweep => handle_sweep_request(body, state),
         OpKind::Plan => handle_plan_request(body, state),
+        OpKind::Validate => handle_validate_request(body, state),
         OpKind::Stats => {
             // Stats without a pipeline (direct embedding): no queue to
             // report.
@@ -645,6 +646,37 @@ fn handle_sweep_request(req: &Json, state: &State) -> anyhow::Result<Json> {
 /// per-request.
 fn handle_plan_request(req: &Json, state: &State) -> anyhow::Result<Json> {
     let t0 = Instant::now();
+    let parts = parse_plan_parts(req, state)?;
+    let fleet: Vec<(ClusterSpec, &dyn LatencyOracle)> =
+        parts.legs.iter().map(|(c, d)| (*c, d.as_ref())).collect();
+    let plan = crate::planner::plan(&parts.model, parts.fw, &parts.spec, &fleet)?;
+
+    let mut resp = Json::obj();
+    resp.set("status", json::s("ok"))
+        .set("elapsed_ms", json::num(t0.elapsed().as_secs_f64() * 1e3))
+        .set("plan", plan.to_json(&parts.wl))
+        .set(
+            "schedule_yaml",
+            json::s(&generator::dynamo::plan_schedule_yaml(&plan, &parts.wl.model, &parts.wl)),
+        );
+    Ok(resp)
+}
+
+/// The parsed pieces of a plan/validate request body: workload, model,
+/// framework, plan spec and the priced fleet legs (with their oracles
+/// from the warm cache).
+struct PlanParts {
+    wl: WorkloadSpec,
+    model: crate::models::ModelArch,
+    fw: Framework,
+    spec: crate::planner::PlanSpec,
+    legs: Vec<(ClusterSpec, Arc<dyn LatencyOracle>)>,
+}
+
+/// Shared request parsing for `plan` and `validate`: both read the same
+/// `"plan"` object; `validate` additionally replays the plan. One
+/// parser so the two ops can never interpret the fields differently.
+fn parse_plan_parts(req: &Json, state: &State) -> anyhow::Result<PlanParts> {
     let p = req.req("plan")?;
     let wl = WorkloadSpec::from_json(p.req("workload")?)?;
     let traffic = crate::planner::TrafficModel::from_json(p.req("traffic")?)?;
@@ -694,18 +726,84 @@ fn handle_plan_request(req: &Json, state: &State) -> anyhow::Result<Json> {
         max_gpus: p.get("max_gpus").and_then(|v| v.as_f64()).map(|v| v as u32),
         prune: p.bool_or("prune", true),
     };
+    Ok(PlanParts { wl, model, fw, spec, legs })
+}
+
+/// Plan-validation request (v2-only):
+/// `{"v": 2, "op": "validate", "plan": {... as the plan op ...},
+///   "validate": {"seed": 1, "len_jitter": 0.1, "scale_lag_s": 30,
+///   "failure_rate_per_replica_h": 0.5, "restart_s": 120}, ...}`
+/// → plans exactly as the `plan` op would, then replays a trace drawn
+/// from the plan's own traffic model through the fleet-level
+/// discrete-event simulator ([`crate::fleetsim`]) and reports the
+/// per-window optimism gap (promised minus achieved SLA attainment,
+/// attributed to queueing / scale-lag / contention / failures). The
+/// `"validate"` object is optional; every knob defaults to the benign
+/// value (no injection, no jitter).
+fn handle_validate_request(req: &Json, state: &State) -> anyhow::Result<Json> {
+    let t0 = Instant::now();
+    let parts = parse_plan_parts(req, state)?;
     let fleet: Vec<(ClusterSpec, &dyn LatencyOracle)> =
-        legs.iter().map(|(c, d)| (*c, d.as_ref())).collect();
-    let plan = crate::planner::plan(&model, fw, &spec, &fleet)?;
+        parts.legs.iter().map(|(c, d)| (*c, d.as_ref())).collect();
+    let plan = crate::planner::plan(&parts.model, parts.fw, &parts.spec, &fleet)?;
+
+    let v = req.get("validate");
+    let knob = |k: &str, d: f64| v.map(|o| o.f64_or(k, d)).unwrap_or(d);
+    let seed_f = knob("seed", crate::simulator::SimConfig::default().seed as f64);
+    anyhow::ensure!(
+        seed_f >= 0.0 && seed_f.fract() == 0.0 && seed_f < 9.0e15,
+        "validate.seed must be a non-negative integer"
+    );
+    let seed = seed_f as u64;
+    let len_jitter = knob("len_jitter", 0.0);
+    anyhow::ensure!(
+        (0.0..1.0).contains(&len_jitter),
+        "validate.len_jitter must be in [0, 1), got {len_jitter}"
+    );
+    let cfg = crate::fleetsim::FleetConfig {
+        seed,
+        scale_lag_s: knob("scale_lag_s", 0.0),
+        failure_rate_per_replica_h: knob("failure_rate_per_replica_h", 0.0),
+        restart_s: knob("restart_s", 120.0),
+        sim: crate::simulator::SimConfig { seed, ..Default::default() },
+    };
+    let trace = parts.spec.traffic.trace(
+        parts.spec.windows,
+        parts.spec.window_h,
+        &parts.wl,
+        len_jitter,
+        seed,
+    );
+    anyhow::ensure!(
+        !trace.is_empty(),
+        "the traffic model produced an empty trace (all windows at zero QPS?) — \
+         nothing to validate"
+    );
+
+    // The replay engines need each leg's silicon profile; the warm
+    // cache holds databases, not Silicon, so rebuild per leg (cheap:
+    // a profile lookup, not a profiling run).
+    let silicons: Vec<Silicon> =
+        parts.legs.iter().map(|(c, _)| Silicon::new(*c, parts.fw.profile())).collect();
+    let fleet_legs: Vec<crate::fleetsim::FleetLeg<'_>> = parts
+        .legs
+        .iter()
+        .zip(&silicons)
+        .map(|((c, _), s)| crate::fleetsim::FleetLeg {
+            name: c.gpu.name.to_string(),
+            cluster: *c,
+            silicon: s,
+        })
+        .collect();
+    let report =
+        crate::fleetsim::replay(&parts.model, &parts.spec, &plan, &fleet_legs, &trace, &cfg)?;
 
     let mut resp = Json::obj();
     resp.set("status", json::s("ok"))
         .set("elapsed_ms", json::num(t0.elapsed().as_secs_f64() * 1e3))
-        .set("plan", plan.to_json(&wl))
-        .set(
-            "schedule_yaml",
-            json::s(&generator::dynamo::plan_schedule_yaml(&plan, &wl.model, &wl)),
-        );
+        .set("trace_requests", json::num(trace.len() as f64))
+        .set("plan", plan.to_json(&parts.wl))
+        .set("report", report.to_json());
     Ok(resp)
 }
 
@@ -948,6 +1046,55 @@ mod tests {
             );
         }
         assert_eq!(st.cache().len(), 2, "one cached db per fleet leg");
+    }
+
+    #[test]
+    fn validate_request_replays_the_plan_and_reports_the_gap() {
+        let st = state();
+        // Tiny trace so the in-process replay stays fast: two 36 s
+        // windows at ~1-2 QPS, generous SLA.
+        let mut traffic = Json::obj();
+        traffic
+            .set("kind", json::s("diurnal"))
+            .set("peak_qps", json::num(2.0))
+            .set("trough_qps", json::num(1.0))
+            .set("period_h", json::num(0.02));
+        let mut plan = Json::obj();
+        plan.set(
+            "workload",
+            WorkloadSpec::new("llama3.1-8b", 256, 32, 5000.0, 2.0).to_json(),
+        )
+        .set("traffic", traffic)
+        .set("windows", json::num(2.0))
+        .set("window_hours", json::num(0.01))
+        .set("fleet", Json::Arr(vec![json::s("h100")]));
+        let mut req = Json::obj();
+        req.set("v", json::num(2.0))
+            .set("op", json::s("validate"))
+            .set("plan", plan)
+            .set("gpus_per_node", json::num(8.0))
+            .set("num_nodes", json::num(1.0))
+            .set("framework", json::s("trtllm"))
+            .set("id", json::num(9.0));
+        let resp = handle_request(&req, &st).unwrap();
+        assert_eq!(resp.req_str("status").unwrap(), "ok");
+        assert_eq!(resp.req_f64("id").unwrap(), 9.0);
+        assert!(resp.req_f64("trace_requests").unwrap() > 0.0);
+        assert!(resp.get("plan").is_some(), "the planned schedule rides along");
+        let report = resp.req("report").unwrap();
+        assert!(report.req_f64("offered").unwrap() > 0.0);
+        assert_eq!(report.req("windows").unwrap().as_arr().unwrap().len(), 2);
+        // No injection: the plan keeps (most of) its promise.
+        assert!(
+            report.req_f64("optimism_gap").unwrap() <= 0.5,
+            "gap {} too large for an uninjected replay",
+            report.req_f64("optimism_gap").unwrap()
+        );
+        // The op is first-class in the stats rollup.
+        let stats_resp =
+            handle_request(&json::parse(r#"{"v": 2, "op": "stats"}"#).unwrap(), &st).unwrap();
+        let counts = stats_resp.req("stats").unwrap().req("requests").unwrap();
+        assert_eq!(counts.req("validate").unwrap().req_f64("count").unwrap(), 1.0);
     }
 
     #[test]

@@ -3,7 +3,7 @@
 //! Two request dialects share one dispatch path:
 //!
 //! * **v2 envelope** — `{"v": 2, "id": ..., "op": "search" | "sweep" |
-//!   "plan" | "stats", ...}` with typed error responses
+//!   "plan" | "validate" | "stats", ...}` with typed error responses
 //!   `{"v": 2, "id": ..., "error": {"code": ..., "message": ...}}`.
 //! * **legacy (v1)** — the original bare requests: the operation is
 //!   inferred from which field is present (`plan` → plan, `workloads` →
@@ -25,12 +25,15 @@ use crate::models::{by_name, ModelArch};
 use crate::search::SearchSpace;
 use crate::util::json::{self, Json};
 
-/// The four operations the service answers.
+/// The five operations the service answers. `validate` is v2-only:
+/// the legacy dialect predates it, so [`infer_legacy_op`] never
+/// produces it and v1 clients cannot reach it by accident.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum OpKind {
     Search,
     Sweep,
     Plan,
+    Validate,
     Stats,
 }
 
@@ -40,6 +43,7 @@ impl OpKind {
             OpKind::Search => "search",
             OpKind::Sweep => "sweep",
             OpKind::Plan => "plan",
+            OpKind::Validate => "validate",
             OpKind::Stats => "stats",
         }
     }
@@ -49,6 +53,7 @@ impl OpKind {
             "search" => Some(OpKind::Search),
             "sweep" => Some(OpKind::Sweep),
             "plan" => Some(OpKind::Plan),
+            "validate" => Some(OpKind::Validate),
             "stats" => Some(OpKind::Stats),
             _ => None,
         }
@@ -152,7 +157,9 @@ pub fn parse_envelope(req: &Json) -> Result<Envelope, ServiceError> {
             })?;
             let op = OpKind::parse(op_name).ok_or_else(|| ServiceError {
                 code: ErrCode::UnsupportedOp,
-                message: format!("unknown op '{op_name}' (expected search|sweep|plan|stats)"),
+                message: format!(
+                    "unknown op '{op_name}' (expected search|sweep|plan|validate|stats)"
+                ),
             })?;
             Ok(Envelope { v: 2, id, op, body: req.clone() })
         }
@@ -275,6 +282,18 @@ pub fn request_key(env: &Envelope) -> anyhow::Result<RequestKey> {
                 m.remove("op");
             }
             format!("plan|{}", b.to_string())
+        }
+        OpKind::Validate => {
+            // Same canonical-body keying as Plan: a validate request is
+            // a plan request plus the replay knobs, all of which shape
+            // the report and so belong in the key.
+            let mut b = body.clone();
+            if let Json::Obj(m) = &mut b {
+                m.remove("v");
+                m.remove("id");
+                m.remove("op");
+            }
+            format!("validate|{}", b.to_string())
         }
         OpKind::Stats => "stats".to_string(),
     };
@@ -526,6 +545,12 @@ mod tests {
 
         let plan = json::parse(r#"{"plan": {}}"#).unwrap();
         assert_eq!(parse_envelope(&plan).unwrap().op, OpKind::Plan);
+
+        // `validate` exists only as an explicit v2 op — the legacy
+        // field-sniffing path must keep reading a bare `plan` field as
+        // a plan request, never a validation.
+        let val = json::parse(r#"{"v": 2, "op": "validate", "plan": {}}"#).unwrap();
+        assert_eq!(parse_envelope(&val).unwrap().op, OpKind::Validate);
     }
 
     #[test]

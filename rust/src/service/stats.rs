@@ -110,6 +110,7 @@ pub struct ServiceStats {
     pub search: OpStat,
     pub sweep: OpStat,
     pub plan: OpStat,
+    pub validate: OpStat,
     pub stats_reqs: AtomicU64,
     /// Error responses of any kind (typed, legacy, shed).
     pub errors: AtomicU64,
@@ -136,6 +137,7 @@ impl ServiceStats {
             OpKind::Search => Some(&self.search),
             OpKind::Sweep => Some(&self.sweep),
             OpKind::Plan => Some(&self.plan),
+            OpKind::Validate => Some(&self.validate),
             OpKind::Stats => None,
         }
     }
@@ -184,9 +186,12 @@ impl ServiceStats {
     pub fn to_json(&self, cache: &CacheGauges, pool: Option<&PoolGauges>) -> Json {
         let ld = |a: &AtomicU64| a.load(Ordering::Relaxed) as f64;
         let mut requests = Json::obj();
-        for (name, s) in
-            [("search", &self.search), ("sweep", &self.sweep), ("plan", &self.plan)]
-        {
+        for (name, s) in [
+            ("search", &self.search),
+            ("sweep", &self.sweep),
+            ("plan", &self.plan),
+            ("validate", &self.validate),
+        ] {
             let mut o = Json::obj();
             o.set("count", json::num(ld(&s.count)))
                 .set("p50_ms", json::num(s.latency.percentile(50.0)))
@@ -241,9 +246,12 @@ impl ServiceStats {
     pub fn render_metrics(&self, cache: &CacheGauges, pool: Option<&PoolGauges>) -> String {
         let ld = |a: &AtomicU64| a.load(Ordering::Relaxed);
         let mut out = String::new();
-        for (name, s) in
-            [("search", &self.search), ("sweep", &self.sweep), ("plan", &self.plan)]
-        {
+        for (name, s) in [
+            ("search", &self.search),
+            ("sweep", &self.sweep),
+            ("plan", &self.plan),
+            ("validate", &self.validate),
+        ] {
             out.push_str(&format!(
                 "aiconf_requests_total{{op=\"{name}\"}} {}\n",
                 ld(&s.count)

@@ -144,6 +144,7 @@ impl<'a> AggregatedSim<'a> {
             output_tokens: finished.iter().map(|r| r.req.osl as u64).sum(),
             gpus: self.eng.parallel.gpus(),
             iterations,
+            requests: finished.iter().filter_map(|r| r.metric()).collect(),
         }
     }
 

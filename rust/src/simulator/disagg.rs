@@ -61,7 +61,7 @@ impl<'a> DisaggSim<'a> {
     /// factor (0.9), aligning the simulator's transfer with how the
     /// analytic models price `Op::P2p` — the seed simulator used raw
     /// link bandwidth here and disagreed with its own estimator.
-    fn kv_transfer_ms(&self, isl: u32) -> f64 {
+    pub fn kv_transfer_ms(&self, isl: u32) -> f64 {
         let bytes = self.model.kv_bytes_per_token(self.prefill.kv_dtype) * isl as f64;
         let gpus =
             self.x * self.prefill.parallel.gpus() + self.y * self.decode.parallel.gpus();
@@ -232,6 +232,7 @@ impl<'a> DisaggSim<'a> {
             output_tokens: finished.iter().map(|r| r.req.osl as u64).sum(),
             gpus: self.x * self.prefill.parallel.gpus() + self.y * self.decode.parallel.gpus(),
             iterations,
+            requests: finished.iter().filter_map(|r| r.metric()).collect(),
         }
     }
 }

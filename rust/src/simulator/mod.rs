@@ -17,6 +17,23 @@ pub mod request;
 
 use crate::util::stats;
 
+/// Per-request metrics of one completed request, in completion order.
+/// The composition surface for fleet-level replay
+/// ([`crate::fleetsim`]): ids are trace-global, so a fleet layer that
+/// partitions a trace across replicas can map each engine-local result
+/// back to its window/replica without the engine knowing it is part of
+/// a fleet.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ReqMetric {
+    pub id: u64,
+    /// Arrival time, ms on the trace's absolute clock.
+    pub arrival_ms: f64,
+    pub ttft_ms: f64,
+    pub tpot_ms: f64,
+    /// Completion time, ms on the trace's absolute clock.
+    pub finished_ms: f64,
+}
+
 /// Simulator knobs.
 #[derive(Clone, Copy, Debug)]
 pub struct SimConfig {
@@ -51,6 +68,10 @@ pub struct SimResult {
     pub output_tokens: u64,
     pub gpus: u32,
     pub iterations: u64,
+    /// Per-request detail (completion order) — see [`ReqMetric`].
+    /// `ttft_ms`/`tpot_ms` above stay the aggregate-facing vectors;
+    /// this adds the id/arrival/finish mapping fleet composition needs.
+    pub requests: Vec<ReqMetric>,
 }
 
 impl SimResult {
@@ -121,6 +142,7 @@ mod tests {
             output_tokens: 1000,
             gpus: 2,
             iterations: 100,
+            requests: Vec::new(),
         };
         assert_eq!(r.mean_tpot_ms(), 30.0);
         assert!((r.speed() - 1000.0 / 30.0).abs() < 1e-9);

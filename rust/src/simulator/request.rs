@@ -66,6 +66,18 @@ impl ReqState {
         }
     }
 
+    /// The per-request record a completed request contributes to
+    /// [`super::SimResult::requests`] (None while still in flight).
+    pub fn metric(&self) -> Option<super::ReqMetric> {
+        Some(super::ReqMetric {
+            id: self.req.id,
+            arrival_ms: self.req.arrival_ms,
+            ttft_ms: self.ttft_ms()?,
+            tpot_ms: self.tpot_ms()?,
+            finished_ms: self.finished_ms?,
+        })
+    }
+
     /// Mean TPOT over the generated tail (requires completion).
     pub fn tpot_ms(&self) -> Option<f64> {
         match (self.first_token_ms, self.finished_ms) {

@@ -59,6 +59,12 @@ pub fn poisson(
 /// requests/s, with the same ±`len_jitter` ISL/OSL jitter as
 /// [`poisson`]. Windows with non-positive rate are silent. Deterministic
 /// per seed.
+///
+/// This is the one piecewise trace generator in the crate — planner
+/// tooling and the fleet replay both reach it through
+/// [`crate::planner::TrafficModel::trace`], so the traffic a plan is
+/// validated against is always drawn from the plan's own model, ids
+/// dense in arrival order.
 pub fn piecewise_poisson(
     qps: &[f64],
     window_s: f64,

@@ -1,7 +1,8 @@
 //! Schema checks for every committed JSON artifact (the CI
 //! `artifacts-validate` job): `BENCH_*.json` at the repo root, the
-//! kernel-measurement sets under `artifacts/measurements/`, any
-//! committed calibration artifacts under `artifacts/calibration/`, and
+//! kernel-measurement sets under `artifacts/measurements/`, the trace
+//! specs under `artifacts/traces/`, any committed calibration
+//! artifacts under `artifacts/calibration/`, and
 //! the AOT manifest if present — so a hand-edited file fails CI with a
 //! named path instead of silently rotting until a downstream consumer
 //! trips over it.
@@ -13,6 +14,7 @@ use aiconfigurator::models::{by_name, Dtype};
 use aiconfigurator::frameworks::Framework;
 use aiconfigurator::perfdb::measure;
 use aiconfigurator::perfdb::CalibrationArtifact;
+use aiconfigurator::planner::TrafficModel;
 use aiconfigurator::runtime::Manifest;
 use aiconfigurator::util::json::{self, Json};
 
@@ -167,6 +169,78 @@ fn bench_topology_keeps_its_contract() {
     ) {
         assert!(total >= shapes, "fewer placements than shapes: {total} < {shapes}");
     }
+}
+
+/// The committed BENCH_validate.json placeholder (or its measured
+/// overwrite) must keep the keys benches/validate.rs writes; a measured
+/// benign replay must stay inside the CI optimism-gap gate.
+#[test]
+fn bench_validate_keeps_its_contract() {
+    let txt = std::fs::read_to_string(repo_root().join("BENCH_validate.json")).unwrap();
+    let j = json::parse(&txt).unwrap();
+    assert_eq!(j.req_str("bench").unwrap(), "validate");
+    for key in [
+        "windows",
+        "trace_requests",
+        "replay_benign_ms_median",
+        "replay_injected_ms_median",
+        "benign_optimism_gap",
+        "injected_achieved_attainment",
+        "injected_failures",
+    ] {
+        let v = j.req(key).unwrap_or_else(|e| panic!("BENCH_validate.json: {e}"));
+        assert!(
+            matches!(v, Json::Null | Json::Num(_)),
+            "BENCH_validate.json: '{key}' must be a number or null (pending)"
+        );
+    }
+    // A measured run (non-null trace_requests) replayed a real trace,
+    // and its faithful-execution gap honors the validate-smoke bar.
+    if let Some(reqs) = j.req("trace_requests").unwrap().as_f64() {
+        assert!(reqs >= 100.0, "bench trace must carry hundreds of requests");
+        assert!(
+            j.req_f64("benign_optimism_gap").unwrap() <= 0.10,
+            "benign replay gap exceeds the 10% CI gate"
+        );
+    }
+}
+
+/// Every committed trace spec under artifacts/traces/ must satisfy the
+/// `validate --trace-spec` contract: `"kind": "trace-spec"`, a traffic
+/// model that parses and validates, a positive horizon, sane jitter,
+/// and an exactly-representable seed (main.rs enforces the same at the
+/// CLI; this pins the committed files themselves).
+#[test]
+fn trace_specs_validate() {
+    let dir = repo_root().join("artifacts").join("traces");
+    assert!(dir.is_dir(), "artifacts/traces is committed by this repo and must exist");
+    let mut found = 0;
+    for entry in std::fs::read_dir(&dir).unwrap() {
+        let path = entry.unwrap().path();
+        if !path.extension().is_some_and(|x| x == "json") {
+            continue;
+        }
+        found += 1;
+        let name = path.file_name().unwrap().to_string_lossy().to_string();
+        let txt = std::fs::read_to_string(&path).unwrap();
+        let j = json::parse(&txt).unwrap_or_else(|e| panic!("{name}: invalid JSON: {e}"));
+        assert_eq!(j.str_or("kind", ""), "trace-spec", "{name}: wrong kind");
+        let traffic = TrafficModel::from_json(j.req("traffic").unwrap())
+            .unwrap_or_else(|e| panic!("{name}: bad traffic model: {e}"));
+        traffic.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
+        let windows = j.req_f64("windows").unwrap_or_else(|e| panic!("{name}: {e}"));
+        let window_h = j.req_f64("window_hours").unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert!(windows >= 1.0 && windows.fract() == 0.0, "{name}: windows must be a count");
+        assert!(window_h > 0.0, "{name}: window_hours must be positive");
+        let jitter = j.f64_or("len_jitter", 0.0);
+        assert!((0.0..1.0).contains(&jitter), "{name}: len_jitter must be in [0, 1)");
+        let seed = j.f64_or("seed", 0.0);
+        assert!(
+            seed >= 0.0 && seed.fract() == 0.0 && seed < 9.0e15,
+            "{name}: seed must be a non-negative integer the f64 wire format preserves"
+        );
+    }
+    assert!(found >= 1, "artifacts/traces holds no trace specs");
 }
 
 /// Every measurement set under artifacts/measurements/<gpu>/ parses,

@@ -1,0 +1,178 @@
+//! Fleet-replay integration: the degenerate-equivalence pin (a fleet of
+//! one replica with no lag/failures/contention reproduces the single
+//! engine simulator bit-for-bit), seeded determinism, and graceful
+//! degradation under failure injection.
+
+use aiconfigurator::config::{Candidate, EngineConfig, ParallelSpec, RuntimeFlags, WorkloadSpec};
+use aiconfigurator::fleetsim::{self, FleetConfig, FleetLeg};
+use aiconfigurator::frameworks::Framework;
+use aiconfigurator::hardware::{h100_sxm, ClusterSpec};
+use aiconfigurator::models::{by_name, Dtype, ModelArch};
+use aiconfigurator::perfmodel::PerfEstimate;
+use aiconfigurator::planner::{DeploymentPlan, PlanSpec, TrafficModel, WindowPlan};
+use aiconfigurator::silicon::Silicon;
+use aiconfigurator::simulator::aggregated::AggregatedSim;
+use aiconfigurator::simulator::SimConfig;
+use aiconfigurator::workload::Request;
+
+const WINDOW_H: f64 = 0.01; // 36 s windows keep the traces small
+
+fn engine() -> EngineConfig {
+    EngineConfig {
+        framework: Framework::TrtLlm,
+        parallel: ParallelSpec::tp(2),
+        batch: 16,
+        weight_dtype: Dtype::Fp8,
+        kv_dtype: Dtype::Fp8,
+        flags: RuntimeFlags::defaults_for(Framework::TrtLlm),
+        placement: aiconfigurator::topology::Placement::packed(),
+    }
+}
+
+/// A hand-built single-segment plan: `windows` windows of the same TP2
+/// unit on h100 at `replicas` replicas each. Replay only reads
+/// gpu/cand/replicas/window-span per window.
+fn flat_plan(replicas: u32, windows: usize) -> DeploymentPlan {
+    let cand = Candidate::Aggregated { engine: engine(), replicas: 1 };
+    let est =
+        PerfEstimate { ttft_ms: 100.0, tpot_ms: 50.0, speed: 20.0, thru_per_gpu: 1.0, concurrency: 16 };
+    let wins = (0..windows)
+        .map(|i| WindowPlan {
+            index: i,
+            t_start_h: i as f64 * WINDOW_H,
+            t_end_h: (i + 1) as f64 * WINDOW_H,
+            demand_qps: 2.0,
+            gpu: "h100".into(),
+            cand: cand.clone(),
+            replicas,
+            gpus: (replicas * 2) as u64,
+            capacity_qps: replicas as f64 * 50.0,
+            est,
+            cost_usd: 1.0,
+        })
+        .collect();
+    DeploymentPlan {
+        windows: wins,
+        total_cost_usd: 1.0,
+        best_homogeneous: None,
+        static_peak_cost_usd: 2.0,
+        options_considered: 1,
+        options_pruned: 0,
+    }
+}
+
+fn fixture(windows: usize) -> (ModelArch, ClusterSpec, Silicon, PlanSpec, Vec<Request>) {
+    let cluster = ClusterSpec::new(h100_sxm(), 8, 1);
+    let sil = Silicon::new(cluster, Framework::TrtLlm.profile());
+    let model = by_name("llama3.1-8b").unwrap();
+    let wl = WorkloadSpec::new("llama3.1-8b", 256, 32, 5000.0, 2.0);
+    let spec = PlanSpec::new(
+        wl.clone(),
+        TrafficModel::Ramp { start_qps: 2.0, end_qps: 2.0 },
+        windows,
+        WINDOW_H,
+    );
+    let trace = spec.traffic.trace(windows, WINDOW_H, &wl, 0.0, 123);
+    assert!(!trace.is_empty(), "fixture trace must carry requests");
+    (model, cluster, sil, spec, trace)
+}
+
+fn benign_cfg() -> FleetConfig {
+    FleetConfig {
+        seed: 5,
+        scale_lag_s: 0.0,
+        failure_rate_per_replica_h: 0.0,
+        restart_s: 120.0,
+        sim: SimConfig::default(),
+    }
+}
+
+/// The tentpole composition guarantee: one replica, zero lag, zero
+/// failures, no contention (aggregated unit) must reproduce the
+/// single-replica `AggregatedSim` run over the identical trace with
+/// the identical `SimConfig` *exactly* — same per-request latencies,
+/// same completion count, same makespan.
+#[test]
+fn degenerate_fleet_reproduces_the_engine_simulator_exactly() {
+    let (model, cluster, sil, spec, trace) = fixture(2);
+    let plan = flat_plan(1, 2);
+    let cfg = benign_cfg();
+    let legs = [FleetLeg { name: "h100".into(), cluster, silicon: &sil }];
+    let rep = fleetsim::replay(&model, &spec, &plan, &legs, &trace, &cfg).unwrap();
+
+    let direct = AggregatedSim::new(&sil, &model, &cluster, engine(), cfg.sim).run(&trace);
+
+    assert_eq!(rep.offered, trace.len());
+    assert_eq!(rep.completed, direct.completed, "completion counts must match exactly");
+    assert_eq!(rep.makespan_ms, direct.makespan_ms, "makespan must match bit-for-bit");
+
+    let sorted = |mut v: Vec<f64>| {
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v
+    };
+    let fleet_ttfts = sorted(rep.requests.iter().filter_map(|r| r.ttft_ms).collect());
+    let fleet_tpots = sorted(rep.requests.iter().filter_map(|r| r.tpot_ms).collect());
+    assert_eq!(fleet_ttfts, sorted(direct.ttft_ms.clone()), "TTFT streams must be identical");
+    assert_eq!(fleet_tpots, sorted(direct.tpot_ms.clone()), "TPOT streams must be identical");
+}
+
+/// Satellite: the whole replay is deterministic per seed, and the
+/// engine jitter stream actually responds to the seed.
+#[test]
+fn replay_is_deterministic_per_seed() {
+    let (model, cluster, sil, spec, trace) = fixture(2);
+    let plan = flat_plan(2, 2);
+    let cfg = benign_cfg();
+    let legs = [FleetLeg { name: "h100".into(), cluster, silicon: &sil }];
+    let a = fleetsim::replay(&model, &spec, &plan, &legs, &trace, &cfg).unwrap();
+    let b = fleetsim::replay(&model, &spec, &plan, &legs, &trace, &cfg).unwrap();
+    assert_eq!(a.to_json().to_string(), b.to_json().to_string(), "same seed, same report");
+
+    let mut other = cfg;
+    other.sim.seed ^= 0xBEEF;
+    let c = fleetsim::replay(&model, &spec, &plan, &legs, &trace, &other).unwrap();
+    let ttfts = |r: &fleetsim::ValidationReport| -> Vec<f64> {
+        r.requests.iter().filter_map(|q| q.ttft_ms).collect()
+    };
+    assert_ne!(ttfts(&a), ttfts(&c), "a different engine seed must move the jitter stream");
+}
+
+/// Satellite: failure injection degrades attainment without panicking,
+/// and every loss is cause-typed.
+#[test]
+fn failure_injection_degrades_gracefully() {
+    let (model, cluster, sil, spec, trace) = fixture(4);
+    let plan = flat_plan(2, 4);
+    let legs = [FleetLeg { name: "h100".into(), cluster, silicon: &sil }];
+
+    let run = |rate: f64| {
+        let mut cfg = benign_cfg();
+        cfg.failure_rate_per_replica_h = rate;
+        cfg.restart_s = 30.0;
+        fleetsim::replay(&model, &spec, &plan, &legs, &trace, &cfg).unwrap()
+    };
+    let clean = run(0.0);
+    let shaky = run(100.0);
+    let broken = run(2000.0);
+
+    assert_eq!(clean.failures, 0);
+    assert!(shaky.failures > 0, "100 failures/replica-h over 2.4 min must fire");
+    assert!(broken.failures > shaky.failures);
+
+    // Monotone against the clean baseline (independent failure draws
+    // mean shaky-vs-broken ordering is only expected, not guaranteed).
+    assert!(shaky.achieved_attainment <= clean.achieved_attainment + 1e-12);
+    assert!(broken.achieved_attainment < clean.achieved_attainment);
+
+    // Every injected miss is attributed: failure-typed misses appear,
+    // counts stay consistent, and the report renders.
+    assert!(broken.misses.failure > 0, "failure-typed misses must be attributed");
+    assert_eq!(broken.offered, trace.len());
+    assert_eq!(
+        broken.completed + broken.preempted + broken.dropped,
+        broken.offered,
+        "every request is completed, preempted, or dropped"
+    );
+    assert!(broken.optimism_gap >= clean.optimism_gap);
+    assert!(broken.render().contains("optimism gap"));
+}

@@ -19,6 +19,13 @@
 #   make bench-service  closed-loop service bench (writes BENCH_service.json)
 #   make bench-validate  fleet-replay bench (writes BENCH_validate.json)
 #   make bench-all  every bench target
+#   make bench-budget  perf-budget gate: snapshot the committed
+#                   BENCH_plan/BENCH_topology baselines, re-run the
+#                   sweep/planner/topology benches, schema-check the
+#                   rewritten artifacts and fail if any *_ms_median
+#                   regressed more than 15% (null baselines skip
+#                   loudly — the gate arms once reference medians are
+#                   committed)
 #   make artifacts  AOT-lower the Pallas kernels to HLO (needs jax; the
 #                   Rust side degrades gracefully when absent)
 #   make fmt/clippy lint helpers mirroring CI (clippy is enforced in CI)
@@ -28,7 +35,7 @@ PYTHON   ?= python3
 
 .PHONY: verify build test gen-smoke artifacts-validate calibrate-smoke topo-smoke \
         service-smoke validate-smoke measurements bench bench-plan bench-topo \
-        bench-service bench-validate bench-all artifacts fmt clippy clean
+        bench-service bench-validate bench-all bench-budget artifacts fmt clippy clean
 
 verify:
 	cd $(RUST_DIR) && cargo build --release && cargo test -q
@@ -102,6 +109,17 @@ bench-service:
 
 bench-validate:
 	cd $(RUST_DIR) && cargo bench --bench validate
+
+bench-budget:
+	rm -rf $(RUST_DIR)/target/bench-baseline
+	mkdir -p $(RUST_DIR)/target/bench-baseline
+	cp BENCH_plan.json BENCH_topology.json $(RUST_DIR)/target/bench-baseline/
+	cd $(RUST_DIR) && cargo bench --bench sweep
+	cd $(RUST_DIR) && cargo bench --bench planner
+	cd $(RUST_DIR) && cargo bench --bench topology
+	cd $(RUST_DIR) && cargo test --test artifacts -q
+	$(PYTHON) python/bench_budget.py \
+		--baseline $(RUST_DIR)/target/bench-baseline --current . --tolerance 0.15
 
 bench-all: bench bench-plan bench-topo bench-service bench-validate
 	cd $(RUST_DIR) && cargo bench --bench interp_hot_path

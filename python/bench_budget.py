@@ -1,0 +1,123 @@
+#!/usr/bin/env python3
+"""Perf-budget gate: compare freshly measured bench medians against the
+committed BENCH_*.json baselines.
+
+Usage:
+    python3 python/bench_budget.py --baseline <dir> --current <dir> \
+        [--tolerance 0.15] [--files BENCH_plan.json BENCH_topology.json]
+
+Only keys ending in ``_ms_median`` are budgeted (throughput and count
+fields are informational; they track the same runs and would double-
+count a regression). A run is a **regression** when
+``current > baseline * (1 + tolerance)``.
+
+Committed baselines start life as ``null`` (the repo's benches have
+never run on a toolchain-equipped reference machine). A null baseline —
+or a null/missing current value — is a visible SKIP, not a failure:
+the gate degrades to a no-op until someone runs ``make bench-plan``
+/ ``make bench-topo`` on reference hardware and commits the numbers.
+
+Exit status: 1 if any budgeted key regressed, 0 otherwise (including
+the all-skipped case).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+DEFAULT_FILES = ["BENCH_plan.json", "BENCH_topology.json"]
+BUDGET_SUFFIX = "_ms_median"
+
+
+def load(path: str):
+    try:
+        with open(path, "r", encoding="utf-8") as fh:
+            return json.load(fh)
+    except FileNotFoundError:
+        return None
+    except json.JSONDecodeError as e:
+        print(f"bench-budget: {path}: malformed JSON ({e})", file=sys.stderr)
+        return None
+
+
+def compare_file(name: str, baseline_dir: str, current_dir: str, tol: float):
+    """Returns (regressions, checked, skipped) for one BENCH file."""
+    base = load(os.path.join(baseline_dir, name))
+    cur = load(os.path.join(current_dir, name))
+    if base is None:
+        print(f"  {name}: SKIP — no baseline file in {baseline_dir}")
+        return ([], 0, 1)
+    if cur is None:
+        print(f"  {name}: SKIP — no current file in {current_dir}")
+        return ([], 0, 1)
+
+    regressions = []
+    checked = 0
+    skipped = 0
+    for key in sorted(k for k in base if k.endswith(BUDGET_SUFFIX)):
+        b = base.get(key)
+        c = cur.get(key)
+        if not isinstance(b, (int, float)):
+            print(f"  {name}:{key}: SKIP — baseline is null (bench never "
+                  f"committed a reference run; gate is a no-op for this key)")
+            skipped += 1
+            continue
+        if not isinstance(c, (int, float)):
+            print(f"  {name}:{key}: SKIP — current value is null/missing")
+            skipped += 1
+            continue
+        checked += 1
+        if b <= 0:
+            print(f"  {name}:{key}: SKIP — non-positive baseline {b}")
+            skipped += 1
+            continue
+        ratio = c / b
+        if ratio > 1.0 + tol:
+            regressions.append((name, key, b, c, ratio))
+            print(f"  {name}:{key}: REGRESSION {b:.3f} -> {c:.3f} ms "
+                  f"({ratio:.2f}x, budget {1.0 + tol:.2f}x)")
+        elif ratio < 1.0 - tol:
+            print(f"  {name}:{key}: improved {b:.3f} -> {c:.3f} ms "
+                  f"({ratio:.2f}x) — consider refreshing the committed baseline")
+        else:
+            print(f"  {name}:{key}: ok {b:.3f} -> {c:.3f} ms ({ratio:.2f}x)")
+    return (regressions, checked, skipped)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", required=True, help="dir holding the committed BENCH_*.json snapshots")
+    ap.add_argument("--current", required=True, help="dir holding the freshly measured BENCH_*.json")
+    ap.add_argument("--tolerance", type=float, default=0.15, help="allowed fractional slowdown (default 0.15)")
+    ap.add_argument("--files", nargs="*", default=DEFAULT_FILES, help="BENCH files to budget")
+    args = ap.parse_args()
+
+    print(f"bench-budget: medians vs baselines, tolerance +{args.tolerance:.0%}")
+    all_regressions = []
+    total_checked = 0
+    total_skipped = 0
+    for name in args.files:
+        regs, checked, skipped = compare_file(name, args.baseline, args.current, args.tolerance)
+        all_regressions.extend(regs)
+        total_checked += checked
+        total_skipped += skipped
+
+    if total_checked == 0:
+        print("bench-budget: NOTICE — every budgeted key was skipped "
+              "(null baselines). The gate enforced nothing this run; commit "
+              "reference medians to arm it.")
+        return 0
+    if all_regressions:
+        print(f"bench-budget: FAIL — {len(all_regressions)} key(s) over budget "
+              f"({total_checked} checked, {total_skipped} skipped)")
+        return 1
+    print(f"bench-budget: PASS — {total_checked} key(s) within budget "
+          f"({total_skipped} skipped)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -93,7 +93,13 @@ fn main() {
         .set("total_cost_usd", json::num(plan.total_cost_usd))
         .set("static_peak_cost_usd", json::num(plan.static_peak_cost_usd))
         .set("options_considered", json::num(plan.options_considered as f64))
-        .set("options_pruned", json::num(plan.options_pruned as f64));
+        .set("options_pruned", json::num(plan.options_pruned as f64))
+        // Raw-speed figure the perf budgets track: planner options
+        // priced per second on the cold (fresh-memo) path.
+        .set(
+            "cold_plan_options_per_s",
+            json::num(plan.options_considered as f64 / (cold.median_ms() / 1e3).max(1e-12)),
+        );
     if let Some((gpu, cost)) = &plan.best_homogeneous {
         o.set("best_homogeneous_gpu", json::s(gpu))
             .set("heterogeneity_dividend_usd", json::num(cost - plan.total_cost_usd));

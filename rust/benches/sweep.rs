@@ -5,16 +5,23 @@
 //! acceptance check is that sweeping ≥4 scenarios beats 4 independent
 //! runs on wall-clock.
 //!
+//! Also compares **point vs batched** oracle pricing on a fixed op
+//! list: `op_latency_us` in a loop (one table lookup + placement
+//! factor per call) against one `latency_batch` call (queries bucketed
+//! per table, each slab walked once) — the §Perf raw-speed win the
+//! perf budgets track.
+//!
 //! Run: `cargo bench --bench sweep`
 
 use aiconfigurator::config::WorkloadSpec;
 use aiconfigurator::frameworks::Framework;
 use aiconfigurator::hardware::{h100_sxm, ClusterSpec};
 use aiconfigurator::models::{by_name, Dtype};
+use aiconfigurator::ops::{decompose, Op, StepShape};
 use aiconfigurator::perfdb::{LatencyOracle, MemoOracle, PerfDatabase};
 use aiconfigurator::search::{SearchSpace, TaskRunner};
 use aiconfigurator::silicon::Silicon;
-use aiconfigurator::util::bench::{bench, black_box};
+use aiconfigurator::util::bench::{bench_items, black_box};
 
 fn scenarios(model: &str) -> Vec<WorkloadSpec> {
     // A realistic SLA exploration: same traffic profile family, varied
@@ -37,20 +44,64 @@ fn main() {
         let space = SearchSpace::default_for(&model, Framework::TrtLlm);
         let wls = scenarios(name);
 
-        let indep = bench(&format!("independent-runs-x{}/{name}", wls.len()), 1, 8, || {
-            for wl in &wls {
-                let runner = TaskRunner::new(&model, &cluster, space.clone(), wl.clone());
-                black_box(runner.run(&db));
-            }
-        });
-        let swept = bench(&format!("run-sweep-x{}/{name}", wls.len()), 1, 8, || {
+        // Candidate count for the throughput figure (one unmeasured
+        // sweep; the sweep itself is deterministic).
+        let candidates: usize = {
             let runner = TaskRunner::new(&model, &cluster, space.clone(), wls[0].clone());
-            black_box(runner.run_sweep(&db, &wls));
-        });
+            runner.run_sweep(&db, &wls).iter().map(|r| r.configs_priced).sum()
+        };
+
+        let indep = bench_items(
+            &format!("independent-runs-x{}/{name}", wls.len()),
+            1,
+            8,
+            candidates,
+            || {
+                for wl in &wls {
+                    let runner = TaskRunner::new(&model, &cluster, space.clone(), wl.clone());
+                    black_box(runner.run(&db));
+                }
+            },
+        );
+        let swept = bench_items(
+            &format!("run-sweep-x{}/{name}", wls.len()),
+            1,
+            8,
+            candidates,
+            || {
+                let runner = TaskRunner::new(&model, &cluster, space.clone(), wls[0].clone());
+                black_box(runner.run_sweep(&db, &wls));
+            },
+        );
         println!(
             "    -> run_sweep vs {} independent runs: {:.2}x",
             wls.len(),
             indep.median_ms() / swept.median_ms()
+        );
+
+        // Point vs batched oracle pricing over a realistic op list:
+        // every engine shape in the default grid, decomposed at a
+        // prefill and a decode step (placement factors and table
+        // bucketing exercised exactly as the estimators do).
+        let mut ops: Vec<Op> = Vec::new();
+        for eng in space.engine_grid(&model, &cluster, &wls[0]).iter().take(16) {
+            for shape in [StepShape::prefill(1, 2048, 2048), StepShape::decode(32, 2048)] {
+                ops.extend(decompose(&model, &cluster, eng, &shape, 1.0));
+            }
+        }
+        let point = bench_items(&format!("oracle-point-x{}/{name}", ops.len()), 3, 20, ops.len(), || {
+            for op in &ops {
+                black_box(db.op_latency_us(op));
+            }
+        });
+        let batched =
+            bench_items(&format!("oracle-batched-x{}/{name}", ops.len()), 3, 20, ops.len(), || {
+                black_box(db.latency_batch(&ops));
+            });
+        println!(
+            "    -> batched vs point pricing over {} ops: {:.2}x",
+            ops.len(),
+            point.median_ms() / batched.median_ms()
         );
 
         // Memo effectiveness on this space (one sweep, fresh cache).

@@ -13,7 +13,7 @@ use aiconfigurator::models::by_name;
 use aiconfigurator::search::SearchSpace;
 use aiconfigurator::silicon::comm;
 use aiconfigurator::topology::{fabric, placement};
-use aiconfigurator::util::bench::{bench, black_box};
+use aiconfigurator::util::bench::{bench, bench_items, black_box};
 use aiconfigurator::util::json::{self, Json};
 
 fn shape_grid() -> Vec<ParallelSpec> {
@@ -75,14 +75,14 @@ fn main() {
     let legacy = ClusterSpec::new(h100_sxm(), 8, 2);
     let tiered = ClusterSpec::with_fabric(h100_sxm(), 8, 2, fabric::hgx_h100());
     let wl = aiconfigurator::config::WorkloadSpec::new("qwen3-32b", 2048, 256, 2000.0, 20.0);
-    let grid_legacy = bench("engine-grid/legacy-2node", 3, 20, || {
-        black_box(space.engine_grid(&model, &legacy, &wl));
-    });
-    let grid_tiered = bench("engine-grid/hgx-h100-2node", 3, 20, || {
-        black_box(space.engine_grid(&model, &tiered, &wl));
-    });
     let n_legacy = space.engine_grid(&model, &legacy, &wl).len();
     let n_tiered = space.engine_grid(&model, &tiered, &wl).len();
+    let grid_legacy = bench_items("engine-grid/legacy-2node", 3, 20, n_legacy, || {
+        black_box(space.engine_grid(&model, &legacy, &wl));
+    });
+    let grid_tiered = bench_items("engine-grid/hgx-h100-2node", 3, 20, n_tiered, || {
+        black_box(space.engine_grid(&model, &tiered, &wl));
+    });
     println!(
         "    -> grid {} engines (legacy) vs {} engines (tiered, placement axis on)",
         n_legacy, n_tiered
@@ -102,7 +102,17 @@ fn main() {
         .set("grid_legacy_ms_median", json::num(grid_legacy.median_ms()))
         .set("grid_tiered_ms_median", json::num(grid_tiered.median_ms()))
         .set("grid_legacy_engines", json::num(n_legacy as f64))
-        .set("grid_tiered_engines", json::num(n_tiered as f64));
+        .set("grid_tiered_engines", json::num(n_tiered as f64))
+        // Raw-speed figures the perf budgets track: grid candidates
+        // enumerated (flags resolved, placements expanded) per second.
+        .set(
+            "grid_legacy_candidates_per_s",
+            json::num(grid_legacy.throughput_per_s().unwrap_or(0.0)),
+        )
+        .set(
+            "grid_tiered_candidates_per_s",
+            json::num(grid_tiered.throughput_per_s().unwrap_or(0.0)),
+        );
     std::fs::write("../BENCH_topology.json", o.to_string()).expect("write BENCH_topology.json");
     println!("    -> wrote ../BENCH_topology.json");
 }

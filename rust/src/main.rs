@@ -26,7 +26,8 @@ use aiconfigurator::hardware::{gpu_by_name, ClusterSpec};
 use aiconfigurator::models::by_name;
 use aiconfigurator::pareto;
 use aiconfigurator::perfdb::{
-    calibrate, measure, CalibratedDb, CalibrationArtifact, LatencyOracle, PerfDatabase,
+    calibrate, measure, CalibratedDb, CalibrationArtifact, LatencyOracle, MemoOracle,
+    PerfDatabase,
 };
 use aiconfigurator::planner::TrafficModel;
 use aiconfigurator::runtime::{PjrtOracle, PjrtService};
@@ -403,9 +404,17 @@ fn cmd_search(f: &HashMap<String, String>) -> anyhow::Result<()> {
     apply_space_flags(&mut space, f)?;
 
     let runner = TaskRunner::new(&ctx.model, &ctx.cluster, space, wl.clone());
-    let prune = f.contains_key("prune");
+    let opts = aiconfigurator::search::RunOptions { prune: f.contains_key("prune") };
+    // Every oracle tier runs behind a memo: workers price through
+    // thread-local fronts, and the stats line below reports the
+    // ops-priced rate and hit share from the shared store's counters.
+    let run = |oracle: &dyn LatencyOracle| {
+        let memo = MemoOracle::new(oracle);
+        let report = runner.run_cached(&memo, &opts);
+        (report, memo.stats())
+    };
     // Optional PJRT-backed hot path (AOT Pallas kernel via the runtime).
-    let report = if let Some(dir) = f.get("pjrt") {
+    let (report, (memo_hits, memo_misses)) = if let Some(dir) = f.get("pjrt") {
         anyhow::ensure!(
             !f.contains_key("calibration"),
             "--calibration is not supported with --pjrt: the AOT kernel interpolates the \
@@ -419,11 +428,7 @@ fn cmd_search(f: &HashMap<String, String>) -> anyhow::Result<()> {
         eprintln!("loading AOT artifacts from {dir} (PJRT interp on the hot path)...");
         let svc = PjrtService::start(std::path::Path::new(dir), db.grids().to_vec())?;
         let oracle = PjrtOracle { svc: &svc, db: &db };
-        if prune {
-            runner.run_pruned(&oracle)
-        } else {
-            runner.run(&oracle)
-        }
+        run(&oracle)
     } else if let Some(path) = f.get("calibration") {
         anyhow::ensure!(
             !ctx.cluster.fabric.placement_aware(),
@@ -431,15 +436,9 @@ fn cmd_search(f: &HashMap<String, String>) -> anyhow::Result<()> {
              against legacy-fabric grids (drop one of the two flags)"
         );
         let cal = load_calibrated(path, db)?;
-        if prune {
-            runner.run_pruned(&cal)
-        } else {
-            runner.run(&cal)
-        }
-    } else if prune {
-        runner.run_pruned(&db as &dyn LatencyOracle)
+        run(&cal)
     } else {
-        runner.run(&db as &dyn LatencyOracle)
+        run(&db)
     };
 
     let analysis = pareto::analyze(&report.evaluated, &wl.sla);
@@ -455,6 +454,15 @@ fn cmd_search(f: &HashMap<String, String>) -> anyhow::Result<()> {
         report.elapsed_s,
         report.median_config_ms,
         analysis.feasible.len()
+    );
+    let ops = memo_hits + memo_misses;
+    println!(
+        "oracle: {} ops priced ({:.0} ops/s), memo hit rate {:.1}% ({} hits, {} misses)",
+        ops,
+        ops as f64 / report.elapsed_s.max(1e-9),
+        100.0 * memo_hits as f64 / (ops.max(1)) as f64,
+        memo_hits,
+        memo_misses
     );
     let top = flag_u32(f, "top", 5)? as usize;
     println!(
@@ -533,16 +541,23 @@ fn cmd_sweep(f: &HashMap<String, String>) -> anyhow::Result<()> {
     let opts = aiconfigurator::search::RunOptions { prune: f.contains_key("prune") };
 
     let t0 = std::time::Instant::now();
-    let reports = if let Some(path) = f.get("calibration") {
+    // Branch-scoped memo (calibration consumes the database): the whole
+    // sweep shares one store, priced through per-worker memo fronts.
+    let run = |oracle: &dyn LatencyOracle| {
+        let memo = MemoOracle::new(oracle);
+        let reports = runner.run_sweep_cached(&memo, &scenarios, &opts);
+        (reports, memo.stats())
+    };
+    let (reports, (memo_hits, memo_misses)) = if let Some(path) = f.get("calibration") {
         anyhow::ensure!(
             !ctx.cluster.fabric.placement_aware(),
             "--calibration is not supported with a tiered --fabric: artifacts are fitted \
              against legacy-fabric grids (drop one of the two flags)"
         );
         let cal = load_calibrated(path, db)?;
-        runner.run_sweep_with(&cal, &scenarios, &opts)
+        run(&cal)
     } else {
-        runner.run_sweep_with(&db as &dyn LatencyOracle, &scenarios, &opts)
+        run(&db)
     };
     let total_s = t0.elapsed().as_secs_f64();
 
@@ -581,6 +596,15 @@ fn cmd_sweep(f: &HashMap<String, String>) -> anyhow::Result<()> {
         "swept {} scenarios in {:.2}s (shared engine grid + memoized oracle)",
         scenarios.len(),
         total_s
+    );
+    let ops = memo_hits + memo_misses;
+    println!(
+        "oracle: {} ops priced ({:.0} ops/s), memo hit rate {:.1}% ({} hits, {} misses)",
+        ops,
+        ops as f64 / total_s.max(1e-9),
+        100.0 * memo_hits as f64 / (ops.max(1)) as f64,
+        memo_hits,
+        memo_misses
     );
     Ok(())
 }

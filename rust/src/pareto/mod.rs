@@ -231,6 +231,27 @@ impl FrontierAccumulator {
     pub fn rejected(&self) -> usize {
         self.rejected
     }
+
+    /// The live 2-objective frontier, in offer-survival order. Used by
+    /// the search runner to merge per-worker accumulators and to replay
+    /// a deterministic strict-dominance filter over the full sweep.
+    pub fn points(&self) -> &[(f64, f64)] {
+        &self.pts2
+    }
+
+    /// Is (speed, thru) *strictly* dominated by a live frontier member
+    /// (≥ on both objectives, > on at least one)? Unlike [`offer`],
+    /// this treats exact duplicates as NOT dominated, so the answer is
+    /// independent of which of two equal candidates was offered first —
+    /// the property the parallel sweep needs for scheduling-independent
+    /// pruning.
+    ///
+    /// [`offer`]: FrontierAccumulator::offer
+    pub fn dominated(&self, speed: f64, thru: f64) -> bool {
+        self.pts2
+            .iter()
+            .any(|&(s, t)| (s >= speed && t >= thru) && (s > speed || t > thru))
+    }
 }
 
 #[cfg(test)]
@@ -398,6 +419,46 @@ mod tests {
                 ids.iter().map(|&i| (ps[i].speed, ps[i].thru_per_gpu)).collect()
             };
             assert_eq!(vals(&sub, &kept_pts), vals(&batch, &pts));
+        }
+    }
+
+    /// `dominated` is the strict filter the parallel sweep replays after
+    /// merging per-worker accumulators: duplicates of a live member are
+    /// NOT dominated (both survive), while anything a member strictly
+    /// beats is.
+    #[test]
+    fn strict_dominated_check_and_points_view() {
+        let mut acc = FrontierAccumulator::new();
+        acc.offer(10.0, 100.0);
+        acc.offer(20.0, 50.0);
+        assert_eq!(acc.points(), &[(10.0, 100.0), (20.0, 50.0)]);
+        // Strictly inside the frontier.
+        assert!(acc.dominated(9.0, 100.0));
+        assert!(acc.dominated(10.0, 99.0));
+        assert!(acc.dominated(5.0, 40.0));
+        // Exact duplicate of a member: offer() would reject it, but the
+        // strict check keeps it — scheduling independence.
+        assert!(!acc.dominated(10.0, 100.0));
+        assert!(!acc.dominated(20.0, 50.0));
+        // Trade-offs and out-of-envelope points survive.
+        assert!(!acc.dominated(15.0, 80.0));
+        assert!(!acc.dominated(25.0, 1.0));
+
+        // Consistency with the batch reference on a random coarse grid:
+        // strictly dominated ⇔ some *other* point dominates it.
+        let mut rng = Rng::new(0xD0D0);
+        let pts: Vec<(f64, f64)> = (0..60)
+            .map(|_| ((rng.f64() * 6.0).round() * 5.0, (rng.f64() * 6.0).round() * 11.0))
+            .collect();
+        let mut acc = FrontierAccumulator::new();
+        for &(s, t) in &pts {
+            acc.offer(s, t);
+        }
+        for &(s, t) in &pts {
+            let brute = pts
+                .iter()
+                .any(|&(a, b)| (a >= s && b >= t) && (a > s || b > t));
+            assert_eq!(acc.dominated(s, t), brute, "point ({s}, {t})");
         }
     }
 

@@ -10,6 +10,11 @@
 //!
 //! The map is sharded to keep lock contention negligible under the
 //! worker pool, and hit/miss counters are exposed for the sweep bench.
+//! For sweeps the runner goes one step further: each pool worker owns a
+//! [`LocalMemo`] L1 ([`MemoOracle::local`]) that buffers every write
+//! thread-locally and folds into the shared store once at join, so the
+//! sharded mutexes see no write traffic at all while candidates are
+//! being priced.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -131,6 +136,32 @@ impl MemoStore {
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
+
+    /// Read-only lookup (no counter side effects — callers account
+    /// hits/misses themselves).
+    fn get(&self, key: &OpKey) -> Option<f64> {
+        self.shards[shard_of(key)].lock().unwrap().get(key).copied()
+    }
+
+    /// Bulk-merge a worker-local map, taking each shard lock once.
+    /// `or_insert` keeps the first value on collisions — every oracle
+    /// sharing a store is deterministic per op, so colliding values are
+    /// identical anyway.
+    fn absorb(&self, map: HashMap<OpKey, f64>) {
+        let mut buckets: [Vec<(OpKey, f64)>; SHARDS] = std::array::from_fn(|_| Vec::new());
+        for (k, v) in map {
+            buckets[shard_of(&k)].push((k, v));
+        }
+        for (i, bucket) in buckets.into_iter().enumerate() {
+            if bucket.is_empty() {
+                continue;
+            }
+            let mut shard = self.shards[i].lock().unwrap();
+            for (k, v) in bucket {
+                shard.entry(k).or_insert(v);
+            }
+        }
+    }
 }
 
 /// Owned-or-borrowed store, so the plain `MemoOracle::new` path keeps
@@ -184,6 +215,18 @@ impl<'a> MemoOracle<'a> {
     pub fn is_empty(&self) -> bool {
         self.store().is_empty()
     }
+
+    /// A worker-private L1 over this memo: lookups hit a thread-owned
+    /// map first, then fall back to one shared-store read, and misses
+    /// are computed against the *inner* oracle and recorded locally
+    /// only. The shared shards therefore see **zero write-lock traffic
+    /// while a sweep runs**; each worker's map is folded back in one
+    /// bulk [`LocalMemo::merge`] at join. Hit/miss counters still land
+    /// on the shared store (atomics), so `stats()`/`hit_rate()` keep
+    /// their meaning.
+    pub fn local(&self) -> LocalMemo<'_> {
+        LocalMemo { store: self.store(), inner: self.inner, local: Mutex::new(HashMap::new()) }
+    }
 }
 
 impl LatencyOracle for MemoOracle<'_> {
@@ -206,11 +249,11 @@ impl LatencyOracle for MemoOracle<'_> {
 
     /// Answer hits from the memo and forward only the misses to the
     /// inner oracle **in one batched call**, so backends with per-call
-    /// overhead (the PJRT-executed kernel overrides `op_latencies_us`
-    /// with a single padded execution) keep their batching even when
-    /// wrapped. For loop-based inner oracles this produces the same
-    /// values in the same per-op order as the default implementation.
-    fn op_latencies_us(&self, ops: &[Op]) -> Vec<f64> {
+    /// overhead (the slab-walking database, the PJRT-executed kernel's
+    /// single padded execution) keep their batching even when wrapped.
+    /// For loop-based inner oracles this produces the same values in
+    /// the same per-op order as the default implementation.
+    fn latency_batch(&self, ops: &[Op]) -> Vec<f64> {
         let st = self.store();
         let mut out = vec![0.0f64; ops.len()];
         let mut miss_idx: Vec<usize> = Vec::new();
@@ -227,7 +270,7 @@ impl LatencyOracle for MemoOracle<'_> {
             }
         }
         if !miss_ops.is_empty() {
-            let vals = self.inner.op_latencies_us(&miss_ops);
+            let vals = self.inner.latency_batch(&miss_ops);
             st.misses.fetch_add(miss_ops.len() as u64, Ordering::Relaxed);
             for ((&i, op), &v) in miss_idx.iter().zip(&miss_ops).zip(&vals) {
                 out[i] = v;
@@ -238,19 +281,95 @@ impl LatencyOracle for MemoOracle<'_> {
         out
     }
 
-    /// Route the whole-step sum through the batched path above (the
-    /// default would loop `op_latency_us` and defeat inner batching).
-    fn step_latency_us(&self, ops: &[Op]) -> f64 {
-        self.op_latencies_us(ops)
-            .iter()
-            .zip(ops)
-            .map(|(l, o)| l * o.count() as f64)
-            .sum()
-    }
-
     /// Forward provenance accounting to the wrapped oracle. Memo hits
     /// never reach it, so under a memo the tier counts are
     /// unique-shape counts, not raw query counts.
+    fn provenance_counts(&self) -> Option<super::TierSnapshot> {
+        self.inner.provenance_counts()
+    }
+}
+
+/// Worker-private memo layer over a shared [`MemoStore`] — the
+/// contention-free sweep path (see [`MemoOracle::local`]). One
+/// `LocalMemo` is owned per pool worker; the trait's `Sync` bound
+/// forces interior mutability, but the `Mutex` below is only ever taken
+/// by its owning thread, so it stays uncontended (a cheap fast-path
+/// lock) for the whole run.
+pub struct LocalMemo<'a> {
+    store: &'a MemoStore,
+    inner: &'a dyn LatencyOracle,
+    local: Mutex<HashMap<OpKey, f64>>,
+}
+
+impl LocalMemo<'_> {
+    /// Fold this worker's map into the shared store (bulk, one lock per
+    /// shard). Called at pool join, in worker-id order, so the shared
+    /// store's post-run contents are deterministic.
+    pub fn merge(self) {
+        let map = self.local.into_inner().unwrap();
+        if !map.is_empty() {
+            self.store.absorb(map);
+        }
+    }
+
+    fn lookup(&self, key: &OpKey) -> Option<f64> {
+        if let Some(&v) = self.local.lock().unwrap().get(key) {
+            self.store.hits.fetch_add(1, Ordering::Relaxed);
+            return Some(v);
+        }
+        // One shared read (no write-lock): warm stores from earlier
+        // sweeps still answer, and the value is copied down so repeats
+        // stay thread-local.
+        if let Some(v) = self.store.get(key) {
+            self.store.hits.fetch_add(1, Ordering::Relaxed);
+            self.local.lock().unwrap().insert(*key, v);
+            return Some(v);
+        }
+        None
+    }
+}
+
+impl LatencyOracle for LocalMemo<'_> {
+    fn op_latency_us(&self, op: &Op) -> f64 {
+        let key = key_of(op);
+        if let Some(v) = self.lookup(&key) {
+            return v;
+        }
+        let v = self.inner.op_latency_us(op);
+        self.store.misses.fetch_add(1, Ordering::Relaxed);
+        self.local.lock().unwrap().insert(key, v);
+        v
+    }
+
+    /// Hit-scan first (local, then one shared read per op), then one
+    /// inner batch for the misses — same shape as the shared wrapper's
+    /// batched path, minus all shared write locks.
+    fn latency_batch(&self, ops: &[Op]) -> Vec<f64> {
+        let mut out = vec![0.0f64; ops.len()];
+        let mut miss_idx: Vec<usize> = Vec::new();
+        let mut miss_ops: Vec<Op> = Vec::new();
+        for (i, op) in ops.iter().enumerate() {
+            let key = key_of(op);
+            match self.lookup(&key) {
+                Some(v) => out[i] = v,
+                None => {
+                    miss_idx.push(i);
+                    miss_ops.push(*op);
+                }
+            }
+        }
+        if !miss_ops.is_empty() {
+            let vals = self.inner.latency_batch(&miss_ops);
+            self.store.misses.fetch_add(miss_ops.len() as u64, Ordering::Relaxed);
+            let mut local = self.local.lock().unwrap();
+            for ((&i, op), &v) in miss_idx.iter().zip(&miss_ops).zip(&vals) {
+                out[i] = v;
+                local.insert(key_of(op), v);
+            }
+        }
+        out
+    }
+
     fn provenance_counts(&self) -> Option<super::TierSnapshot> {
         self.inner.provenance_counts()
     }
@@ -344,6 +463,46 @@ mod tests {
             }
         });
         assert_eq!(memo.len(), 1);
+    }
+
+    #[test]
+    fn local_memo_matches_inner_and_merges_at_join() {
+        let s = sil();
+        let memo = MemoOracle::new(&s);
+        let ops = [
+            Op::Gemm { m: 128, n: 4096, k: 4096, dtype: Dtype::Fp8, count: 3 },
+            Op::AllReduce { bytes: 1e7, gpus: 8, span: 1, rails: 1, count: 1 },
+            Op::Elementwise { bytes: 1e6, count: 5 },
+        ];
+        {
+            let local = memo.local();
+            for op in &ops {
+                let truth = LatencyOracle::op_latency_us(&s, op);
+                assert_eq!(local.op_latency_us(op), truth); // miss → inner
+                assert_eq!(local.op_latency_us(op), truth); // local hit
+            }
+            let batch = local.latency_batch(&ops);
+            for (v, op) in batch.iter().zip(&ops) {
+                assert_eq!(v.to_bits(), LatencyOracle::op_latency_us(&s, op).to_bits());
+            }
+            // Nothing reached the shared shards yet — all writes local.
+            assert_eq!(memo.len(), 0);
+            local.merge();
+        }
+        // After merge the shared store holds every distinct shape, and
+        // a fresh worker answers from it via the shared-read fallback.
+        assert_eq!(memo.len(), ops.len());
+        let (h0, _) = memo.stats();
+        let local2 = memo.local();
+        for op in &ops {
+            assert_eq!(
+                local2.op_latency_us(op),
+                LatencyOracle::op_latency_us(&s, op)
+            );
+        }
+        let (h1, m1) = memo.stats();
+        assert_eq!(h1 - h0, ops.len() as u64, "warm shared store must answer reads");
+        assert_eq!(m1, ops.len() as u64, "no recomputation after merge");
     }
 
     #[test]

@@ -816,9 +816,9 @@ impl LatencyOracle for CalibratedDb {
                 // Measured and calibrated comm entries hold the packed
                 // layout; placed collectives scale by the analytic
                 // placement factor exactly as the uncalibrated
-                // database does (1.0 on legacy fabrics).
-                let place =
-                    crate::topology::collective::placement_factor(&self.base.cluster, op);
+                // database does (1.0 on legacy fabrics) — served from
+                // the base database's precomputed path table.
+                let place = self.base.place_factor(op);
                 let t = q.table as usize;
                 let ((cx, cy, cz), dist) = nearest_cell(q.fx, q.fy, q.fz);
                 if dist <= MEASURED_SNAP {
@@ -840,6 +840,52 @@ impl LatencyOracle for CalibratedDb {
                 sol::latency_us(&self.base.cluster, op)
             }
         }
+    }
+
+    /// Slab-batched three-tier lookup. Queries are bucketed by table
+    /// so each bucket slices the calibrated grid once; the measured
+    /// snap check, tier attribution and placement scaling per query are
+    /// identical to the per-op path (total counter increments match —
+    /// pinned bit-for-bit in `tests/hotpath.rs`).
+    fn latency_batch(&self, ops: &[Op]) -> Vec<f64> {
+        let mut out = vec![0.0; ops.len()];
+        let mut buckets: Vec<Vec<(usize, super::tables::Query)>> = vec![Vec::new(); NUM_TABLES];
+        for (i, op) in ops.iter().enumerate() {
+            match query_for(op) {
+                Some(q) => buckets[q.table as usize].push((i, q)),
+                None => {
+                    self.tiers.sol.fetch_add(1, Ordering::Relaxed);
+                    out[i] = sol::latency_us(&self.base.cluster, op);
+                }
+            }
+        }
+        const SLAB: usize = NX * NY * NZ;
+        for (t, bucket) in buckets.iter().enumerate() {
+            if bucket.is_empty() {
+                continue;
+            }
+            let slab = &self.cal_grids[t * SLAB..(t + 1) * SLAB];
+            for &(i, q) in bucket {
+                let place = self.base.place_factor(&ops[i]);
+                let ((cx, cy, cz), dist) = nearest_cell(q.fx, q.fy, q.fz);
+                if dist <= MEASURED_SNAP {
+                    if let Some(&us) = self.measured.get(&flat(t, cx, cy, cz)) {
+                        self.tiers.measured.fetch_add(1, Ordering::Relaxed);
+                        out[i] = us * q.scale * place;
+                        continue;
+                    }
+                }
+                out[i] = crate::perfdb::query::trilinear_in_slab(slab, q.fx, q.fy, q.fz)
+                    * q.scale
+                    * place;
+                if self.has_fit[t] {
+                    self.tiers.calibrated.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    self.tiers.analytic.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+        out
     }
 
     fn provenance_counts(&self) -> Option<TierSnapshot> {

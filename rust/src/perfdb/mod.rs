@@ -27,7 +27,7 @@ pub mod query;
 pub mod sol;
 pub mod tables;
 
-pub use cache::{MemoOracle, MemoStore};
+pub use cache::{LocalMemo, MemoOracle, MemoStore};
 pub use calibrate::{CalibratedDb, CalibrationArtifact, TierSnapshot};
 
 use crate::frameworks::FrameworkProfile;
@@ -45,17 +45,30 @@ pub trait LatencyOracle: Sync {
     /// Latency of one op *instance*, microseconds.
     fn op_latency_us(&self, op: &Op) -> f64;
 
-    /// Per-instance latency of many ops at once. Backends with per-call
-    /// overhead (the PJRT-executed kernel) override this with a single
-    /// batched execution; the default just loops.
-    fn op_latencies_us(&self, ops: &[Op]) -> Vec<f64> {
+    /// Per-instance latency of many ops at once — the hot-path entry
+    /// point: the simulators price each decomposed step as one batch.
+    /// Backends with per-query setup cost override this — the database
+    /// groups queries by table and walks each packed grid slab once
+    /// ([`PerfDatabase`], [`CalibratedDb`]), the PJRT-executed kernel
+    /// issues a single device call, the memo layer scans hits first and
+    /// forwards one inner batch of misses. The default just loops.
+    /// Bit-for-bit contract: `latency_batch(ops)[i]` ==
+    /// `op_latency_us(&ops[i])` for every implementation (pinned in
+    /// `tests/hotpath.rs`).
+    fn latency_batch(&self, ops: &[Op]) -> Vec<f64> {
         ops.iter().map(|o| self.op_latency_us(o)).collect()
     }
 
     /// Total latency of an op list (each op × its count), microseconds.
+    /// Routed through [`Self::latency_batch`] so every caller of the
+    /// step aggregate inherits the batched fast path; the summation
+    /// order (index order) is unchanged, so the result is bit-identical
+    /// to the old per-op loop.
     fn step_latency_us(&self, ops: &[Op]) -> f64 {
-        ops.iter()
-            .map(|o| self.op_latency_us(o) * o.count() as f64)
+        self.latency_batch(ops)
+            .iter()
+            .zip(ops)
+            .map(|(lat, o)| lat * o.count() as f64)
             .sum()
     }
 
@@ -73,6 +86,10 @@ pub trait LatencyOracle: Sync {
 impl LatencyOracle for Silicon {
     fn op_latency_us(&self, op: &Op) -> f64 {
         Silicon::op_latency_us(self, op)
+    }
+
+    fn latency_batch(&self, ops: &[Op]) -> Vec<f64> {
+        Silicon::latency_batch(self, ops)
     }
 }
 
@@ -99,12 +116,26 @@ pub struct PerfDatabase {
     /// (paper: ~30 GPU-hours per platform-framework pair) — used by the
     /// Table 1 "GPU benchmarking" comparison.
     pub profile_cost_hours: f64,
+    /// Precomputed placed/packed link-path pairs — placed collectives
+    /// are factored off the packed baseline with two table lookups
+    /// instead of rebuilding both paths per query. `Arc` keeps the
+    /// database cheap to clone (the table is immutable and shared).
+    place: std::sync::Arc<crate::topology::collective::PlacementTable>,
 }
 
 impl PerfDatabase {
     pub fn new(ctx: DbContext, grids: Vec<f32>, cluster: ClusterSpec, cost_h: f64) -> Self {
         assert_eq!(grids.len(), GRID_LEN, "grid shape contract violation");
-        PerfDatabase { ctx, grids, cluster, profile_cost_hours: cost_h }
+        let place =
+            std::sync::Arc::new(crate::topology::collective::PlacementTable::build(&cluster));
+        PerfDatabase { ctx, grids, cluster, profile_cost_hours: cost_h, place }
+    }
+
+    /// Placement factor of an op, served from the precomputed path
+    /// table (bit-identical to
+    /// [`crate::topology::collective::placement_factor`]).
+    pub(crate) fn place_factor(&self, op: &Op) -> f64 {
+        self.place.factor(&self.cluster, op)
     }
 
     /// Convenience: profile a fresh database for a context.
@@ -190,13 +221,38 @@ impl LatencyOracle for PerfDatabase {
             // analytic placement factor (1.0 on legacy fabrics and for
             // packed/non-collective ops), so the database prices
             // placements without re-profiling per layout.
-            Some(q) => {
-                self.interp(&q)
-                    * q.scale
-                    * crate::topology::collective::placement_factor(&self.cluster, op)
-            }
+            Some(q) => self.interp(&q) * q.scale * self.place_factor(op),
             None => sol::latency_us(&self.cluster, op),
         }
+    }
+
+    /// Slab-batched interpolation: queries are bucketed by table and
+    /// each bucket walks its `[NX, NY, NZ]` slab through one slice —
+    /// the per-point table-offset arithmetic and bounds re-check of
+    /// [`query::trilinear`] drop out of the inner loop. Unprofiled ops
+    /// take the SoL fallback inline. Bit-identical to the per-op path.
+    fn latency_batch(&self, ops: &[Op]) -> Vec<f64> {
+        let mut out = vec![0.0; ops.len()];
+        let mut buckets: Vec<Vec<(usize, tables::Query)>> = vec![Vec::new(); NUM_TABLES];
+        for (i, op) in ops.iter().enumerate() {
+            match query_for(op) {
+                Some(q) => buckets[q.table as usize].push((i, q)),
+                None => out[i] = sol::latency_us(&self.cluster, op),
+            }
+        }
+        const SLAB: usize = NX * NY * NZ;
+        for (t, bucket) in buckets.iter().enumerate() {
+            if bucket.is_empty() {
+                continue;
+            }
+            let slab = &self.grids[t * SLAB..(t + 1) * SLAB];
+            for &(i, q) in bucket {
+                out[i] = query::trilinear_in_slab(slab, q.fx, q.fy, q.fz)
+                    * q.scale
+                    * self.place_factor(&ops[i]);
+            }
+        }
+        out
     }
 }
 

@@ -11,6 +11,18 @@ use super::tables::{NX, NY, NZ};
 /// here for safety).
 #[inline]
 pub fn trilinear(grids: &[f32], table: usize, fx: f64, fy: f64, fz: f64) -> f64 {
+    let base = table * NX * NY * NZ;
+    trilinear_in_slab(&grids[base..base + NX * NY * NZ], fx, fy, fz)
+}
+
+/// Trilinear interpolation inside one table's `[NX, NY, NZ]` slab. The
+/// batched oracle path ([`crate::perfdb::LatencyOracle::latency_batch`])
+/// groups queries by table and slices the packed grid once per slab, so
+/// every lookup in the group reuses the same base pointer instead of
+/// re-deriving a table offset per point. Bit-identical to [`trilinear`]
+/// (which delegates here).
+#[inline]
+pub fn trilinear_in_slab(slab: &[f32], fx: f64, fy: f64, fz: f64) -> f64 {
     let x = fx.clamp(0.0, (NX - 1) as f64);
     let y = fy.clamp(0.0, (NY - 1) as f64);
     let z = fz.clamp(0.0, (NZ - 1) as f64);
@@ -26,10 +38,7 @@ pub fn trilinear(grids: &[f32], table: usize, fx: f64, fy: f64, fz: f64) -> f64 
     let yd = y - y0 as f64;
     let zd = z - z0 as f64;
 
-    let base = table * NX * NY * NZ;
-    let g = |ix: usize, iy: usize, iz: usize| -> f64 {
-        grids[base + (ix * NY + iy) * NZ + iz] as f64
-    };
+    let g = |ix: usize, iy: usize, iz: usize| -> f64 { slab[(ix * NY + iy) * NZ + iz] as f64 };
 
     let c00 = g(x0, y0, z0) * (1.0 - xd) + g(x1, y0, z0) * xd;
     let c01 = g(x0, y0, z1) * (1.0 - xd) + g(x1, y0, z1) * xd;
@@ -117,6 +126,28 @@ mod tests {
         assert!((d - 0.4).abs() < 1e-9);
         let ((x, _, _), _) = nearest_cell(1e9, 0.0, 0.0);
         assert_eq!(x, NX - 1);
+    }
+
+    #[test]
+    fn slab_view_matches_table_view_bit_for_bit() {
+        let mut g = vec![0f32; GRID_LEN];
+        let mut rng = Rng::new(7);
+        for v in g.iter_mut() {
+            *v = (rng.f64() * 100.0) as f32;
+        }
+        let tables = GRID_LEN / (NX * NY * NZ);
+        for t in 0..tables {
+            let slab = &g[t * NX * NY * NZ..(t + 1) * NX * NY * NZ];
+            for _ in 0..20 {
+                let fx = rng.f64() * NX as f64;
+                let fy = rng.f64() * NY as f64;
+                let fz = rng.f64() * NZ as f64;
+                assert_eq!(
+                    trilinear(&g, t, fx, fy, fz).to_bits(),
+                    trilinear_in_slab(slab, fx, fy, fz).to_bits()
+                );
+            }
+        }
     }
 
     #[test]

@@ -52,7 +52,7 @@ impl<'a> IterCtx<'a> {
     }
 
     /// Latency of MANY iterations in one oracle round-trip: decompose
-    /// every shape, price all ops in a single `op_latencies_us` batch,
+    /// every shape, price all ops in a single `latency_batch` call,
     /// then reassemble per-step sums (+ CUDA-graph and host adjustments).
     /// Collapses Algorithm 1's stride sweep from ~OSL/32 oracle calls to
     /// one — the §Perf L3 fix that makes the PJRT path competitive.
@@ -64,7 +64,7 @@ impl<'a> IterCtx<'a> {
             bounds.push((all_ops.len(), ops.len()));
             all_ops.extend(ops);
         }
-        let lat = self.oracle.op_latencies_us(&all_ops);
+        let lat = self.oracle.latency_batch(&all_ops);
         let fw = self.eng.framework.profile();
         shapes
             .iter()

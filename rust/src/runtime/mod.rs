@@ -398,7 +398,7 @@ impl LatencyOracle for PjrtOracle<'_> {
         }
     }
 
-    fn op_latencies_us(&self, ops: &[Op]) -> Vec<f64> {
+    fn latency_batch(&self, ops: &[Op]) -> Vec<f64> {
         // ONE batched PJRT execution for all profiled ops — the whole
         // point of the AOT kernel (step sweeps collapse to one call).
         let mut tids = Vec::with_capacity(ops.len());
@@ -426,13 +426,6 @@ impl LatencyOracle for PjrtOracle<'_> {
         out
     }
 
-    fn step_latency_us(&self, ops: &[Op]) -> f64 {
-        self.op_latencies_us(ops)
-            .iter()
-            .zip(ops)
-            .map(|(l, o)| l * o.count() as f64)
-            .sum()
-    }
 }
 
 #[cfg(all(test, not(feature = "xla")))]

@@ -12,12 +12,22 @@
 //!
 //! Two further engine features ride on the same plumbing:
 //! * **incremental pruning** ([`RunOptions::prune`]): SLA-infeasible and
-//!   Pareto-dominated candidates are discarded while the sweep runs, via
-//!   [`crate::pareto::FrontierAccumulator`];
+//!   strictly-dominated candidates are discarded while the sweep runs,
+//!   via per-worker [`crate::pareto::FrontierAccumulator`]s merged
+//!   deterministically at join;
 //! * **batch sweeps** ([`TaskRunner::run_sweep`]): many (ISL, OSL, SLA)
 //!   scenarios priced in one pass, sharing the structural engine grid and
 //!   a memoized oracle ([`crate::perfdb::MemoOracle`]).
+//!
+//! The hot path is contention-free by construction: candidates come from
+//! SoA [`CandidateGrid`]s (no per-candidate heap objects), workers grab
+//! dense index slabs from the shared cursor ([`pool::scoped_map_states`]),
+//! each worker prices through a thread-local [`crate::perfdb::LocalMemo`]
+//! (zero shared write-lock traffic) and offers into a private frontier
+//! accumulator; the per-worker states merge in worker-id order at join,
+//! so results are independent of thread interleaving.
 
+use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::config::{Candidate, EngineConfig, RuntimeFlags, ServingMode, WorkloadSpec};
@@ -25,11 +35,11 @@ use crate::frameworks::Framework;
 use crate::hardware::ClusterSpec;
 use crate::models::ModelArch;
 use crate::pareto::FrontierAccumulator;
-use crate::perfdb::{LatencyOracle, MemoOracle, TierSnapshot};
+use crate::perfdb::{LatencyOracle, LocalMemo, MemoOracle, TierSnapshot};
 use crate::perfmodel::{self, disagg, PerfEstimate};
 use crate::util::pool;
 
-use super::space::SearchSpace;
+use super::space::{CandidateGrid, SearchSpace, StructuralPoint};
 
 /// One evaluated candidate.
 #[derive(Clone, Debug)]
@@ -146,18 +156,26 @@ pub struct SearchReport {
 /// Knobs for one search run.
 #[derive(Clone, Debug, Default)]
 pub struct RunOptions {
-    /// Discard SLA-infeasible and Pareto-dominated candidates during the
-    /// sweep (instead of carrying them to the analyzer). The feasible
-    /// frontier and the throughput argmax are preserved exactly; only
-    /// dominated/duplicate interior points are dropped.
+    /// Discard SLA-infeasible and strictly-dominated candidates during
+    /// the sweep (instead of carrying them to the analyzer). The
+    /// feasible frontier and the throughput argmax are preserved
+    /// exactly; every strictly-dominated interior point is dropped, and
+    /// the survivor set is scheduling-independent (exact duplicates of
+    /// a frontier point all survive — strict dominance can't tell them
+    /// apart, so the outcome never depends on evaluation order).
     pub prune: bool,
 }
 
-/// The candidate pools one scenario evaluates.
+/// The candidate pools one scenario evaluates: two SoA grids plus
+/// memory-fitting candidate indices into them. Aggregated and decode
+/// pools share `grid` (and, mode permitting, the same filtered index
+/// list); the prefill pool has its own small-batch grid.
 struct EnginePools {
-    agg: Vec<EngineConfig>,
-    prefill: Vec<EngineConfig>,
-    decode: Vec<EngineConfig>,
+    grid: CandidateGrid,
+    pre_grid: CandidateGrid,
+    agg: Vec<u32>,
+    prefill: Vec<u32>,
+    decode: Vec<u32>,
 }
 
 /// A unit of work in the unified queue.
@@ -167,6 +185,24 @@ enum Job {
     Pre(usize),
     Dec(usize),
 }
+
+/// Per-worker pricing context, built once per worker at spawn and
+/// merged (in worker-id order) at join: a thread-local memo front
+/// (absorbed into the shared [`crate::perfdb::MemoStore`] when the
+/// worker finishes) and a private frontier accumulator (no shared
+/// frontier lock during the sweep). The `Mutex`es are uncontended —
+/// only the owning worker ever locks them; they exist because the
+/// oracle trait and the pool's `Fn` bound hand out `&self`.
+struct WorkerCtx<'m> {
+    memo: Option<LocalMemo<'m>>,
+    acc: Mutex<FrontierAccumulator>,
+}
+
+/// Queue-cursor grab size for candidate pricing: consecutive jobs are
+/// the same kind (the queue is agg… pre… dec…), so a small chunk keeps
+/// load balance across heterogeneous job costs while cutting shared-
+/// cursor cacheline traffic by the chunk factor.
+const PRICE_CHUNK: usize = 4;
 
 /// Result of one job (returned through the worker pool in queue order).
 enum JobOut {
@@ -209,20 +245,53 @@ impl<'a> TaskRunner<'a> {
     fn pools_for(&self, wl: &WorkloadSpec) -> EnginePools {
         let agg_mode = self.space.modes.contains(&ServingMode::Aggregated);
         let disagg_mode = self.space.modes.contains(&ServingMode::Disaggregated);
-        // Aggregated and decode pools are the same memory-filtered list:
-        // enumerate (and flag-resolve) it once, share.
-        let shared = if agg_mode || disagg_mode {
-            self.space.engines(self.model, self.cluster, wl, wl.osl)
+        let structural = if agg_mode || disagg_mode {
+            self.space.structural_grid(self.model, self.cluster)
         } else {
             Vec::new()
         };
-        let agg = if agg_mode { shared.clone() } else { Vec::new() };
-        let (prefill, decode) = if disagg_mode {
-            (self.space.prefill_engines(self.model, self.cluster, wl), shared)
+        let pre_space = self.space.prefill_space();
+        let pre_structural = if disagg_mode {
+            pre_space.structural_grid(self.model, self.cluster)
         } else {
-            (Vec::new(), Vec::new())
+            Vec::new()
         };
-        EnginePools { agg, prefill, decode }
+        self.pools_from(&structural, &pre_space, &pre_structural, wl)
+    }
+
+    /// Expand shared structural grids into one scenario's pools: SoA
+    /// candidate grids (flags resolved against this scenario) plus
+    /// memory-fitting index lists. Aggregated and decode pools are the
+    /// same memory-filtered list — filter once, share the indices.
+    fn pools_from(
+        &self,
+        structural: &[StructuralPoint],
+        pre_space: &SearchSpace,
+        pre_structural: &[StructuralPoint],
+        wl: &WorkloadSpec,
+    ) -> EnginePools {
+        let agg_mode = self.space.modes.contains(&ServingMode::Aggregated);
+        let disagg_mode = self.space.modes.contains(&ServingMode::Disaggregated);
+        let mem = self.cluster.gpu.mem_bytes();
+        let grid = self.space.candidate_grid(structural, self.model, self.cluster, wl);
+        let pre_grid = pre_space.candidate_grid(pre_structural, self.model, self.cluster, wl);
+        let fits = |g: &CandidateGrid, i: usize, osl: u32| {
+            perfmodel::memory::fits(self.model, mem, &g.get(i), wl.isl, osl)
+        };
+        let shared: Vec<u32> =
+            (0..grid.len()).filter(|&i| fits(&grid, i, wl.osl)).map(|i| i as u32).collect();
+        let prefill: Vec<u32> = if disagg_mode {
+            (0..pre_grid.len()).filter(|&i| fits(&pre_grid, i, 1)).map(|i| i as u32).collect()
+        } else {
+            Vec::new()
+        };
+        EnginePools {
+            agg: if agg_mode { shared.clone() } else { Vec::new() },
+            decode: if disagg_mode { shared } else { Vec::new() },
+            prefill,
+            grid,
+            pre_grid,
+        }
     }
 
     /// Evaluate the full space. The oracle is typically a
@@ -242,7 +311,19 @@ impl<'a> TaskRunner<'a> {
     pub fn run_with(&self, oracle: &dyn LatencyOracle, opts: &RunOptions) -> SearchReport {
         let wl = self.workload.clone();
         let pools = self.pools_for(&wl);
-        self.run_inner(oracle, &wl, &pools, opts)
+        self.run_inner(oracle, None, &wl, &pools, opts)
+    }
+
+    /// Single-workload run against a **caller-owned** memo (the CLI's
+    /// search path): every worker prices through a thread-local
+    /// [`LocalMemo`] front on the shared store, so repeated searches
+    /// against the same memo skip straight to cache hits. Latencies —
+    /// and hence reports — are bit-identical to [`Self::run_with`] on
+    /// the memo's inner oracle (pinned in `tests/hotpath.rs`).
+    pub fn run_cached(&self, memo: &MemoOracle<'_>, opts: &RunOptions) -> SearchReport {
+        let wl = self.workload.clone();
+        let pools = self.pools_for(&wl);
+        self.run_inner(memo, Some(memo), &wl, &pools, opts)
     }
 
     /// Price many workload scenarios in one pass, sharing the structural
@@ -301,37 +382,33 @@ impl<'a> TaskRunner<'a> {
         } else {
             Vec::new()
         };
-        let mem = self.cluster.gpu.mem_bytes();
         scenarios
             .iter()
             .map(|wl| {
-                let fits = |e: &EngineConfig, osl: u32| {
-                    perfmodel::memory::fits(self.model, mem, e, wl.isl, osl)
-                };
-                // Aggregated and decode pools are the same memory-filtered
-                // list (as in pools_for); filter once, share.
-                let grid = self.space.expand_flags(&structural, self.model, self.cluster, wl);
-                let filtered: Vec<EngineConfig> =
-                    grid.iter().filter(|e| fits(e, wl.osl)).copied().collect();
-                let pre_grid =
-                    pre_space.expand_flags(&pre_structural, self.model, self.cluster, wl);
-                let pools = EnginePools {
-                    agg: if agg_mode { filtered.clone() } else { Vec::new() },
-                    prefill: pre_grid.iter().filter(|e| fits(e, 1)).copied().collect::<Vec<_>>(),
-                    decode: if disagg_mode { filtered } else { Vec::new() },
-                };
-                self.run_inner(memo, wl, &pools, opts)
+                let pools = self.pools_from(&structural, &pre_space, &pre_structural, wl);
+                self.run_inner(memo, Some(memo), wl, &pools, opts)
             })
             .collect()
     }
 
     /// The engine core: one unified job queue over all candidate kinds,
-    /// drained by the shared worker pool, then deterministic assembly
+    /// drained in dense chunks by the shared worker pool (each worker
+    /// carrying a [`WorkerCtx`]), then deterministic merge-and-assembly
     /// (aggregated candidates in engine order, disaggregated composites
     /// in rate-match order — the same order the seed produced).
+    ///
+    /// When `memo` is set, workers price through thread-local
+    /// [`LocalMemo`] fronts absorbed into the shared store at join;
+    /// `oracle` is then the memo itself (provenance forwards to its
+    /// inner oracle). Pruning offers into per-worker accumulators and
+    /// replays a **strict**-dominance filter over the merged frontier
+    /// in input order, so the survivor set — "feasible and not strictly
+    /// dominated by any feasible candidate" — does not depend on which
+    /// worker priced what.
     fn run_inner(
         &self,
         oracle: &dyn LatencyOracle,
+        memo: Option<&MemoOracle<'_>>,
         wl: &WorkloadSpec,
         pools: &EnginePools,
         opts: &RunOptions,
@@ -346,46 +423,80 @@ impl<'a> TaskRunner<'a> {
         let configs_priced = jobs.len();
 
         let total_gpus = self.cluster.total_gpus();
-        let outcomes: Vec<(JobOut, f64)> = pool::scoped_map(&jobs, self.threads, |_, job| {
-            let t = Instant::now();
-            let out = match *job {
-                Job::Agg(i) => {
-                    let eng = &pools.agg[i];
-                    let replicas = (total_gpus / eng.parallel.gpus()).max(1);
-                    let cand = Candidate::Aggregated { engine: *eng, replicas };
-                    let est = perfmodel::estimate(oracle, self.model, self.cluster, &cand, wl);
-                    JobOut::Agg(Evaluated { cand, est })
-                }
-                Job::Pre(i) => JobOut::Pre(disagg::price_prefill(
-                    oracle,
-                    self.model,
-                    self.cluster,
-                    &pools.prefill[i],
-                    wl,
-                )),
-                Job::Dec(i) => JobOut::Dec(disagg::price_decode(
-                    oracle,
-                    self.model,
-                    self.cluster,
-                    &pools.decode[i],
-                    wl,
-                )),
-            };
-            (out, t.elapsed().as_secs_f64() * 1e3)
-        });
+        let (outcomes, states): (Vec<(JobOut, f64)>, Vec<WorkerCtx<'_>>) =
+            pool::scoped_map_states(
+                &jobs,
+                self.threads,
+                PRICE_CHUNK,
+                |_wid| WorkerCtx {
+                    memo: memo.map(|m| m.local()),
+                    acc: Mutex::new(FrontierAccumulator::new()),
+                },
+                |ctx, _idx, job| {
+                    let o: &dyn LatencyOracle = match &ctx.memo {
+                        Some(lm) => lm,
+                        None => oracle,
+                    };
+                    let t = Instant::now();
+                    let out = match *job {
+                        Job::Agg(i) => {
+                            let eng = pools.grid.get(pools.agg[i] as usize);
+                            let replicas = (total_gpus / eng.parallel.gpus()).max(1);
+                            let cand = Candidate::Aggregated { engine: eng, replicas };
+                            let est =
+                                perfmodel::estimate(o, self.model, self.cluster, &cand, wl);
+                            if opts.prune && est.meets(&wl.sla) {
+                                ctx.acc.lock().unwrap().offer_est(&est);
+                            }
+                            JobOut::Agg(Evaluated { cand, est })
+                        }
+                        Job::Pre(i) => JobOut::Pre(disagg::price_prefill(
+                            o,
+                            self.model,
+                            self.cluster,
+                            &pools.pre_grid.get(pools.prefill[i] as usize),
+                            wl,
+                        )),
+                        Job::Dec(i) => JobOut::Dec(disagg::price_decode(
+                            o,
+                            self.model,
+                            self.cluster,
+                            &pools.grid.get(pools.decode[i] as usize),
+                            wl,
+                        )),
+                    };
+                    (out, t.elapsed().as_secs_f64() * 1e3)
+                },
+            );
+
+        // ---- Deterministic join: absorb memo fronts, merge frontiers ----
+        // Worker-id order (what `scoped_map_states` guarantees) makes the
+        // merged accumulator reproducible; the strict-dominance replay
+        // below makes the survivor set scheduling-independent on top.
+        let mut merged = FrontierAccumulator::new();
+        for st in states {
+            if let Some(lm) = st.memo {
+                lm.merge();
+            }
+            for &(s, t) in st.acc.into_inner().unwrap().points() {
+                merged.offer(s, t);
+            }
+        }
 
         // ---- Deterministic assembly (queue order == input order). ------
         let mut evaluated: Vec<Evaluated> = Vec::new();
         let mut per_config_ms: Vec<f64> = Vec::with_capacity(outcomes.len());
         let mut p_prices: Vec<disagg::PoolPrice> = Vec::with_capacity(pools.prefill.len());
         let mut d_prices: Vec<disagg::PoolPrice> = Vec::with_capacity(pools.decode.len());
-        let mut acc = FrontierAccumulator::new();
         let mut pruned = 0usize;
         for (out, ms) in outcomes {
             per_config_ms.push(ms);
             match out {
                 JobOut::Agg(ev) => {
-                    if opts.prune && (!ev.est.meets(&wl.sla) || !acc.offer_est(&ev.est)) {
+                    if opts.prune
+                        && (!ev.est.meets(&wl.sla)
+                            || merged.dominated(ev.est.speed, ev.est.thru_per_gpu))
+                    {
                         pruned += 1;
                     } else {
                         evaluated.push(ev);
@@ -398,6 +509,14 @@ impl<'a> TaskRunner<'a> {
 
         if self.space.modes.contains(&ServingMode::Disaggregated) {
             let res = if opts.prune {
+                // Seed the disagg prune with a FRESH accumulator built
+                // from the aggregated survivors in input order — a
+                // deterministic function of the survivor set, not of
+                // worker interleaving.
+                let mut acc = FrontierAccumulator::new();
+                for ev in &evaluated {
+                    acc.offer_est(&ev.est);
+                }
                 let rejected_before = acc.rejected();
                 let full = disagg::rate_match_pruned(
                     self.cluster,
@@ -427,8 +546,8 @@ impl<'a> TaskRunner<'a> {
             for (x, y, pi, di, est) in res.evaluated {
                 evaluated.push(Evaluated {
                     cand: Candidate::Disaggregated {
-                        prefill: pools.prefill[pi],
-                        decode: pools.decode[di],
+                        prefill: pools.pre_grid.get(pools.prefill[pi] as usize),
+                        decode: pools.grid.get(pools.decode[di] as usize),
                         x,
                         y,
                     },
@@ -692,6 +811,62 @@ mod tests {
                 assert_eq!(x.cand, y.cand);
                 assert_eq!(x.est, y.est);
             }
+        }
+    }
+
+    /// `run_cached` (thread-local memo fronts over a shared store) is
+    /// bit-identical to a plain run on the memo's inner oracle, and the
+    /// warm second run hits the store.
+    #[test]
+    fn cached_run_matches_plain_run() {
+        let model = by_name("llama3.1-8b").unwrap();
+        let cluster = ClusterSpec::new(h100_sxm(), 8, 1);
+        let sil = Silicon::new(cluster, Framework::TrtLlm.profile());
+        let mut space = SearchSpace::default_for(&model, Framework::TrtLlm);
+        space.batch = vec![8, 32];
+        space.max_x = 4;
+        space.max_y = 4;
+        let wl = WorkloadSpec::new("llama3.1-8b", 1024, 128, 2000.0, 10.0);
+        let runner = TaskRunner::new(&model, &cluster, space, wl);
+        let plain = runner.run(&sil);
+        let memo = MemoOracle::new(&sil);
+        let cold = runner.run_cached(&memo, &RunOptions::default());
+        let warm = runner.run_cached(&memo, &RunOptions::default());
+        let (hits, _) = memo.stats();
+        assert!(hits > 0, "warm run must hit the shared memo store");
+        for r in [&cold, &warm] {
+            assert_eq!(plain.evaluated.len(), r.evaluated.len());
+            for (x, y) in plain.evaluated.iter().zip(&r.evaluated) {
+                assert_eq!(x.cand, y.cand);
+                assert_eq!(x.est, y.est);
+            }
+        }
+    }
+
+    /// The pruned survivor set is a pure function of the candidate set
+    /// — "feasible and not strictly dominated" — so it cannot depend on
+    /// how jobs landed on workers.
+    #[test]
+    fn pruned_run_is_thread_count_independent() {
+        let model = by_name("qwen3-32b").unwrap();
+        let cluster = ClusterSpec::new(h100_sxm(), 8, 1);
+        let sil = Silicon::new(cluster, Framework::TrtLlm.profile());
+        let mut space = SearchSpace::default_for(&model, Framework::TrtLlm);
+        space.batch = vec![8, 32, 128];
+        space.max_x = 8;
+        space.max_y = 8;
+        let wl = WorkloadSpec::new("qwen3-32b", 2048, 256, 2000.0, 10.0);
+        let mut r1 = TaskRunner::new(&model, &cluster, space.clone(), wl.clone());
+        r1.threads = 1;
+        let mut r8 = TaskRunner::new(&model, &cluster, space, wl);
+        r8.threads = 8;
+        let a = r1.run_pruned(&sil);
+        let b = r8.run_pruned(&sil);
+        assert_eq!(a.pruned, b.pruned);
+        assert_eq!(a.evaluated.len(), b.evaluated.len());
+        for (x, y) in a.evaluated.iter().zip(&b.evaluated) {
+            assert_eq!(x.cand, y.cand);
+            assert_eq!(x.est, y.est);
         }
     }
 

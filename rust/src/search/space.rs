@@ -18,7 +18,7 @@ use crate::frameworks::Framework;
 use crate::hardware::ClusterSpec;
 use crate::models::{Dtype, ModelArch};
 use crate::perfmodel::memory;
-use crate::topology::placement;
+use crate::topology::{placement, Placement};
 
 /// Declarative search space. Empty vectors mean "use defaults" — and
 /// for the flag fields, "resolve analytically per candidate".
@@ -256,6 +256,9 @@ impl SearchSpace {
 
     /// Expand a structural grid into engine configurations for one
     /// workload (flags resolved per point; no memory filtering).
+    /// Delegates to the SoA [`CandidateGrid`] — the materialized vector
+    /// is bit-identical (same candidates, same order) to the historical
+    /// nested push loops, pinned by `grid_expansion_matches_reference`.
     pub(crate) fn expand_flags(
         &self,
         points: &[StructuralPoint],
@@ -263,29 +266,21 @@ impl SearchSpace {
         cluster: &ClusterSpec,
         wl: &WorkloadSpec,
     ) -> Vec<EngineConfig> {
-        let mut out = Vec::new();
-        for point in points {
-            let (fw, dt, p, b) = *point;
-            // Flags are placement-independent: resolve once per point,
-            // then expand the structural placement axis — how the
-            // shape's ranks land on the fabric ([`placement::enumerate`];
-            // exactly [packed] on legacy fabrics).
-            let variants = self.flag_variants(model, cluster, wl, point);
-            for pl in placement::enumerate(cluster, &p) {
-                for &flags in &variants {
-                    out.push(EngineConfig {
-                        framework: fw,
-                        parallel: p,
-                        batch: b,
-                        weight_dtype: dt,
-                        kv_dtype: dt,
-                        flags,
-                        placement: pl,
-                    });
-                }
-            }
-        }
-        out
+        self.candidate_grid(points, model, cluster, wl).to_vec()
+    }
+
+    /// The SoA form of [`Self::expand_flags`]: structural axes stored
+    /// once per point, flag/placement variants as arena ranges. The
+    /// sweep engine iterates this directly instead of materializing a
+    /// `Vec<EngineConfig>` per scenario.
+    pub(crate) fn candidate_grid(
+        &self,
+        points: &[StructuralPoint],
+        model: &ModelArch,
+        cluster: &ClusterSpec,
+        wl: &WorkloadSpec,
+    ) -> CandidateGrid {
+        CandidateGrid::build(self, points, model, cluster, wl)
     }
 
     /// The full engine grid for one workload: structural enumeration +
@@ -344,6 +339,118 @@ impl SearchSpace {
 fn push_unique(v: &mut Vec<RuntimeFlags>, f: RuntimeFlags) {
     if !v.contains(&f) {
         v.push(f);
+    }
+}
+
+/// Structure-of-arrays candidate grid: the workload-expanded engine
+/// grid without one `EngineConfig` per candidate. The AoS expansion
+/// repeats the structural axes (framework, dtype, layout, batch) and
+/// the resolved flags across every placement variant; here each
+/// structural point is stored once, its flag variants and placement
+/// layouts live in shared arenas, and a candidate is just an index
+/// decoded on demand. Candidate order is pinned to the historical
+/// nested loops: points in input order, then placement-major /
+/// flag-minor within a point (`cand = pl_idx · nflags + fl_idx`).
+///
+/// `get` is O(log points) for the point lookup (prefix-sum
+/// `partition_point`); the sweep workers walk dense index slabs so the
+/// lookup amortizes to the slab, and the decoded `EngineConfig` is a
+/// stack copy — no per-candidate heap traffic at all.
+#[derive(Clone, Debug)]
+pub(crate) struct CandidateGrid {
+    /// Structural axes, one entry per grid point.
+    points: Vec<StructuralPoint>,
+    /// Flag-variant arena; point `p` owns `flag_ranges[p]`.
+    flags: Vec<RuntimeFlags>,
+    /// (arena start, variant count) per point.
+    flag_ranges: Vec<(u32, u32)>,
+    /// Placement arena; point `p` owns `place_ranges[p]`.
+    placements: Vec<Placement>,
+    /// (arena start, layout count) per point.
+    place_ranges: Vec<(u32, u32)>,
+    /// Prefix sums of candidates per point; the final entry is the
+    /// total candidate count.
+    cand_start: Vec<u32>,
+}
+
+impl CandidateGrid {
+    pub(crate) fn build(
+        space: &SearchSpace,
+        points: &[StructuralPoint],
+        model: &ModelArch,
+        cluster: &ClusterSpec,
+        wl: &WorkloadSpec,
+    ) -> CandidateGrid {
+        let mut flags = Vec::new();
+        let mut flag_ranges = Vec::with_capacity(points.len());
+        let mut placements = Vec::new();
+        let mut place_ranges = Vec::with_capacity(points.len());
+        let mut cand_start = Vec::with_capacity(points.len() + 1);
+        cand_start.push(0u32);
+        for point in points {
+            // Flags are placement-independent: resolve once per point,
+            // then expand the structural placement axis — how the
+            // shape's ranks land on the fabric
+            // ([`placement::enumerate`]; exactly [packed] on legacy
+            // fabrics).
+            let variants = space.flag_variants(model, cluster, wl, point);
+            let layouts = placement::enumerate(cluster, &point.2);
+            flag_ranges.push((flags.len() as u32, variants.len() as u32));
+            place_ranges.push((placements.len() as u32, layouts.len() as u32));
+            let total =
+                cand_start.last().unwrap() + (layouts.len() * variants.len()) as u32;
+            cand_start.push(total);
+            flags.extend(variants);
+            placements.extend(layouts);
+        }
+        CandidateGrid {
+            points: points.to_vec(),
+            flags,
+            flag_ranges,
+            placements,
+            place_ranges,
+            cand_start,
+        }
+    }
+
+    /// Total candidate count across all points.
+    pub(crate) fn len(&self) -> usize {
+        self.cand_start.last().copied().unwrap_or(0) as usize
+    }
+
+    /// Decode candidate `i` — placement-major, flag-minor within its
+    /// structural point, the exact push order of the nested-loop
+    /// expansion this grid replaced.
+    pub(crate) fn get(&self, i: usize) -> EngineConfig {
+        debug_assert!(i < self.len(), "candidate index {i} out of {}", self.len());
+        let i = i as u32;
+        // First point whose prefix sum exceeds `i`, minus one: the
+        // point that owns this candidate.
+        let p = self.cand_start.partition_point(|&s| s <= i) - 1;
+        let within = i - self.cand_start[p];
+        let (flag_start, nflags) = self.flag_ranges[p];
+        let (place_start, _) = self.place_ranges[p];
+        let (fw, dt, par, b) = self.points[p];
+        EngineConfig {
+            framework: fw,
+            parallel: par,
+            batch: b,
+            weight_dtype: dt,
+            kv_dtype: dt,
+            flags: self.flags[(flag_start + within % nflags) as usize],
+            placement: self.placements[(place_start + within / nflags) as usize],
+        }
+    }
+
+    /// Candidates in pinned order, decoded on the fly.
+    pub(crate) fn iter(&self) -> impl Iterator<Item = EngineConfig> + '_ {
+        (0..self.len()).map(move |i| self.get(i))
+    }
+
+    /// Materialize the AoS form (compatibility surface for callers
+    /// that genuinely need a vector, e.g. launch-file emission).
+    pub(crate) fn to_vec(&self) -> Vec<EngineConfig> {
+        self.iter().collect()
     }
 }
 
@@ -542,6 +649,72 @@ mod tests {
         // Explicit override wins for the prefill pool too.
         s.cuda_graph = vec![false];
         assert_eq!(s.prefill_space().cuda_graph, vec![false]);
+    }
+
+    /// The SoA [`CandidateGrid`] must reproduce the historical AoS
+    /// expansion exactly — same candidates, same order — across dense
+    /// and MoE models, legacy and tiered fabrics, flag sweeps and
+    /// explicit overrides. The reference here is the literal nested
+    /// push loop the grid replaced.
+    #[test]
+    fn grid_expansion_matches_reference() {
+        use crate::topology::fabric;
+        let reference = |s: &SearchSpace,
+                         points: &[StructuralPoint],
+                         m: &ModelArch,
+                         c: &ClusterSpec,
+                         w: &WorkloadSpec|
+         -> Vec<EngineConfig> {
+            let mut out = Vec::new();
+            for point in points {
+                let (fw, dt, p, b) = *point;
+                let variants = s.flag_variants(m, c, w, point);
+                for pl in placement::enumerate(c, &p) {
+                    for &flags in &variants {
+                        out.push(EngineConfig {
+                            framework: fw,
+                            parallel: p,
+                            batch: b,
+                            weight_dtype: dt,
+                            kv_dtype: dt,
+                            flags,
+                            placement: pl,
+                        });
+                    }
+                }
+            }
+            out
+        };
+        let dense = by_name("qwen3-32b").unwrap();
+        let moe = by_name("qwen3-235b").unwrap();
+        let legacy = ClusterSpec::new(h100_sxm(), 8, 2);
+        let tiered = ClusterSpec::with_fabric(h100_sxm(), 8, 2, fabric::hgx_h100());
+        let w = wl(4000, 500);
+        for (m, c) in [(&dense, &legacy), (&dense, &tiered), (&moe, &tiered)] {
+            let mut spaces = vec![SearchSpace::default_for(m, Framework::TrtLlm)];
+            let mut sweep = SearchSpace::default_for(m, Framework::Vllm);
+            sweep.flag_sweep = true;
+            sweep.pp = vec![1, 2];
+            spaces.push(sweep);
+            let mut over = SearchSpace::default_for(m, Framework::Sglang);
+            over.cuda_graph = vec![true, false];
+            over.max_num_tokens = vec![2048, 8192];
+            spaces.push(over);
+            for s in &spaces {
+                let points = s.structural_grid(m, c);
+                let want = reference(s, &points, m, c, &w);
+                let grid = s.candidate_grid(&points, m, c, &w);
+                assert_eq!(grid.len(), want.len());
+                assert_eq!(grid.to_vec(), want, "SoA expansion diverged");
+                // Random access decodes the same candidate as the
+                // sequential walk.
+                for i in [0, want.len() / 3, want.len() / 2, want.len() - 1] {
+                    assert_eq!(grid.get(i), want[i], "get({i})");
+                }
+                // And the delegating Vec surface is the grid.
+                assert_eq!(s.expand_flags(&points, m, c, &w), want);
+            }
+        }
     }
 
     #[test]

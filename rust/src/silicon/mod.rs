@@ -74,10 +74,19 @@ impl Silicon {
         }
     }
 
+    /// Per-instance latencies of a whole decomposed step in one call —
+    /// the simulators price each `decompose` result as one batch
+    /// through this (and the `LatencyOracle` impl forwards here).
+    pub fn latency_batch(&self, ops: &[Op]) -> Vec<f64> {
+        ops.iter().map(|o| self.op_latency_us(o)).collect()
+    }
+
     /// Total latency of an op list (each op × its count), microseconds.
     pub fn step_latency_us(&self, ops: &[Op]) -> f64 {
-        ops.iter()
-            .map(|o| self.op_latency_us(o) * o.count() as f64)
+        self.latency_batch(ops)
+            .iter()
+            .zip(ops)
+            .map(|(lat, o)| lat * o.count() as f64)
             .sum()
     }
 

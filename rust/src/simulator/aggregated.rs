@@ -100,7 +100,10 @@ impl<'a> AggregatedSim<'a> {
             debug_assert!(shape.total_tokens() > 0);
 
             let ops = decompose(self.model, self.cluster, &self.eng, &shape, gamma);
-            let mut kernel_us = self.silicon.step_latency_us(&ops);
+            // Price the whole decomposed step as one oracle batch.
+            let lat = self.silicon.latency_batch(&ops);
+            let mut kernel_us: f64 =
+                lat.iter().zip(&ops).map(|(l, o)| l * o.count() as f64).sum();
             // CUDA-graph replay on pure-decode iterations (same physics
             // as perfmodel::iteration — mixed steps cannot be graphed).
             if self.eng.flags.cuda_graph && shape.is_decode_only() {

@@ -120,7 +120,16 @@ impl<'a> DisaggSim<'a> {
             let isl = batch.iter().map(|r| r.isl as u64).sum::<u64>() / batch.len() as u64;
             let shape = StepShape::prefill(batch.len() as u32, isl, isl);
             let ops = decompose(self.model, self.cluster, &self.prefill, &shape, gamma_p);
-            let us = self.silicon.step_latency_us(&ops)
+            // One oracle batch per decomposed step (index-order sum is
+            // bit-identical to the old per-op loop).
+            let kernel_us: f64 = self
+                .silicon
+                .latency_batch(&ops)
+                .iter()
+                .zip(&ops)
+                .map(|(l, o)| l * o.count() as f64)
+                .sum();
+            let us = kernel_us
                 + fw_p.iter_host_overhead_us(self.prefill.flags.cuda_graph, false);
             let step_ms = us / 1000.0 * rng.noise(self.cfg.jitter_sigma);
             pf_clocks[wi] += step_ms;
@@ -193,7 +202,9 @@ impl<'a> DisaggSim<'a> {
             let gen_kv = w.running.iter().map(|r| r.kv_tokens()).sum::<u64>() / gen_reqs;
             let shape = StepShape::decode(gen_reqs, gen_kv);
             let ops = decompose(self.model, self.cluster, &self.decode, &shape, gamma_d);
-            let mut kernel_us = self.silicon.step_latency_us(&ops);
+            let lat = self.silicon.latency_batch(&ops);
+            let mut kernel_us: f64 =
+                lat.iter().zip(&ops).map(|(l, o)| l * o.count() as f64).sum();
             if self.decode.flags.cuda_graph {
                 kernel_us -= crate::ops::CUDA_GRAPH_LAUNCH_SAVING
                     * crate::ops::launch_overhead_us(&ops, self.cluster.gpu.launch_us);

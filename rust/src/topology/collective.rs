@@ -364,6 +364,139 @@ pub fn placement_factor(c: &ClusterSpec, op: &Op) -> f64 {
     }
 }
 
+/// Precomputed placed/packed [`LinkPath`] pairs for every
+/// `(gpus, span, rails)` a cluster can pose — the hot-path twin of
+/// [`placement_factor`]. [`crate::perfdb::PerfDatabase`] builds one
+/// table per database and answers each placed-collective query with two
+/// cached path lookups plus the (cheap, closed-form) per-algorithm
+/// minimum, instead of re-deriving both paths through
+/// [`path_for`]'s clamping chain per op.
+///
+/// Deliberately a table of *paths*, not of factors bucketed by message
+/// size: min-cost algorithm selection flips continuously with `bytes`,
+/// so any byte bucketing would break the bit-for-bit parity this table
+/// guarantees (`factor` == [`placement_factor`] exactly, pinned by a
+/// property test below).
+#[derive(Clone, Debug)]
+pub struct PlacementTable {
+    aware: bool,
+    gpus_max: u32,
+    span_max: u32,
+    rails_max: u32,
+    /// Placed paths, `[(g-1)·span_max + (s-1)]·rails_max + (r-1)`.
+    placed: Vec<LinkPath>,
+    /// Packed (`span=1, rails=1`) paths, indexed `g-1`.
+    packed: Vec<LinkPath>,
+}
+
+impl PlacementTable {
+    /// Enumerate every path the cluster can pose. Legacy fabrics skip
+    /// the enumeration entirely (every factor is 1.0 there).
+    pub fn build(c: &ClusterSpec) -> PlacementTable {
+        if !c.fabric.placement_aware() {
+            return PlacementTable {
+                aware: false,
+                gpus_max: 0,
+                span_max: 0,
+                rails_max: 0,
+                placed: Vec::new(),
+                packed: Vec::new(),
+            };
+        }
+        let gpus_max = c.total_gpus().max(1);
+        let span_max = super::placement::num_domains(c).max(1);
+        let rails_max = c.fabric.rails.max(1);
+        let mut placed =
+            Vec::with_capacity((gpus_max * span_max * rails_max) as usize);
+        for g in 1..=gpus_max {
+            for s in 1..=span_max {
+                for r in 1..=rails_max {
+                    placed.push(path_for(c, g, s, r));
+                }
+            }
+        }
+        let packed = (1..=gpus_max).map(|g| path_for(c, g, 1, 1)).collect();
+        PlacementTable { aware: true, gpus_max, span_max, rails_max, placed, packed }
+    }
+
+    /// The cached (placed, packed) pair for a group. Lookups clamp span
+    /// and rails exactly as [`path_for`] does internally, so a table
+    /// hit returns the identical `LinkPath`; groups wider than the
+    /// cluster (never produced by the search, but possible through the
+    /// public API) fall back to the exact on-the-fly construction.
+    fn paths(&self, c: &ClusterSpec, gpus: u32, span: u32, rails: u32) -> (LinkPath, LinkPath) {
+        let s = span.clamp(1, self.span_max);
+        let r = rails.clamp(1, self.rails_max);
+        if gpus >= 1 && gpus <= self.gpus_max {
+            let i = (((gpus - 1) * self.span_max + (s - 1)) * self.rails_max + (r - 1)) as usize;
+            (self.placed[i], self.packed[(gpus - 1) as usize])
+        } else {
+            (path_for(c, gpus, span, rails), path_for(c, gpus, 1, 1))
+        }
+    }
+
+    /// Table-served twin of [`placement_factor`] — bit-identical.
+    pub fn factor(&self, c: &ClusterSpec, op: &Op) -> f64 {
+        if !self.aware {
+            return 1.0;
+        }
+        match *op {
+            Op::AllReduce { span, rails, .. }
+            | Op::AllGather { span, rails, .. }
+            | Op::AllToAll { span, rails, .. }
+                if span <= 1 && rails <= 1 =>
+            {
+                return 1.0;
+            }
+            _ => {}
+        }
+        let ratio = |placed: f64, packed: f64| {
+            if packed > 0.0 && placed.is_finite() {
+                placed / packed
+            } else {
+                1.0
+            }
+        };
+        match *op {
+            Op::AllReduce { bytes, gpus, span, rails, .. } => {
+                if gpus <= 1 {
+                    return 1.0;
+                }
+                let (pl, pk) = self.paths(c, gpus, span, rails);
+                ratio(
+                    allreduce_flat_us(&pl, bytes)
+                        .min(allreduce_tree_us(&pl, bytes))
+                        .min(allreduce_hier_us(&pl, bytes)),
+                    allreduce_flat_us(&pk, bytes)
+                        .min(allreduce_tree_us(&pk, bytes))
+                        .min(allreduce_hier_us(&pk, bytes)),
+                )
+            }
+            Op::AllGather { bytes, gpus, span, rails, .. } => {
+                if gpus <= 1 {
+                    return 1.0;
+                }
+                let (pl, pk) = self.paths(c, gpus, span, rails);
+                ratio(
+                    allgather_flat_us(&pl, bytes).min(allgather_hier_us(&pl, bytes)),
+                    allgather_flat_us(&pk, bytes).min(allgather_hier_us(&pk, bytes)),
+                )
+            }
+            Op::AllToAll { bytes, gpus, span, rails, .. } => {
+                if gpus <= 1 {
+                    return 1.0;
+                }
+                let (pl, pk) = self.paths(c, gpus, span, rails);
+                ratio(
+                    alltoall_flat_us(&pl, bytes).min(alltoall_hier_us(&pl, bytes)),
+                    alltoall_flat_us(&pk, bytes).min(alltoall_hier_us(&pk, bytes)),
+                )
+            }
+            _ => 1.0,
+        }
+    }
+}
+
 /// Speed-of-Light bound of a placed collective on a tiered fabric
 /// (latency-free, efficiency-1 links, min over algorithms). `None` on
 /// legacy fabrics — [`crate::perfdb::sol`] keeps the seed's roofline
@@ -571,6 +704,45 @@ mod tests {
         // Rail striping on a cross-node group prices better — below 1.
         let striped = Op::AllToAll { bytes: 1e8, gpus: 16, span: 2, rails: 4, count: 1 };
         assert!(placement_factor(&tiered, &striped) <= 1.0);
+    }
+
+    #[test]
+    fn placement_table_matches_placement_factor_bit_for_bit() {
+        // Property (tentpole pin): the precomputed path table answers
+        // every collective op the search can pose with exactly the
+        // same factor as the on-the-fly computation — across presets,
+        // group widths, spans (incl. out-of-range requests that
+        // path_for clamps), rails, message sizes and op kinds.
+        let mut rng = Rng::new(0x91ACE);
+        let legacy = ClusterSpec::new(h100_sxm(), 8, 2);
+        let mut clusters: Vec<ClusterSpec> = fabric::all()
+            .into_iter()
+            .map(|f| ClusterSpec::with_fabric(h100_sxm(), 8, 4, f))
+            .collect();
+        clusters.push(legacy);
+        for c in &clusters {
+            let table = PlacementTable::build(c);
+            for _ in 0..300 {
+                let bytes = 10f64.powf(1.0 + 8.0 * rng.f64());
+                let gpus = 1 + rng.below(2 * c.total_gpus() as u64) as u32;
+                let span = rng.below(20) as u32;
+                let rails = rng.below(12) as u32;
+                let count = 1 + rng.below(3) as u32;
+                let ops = [
+                    Op::AllReduce { bytes, gpus, span, rails, count },
+                    Op::AllGather { bytes, gpus, span, rails, count },
+                    Op::AllToAll { bytes, gpus, span, rails, count },
+                ];
+                for op in ops {
+                    assert_eq!(
+                        table.factor(c, &op).to_bits(),
+                        placement_factor(c, &op).to_bits(),
+                        "{}: {op:?}",
+                        c.fabric.name
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -12,6 +12,11 @@ use super::stats;
 pub struct BenchResult {
     pub name: String,
     pub samples_ms: Vec<f64>,
+    /// Work items processed per iteration (candidates, ops, queries…);
+    /// 0 when the bench has no natural item count. Set by
+    /// [`bench_items`] so [`BenchResult::throughput_per_s`] can report
+    /// items/sec off the median sample.
+    pub items_per_iter: usize,
 }
 
 impl BenchResult {
@@ -27,14 +32,39 @@ impl BenchResult {
         stats::percentile(&self.samples_ms, 95.0)
     }
 
+    /// Items per second at the median sample (`None` when the bench
+    /// declared no item count or the median is zero).
+    pub fn throughput_per_s(&self) -> Option<f64> {
+        let med = self.median_ms();
+        if self.items_per_iter == 0 || med <= 0.0 {
+            return None;
+        }
+        Some(self.items_per_iter as f64 / (med / 1e3))
+    }
+
     pub fn report(&self) -> String {
-        format!(
+        let mut line = format!(
             "{:<44} time: [median {:>10}]  mean {:>10}  p95 {:>10}",
             self.name,
             fmt_ms(self.median_ms()),
             fmt_ms(self.mean_ms()),
             fmt_ms(self.p95_ms())
-        )
+        );
+        if let Some(thru) = self.throughput_per_s() {
+            line.push_str(&format!("  thrpt: {} items/s", fmt_count(thru)));
+        }
+        line
+    }
+}
+
+/// Compact count formatting for throughput lines (`12.3k`, `4.56M`).
+fn fmt_count(v: f64) -> String {
+    if v >= 1e6 {
+        format!("{:.2}M", v / 1e6)
+    } else if v >= 1e3 {
+        format!("{:.1}k", v / 1e3)
+    } else {
+        format!("{v:.0}")
     }
 }
 
@@ -52,7 +82,22 @@ fn fmt_ms(ms: f64) -> String {
 
 /// Run `f` with `warmup` unmeasured + `samples` measured iterations and
 /// print a criterion-style line. Returns the samples for assertions.
-pub fn bench<F: FnMut()>(name: &str, warmup: usize, samples: usize, mut f: F) -> BenchResult {
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, samples: usize, f: F) -> BenchResult {
+    bench_items(name, warmup, samples, 0, f)
+}
+
+/// [`bench`] with a declared per-iteration work-item count, so the
+/// report (and the emitted `BENCH_*.json` artifacts) carry a
+/// throughput figure — items per second at the **median** sample, the
+/// raw-speed number the perf budgets track (candidates/sec for sweep
+/// benches, ops/sec for oracle benches).
+pub fn bench_items<F: FnMut()>(
+    name: &str,
+    warmup: usize,
+    samples: usize,
+    items_per_iter: usize,
+    mut f: F,
+) -> BenchResult {
     for _ in 0..warmup {
         f();
     }
@@ -62,7 +107,7 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, samples: usize, mut f: F) ->
         f();
         out.push(t.elapsed().as_secs_f64() * 1e3);
     }
-    let r = BenchResult { name: name.to_string(), samples_ms: out };
+    let r = BenchResult { name: name.to_string(), samples_ms: out, items_per_iter };
     println!("{}", r.report());
     r
 }
@@ -74,6 +119,7 @@ pub fn once<F: FnOnce()>(name: &str, f: F) -> BenchResult {
     let r = BenchResult {
         name: name.to_string(),
         samples_ms: vec![t.elapsed().as_secs_f64() * 1e3],
+        items_per_iter: 0,
     };
     println!("{}", r.report());
     r
@@ -108,5 +154,27 @@ mod tests {
         assert!(fmt_ms(0.0005).contains("µs"));
         assert!(fmt_ms(5.0).contains("ms"));
         assert!(fmt_ms(5000.0).contains(" s"));
+    }
+
+    #[test]
+    fn throughput_from_item_count() {
+        let r = bench_items("spin-items", 0, 3, 1000, || {
+            let mut s = 0u64;
+            for i in 0..20_000u64 {
+                s = s.wrapping_add(black_box(i));
+            }
+            black_box(s);
+        });
+        let thru = r.throughput_per_s().expect("item count was declared");
+        assert!((thru - 1000.0 / (r.median_ms() / 1e3)).abs() < 1e-6);
+        assert!(r.report().contains("thrpt:"));
+        // No item count → no throughput claim in the report.
+        let plain = bench("spin-plain", 0, 2, || {
+            black_box(0u64);
+        });
+        assert!(plain.throughput_per_s().is_none());
+        assert!(!plain.report().contains("thrpt:"));
+        assert!(fmt_count(1_500_000.0).ends_with('M'));
+        assert!(fmt_count(2_500.0).ends_with('k'));
     }
 }

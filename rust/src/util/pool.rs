@@ -10,8 +10,95 @@
 //! needs. Results are returned **in input order** regardless of thread
 //! interleaving, and a panic in any job propagates to the caller after
 //! the scope joins.
+//!
+//! Two refinements for the pricing hot path:
+//!
+//! * **chunked cursor grabs** — workers `fetch_add` a chunk of `K`
+//!   indices, not 1, cutting cacheline ping-pong on the shared cursor
+//!   by K×; the tail chunk is clamped to the item count so the last
+//!   partial chunk is never skipped;
+//! * **per-worker state** ([`scoped_map_states`]) — each worker builds
+//!   a private state object (thread-local memo, frontier accumulator)
+//!   at spawn; the states come back **in worker-id order** at join so
+//!   callers can merge them deterministically.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// The shared fork/join core: map `f` over `items` on `threads`
+/// threads, pulling `chunk`-sized index ranges from one atomic cursor.
+/// Per-worker results are preallocated at the expected share
+/// (`n / threads + 1`). Returns (results in input order, per-worker
+/// states in worker-id order).
+fn run_pool<T, R, S, I, F>(
+    items: &[T],
+    threads: usize,
+    chunk: usize,
+    init: I,
+    f: F,
+) -> (Vec<R>, Vec<S>)
+where
+    T: Sync,
+    R: Send,
+    S: Send,
+    I: Fn(usize) -> S + Sync,
+    F: Fn(&S, usize, &T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return (Vec::new(), Vec::new());
+    }
+    let threads = effective_threads(threads, n);
+    let chunk = chunk.max(1);
+    if threads <= 1 {
+        let state = init(0);
+        let out = items.iter().enumerate().map(|(i, t)| f(&state, i, t)).collect();
+        return (out, vec![state]);
+    }
+
+    let cursor = AtomicUsize::new(0);
+    let worker = |wid: usize| {
+        let state = init(wid);
+        let mut out: Vec<(usize, R)> = Vec::with_capacity(n / threads + 1);
+        loop {
+            let start = cursor.fetch_add(chunk, Ordering::Relaxed);
+            if start >= n {
+                break;
+            }
+            // Clamp the tail: the final grab may reach past `n`, but
+            // its in-range prefix (the last partial chunk) still runs.
+            let end = (start + chunk).min(n);
+            for i in start..end {
+                out.push((i, f(&state, i, &items[i])));
+            }
+        }
+        (out, state)
+    };
+
+    let mut slots: Vec<Option<R>> = Vec::with_capacity(n);
+    slots.resize_with(n, || None);
+    let mut states: Vec<S> = Vec::with_capacity(threads);
+    std::thread::scope(|s| {
+        let worker = &worker;
+        let handles: Vec<_> = (0..threads).map(|w| s.spawn(move || worker(w))).collect();
+        // Joined in spawn order == worker-id order.
+        for h in handles {
+            match h.join() {
+                Ok((part, state)) => {
+                    for (i, r) in part {
+                        slots[i] = Some(r);
+                    }
+                    states.push(state);
+                }
+                Err(payload) => std::panic::resume_unwind(payload),
+            }
+        }
+    });
+    let out = slots
+        .into_iter()
+        .map(|r| r.expect("worker pool lost a job result"))
+        .collect();
+    (out, states)
+}
 
 /// Map `f` over `items` on `threads` OS threads (0 = available
 /// parallelism), pulling jobs from a shared atomic cursor. Returns one
@@ -22,48 +109,30 @@ where
     R: Send,
     F: Fn(usize, &T) -> R + Sync,
 {
-    let n = items.len();
-    if n == 0 {
-        return Vec::new();
-    }
-    let threads = effective_threads(threads, n);
-    if threads <= 1 {
-        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
-    }
+    run_pool(items, threads, 1, |_| (), |_, i, t| f(i, t)).0
+}
 
-    let cursor = AtomicUsize::new(0);
-    let worker = |_wid: usize| {
-        let mut out: Vec<(usize, R)> = Vec::new();
-        loop {
-            let i = cursor.fetch_add(1, Ordering::Relaxed);
-            if i >= n {
-                break;
-            }
-            out.push((i, f(i, &items[i])));
-        }
-        out
-    };
-
-    let mut slots: Vec<Option<R>> = Vec::with_capacity(n);
-    slots.resize_with(n, || None);
-    std::thread::scope(|s| {
-        let worker = &worker;
-        let handles: Vec<_> = (0..threads).map(|w| s.spawn(move || worker(w))).collect();
-        for h in handles {
-            match h.join() {
-                Ok(part) => {
-                    for (i, r) in part {
-                        slots[i] = Some(r);
-                    }
-                }
-                Err(payload) => std::panic::resume_unwind(payload),
-            }
-        }
-    });
-    slots
-        .into_iter()
-        .map(|r| r.expect("worker pool lost a job result"))
-        .collect()
+/// [`scoped_map`] with per-worker state and chunked cursor grabs: each
+/// worker calls `init(worker_id)` once at spawn and hands the state to
+/// every job it runs (`f(&state, index, item)`); states are returned in
+/// worker-id order so the caller can fold them deterministically. This
+/// is how the search runner gives each worker a thread-local memo and a
+/// private frontier accumulator.
+pub fn scoped_map_states<T, R, S, I, F>(
+    items: &[T],
+    threads: usize,
+    chunk: usize,
+    init: I,
+    f: F,
+) -> (Vec<R>, Vec<S>)
+where
+    T: Sync,
+    R: Send,
+    S: Send,
+    I: Fn(usize) -> S + Sync,
+    F: Fn(&S, usize, &T) -> R + Sync,
+{
+    run_pool(items, threads, chunk, init, f)
 }
 
 /// Resolve a thread-count request against the job count.
@@ -117,6 +186,61 @@ mod tests {
         });
         assert_eq!(counter.load(Ordering::Relaxed), 1000);
         assert_eq!(out, items);
+    }
+
+    #[test]
+    fn chunked_tail_never_skips_the_last_partial_chunk() {
+        // n deliberately not divisible by chunk × threads (and not by
+        // chunk alone): 103 = 4·25 + 3 — the final grab covers indices
+        // 100..103 only. Every item must still run exactly once, in
+        // order, for a spread of (threads, chunk) combinations.
+        for (threads, chunk) in [(3usize, 4usize), (4, 8), (2, 7), (8, 16), (5, 1)] {
+            let items: Vec<u64> = (0..103).collect();
+            let counter = AtomicUsize::new(0);
+            let (out, states) = scoped_map_states(
+                &items,
+                threads,
+                chunk,
+                |wid| wid,
+                |_, i, x| {
+                    counter.fetch_add(1, Ordering::Relaxed);
+                    (i, *x * 3)
+                },
+            );
+            assert_eq!(
+                counter.load(Ordering::Relaxed),
+                items.len(),
+                "threads={threads} chunk={chunk}"
+            );
+            for (i, (idx, v)) in out.iter().enumerate() {
+                assert_eq!(*idx, i, "threads={threads} chunk={chunk}");
+                assert_eq!(*v, items[i] * 3, "threads={threads} chunk={chunk}");
+            }
+            // States arrive in worker-id order.
+            assert_eq!(states, (0..states.len()).collect::<Vec<_>>());
+            assert!(states.len() <= threads.min(items.len()));
+        }
+    }
+
+    #[test]
+    fn per_worker_state_is_private_and_merged_in_id_order() {
+        let items: Vec<u64> = (0..500).collect();
+        let (out, states) = scoped_map_states(
+            &items,
+            4,
+            8,
+            |wid| (wid, AtomicUsize::new(0)),
+            |state, _, x| {
+                state.1.fetch_add(*x as usize, Ordering::Relaxed);
+                *x
+            },
+        );
+        assert_eq!(out, items);
+        let ids: Vec<usize> = states.iter().map(|s| s.0).collect();
+        assert_eq!(ids, (0..states.len()).collect::<Vec<_>>());
+        // Every contribution landed in exactly one worker's state.
+        let total: usize = states.iter().map(|s| s.1.load(Ordering::Relaxed)).sum();
+        assert_eq!(total, (0..500usize).sum::<usize>());
     }
 
     #[test]

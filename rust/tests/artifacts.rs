@@ -76,6 +76,7 @@ fn bench_plan_keeps_its_contract() {
         "static_peak_cost_usd",
         "options_considered",
         "options_pruned",
+        "cold_plan_options_per_s",
     ] {
         let v = j.req(key).unwrap_or_else(|e| panic!("BENCH_plan.json: {e}"));
         assert!(
@@ -140,6 +141,8 @@ fn bench_topology_keeps_its_contract() {
         "grid_tiered_ms_median",
         "grid_legacy_engines",
         "grid_tiered_engines",
+        "grid_legacy_candidates_per_s",
+        "grid_tiered_candidates_per_s",
     ] {
         let v = j.req(key).unwrap_or_else(|e| panic!("BENCH_topology.json: {e}"));
         assert!(

@@ -1,0 +1,196 @@
+//! Hot-path parity pins for the raw-speed pass: the batched oracle
+//! entry point ([`LatencyOracle::latency_batch`], slab-walk
+//! interpolation in the PerfDatabase) and the memo/thread-local search
+//! plumbing ([`TaskRunner::run_cached`]) must be **bit-for-bit**
+//! indistinguishable from the scalar per-op path they replaced.
+//!
+//! Two families of pins:
+//! 1. `latency_batch == map(op_latency_us)` to the last mantissa bit,
+//!    across every op kind × every oracle tier (analytic PerfDatabase
+//!    on legacy and tiered fabrics, CalibratedDb, MemoOracle cold and
+//!    warm, LocalMemo, Silicon ground truth);
+//! 2. pinned searches (qwen3-32b on H100, and on a gb200-nvl72 tiered
+//!    fabric) produce the same candidate labels, in the same order,
+//!    with bit-identical estimates whether priced through `run` (plain
+//!    oracle) or `run_cached` (shared memo + per-worker LocalMemo).
+
+use aiconfigurator::config::{EngineConfig, ParallelSpec, RuntimeFlags, WorkloadSpec};
+use aiconfigurator::frameworks::Framework;
+use aiconfigurator::hardware::{gb200_nvl72, h100_sxm, ClusterSpec};
+use aiconfigurator::models::{by_name, Dtype};
+use aiconfigurator::ops::{decompose, Op, StepShape};
+use aiconfigurator::perfdb::tables::TableId;
+use aiconfigurator::perfdb::{calibrate, measure, CalibratedDb, LatencyOracle, MemoOracle, PerfDatabase};
+use aiconfigurator::search::{RunOptions, SearchSpace, TaskRunner};
+use aiconfigurator::silicon::Silicon;
+use aiconfigurator::topology::{fabric, Placement};
+
+fn eng(fw: Framework, tp: u32, pp: u32, ep: u32, placement: Placement) -> EngineConfig {
+    EngineConfig {
+        framework: fw,
+        parallel: ParallelSpec { tp, pp, ep, dp: 1 },
+        batch: 16,
+        weight_dtype: Dtype::Fp8,
+        kv_dtype: Dtype::Fp8,
+        flags: RuntimeFlags::defaults_for(fw),
+        placement,
+    }
+}
+
+/// An op list that exercises every [`Op`] kind: dense + MoE models,
+/// prefill + decode + mixed steps, TP/PP/EP collectives, packed and
+/// spanned placements.
+fn all_kind_ops(cluster: &ClusterSpec) -> Vec<Op> {
+    let dense = by_name("qwen3-32b").unwrap();
+    let moe = by_name("qwen3-235b").unwrap();
+    let spanned = Placement { tp_span: 2, ep_span: 2, interleave_pp: false, rails: 4 };
+    let mut ops = Vec::new();
+    // Dense, TP4 PP2 packed: Gemm, AttnPrefill, AllReduce, AllGather,
+    // P2p, Elementwise.
+    ops.extend(decompose(
+        &dense,
+        cluster,
+        &eng(Framework::TrtLlm, 4, 2, 1, Placement::packed()),
+        &StepShape::prefill(2, 2048, 2048),
+        1.0,
+    ));
+    // Dense decode, mixed step: AttnDecode joins.
+    ops.extend(decompose(
+        &dense,
+        cluster,
+        &eng(Framework::Vllm, 2, 1, 1, Placement::packed()),
+        &StepShape { ctx_reqs: 1, ctx_q: 512, ctx_kv: 512, gen_reqs: 32, gen_kv: 2048 },
+        1.0,
+    ));
+    // MoE, TP2 EP8 spanned: MoeGemm, AllToAll, placed collectives.
+    ops.extend(decompose(
+        &moe,
+        cluster,
+        &eng(Framework::Sglang, 2, 1, 8, spanned),
+        &StepShape::decode(64, 4096),
+        1.25,
+    ));
+    let classes: std::collections::BTreeSet<&str> = ops.iter().map(|o| o.class()).collect();
+    assert_eq!(
+        classes.len(),
+        9,
+        "op list must cover all 9 op kinds, got {classes:?}"
+    );
+    ops
+}
+
+/// The pin itself: batch answers equal scalar answers to the bit, and
+/// the step reduction equals the batch-then-weighted-sum it documents.
+fn assert_batch_parity(name: &str, oracle: &dyn LatencyOracle, ops: &[Op]) {
+    assert!(oracle.latency_batch(&[]).is_empty(), "{name}: empty batch");
+    let per: Vec<f64> = ops.iter().map(|o| oracle.op_latency_us(o)).collect();
+    let batch = oracle.latency_batch(ops);
+    assert_eq!(per.len(), batch.len(), "{name}: length");
+    for (i, (p, b)) in per.iter().zip(&batch).enumerate() {
+        assert_eq!(
+            p.to_bits(),
+            b.to_bits(),
+            "{name}: op {i} ({}) diverged: per-op {p} vs batched {b}",
+            ops[i].class()
+        );
+    }
+    let want_step: f64 = batch.iter().zip(ops).map(|(l, o)| l * o.count() as f64).sum();
+    let step = oracle.step_latency_us(ops);
+    assert_eq!(
+        want_step.to_bits(),
+        step.to_bits(),
+        "{name}: step_latency_us is not the batch-weighted sum"
+    );
+}
+
+#[test]
+fn latency_batch_matches_per_op_bit_for_bit_across_oracle_tiers() {
+    // Legacy flat fabric: slab interpolation + SoL fallbacks.
+    let legacy = ClusterSpec::new(h100_sxm(), 8, 2);
+    let sil = Silicon::new(legacy, Framework::TrtLlm.profile());
+    let model = by_name("qwen3-32b").unwrap();
+    let db = PerfDatabase::build(&sil, &model, Dtype::Fp8, 0xA1C0);
+    let ops = all_kind_ops(&legacy);
+
+    assert_batch_parity("silicon", &sil, &ops);
+    assert_batch_parity("perfdb/legacy", &db, &ops);
+
+    // Tiered fabric: the placement-factor table path on every placed
+    // collective (gb200-nvl72 has a 72-GPU NVLink domain).
+    let tiered = ClusterSpec::with_fabric(gb200_nvl72(), 4, 18, fabric::gb200_nvl72());
+    let tsil = Silicon::new(tiered, Framework::TrtLlm.profile());
+    let tdb = PerfDatabase::build(&tsil, &model, Dtype::Fp8, 0xA1C0);
+    assert_batch_parity("perfdb/gb200-nvl72", &tdb, &all_kind_ops(&tiered));
+
+    // Calibrated tier: measured-cell snap + correction-scaled slabs.
+    let sets = measure::synthesize_with(&sil, &model, Dtype::Fp8, 17, 32, &|_| (1.3, 0.0), 0.02);
+    let gemm_sets: Vec<_> = sets
+        .into_iter()
+        .filter(|s| matches!(s.table, TableId::GemmFp16 | TableId::GemmFp8))
+        .collect();
+    let art = calibrate::fit(&db, &gemm_sets).unwrap();
+    let cal = CalibratedDb::compose(db.clone(), &art).unwrap();
+    assert_batch_parity("calibrated", &cal, &ops);
+
+    // Memo tier, cold (every query a miss) and warm (every query a
+    // shared-store hit), plus the thread-local front the search
+    // workers price through.
+    let memo = MemoOracle::new(&db);
+    assert_batch_parity("memo/cold", &memo, &ops);
+    let (hits, misses) = memo.stats();
+    assert!(misses > 0, "cold memo must record misses");
+    assert_batch_parity("memo/warm", &memo, &ops);
+    let (hits2, _) = memo.stats();
+    assert!(hits2 > hits, "warm pass must hit the shared store");
+
+    let lm = memo.local();
+    assert_batch_parity("memo/local", &lm, &ops);
+    lm.merge();
+}
+
+/// Run the pinned search both ways and pin labels, order, and bits.
+fn assert_search_parity(model_name: &str, cluster: &ClusterSpec, seed: u64) {
+    let model = by_name(model_name).unwrap();
+    let sil = Silicon::new(*cluster, Framework::TrtLlm.profile());
+    let db = PerfDatabase::build(&sil, &model, Dtype::Fp8, seed);
+    let mut space = SearchSpace::default_for(&model, Framework::TrtLlm);
+    space.batch = vec![8, 32];
+    space.max_x = 4;
+    space.max_y = 4;
+    let wl = WorkloadSpec::new(model_name, 2048, 256, 2000.0, 20.0);
+    let runner = TaskRunner::new(&model, cluster, space, wl);
+
+    for opts in [RunOptions::default(), RunOptions { prune: true }] {
+        let plain = runner.run_with(&db, &opts);
+        let memo = MemoOracle::new(&db);
+        let cold = runner.run_cached(&memo, &opts);
+        let warm = runner.run_cached(&memo, &opts);
+        let (hits, _) = memo.stats();
+        assert!(hits > 0, "second cached run must hit the memo");
+        assert!(!plain.evaluated.is_empty(), "pinned search evaluates candidates");
+        assert_eq!(plain.pruned, cold.pruned, "prune={}", opts.prune);
+        for cached in [&cold, &warm] {
+            assert_eq!(plain.evaluated.len(), cached.evaluated.len());
+            for (a, b) in plain.evaluated.iter().zip(&cached.evaluated) {
+                assert_eq!(a.cand.label(), b.cand.label(), "labels in the same order");
+                assert_eq!(a.cand, b.cand);
+                assert_eq!(a.est.speed.to_bits(), b.est.speed.to_bits());
+                assert_eq!(a.est.thru_per_gpu.to_bits(), b.est.thru_per_gpu.to_bits());
+                assert_eq!(a.est.ttft_ms.to_bits(), b.est.ttft_ms.to_bits());
+                assert_eq!(a.est.tpot_ms.to_bits(), b.est.tpot_ms.to_bits());
+            }
+        }
+    }
+}
+
+#[test]
+fn pinned_qwen3_32b_h100_search_is_memo_invariant() {
+    let cluster = ClusterSpec::new(h100_sxm(), 8, 1);
+    assert_search_parity("qwen3-32b", &cluster, 0xA1C0);
+}
+
+#[test]
+fn pinned_gb200_nvl72_search_is_memo_invariant() {
+    let cluster = ClusterSpec::with_fabric(gb200_nvl72(), 4, 18, fabric::gb200_nvl72());
+    assert_search_parity("qwen3-32b", &cluster, 0xA1C0);
+}

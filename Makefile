@@ -13,11 +13,17 @@
 #   make validate-smoke  fleet-replay gate: plan against the committed
 #                   trace spec, replay it benign (optimism gap <= 10%)
 #                   and injected (failures degrade gracefully)
+#   make replan-smoke  differential-replan gate: apply every committed
+#                   delta scenario (artifacts/deltas/) with --check-equal,
+#                   asserting the incremental replan is bit-identical to
+#                   a from-scratch plan of the patched inputs while
+#                   re-pricing strictly fewer engine configs
 #   make bench      search-engine benches (table1_search + sweep)
 #   make bench-plan capacity-planner bench (writes BENCH_plan.json)
 #   make bench-topo topology bench (writes BENCH_topology.json)
 #   make bench-service  closed-loop service bench (writes BENCH_service.json)
 #   make bench-validate  fleet-replay bench (writes BENCH_validate.json)
+#   make bench-replan  differential-replan bench (writes BENCH_replan.json)
 #   make bench-all  every bench target
 #   make bench-budget  perf-budget gate: snapshot the committed
 #                   BENCH_plan/BENCH_topology baselines, re-run the
@@ -34,8 +40,9 @@ RUST_DIR := rust
 PYTHON   ?= python3
 
 .PHONY: verify build test gen-smoke artifacts-validate calibrate-smoke topo-smoke \
-        service-smoke validate-smoke measurements bench bench-plan bench-topo \
-        bench-service bench-validate bench-all bench-budget artifacts fmt clippy clean
+        service-smoke validate-smoke replan-smoke measurements bench bench-plan \
+        bench-topo bench-service bench-validate bench-replan bench-all bench-budget \
+        artifacts fmt clippy clean
 
 verify:
 	cd $(RUST_DIR) && cargo build --release && cargo test -q
@@ -85,6 +92,26 @@ validate-smoke:
 		--scale-lag 30 --failure-rate 50 --restart 30 \
 		--out target/validate/injected.json
 
+replan-smoke:
+	cd $(RUST_DIR) && cargo run --release -- replan \
+		--model llama3.1-8b --fleet h100,a100 --framework trtllm \
+		--isl 256 --osl 32 --ttft 5000 --speed 2 \
+		--traffic diurnal --peak-qps 80 --trough-qps 4 --windows 12 \
+		--delta ../artifacts/deltas/reprice-smoke.json \
+		--out target/replan/reprice.json --check-equal
+	cd $(RUST_DIR) && cargo run --release -- replan \
+		--model llama3.1-8b --fleet h100,a100 --framework trtllm \
+		--isl 256 --osl 32 --ttft 5000 --speed 2 \
+		--traffic diurnal --peak-qps 80 --trough-qps 4 --windows 12 \
+		--delta ../artifacts/deltas/window-surge-smoke.json \
+		--out target/replan/window-surge.json --check-equal
+	cd $(RUST_DIR) && cargo run --release -- replan \
+		--model llama3.1-8b --fleet h100,a100 --framework trtllm \
+		--isl 256 --osl 32 --ttft 5000 --speed 2 \
+		--traffic diurnal --peak-qps 80 --trough-qps 4 --windows 12 \
+		--delta ../artifacts/deltas/fleet-swap-smoke.json \
+		--out target/replan/fleet-swap.json --check-equal
+
 measurements:
 	$(PYTHON) python/measurements/synth.py
 
@@ -110,18 +137,23 @@ bench-service:
 bench-validate:
 	cd $(RUST_DIR) && cargo bench --bench validate
 
+bench-replan:
+	cd $(RUST_DIR) && cargo bench --bench replan
+
 bench-budget:
 	rm -rf $(RUST_DIR)/target/bench-baseline
 	mkdir -p $(RUST_DIR)/target/bench-baseline
-	cp BENCH_plan.json BENCH_topology.json $(RUST_DIR)/target/bench-baseline/
+	cp BENCH_plan.json BENCH_topology.json BENCH_replan.json \
+		$(RUST_DIR)/target/bench-baseline/
 	cd $(RUST_DIR) && cargo bench --bench sweep
 	cd $(RUST_DIR) && cargo bench --bench planner
 	cd $(RUST_DIR) && cargo bench --bench topology
+	cd $(RUST_DIR) && cargo bench --bench replan
 	cd $(RUST_DIR) && cargo test --test artifacts -q
 	$(PYTHON) python/bench_budget.py \
 		--baseline $(RUST_DIR)/target/bench-baseline --current . --tolerance 0.15
 
-bench-all: bench bench-plan bench-topo bench-service bench-validate
+bench-all: bench bench-plan bench-topo bench-service bench-validate bench-replan
 	cd $(RUST_DIR) && cargo bench --bench interp_hot_path
 	cd $(RUST_DIR) && cargo bench --bench calibration
 	cd $(RUST_DIR) && cargo bench --bench simulator

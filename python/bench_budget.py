@@ -28,7 +28,7 @@ import json
 import os
 import sys
 
-DEFAULT_FILES = ["BENCH_plan.json", "BENCH_topology.json"]
+DEFAULT_FILES = ["BENCH_plan.json", "BENCH_topology.json", "BENCH_replan.json"]
 BUDGET_SUFFIX = "_ms_median"
 
 

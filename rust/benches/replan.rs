@@ -1,0 +1,131 @@
+//! Bench: differential re-planning — a full from-scratch re-search of
+//! the patched inputs vs the incremental `planner::replan` across delta
+//! kinds (window demand edit, GPU reprice, added fleet leg). The first
+//! two patch the retained frontier without any oracle work; the add-leg
+//! delta re-sweeps exactly one leg — the bench records how much of the
+//! full sweep each kind saves.
+//!
+//! Run: `cargo bench --bench replan` (or `make bench-replan`).
+//! Writes the measured medians to ../BENCH_replan.json.
+
+use aiconfigurator::config::WorkloadSpec;
+use aiconfigurator::frameworks::Framework;
+use aiconfigurator::hardware::{a100_sxm, h100_sxm, h200_sxm, ClusterSpec};
+use aiconfigurator::models::by_name;
+use aiconfigurator::perfdb::{LatencyOracle, MemoOracle};
+use aiconfigurator::planner::{self, PlanSpec, TrafficModel};
+use aiconfigurator::search::SearchDelta;
+use aiconfigurator::silicon::Silicon;
+use aiconfigurator::util::bench::{bench, black_box};
+use aiconfigurator::util::json::{self, Json};
+use aiconfigurator::util::stats;
+
+fn main() {
+    let model_name = "llama3.1-8b";
+    let model = by_name(model_name).unwrap();
+    let framework = Framework::TrtLlm;
+    let wl = WorkloadSpec::new(model_name, 1024, 128, 2000.0, 10.0);
+    let windows = 24usize;
+    let spec = PlanSpec::new(
+        wl.clone(),
+        TrafficModel::Diurnal { peak_qps: 80.0, trough_qps: 4.0, period_h: 24.0 },
+        windows,
+        1.0,
+    );
+    let legs = [ClusterSpec::new(h100_sxm(), 8, 1), ClusterSpec::new(a100_sxm(), 8, 1)];
+    let sils: Vec<Silicon> =
+        legs.iter().map(|c| Silicon::new(*c, framework.profile())).collect();
+    let h200 = ClusterSpec::new(h200_sxm(), 8, 1);
+    let h200_sil = Silicon::new(h200, framework.profile());
+
+    let window_delta = SearchDelta {
+        window_edits: vec![(2, 140.0), (9, 15.0), (17, 55.0)],
+        ..SearchDelta::default()
+    };
+    let reprice_delta = SearchDelta {
+        reprice: vec![("h100".to_string(), 1.49)],
+        ..SearchDelta::default()
+    };
+    let addleg_delta =
+        SearchDelta { add_legs: vec!["h200".to_string()], ..SearchDelta::default() };
+
+    // Baseline arena once, for the sweep-size denominator.
+    let memos: Vec<MemoOracle<'_>> =
+        sils.iter().map(|s| MemoOracle::new(s as &dyn LatencyOracle)).collect();
+    let fleet: Vec<(ClusterSpec, &MemoOracle<'_>)> =
+        legs.iter().zip(&memos).map(|(c, m)| (*c, m)).collect();
+    let (_, arena0) = planner::plan_arena(&model, framework, &spec, &fleet).unwrap();
+    let baseline_priced = arena0.baseline_priced_configs();
+
+    // Full from-scratch re-search of the window-edited inputs: fresh
+    // memos each iteration, exactly what a cold `plan` pays.
+    let mut full_spec = spec.clone();
+    full_spec.demand_override = window_delta.window_edits.clone();
+    let full = bench(&format!("replan-full-resweep-{windows}w/{model_name}"), 1, 5, || {
+        let cold: Vec<(ClusterSpec, &dyn LatencyOracle)> =
+            legs.iter().zip(&sils).map(|(c, s)| (*c, s as &dyn LatencyOracle)).collect();
+        black_box(planner::plan(&model, framework, &full_spec, &cold).unwrap());
+    });
+
+    // Incremental replans. Window edits and reprices are idempotent, so
+    // one retained arena serves every sample; the add-leg delta grows
+    // the arena, so each sample rebuilds its arena untimed and only the
+    // `replan` call is clocked.
+    let (baseline, mut arena) = planner::plan_arena(&model, framework, &spec, &fleet).unwrap();
+    let win = bench(&format!("replan-window-edit-{windows}w/{model_name}"), 1, 5, || {
+        black_box(
+            planner::replan(&model, framework, &mut arena, &baseline, &window_delta, &[])
+                .unwrap(),
+        );
+    });
+    let rep = bench(&format!("replan-reprice-{windows}w/{model_name}"), 1, 5, || {
+        black_box(
+            planner::replan(&model, framework, &mut arena, &baseline, &reprice_delta, &[])
+                .unwrap(),
+        );
+    });
+
+    let mut addleg_samples = Vec::new();
+    let mut addleg_repriced = 0usize;
+    for _ in 0..5 {
+        let (base, mut arena) = planner::plan_arena(&model, framework, &spec, &fleet).unwrap();
+        let memo = MemoOracle::new(&h200_sil as &dyn LatencyOracle);
+        let swept = [(h200, &memo)];
+        let t = std::time::Instant::now();
+        let r = planner::replan(&model, framework, &mut arena, &base, &addleg_delta, &swept)
+            .unwrap();
+        addleg_samples.push(t.elapsed().as_secs_f64() * 1e3);
+        addleg_repriced = r.repriced_configs;
+    }
+    let addleg_ms = stats::median(&addleg_samples);
+    println!(
+        "replan-addleg-{windows}w/{model_name}: median {addleg_ms:.3} ms \
+         ({addleg_repriced} configs re-priced)"
+    );
+    println!(
+        "    -> full re-search prices {baseline_priced} configs in {:.1} ms; window-edit \
+         replan {:.3} ms ({:.0}x), add-leg replan {:.1} ms pricing {addleg_repriced}",
+        full.median_ms(),
+        win.median_ms(),
+        full.median_ms() / win.median_ms().max(1e-9),
+        addleg_ms,
+    );
+
+    // Record the run (cwd is rust/ under `cargo bench`).
+    let mut o = Json::obj();
+    o.set("bench", json::s("replan"))
+        .set("model", json::s(model_name))
+        .set("windows", json::num(windows as f64))
+        .set("baseline_priced_configs", json::num(baseline_priced as f64))
+        .set("full_resweep_ms_median", json::num(full.median_ms()))
+        .set("replan_window_ms_median", json::num(win.median_ms()))
+        .set("replan_reprice_ms_median", json::num(rep.median_ms()))
+        .set("replan_addleg_ms_median", json::num(addleg_ms))
+        .set("addleg_repriced_configs", json::num(addleg_repriced as f64))
+        .set("window_speedup", json::num(full.median_ms() / win.median_ms().max(1e-9)))
+        .set("addleg_speedup", json::num(full.median_ms() / addleg_ms.max(1e-9)));
+    match std::fs::write("../BENCH_replan.json", o.to_string()) {
+        Ok(()) => println!("    -> wrote ../BENCH_replan.json"),
+        Err(e) => println!("    -> could not write ../BENCH_replan.json: {e}"),
+    }
+}

@@ -31,7 +31,7 @@ use aiconfigurator::perfdb::{
 };
 use aiconfigurator::planner::TrafficModel;
 use aiconfigurator::runtime::{PjrtOracle, PjrtService};
-use aiconfigurator::search::{SearchSpace, TaskRunner};
+use aiconfigurator::search::{SearchDelta, SearchSpace, TaskRunner};
 use aiconfigurator::service::protocol::SpaceOverrides;
 use aiconfigurator::service::{SearchServer, ServerConfig};
 use aiconfigurator::silicon::Silicon;
@@ -87,6 +87,29 @@ USAGE:
                                        [--burst-prob 0.15] [--burst-seed 7]
                             [--windows 24] [--window-hours 1] [--max-gpus N]
                             [--no-prune] [--out-dir DIR] [--calibration FILE.json]
+  aiconfigurator replan     --model <name> [--fleet h100,a100@a100-pcie]
+                            [--gpus-per-node 8] [--nodes 1] [--framework trtllm]
+                            --isl N --osl N [--ttft MS] [--speed TOK_S]
+                            (--traffic ... as `plan`) [--windows 24]
+                            [--window-hours 1] [--max-gpus N] [--no-prune]
+                            --delta DELTA.json [--calibration FILE.json]
+                            [--out REPORT.json] [--check-equal]
+                            (plans as `plan` would, then applies a committed
+                             search-delta — window demand edits, per-GPU
+                             repricing, a swapped calibration artifact, fleet
+                             legs added/removed — through the incremental
+                             replan layer: only recalibrated/added legs are
+                             re-swept, everything else patches the retained
+                             Pareto frontier. Prints the config diff (options
+                             that entered/left the frontier, windows whose
+                             deployment changed, cost delta) and the
+                             re-priced-candidate counts. With 'recalibrate'
+                             deltas, --calibration is the *swapped* artifact:
+                             the baseline stays analytic. --check-equal also
+                             runs the full from-scratch plan of the patched
+                             inputs and exits non-zero unless the incremental
+                             result is bit-identical and re-priced strictly
+                             fewer configs — the CI replan-smoke gate)
   aiconfigurator validate   --model <name> [--fleet h100,a100@a100-pcie]
                             [--gpus-per-node 8] [--nodes 1] [--framework trtllm]
                             --isl N --osl N [--ttft MS] [--speed TOK_S]
@@ -165,6 +188,7 @@ fn main() {
         "sweep" => cmd_sweep(&flags),
         "topo" => cmd_topo(&flags),
         "plan" => cmd_plan(&flags),
+        "replan" => cmd_replan(&flags),
         "validate" => cmd_validate(&flags),
         "calibrate" => cmd_calibrate(&flags),
         "build-db" => cmd_build_db(&flags),
@@ -825,6 +849,7 @@ fn cmd_plan(f: &HashMap<String, String>) -> anyhow::Result<()> {
             None
         },
         prune: !f.contains_key("no-prune"),
+        demand_override: Vec::new(),
     };
     let legs = build_fleet_legs(f, &model, framework)?;
     let fleet: Vec<(ClusterSpec, &dyn LatencyOracle)> =
@@ -916,6 +941,230 @@ fn cmd_plan(f: &HashMap<String, String>) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Build one fleet leg from its `GPU[@FABRIC]` token — the per-leg
+/// half of [`build_fleet_legs`], used by `replan` for legs the delta
+/// recalibrates or adds (each gets its own oracle, composed over the
+/// artifact only when one is passed *and* matches the leg's GPU).
+fn build_plan_leg(
+    token: &str,
+    gpn: u32,
+    nodes: u32,
+    model: &aiconfigurator::models::ModelArch,
+    framework: Framework,
+    artifact: Option<&CalibrationArtifact>,
+) -> anyhow::Result<PlanLeg> {
+    let leg = aiconfigurator::hardware::parse_fleet_leg(token, gpn)?;
+    let cluster = ClusterSpec::with_fabric(leg.gpu, gpn, nodes, leg.fabric);
+    let silicon = Silicon::new(cluster, framework.profile());
+    eprintln!("profiling fleet leg {} ({} GPUs)...", leg.gpu.name, cluster.total_gpus());
+    let db = PerfDatabase::build(&silicon, model, leg.gpu.preferred_kv_dtype(), 0xA1C0);
+    let oracle: Box<dyn LatencyOracle> = match artifact {
+        Some(art) if art.gpu == leg.gpu.name => Box::new(CalibratedDb::compose(db, art)?),
+        _ => Box::new(db),
+    };
+    Ok(PlanLeg { cluster, silicon, oracle })
+}
+
+/// `replan`: plan exactly as `plan` would, then apply a committed
+/// [`SearchDelta`] through the incremental replan layer — only
+/// recalibrated/added legs are re-swept; window edits, GPU repricing
+/// and leg removals patch the retained Pareto frontier — and print the
+/// config diff plus the re-priced-candidate counts. `--check-equal`
+/// additionally runs the full from-scratch plan of the patched inputs
+/// and exits non-zero unless the incremental result is bit-identical
+/// and re-priced strictly fewer configs (the CI replan-smoke gate).
+/// With `recalibrate` deltas, the baseline fleet is built *without*
+/// `--calibration` and the recalibrated legs are rebuilt *with* it —
+/// the artifact is the "swapped calibration" the delta describes.
+fn cmd_replan(f: &HashMap<String, String>) -> anyhow::Result<()> {
+    let (model, framework, wl) = parse_plan_workload(f)?;
+    let spec = aiconfigurator::planner::PlanSpec {
+        workload: wl.clone(),
+        traffic: parse_traffic(f)?,
+        windows: flag_u32(f, "windows", 24)? as usize,
+        window_h: flag_f64(f, "window-hours", 1.0)?,
+        max_gpus: if f.contains_key("max-gpus") {
+            Some(flag_u32(f, "max-gpus", 0)?)
+        } else {
+            None
+        },
+        prune: !f.contains_key("no-prune"),
+        demand_override: Vec::new(),
+    };
+    let delta_path = f
+        .get("delta")
+        .ok_or_else(|| anyhow::anyhow!("--delta FILE.json is required (a search-delta spec)"))?;
+    let delta_text = std::fs::read_to_string(Path::new(delta_path))
+        .map_err(|e| anyhow::anyhow!("cannot read delta spec {delta_path}: {e}"))?;
+    let delta = SearchDelta::from_json(&aiconfigurator::util::json::parse(&delta_text)?)?;
+    let gpn = flag_u32(f, "gpus-per-node", 8)?;
+    let nodes = flag_u32(f, "nodes", 1)?;
+    let artifact = match f.get("calibration") {
+        Some(path) => Some(CalibrationArtifact::load(Path::new(path))?),
+        None => None,
+    };
+    if !delta.recalibrate.is_empty() {
+        let art = artifact.as_ref().ok_or_else(|| {
+            anyhow::anyhow!(
+                "the delta recalibrates {:?} but no --calibration artifact was passed \
+                 (the artifact is the swapped calibration)",
+                delta.recalibrate
+            )
+        })?;
+        for token in &delta.recalibrate {
+            let leg = aiconfigurator::hardware::parse_fleet_leg(token, gpn)?;
+            anyhow::ensure!(
+                art.gpu == leg.gpu.name,
+                "--calibration artifact is for gpu '{}' but the delta recalibrates '{}'",
+                art.gpu,
+                leg.gpu.name
+            );
+        }
+    }
+
+    // Baseline fleet, always analytic: with a recalibrate delta the
+    // artifact describes the *new* state, not the baseline.
+    let tokens: Vec<String> = flag(f, "fleet", "h100")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    anyhow::ensure!(!tokens.is_empty(), "--fleet named no GPU types");
+    let t0 = std::time::Instant::now();
+    let legs: Vec<PlanLeg> = tokens
+        .iter()
+        .map(|t| build_plan_leg(t, gpn, nodes, &model, framework, None))
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    let memos: Vec<MemoOracle<'_>> =
+        legs.iter().map(|l| MemoOracle::new(l.oracle.as_ref())).collect();
+    let fleet: Vec<(ClusterSpec, &MemoOracle<'_>)> =
+        legs.iter().zip(&memos).map(|(l, m)| (l.cluster, m)).collect();
+    let (baseline, mut arena) =
+        aiconfigurator::planner::plan_arena(&model, framework, &spec, &fleet)?;
+    let baseline_s = t0.elapsed().as_secs_f64();
+
+    // Legs the delta re-sweeps: recalibrated (with the artifact), then
+    // added (analytic) — the order `planner::replan` expects.
+    let swept_legs: Vec<PlanLeg> = delta
+        .recalibrate
+        .iter()
+        .map(|t| build_plan_leg(t, gpn, nodes, &model, framework, artifact.as_ref()))
+        .chain(
+            delta
+                .add_legs
+                .iter()
+                .map(|t| build_plan_leg(t, gpn, nodes, &model, framework, None)),
+        )
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    let swept_memos: Vec<MemoOracle<'_>> =
+        swept_legs.iter().map(|l| MemoOracle::new(l.oracle.as_ref())).collect();
+    let swept: Vec<(ClusterSpec, &MemoOracle<'_>)> =
+        swept_legs.iter().zip(&swept_memos).map(|(l, m)| (l.cluster, m)).collect();
+
+    let t1 = std::time::Instant::now();
+    let rep =
+        aiconfigurator::planner::replan(&model, framework, &mut arena, &baseline, &delta, &swept)?;
+    let replan_s = t1.elapsed().as_secs_f64();
+
+    println!(
+        "replanned in {replan_s:.3}s (baseline plan took {baseline_s:.2}s) — re-priced {} \
+         engine configs; a full re-search would price {}",
+        rep.repriced_configs, rep.baseline_priced_configs
+    );
+    println!(
+        "plan: ${:.2} over {} windows ({} window(s) changed deployment vs baseline ${:.2})",
+        rep.plan.total_cost_usd,
+        rep.plan.windows.len(),
+        rep.windows_changed,
+        baseline.total_cost_usd
+    );
+    for label in &rep.entered {
+        println!("  + entered frontier: {label}");
+    }
+    for label in &rep.left {
+        println!("  - left frontier:    {label}");
+    }
+    if rep.entered.is_empty() && rep.left.is_empty() {
+        println!("  frontier membership unchanged");
+    }
+
+    if let Some(out) = f.get("out") {
+        let path = Path::new(out);
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, rep.to_json(&wl).to_string())?;
+        println!("wrote replan report to {out}");
+    }
+
+    if f.contains_key("check-equal") {
+        // From-scratch reference: the patched fleet in canonical order
+        // (removed legs dropped, added legs appended), repriced GPUs,
+        // recalibrated legs under the artifact, window edits as demand
+        // overrides.
+        let mut patched_tokens = tokens.clone();
+        for r in &delta.remove_legs {
+            let gpu = gpu_by_name(r)
+                .ok_or_else(|| anyhow::anyhow!("unknown gpu '{r}' in delta"))?;
+            let pos = patched_tokens
+                .iter()
+                .position(|t| {
+                    aiconfigurator::hardware::parse_fleet_leg(t, gpn)
+                        .map(|l| l.gpu.name == gpu.name)
+                        .unwrap_or(false)
+                })
+                .ok_or_else(|| anyhow::anyhow!("delta removes '{r}' but no fleet leg uses it"))?;
+            patched_tokens.remove(pos);
+        }
+        patched_tokens.extend(delta.add_legs.iter().cloned());
+        let recalibrated: Vec<&str> = delta
+            .recalibrate
+            .iter()
+            .map(|t| aiconfigurator::hardware::parse_fleet_leg(t, gpn).map(|l| l.gpu.name))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let mut fresh_legs: Vec<PlanLeg> = Vec::new();
+        for t in &patched_tokens {
+            let leg_gpu = aiconfigurator::hardware::parse_fleet_leg(t, gpn)?.gpu.name;
+            let art = if recalibrated.contains(&leg_gpu) { artifact.as_ref() } else { None };
+            let mut leg = build_plan_leg(t, gpn, nodes, &model, framework, art)?;
+            for (g, price) in &delta.reprice {
+                let gpu = gpu_by_name(g)
+                    .ok_or_else(|| anyhow::anyhow!("unknown gpu '{g}' in delta"))?;
+                if leg.cluster.gpu.name == gpu.name {
+                    leg.cluster.gpu.usd_per_hour = *price;
+                }
+            }
+            fresh_legs.push(leg);
+        }
+        let mut patched_spec = spec.clone();
+        patched_spec.demand_override = delta.window_edits.clone();
+        let fresh_fleet: Vec<(ClusterSpec, &dyn LatencyOracle)> =
+            fresh_legs.iter().map(|l| (l.cluster, l.oracle.as_ref())).collect();
+        let fresh =
+            aiconfigurator::planner::plan(&model, framework, &patched_spec, &fresh_fleet)?;
+        anyhow::ensure!(
+            rep.plan.to_json(&wl).to_string() == fresh.to_json(&wl).to_string(),
+            "replan-equivalence check FAILED: the incremental replan differs from the \
+             from-scratch plan of the patched inputs (incremental ${:.4} vs fresh ${:.4})",
+            rep.plan.total_cost_usd,
+            fresh.total_cost_usd
+        );
+        anyhow::ensure!(
+            rep.repriced_configs < rep.baseline_priced_configs,
+            "replan-equivalence check FAILED: replan re-priced {} configs but a full \
+             re-search prices {} — no work was saved",
+            rep.repriced_configs,
+            rep.baseline_priced_configs
+        );
+        println!(
+            "check passed: incremental replan is bit-identical to the from-scratch plan \
+             and re-priced {}/{} configs",
+            rep.repriced_configs, rep.baseline_priced_configs
+        );
+    }
+    Ok(())
+}
+
 /// Load a committed trace spec: a small JSON file pinning the traffic
 /// model, horizon and seeds so CI replays the *same* trace every run
 /// (`artifacts/traces/*.json`). Returns
@@ -980,6 +1229,7 @@ fn cmd_validate(f: &HashMap<String, String>) -> anyhow::Result<()> {
             None
         },
         prune: !f.contains_key("no-prune"),
+        demand_override: Vec::new(),
     };
     let legs = build_fleet_legs(f, &model, framework)?;
     let fleet: Vec<(ClusterSpec, &dyn LatencyOracle)> =

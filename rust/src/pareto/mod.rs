@@ -163,6 +163,28 @@ pub struct FrontierAccumulator {
     ptsk: Vec<Vec<f64>>,
     /// How many offers were rejected (dominated or duplicate).
     rejected: usize,
+    /// Tracked-mode arena: every point ever offered through
+    /// [`FrontierAccumulator::offer_tracked`], dominated ones included,
+    /// so a retraction can re-admit formerly-dominated survivors.
+    arena: Vec<TrackedPoint>,
+    /// Arena ids of the live frontier, parallel to `ptsk`.
+    frontier_ids: Vec<usize>,
+}
+
+/// One arena slot of a tracked accumulator (see
+/// [`FrontierAccumulator::offer_tracked`]).
+#[derive(Clone, Debug)]
+struct TrackedPoint {
+    pt: Vec<f64>,
+    /// False once retracted. Retained (not freed) so arena ids stay
+    /// stable across retractions.
+    alive: bool,
+    /// Did the offer discipline accept this point when it was last
+    /// offered/replayed? Mirrors the return value of `offer_point`:
+    /// accepted points may later be *evicted* from the running frontier
+    /// without becoming un-accepted — the planner's conservative
+    /// "kept" semantics ([`crate::planner::prune_options`]).
+    accepted: bool,
 }
 
 impl FrontierAccumulator {
@@ -176,7 +198,10 @@ impl FrontierAccumulator {
         // Hard assert (not debug): a release-mode arity mix would
         // silently split the frontier across the two stores and return
         // wrong dominance answers. The check is O(1) next to the scan.
-        assert!(self.ptsk.is_empty(), "objective arity changed mid-stream");
+        assert!(
+            self.ptsk.is_empty() && self.arena.is_empty(),
+            "objective arity changed mid-stream"
+        );
         for &(s, t) in &self.pts2 {
             if s >= speed && t >= thru {
                 self.rejected += 1;
@@ -201,6 +226,10 @@ impl FrontierAccumulator {
         assert!(
             self.pts2.is_empty() && (self.ptsk.is_empty() || self.ptsk[0].len() == p.len()),
             "objective arity changed mid-stream"
+        );
+        assert!(
+            self.arena.is_empty(),
+            "streaming offer on a tracked accumulator — use offer_tracked"
         );
         for q in &self.ptsk {
             if q.iter().zip(p).all(|(a, b)| a >= b) {
@@ -251,6 +280,132 @@ impl FrontierAccumulator {
         self.pts2
             .iter()
             .any(|&(s, t)| (s >= speed && t >= thru) && (s > speed || t > thru))
+    }
+
+    // --- Tracked mode (differential replan) -----------------------------
+    //
+    // The replan path (DESIGN.md §11) needs the frontier to support
+    // *retractions*: when a delta invalidates a priced option, the
+    // option leaves the accumulator and any point it had dominated must
+    // be re-admitted. Tracked mode therefore retains every offered
+    // point — the dominated-set arena — under a stable arena id.
+    //
+    // Bit-equality contract: after any interleaving of
+    // `offer_tracked` / `retract` / `update`, [`Self::kept_ids`] is
+    // exactly the accepted set produced by streaming the *live* arena
+    // points through [`Self::offer_point`] in ascending id order, and
+    // [`Self::frontier_ids`] is (as a set) `k_frontier_indices` over the
+    // live points. `rejected()` accumulates across internal replays and
+    // is NOT pinned against a from-scratch run.
+    //
+    // A retraction of a point that was *rejected* at offer is O(1): a
+    // rejected point never entered the running frontier, so it cannot
+    // have influenced any later accept/evict decision. Retracting or
+    // updating an *accepted* point replays the live points in id order —
+    // acceptance of later offers may depend on it (directly or through a
+    // chain of evictions), so nothing short of a replay preserves the
+    // streaming semantics the planner's conservative kept-set pins.
+
+    /// Offer a point in tracked mode, returning its stable arena id.
+    /// Tracked mode is k-objective only and exclusive with the
+    /// streaming `offer`/`offer_point` surface on one accumulator.
+    pub fn offer_tracked(&mut self, p: &[f64]) -> usize {
+        assert!(
+            self.pts2.is_empty() && p.len() > 2,
+            "tracked mode is k-objective (k > 2) only"
+        );
+        assert!(
+            self.arena.is_empty() || self.arena[0].pt.len() == p.len(),
+            "objective arity changed mid-stream"
+        );
+        let id = self.arena.len();
+        self.arena.push(TrackedPoint { pt: p.to_vec(), alive: true, accepted: false });
+        self.admit(id);
+        id
+    }
+
+    /// Retract an arena point (idempotent). See the tracked-mode notes
+    /// above for why accepted points trigger a replay.
+    pub fn retract(&mut self, id: usize) {
+        assert!(id < self.arena.len(), "retract of unknown arena id {id}");
+        if !self.arena[id].alive {
+            return;
+        }
+        self.arena[id].alive = false;
+        if self.arena[id].accepted {
+            self.replay();
+        }
+    }
+
+    /// Replace an arena point's objectives in place (re-pricing) and
+    /// revive it if retracted. Always replays: the new value can change
+    /// every downstream accept/evict decision.
+    pub fn update(&mut self, id: usize, p: &[f64]) {
+        assert!(id < self.arena.len(), "update of unknown arena id {id}");
+        assert_eq!(self.arena[id].pt.len(), p.len(), "objective arity changed mid-stream");
+        self.arena[id].pt = p.to_vec();
+        self.arena[id].alive = true;
+        self.replay();
+    }
+
+    /// Is this arena point live and offer-accepted?
+    pub fn is_kept(&self, id: usize) -> bool {
+        self.arena[id].alive && self.arena[id].accepted
+    }
+
+    /// Live, offer-accepted arena ids in ascending order — the
+    /// conservative kept set (superset of the live frontier).
+    pub fn kept_ids(&self) -> Vec<usize> {
+        (0..self.arena.len()).filter(|&id| self.is_kept(id)).collect()
+    }
+
+    /// Arena ids of the live frontier, in offer-survival order.
+    pub fn frontier_ids(&self) -> &[usize] {
+        &self.frontier_ids
+    }
+
+    /// Number of live arena points.
+    pub fn live_len(&self) -> usize {
+        self.arena.iter().filter(|t| t.alive).count()
+    }
+
+    /// Run the offer discipline for arena point `id` against the live
+    /// frontier, recording the accept/reject outcome. Mirrors
+    /// [`Self::offer_point`]'s generic branch exactly, with `ptsk` and
+    /// `frontier_ids` kept parallel.
+    fn admit(&mut self, id: usize) {
+        let p = self.arena[id].pt.clone();
+        for q in &self.ptsk {
+            if q.iter().zip(&p).all(|(a, b)| a >= b) {
+                self.rejected += 1;
+                self.arena[id].accepted = false;
+                return;
+            }
+        }
+        let mut i = 0;
+        while i < self.ptsk.len() {
+            if p.iter().zip(self.ptsk[i].iter()).all(|(a, b)| a >= b) {
+                self.ptsk.remove(i);
+                self.frontier_ids.remove(i);
+            } else {
+                i += 1;
+            }
+        }
+        self.ptsk.push(p);
+        self.frontier_ids.push(id);
+        self.arena[id].accepted = true;
+    }
+
+    /// Rebuild the running frontier by streaming every live arena point
+    /// through the offer discipline in ascending id order.
+    fn replay(&mut self) {
+        self.ptsk.clear();
+        self.frontier_ids.clear();
+        for id in 0..self.arena.len() {
+            if self.arena[id].alive {
+                self.admit(id);
+            }
+        }
     }
 }
 
@@ -567,5 +722,139 @@ mod tests {
         assert!(a.best().is_none());
         assert!(a.frontier.is_empty());
         assert!(frontier_indices(&[]).is_empty());
+    }
+
+    /// Reference for the tracked-mode bit-equality contract: stream the
+    /// live arena points through a fresh streaming accumulator in id
+    /// order and report (kept ids, frontier ids as a sorted set).
+    fn tracked_reference(pts: &[(Vec<f64>, bool)]) -> (Vec<usize>, Vec<usize>) {
+        let mut acc = FrontierAccumulator::new();
+        let mut kept = Vec::new();
+        for (id, (p, alive)) in pts.iter().enumerate() {
+            if *alive && acc.offer_point(p) {
+                kept.push(id);
+            }
+        }
+        let live: Vec<Vec<f64>> = pts.iter().filter(|(_, a)| *a).map(|(p, _)| p.clone()).collect();
+        let live_ids: Vec<usize> =
+            (0..pts.len()).filter(|&i| pts[i].1).collect();
+        let frontier: Vec<usize> =
+            k_frontier_indices(&live).into_iter().map(|i| live_ids[i]).collect();
+        (kept, frontier)
+    }
+
+    #[test]
+    fn tracked_offers_match_streaming_offers() {
+        let mut rng = Rng::new(0x7A5C);
+        let pts: Vec<Vec<f64>> = (0..60)
+            .map(|_| {
+                vec![
+                    -(rng.f64() * 5.0).round() * 2.0,
+                    (rng.f64() * 5.0).round() * 3.0,
+                    (rng.f64() * 5.0).round() * 7.0,
+                ]
+            })
+            .collect();
+        let mut tracked = FrontierAccumulator::new();
+        let mut streaming = FrontierAccumulator::new();
+        for p in &pts {
+            let id = tracked.offer_tracked(p);
+            assert_eq!(tracked.is_kept(id), streaming.offer_point(p));
+        }
+        assert_eq!(tracked.len(), streaming.len());
+        assert_eq!(tracked.rejected(), streaming.rejected());
+    }
+
+    /// Retracting a frontier member re-admits the points it had
+    /// dominated; retracting a rejected point is a pure tombstone.
+    #[test]
+    fn retract_readmits_formerly_dominated_points() {
+        let mut acc = FrontierAccumulator::new();
+        let a = acc.offer_tracked(&[5.0, 5.0, 5.0]);
+        let b = acc.offer_tracked(&[3.0, 3.0, 3.0]); // dominated by a
+        let c = acc.offer_tracked(&[1.0, 9.0, 1.0]); // trade-off, kept
+        assert!(acc.is_kept(a) && !acc.is_kept(b) && acc.is_kept(c));
+        assert_eq!(acc.kept_ids(), vec![a, c]);
+
+        acc.retract(a);
+        assert!(!acc.is_kept(a), "retracted point leaves the kept set");
+        assert!(acc.is_kept(b), "formerly-dominated point re-admitted");
+        assert_eq!(acc.kept_ids(), vec![b, c]);
+        let mut f = acc.frontier_ids().to_vec();
+        f.sort_unstable();
+        assert_eq!(f, vec![b, c]);
+
+        // b was rejected at its original offer but is accepted now;
+        // retracting c (accepted) replays, retracting b twice is a no-op.
+        acc.retract(b);
+        acc.retract(b);
+        assert_eq!(acc.kept_ids(), vec![c]);
+    }
+
+    /// `update` re-prices a point in place: the id is stable, and the
+    /// kept set tracks the new objectives exactly as a from-scratch
+    /// stream over the updated values would.
+    #[test]
+    fn update_reprices_in_place() {
+        let mut acc = FrontierAccumulator::new();
+        let a = acc.offer_tracked(&[5.0, 5.0, 5.0]);
+        let b = acc.offer_tracked(&[4.0, 4.0, 4.0]); // dominated
+        acc.update(a, &[2.0, 2.0, 2.0]); // a collapses below b
+        assert!(!acc.is_kept(a), "updated point now dominated by b");
+        assert!(acc.is_kept(b));
+        acc.update(a, &[9.0, 9.0, 9.0]);
+        assert!(acc.is_kept(a));
+        assert!(!acc.is_kept(b), "b dominated again after a's re-price");
+        assert_eq!(acc.live_len(), 2);
+    }
+
+    /// Random interleavings of offer/retract/update match the
+    /// from-scratch reference after every mutation (the tracked-mode
+    /// bit-equality pin; mirrored at scale in tests/proptests.rs).
+    #[test]
+    fn tracked_interleavings_match_from_scratch_recompute() {
+        let mut rng = Rng::new(0xDE17A);
+        for case in 0..40 {
+            let mut acc = FrontierAccumulator::new();
+            let mut mirror: Vec<(Vec<f64>, bool)> = Vec::new();
+            for _ in 0..60 {
+                let roll = rng.below(10);
+                if roll < 5 || mirror.is_empty() {
+                    let p = vec![
+                        -(rng.f64() * 4.0).round() * 2.0,
+                        (rng.f64() * 4.0).round() * 3.0,
+                        (rng.f64() * 4.0).round() * 5.0,
+                    ];
+                    let id = acc.offer_tracked(&p);
+                    assert_eq!(id, mirror.len(), "case {case}: arena ids are dense");
+                    mirror.push((p, true));
+                } else if roll < 8 {
+                    let id = rng.below(mirror.len() as u64) as usize;
+                    acc.retract(id);
+                    mirror[id].1 = false;
+                } else {
+                    let id = rng.below(mirror.len() as u64) as usize;
+                    let p = vec![
+                        -(rng.f64() * 4.0).round() * 2.0,
+                        (rng.f64() * 4.0).round() * 3.0,
+                        (rng.f64() * 4.0).round() * 5.0,
+                    ];
+                    acc.update(id, &p);
+                    mirror[id] = (p, true);
+                }
+                let (kept_ref, frontier_ref) = tracked_reference(&mirror);
+                assert_eq!(acc.kept_ids(), kept_ref, "case {case}: kept set diverged");
+                let mut f = acc.frontier_ids().to_vec();
+                f.sort_unstable();
+                let mut fr = frontier_ref;
+                fr.sort_unstable();
+                // Frontier compared by value: duplicates may be
+                // represented by different (equal-valued) ids.
+                let vals = |ids: &[usize]| -> Vec<&Vec<f64>> {
+                    ids.iter().map(|&i| &mirror[i].0).collect()
+                };
+                assert_eq!(vals(&f), vals(&fr), "case {case}: frontier diverged");
+            }
+        }
     }
 }

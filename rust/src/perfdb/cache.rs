@@ -26,6 +26,23 @@ use super::LatencyOracle;
 
 const SHARDS: usize = 16;
 
+/// Op-class tag numbering of the memo key. Public because the
+/// differential-replan layer ([`crate::search::delta`]) keys its
+/// invalidation masks by these tags: a delta names the op classes it
+/// perturbs as a bitmask (`1 << TAG_*`) and [`MemoStore::invalidate_tags`]
+/// drops exactly those entries.
+pub const TAG_GEMM: u8 = 0;
+pub const TAG_ATTN_PREFILL: u8 = 1;
+pub const TAG_ATTN_DECODE: u8 = 2;
+pub const TAG_MOE_GEMM: u8 = 3;
+pub const TAG_ALL_REDUCE: u8 = 4;
+pub const TAG_ALL_GATHER: u8 = 5;
+pub const TAG_ALL_TO_ALL: u8 = 6;
+pub const TAG_P2P: u8 = 7;
+pub const TAG_ELEMENTWISE: u8 = 8;
+/// Number of distinct op tags (mask bits above this are meaningless).
+pub const NUM_TAGS: u8 = 9;
+
 /// Hashable identity of an op instance (count excluded).
 #[derive(Clone, Copy, PartialEq, Eq, Hash)]
 struct OpKey {
@@ -37,13 +54,29 @@ struct OpKey {
     e: u64,
 }
 
+/// The memo tag of an op (the delta layer's invalidation granularity).
+pub fn op_tag(op: &Op) -> u8 {
+    match op {
+        Op::Gemm { .. } => TAG_GEMM,
+        Op::AttnPrefill { .. } => TAG_ATTN_PREFILL,
+        Op::AttnDecode { .. } => TAG_ATTN_DECODE,
+        Op::MoeGemm { .. } => TAG_MOE_GEMM,
+        Op::AllReduce { .. } => TAG_ALL_REDUCE,
+        Op::AllGather { .. } => TAG_ALL_GATHER,
+        Op::AllToAll { .. } => TAG_ALL_TO_ALL,
+        Op::P2p { .. } => TAG_P2P,
+        Op::Elementwise { .. } => TAG_ELEMENTWISE,
+    }
+}
+
 fn key_of(op: &Op) -> OpKey {
+    let tag = op_tag(op);
     match *op {
         Op::Gemm { m, n, k, dtype, .. } => {
-            OpKey { tag: 0, a: m, b: n, c: k, d: dtype as u64, e: 0 }
+            OpKey { tag, a: m, b: n, c: k, d: dtype as u64, e: 0 }
         }
         Op::AttnPrefill { q_tokens, kv_len, heads, head_dim, causal_frac, .. } => OpKey {
-            tag: 1,
+            tag,
             a: q_tokens,
             b: kv_len,
             c: heads,
@@ -51,7 +84,7 @@ fn key_of(op: &Op) -> OpKey {
             e: causal_frac.to_bits(),
         },
         Op::AttnDecode { batch, kv_len, heads, head_dim, kv_token_bytes, .. } => OpKey {
-            tag: 2,
+            tag,
             a: batch,
             b: kv_len,
             c: heads,
@@ -59,7 +92,7 @@ fn key_of(op: &Op) -> OpKey {
             e: kv_token_bytes.to_bits(),
         },
         Op::MoeGemm { tokens, experts, inter, hidden, dtype, imbalance, .. } => OpKey {
-            tag: 3,
+            tag,
             a: tokens,
             b: experts,
             c: inter ^ (hidden << 32),
@@ -69,19 +102,19 @@ fn key_of(op: &Op) -> OpKey {
         // The placement (span, rails) is part of the price: two
         // layouts of the same group must never share a memo slot.
         Op::AllReduce { bytes, gpus, span, rails, .. } => {
-            OpKey { tag: 4, a: bytes.to_bits(), b: gpus as u64, c: span as u64, d: rails as u64, e: 0 }
+            OpKey { tag, a: bytes.to_bits(), b: gpus as u64, c: span as u64, d: rails as u64, e: 0 }
         }
         Op::AllGather { bytes, gpus, span, rails, .. } => {
-            OpKey { tag: 5, a: bytes.to_bits(), b: gpus as u64, c: span as u64, d: rails as u64, e: 0 }
+            OpKey { tag, a: bytes.to_bits(), b: gpus as u64, c: span as u64, d: rails as u64, e: 0 }
         }
         Op::AllToAll { bytes, gpus, span, rails, .. } => {
-            OpKey { tag: 6, a: bytes.to_bits(), b: gpus as u64, c: span as u64, d: rails as u64, e: 0 }
+            OpKey { tag, a: bytes.to_bits(), b: gpus as u64, c: span as u64, d: rails as u64, e: 0 }
         }
         Op::P2p { bytes, cross_node, .. } => {
-            OpKey { tag: 7, a: bytes.to_bits(), b: cross_node as u64, c: 0, d: 0, e: 0 }
+            OpKey { tag, a: bytes.to_bits(), b: cross_node as u64, c: 0, d: 0, e: 0 }
         }
         Op::Elementwise { bytes, .. } => {
-            OpKey { tag: 8, a: bytes.to_bits(), b: 0, c: 0, d: 0, e: 0 }
+            OpKey { tag, a: bytes.to_bits(), b: 0, c: 0, d: 0, e: 0 }
         }
     }
 }
@@ -141,6 +174,25 @@ impl MemoStore {
     /// hits/misses themselves).
     fn get(&self, key: &OpKey) -> Option<f64> {
         self.shards[shard_of(key)].lock().unwrap().get(key).copied()
+    }
+
+    /// Drop every memo entry whose op tag is set in `mask`
+    /// (bit `1 << op_tag(op)` — see the `TAG_*` constants). The
+    /// differential-replan path calls this when a delta perturbs the
+    /// backing oracle's answers for some op classes (e.g. a swapped
+    /// calibration artifact): surviving entries stay bit-identical, so a
+    /// replan through the invalidated store matches a cold re-search
+    /// exactly while re-computing only the dropped classes. Returns the
+    /// number of entries removed. Hit/miss counters are untouched.
+    pub fn invalidate_tags(&self, mask: u64) -> usize {
+        let mut removed = 0;
+        for shard in &self.shards {
+            let mut m = shard.lock().unwrap();
+            let before = m.len();
+            m.retain(|k, _| mask & (1u64 << k.tag) == 0);
+            removed += before - m.len();
+        }
+        removed
     }
 
     /// Bulk-merge a worker-local map, taking each shard lock once.
@@ -214,6 +266,11 @@ impl<'a> MemoOracle<'a> {
 
     pub fn is_empty(&self) -> bool {
         self.store().is_empty()
+    }
+
+    /// See [`MemoStore::invalidate_tags`].
+    pub fn invalidate_tags(&self, mask: u64) -> usize {
+        self.store().invalidate_tags(mask)
     }
 
     /// A worker-private L1 over this memo: lookups hit a thread-owned
@@ -503,6 +560,53 @@ mod tests {
         let (h1, m1) = memo.stats();
         assert_eq!(h1 - h0, ops.len() as u64, "warm shared store must answer reads");
         assert_eq!(m1, ops.len() as u64, "no recomputation after merge");
+    }
+
+    #[test]
+    fn invalidate_tags_drops_exactly_the_masked_classes() {
+        let s = sil();
+        let memo = MemoOracle::new(&s);
+        let gemm = Op::Gemm { m: 128, n: 4096, k: 4096, dtype: Dtype::Fp8, count: 1 };
+        let gemm2 = Op::Gemm { m: 256, n: 4096, k: 4096, dtype: Dtype::Fp8, count: 1 };
+        let ar = Op::AllReduce { bytes: 1e7, gpus: 8, span: 1, rails: 1, count: 1 };
+        let ew = Op::Elementwise { bytes: 1e6, count: 1 };
+        for op in [&gemm, &gemm2, &ar, &ew] {
+            memo.op_latency_us(op);
+        }
+        assert_eq!(memo.len(), 4);
+        let removed = memo.invalidate_tags(1u64 << TAG_GEMM);
+        assert_eq!(removed, 2, "both GEMM shapes dropped, nothing else");
+        assert_eq!(memo.len(), 2);
+        // Survivors still answer as hits; the dropped class recomputes
+        // to a bit-identical value (deterministic inner oracle).
+        let (_, m0) = memo.stats();
+        assert_eq!(memo.op_latency_us(&ar), LatencyOracle::op_latency_us(&s, &ar));
+        assert_eq!(memo.op_latency_us(&gemm), LatencyOracle::op_latency_us(&s, &gemm));
+        let (_, m1) = memo.stats();
+        assert_eq!(m1 - m0, 1, "only the invalidated class misses");
+        // Empty and full masks are the no-op / drop-all extremes.
+        assert_eq!(memo.invalidate_tags(0), 0);
+        assert!(memo.invalidate_tags(!0u64) > 0);
+        assert_eq!(memo.len(), 0);
+    }
+
+    #[test]
+    fn op_tags_are_dense_and_distinct() {
+        let ops = [
+            Op::Gemm { m: 1, n: 1, k: 1, dtype: Dtype::Fp16, count: 1 },
+            Op::AttnPrefill { q_tokens: 1, kv_len: 1, heads: 1, head_dim: 1, causal_frac: 0.0, count: 1 },
+            Op::AttnDecode { batch: 1, kv_len: 1, heads: 1, head_dim: 1, kv_token_bytes: 1.0, count: 1 },
+            Op::MoeGemm { tokens: 1, experts: 1, inter: 1, hidden: 1, dtype: Dtype::Fp16, imbalance: 1.0, count: 1 },
+            Op::AllReduce { bytes: 1.0, gpus: 2, span: 1, rails: 1, count: 1 },
+            Op::AllGather { bytes: 1.0, gpus: 2, span: 1, rails: 1, count: 1 },
+            Op::AllToAll { bytes: 1.0, gpus: 2, span: 1, rails: 1, count: 1 },
+            Op::P2p { bytes: 1.0, cross_node: false, count: 1 },
+            Op::Elementwise { bytes: 1.0, count: 1 },
+        ];
+        let mut tags: Vec<u8> = ops.iter().map(op_tag).collect();
+        tags.sort_unstable();
+        let expect: Vec<u8> = (0..NUM_TAGS).collect();
+        assert_eq!(tags, expect);
     }
 
     #[test]

@@ -26,7 +26,15 @@
 //!    ([`schedule::optimize`]; brute-force-pinned in tests), and the
 //!    plan reports the heterogeneity dividend (vs the best
 //!    single-GPU-type schedule) and the elasticity dividend (vs
-//!    statically provisioning the peak for the whole horizon).
+//!    statically provisioning the peak for the whole horizon);
+//! 4. callers that expect follow-up what-ifs keep the priced state in
+//!    a [`PlanArena`] and apply [`crate::search::SearchDelta`]s with
+//!    [`replan`]: only recalibrated/added legs re-sweep, repricing and
+//!    removals patch the tracked k-objective frontier incrementally
+//!    (retractions re-admit formerly dominated survivors), and window
+//!    edits splice re-chosen windows into the baseline — with the
+//!    result pinned bit-identical to a from-scratch plan of the
+//!    patched inputs.
 
 pub mod options;
 pub mod schedule;
@@ -38,11 +46,12 @@ pub use traffic::TrafficModel;
 
 use crate::config::{Candidate, WorkloadSpec};
 use crate::frameworks::Framework;
-use crate::hardware::ClusterSpec;
+use crate::hardware::{gpu_by_name, ClusterSpec};
 use crate::models::ModelArch;
+use crate::pareto::FrontierAccumulator;
 use crate::perfdb::{LatencyOracle, MemoOracle};
 use crate::perfmodel::PerfEstimate;
-use crate::search::{RunOptions, SearchSpace, TaskRunner};
+use crate::search::{RunOptions, SearchDelta, SearchSpace, TaskRunner};
 use crate::util::json::{self, Json};
 
 /// Planner input.
@@ -60,11 +69,25 @@ pub struct PlanSpec {
     /// k-objective-prune the option set before the window search (the
     /// optimal schedule is preserved exactly; tested).
     pub prune: bool,
+    /// Per-window peak-demand overrides `(window index, peak QPS)`,
+    /// applied over the traffic model's window peaks in order (later
+    /// entries win). The replan layer's window-edit deltas land here,
+    /// so a from-scratch plan of the patched spec is the replan's
+    /// bit-equality reference.
+    pub demand_override: Vec<(usize, f64)>,
 }
 
 impl PlanSpec {
     pub fn new(workload: WorkloadSpec, traffic: TrafficModel, windows: usize, window_h: f64) -> Self {
-        PlanSpec { workload, traffic, windows, window_h, max_gpus: None, prune: true }
+        PlanSpec {
+            workload,
+            traffic,
+            windows,
+            window_h,
+            max_gpus: None,
+            prune: true,
+            demand_override: Vec::new(),
+        }
     }
 }
 
@@ -195,6 +218,27 @@ pub fn plan_cached(
     spec: &PlanSpec,
     fleet: &[(ClusterSpec, &MemoOracle<'_>)],
 ) -> anyhow::Result<DeploymentPlan> {
+    check_spec(spec)?;
+    anyhow::ensure!(!fleet.is_empty(), "the candidate fleet is empty");
+    let demands = demands_for(spec)?;
+
+    // 1. Price every fleet leg (one single-scenario sweep per leg; the
+    //    leg's memo keeps repeat plans warm).
+    let mut all: Vec<PricedOption> = Vec::new();
+    for (cluster, memo) in fleet {
+        let (options, _) = price_leg(model, framework, &spec.workload, cluster, memo);
+        all.extend(options);
+    }
+
+    // 2. k-objective frontier prune (schedule-transparent).
+    let kept: Vec<usize> =
+        if spec.prune { prune_options(&all) } else { (0..all.len()).collect() };
+
+    // 3. Exact per-window min-cost schedule + reference points.
+    assemble_plan(spec, &demands, &all, &kept)
+}
+
+fn check_spec(spec: &PlanSpec) -> anyhow::Result<()> {
     anyhow::ensure!(spec.windows > 0, "plan horizon needs at least one window");
     // Bounds the per-request work for service callers (a year of hourly
     // windows is 8760; nobody plans more granularly than this).
@@ -204,70 +248,79 @@ pub fn plan_cached(
         spec.windows
     );
     anyhow::ensure!(spec.window_h > 0.0, "window length must be positive hours");
-    anyhow::ensure!(!fleet.is_empty(), "the candidate fleet is empty");
-    spec.traffic.validate()?;
-    let wl = &spec.workload;
-    // Provision each window for its *peak* instantaneous demand — a
-    // midpoint-sampled rising window would run under capacity at its
-    // edges (`TrafficModel::qps_window_peak`).
-    let demands = spec.traffic.qps_window_peak(spec.windows, spec.window_h);
+    spec.traffic.validate()
+}
 
-    // 1. Price every fleet leg (one single-scenario sweep per leg; the
-    //    leg's memo keeps repeat plans warm). Reports must be unpruned —
-    //    see `options_from_report`.
-    let mut all: Vec<PricedOption> = Vec::new();
-    for (cluster, memo) in fleet {
-        // Mixed-generation fleets need no special-casing here:
-        // `SearchSpace::engine_grid` falls back to the GPU's preferred
-        // dtype when none of the default sweep dtypes is supported
-        // (FP8 on Ampere), so every leg contributes options.
-        let space = SearchSpace::default_for(model, framework);
-        let runner = TaskRunner::new(model, cluster, space, wl.clone());
-        let reports =
-            runner.run_sweep_cached(memo, std::slice::from_ref(wl), &RunOptions::default());
-        all.extend(options_from_report(&cluster.gpu, wl, &reports[0]));
+/// Per-window provisioning targets: the traffic model's window *peaks*
+/// (a midpoint-sampled rising window would run under capacity at its
+/// edges — `TrafficModel::qps_window_peak`), then the spec's explicit
+/// per-window overrides in order.
+fn demands_for(spec: &PlanSpec) -> anyhow::Result<Vec<f64>> {
+    let mut demands = spec.traffic.qps_window_peak(spec.windows, spec.window_h);
+    for &(w, qps) in &spec.demand_override {
+        anyhow::ensure!(
+            w < demands.len(),
+            "demand override for window {w} is out of range ({} windows)",
+            demands.len()
+        );
+        anyhow::ensure!(
+            qps.is_finite() && qps >= 0.0,
+            "demand override for window {w}: {qps} must be finite and non-negative"
+        );
+        demands[w] = qps;
     }
-    anyhow::ensure!(
-        !all.is_empty(),
-        "no SLA-feasible deployment option on any fleet leg — relax the SLA or widen the fleet"
-    );
-    let considered = all.len();
+    Ok(demands)
+}
 
-    // 2. k-objective frontier prune (schedule-transparent).
-    let kept: Vec<usize> =
-        if spec.prune { prune_options(&all) } else { (0..all.len()).collect() };
-    let pruned_set: Vec<PricedOption> = kept.iter().map(|&i| all[i].clone()).collect();
+/// Price one fleet leg: a single-scenario sweep through the leg's memo.
+/// Reports must be unpruned — see [`options_from_report`]. Returns the
+/// leg's SLA-feasible options (report order) and the engine configs the
+/// sweep priced (the replan layer's savings denominator).
+///
+/// Mixed-generation fleets need no special-casing here:
+/// `SearchSpace::engine_grid` falls back to the GPU's preferred dtype
+/// when none of the default sweep dtypes is supported (FP8 on Ampere),
+/// so every leg contributes options.
+fn price_leg(
+    model: &ModelArch,
+    framework: Framework,
+    wl: &WorkloadSpec,
+    cluster: &ClusterSpec,
+    memo: &MemoOracle<'_>,
+) -> (Vec<PricedOption>, usize) {
+    let space = SearchSpace::default_for(model, framework);
+    let runner = TaskRunner::new(model, cluster, space, wl.clone());
+    let reports = runner.run_sweep_cached(memo, std::slice::from_ref(wl), &RunOptions::default());
+    (options_from_report(&cluster.gpu, wl, &reports[0]), reports[0].configs_priced)
+}
 
-    // 3. Exact per-window min-cost schedule.
-    let sched = optimize(&pruned_set, &demands, spec.window_h, spec.max_gpus);
-    let mut windows = Vec::with_capacity(spec.windows);
-    for (w, choice) in sched.choices.iter().enumerate() {
-        let c = choice.ok_or_else(|| {
-            anyhow::anyhow!(
-                "window {w} (demand {:.1} QPS) cannot be served by any option (GPU cap: {:?})",
-                demands[w],
-                spec.max_gpus
-            )
-        })?;
-        let o = &pruned_set[c.option];
-        windows.push(WindowPlan {
-            index: w,
-            t_start_h: w as f64 * spec.window_h,
-            t_end_h: (w + 1) as f64 * spec.window_h,
-            demand_qps: demands[w],
-            gpu: o.gpu.clone(),
-            cand: o.cand.clone(),
-            replicas: c.replicas,
-            gpus: c.replicas as u64 * o.unit_gpus as u64,
-            capacity_qps: c.replicas as f64 * o.qps_per_unit,
-            est: o.est,
-            cost_usd: c.cost_usd,
-        });
+/// One window's plan entry from the schedule layer's choice. Shared by
+/// full assembly and the replan layer's window splice so both produce
+/// bit-identical entries.
+fn window_plan(w: usize, demand: f64, spec: &PlanSpec, o: &PricedOption, c: &WindowChoice) -> WindowPlan {
+    WindowPlan {
+        index: w,
+        t_start_h: w as f64 * spec.window_h,
+        t_end_h: (w + 1) as f64 * spec.window_h,
+        demand_qps: demand,
+        gpu: o.gpu.clone(),
+        cand: o.cand.clone(),
+        replicas: c.replicas,
+        gpus: c.replicas as u64 * o.unit_gpus as u64,
+        capacity_qps: c.replicas as f64 * o.qps_per_unit,
+        est: o.est,
+        cost_usd: c.cost_usd,
     }
+}
 
-    // Reference points: best single-GPU-type schedule and static peak
-    // provisioning (both over the *unpruned* option set, so they are
-    // honest baselines rather than artifacts of the prune).
+/// Reference points: best single-GPU-type schedule and static peak
+/// provisioning (both over the *unpruned* option set, so they are
+/// honest baselines rather than artifacts of the prune).
+fn reference_points(
+    all: &[PricedOption],
+    demands: &[f64],
+    spec: &PlanSpec,
+) -> (Option<(String, f64)>, f64) {
     let mut best_homogeneous: Option<(String, f64)> = None;
     let mut gpu_names: Vec<&str> = all.iter().map(|o| o.gpu.as_str()).collect();
     gpu_names.sort_unstable();
@@ -275,7 +328,7 @@ pub fn plan_cached(
     for name in gpu_names {
         let subset: Vec<PricedOption> =
             all.iter().filter(|o| o.gpu == name).cloned().collect();
-        let s = optimize(&subset, &demands, spec.window_h, spec.max_gpus);
+        let s = optimize(&subset, demands, spec.window_h, spec.max_gpus);
         let improves = match &best_homogeneous {
             Some((_, c)) => s.total_cost_usd < *c,
             None => true,
@@ -285,17 +338,47 @@ pub fn plan_cached(
         }
     }
     let peak = demands.iter().cloned().fold(0.0f64, f64::max);
-    let static_peak_cost_usd = choose_window(&all, peak, spec.window_h, spec.max_gpus)
+    let static_peak_cost_usd = choose_window(all, peak, spec.window_h, spec.max_gpus)
         .map(|c| c.cost_usd * spec.windows as f64)
         .unwrap_or(f64::INFINITY);
+    (best_homogeneous, static_peak_cost_usd)
+}
 
+/// Schedule + report assembly over an already-priced option set: the
+/// shared back half of [`plan_cached`], [`plan_arena`] and [`replan`] —
+/// sharing it is what pins an incremental replan bit-identical to a
+/// from-scratch plan of the same options.
+fn assemble_plan(
+    spec: &PlanSpec,
+    demands: &[f64],
+    all: &[PricedOption],
+    kept: &[usize],
+) -> anyhow::Result<DeploymentPlan> {
+    anyhow::ensure!(
+        !all.is_empty(),
+        "no SLA-feasible deployment option on any fleet leg — relax the SLA or widen the fleet"
+    );
+    let pruned_set: Vec<PricedOption> = kept.iter().map(|&i| all[i].clone()).collect();
+    let sched = optimize(&pruned_set, demands, spec.window_h, spec.max_gpus);
+    let mut windows = Vec::with_capacity(spec.windows);
+    for (w, choice) in sched.choices.iter().enumerate() {
+        let c = choice.ok_or_else(|| {
+            anyhow::anyhow!(
+                "window {w} (demand {:.1} QPS) cannot be served by any option (GPU cap: {:?})",
+                demands[w],
+                spec.max_gpus
+            )
+        })?;
+        windows.push(window_plan(w, demands[w], spec, &pruned_set[c.option], &c));
+    }
+    let (best_homogeneous, static_peak_cost_usd) = reference_points(all, demands, spec);
     Ok(DeploymentPlan {
         windows,
         total_cost_usd: sched.total_cost_usd,
         best_homogeneous,
         static_peak_cost_usd,
-        options_considered: considered,
-        options_pruned: considered - kept.len(),
+        options_considered: all.len(),
+        options_pruned: all.len() - kept.len(),
     })
 }
 
@@ -311,6 +394,404 @@ pub fn plan(
     let legs: Vec<(ClusterSpec, &MemoOracle<'_>)> =
         fleet.iter().zip(&memos).map(|((cluster, _), memo)| (*cluster, memo)).collect();
     plan_cached(model, framework, spec, &legs)
+}
+
+/// Per-leg state retained between a plan and its replans: the leg's
+/// cluster, its priced options and their arena ids in the tracked
+/// frontier accumulator, and how many engine configs the leg's sweep
+/// priced (the replan savings denominator).
+struct LegState {
+    cluster: ClusterSpec,
+    options: Vec<PricedOption>,
+    /// Tracked-accumulator arena id of each option, parallel to
+    /// `options`. Ascending across the concatenation of legs in leg
+    /// order — the invariant that makes `kept_indices` reproduce
+    /// [`prune_options`]' input-order semantics.
+    ids: Vec<usize>,
+    configs_priced: usize,
+}
+
+/// Retained priced state from [`plan_arena`], the differential replan
+/// substrate: consume a [`SearchDelta`] with [`replan`] and only the
+/// legs the delta invalidates are re-swept, while the k-objective
+/// frontier is patched incrementally (retractions re-admit formerly
+/// dominated survivors from the tracked arena instead of re-pricing).
+pub struct PlanArena {
+    spec: PlanSpec,
+    legs: Vec<LegState>,
+    tracked: FrontierAccumulator,
+    /// Kept-option labels of the last assembled plan, for the
+    /// entered/left diff in [`ReplanReport`].
+    last_kept: Vec<String>,
+}
+
+impl PlanArena {
+    /// Engine configs a full from-scratch re-sweep of the current fleet
+    /// would price — the denominator for replan savings claims.
+    pub fn baseline_priced_configs(&self) -> usize {
+        self.legs.iter().map(|l| l.configs_priced).sum()
+    }
+
+    /// Current fleet legs' GPU preset names, in leg order.
+    pub fn leg_gpus(&self) -> Vec<String> {
+        self.legs.iter().map(|l| l.cluster.gpu.name.to_string()).collect()
+    }
+
+    fn all_options(&self) -> Vec<PricedOption> {
+        self.legs.iter().flat_map(|l| l.options.iter().cloned()).collect()
+    }
+
+    /// Indices into the leg-concatenation order kept by the tracked
+    /// frontier — reproduces [`prune_options`] over [`all_options`]
+    /// because arena ids ascend in that same order and the tracked
+    /// accumulator's kept set equals an in-order offer replay.
+    fn kept_indices(&self) -> Vec<usize> {
+        let all_len: usize = self.legs.iter().map(|l| l.options.len()).sum();
+        if !self.spec.prune {
+            return (0..all_len).collect();
+        }
+        let kept: std::collections::HashSet<usize> =
+            self.tracked.kept_ids().into_iter().collect();
+        self.legs
+            .iter()
+            .flat_map(|l| l.ids.iter())
+            .enumerate()
+            .filter(|(_, id)| kept.contains(id))
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Re-seed the tracked accumulator from scratch, reassigning arena
+    /// ids in leg-concatenation order. Needed after a mid-list leg
+    /// re-sweep (recalibration): fresh options appended to the old
+    /// arena would break the ascending-id ↔ input-order invariant.
+    fn rebuild_tracked(&mut self) {
+        let mut acc = FrontierAccumulator::new();
+        for leg in &mut self.legs {
+            leg.ids.clear();
+            for o in &leg.options {
+                leg.ids.push(acc.offer_tracked(&o.objectives()));
+            }
+        }
+        self.tracked = acc;
+    }
+}
+
+/// Stable identity of a deployment option across re-pricing: the cost
+/// coordinate may change under a delta, but GPU + engine label +
+/// footprint is what operators recognise as "the same config".
+fn option_label(o: &PricedOption) -> String {
+    format!("{}|{}|{}", o.gpu, o.cand.label(), o.unit_gpus)
+}
+
+/// All legs whose GPU preset matches `token` (alias-tolerant via
+/// [`gpu_by_name`]). Repricing applies to every match; removal and
+/// recalibration require exactly one.
+fn legs_matching(legs: &[LegState], token: &str) -> anyhow::Result<Vec<usize>> {
+    let gpu = gpu_by_name(token)
+        .ok_or_else(|| anyhow::anyhow!("unknown gpu '{token}' in delta"))?;
+    let hits: Vec<usize> = legs
+        .iter()
+        .enumerate()
+        .filter(|(_, l)| l.cluster.gpu.name == gpu.name)
+        .map(|(i, _)| i)
+        .collect();
+    anyhow::ensure!(!hits.is_empty(), "delta names gpu '{token}' but no fleet leg uses it");
+    Ok(hits)
+}
+
+fn leg_matching_one(legs: &[LegState], token: &str) -> anyhow::Result<usize> {
+    let hits = legs_matching(legs, token)?;
+    anyhow::ensure!(
+        hits.len() == 1,
+        "delta names gpu '{token}' which matches {} fleet legs — remove/recalibrate need exactly one",
+        hits.len()
+    );
+    Ok(hits[0])
+}
+
+/// Like [`plan_cached`], but also returns the retained [`PlanArena`]
+/// so later [`SearchDelta`]s can be applied with [`replan`] instead of
+/// a full re-search. The returned plan is bit-identical to
+/// [`plan_cached`] on the same inputs (pinned in tests).
+pub fn plan_arena(
+    model: &ModelArch,
+    framework: Framework,
+    spec: &PlanSpec,
+    fleet: &[(ClusterSpec, &MemoOracle<'_>)],
+) -> anyhow::Result<(DeploymentPlan, PlanArena)> {
+    check_spec(spec)?;
+    anyhow::ensure!(!fleet.is_empty(), "the candidate fleet is empty");
+    let demands = demands_for(spec)?;
+
+    let mut arena = PlanArena {
+        spec: spec.clone(),
+        legs: Vec::with_capacity(fleet.len()),
+        tracked: FrontierAccumulator::new(),
+        last_kept: Vec::new(),
+    };
+    for (cluster, memo) in fleet {
+        let (options, configs_priced) =
+            price_leg(model, framework, &spec.workload, cluster, memo);
+        let ids: Vec<usize> =
+            options.iter().map(|o| arena.tracked.offer_tracked(&o.objectives())).collect();
+        arena.legs.push(LegState { cluster: *cluster, options, ids, configs_priced });
+    }
+
+    let all = arena.all_options();
+    let kept = arena.kept_indices();
+    debug_assert!(!spec.prune || kept == prune_options(&all));
+    let plan = assemble_plan(spec, &demands, &all, &kept)?;
+    arena.last_kept = kept.iter().map(|&i| option_label(&all[i])).collect();
+    Ok((plan, arena))
+}
+
+/// What a replan produced, and what it saved.
+pub struct ReplanReport {
+    pub plan: DeploymentPlan,
+    /// Engine configs actually re-priced by this replan (recalibrated
+    /// + added legs only; reprices, removals and window edits cost no
+    /// oracle work).
+    pub repriced_configs: usize,
+    /// Engine configs a full from-scratch re-search of the patched
+    /// fleet would price.
+    pub baseline_priced_configs: usize,
+    /// Kept-option labels that entered the deployment frontier.
+    pub entered: Vec<String>,
+    /// Kept-option labels that left the deployment frontier.
+    pub left: Vec<String>,
+    /// Windows whose (gpu, config, replicas) choice changed vs the
+    /// baseline plan.
+    pub windows_changed: usize,
+}
+
+impl ReplanReport {
+    pub fn to_json(&self, wl: &WorkloadSpec) -> Json {
+        let mut o = Json::obj();
+        o.set("kind", json::s("replan-report"))
+            .set("plan", self.plan.to_json(wl))
+            .set("repriced_configs", json::num(self.repriced_configs as f64))
+            .set("baseline_priced_configs", json::num(self.baseline_priced_configs as f64))
+            .set(
+                "entered",
+                Json::Arr(self.entered.iter().map(|s| json::s(s)).collect()),
+            )
+            .set("left", Json::Arr(self.left.iter().map(|s| json::s(s)).collect()))
+            .set("windows_changed", json::num(self.windows_changed as f64));
+        o
+    }
+}
+
+/// Apply a [`SearchDelta`] to a retained [`PlanArena`], re-pricing only
+/// what the delta invalidates, and return the patched plan plus a
+/// config diff vs `baseline`.
+///
+/// `swept` supplies one `(cluster, memo)` pair per recalibrated leg
+/// (in `delta.recalibrate` order) followed by one per added leg (in
+/// `delta.add_legs` order); the memo must wrap an oracle profiled for
+/// that cluster — for recalibration, the *new* calibration artifact.
+///
+/// The result is bit-identical to a from-scratch [`plan_cached`] of
+/// the patched inputs (CI-pinned via `--check-equal`):
+/// - window edits land in `spec.demand_override` and, when the delta is
+///   window-only, splice re-chosen windows into the baseline through
+///   the same [`window_plan`]/[`choose_window`] path full assembly uses;
+/// - GPU repricing rewrites each option's cost coordinate in place with
+///   the exact [`options_from_report`] expression and updates the
+///   tracked frontier, re-admitting formerly dominated survivors;
+/// - removed legs retract their arena ids (no re-pricing);
+/// - recalibrated legs re-sweep in place and rebuild the tracked
+///   accumulator (mid-list id reassignment); added legs sweep and
+///   append incrementally.
+pub fn replan(
+    model: &ModelArch,
+    framework: Framework,
+    arena: &mut PlanArena,
+    baseline: &DeploymentPlan,
+    delta: &SearchDelta,
+    swept: &[(ClusterSpec, &MemoOracle<'_>)],
+) -> anyhow::Result<ReplanReport> {
+    delta.validate()?;
+    anyhow::ensure!(
+        swept.len() == delta.recalibrate.len() + delta.add_legs.len(),
+        "replan needs one swept (cluster, memo) pair per recalibrated then per added leg: \
+         expected {}, got {}",
+        delta.recalibrate.len() + delta.add_legs.len(),
+        swept.len()
+    );
+    anyhow::ensure!(
+        baseline.windows.len() == arena.spec.windows,
+        "baseline plan has {} windows but the arena spec has {}",
+        baseline.windows.len(),
+        arena.spec.windows
+    );
+
+    // Window-only deltas never touch the option set: splice re-chosen
+    // windows into the baseline instead of re-running the full
+    // schedule. Demand overrides accumulate in the spec so a
+    // from-scratch plan of the patched spec stays the equality
+    // reference for *future* replans too.
+    if delta.only_window_edits() {
+        arena.spec.demand_override.extend(delta.window_edits.iter().cloned());
+        let spec = arena.spec.clone();
+        let demands = demands_for(&spec)?;
+        let all = arena.all_options();
+        let kept = arena.kept_indices();
+        let pruned_set: Vec<PricedOption> = kept.iter().map(|&i| all[i].clone()).collect();
+        let mut edited: Vec<usize> = delta.window_edits.iter().map(|&(w, _)| w).collect();
+        edited.sort_unstable();
+        edited.dedup();
+        let mut windows = baseline.windows.clone();
+        for &w in &edited {
+            let c = choose_window(&pruned_set, demands[w], spec.window_h, spec.max_gpus)
+                .ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "window {w} (demand {:.1} QPS) cannot be served by any option (GPU cap: {:?})",
+                        demands[w],
+                        spec.max_gpus
+                    )
+                })?;
+            windows[w] = window_plan(w, demands[w], &spec, &pruned_set[c.option], &c);
+        }
+        // Fresh in-order sum: the same addends in the same order as
+        // `optimize`'s total, so the spliced plan stays bit-identical
+        // to a from-scratch recompute.
+        let total_cost_usd: f64 = windows.iter().map(|w| w.cost_usd).sum();
+        let (best_homogeneous, static_peak_cost_usd) = reference_points(&all, &demands, &spec);
+        let windows_changed = windows
+            .iter()
+            .zip(&baseline.windows)
+            .filter(|(a, b)| a.gpu != b.gpu || a.cand != b.cand || a.replicas != b.replicas)
+            .count();
+        let plan = DeploymentPlan {
+            windows,
+            total_cost_usd,
+            best_homogeneous,
+            static_peak_cost_usd,
+            options_considered: all.len(),
+            options_pruned: all.len() - kept.len(),
+        };
+        return Ok(ReplanReport {
+            plan,
+            repriced_configs: 0,
+            baseline_priced_configs: arena.baseline_priced_configs(),
+            entered: Vec::new(),
+            left: Vec::new(),
+            windows_changed,
+        });
+    }
+
+    // 1. GPU repricing: a pure cost re-derivation — rewrite the cost
+    //    coordinate of every option on every matching leg and update
+    //    the tracked frontier (retraction + re-admission inside).
+    for (token, price) in &delta.reprice {
+        for i in legs_matching(&arena.legs, token)? {
+            let leg = &mut arena.legs[i];
+            leg.cluster.gpu.usd_per_hour = *price;
+            for (o, &id) in leg.options.iter_mut().zip(&leg.ids) {
+                o.usd_per_hour = o.unit_gpus as f64 * price;
+                arena.tracked.update(id, &o.objectives());
+            }
+        }
+    }
+
+    // 2. Removed legs: pure retraction — formerly dominated survivors
+    //    on other legs are re-admitted from the tracked arena.
+    for token in &delta.remove_legs {
+        let i = leg_matching_one(&arena.legs, token)?;
+        for &id in &arena.legs[i].ids {
+            arena.tracked.retract(id);
+        }
+        arena.legs.remove(i);
+    }
+
+    // 3. Recalibrated legs: re-sweep in place against the new
+    //    calibration artifact's oracle.
+    let mut repriced_configs = 0usize;
+    for (k, token) in delta.recalibrate.iter().enumerate() {
+        let i = leg_matching_one(&arena.legs, token)?;
+        let (cluster, memo) = &swept[k];
+        anyhow::ensure!(
+            cluster.gpu.name == arena.legs[i].cluster.gpu.name,
+            "swept cluster for recalibrated leg '{token}' is {}, expected {}",
+            cluster.gpu.name,
+            arena.legs[i].cluster.gpu.name
+        );
+        let (options, priced) =
+            price_leg(model, framework, &arena.spec.workload, cluster, memo);
+        repriced_configs += priced;
+        arena.legs[i] =
+            LegState { cluster: *cluster, options, ids: Vec::new(), configs_priced: priced };
+    }
+
+    // 4. Added legs: sweep and append at the end (the canonical leg
+    //    position for `--check-equal` fleets).
+    let recal = delta.recalibrate.len();
+    let mut added: Vec<LegState> = Vec::new();
+    for (k, token) in delta.add_legs.iter().enumerate() {
+        let gpu = gpu_by_name(token)
+            .ok_or_else(|| anyhow::anyhow!("unknown gpu '{token}' in delta"))?;
+        let (cluster, memo) = &swept[recal + k];
+        anyhow::ensure!(
+            cluster.gpu.name == gpu.name,
+            "swept cluster for added leg '{token}' is {}, expected {}",
+            cluster.gpu.name,
+            gpu.name
+        );
+        let (options, priced) =
+            price_leg(model, framework, &arena.spec.workload, cluster, memo);
+        repriced_configs += priced;
+        added.push(LegState { cluster: *cluster, options, ids: Vec::new(), configs_priced: priced });
+    }
+    if recal > 0 {
+        // Mid-list re-sweeps break the ascending-id ↔ leg-order
+        // invariant; re-seed the accumulator over the final leg list.
+        arena.legs.extend(added);
+        arena.rebuild_tracked();
+    } else {
+        for mut leg in added {
+            for o in &leg.options {
+                leg.ids.push(arena.tracked.offer_tracked(&o.objectives()));
+            }
+            arena.legs.push(leg);
+        }
+    }
+
+    // 5. Window edits (if any rode along a structural delta) land in
+    //    the spec; then assemble through the exact full-plan path.
+    arena.spec.demand_override.extend(delta.window_edits.iter().cloned());
+    let spec = arena.spec.clone();
+    let demands = demands_for(&spec)?;
+    let all = arena.all_options();
+    let kept = arena.kept_indices();
+    debug_assert!(!spec.prune || kept == prune_options(&all));
+    let plan = assemble_plan(&spec, &demands, &all, &kept)?;
+
+    // 6. Config diff vs the previous plan's frontier and windows.
+    let kept_labels: Vec<String> = kept.iter().map(|&i| option_label(&all[i])).collect();
+    let prev: std::collections::HashSet<&str> =
+        arena.last_kept.iter().map(|s| s.as_str()).collect();
+    let now: std::collections::HashSet<&str> =
+        kept_labels.iter().map(|s| s.as_str()).collect();
+    let entered: Vec<String> =
+        kept_labels.iter().filter(|l| !prev.contains(l.as_str())).cloned().collect();
+    let left: Vec<String> =
+        arena.last_kept.iter().filter(|l| !now.contains(l.as_str())).cloned().collect();
+    let windows_changed = plan
+        .windows
+        .iter()
+        .zip(&baseline.windows)
+        .filter(|(a, b)| a.gpu != b.gpu || a.cand != b.cand || a.replicas != b.replicas)
+        .count();
+    arena.last_kept = kept_labels;
+    Ok(ReplanReport {
+        plan,
+        repriced_configs,
+        baseline_priced_configs: arena.baseline_priced_configs(),
+        entered,
+        left,
+        windows_changed,
+    })
 }
 
 #[cfg(test)]
@@ -474,5 +955,243 @@ mod tests {
         let w0 = &j.req("windows").unwrap().as_arr().unwrap()[0];
         assert!(w0.req_f64("replicas").unwrap() >= 0.0);
         assert!(w0.get("config").is_some());
+    }
+
+    /// The replan bit-equality pin compares serialized plans:
+    /// `DeploymentPlan` carries no wall-clock fields, so string equality
+    /// of the JSON is exactly "same schedule, same costs, bit for bit".
+    fn assert_plans_identical(a: &DeploymentPlan, b: &DeploymentPlan, wl: &WorkloadSpec) {
+        assert_eq!(a.to_json(wl).to_string(), b.to_json(wl).to_string());
+    }
+
+    /// A swapped calibration artifact for recalibration tests: same
+    /// silicon, uniformly slower operators.
+    struct Recalibrated<'a> {
+        inner: &'a Silicon,
+        factor: f64,
+    }
+
+    impl LatencyOracle for Recalibrated<'_> {
+        fn op_latency_us(&self, op: &crate::ops::Op) -> f64 {
+            self.inner.op_latency_us(op) * self.factor
+        }
+    }
+
+    #[test]
+    fn plan_arena_matches_plan_cached_bit_for_bit() {
+        let model = by_name("llama3.1-8b").unwrap();
+        let legs = [ClusterSpec::new(h100_sxm(), 8, 1), ClusterSpec::new(a100_sxm(), 8, 1)];
+        let sils: Vec<Silicon> =
+            legs.iter().map(|c| Silicon::new(*c, Framework::TrtLlm.profile())).collect();
+        let memos: Vec<MemoOracle<'_>> = sils.iter().map(|s| MemoOracle::new(s)).collect();
+        let fleet: Vec<(ClusterSpec, &MemoOracle<'_>)> =
+            legs.iter().zip(&memos).map(|(c, m)| (*c, m)).collect();
+        for prune in [true, false] {
+            let mut sp = spec(4);
+            sp.prune = prune;
+            let a = plan_cached(&model, Framework::TrtLlm, &sp, &fleet).unwrap();
+            let (b, arena) = plan_arena(&model, Framework::TrtLlm, &sp, &fleet).unwrap();
+            assert_plans_identical(&a, &b, &sp.workload);
+            assert!(arena.baseline_priced_configs() > 0);
+            assert_eq!(arena.leg_gpus(), vec!["h100-sxm", "a100-sxm"]);
+        }
+    }
+
+    #[test]
+    fn replan_window_edit_splices_bit_identically_without_repricing() {
+        let model = by_name("llama3.1-8b").unwrap();
+        let cluster = ClusterSpec::new(h100_sxm(), 8, 1);
+        let sil = Silicon::new(cluster, Framework::TrtLlm.profile());
+        let memo = MemoOracle::new(&sil);
+        let fleet: Vec<(ClusterSpec, &MemoOracle<'_>)> = vec![(cluster, &memo)];
+        let sp = spec(6);
+        let (baseline, mut arena) =
+            plan_arena(&model, Framework::TrtLlm, &sp, &fleet).unwrap();
+        let delta = SearchDelta {
+            window_edits: vec![(2, 500.0), (4, 1.0)],
+            ..SearchDelta::default()
+        };
+        let rep = replan(&model, Framework::TrtLlm, &mut arena, &baseline, &delta, &[]).unwrap();
+        assert_eq!(rep.repriced_configs, 0, "window edits must price nothing");
+        assert!(rep.windows_changed >= 1, "a 4x demand surge must change the schedule");
+        let mut patched = sp.clone();
+        patched.demand_override = vec![(2, 500.0), (4, 1.0)];
+        let fresh = plan_cached(&model, Framework::TrtLlm, &patched, &fleet).unwrap();
+        assert_plans_identical(&rep.plan, &fresh, &sp.workload);
+        // A second window edit stacks on the first (later entries win).
+        let delta2 =
+            SearchDelta { window_edits: vec![(2, 40.0)], ..SearchDelta::default() };
+        let rep2 =
+            replan(&model, Framework::TrtLlm, &mut arena, &rep.plan, &delta2, &[]).unwrap();
+        patched.demand_override.push((2, 40.0));
+        let fresh2 = plan_cached(&model, Framework::TrtLlm, &patched, &fleet).unwrap();
+        assert_plans_identical(&rep2.plan, &fresh2, &sp.workload);
+    }
+
+    #[test]
+    fn replan_reprice_matches_from_scratch_and_prices_nothing() {
+        let model = by_name("llama3.1-8b").unwrap();
+        let legs = [ClusterSpec::new(h100_sxm(), 8, 1), ClusterSpec::new(a100_sxm(), 8, 1)];
+        let sils: Vec<Silicon> =
+            legs.iter().map(|c| Silicon::new(*c, Framework::TrtLlm.profile())).collect();
+        let memos: Vec<MemoOracle<'_>> = sils.iter().map(|s| MemoOracle::new(s)).collect();
+        let fleet: Vec<(ClusterSpec, &MemoOracle<'_>)> =
+            legs.iter().zip(&memos).map(|(c, m)| (*c, m)).collect();
+        let sp = spec(6);
+        let (baseline, mut arena) =
+            plan_arena(&model, Framework::TrtLlm, &sp, &fleet).unwrap();
+        // Make the A100 nearly free: its options storm the cost
+        // frontier and the H100-heavy schedule has to yield.
+        let delta = SearchDelta {
+            reprice: vec![("a100".to_string(), 0.10)],
+            ..SearchDelta::default()
+        };
+        let rep = replan(&model, Framework::TrtLlm, &mut arena, &baseline, &delta, &[]).unwrap();
+        assert_eq!(rep.repriced_configs, 0, "repricing is a pure cost re-derivation");
+        assert!(rep.baseline_priced_configs > 0);
+        let mut cheap_a100 = a100_sxm();
+        cheap_a100.usd_per_hour = 0.10;
+        let legs2 = [legs[0], ClusterSpec::new(cheap_a100, 8, 1)];
+        let sils2: Vec<Silicon> =
+            legs2.iter().map(|c| Silicon::new(*c, Framework::TrtLlm.profile())).collect();
+        let memos2: Vec<MemoOracle<'_>> = sils2.iter().map(|s| MemoOracle::new(s)).collect();
+        let fleet2: Vec<(ClusterSpec, &MemoOracle<'_>)> =
+            legs2.iter().zip(&memos2).map(|(c, m)| (*c, m)).collect();
+        let fresh = plan_cached(&model, Framework::TrtLlm, &sp, &fleet2).unwrap();
+        assert_plans_identical(&rep.plan, &fresh, &sp.workload);
+    }
+
+    #[test]
+    fn replan_remove_leg_retracts_and_readmits_bit_identically() {
+        let model = by_name("llama3.1-8b").unwrap();
+        let legs = [ClusterSpec::new(h100_sxm(), 8, 1), ClusterSpec::new(a100_sxm(), 8, 1)];
+        let sils: Vec<Silicon> =
+            legs.iter().map(|c| Silicon::new(*c, Framework::TrtLlm.profile())).collect();
+        let memos: Vec<MemoOracle<'_>> = sils.iter().map(|s| MemoOracle::new(s)).collect();
+        let fleet: Vec<(ClusterSpec, &MemoOracle<'_>)> =
+            legs.iter().zip(&memos).map(|(c, m)| (*c, m)).collect();
+        let sp = spec(6);
+        let (baseline, mut arena) =
+            plan_arena(&model, Framework::TrtLlm, &sp, &fleet).unwrap();
+        let delta =
+            SearchDelta { remove_legs: vec!["a100".to_string()], ..SearchDelta::default() };
+        let rep = replan(&model, Framework::TrtLlm, &mut arena, &baseline, &delta, &[]).unwrap();
+        assert_eq!(rep.repriced_configs, 0, "removal is a pure retraction");
+        assert_eq!(arena.leg_gpus(), vec!["h100-sxm"]);
+        let fresh = plan_cached(&model, Framework::TrtLlm, &sp, &fleet[..1]).unwrap();
+        assert_plans_identical(&rep.plan, &fresh, &sp.workload);
+    }
+
+    #[test]
+    fn replan_add_leg_sweeps_only_the_new_leg() {
+        let model = by_name("llama3.1-8b").unwrap();
+        let h100 = ClusterSpec::new(h100_sxm(), 8, 1);
+        let a100 = ClusterSpec::new(a100_sxm(), 8, 1);
+        let sil_h = Silicon::new(h100, Framework::TrtLlm.profile());
+        let sil_a = Silicon::new(a100, Framework::TrtLlm.profile());
+        let memo_h = MemoOracle::new(&sil_h);
+        let memo_a = MemoOracle::new(&sil_a);
+        let sp = spec(6);
+        let (baseline, mut arena) =
+            plan_arena(&model, Framework::TrtLlm, &sp, &[(h100, &memo_h)]).unwrap();
+        let delta =
+            SearchDelta { add_legs: vec!["a100".to_string()], ..SearchDelta::default() };
+        let rep = replan(
+            &model,
+            Framework::TrtLlm,
+            &mut arena,
+            &baseline,
+            &delta,
+            &[(a100, &memo_a)],
+        )
+        .unwrap();
+        assert!(rep.repriced_configs > 0, "the added leg must be swept");
+        assert!(
+            rep.repriced_configs < rep.baseline_priced_configs,
+            "replan must price strictly fewer configs than a full re-search"
+        );
+        let fleet2: Vec<(ClusterSpec, &MemoOracle<'_>)> =
+            vec![(h100, &memo_h), (a100, &memo_a)];
+        let fresh = plan_cached(&model, Framework::TrtLlm, &sp, &fleet2).unwrap();
+        assert_plans_identical(&rep.plan, &fresh, &sp.workload);
+    }
+
+    #[test]
+    fn replan_recalibrate_matches_from_scratch_with_the_new_oracle() {
+        let model = by_name("llama3.1-8b").unwrap();
+        let h100 = ClusterSpec::new(h100_sxm(), 8, 1);
+        let a100 = ClusterSpec::new(a100_sxm(), 8, 1);
+        let sil_h = Silicon::new(h100, Framework::TrtLlm.profile());
+        let sil_a = Silicon::new(a100, Framework::TrtLlm.profile());
+        let memo_h = MemoOracle::new(&sil_h);
+        let memo_a = MemoOracle::new(&sil_a);
+        let fleet: Vec<(ClusterSpec, &MemoOracle<'_>)> =
+            vec![(h100, &memo_h), (a100, &memo_a)];
+        let sp = spec(6);
+        let (baseline, mut arena) =
+            plan_arena(&model, Framework::TrtLlm, &sp, &fleet).unwrap();
+        // Recalibrating the *first* leg forces the mid-list tracked
+        // accumulator rebuild.
+        let recal = Recalibrated { inner: &sil_h, factor: 1.25 };
+        let memo_recal = MemoOracle::new(&recal);
+        let delta =
+            SearchDelta { recalibrate: vec!["h100".to_string()], ..SearchDelta::default() };
+        let rep = replan(
+            &model,
+            Framework::TrtLlm,
+            &mut arena,
+            &baseline,
+            &delta,
+            &[(h100, &memo_recal)],
+        )
+        .unwrap();
+        assert!(rep.repriced_configs > 0, "the recalibrated leg must re-sweep");
+        assert!(rep.repriced_configs < rep.baseline_priced_configs);
+        let memo_recal2 = MemoOracle::new(&recal);
+        let fleet2: Vec<(ClusterSpec, &MemoOracle<'_>)> =
+            vec![(h100, &memo_recal2), (a100, &memo_a)];
+        let fresh = plan_cached(&model, Framework::TrtLlm, &sp, &fleet2).unwrap();
+        assert_plans_identical(&rep.plan, &fresh, &sp.workload);
+    }
+
+    #[test]
+    fn replan_rejects_bad_deltas() {
+        let model = by_name("llama3.1-8b").unwrap();
+        let cluster = ClusterSpec::new(h100_sxm(), 8, 1);
+        let sil = Silicon::new(cluster, Framework::TrtLlm.profile());
+        let memo = MemoOracle::new(&sil);
+        let fleet: Vec<(ClusterSpec, &MemoOracle<'_>)> = vec![(cluster, &memo)];
+        let sp = spec(3);
+        let (baseline, mut arena) =
+            plan_arena(&model, Framework::TrtLlm, &sp, &fleet).unwrap();
+        // Empty delta.
+        let err = replan(
+            &model,
+            Framework::TrtLlm,
+            &mut arena,
+            &baseline,
+            &SearchDelta::default(),
+            &[],
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("empty"), "{err:#}");
+        // Unknown GPU token.
+        let delta =
+            SearchDelta { remove_legs: vec!["tpu9000".to_string()], ..SearchDelta::default() };
+        let err =
+            replan(&model, Framework::TrtLlm, &mut arena, &baseline, &delta, &[]).unwrap_err();
+        assert!(err.to_string().contains("unknown gpu"), "{err:#}");
+        // A leg the fleet doesn't have.
+        let delta =
+            SearchDelta { remove_legs: vec!["b200".to_string()], ..SearchDelta::default() };
+        let err =
+            replan(&model, Framework::TrtLlm, &mut arena, &baseline, &delta, &[]).unwrap_err();
+        assert!(err.to_string().contains("no fleet leg"), "{err:#}");
+        // Missing swept pair for an added leg.
+        let delta =
+            SearchDelta { add_legs: vec!["a100".to_string()], ..SearchDelta::default() };
+        let err =
+            replan(&model, Framework::TrtLlm, &mut arena, &baseline, &delta, &[]).unwrap_err();
+        assert!(err.to_string().contains("swept"), "{err:#}");
     }
 }

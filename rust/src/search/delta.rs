@@ -1,0 +1,320 @@
+//! Differential re-search input: [`SearchDelta`] describes *changes* to
+//! a prior sweep/plan, and the dependency tagger maps each change onto
+//! the subset of candidates and memo entries it invalidates (the
+//! arrangement/delta idiom from differential dataflow, DESIGN.md §11).
+//!
+//! The tagger is **static and conservative**: a candidate's tag mask is
+//! derived analytically from its engine shape (which op classes its
+//! pricing can possibly touch), never by probing the oracle. An
+//! over-approximation only costs extra re-pricing; an
+//! under-approximation would break the replan bit-equality pin, so
+//! every rule below errs wide:
+//!
+//! - every engine prices GEMMs, both attention classes and elementwise
+//!   traffic ([`crate::perfmodel::iteration`] decomposes all of them
+//!   unconditionally);
+//! - MoE grouped GEMMs appear iff the model has an expert config;
+//! - any multi-GPU layout (tp·pp·dp > 1, or ep > 1) may price any
+//!   collective and the PP stage-boundary P2p;
+//! - a disaggregated composite additionally ships KV over P2p.
+//!
+//! Delta kinds and what they invalidate:
+//!
+//! | delta               | candidates re-priced      | memo entries dropped |
+//! |---------------------|---------------------------|----------------------|
+//! | traffic window edit | none (demand-side only)   | none                 |
+//! | GPU re-price        | none (cost re-derivation) | none                 |
+//! | calibration swap    | the swapped leg's grid    | all tags (leg store) |
+//! | added fleet leg     | the new leg's grid only   | none                 |
+//! | removed fleet leg   | none (pure retraction)    | none                 |
+
+use crate::config::{Candidate, EngineConfig};
+use crate::models::ModelArch;
+use crate::perfdb::cache::{
+    TAG_ALL_GATHER, TAG_ALL_REDUCE, TAG_ALL_TO_ALL, TAG_ATTN_DECODE, TAG_ATTN_PREFILL,
+    TAG_ELEMENTWISE, TAG_GEMM, TAG_MOE_GEMM, TAG_P2P, NUM_TAGS,
+};
+use crate::util::json::{self, Json};
+
+/// Bit for one memo tag (see [`crate::perfdb::cache::op_tag`]).
+pub const fn tag_bit(tag: u8) -> u64 {
+    1u64 << tag
+}
+
+/// Every op class — the mask a swapped calibration artifact gets: a
+/// measurement set may correct any class, so the sound choice is to
+/// drop the whole leg store and re-price the leg's grid. The savings of
+/// a calibration-swap replan come from the *other* legs staying priced.
+pub const ALL_TAGS_MASK: u64 = (1u64 << NUM_TAGS) - 1;
+
+/// Op classes every engine prices regardless of shape.
+pub const BASE_TAGS_MASK: u64 = tag_bit(TAG_GEMM)
+    | tag_bit(TAG_ATTN_PREFILL)
+    | tag_bit(TAG_ATTN_DECODE)
+    | tag_bit(TAG_ELEMENTWISE);
+
+const COMM_TAGS_MASK: u64 = tag_bit(TAG_ALL_REDUCE)
+    | tag_bit(TAG_ALL_GATHER)
+    | tag_bit(TAG_ALL_TO_ALL)
+    | tag_bit(TAG_P2P);
+
+/// Conservative op-class mask of one engine's pricing.
+pub fn engine_tag_mask(model: &ModelArch, eng: &EngineConfig) -> u64 {
+    let mut mask = BASE_TAGS_MASK;
+    if model.is_moe() {
+        mask |= tag_bit(TAG_MOE_GEMM);
+    }
+    let par = &eng.parallel;
+    if par.gpus() > 1 || par.ep > 1 {
+        mask |= COMM_TAGS_MASK;
+    }
+    mask
+}
+
+/// Conservative op-class mask of a full candidate's pricing. The
+/// disaggregated composite always includes P2p: its KV transfer is
+/// priced over the fabric path even when both pools are single-GPU.
+pub fn candidate_tag_mask(model: &ModelArch, cand: &Candidate) -> u64 {
+    match cand {
+        Candidate::Aggregated { engine, .. } => engine_tag_mask(model, engine),
+        Candidate::Disaggregated { prefill, decode, .. } => {
+            engine_tag_mask(model, prefill)
+                | engine_tag_mask(model, decode)
+                | tag_bit(TAG_P2P)
+        }
+    }
+}
+
+/// One edit set against a prior sweep/plan — the `"kind":
+/// "search-delta"` artifact format (`artifacts/deltas/*.json`) and the
+/// v2 `{"op": "replan"}` request's `"delta"` object.
+///
+/// Leg-addressed edits (`reprice`, `recalibrate`, `add_legs`,
+/// `remove_legs`) name legs by the fleet grammar's GPU token; added
+/// legs accept the full `GPU[@FABRIC]` form. Replanned fleets keep the
+/// surviving legs in their original order and append added legs in
+/// delta order — the canonical order a from-scratch equality check must
+/// rebuild.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SearchDelta {
+    /// (window index, new peak QPS) demand overrides.
+    pub window_edits: Vec<(usize, f64)>,
+    /// (GPU token, new USD per GPU-hour).
+    pub reprice: Vec<(String, f64)>,
+    /// Legs whose calibration artifact was swapped (full leg re-sweep
+    /// through the new oracle).
+    pub recalibrate: Vec<String>,
+    /// Fleet legs to add, `GPU[@FABRIC]`.
+    pub add_legs: Vec<String>,
+    /// Fleet legs to remove.
+    pub remove_legs: Vec<String>,
+}
+
+impl SearchDelta {
+    /// Parse the artifact/wire format. `kind` is required so a delta
+    /// file can never be confused with the other committed artifact
+    /// schemas (trace specs, measurement sets):
+    ///
+    /// ```json
+    /// {"kind": "search-delta",
+    ///  "window_edits": [{"window": 3, "peak_qps": 55.0}],
+    ///  "reprice": [{"gpu": "h100", "usd_per_hour": 1.49}],
+    ///  "recalibrate": ["h100"],
+    ///  "add_legs": ["a100@hgx-h100"],
+    ///  "remove_legs": ["h200"]}
+    /// ```
+    pub fn from_json(j: &Json) -> anyhow::Result<SearchDelta> {
+        let kind = j.req_str("kind")?;
+        anyhow::ensure!(kind == "search-delta", "kind '{kind}' is not a search-delta");
+        let mut d = SearchDelta::default();
+        if let Some(arr) = j.get("window_edits").and_then(|v| v.as_arr()) {
+            for e in arr {
+                d.window_edits.push((e.req_f64("window")? as usize, e.req_f64("peak_qps")?));
+            }
+        }
+        if let Some(arr) = j.get("reprice").and_then(|v| v.as_arr()) {
+            for e in arr {
+                d.reprice.push((e.req_str("gpu")?.to_string(), e.req_f64("usd_per_hour")?));
+            }
+        }
+        for (field, out) in [
+            ("recalibrate", &mut d.recalibrate),
+            ("add_legs", &mut d.add_legs),
+            ("remove_legs", &mut d.remove_legs),
+        ] {
+            if let Some(arr) = j.get(field).and_then(|v| v.as_arr()) {
+                for e in arr {
+                    out.push(
+                        e.as_str()
+                            .ok_or_else(|| anyhow::anyhow!("{field} entries must be strings"))?
+                            .to_string(),
+                    );
+                }
+            }
+        }
+        d.validate()?;
+        Ok(d)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("kind", json::s("search-delta"));
+        if !self.window_edits.is_empty() {
+            let arr = self
+                .window_edits
+                .iter()
+                .map(|&(w, q)| {
+                    let mut e = Json::obj();
+                    e.set("window", json::num(w as f64)).set("peak_qps", json::num(q));
+                    e
+                })
+                .collect();
+            o.set("window_edits", Json::Arr(arr));
+        }
+        if !self.reprice.is_empty() {
+            let arr = self
+                .reprice
+                .iter()
+                .map(|(g, p)| {
+                    let mut e = Json::obj();
+                    e.set("gpu", json::s(g)).set("usd_per_hour", json::num(*p));
+                    e
+                })
+                .collect();
+            o.set("reprice", Json::Arr(arr));
+        }
+        for (field, v) in [
+            ("recalibrate", &self.recalibrate),
+            ("add_legs", &self.add_legs),
+            ("remove_legs", &self.remove_legs),
+        ] {
+            if !v.is_empty() {
+                o.set(field, Json::Arr(v.iter().map(|s| json::s(s)).collect()));
+            }
+        }
+        o
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(!self.is_empty(), "empty delta: nothing to replan");
+        for &(w, q) in &self.window_edits {
+            anyhow::ensure!(
+                q.is_finite() && q >= 0.0,
+                "window {w} edit: peak_qps {q} must be finite and non-negative"
+            );
+        }
+        for (g, p) in &self.reprice {
+            anyhow::ensure!(
+                p.is_finite() && *p > 0.0,
+                "reprice of '{g}': usd_per_hour {p} must be finite and positive"
+            );
+        }
+        for name in
+            self.recalibrate.iter().chain(&self.add_legs).chain(&self.remove_legs)
+        {
+            anyhow::ensure!(!name.is_empty(), "empty leg name in delta");
+        }
+        Ok(())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.window_edits.is_empty()
+            && self.reprice.is_empty()
+            && self.recalibrate.is_empty()
+            && self.add_legs.is_empty()
+            && self.remove_legs.is_empty()
+    }
+
+    /// Does this delta change the option *set* (as opposed to demands
+    /// or prices of existing options)?
+    pub fn is_structural(&self) -> bool {
+        !self.recalibrate.is_empty() || !self.add_legs.is_empty() || !self.remove_legs.is_empty()
+    }
+
+    /// Pure demand-side edit: the priced option set is untouched and
+    /// the planner can patch individual windows in place.
+    pub fn only_window_edits(&self) -> bool {
+        !self.window_edits.is_empty()
+            && self.reprice.is_empty()
+            && !self.is_structural()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ParallelSpec, RuntimeFlags};
+    use crate::frameworks::Framework;
+    use crate::models::{by_name, Dtype};
+    use crate::topology::Placement;
+
+    fn eng(par: ParallelSpec) -> EngineConfig {
+        EngineConfig {
+            framework: Framework::TrtLlm,
+            parallel: par,
+            batch: 8,
+            weight_dtype: Dtype::Fp8,
+            kv_dtype: Dtype::Fp8,
+            flags: RuntimeFlags::defaults_for(Framework::TrtLlm),
+            placement: Placement::packed(),
+        }
+    }
+
+    #[test]
+    fn tag_masks_are_conservative_and_shape_dependent() {
+        let dense = by_name("qwen3-32b").unwrap();
+        let single = engine_tag_mask(&dense, &eng(ParallelSpec::tp(1)));
+        assert_eq!(single, BASE_TAGS_MASK, "single-GPU dense engine prices no collectives");
+        let tp4 = engine_tag_mask(&dense, &eng(ParallelSpec::tp(4)));
+        assert!(tp4 & tag_bit(TAG_ALL_REDUCE) != 0);
+        assert!(tp4 & tag_bit(TAG_MOE_GEMM) == 0, "dense model never prices MoE GEMMs");
+        assert!(single & tp4 == single, "wider layouts only add tags");
+
+        let moe = by_name("deepseek-v3").or_else(|| by_name("mixtral-8x7b"));
+        if let Some(m) = moe {
+            assert!(engine_tag_mask(&m, &eng(ParallelSpec::tp(1))) & tag_bit(TAG_MOE_GEMM) != 0);
+        }
+    }
+
+    #[test]
+    fn disagg_candidates_always_carry_p2p() {
+        let dense = by_name("qwen3-32b").unwrap();
+        let c = Candidate::Disaggregated {
+            prefill: eng(ParallelSpec::tp(1)),
+            decode: eng(ParallelSpec::tp(1)),
+            x: 1,
+            y: 1,
+        };
+        assert!(candidate_tag_mask(&dense, &c) & tag_bit(TAG_P2P) != 0);
+        let a = Candidate::Aggregated { engine: eng(ParallelSpec::tp(1)), replicas: 2 };
+        assert!(candidate_tag_mask(&dense, &a) & tag_bit(TAG_P2P) == 0);
+    }
+
+    #[test]
+    fn delta_json_roundtrip_and_validation() {
+        let d = SearchDelta {
+            window_edits: vec![(3, 55.0), (0, 10.0)],
+            reprice: vec![("h100".to_string(), 1.49)],
+            recalibrate: vec!["h100".to_string()],
+            add_legs: vec!["a100@hgx-h100".to_string()],
+            remove_legs: vec!["h200".to_string()],
+        };
+        let back = SearchDelta::from_json(&d.to_json()).unwrap();
+        assert_eq!(back, d);
+        assert!(back.is_structural());
+        assert!(!back.only_window_edits());
+
+        let w = SearchDelta { window_edits: vec![(1, 5.0)], ..Default::default() };
+        assert!(SearchDelta::from_json(&w.to_json()).unwrap().only_window_edits());
+
+        assert!(SearchDelta::from_json(&Json::obj()).is_err(), "kind is required");
+        let mut wrong = Json::obj();
+        wrong.set("kind", json::s("trace-spec"));
+        assert!(SearchDelta::from_json(&wrong).is_err());
+        let mut empty = Json::obj();
+        empty.set("kind", json::s("search-delta"));
+        assert!(SearchDelta::from_json(&empty).is_err(), "empty deltas rejected");
+        let bad = SearchDelta { reprice: vec![("h100".into(), -1.0)], ..Default::default() };
+        assert!(bad.validate().is_err());
+    }
+}

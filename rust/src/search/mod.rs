@@ -12,10 +12,12 @@
 //! ([`crate::frameworks::Backend::resolve_flags`]), re-resolved per
 //! workload scenario.
 
+pub mod delta;
 pub mod runner;
 pub mod space;
 
-pub use runner::{flag_summaries, FlagSummary, RunOptions, SearchReport, TaskRunner};
+pub use delta::SearchDelta;
+pub use runner::{flag_summaries, FlagSummary, RunArena, RunOptions, SearchReport, TaskRunner};
 pub use space::SearchSpace;
 
 use crate::config::ServingMode;

@@ -10,24 +10,27 @@
 //! `table1_search` bench) load-balances poorly; the shared queue keeps
 //! every worker busy until the queue drains.
 //!
-//! Two further engine features ride on the same plumbing:
+//! Three further engine features ride on the same plumbing:
 //! * **incremental pruning** ([`RunOptions::prune`]): SLA-infeasible and
-//!   strictly-dominated candidates are discarded while the sweep runs,
-//!   via per-worker [`crate::pareto::FrontierAccumulator`]s merged
-//!   deterministically at join;
+//!   strictly-dominated candidates are discarded at the deterministic
+//!   assembly step, against a [`crate::pareto::FrontierAccumulator`]
+//!   built from the priced outcomes in queue order;
 //! * **batch sweeps** ([`TaskRunner::run_sweep`]): many (ISL, OSL, SLA)
 //!   scenarios priced in one pass, sharing the structural engine grid and
-//!   a memoized oracle ([`crate::perfdb::MemoOracle`]).
+//!   a memoized oracle ([`crate::perfdb::MemoOracle`]);
+//! * **differential replan** ([`TaskRunner::replan`]): re-price only the
+//!   jobs whose op-tag mask a [`crate::search::SearchDelta`] invalidates,
+//!   splice them into a retained [`RunArena`], and re-run the same
+//!   assembly — bit-identical to a cold re-search by construction.
 //!
 //! The hot path is contention-free by construction: candidates come from
 //! SoA [`CandidateGrid`]s (no per-candidate heap objects), workers grab
 //! dense index slabs from the shared cursor ([`pool::scoped_map_states`]),
-//! each worker prices through a thread-local [`crate::perfdb::LocalMemo`]
-//! (zero shared write-lock traffic) and offers into a private frontier
-//! accumulator; the per-worker states merge in worker-id order at join,
-//! so results are independent of thread interleaving.
+//! and each worker prices through a thread-local
+//! [`crate::perfdb::LocalMemo`] (zero shared write-lock traffic) absorbed
+//! in worker-id order at join, so results are independent of thread
+//! interleaving.
 
-use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::config::{Candidate, EngineConfig, RuntimeFlags, ServingMode, WorkloadSpec};
@@ -188,14 +191,12 @@ enum Job {
 
 /// Per-worker pricing context, built once per worker at spawn and
 /// merged (in worker-id order) at join: a thread-local memo front
-/// (absorbed into the shared [`crate::perfdb::MemoStore`] when the
-/// worker finishes) and a private frontier accumulator (no shared
-/// frontier lock during the sweep). The `Mutex`es are uncontended —
-/// only the owning worker ever locks them; they exist because the
-/// oracle trait and the pool's `Fn` bound hand out `&self`.
+/// absorbed into the shared [`crate::perfdb::MemoStore`] when the
+/// worker finishes. Pruning needs no per-worker state — the dominance
+/// frontier is rebuilt deterministically from the priced outcomes in
+/// queue order at assembly (see [`TaskRunner::assemble`]).
 struct WorkerCtx<'m> {
     memo: Option<LocalMemo<'m>>,
-    acc: Mutex<FrontierAccumulator>,
 }
 
 /// Queue-cursor grab size for candidate pricing: consecutive jobs are
@@ -205,10 +206,48 @@ struct WorkerCtx<'m> {
 const PRICE_CHUNK: usize = 4;
 
 /// Result of one job (returned through the worker pool in queue order).
+/// `Clone` so a [`RunArena`] can retain the priced outcomes for
+/// differential replans while handing assembly a borrowed view.
+#[derive(Clone)]
 enum JobOut {
     Agg(Evaluated),
     Pre(disagg::PoolPrice),
     Dec(disagg::PoolPrice),
+}
+
+/// Retained state of one priced sweep, the substrate for differential
+/// replanning: the scenario and options it was priced under, the
+/// candidate pools, the unified job queue, each job's most recent
+/// (outcome, pricing-ms), and each job's conservative op-tag mask
+/// ([`super::delta::engine_tag_mask`]). Fields are private on purpose:
+/// arenas are only produced by [`TaskRunner::run_cached_arena`] and
+/// mutated by [`TaskRunner::replan`], which together maintain the
+/// queue/outcome alignment invariant the bit-equality pin rests on.
+pub struct RunArena {
+    wl: WorkloadSpec,
+    opts: RunOptions,
+    pools: EnginePools,
+    jobs: Vec<Job>,
+    outs: Vec<(JobOut, f64)>,
+    tags: Vec<u64>,
+}
+
+impl RunArena {
+    /// Number of retained priced jobs (aggregated + prefill + decode).
+    pub fn len(&self) -> usize {
+        self.jobs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.jobs.is_empty()
+    }
+
+    /// Indices of jobs whose conservative tag mask intersects `mask` —
+    /// exactly the set a [`TaskRunner::replan`] with that mask
+    /// re-prices.
+    pub fn invalidated(&self, mask: u64) -> Vec<usize> {
+        (0..self.jobs.len()).filter(|&j| self.tags[j] & mask != 0).collect()
+    }
 }
 
 /// Drives the search for one workload on one cluster.
@@ -326,6 +365,87 @@ impl<'a> TaskRunner<'a> {
         self.run_inner(memo, Some(memo), &wl, &pools, opts)
     }
 
+    /// [`Self::run_cached`] that additionally retains the priced sweep
+    /// as a [`RunArena`] for later differential replans. The report is
+    /// identical to [`Self::run_cached`] — same pricing, same assembly;
+    /// the arena just keeps the outcomes instead of dropping them.
+    pub fn run_cached_arena(
+        &self,
+        memo: &MemoOracle<'_>,
+        opts: &RunOptions,
+    ) -> (SearchReport, RunArena) {
+        let t0 = Instant::now();
+        let tiers_before = memo.provenance_counts();
+        let wl = self.workload.clone();
+        let pools = self.pools_for(&wl);
+        let jobs = Self::jobs_for(&pools);
+        let outs = self.price_all(memo, Some(memo), &wl, &pools, &jobs);
+        let tags: Vec<u64> = jobs
+            .iter()
+            .map(|job| match *job {
+                Job::Agg(i) => super::delta::engine_tag_mask(
+                    self.model,
+                    &pools.grid.get(pools.agg[i] as usize),
+                ),
+                // Prefill/decode pool prices feed disaggregated
+                // composites, whose KV transfer always rides P2P.
+                Job::Pre(i) => {
+                    super::delta::engine_tag_mask(
+                        self.model,
+                        &pools.pre_grid.get(pools.prefill[i] as usize),
+                    ) | super::delta::tag_bit(crate::perfdb::cache::TAG_P2P)
+                }
+                Job::Dec(i) => {
+                    super::delta::engine_tag_mask(
+                        self.model,
+                        &pools.grid.get(pools.decode[i] as usize),
+                    ) | super::delta::tag_bit(crate::perfdb::cache::TAG_P2P)
+                }
+            })
+            .collect();
+        let report = self.assemble(memo, &wl, &pools, opts, &outs, jobs.len(), t0, tiers_before);
+        (report, RunArena { wl, opts: opts.clone(), pools, jobs, outs, tags })
+    }
+
+    /// Differential re-search: drop the memo entries for the
+    /// invalidated op classes, re-price ONLY the jobs whose conservative
+    /// tag mask intersects `mask`, splice the fresh outcomes into the
+    /// arena, and re-run the shared deterministic assembly. The result
+    /// is bit-identical (modulo the wall-clock fields `elapsed_s` and
+    /// `median_config_ms`) to a from-scratch [`Self::run_cached`]
+    /// against the same changed oracle — pinned in `tests/replan.rs` —
+    /// while `configs_priced` counts only the re-priced jobs.
+    ///
+    /// Correctness leans on the tag masks being *conservative*: every
+    /// job whose estimate could consult an invalidated op class is
+    /// re-priced. Jobs outside the mask keep their retained outcomes,
+    /// which match what a cold run would produce because pricing is
+    /// deterministic and their memo entries survive
+    /// [`crate::perfdb::MemoStore::invalidate_tags`] bit-identically.
+    pub fn replan(&self, arena: &mut RunArena, memo: &MemoOracle<'_>, mask: u64) -> SearchReport {
+        let t0 = Instant::now();
+        let tiers_before = memo.provenance_counts();
+        memo.invalidate_tags(mask);
+        let stale = arena.invalidated(mask);
+        if !stale.is_empty() {
+            let jobs: Vec<Job> = stale.iter().map(|&j| arena.jobs[j]).collect();
+            let fresh = self.price_all(memo, Some(memo), &arena.wl, &arena.pools, &jobs);
+            for (&j, out) in stale.iter().zip(fresh) {
+                arena.outs[j] = out;
+            }
+        }
+        self.assemble(
+            memo,
+            &arena.wl,
+            &arena.pools,
+            &arena.opts,
+            &arena.outs,
+            stale.len(),
+            t0,
+            tiers_before,
+        )
+    }
+
     /// Price many workload scenarios in one pass, sharing the structural
     /// engine enumeration (grid built once, memory-filtered per
     /// scenario) and memoizing oracle queries across the whole sweep.
@@ -393,18 +513,9 @@ impl<'a> TaskRunner<'a> {
 
     /// The engine core: one unified job queue over all candidate kinds,
     /// drained in dense chunks by the shared worker pool (each worker
-    /// carrying a [`WorkerCtx`]), then deterministic merge-and-assembly
+    /// carrying a [`WorkerCtx`]), then deterministic assembly
     /// (aggregated candidates in engine order, disaggregated composites
     /// in rate-match order — the same order the seed produced).
-    ///
-    /// When `memo` is set, workers price through thread-local
-    /// [`LocalMemo`] fronts absorbed into the shared store at join;
-    /// `oracle` is then the memo itself (provenance forwards to its
-    /// inner oracle). Pruning offers into per-worker accumulators and
-    /// replays a **strict**-dominance filter over the merged frontier
-    /// in input order, so the survivor set — "feasible and not strictly
-    /// dominated by any feasible candidate" — does not depend on which
-    /// worker priced what.
     fn run_inner(
         &self,
         oracle: &dyn LatencyOracle,
@@ -415,71 +526,129 @@ impl<'a> TaskRunner<'a> {
     ) -> SearchReport {
         let t0 = Instant::now();
         let tiers_before = oracle.provenance_counts();
+        let jobs = Self::jobs_for(pools);
+        let outcomes = self.price_all(oracle, memo, wl, pools, &jobs);
+        self.assemble(oracle, wl, pools, opts, &outcomes, jobs.len(), t0, tiers_before)
+    }
+
+    /// The unified job queue for one scenario's pools, in the pinned
+    /// agg… pre… dec… order every assembly and replan relies on.
+    fn jobs_for(pools: &EnginePools) -> Vec<Job> {
         let mut jobs: Vec<Job> =
             Vec::with_capacity(pools.agg.len() + pools.prefill.len() + pools.decode.len());
         jobs.extend((0..pools.agg.len()).map(Job::Agg));
         jobs.extend((0..pools.prefill.len()).map(Job::Pre));
         jobs.extend((0..pools.decode.len()).map(Job::Dec));
-        let configs_priced = jobs.len();
+        jobs
+    }
 
-        let total_gpus = self.cluster.total_gpus();
+    /// Price one job against `o`. Shared verbatim between the pooled
+    /// sweep ([`Self::price_all`]) and the differential replan path, so
+    /// a re-priced outcome is bit-identical to a cold one whenever the
+    /// oracle returns the same latencies.
+    fn price_job(
+        &self,
+        o: &dyn LatencyOracle,
+        wl: &WorkloadSpec,
+        pools: &EnginePools,
+        job: Job,
+    ) -> JobOut {
+        match job {
+            Job::Agg(i) => {
+                let eng = pools.grid.get(pools.agg[i] as usize);
+                let replicas = (self.cluster.total_gpus() / eng.parallel.gpus()).max(1);
+                let cand = Candidate::Aggregated { engine: eng, replicas };
+                let est = perfmodel::estimate(o, self.model, self.cluster, &cand, wl);
+                JobOut::Agg(Evaluated { cand, est })
+            }
+            Job::Pre(i) => JobOut::Pre(disagg::price_prefill(
+                o,
+                self.model,
+                self.cluster,
+                &pools.pre_grid.get(pools.prefill[i] as usize),
+                wl,
+            )),
+            Job::Dec(i) => JobOut::Dec(disagg::price_decode(
+                o,
+                self.model,
+                self.cluster,
+                &pools.grid.get(pools.decode[i] as usize),
+                wl,
+            )),
+        }
+    }
+
+    /// Drain `jobs` through the shared worker pool. When `memo` is set,
+    /// workers price through thread-local [`LocalMemo`] fronts absorbed
+    /// into the shared store in worker-id order at join. Returns each
+    /// job's (outcome, pricing-ms) in queue order.
+    fn price_all(
+        &self,
+        oracle: &dyn LatencyOracle,
+        memo: Option<&MemoOracle<'_>>,
+        wl: &WorkloadSpec,
+        pools: &EnginePools,
+        jobs: &[Job],
+    ) -> Vec<(JobOut, f64)> {
         let (outcomes, states): (Vec<(JobOut, f64)>, Vec<WorkerCtx<'_>>) =
             pool::scoped_map_states(
-                &jobs,
+                jobs,
                 self.threads,
                 PRICE_CHUNK,
-                |_wid| WorkerCtx {
-                    memo: memo.map(|m| m.local()),
-                    acc: Mutex::new(FrontierAccumulator::new()),
-                },
+                |_wid| WorkerCtx { memo: memo.map(|m| m.local()) },
                 |ctx, _idx, job| {
                     let o: &dyn LatencyOracle = match &ctx.memo {
                         Some(lm) => lm,
                         None => oracle,
                     };
                     let t = Instant::now();
-                    let out = match *job {
-                        Job::Agg(i) => {
-                            let eng = pools.grid.get(pools.agg[i] as usize);
-                            let replicas = (total_gpus / eng.parallel.gpus()).max(1);
-                            let cand = Candidate::Aggregated { engine: eng, replicas };
-                            let est =
-                                perfmodel::estimate(o, self.model, self.cluster, &cand, wl);
-                            if opts.prune && est.meets(&wl.sla) {
-                                ctx.acc.lock().unwrap().offer_est(&est);
-                            }
-                            JobOut::Agg(Evaluated { cand, est })
-                        }
-                        Job::Pre(i) => JobOut::Pre(disagg::price_prefill(
-                            o,
-                            self.model,
-                            self.cluster,
-                            &pools.pre_grid.get(pools.prefill[i] as usize),
-                            wl,
-                        )),
-                        Job::Dec(i) => JobOut::Dec(disagg::price_decode(
-                            o,
-                            self.model,
-                            self.cluster,
-                            &pools.grid.get(pools.decode[i] as usize),
-                            wl,
-                        )),
-                    };
+                    let out = self.price_job(o, wl, pools, *job);
                     (out, t.elapsed().as_secs_f64() * 1e3)
                 },
             );
-
-        // ---- Deterministic join: absorb memo fronts, merge frontiers ----
-        // Worker-id order (what `scoped_map_states` guarantees) makes the
-        // merged accumulator reproducible; the strict-dominance replay
-        // below makes the survivor set scheduling-independent on top.
-        let mut merged = FrontierAccumulator::new();
         for st in states {
             if let Some(lm) = st.memo {
                 lm.merge();
             }
-            for &(s, t) in st.acc.into_inner().unwrap().points() {
-                merged.offer(s, t);
+        }
+        outcomes
+    }
+
+    /// Deterministic assembly: rebuild the pruning frontier from the
+    /// priced outcomes in queue order, filter aggregated survivors,
+    /// rate-match disaggregated composites, and produce the report. A
+    /// pure function of (outcomes, options) — shared verbatim by cold
+    /// runs and differential replans, which is what pins a replan
+    /// bit-identical to a from-scratch re-search.
+    ///
+    /// Rebuilding the frontier here (rather than merging per-worker
+    /// accumulators at join, as earlier revisions did) is semantics-
+    /// preserving: a weak-dominance offer stream converges to the
+    /// maximal distinct value set regardless of offer order, and the
+    /// strict-dominance `dominated()` filter below depends only on that
+    /// value set — so the survivor set is identical and, as before,
+    /// independent of which worker priced what.
+    #[allow(clippy::too_many_arguments)]
+    fn assemble(
+        &self,
+        oracle: &dyn LatencyOracle,
+        wl: &WorkloadSpec,
+        pools: &EnginePools,
+        opts: &RunOptions,
+        outcomes: &[(JobOut, f64)],
+        configs_priced: usize,
+        t0: Instant,
+        tiers_before: Option<TierSnapshot>,
+    ) -> SearchReport {
+        let total_gpus = self.cluster.total_gpus();
+        let mut merged = FrontierAccumulator::new();
+        if opts.prune {
+            for (out, _) in outcomes {
+                if let JobOut::Agg(ev) = out {
+                    if ev.est.meets(&wl.sla) {
+                        merged.offer_est(&ev.est);
+                    }
+                }
             }
         }
 
@@ -490,7 +659,7 @@ impl<'a> TaskRunner<'a> {
         let mut d_prices: Vec<disagg::PoolPrice> = Vec::with_capacity(pools.decode.len());
         let mut pruned = 0usize;
         for (out, ms) in outcomes {
-            per_config_ms.push(ms);
+            per_config_ms.push(*ms);
             match out {
                 JobOut::Agg(ev) => {
                     if opts.prune
@@ -499,11 +668,11 @@ impl<'a> TaskRunner<'a> {
                     {
                         pruned += 1;
                     } else {
-                        evaluated.push(ev);
+                        evaluated.push(ev.clone());
                     }
                 }
-                JobOut::Pre(p) => p_prices.push(p),
-                JobOut::Dec(d) => d_prices.push(d),
+                JobOut::Pre(p) => p_prices.push(*p),
+                JobOut::Dec(d) => d_prices.push(*d),
             }
         }
 
@@ -934,5 +1103,115 @@ mod tests {
                 .collect()
         };
         assert_eq!(vals(&a_full), vals(&a_pruned));
+    }
+
+    fn assert_reports_equal(a: &SearchReport, b: &SearchReport) {
+        assert_eq!(a.evaluated.len(), b.evaluated.len());
+        for (x, y) in a.evaluated.iter().zip(&b.evaluated) {
+            assert_eq!(x.cand, y.cand);
+            assert_eq!(x.est, y.est);
+        }
+        assert_eq!(a.pruned, b.pruned);
+    }
+
+    fn small_replan_runner<'a>(
+        model: &'a ModelArch,
+        cluster: &'a ClusterSpec,
+    ) -> TaskRunner<'a> {
+        let mut space = SearchSpace::default_for(model, Framework::TrtLlm);
+        space.batch = vec![8, 32];
+        space.max_x = 4;
+        space.max_y = 4;
+        let wl = WorkloadSpec::new("llama3.1-8b", 1024, 128, 2000.0, 10.0);
+        TaskRunner::new(model, cluster, space, wl)
+    }
+
+    /// Oracle wrapper that scales collective latencies — stands in for
+    /// a swapped calibration artifact correcting the comm tables.
+    struct ScaledCollectives<'a> {
+        inner: &'a dyn LatencyOracle,
+        factor: f64,
+    }
+
+    impl LatencyOracle for ScaledCollectives<'_> {
+        fn op_latency_us(&self, op: &crate::ops::Op) -> f64 {
+            use crate::ops::Op;
+            let base = self.inner.op_latency_us(op);
+            match op {
+                Op::AllReduce { .. } | Op::AllGather { .. } | Op::AllToAll { .. } => {
+                    base * self.factor
+                }
+                _ => base,
+            }
+        }
+    }
+
+    /// Arena-retaining runs report exactly what `run_cached` reports,
+    /// and a replan with an empty invalidation mask re-prices nothing
+    /// while reproducing the baseline report.
+    #[test]
+    fn replan_with_empty_mask_is_identity() {
+        let model = by_name("llama3.1-8b").unwrap();
+        let cluster = ClusterSpec::new(h100_sxm(), 8, 1);
+        let sil = Silicon::new(cluster, Framework::TrtLlm.profile());
+        let runner = small_replan_runner(&model, &cluster);
+        let opts = RunOptions { prune: true };
+
+        let plain = runner.run_cached(&MemoOracle::new(&sil), &opts);
+        let memo = MemoOracle::new(&sil);
+        let (r1, mut arena) = runner.run_cached_arena(&memo, &opts);
+        assert_reports_equal(&plain, &r1);
+        assert_eq!(arena.len(), r1.configs_priced);
+        assert!(arena.invalidated(0).is_empty());
+
+        let r2 = runner.replan(&mut arena, &memo, 0);
+        assert_eq!(r2.configs_priced, 0, "empty mask must re-price nothing");
+        assert_reports_equal(&r1, &r2);
+    }
+
+    /// The bit-equality pin behind differential re-search: after the
+    /// collective tables change, a replan that re-prices only the
+    /// comm-tagged jobs through the (invalidated) shared memo store
+    /// matches a from-scratch search against the changed oracle —
+    /// while re-pricing strictly fewer candidates than the full sweep.
+    #[test]
+    fn replan_matches_from_scratch_after_collective_change() {
+        use crate::perfdb::cache::{TAG_ALL_GATHER, TAG_ALL_REDUCE, TAG_ALL_TO_ALL};
+        use crate::search::delta::tag_bit;
+
+        let model = by_name("llama3.1-8b").unwrap();
+        let cluster = ClusterSpec::new(h100_sxm(), 8, 1);
+        let sil = Silicon::new(cluster, Framework::TrtLlm.profile());
+        let runner = small_replan_runner(&model, &cluster);
+
+        for opts in [RunOptions { prune: false }, RunOptions { prune: true }] {
+            let store = crate::perfdb::MemoStore::new();
+            let memo1 = MemoOracle::with_store(&sil, &store);
+            let (r1, mut arena) = runner.run_cached_arena(&memo1, &opts);
+
+            // "Recalibrate" the comm tables, keep the same memo store.
+            let scaled = ScaledCollectives { inner: &sil, factor: 1.37 };
+            let memo2 = MemoOracle::with_store(&scaled, &store);
+            let mask = tag_bit(TAG_ALL_REDUCE) | tag_bit(TAG_ALL_GATHER) | tag_bit(TAG_ALL_TO_ALL);
+            let inc = runner.replan(&mut arena, &memo2, mask);
+
+            let fresh = runner.run_cached(&MemoOracle::new(&scaled), &opts);
+            assert_reports_equal(&fresh, &inc);
+
+            // Strictly fewer candidates re-priced: single-GPU engines
+            // carry no collective tags, so they keep their outcomes.
+            assert!(inc.configs_priced > 0, "multi-GPU candidates must re-price");
+            assert!(
+                inc.configs_priced < r1.configs_priced,
+                "replan must re-price strictly fewer than the full sweep: {} vs {}",
+                inc.configs_priced,
+                r1.configs_priced
+            );
+
+            // A second replan with the same mask converges (the memo
+            // now holds the corrected latencies).
+            let again = runner.replan(&mut arena, &memo2, mask);
+            assert_reports_equal(&inc, &again);
+        }
     }
 }

@@ -440,6 +440,7 @@ fn dispatch(op: OpKind, body: &Json, state: &State) -> anyhow::Result<Json> {
         OpKind::Sweep => handle_sweep_request(body, state),
         OpKind::Plan => handle_plan_request(body, state),
         OpKind::Validate => handle_validate_request(body, state),
+        OpKind::Replan => handle_replan_request(body, state),
         OpKind::Stats => {
             // Stats without a pipeline (direct embedding): no queue to
             // report.
@@ -671,6 +672,31 @@ struct PlanParts {
     fw: Framework,
     spec: crate::planner::PlanSpec,
     legs: Vec<(ClusterSpec, Arc<dyn LatencyOracle>)>,
+    gpn: u32,
+    nodes: u32,
+}
+
+/// Resolve one fleet-leg token (`GPU[@FABRIC]`, grammar shared with the
+/// CLI's --fleet) to its cluster and warm-cache oracle — the leg half
+/// of [`parse_plan_parts`], also used for a replan delta's added legs.
+fn plan_leg(
+    state: &State,
+    name: &str,
+    model: &str,
+    gpn: u32,
+    nodes: u32,
+    fw: Framework,
+) -> anyhow::Result<(ClusterSpec, Arc<dyn LatencyOracle>)> {
+    let leg = crate::hardware::parse_fleet_leg(name, gpn)?;
+    let key: DbKey =
+        (model.to_string(), leg.gpu_name, gpn, nodes, fw.name().to_string(), leg.fabric_name);
+    let entry = state.entry_for(&key)?;
+    let oracle: Arc<dyn LatencyOracle> = match &entry.cal {
+        // Per-request clone: private tier counters (DESIGN.md §8).
+        Some(cal) => Arc::new((**cal).clone()),
+        None => entry.db.clone(),
+    };
+    Ok((ClusterSpec::with_fabric(leg.gpu, gpn, nodes, leg.fabric), oracle))
 }
 
 /// Shared request parsing for `plan` and `validate`: both read the same
@@ -702,20 +728,7 @@ fn parse_plan_parts(req: &Json, state: &State) -> anyhow::Result<PlanParts> {
     };
     let mut legs: Vec<(ClusterSpec, Arc<dyn LatencyOracle>)> = Vec::new();
     for name in &names {
-        // Per-leg fabrics: "h100@gb200-nvl72" wires this leg's cluster
-        // with a named tiered fabric; a bare GPU name keeps the legacy
-        // flat topology (grammar shared with the CLI's --fleet —
-        // `hardware::parse_fleet_leg`).
-        let leg = crate::hardware::parse_fleet_leg(name, gpn)?;
-        let key: DbKey =
-            (wl.model.clone(), leg.gpu_name, gpn, nodes, fw.name().to_string(), leg.fabric_name);
-        let entry = state.entry_for(&key)?;
-        let oracle: Arc<dyn LatencyOracle> = match &entry.cal {
-            // Per-request clone: private tier counters (DESIGN.md §8).
-            Some(cal) => Arc::new((**cal).clone()),
-            None => entry.db.clone(),
-        };
-        legs.push((ClusterSpec::with_fabric(leg.gpu, gpn, nodes, leg.fabric), oracle));
+        legs.push(plan_leg(state, name, &wl.model, gpn, nodes, fw)?);
     }
 
     let spec = crate::planner::PlanSpec {
@@ -725,8 +738,9 @@ fn parse_plan_parts(req: &Json, state: &State) -> anyhow::Result<PlanParts> {
         window_h: p.f64_or("window_hours", 1.0),
         max_gpus: p.get("max_gpus").and_then(|v| v.as_f64()).map(|v| v as u32),
         prune: p.bool_or("prune", true),
+        demand_override: Vec::new(),
     };
-    Ok(PlanParts { wl, model, fw, spec, legs })
+    Ok(PlanParts { wl, model, fw, spec, legs, gpn, nodes })
 }
 
 /// Plan-validation request (v2-only):
@@ -804,6 +818,62 @@ fn handle_validate_request(req: &Json, state: &State) -> anyhow::Result<Json> {
         .set("trace_requests", json::num(trace.len() as f64))
         .set("plan", plan.to_json(&parts.wl))
         .set("report", report.to_json());
+    Ok(resp)
+}
+
+/// Differential replan request (v2-only):
+/// `{"v": 2, "op": "replan", "plan": {... as the plan op ...},
+///   "delta": {"kind": "search-delta", "window_edits": [...],
+///   "reprice": [...], "add_legs": [...], "remove_legs": [...]}, ...}`
+/// → plans exactly as the `plan` op would, applies the delta through
+/// the incremental replan layer ([`crate::planner::replan`]) — only
+/// added legs are swept; window edits, repricing and removals patch the
+/// retained frontier — and reports the patched plan plus the config
+/// diff (options that entered/left the deployment frontier, windows
+/// whose choice changed) and the re-priced-candidate counts. The
+/// result is bit-identical to a from-scratch `plan` of the patched
+/// request (CI-pinned). `recalibrate` deltas are CLI-only: they need a
+/// new calibration artifact, which a running server does not take.
+fn handle_replan_request(req: &Json, state: &State) -> anyhow::Result<Json> {
+    let t0 = Instant::now();
+    let parts = parse_plan_parts(req, state)?;
+    let delta = crate::search::SearchDelta::from_json(req.req("delta")?)?;
+    anyhow::ensure!(
+        delta.recalibrate.is_empty(),
+        "'recalibrate' deltas are CLI-only: swapping a calibration artifact needs \
+         `aiconf replan --calibration ...`, a running server keeps its launch-time calibration"
+    );
+
+    // Baseline plan + retained arena over per-request memos.
+    let memos: Vec<MemoOracle<'_>> =
+        parts.legs.iter().map(|(_, o)| MemoOracle::new(o.as_ref())).collect();
+    let fleet: Vec<(ClusterSpec, &MemoOracle<'_>)> =
+        parts.legs.iter().zip(&memos).map(|((c, _), m)| (*c, m)).collect();
+    let (baseline, mut arena) =
+        crate::planner::plan_arena(&parts.model, parts.fw, &parts.spec, &fleet)?;
+
+    // Added legs resolve through the same warm-cache path as the
+    // original fleet legs.
+    let added: Vec<(ClusterSpec, Arc<dyn LatencyOracle>)> = delta
+        .add_legs
+        .iter()
+        .map(|n| plan_leg(state, n, &parts.wl.model, parts.gpn, parts.nodes, parts.fw))
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    let added_memos: Vec<MemoOracle<'_>> =
+        added.iter().map(|(_, o)| MemoOracle::new(o.as_ref())).collect();
+    let swept: Vec<(ClusterSpec, &MemoOracle<'_>)> =
+        added.iter().zip(&added_memos).map(|((c, _), m)| (*c, m)).collect();
+
+    let rep =
+        crate::planner::replan(&parts.model, parts.fw, &mut arena, &baseline, &delta, &swept)?;
+    let mut resp = Json::obj();
+    resp.set("status", json::s("ok"))
+        .set("elapsed_ms", json::num(t0.elapsed().as_secs_f64() * 1e3))
+        .set("replan", rep.to_json(&parts.wl))
+        .set(
+            "schedule_yaml",
+            json::s(&generator::dynamo::plan_schedule_yaml(&rep.plan, &parts.wl.model, &parts.wl)),
+        );
     Ok(resp)
 }
 
@@ -1095,6 +1165,73 @@ mod tests {
             handle_request(&json::parse(r#"{"v": 2, "op": "stats"}"#).unwrap(), &st).unwrap();
         let counts = stats_resp.req("stats").unwrap().req("requests").unwrap();
         assert_eq!(counts.req("validate").unwrap().req_f64("count").unwrap(), 1.0);
+    }
+
+    #[test]
+    fn replan_request_applies_delta_and_matches_a_fresh_plan() {
+        let st = state();
+        // From-scratch reference: a plan over the patched (two-leg)
+        // fleet. The replan below must reproduce it bit for bit.
+        let fresh = handle_request(&plan_request(&["h100", "a100"], 3.0), &st).unwrap();
+        // Replan: start from h100 only, the delta adds the a100 leg.
+        let mut req = plan_request(&["h100"], 3.0);
+        req.set("v", json::num(2.0)).set("op", json::s("replan"));
+        let mut delta = Json::obj();
+        delta
+            .set("kind", json::s("search-delta"))
+            .set("add_legs", Json::Arr(vec![json::s("a100")]));
+        req.set("delta", delta);
+        let resp = handle_request(&req, &st).unwrap();
+        assert_eq!(resp.req_str("status").unwrap(), "ok");
+        let rep = resp.req("replan").unwrap();
+        assert!(rep.req_f64("repriced_configs").unwrap() > 0.0, "the added leg is swept");
+        assert!(
+            rep.req_f64("repriced_configs").unwrap()
+                < rep.req_f64("baseline_priced_configs").unwrap(),
+            "replan must price strictly fewer configs than a full re-search"
+        );
+        assert_eq!(
+            rep.req("plan").unwrap().to_string(),
+            fresh.req("plan").unwrap().to_string(),
+            "incremental replan must be bit-identical to the from-scratch plan"
+        );
+        assert!(resp.req_str("schedule_yaml").unwrap().contains("kind: DeploymentSchedule"));
+        // Counted as its own op in the stats rollup.
+        let stats_resp =
+            handle_request(&json::parse(r#"{"v": 2, "op": "stats"}"#).unwrap(), &st).unwrap();
+        let counts = stats_resp.req("stats").unwrap().req("requests").unwrap();
+        assert_eq!(counts.req("replan").unwrap().req_f64("count").unwrap(), 1.0);
+    }
+
+    #[test]
+    fn replan_request_reprice_prices_nothing_and_recalibrate_is_rejected() {
+        let st = state();
+        let mut req = plan_request(&["h100"], 3.0);
+        req.set("v", json::num(2.0)).set("op", json::s("replan"));
+        let mut delta = Json::obj();
+        let mut rp = Json::obj();
+        rp.set("gpu", json::s("h100")).set("usd_per_hour", json::num(1.49));
+        delta.set("kind", json::s("search-delta")).set("reprice", Json::Arr(vec![rp]));
+        req.set("delta", delta);
+        let resp = handle_request(&req, &st).unwrap();
+        assert_eq!(resp.req_str("status").unwrap(), "ok");
+        let rep = resp.req("replan").unwrap();
+        assert_eq!(
+            rep.req_f64("repriced_configs").unwrap(),
+            0.0,
+            "a GPU reprice is a pure cost re-derivation"
+        );
+        assert!(rep.req_f64("baseline_priced_configs").unwrap() > 0.0);
+
+        let mut req = plan_request(&["h100"], 2.0);
+        req.set("v", json::num(2.0)).set("op", json::s("replan"));
+        let mut delta = Json::obj();
+        delta
+            .set("kind", json::s("search-delta"))
+            .set("recalibrate", Json::Arr(vec![json::s("h100")]));
+        req.set("delta", delta);
+        let err = handle_request(&req, &st).unwrap_err();
+        assert!(err.to_string().contains("CLI-only"), "{err:#}");
     }
 
     #[test]

@@ -3,7 +3,7 @@
 //! Two request dialects share one dispatch path:
 //!
 //! * **v2 envelope** — `{"v": 2, "id": ..., "op": "search" | "sweep" |
-//!   "plan" | "validate" | "stats", ...}` with typed error responses
+//!   "plan" | "validate" | "replan" | "stats", ...}` with typed error responses
 //!   `{"v": 2, "id": ..., "error": {"code": ..., "message": ...}}`.
 //! * **legacy (v1)** — the original bare requests: the operation is
 //!   inferred from which field is present (`plan` → plan, `workloads` →
@@ -25,15 +25,16 @@ use crate::models::{by_name, ModelArch};
 use crate::search::SearchSpace;
 use crate::util::json::{self, Json};
 
-/// The five operations the service answers. `validate` is v2-only:
-/// the legacy dialect predates it, so [`infer_legacy_op`] never
-/// produces it and v1 clients cannot reach it by accident.
+/// The operations the service answers. `validate` and `replan` are
+/// v2-only: the legacy dialect predates them, so [`infer_legacy_op`]
+/// never produces them and v1 clients cannot reach them by accident.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum OpKind {
     Search,
     Sweep,
     Plan,
     Validate,
+    Replan,
     Stats,
 }
 
@@ -44,6 +45,7 @@ impl OpKind {
             OpKind::Sweep => "sweep",
             OpKind::Plan => "plan",
             OpKind::Validate => "validate",
+            OpKind::Replan => "replan",
             OpKind::Stats => "stats",
         }
     }
@@ -54,6 +56,7 @@ impl OpKind {
             "sweep" => Some(OpKind::Sweep),
             "plan" => Some(OpKind::Plan),
             "validate" => Some(OpKind::Validate),
+            "replan" => Some(OpKind::Replan),
             "stats" => Some(OpKind::Stats),
             _ => None,
         }
@@ -158,7 +161,7 @@ pub fn parse_envelope(req: &Json) -> Result<Envelope, ServiceError> {
             let op = OpKind::parse(op_name).ok_or_else(|| ServiceError {
                 code: ErrCode::UnsupportedOp,
                 message: format!(
-                    "unknown op '{op_name}' (expected search|sweep|plan|validate|stats)"
+                    "unknown op '{op_name}' (expected search|sweep|plan|validate|replan|stats)"
                 ),
             })?;
             Ok(Envelope { v: 2, id, op, body: req.clone() })
@@ -294,6 +297,17 @@ pub fn request_key(env: &Envelope) -> anyhow::Result<RequestKey> {
                 m.remove("op");
             }
             format!("validate|{}", b.to_string())
+        }
+        OpKind::Replan => {
+            // A replan request is a plan request plus its delta; both
+            // shape the answer, so both belong in the key.
+            let mut b = body.clone();
+            if let Json::Obj(m) = &mut b {
+                m.remove("v");
+                m.remove("id");
+                m.remove("op");
+            }
+            format!("replan|{}", b.to_string())
         }
         OpKind::Stats => "stats".to_string(),
     };

@@ -111,6 +111,7 @@ pub struct ServiceStats {
     pub sweep: OpStat,
     pub plan: OpStat,
     pub validate: OpStat,
+    pub replan: OpStat,
     pub stats_reqs: AtomicU64,
     /// Error responses of any kind (typed, legacy, shed).
     pub errors: AtomicU64,
@@ -138,6 +139,7 @@ impl ServiceStats {
             OpKind::Sweep => Some(&self.sweep),
             OpKind::Plan => Some(&self.plan),
             OpKind::Validate => Some(&self.validate),
+            OpKind::Replan => Some(&self.replan),
             OpKind::Stats => None,
         }
     }
@@ -191,6 +193,7 @@ impl ServiceStats {
             ("sweep", &self.sweep),
             ("plan", &self.plan),
             ("validate", &self.validate),
+            ("replan", &self.replan),
         ] {
             let mut o = Json::obj();
             o.set("count", json::num(ld(&s.count)))
@@ -251,6 +254,7 @@ impl ServiceStats {
             ("sweep", &self.sweep),
             ("plan", &self.plan),
             ("validate", &self.validate),
+            ("replan", &self.replan),
         ] {
             out.push_str(&format!(
                 "aiconf_requests_total{{op=\"{name}\"}} {}\n",

@@ -16,6 +16,7 @@ use aiconfigurator::perfdb::measure;
 use aiconfigurator::perfdb::CalibrationArtifact;
 use aiconfigurator::planner::TrafficModel;
 use aiconfigurator::runtime::Manifest;
+use aiconfigurator::search::SearchDelta;
 use aiconfigurator::util::json::{self, Json};
 
 fn repo_root() -> PathBuf {
@@ -244,6 +245,83 @@ fn trace_specs_validate() {
         );
     }
     assert!(found >= 1, "artifacts/traces holds no trace specs");
+}
+
+/// The committed BENCH_replan.json placeholder (or its measured
+/// overwrite) must keep the keys benches/replan.rs writes; a measured
+/// run must show the incremental replan beating the full re-search —
+/// the differential layer's entire reason to exist.
+#[test]
+fn bench_replan_keeps_its_contract() {
+    let txt = std::fs::read_to_string(repo_root().join("BENCH_replan.json")).unwrap();
+    let j = json::parse(&txt).unwrap();
+    assert_eq!(j.req_str("bench").unwrap(), "replan");
+    for key in [
+        "baseline_priced_configs",
+        "full_resweep_ms_median",
+        "replan_window_ms_median",
+        "replan_reprice_ms_median",
+        "replan_addleg_ms_median",
+        "addleg_repriced_configs",
+        "window_speedup",
+        "addleg_speedup",
+    ] {
+        let v = j.req(key).unwrap_or_else(|e| panic!("BENCH_replan.json: {e}"));
+        assert!(
+            matches!(v, Json::Null | Json::Num(_)),
+            "BENCH_replan.json: '{key}' must be a number or null (pending)"
+        );
+    }
+    // A measured run (non-null full_resweep_ms_median) must show the
+    // demand-side replan at least matching the full re-search and the
+    // structural replan re-pricing a strict subset.
+    if let Some(full) = j.req("full_resweep_ms_median").unwrap().as_f64() {
+        assert!(
+            j.req_f64("replan_window_ms_median").unwrap() <= full,
+            "window-edit replan slower than a full re-search"
+        );
+        let baseline = j.req_f64("baseline_priced_configs").unwrap();
+        let repriced = j.req_f64("addleg_repriced_configs").unwrap();
+        assert!(
+            repriced < baseline,
+            "add-leg replan re-priced {repriced} of {baseline} configs — nothing saved"
+        );
+    }
+}
+
+/// Every committed delta scenario under artifacts/deltas/ must satisfy
+/// the `replan --delta` contract: `"kind": "search-delta"`, fields that
+/// parse and validate through [`SearchDelta::from_json`], and leg/GPU
+/// tokens that resolve against the hardware presets — so the CI
+/// replan-smoke job can never be fed a scenario the CLI would reject.
+#[test]
+fn delta_specs_validate() {
+    let dir = repo_root().join("artifacts").join("deltas");
+    assert!(dir.is_dir(), "artifacts/deltas is committed by this repo and must exist");
+    let mut found = 0;
+    for entry in std::fs::read_dir(&dir).unwrap() {
+        let path = entry.unwrap().path();
+        if !path.extension().is_some_and(|x| x == "json") {
+            continue;
+        }
+        found += 1;
+        let name = path.file_name().unwrap().to_string_lossy().to_string();
+        let txt = std::fs::read_to_string(&path).unwrap();
+        let j = json::parse(&txt).unwrap_or_else(|e| panic!("{name}: invalid JSON: {e}"));
+        let d = SearchDelta::from_json(&j).unwrap_or_else(|e| panic!("{name}: {e}"));
+        for (gpu, _) in &d.reprice {
+            assert!(gpu_by_name(gpu).is_some(), "{name}: reprices unknown gpu '{gpu}'");
+        }
+        for leg in d.recalibrate.iter().chain(&d.add_legs).chain(&d.remove_legs) {
+            aiconfigurator::hardware::parse_fleet_leg(leg, 8)
+                .unwrap_or_else(|e| panic!("{name}: bad leg token '{leg}': {e}"));
+        }
+        // Round-trip: the wire format regenerates an equal delta.
+        let back = SearchDelta::from_json(&d.to_json())
+            .unwrap_or_else(|e| panic!("{name}: to_json round-trip: {e}"));
+        assert_eq!(back, d, "{name}: to_json/from_json round-trip drifted");
+    }
+    assert!(found >= 1, "artifacts/deltas holds no delta scenarios");
 }
 
 /// Every measurement set under artifacts/measurements/<gpu>/ parses,

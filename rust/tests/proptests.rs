@@ -340,6 +340,84 @@ fn prop_k_accumulator_matches_batch_dominance_filter() {
     }
 }
 
+/// Tracked-mode accumulator under random offer/retract/update
+/// interleavings: after every operation, (a) `kept_ids` is exactly the
+/// accepted set produced by streaming the *live* arena points through a
+/// fresh accumulator's `offer_point` in ascending id order — the
+/// planner's conservative kept-set contract — and (b) `frontier_ids`
+/// is, as a set of objective vectors, `k_frontier_indices` over the
+/// live points. Retractions must re-admit formerly-dominated survivors:
+/// the schedule deliberately retracts dominators, so points rejected at
+/// offer time re-enter the kept set once their dominator dies.
+#[test]
+fn prop_tracked_interleavings_match_batch_recompute() {
+    let mut rng = Rng::new(0x7AC7);
+    for case in 0..60 {
+        let mut acc = pareto::FrontierAccumulator::new();
+        // The reference arena: (objectives, alive) per stable id.
+        let mut arena: Vec<(Vec<f64>, bool)> = Vec::new();
+        let rand_pt = |rng: &mut Rng| {
+            vec![
+                -(rng.f64() * 4.0).round() * 3.0, // −cost/h
+                (rng.f64() * 4.0).round() * 5.0,  // capacity
+                (rng.f64() * 4.0).round() * 10.0, // speed
+                (rng.f64() * 4.0).round() * 2.0,  // −gpus (4-objective)
+            ]
+        };
+        for step in 0..80 {
+            match rng.below(4) {
+                0 | 1 => {
+                    let p = rand_pt(&mut rng);
+                    let id = acc.offer_tracked(&p);
+                    assert_eq!(id, arena.len(), "case {case} step {step}: id drift");
+                    arena.push((p, true));
+                }
+                2 if !arena.is_empty() => {
+                    let id = rng.below(arena.len() as u64) as usize;
+                    acc.retract(id);
+                    arena[id].1 = false;
+                }
+                3 if !arena.is_empty() => {
+                    let id = rng.below(arena.len() as u64) as usize;
+                    let p = rand_pt(&mut rng);
+                    acc.update(id, &p);
+                    arena[id] = (p, true); // update revives
+                }
+                _ => continue,
+            }
+            // (a) kept set == streaming the live points in id order.
+            let mut reference = pareto::FrontierAccumulator::new();
+            let expect_kept: Vec<usize> = arena
+                .iter()
+                .enumerate()
+                .filter(|(_, (p, alive))| *alive && reference.offer_point(p))
+                .map(|(id, _)| id)
+                .collect();
+            assert_eq!(
+                acc.kept_ids(),
+                expect_kept,
+                "case {case} step {step}: kept set diverged from id-order replay"
+            );
+            // (b) frontier == batch dominance filter over live points.
+            let live: Vec<Vec<f64>> =
+                arena.iter().filter(|(_, a)| *a).map(|(p, _)| p.clone()).collect();
+            let batch = pareto::k_frontier_indices(&live);
+            let mut batch_vals: Vec<&Vec<f64>> = batch.iter().map(|&i| &live[i]).collect();
+            let front_pts: Vec<Vec<f64>> =
+                acc.frontier_ids().iter().map(|&id| arena[id].0.clone()).collect();
+            let mut front_vals: Vec<&Vec<f64>> = front_pts.iter().collect();
+            let key = |v: &&Vec<f64>| v.iter().map(|x| x.to_bits()).collect::<Vec<u64>>();
+            batch_vals.sort_by_key(key);
+            front_vals.sort_by_key(key);
+            assert_eq!(
+                front_vals, batch_vals,
+                "case {case} step {step}: frontier diverged from batch recompute"
+            );
+            assert_eq!(acc.live_len(), live.len(), "case {case} step {step}");
+        }
+    }
+}
+
 /// Window cost under the ceiling replica rule is nonincreasing when an
 /// option weakly dominates another in (−cost, capacity) — the invariant
 /// that makes the planner's k-objective prune schedule-transparent.

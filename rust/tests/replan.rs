@@ -1,0 +1,146 @@
+//! Integration tests for differential re-planning over the *committed*
+//! delta scenarios (`artifacts/deltas/*.json`) — the same files the CI
+//! `replan-smoke` job replays through the CLI. Each scenario's
+//! incremental replan must be bit-identical to a from-scratch plan of
+//! the patched inputs while re-pricing strictly fewer engine configs
+//! than the full re-search (the differential layer's contract).
+
+use std::path::{Path, PathBuf};
+
+use aiconfigurator::config::WorkloadSpec;
+use aiconfigurator::frameworks::Framework;
+use aiconfigurator::hardware::{gpu_by_name, parse_fleet_leg, ClusterSpec};
+use aiconfigurator::models::by_name;
+use aiconfigurator::perfdb::{LatencyOracle, MemoOracle};
+use aiconfigurator::planner::{self, PlanSpec, TrafficModel};
+use aiconfigurator::search::SearchDelta;
+use aiconfigurator::silicon::Silicon;
+use aiconfigurator::util::json;
+
+fn repo_root() -> PathBuf {
+    // CARGO_MANIFEST_DIR is <repo>/rust.
+    Path::new(env!("CARGO_MANIFEST_DIR")).parent().unwrap().to_path_buf()
+}
+
+/// One fleet leg from its `GPU[@FABRIC]` token, priced by the analytic
+/// silicon directly (no database build — keeps the scenario loop fast).
+fn build_leg(token: &str) -> (ClusterSpec, Silicon) {
+    let leg = parse_fleet_leg(token, 8).unwrap_or_else(|e| panic!("leg '{token}': {e}"));
+    let cluster = ClusterSpec::with_fabric(leg.gpu, 8, 1, leg.fabric);
+    let silicon = Silicon::new(cluster, Framework::TrtLlm.profile());
+    (cluster, silicon)
+}
+
+/// Every committed delta scenario replans bit-identically to the
+/// from-scratch plan of the patched inputs, re-pricing strictly fewer
+/// configs than the full re-search. The baseline fleet is h100 + a100 —
+/// scenarios may remove `a100`, reprice `h100`, and add legs, but must
+/// not recalibrate (the smoke runs without a calibration artifact; the
+/// recalibrate path is pinned by the planner's unit tests).
+#[test]
+fn committed_delta_scenarios_replan_bit_identically() {
+    let dir = repo_root().join("artifacts").join("deltas");
+    assert!(dir.is_dir(), "artifacts/deltas is committed by this repo and must exist");
+    let model = by_name("llama3.1-8b").unwrap();
+    let fw = Framework::TrtLlm;
+    let wl = WorkloadSpec::new("llama3.1-8b", 1024, 128, 2000.0, 10.0);
+    let spec = PlanSpec::new(
+        wl.clone(),
+        TrafficModel::Diurnal { peak_qps: 80.0, trough_qps: 4.0, period_h: 24.0 },
+        12,
+        1.0,
+    );
+    let tokens = ["h100", "a100"];
+
+    let mut found = 0;
+    for entry in std::fs::read_dir(&dir).unwrap() {
+        let path = entry.unwrap().path();
+        if !path.extension().is_some_and(|x| x == "json") {
+            continue;
+        }
+        found += 1;
+        let name = path.file_name().unwrap().to_string_lossy().to_string();
+        let txt = std::fs::read_to_string(&path).unwrap();
+        let j = json::parse(&txt).unwrap_or_else(|e| panic!("{name}: invalid JSON: {e}"));
+        let delta = SearchDelta::from_json(&j).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert!(
+            delta.recalibrate.is_empty(),
+            "{name}: committed scenarios must not recalibrate — the smoke runs \
+             without a calibration artifact"
+        );
+        for (w, _) in &delta.window_edits {
+            assert!(*w < spec.windows, "{name}: window edit {w} outside the smoke horizon");
+        }
+
+        // Incremental: baseline arena, then the delta through `replan`.
+        let legs: Vec<(ClusterSpec, Silicon)> =
+            tokens.iter().map(|t| build_leg(t)).collect();
+        let memos: Vec<MemoOracle<'_>> =
+            legs.iter().map(|(_, s)| MemoOracle::new(s as &dyn LatencyOracle)).collect();
+        let fleet: Vec<(ClusterSpec, &MemoOracle<'_>)> =
+            legs.iter().zip(&memos).map(|((c, _), m)| (*c, m)).collect();
+        let (baseline, mut arena) = planner::plan_arena(&model, fw, &spec, &fleet)
+            .unwrap_or_else(|e| panic!("{name}: baseline plan: {e}"));
+        let added: Vec<(ClusterSpec, Silicon)> =
+            delta.add_legs.iter().map(|t| build_leg(t)).collect();
+        let added_memos: Vec<MemoOracle<'_>> =
+            added.iter().map(|(_, s)| MemoOracle::new(s as &dyn LatencyOracle)).collect();
+        let swept: Vec<(ClusterSpec, &MemoOracle<'_>)> =
+            added.iter().zip(&added_memos).map(|((c, _), m)| (*c, m)).collect();
+        let rep = planner::replan(&model, fw, &mut arena, &baseline, &delta, &swept)
+            .unwrap_or_else(|e| panic!("{name}: replan: {e}"));
+        assert!(
+            rep.repriced_configs < rep.baseline_priced_configs,
+            "{name}: replan re-priced {} of {} configs — nothing saved",
+            rep.repriced_configs,
+            rep.baseline_priced_configs
+        );
+
+        // From scratch: the patched fleet in canonical order (removed
+        // legs dropped, added appended), repriced GPUs, window edits as
+        // demand overrides.
+        let mut patched: Vec<String> = tokens.iter().map(|t| t.to_string()).collect();
+        for r in &delta.remove_legs {
+            let gpu = gpu_by_name(r).unwrap_or_else(|| panic!("{name}: unknown gpu '{r}'"));
+            let pos = patched
+                .iter()
+                .position(|t| parse_fleet_leg(t, 8).unwrap().gpu.name == gpu.name)
+                .unwrap_or_else(|| panic!("{name}: removes '{r}' not in baseline fleet"));
+            patched.remove(pos);
+        }
+        patched.extend(delta.add_legs.iter().cloned());
+        let mut fresh: Vec<(ClusterSpec, Silicon)> =
+            patched.iter().map(|t| build_leg(t)).collect();
+        for (g, price) in &delta.reprice {
+            let gpu = gpu_by_name(g).unwrap_or_else(|| panic!("{name}: unknown gpu '{g}'"));
+            for (c, _) in fresh.iter_mut() {
+                if c.gpu.name == gpu.name {
+                    c.gpu.usd_per_hour = *price;
+                }
+            }
+        }
+        let fresh_fleet: Vec<(ClusterSpec, &dyn LatencyOracle)> =
+            fresh.iter().map(|(c, s)| (*c, s as &dyn LatencyOracle)).collect();
+        let mut pspec = spec.clone();
+        pspec.demand_override = delta.window_edits.clone();
+        let fresh_plan = planner::plan(&model, fw, &pspec, &fresh_fleet)
+            .unwrap_or_else(|e| panic!("{name}: from-scratch plan: {e}"));
+        assert_eq!(
+            rep.plan.to_json(&wl).to_string(),
+            fresh_plan.to_json(&wl).to_string(),
+            "{name}: incremental replan is not bit-identical to the from-scratch plan"
+        );
+
+        // The report's JSON surface carries the diff the CI job uploads.
+        let rj = rep.to_json(&wl);
+        assert_eq!(rj.req_str("kind").unwrap(), "replan-report", "{name}");
+        assert!(rj.req("entered").unwrap().as_arr().is_some(), "{name}");
+        assert!(rj.req("left").unwrap().as_arr().is_some(), "{name}");
+        assert!(
+            rj.req_f64("repriced_configs").unwrap()
+                < rj.req_f64("baseline_priced_configs").unwrap(),
+            "{name}"
+        );
+    }
+    assert!(found >= 2, "artifacts/deltas holds fewer scenarios than the smoke expects");
+}

@@ -18,12 +18,18 @@
 #                   asserting the incremental replan is bit-identical to
 #                   a from-scratch plan of the patched inputs while
 #                   re-pricing strictly fewer engine configs
+#   make trace-smoke  tracing/explain gate: run search --trace-out and
+#                   plan --explain end-to-end, then schema-check the
+#                   Chrome trace-event exports (tests/artifacts.rs scans
+#                   rust/target/trace-smoke/)
 #   make bench      search-engine benches (table1_search + sweep)
 #   make bench-plan capacity-planner bench (writes BENCH_plan.json)
 #   make bench-topo topology bench (writes BENCH_topology.json)
 #   make bench-service  closed-loop service bench (writes BENCH_service.json)
 #   make bench-validate  fleet-replay bench (writes BENCH_validate.json)
 #   make bench-replan  differential-replan bench (writes BENCH_replan.json)
+#   make bench-trace  tracing-overhead bench (writes BENCH_trace.json;
+#                   the artifact gate enforces <= 5% median regression)
 #   make bench-all  every bench target
 #   make bench-budget  perf-budget gate: snapshot the committed
 #                   BENCH_plan/BENCH_topology baselines, re-run the
@@ -40,9 +46,9 @@ RUST_DIR := rust
 PYTHON   ?= python3
 
 .PHONY: verify build test gen-smoke artifacts-validate calibrate-smoke topo-smoke \
-        service-smoke validate-smoke replan-smoke measurements bench bench-plan \
-        bench-topo bench-service bench-validate bench-replan bench-all bench-budget \
-        artifacts fmt clippy clean
+        service-smoke validate-smoke replan-smoke trace-smoke measurements bench \
+        bench-plan bench-topo bench-service bench-validate bench-replan bench-trace \
+        bench-all bench-budget artifacts fmt clippy clean
 
 verify:
 	cd $(RUST_DIR) && cargo build --release && cargo test -q
@@ -112,6 +118,22 @@ replan-smoke:
 		--delta ../artifacts/deltas/fleet-swap-smoke.json \
 		--out target/replan/fleet-swap.json --check-equal
 
+trace-smoke:
+	rm -rf $(RUST_DIR)/target/trace-smoke
+	mkdir -p $(RUST_DIR)/target/trace-smoke
+	cd $(RUST_DIR) && cargo run --release -- search \
+		--model qwen3-32b --gpu h100 --framework trtllm \
+		--isl 4000 --osl 500 --ttft 2000 --speed 10 --prune \
+		--trace-out target/trace-smoke/search-trace.json \
+		--explain --explain-out target/trace-smoke/search-explain.json
+	cd $(RUST_DIR) && cargo run --release -- plan \
+		--model llama3.1-8b --fleet h100,a100 --framework trtllm \
+		--isl 256 --osl 32 --ttft 5000 --speed 2 \
+		--traffic diurnal --peak-qps 80 --trough-qps 4 --windows 12 \
+		--trace-out target/trace-smoke/plan-trace.json \
+		--explain --explain-out target/trace-smoke/plan-explain.json
+	cd $(RUST_DIR) && cargo test --test artifacts trace_smoke -- --nocapture
+
 measurements:
 	$(PYTHON) python/measurements/synth.py
 
@@ -140,20 +162,24 @@ bench-validate:
 bench-replan:
 	cd $(RUST_DIR) && cargo bench --bench replan
 
+bench-trace:
+	cd $(RUST_DIR) && cargo bench --bench trace
+
 bench-budget:
 	rm -rf $(RUST_DIR)/target/bench-baseline
 	mkdir -p $(RUST_DIR)/target/bench-baseline
-	cp BENCH_plan.json BENCH_topology.json BENCH_replan.json \
+	cp BENCH_plan.json BENCH_topology.json BENCH_replan.json BENCH_trace.json \
 		$(RUST_DIR)/target/bench-baseline/
 	cd $(RUST_DIR) && cargo bench --bench sweep
 	cd $(RUST_DIR) && cargo bench --bench planner
 	cd $(RUST_DIR) && cargo bench --bench topology
 	cd $(RUST_DIR) && cargo bench --bench replan
+	cd $(RUST_DIR) && cargo bench --bench trace
 	cd $(RUST_DIR) && cargo test --test artifacts -q
 	$(PYTHON) python/bench_budget.py \
 		--baseline $(RUST_DIR)/target/bench-baseline --current . --tolerance 0.15
 
-bench-all: bench bench-plan bench-topo bench-service bench-validate bench-replan
+bench-all: bench bench-plan bench-topo bench-service bench-validate bench-replan bench-trace
 	cd $(RUST_DIR) && cargo bench --bench interp_hot_path
 	cd $(RUST_DIR) && cargo bench --bench calibration
 	cd $(RUST_DIR) && cargo bench --bench simulator

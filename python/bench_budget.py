@@ -28,7 +28,12 @@ import json
 import os
 import sys
 
-DEFAULT_FILES = ["BENCH_plan.json", "BENCH_topology.json", "BENCH_replan.json"]
+DEFAULT_FILES = [
+    "BENCH_plan.json",
+    "BENCH_topology.json",
+    "BENCH_replan.json",
+    "BENCH_trace.json",
+]
 BUDGET_SUFFIX = "_ms_median"
 
 

@@ -1,0 +1,73 @@
+//! Bench: tracing overhead — the same pruned search clocked with no
+//! recorder installed vs recorded end-to-end (spans on the grid build,
+//! every pricing batch and the frontier merge, plus per-worker
+//! lifetime spans). The acceptance bar is a <= 5% median regression
+//! (`tests/artifacts.rs::bench_trace_keeps_its_contract`); tracing
+//! *off* is pinned separately as bit-identical and a single
+//! thread-local check per instrumentation point.
+//!
+//! Run: `cargo bench --bench trace` (or `make bench-trace`).
+//! Writes the measured medians to ../BENCH_trace.json.
+
+use aiconfigurator::config::WorkloadSpec;
+use aiconfigurator::frameworks::Framework;
+use aiconfigurator::hardware::{h100_sxm, ClusterSpec};
+use aiconfigurator::models::{by_name, Dtype};
+use aiconfigurator::perfdb::{LatencyOracle, PerfDatabase};
+use aiconfigurator::search::{RunOptions, SearchSpace, TaskRunner};
+use aiconfigurator::silicon::Silicon;
+use aiconfigurator::trace;
+use aiconfigurator::util::bench::{bench, black_box};
+use aiconfigurator::util::json::{self, Json};
+use aiconfigurator::util::stats;
+
+fn main() {
+    let model_name = "qwen3-32b";
+    let model = by_name(model_name).unwrap();
+    let cluster = ClusterSpec::new(h100_sxm(), 8, 1);
+    let silicon = Silicon::new(cluster, Framework::TrtLlm.profile());
+    let db = PerfDatabase::build(&silicon, &model, Dtype::Fp8, 0xA1C0);
+    let space = SearchSpace::default_for(&model, Framework::TrtLlm);
+    let wl = WorkloadSpec::new(model_name, 2048, 256, 1500.0, 20.0);
+    let runner = TaskRunner::new(&model, &cluster, space, wl);
+    let opts = RunOptions { prune: true };
+
+    assert!(!trace::enabled(), "bench must start on an untraced thread");
+    let off = bench(&format!("search-untraced/{model_name}"), 1, 5, || {
+        black_box(runner.run_with(&db as &dyn LatencyOracle, &opts));
+    });
+
+    // Traced samples: each gets a fresh recorder so span buffers never
+    // accumulate across iterations (matching one `--trace-out` run).
+    let mut on_samples = Vec::new();
+    let mut spans_recorded = 0usize;
+    for _ in 0..5 {
+        let rec = trace::Recorder::new();
+        rec.install();
+        let t = std::time::Instant::now();
+        black_box(runner.run_with(&db as &dyn LatencyOracle, &opts));
+        on_samples.push(t.elapsed().as_secs_f64() * 1e3);
+        spans_recorded = rec.finish().len();
+    }
+    let on_ms = stats::median(&on_samples);
+    let overhead = on_ms / off.median_ms().max(1e-9) - 1.0;
+    println!(
+        "search-traced/{model_name}: median {on_ms:.3} ms ({spans_recorded} spans; \
+         {:+.2}% vs untraced {:.3} ms)",
+        overhead * 100.0,
+        off.median_ms()
+    );
+
+    // Record the run (cwd is rust/ under `cargo bench`).
+    let mut o = Json::obj();
+    o.set("bench", json::s("trace"))
+        .set("model", json::s(model_name))
+        .set("search_off_ms_median", json::num(off.median_ms()))
+        .set("search_on_ms_median", json::num(on_ms))
+        .set("overhead_frac", json::num(overhead))
+        .set("spans_recorded", json::num(spans_recorded as f64));
+    match std::fs::write("../BENCH_trace.json", o.to_string()) {
+        Ok(()) => println!("    -> wrote ../BENCH_trace.json"),
+        Err(e) => println!("    -> could not write ../BENCH_trace.json: {e}"),
+    }
+}

@@ -133,6 +133,9 @@ pub fn replay(
     trace: &[Request],
     cfg: &FleetConfig,
 ) -> anyhow::Result<ValidationReport> {
+    let rsp = crate::trace::span("replay", "validate");
+    rsp.add("requests", trace.len() as f64);
+    rsp.add("windows", plan.windows.len() as f64);
     cfg.validate()?;
     anyhow::ensure!(!plan.windows.is_empty(), "cannot replay an empty plan");
     let window_ms = (plan.windows[0].t_end_h - plan.windows[0].t_start_h) * 3_600_000.0;
@@ -158,7 +161,10 @@ pub fn replay(
     let window_of = |t_ms: f64| ((t_ms / window_ms).floor() as usize).min(last);
 
     let timelines = lifecycle::build_timelines(plan, cfg);
-    let routes = router::route(trace, &timelines, window_of, |w| seg_of_window[w]);
+    let routes = {
+        let _s = crate::trace::span("route", "fleet");
+        router::route(trace, &timelines, window_of, |w| seg_of_window[w])
+    };
 
     // Group each (timeline, span)'s sub-trace, preserving arrival order.
     let mut groups: BTreeMap<(usize, usize), Vec<Request>> = BTreeMap::new();
@@ -169,6 +175,8 @@ pub fn replay(
     }
 
     // Run every sub-trace through the engine simulator of its segment.
+    let sp_sim = crate::trace::span("engine_sims", "fleet");
+    sp_sim.add("sub_traces", groups.len() as f64);
     let mut metrics: BTreeMap<u64, ReqMetric> = BTreeMap::new();
     // (start_ms, end_ms, timeline, id, transfer_ms) per disagg transfer.
     let mut transfers_by_seg: BTreeMap<usize, Vec<(f64, f64, usize, u64, f64)>> =
@@ -219,7 +227,9 @@ pub fn replay(
             metrics.insert(m.id, *m);
         }
     }
+    drop(sp_sim);
 
+    let sp_con = crate::trace::span("contention", "fleet");
     // Contention surcharge: transfers of *different* replicas in the
     // same segment overlap on the shared fabric and serialize. Each
     // transfer pays its own duration once more per overlapping
@@ -255,6 +265,8 @@ pub fn replay(
             }
         }
     }
+    sp_con.add("surcharged", extra.len() as f64);
+    drop(sp_con);
 
     // Per-request outcomes with cause attribution.
     let sla = &spec.workload.sla;

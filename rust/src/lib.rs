@@ -31,5 +31,6 @@ pub mod service;
 pub mod silicon;
 pub mod simulator;
 pub mod topology;
+pub mod trace;
 pub mod util;
 pub mod workload;

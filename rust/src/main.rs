@@ -37,6 +37,8 @@ use aiconfigurator::service::{SearchServer, ServerConfig};
 use aiconfigurator::silicon::Silicon;
 use aiconfigurator::simulator::aggregated::AggregatedSim;
 use aiconfigurator::simulator::SimConfig;
+use aiconfigurator::trace;
+use aiconfigurator::util::bench::oracle_line;
 use aiconfigurator::workload::closed_loop;
 use aiconfigurator::{generator, simulator};
 
@@ -52,11 +54,15 @@ USAGE:
                             [--flag-sweep] [--max-num-tokens N[,N...]]
                             [--kv-frac F[,F...]] [--cuda-graph on|off|both]
                             [--pjrt ARTIFACTS_DIR] [--calibration FILE.json]
+                            [--trace-out FILE.json] [--explain]
+                            [--explain-out FILE.json]
   aiconfigurator sweep      --model <name> [--gpu h100] [--gpus-per-node 8]
                             [--nodes 1] [--fabric NAME] [--framework trtllm]
                             [--prune] [--modes agg,disagg] [--flag-sweep]
                             [--max-num-tokens N[,N...]] [--kv-frac F[,F...]]
                             [--cuda-graph on|off|both] [--calibration FILE.json]
+                            [--trace-out FILE.json] [--explain]
+                            [--explain-out FILE.json]
                             --scenarios ISL:OSL:TTFT:SPEED[,ISL:OSL:TTFT:SPEED...]
                             (TTFT in ms or 'inf'; SPEED in tokens/s/user or 0)
   aiconfigurator topo       [--fabric NAME|all] [--gpu h100] [--gpus-per-node 8]
@@ -87,6 +93,8 @@ USAGE:
                                        [--burst-prob 0.15] [--burst-seed 7]
                             [--windows 24] [--window-hours 1] [--max-gpus N]
                             [--no-prune] [--out-dir DIR] [--calibration FILE.json]
+                            [--trace-out FILE.json] [--explain]
+                            [--explain-out FILE.json]
   aiconfigurator replan     --model <name> [--fleet h100,a100@a100-pcie]
                             [--gpus-per-node 8] [--nodes 1] [--framework trtllm]
                             --isl N --osl N [--ttft MS] [--speed TOK_S]
@@ -94,6 +102,7 @@ USAGE:
                             [--window-hours 1] [--max-gpus N] [--no-prune]
                             --delta DELTA.json [--calibration FILE.json]
                             [--out REPORT.json] [--check-equal]
+                            [--trace-out FILE.json]
                             (plans as `plan` would, then applies a committed
                              search-delta — window demand edits, per-GPU
                              repricing, a swapped calibration artifact, fleet
@@ -119,6 +128,7 @@ USAGE:
                             [--scale-lag SECONDS] [--failure-rate PER_REPLICA_H]
                             [--restart SECONDS] [--calibration FILE.json]
                             [--out REPORT.json] [--check-gap FRAC]
+                            [--trace-out FILE.json]
                             (plans as `plan` would, then replays a trace drawn
                              from the plan's own traffic model through the
                              fleet simulator — router, replica lifecycle,
@@ -143,10 +153,13 @@ USAGE:
   aiconfigurator serve      [--addr 127.0.0.1:7788] [--pjrt ARTIFACTS_DIR]
                             [--calibration FILE.json] [--workers N]
                             [--queue-limit N] [--cache-cap N]
+                            [--trace-sample N]
                             [--model <name> --gpu h100 --framework trtllm]
                             (v2 JSON-lines protocol with bounded worker
                              pool, request coalescing, warm LRU database
-                             cache and a 'stats' observability request)
+                             cache and a 'stats' observability request;
+                             --trace-sample N captures spans for every Nth
+                             request into the aiconf_span_* metrics, 0 = off)
 
 Models: llama3.1-8b qwen3-32b qwen3-235b deepseek-v3 mixtral-8x7b gpt-oss-120b
 GPUs:   a100 h100 h200 b200 b200-sxm gb200-nvl72    Frameworks: trtllm vllm sglang
@@ -173,6 +186,15 @@ time window, meeting the SLA at minimum $ cost.
 the analytic database: queries then resolve measured cell →
 calibrated-analytic → SoL, and reports carry per-tier query counts
 (plan applies it to the fleet leg whose GPU matches the artifact).
+`--trace-out FILE` records hierarchical spans across the run (search →
+grid build → pricing batches → frontier merge; plan → per-leg sweep →
+schedule; validate → replay; replan → invalidation → re-price) and
+writes Chrome trace-event JSON (open in chrome://tracing or Perfetto);
+a span-tree summary is printed. `--explain` prints a 'why this config
+won' report: per-phase latency decomposition by primitive class (GEMM/
+attention/comm/memory/host), resolved launch-flag provenance, the
+pruning audit and the nearest runner-up margin; --explain-out FILE
+persists the JSON.
 ";
 
 fn main() {
@@ -394,6 +416,61 @@ fn print_tier_counts(report: &aiconfigurator::search::SearchReport) {
     }
 }
 
+/// Install a span recorder when `--trace-out FILE` was passed. The
+/// paired [`finish_trace`] writes the Chrome trace and prints the span
+/// tree; without the flag both are no-ops and nothing is installed —
+/// the traced code paths then run their zero-cost inert guards.
+fn start_trace(f: &HashMap<String, String>) -> Option<trace::Recorder> {
+    f.get("trace-out").map(|_| {
+        let rec = trace::Recorder::new();
+        rec.install();
+        rec
+    })
+}
+
+/// Write the finished trace as Chrome trace-event JSON (open in
+/// chrome://tracing or Perfetto) and print the span-tree summary.
+fn finish_trace(
+    f: &HashMap<String, String>,
+    rec: Option<trace::Recorder>,
+) -> anyhow::Result<()> {
+    let (Some(path), Some(rec)) = (f.get("trace-out"), rec) else { return Ok(()) };
+    let tr = rec.finish();
+    let p = Path::new(path);
+    if let Some(parent) = p.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(p, tr.to_chrome_json().to_string())?;
+    print!("{}", tr.render_tree());
+    println!("wrote Chrome trace ({} spans) to {path}", tr.len());
+    Ok(())
+}
+
+/// Was an explain report requested (`--explain` or `--explain-out`)?
+fn explain_wanted(f: &HashMap<String, String>) -> bool {
+    f.contains_key("explain") || f.contains_key("explain-out")
+}
+
+/// Persist an explain report when `--explain-out FILE` was passed.
+fn write_explain(
+    f: &HashMap<String, String>,
+    e: &aiconfigurator::util::json::Json,
+) -> anyhow::Result<()> {
+    if let Some(out) = f.get("explain-out") {
+        let path = Path::new(out);
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        std::fs::write(path, e.to_string())?;
+        println!("wrote explain report to {out}");
+    }
+    Ok(())
+}
+
 /// Load a `--calibration` artifact and compose it over a freshly
 /// profiled database (context must match — DESIGN.md compatibility
 /// rules).
@@ -429,16 +506,22 @@ fn cmd_search(f: &HashMap<String, String>) -> anyhow::Result<()> {
 
     let runner = TaskRunner::new(&ctx.model, &ctx.cluster, space, wl.clone());
     let opts = aiconfigurator::search::RunOptions { prune: f.contains_key("prune") };
+    let rec = start_trace(f);
     // Every oracle tier runs behind a memo: workers price through
     // thread-local fronts, and the stats line below reports the
     // ops-priced rate and hit share from the shared store's counters.
+    // The explain report is built inside the branch while the oracle is
+    // still alive (calibration consumes the database).
     let run = |oracle: &dyn LatencyOracle| {
         let memo = MemoOracle::new(oracle);
         let report = runner.run_cached(&memo, &opts);
-        (report, memo.stats())
+        let explain = explain_wanted(f).then(|| {
+            trace::explain::search_explain(oracle, &ctx.model, &ctx.cluster, &wl, &report)
+        });
+        (report, memo.stats(), explain)
     };
     // Optional PJRT-backed hot path (AOT Pallas kernel via the runtime).
-    let (report, (memo_hits, memo_misses)) = if let Some(dir) = f.get("pjrt") {
+    let (report, (memo_hits, memo_misses), explain) = if let Some(dir) = f.get("pjrt") {
         anyhow::ensure!(
             !f.contains_key("calibration"),
             "--calibration is not supported with --pjrt: the AOT kernel interpolates the \
@@ -479,15 +562,7 @@ fn cmd_search(f: &HashMap<String, String>) -> anyhow::Result<()> {
         report.median_config_ms,
         analysis.feasible.len()
     );
-    let ops = memo_hits + memo_misses;
-    println!(
-        "oracle: {} ops priced ({:.0} ops/s), memo hit rate {:.1}% ({} hits, {} misses)",
-        ops,
-        ops as f64 / report.elapsed_s.max(1e-9),
-        100.0 * memo_hits as f64 / (ops.max(1)) as f64,
-        memo_hits,
-        memo_misses
-    );
+    println!("{}", oracle_line(memo_hits, memo_misses, report.elapsed_s));
     let top = flag_u32(f, "top", 5)? as usize;
     println!(
         "{:<6} {:>14} {:>12} {:>10} {:>6}  configuration",
@@ -510,6 +585,10 @@ fn cmd_search(f: &HashMap<String, String>) -> anyhow::Result<()> {
     }
     print_flag_summaries(&report);
     print_tier_counts(&report);
+    if let Some(e) = &explain {
+        print!("{}", trace::explain::render_search_explain(e));
+        write_explain(f, e)?;
+    }
     if let Some(best) = analysis.best() {
         if let Some(dir) = f.get("out-dir") {
             let bundle = generator::generate(&best.cand, ctx.model.name, &wl);
@@ -519,6 +598,7 @@ fn cmd_search(f: &HashMap<String, String>) -> anyhow::Result<()> {
     } else {
         println!("no configuration satisfies the SLA — relax --ttft/--speed");
     }
+    finish_trace(f, rec)?;
     Ok(())
 }
 
@@ -564,15 +644,28 @@ fn cmd_sweep(f: &HashMap<String, String>) -> anyhow::Result<()> {
     let runner = TaskRunner::new(&ctx.model, &ctx.cluster, space, scenarios[0].clone());
     let opts = aiconfigurator::search::RunOptions { prune: f.contains_key("prune") };
 
+    let rec = start_trace(f);
     let t0 = std::time::Instant::now();
     // Branch-scoped memo (calibration consumes the database): the whole
     // sweep shares one store, priced through per-worker memo fronts.
+    // Per-scenario explain reports are built while the oracle is alive.
     let run = |oracle: &dyn LatencyOracle| {
         let memo = MemoOracle::new(oracle);
         let reports = runner.run_sweep_cached(&memo, &scenarios, &opts);
-        (reports, memo.stats())
+        let explains: Vec<aiconfigurator::util::json::Json> = if explain_wanted(f) {
+            scenarios
+                .iter()
+                .zip(&reports)
+                .map(|(wl, r)| {
+                    trace::explain::search_explain(oracle, &ctx.model, &ctx.cluster, wl, r)
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
+        (reports, memo.stats(), explains)
     };
-    let (reports, (memo_hits, memo_misses)) = if let Some(path) = f.get("calibration") {
+    let (reports, (memo_hits, memo_misses), explains) = if let Some(path) = f.get("calibration") {
         anyhow::ensure!(
             !ctx.cluster.fabric.placement_aware(),
             "--calibration is not supported with a tiered --fabric: artifacts are fitted \
@@ -621,15 +714,17 @@ fn cmd_sweep(f: &HashMap<String, String>) -> anyhow::Result<()> {
         scenarios.len(),
         total_s
     );
-    let ops = memo_hits + memo_misses;
-    println!(
-        "oracle: {} ops priced ({:.0} ops/s), memo hit rate {:.1}% ({} hits, {} misses)",
-        ops,
-        ops as f64 / total_s.max(1e-9),
-        100.0 * memo_hits as f64 / (ops.max(1)) as f64,
-        memo_hits,
-        memo_misses
-    );
+    println!("{}", oracle_line(memo_hits, memo_misses, total_s));
+    if !explains.is_empty() {
+        for (wl, e) in scenarios.iter().zip(&explains) {
+            println!("--- explain isl={} osl={} ---", wl.isl, wl.osl);
+            print!("{}", trace::explain::render_search_explain(e));
+        }
+        // --explain-out gets the whole sweep as a JSON array.
+        let all = aiconfigurator::util::json::Json::Array(explains);
+        write_explain(f, &all)?;
+    }
+    finish_trace(f, rec)?;
     Ok(())
 }
 
@@ -852,11 +947,17 @@ fn cmd_plan(f: &HashMap<String, String>) -> anyhow::Result<()> {
         demand_override: Vec::new(),
     };
     let legs = build_fleet_legs(f, &model, framework)?;
-    let fleet: Vec<(ClusterSpec, &dyn LatencyOracle)> =
-        legs.iter().map(|l| (l.cluster, l.oracle.as_ref())).collect();
+    // CLI-owned memo per leg (bit-transparent: `planner::plan` wraps
+    // raw oracles in exactly this memo internally) so the shared
+    // oracle stats line can report ops priced + hit rate.
+    let memos: Vec<MemoOracle<'_>> =
+        legs.iter().map(|l| MemoOracle::new(l.oracle.as_ref())).collect();
+    let fleet: Vec<(ClusterSpec, &MemoOracle<'_>)> =
+        legs.iter().zip(&memos).map(|(l, m)| (l.cluster, m)).collect();
 
+    let rec = start_trace(f);
     let t0 = std::time::Instant::now();
-    let plan = aiconfigurator::planner::plan(&model, framework, &spec, &fleet)?;
+    let plan = aiconfigurator::planner::plan_cached(&model, framework, &spec, &fleet)?;
     let elapsed = t0.elapsed().as_secs_f64();
 
     println!(
@@ -908,6 +1009,20 @@ fn cmd_plan(f: &HashMap<String, String>) -> anyhow::Result<()> {
             );
         }
     }
+    let (hits, misses) = memos
+        .iter()
+        .map(|m| m.stats())
+        .fold((0u64, 0u64), |(h, m), (h2, m2)| (h + h2, m + m2));
+    println!("{}", oracle_line(hits, misses, elapsed));
+    if explain_wanted(f) {
+        let named: Vec<(String, ClusterSpec, &dyn LatencyOracle)> = legs
+            .iter()
+            .map(|l| (l.cluster.gpu.name.to_string(), l.cluster, l.oracle.as_ref()))
+            .collect();
+        let e = trace::explain::plan_explain(&model, &spec.workload, &plan, &named);
+        print!("{}", trace::explain::render_plan_explain(&e));
+        write_explain(f, &e)?;
+    }
 
     if let Some(dir) = f.get("out-dir") {
         let dirp = std::path::Path::new(dir);
@@ -938,6 +1053,7 @@ fn cmd_plan(f: &HashMap<String, String>) -> anyhow::Result<()> {
         }
         println!("wrote plan.json, schedule.yaml and per-window launch bundles to {dir}/");
     }
+    finish_trace(f, rec)?;
     Ok(())
 }
 
@@ -1030,6 +1146,7 @@ fn cmd_replan(f: &HashMap<String, String>) -> anyhow::Result<()> {
         .filter(|s| !s.is_empty())
         .collect();
     anyhow::ensure!(!tokens.is_empty(), "--fleet named no GPU types");
+    let rec = start_trace(f);
     let t0 = std::time::Instant::now();
     let legs: Vec<PlanLeg> = tokens
         .iter()
@@ -1087,6 +1204,12 @@ fn cmd_replan(f: &HashMap<String, String>) -> anyhow::Result<()> {
     if rep.entered.is_empty() && rep.left.is_empty() {
         println!("  frontier membership unchanged");
     }
+    let (hits, misses) = memos
+        .iter()
+        .chain(&swept_memos)
+        .map(|m| m.stats())
+        .fold((0u64, 0u64), |(h, m), (h2, m2)| (h + h2, m + m2));
+    println!("{}", oracle_line(hits, misses, baseline_s + replan_s));
 
     if let Some(out) = f.get("out") {
         let path = Path::new(out);
@@ -1162,6 +1285,7 @@ fn cmd_replan(f: &HashMap<String, String>) -> anyhow::Result<()> {
             rep.repriced_configs, rep.baseline_priced_configs
         );
     }
+    finish_trace(f, rec)?;
     Ok(())
 }
 
@@ -1232,11 +1356,17 @@ fn cmd_validate(f: &HashMap<String, String>) -> anyhow::Result<()> {
         demand_override: Vec::new(),
     };
     let legs = build_fleet_legs(f, &model, framework)?;
-    let fleet: Vec<(ClusterSpec, &dyn LatencyOracle)> =
-        legs.iter().map(|l| (l.cluster, l.oracle.as_ref())).collect();
+    // Memo-wrapped legs (same wrapping `planner::plan` does itself) so
+    // the shared oracle stats line can report the planning cost.
+    let memos: Vec<MemoOracle<'_>> =
+        legs.iter().map(|l| MemoOracle::new(l.oracle.as_ref())).collect();
+    let fleet: Vec<(ClusterSpec, &MemoOracle<'_>)> =
+        legs.iter().zip(&memos).map(|(l, m)| (l.cluster, m)).collect();
 
+    let rec = start_trace(f);
     let t0 = std::time::Instant::now();
-    let plan = aiconfigurator::planner::plan(&model, framework, &spec, &fleet)?;
+    let plan = aiconfigurator::planner::plan_cached(&model, framework, &spec, &fleet)?;
+    let plan_s = t0.elapsed().as_secs_f64();
     let trace = spec.traffic.trace(windows, window_h, &wl, len_jitter, trace_seed);
     anyhow::ensure!(
         !trace.is_empty(),
@@ -1275,6 +1405,11 @@ fn cmd_validate(f: &HashMap<String, String>) -> anyhow::Result<()> {
         cfg.failure_rate_per_replica_h,
         cfg.restart_s
     );
+    let (hits, misses) = memos
+        .iter()
+        .map(|m| m.stats())
+        .fold((0u64, 0u64), |(h, m), (h2, m2)| (h + h2, m + m2));
+    println!("{}", oracle_line(hits, misses, plan_s));
 
     if let Some(out) = f.get("out") {
         let path = Path::new(out);
@@ -1305,6 +1440,7 @@ fn cmd_validate(f: &HashMap<String, String>) -> anyhow::Result<()> {
             report.optimism_gap, max_gap
         );
     }
+    finish_trace(f, rec)?;
     Ok(())
 }
 
@@ -1534,6 +1670,7 @@ fn cmd_serve(f: &HashMap<String, String>) -> anyhow::Result<()> {
         workers: flag_u32(f, "workers", 0)? as usize,
         queue_limit: flag_u32(f, "queue-limit", 0)? as usize,
         cache_cap: flag_u32(f, "cache-cap", 0)? as usize,
+        trace_sample: flag_u32(f, "trace-sample", 0)? as usize,
     };
     let pjrt_ctx = if cfg.artifacts.is_some() {
         let model = f.get("model").map(String::as_str).unwrap_or("qwen3-32b");

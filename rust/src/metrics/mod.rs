@@ -1,5 +1,23 @@
 //! Fidelity metrics (paper §5): MAPE, Pearson correlation, banded MAPE
 //! (the 25–50 tokens/s/user interactive region of Fig 7).
+//!
+//! This module is one half of the crate's metrics story, and the two
+//! halves deliberately stay separate (DESIGN.md §12):
+//!
+//! * **Fidelity** (here) — pure math over prediction/truth pairs,
+//!   answering "how close is the model to the hardware". No state, no
+//!   atomics; callers own the sample vectors.
+//! * **Operational** ([`crate::service::stats`]) — lock-free runtime
+//!   counters behind the serving path's `stats` op and its
+//!   Prometheus-style `metrics_text` (request rates, latency
+//!   histograms, cache/coalescing gauges, `aiconf_span_*` trace
+//!   rollups).
+//!
+//! [`ServiceStats`] is re-exported here so "the metrics surface" is one
+//! import path even though the implementations live where they are
+//! used.
+
+pub use crate::service::stats::{CacheGauges, PoolGauges, ServiceStats};
 
 /// Mean Absolute Percentage Error between predictions and ground truth.
 /// Pairs with non-positive truth are skipped.

@@ -52,6 +52,7 @@ use crate::pareto::FrontierAccumulator;
 use crate::perfdb::{LatencyOracle, MemoOracle};
 use crate::perfmodel::PerfEstimate;
 use crate::search::{RunOptions, SearchDelta, SearchSpace, TaskRunner};
+use crate::trace;
 use crate::util::json::{self, Json};
 
 /// Planner input.
@@ -218,6 +219,7 @@ pub fn plan_cached(
     spec: &PlanSpec,
     fleet: &[(ClusterSpec, &MemoOracle<'_>)],
 ) -> anyhow::Result<DeploymentPlan> {
+    let _sp = trace::span("plan", "plan");
     check_spec(spec)?;
     anyhow::ensure!(!fleet.is_empty(), "the candidate fleet is empty");
     let demands = demands_for(spec)?;
@@ -288,10 +290,14 @@ fn price_leg(
     cluster: &ClusterSpec,
     memo: &MemoOracle<'_>,
 ) -> (Vec<PricedOption>, usize) {
+    let sp = trace::span(&format!("leg_sweep {}", cluster.gpu.name), "plan");
     let space = SearchSpace::default_for(model, framework);
     let runner = TaskRunner::new(model, cluster, space, wl.clone());
     let reports = runner.run_sweep_cached(memo, std::slice::from_ref(wl), &RunOptions::default());
-    (options_from_report(&cluster.gpu, wl, &reports[0]), reports[0].configs_priced)
+    let options = options_from_report(&cluster.gpu, wl, &reports[0]);
+    sp.add("configs_priced", reports[0].configs_priced as f64);
+    sp.add("options", options.len() as f64);
+    (options, reports[0].configs_priced)
 }
 
 /// One window's plan entry from the schedule layer's choice. Shared by
@@ -354,6 +360,10 @@ fn assemble_plan(
     all: &[PricedOption],
     kept: &[usize],
 ) -> anyhow::Result<DeploymentPlan> {
+    let sp = trace::span("schedule", "plan");
+    sp.add("options_considered", all.len() as f64);
+    sp.add("options_pruned", (all.len() - kept.len()) as f64);
+    sp.add("windows", spec.windows as f64);
     anyhow::ensure!(
         !all.is_empty(),
         "no SLA-feasible deployment option on any fleet leg — relax the SLA or widen the fleet"
@@ -611,6 +621,7 @@ pub fn replan(
     delta: &SearchDelta,
     swept: &[(ClusterSpec, &MemoOracle<'_>)],
 ) -> anyhow::Result<ReplanReport> {
+    let sp = trace::span("replan", "replan");
     delta.validate()?;
     anyhow::ensure!(
         swept.len() == delta.recalibrate.len() + delta.add_legs.len(),
@@ -671,6 +682,7 @@ pub fn replan(
             options_considered: all.len(),
             options_pruned: all.len() - kept.len(),
         };
+        sp.add("windows_changed", windows_changed as f64);
         return Ok(ReplanReport {
             plan,
             repriced_configs: 0,
@@ -784,6 +796,8 @@ pub fn replan(
         .filter(|(a, b)| a.gpu != b.gpu || a.cand != b.cand || a.replicas != b.replicas)
         .count();
     arena.last_kept = kept_labels;
+    sp.add("repriced_configs", repriced_configs as f64);
+    sp.add("windows_changed", windows_changed as f64);
     Ok(ReplanReport {
         plan,
         repriced_configs,

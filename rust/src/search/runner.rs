@@ -40,6 +40,7 @@ use crate::models::ModelArch;
 use crate::pareto::FrontierAccumulator;
 use crate::perfdb::{LatencyOracle, LocalMemo, MemoOracle, TierSnapshot};
 use crate::perfmodel::{self, disagg, PerfEstimate};
+use crate::trace;
 use crate::util::pool;
 
 use super::space::{CandidateGrid, SearchSpace, StructuralPoint};
@@ -143,6 +144,16 @@ pub struct SearchReport {
     /// Candidates discarded by incremental SLA/Pareto pruning (0 when
     /// pruning is off).
     pub pruned: usize,
+    /// Of `pruned`: aggregated candidates dropped for missing the SLA.
+    pub pruned_sla: usize,
+    /// Of `pruned`: candidates dropped as strictly dominated (includes
+    /// the disaggregated composites the rate-match accumulator
+    /// rejected).
+    pub pruned_dominated: usize,
+    /// Structural engine configurations discarded by the KV-memory
+    /// feasibility filter before pricing (0 on the seed baseline path,
+    /// which filters inside the enumeration).
+    pub infeasible: usize,
     /// Wall-clock of the whole search, seconds.
     pub elapsed_s: f64,
     /// Median per-configuration evaluation time, milliseconds.
@@ -179,6 +190,8 @@ struct EnginePools {
     agg: Vec<u32>,
     prefill: Vec<u32>,
     decode: Vec<u32>,
+    /// Grid entries the KV-memory filter rejected (pruning-audit input).
+    infeasible: usize,
 }
 
 /// A unit of work in the unified queue.
@@ -309,6 +322,7 @@ impl<'a> TaskRunner<'a> {
         pre_structural: &[StructuralPoint],
         wl: &WorkloadSpec,
     ) -> EnginePools {
+        let sp = trace::span("grid_build", "search");
         let agg_mode = self.space.modes.contains(&ServingMode::Aggregated);
         let disagg_mode = self.space.modes.contains(&ServingMode::Disaggregated);
         let mem = self.cluster.gpu.mem_bytes();
@@ -324,12 +338,17 @@ impl<'a> TaskRunner<'a> {
         } else {
             Vec::new()
         };
+        let infeasible = (grid.len() - shared.len())
+            + if disagg_mode { pre_grid.len() - prefill.len() } else { 0 };
+        sp.add("engines", (grid.len() + pre_grid.len()) as f64);
+        sp.add("infeasible", infeasible as f64);
         EnginePools {
             agg: if agg_mode { shared.clone() } else { Vec::new() },
             decode: if disagg_mode { shared } else { Vec::new() },
             prefill,
             grid,
             pre_grid,
+            infeasible,
         }
     }
 
@@ -590,12 +609,23 @@ impl<'a> TaskRunner<'a> {
         pools: &EnginePools,
         jobs: &[Job],
     ) -> Vec<(JobOut, f64)> {
+        let sp = trace::span("price", "price");
+        sp.add("jobs", jobs.len() as f64);
+        // Capture the ambient recorder (if any) so spawned workers join
+        // it; `install_worker` is a no-op on the threads<=1 fast path,
+        // where `init` runs on this already-recording thread.
+        let rec = trace::current();
         let (outcomes, states): (Vec<(JobOut, f64)>, Vec<WorkerCtx<'_>>) =
             pool::scoped_map_states(
                 jobs,
                 self.threads,
                 PRICE_CHUNK,
-                |_wid| WorkerCtx { memo: memo.map(|m| m.local()) },
+                |wid| {
+                    if let Some(r) = &rec {
+                        trace::install_worker(r, wid);
+                    }
+                    WorkerCtx { memo: memo.map(|m| m.local()) }
+                },
                 |ctx, _idx, job| {
                     let o: &dyn LatencyOracle = match &ctx.memo {
                         Some(lm) => lm,
@@ -640,6 +670,7 @@ impl<'a> TaskRunner<'a> {
         t0: Instant,
         tiers_before: Option<TierSnapshot>,
     ) -> SearchReport {
+        let sp = trace::span("frontier_merge", "search");
         let total_gpus = self.cluster.total_gpus();
         let mut merged = FrontierAccumulator::new();
         if opts.prune {
@@ -658,15 +689,24 @@ impl<'a> TaskRunner<'a> {
         let mut p_prices: Vec<disagg::PoolPrice> = Vec::with_capacity(pools.prefill.len());
         let mut d_prices: Vec<disagg::PoolPrice> = Vec::with_capacity(pools.decode.len());
         let mut pruned = 0usize;
+        let mut pruned_sla = 0usize;
+        let mut pruned_dominated = 0usize;
         for (out, ms) in outcomes {
             per_config_ms.push(*ms);
             match out {
                 JobOut::Agg(ev) => {
-                    if opts.prune
-                        && (!ev.est.meets(&wl.sla)
-                            || merged.dominated(ev.est.speed, ev.est.thru_per_gpu))
+                    // Same short-circuit order as the fused condition
+                    // this replaces: SLA first, dominance only for
+                    // feasible candidates — the split is attribution
+                    // only, the survivor set is untouched.
+                    if opts.prune && !ev.est.meets(&wl.sla) {
+                        pruned += 1;
+                        pruned_sla += 1;
+                    } else if opts.prune
+                        && merged.dominated(ev.est.speed, ev.est.thru_per_gpu)
                     {
                         pruned += 1;
+                        pruned_dominated += 1;
                     } else {
                         evaluated.push(ev.clone());
                     }
@@ -698,7 +738,9 @@ impl<'a> TaskRunner<'a> {
                     self.space.max_y,
                     &mut acc,
                 );
-                pruned += acc.rejected() - rejected_before;
+                let rejected = acc.rejected() - rejected_before;
+                pruned += rejected;
+                pruned_dominated += rejected;
                 full
             } else {
                 disagg::rate_match(
@@ -731,11 +773,24 @@ impl<'a> TaskRunner<'a> {
             (Some(before), Some(after)) => Some(after.since(&before)),
             _ => None,
         };
+        sp.add("evaluated", evaluated.len() as f64);
+        sp.add("pruned_sla", pruned_sla as f64);
+        sp.add("pruned_dominated", pruned_dominated as f64);
+        sp.add("infeasible", pools.infeasible as f64);
+        if let Some(t) = &tier_counts {
+            sp.add("tier_measured", t.measured as f64);
+            sp.add("tier_calibrated", t.calibrated as f64);
+            sp.add("tier_analytic", t.analytic as f64);
+            sp.add("tier_sol", t.sol as f64);
+        }
         SearchReport {
             flag_summaries: flag_summaries(&evaluated),
             evaluated,
             configs_priced,
             pruned,
+            pruned_sla,
+            pruned_dominated,
+            infeasible: pools.infeasible,
             elapsed_s: t0.elapsed().as_secs_f64(),
             median_config_ms: median,
             tier_counts,
@@ -852,6 +907,9 @@ impl<'a> TaskRunner<'a> {
             evaluated,
             configs_priced,
             pruned: 0,
+            pruned_sla: 0,
+            pruned_dominated: 0,
+            infeasible: 0,
             elapsed_s: t0.elapsed().as_secs_f64(),
             median_config_ms: median,
             tier_counts,
@@ -1087,6 +1145,8 @@ mod tests {
         let pruned = runner.run_pruned(&sil);
         assert!(pruned.pruned > 0, "pruning should discard something");
         assert!(pruned.evaluated.len() < full.evaluated.len());
+        // The by-cause split is exhaustive over the pruned count.
+        assert_eq!(pruned.pruned, pruned.pruned_sla + pruned.pruned_dominated);
 
         let a_full = crate::pareto::analyze(&full.evaluated, &wl.sla);
         let a_pruned = crate::pareto::analyze(&pruned.evaluated, &wl.sla);
@@ -1112,6 +1172,9 @@ mod tests {
             assert_eq!(x.est, y.est);
         }
         assert_eq!(a.pruned, b.pruned);
+        assert_eq!(a.pruned_sla, b.pruned_sla);
+        assert_eq!(a.pruned_dominated, b.pruned_dominated);
+        assert_eq!(a.infeasible, b.infeasible);
     }
 
     fn small_replan_runner<'a>(

@@ -34,7 +34,7 @@ pub mod stats;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -81,6 +81,10 @@ pub struct ServerConfig {
     pub queue_limit: usize,
     /// Warm-cache capacity in contexts (0 = [`DEFAULT_CACHE_CAP`]).
     pub cache_cap: usize,
+    /// Capture a span trace for every Nth answered request and fold it
+    /// into the `aiconf_span_*` metrics (0 = tracing off, the default:
+    /// the hot path then never installs a recorder).
+    pub trace_sample: usize,
 }
 
 /// Shared server state (public so in-process embedding — tests, the
@@ -95,6 +99,12 @@ pub struct State {
     /// PJRT evaluator bound to the context named at startup (if any).
     pjrt: Option<(DbKey, PjrtService)>,
     seed: u64,
+    /// Span-capture sampling period (0 = off): every Nth dispatched
+    /// request runs under a [`crate::trace::Recorder`] whose category
+    /// totals land in [`ServiceStats::add_spans`].
+    trace_sample: usize,
+    /// Requests seen by the sampler (all ops except `stats`).
+    trace_seen: AtomicU64,
 }
 
 impl State {
@@ -121,7 +131,26 @@ impl State {
             artifact,
             pjrt: None,
             seed,
+            trace_sample: 0,
+            trace_seen: AtomicU64::new(0),
         }
+    }
+
+    /// Enable span-capture sampling: every `n`-th request records a
+    /// trace into the `aiconf_span_*` metrics (0 = off).
+    pub fn set_trace_sample(&mut self, n: usize) {
+        self.trace_sample = n;
+    }
+
+    /// The sampler's decision for one request: a fresh recorder every
+    /// Nth dispatch, `None` otherwise. With sampling off this is one
+    /// branch — no atomics touched.
+    fn sample_recorder(&self) -> Option<crate::trace::Recorder> {
+        if self.trace_sample == 0 {
+            return None;
+        }
+        let n = self.trace_seen.fetch_add(1, Ordering::Relaxed);
+        (n % self.trace_sample as u64 == 0).then(crate::trace::Recorder::new)
     }
 
     pub fn cache(&self) -> &WarmCache {
@@ -257,9 +286,11 @@ impl Pipeline {
             Ticket::Leader(lead) => {
                 let (tx, rx) = std::sync::mpsc::channel();
                 let state = self.state.clone();
-                let (op, body) = (env.op, env.body.clone());
+                // `explain` is part of the request key, so every waiter
+                // in a coalesced group asked for the same answer shape.
+                let (op, body, explain) = (env.op, env.body.clone(), env.explain);
                 let admitted = self.pool.try_submit(Box::new(move || {
-                    let res = dispatch(op, &body, &state)
+                    let res = dispatch(op, &body, &state, explain)
                         .map_err(|e| ServiceError::bad_request(format!("{e:#}")));
                     let _ = tx.send(res);
                 }));
@@ -332,6 +363,7 @@ impl SearchServer {
         };
         let cache_cap = if cfg.cache_cap == 0 { DEFAULT_CACHE_CAP } else { cfg.cache_cap };
         let mut state = State::with_caps(cfg.seed, artifact, cache_cap);
+        state.set_trace_sample(cfg.trace_sample);
         if let (Some(dir), Some((model, gpu, gpn, nodes, fw))) = (&cfg.artifacts, pjrt_ctx) {
             let key: DbKey =
                 (model.into(), gpu.into(), gpn, nodes, fw.name().into(), "legacy".into());
@@ -426,32 +458,42 @@ pub fn handle_request_line(line: &str, state: &State) -> anyhow::Result<Json> {
 /// envelope, dispatch, stamp the response with `v`/`id`.
 pub fn handle_request(req: &Json, state: &State) -> anyhow::Result<Json> {
     let env = protocol::parse_envelope(req).map_err(|e| anyhow::anyhow!("{}", e.message))?;
-    let payload = dispatch(env.op, &env.body, state)?;
+    let payload = dispatch(env.op, &env.body, state, env.explain)?;
     Ok(protocol::stamp(payload, &env))
 }
 
 /// Version-blind operation dispatch. Payloads carry no `v`/`id` — the
 /// caller stamps them (so a coalesced payload can be fanned out to
-/// waiters holding different ids).
-fn dispatch(op: OpKind, body: &Json, state: &State) -> anyhow::Result<Json> {
+/// waiters holding different ids). `explain` (part of the request key)
+/// attaches the "why this config won" report to the payload.
+fn dispatch(op: OpKind, body: &Json, state: &State, explain: bool) -> anyhow::Result<Json> {
     state.stats.bump(op);
-    match op {
-        OpKind::Search => handle_search_request(body, state),
-        OpKind::Sweep => handle_sweep_request(body, state),
-        OpKind::Plan => handle_plan_request(body, state),
-        OpKind::Validate => handle_validate_request(body, state),
-        OpKind::Replan => handle_replan_request(body, state),
-        OpKind::Stats => {
-            // Stats without a pipeline (direct embedding): no queue to
-            // report.
-            let cache = state.cache.gauges();
-            let mut o = Json::obj();
-            o.set("status", json::s("ok"))
-                .set("stats", state.stats.to_json(&cache, None))
-                .set("metrics_text", json::s(&state.stats.render_metrics(&cache, None)));
-            Ok(o)
-        }
+    if op == OpKind::Stats {
+        // Stats without a pipeline (direct embedding): no queue to
+        // report. Never traced — observability must not observe itself.
+        let cache = state.cache.gauges();
+        let mut o = Json::obj();
+        o.set("status", json::s("ok"))
+            .set("stats", state.stats.to_json(&cache, None))
+            .set("metrics_text", json::s(&state.stats.render_metrics(&cache, None)));
+        return Ok(o);
     }
+    let rec = state.sample_recorder();
+    if let Some(r) = &rec {
+        r.install();
+    }
+    let result = match op {
+        OpKind::Search => handle_search_request(body, state, explain),
+        OpKind::Sweep => handle_sweep_request(body, state, explain),
+        OpKind::Plan => handle_plan_request(body, state, explain),
+        OpKind::Validate => handle_validate_request(body, state, explain),
+        OpKind::Replan => handle_replan_request(body, state, explain),
+        OpKind::Stats => unreachable!("answered above"),
+    };
+    if let Some(r) = rec {
+        state.stats.add_spans(&r.finish());
+    }
+    result
 }
 
 /// Reject placement-aware fabrics on a PJRT-bound server: the AOT
@@ -508,7 +550,16 @@ fn run_reports(
     }
 }
 
-fn handle_search_request(req: &Json, state: &State) -> anyhow::Result<Json> {
+/// The oracle the explain decomposition prices against: the context's
+/// calibrated composition when present, else the analytic database.
+fn explain_oracle(entry: &WarmEntry) -> &dyn LatencyOracle {
+    match &entry.cal {
+        Some(c) => &**c,
+        None => entry.db.as_ref(),
+    }
+}
+
+fn handle_search_request(req: &Json, state: &State, explain: bool) -> anyhow::Result<Json> {
     let t0 = Instant::now();
     let wl = WorkloadSpec::from_json(req.req("workload")?)?;
     let pc = protocol::parse_context(req, &wl.model)?;
@@ -536,6 +587,18 @@ fn handle_search_request(req: &Json, state: &State) -> anyhow::Result<Json> {
     }
     if let Some(best) = analysis.best() {
         resp.set("launch", launch_json(&best.cand, &wl));
+    }
+    if explain {
+        resp.set(
+            "explain",
+            crate::trace::explain::search_explain(
+                explain_oracle(&entry),
+                &pc.model,
+                &pc.cluster,
+                &wl,
+                &report,
+            ),
+        );
     }
     Ok(resp)
 }
@@ -596,7 +659,7 @@ fn top_json(analysis: &pareto::Analysis, top_k: usize) -> Json {
 /// Batch sweep: price every workload scenario in one TaskRunner pass
 /// (shared engine enumeration + memoized oracle), answering one result
 /// object per scenario.
-fn handle_sweep_request(req: &Json, state: &State) -> anyhow::Result<Json> {
+fn handle_sweep_request(req: &Json, state: &State, explain: bool) -> anyhow::Result<Json> {
     let t0 = Instant::now();
     let wls = protocol::parse_sweep_workloads(req)?;
     let pc = protocol::parse_context(req, &wls[0].model)?;
@@ -625,6 +688,18 @@ fn handle_sweep_request(req: &Json, state: &State) -> anyhow::Result<Json> {
         if let Some(best) = analysis.best() {
             o.set("launch", launch_json(&best.cand, wl));
         }
+        if explain {
+            o.set(
+                "explain",
+                crate::trace::explain::search_explain(
+                    explain_oracle(&entry),
+                    &pc.model,
+                    &pc.cluster,
+                    wl,
+                    report,
+                ),
+            );
+        }
         results.push(o);
     }
     let mut resp = Json::obj();
@@ -645,7 +720,7 @@ fn handle_sweep_request(req: &Json, state: &State) -> anyhow::Result<Json> {
 /// same warm cache the search path uses, so repeated plans skip
 /// re-profiling (the dominant cost); operator-latency memos are
 /// per-request.
-fn handle_plan_request(req: &Json, state: &State) -> anyhow::Result<Json> {
+fn handle_plan_request(req: &Json, state: &State, explain: bool) -> anyhow::Result<Json> {
     let t0 = Instant::now();
     let parts = parse_plan_parts(req, state)?;
     let fleet: Vec<(ClusterSpec, &dyn LatencyOracle)> =
@@ -660,7 +735,21 @@ fn handle_plan_request(req: &Json, state: &State) -> anyhow::Result<Json> {
             "schedule_yaml",
             json::s(&generator::dynamo::plan_schedule_yaml(&plan, &parts.wl.model, &parts.wl)),
         );
+    if explain {
+        resp.set("explain", plan_explain_json(&parts, &plan));
+    }
     Ok(resp)
+}
+
+/// The `"explain"` payload of a plan-shaped response ("why this plan
+/// won"), against the request's own fleet-leg oracles.
+fn plan_explain_json(parts: &PlanParts, plan: &crate::planner::DeploymentPlan) -> Json {
+    let legs: Vec<(String, ClusterSpec, &dyn LatencyOracle)> = parts
+        .legs
+        .iter()
+        .map(|(c, o)| (c.gpu.name.to_string(), *c, o.as_ref()))
+        .collect();
+    crate::trace::explain::plan_explain(&parts.model, &parts.wl, plan, &legs)
 }
 
 /// The parsed pieces of a plan/validate request body: workload, model,
@@ -754,7 +843,7 @@ fn parse_plan_parts(req: &Json, state: &State) -> anyhow::Result<PlanParts> {
 /// attributed to queueing / scale-lag / contention / failures). The
 /// `"validate"` object is optional; every knob defaults to the benign
 /// value (no injection, no jitter).
-fn handle_validate_request(req: &Json, state: &State) -> anyhow::Result<Json> {
+fn handle_validate_request(req: &Json, state: &State, explain: bool) -> anyhow::Result<Json> {
     let t0 = Instant::now();
     let parts = parse_plan_parts(req, state)?;
     let fleet: Vec<(ClusterSpec, &dyn LatencyOracle)> =
@@ -818,6 +907,9 @@ fn handle_validate_request(req: &Json, state: &State) -> anyhow::Result<Json> {
         .set("trace_requests", json::num(trace.len() as f64))
         .set("plan", plan.to_json(&parts.wl))
         .set("report", report.to_json());
+    if explain {
+        resp.set("explain", plan_explain_json(&parts, &plan));
+    }
     Ok(resp)
 }
 
@@ -834,7 +926,7 @@ fn handle_validate_request(req: &Json, state: &State) -> anyhow::Result<Json> {
 /// result is bit-identical to a from-scratch `plan` of the patched
 /// request (CI-pinned). `recalibrate` deltas are CLI-only: they need a
 /// new calibration artifact, which a running server does not take.
-fn handle_replan_request(req: &Json, state: &State) -> anyhow::Result<Json> {
+fn handle_replan_request(req: &Json, state: &State, explain: bool) -> anyhow::Result<Json> {
     let t0 = Instant::now();
     let parts = parse_plan_parts(req, state)?;
     let delta = crate::search::SearchDelta::from_json(req.req("delta")?)?;
@@ -874,6 +966,12 @@ fn handle_replan_request(req: &Json, state: &State) -> anyhow::Result<Json> {
             "schedule_yaml",
             json::s(&generator::dynamo::plan_schedule_yaml(&rep.plan, &parts.wl.model, &parts.wl)),
         );
+    if explain {
+        // Explained against the original legs only: an added leg's
+        // oracle lives in this request frame, and the peak-window
+        // breakdown falls back gracefully when its leg is absent.
+        resp.set("explain", plan_explain_json(&parts, &rep.plan));
+    }
     Ok(resp)
 }
 
@@ -1382,5 +1480,56 @@ mod tests {
         // No pipeline → no pool gauges.
         assert!(stats.get("pool").is_none());
         assert!(resp.req_str("metrics_text").unwrap().contains("aiconf_requests_total"));
+    }
+
+    #[test]
+    fn explain_flag_attaches_the_report_and_stays_off_by_default() {
+        let st = state();
+        let wl = WorkloadSpec::new("llama3.1-8b", 1024, 128, 2000.0, 10.0);
+        let plain =
+            handle_request(&make_request_v2(&wl, "h100", 8, 1, Framework::TrtLlm, 1), &st)
+                .unwrap();
+        assert!(plain.get("explain").is_none(), "explain is strictly opt-in");
+
+        let mut req = make_request_v2(&wl, "h100", 8, 1, Framework::TrtLlm, 2);
+        req.set("explain", Json::Bool(true));
+        let resp = handle_request(&req, &st).unwrap();
+        let e = resp.req("explain").unwrap();
+        assert_eq!(e.req_str("kind").unwrap(), "search-explain");
+        let phases = e.req("winner").unwrap().req("phases").unwrap();
+        assert!(phases.req("prefill").unwrap().get("gemm").is_some());
+        assert!(e.req("pruning").unwrap().req_f64("configs_priced").unwrap() > 0.0);
+
+        let mut preq = plan_request(&["h100"], 2.0);
+        preq.set("v", json::num(2.0))
+            .set("op", json::s("plan"))
+            .set("explain", Json::Bool(true));
+        let presp = handle_request(&preq, &st).unwrap();
+        let pe = presp.req("explain").unwrap();
+        assert_eq!(pe.req_str("kind").unwrap(), "plan-explain");
+        assert!(pe.req("costs").unwrap().req_f64("total_usd").unwrap() > 0.0);
+        // The explain report rides next to the plan, never inside it
+        // (the replan bit-equality pin compares plan JSON strings).
+        assert!(presp.req("plan").unwrap().get("explain").is_none());
+    }
+
+    #[test]
+    fn trace_sampling_feeds_the_span_metrics() {
+        let mut st = State::new(1);
+        st.set_trace_sample(1);
+        let wl = WorkloadSpec::new("llama3.1-8b", 512, 64, 2000.0, 5.0);
+        handle_request(&make_request(&wl, "h100", 8, 1, Framework::TrtLlm, 1), &st).unwrap();
+        let resp =
+            handle_request(&json::parse(r#"{"v": 2, "op": "stats"}"#).unwrap(), &st).unwrap();
+        let spans = resp.req("stats").unwrap().req("spans").unwrap();
+        assert!(
+            spans.req("search").unwrap().req_f64("count").unwrap() >= 1.0,
+            "a sampled search must record search-category spans"
+        );
+        assert!(spans.req("price").unwrap().req_f64("total_us").unwrap() >= 0.0);
+        assert!(resp
+            .req_str("metrics_text")
+            .unwrap()
+            .contains("aiconf_span_count{cat=\"search\"}"));
     }
 }

@@ -122,6 +122,14 @@ pub struct Envelope {
     pub id: Option<Json>,
     pub op: OpKind,
     pub body: Json,
+    /// Caller-supplied correlation token, echoed verbatim in the
+    /// response and the request log line. Does not shape the answer, so
+    /// it is stripped from coalescing keys.
+    pub trace_id: Option<String>,
+    /// `"explain": true` — attach the explainability report to
+    /// search/sweep/plan payloads. Shapes the answer, so it is *part*
+    /// of the coalescing key.
+    pub explain: bool,
 }
 
 /// Infer the operation of a bare (v1) request from its fields.
@@ -143,6 +151,20 @@ fn infer_legacy_op(req: &Json) -> Result<OpKind, ServiceError> {
 /// Parse a request into an [`Envelope`], classifying it as v1 or v2.
 pub fn parse_envelope(req: &Json) -> Result<Envelope, ServiceError> {
     let id = req.get("id").cloned();
+    let trace_id = match req.get("trace_id") {
+        None => None,
+        Some(t) => Some(
+            t.as_str()
+                .ok_or_else(|| ServiceError::bad_request("'trace_id' must be a string"))?
+                .to_string(),
+        ),
+    };
+    let explain = match req.get("explain") {
+        None => false,
+        Some(e) => e
+            .as_bool()
+            .ok_or_else(|| ServiceError::bad_request("'explain' must be a boolean"))?,
+    };
     let version = match req.get("v") {
         None => 1,
         Some(v) => {
@@ -153,7 +175,14 @@ pub fn parse_envelope(req: &Json) -> Result<Envelope, ServiceError> {
         }
     };
     match version {
-        1 => Ok(Envelope { v: 1, id, op: infer_legacy_op(req)?, body: req.clone() }),
+        1 => Ok(Envelope {
+            v: 1,
+            id,
+            op: infer_legacy_op(req)?,
+            body: req.clone(),
+            trace_id,
+            explain,
+        }),
         2 => {
             let op_name = req.get("op").and_then(|o| o.as_str()).ok_or_else(|| {
                 ServiceError::bad_request("a v2 envelope requires an 'op' string")
@@ -164,7 +193,7 @@ pub fn parse_envelope(req: &Json) -> Result<Envelope, ServiceError> {
                     "unknown op '{op_name}' (expected search|sweep|plan|validate|replan|stats)"
                 ),
             })?;
-            Ok(Envelope { v: 2, id, op, body: req.clone() })
+            Ok(Envelope { v: 2, id, op, body: req.clone(), trace_id, explain })
         }
         other => Err(ServiceError {
             code: ErrCode::UnsupportedVersion,
@@ -180,6 +209,9 @@ pub fn stamp(mut payload: Json, env: &Envelope) -> Json {
     payload.set("v", json::num(env.v as f64));
     if let Some(id) = &env.id {
         payload.set("id", id.clone());
+    }
+    if let Some(tid) = &env.trace_id {
+        payload.set("trace_id", json::s(tid));
     }
     payload
 }
@@ -221,13 +253,15 @@ pub fn error_response(env: Option<&Envelope>, err: &ServiceError) -> Json {
 /// string errors for garbage input.
 pub fn error_for_request(req: &Json, err: &ServiceError) -> Json {
     let asked_v2 = matches!(req.get("v").and_then(|v| v.as_f64()), Some(x) if x >= 2.0);
-    if asked_v2 {
-        let env = Envelope { v: 2, id: req.get("id").cloned(), op: OpKind::Stats, body: Json::Null };
-        error_response(Some(&env), err)
-    } else {
-        let env = Envelope { v: 1, id: req.get("id").cloned(), op: OpKind::Stats, body: Json::Null };
-        error_response(Some(&env), err)
-    }
+    let env = Envelope {
+        v: if asked_v2 { 2 } else { 1 },
+        id: req.get("id").cloned(),
+        op: OpKind::Stats,
+        body: Json::Null,
+        trace_id: req.get("trace_id").and_then(|t| t.as_str()).map(str::to_string),
+        explain: false,
+    };
+    error_response(Some(&env), err)
 }
 
 /// Normalized identity of a request for the coalescer: two requests
@@ -255,6 +289,20 @@ impl RequestKey {
     }
 }
 
+/// The request body minus the envelope-only fields (`v`, `id`, `op`,
+/// `trace_id`) — everything left shapes the answer and belongs in a
+/// canonical-body coalescing key.
+fn canonical_body(body: &Json) -> Json {
+    let mut b = body.clone();
+    if let Json::Obj(m) = &mut b {
+        m.remove("v");
+        m.remove("id");
+        m.remove("op");
+        m.remove("trace_id");
+    }
+    b
+}
+
 /// Compute the coalescing key for an envelope. Errors here are the
 /// same validation errors the handler would raise, surfaced before the
 /// request is queued.
@@ -264,50 +312,45 @@ pub fn request_key(env: &Envelope) -> anyhow::Result<RequestKey> {
         OpKind::Search => {
             let wl = WorkloadSpec::from_json(body.req("workload")?)?;
             let pc = parse_context(body, &wl.model)?;
-            format!("search|{}|{}", pc.norm_json().to_string(), wl.to_json().to_string())
+            format!(
+                "search|{}|{}|explain:{}",
+                pc.norm_json().to_string(),
+                wl.to_json().to_string(),
+                env.explain
+            )
         }
         OpKind::Sweep => {
             let wls = parse_sweep_workloads(body)?;
             let pc = parse_context(body, &wls[0].model)?;
             let scenarios: Vec<String> =
                 wls.iter().map(|w| w.to_json().to_string()).collect();
-            format!("sweep|{}|{}", pc.norm_json().to_string(), scenarios.join(";"))
+            format!(
+                "sweep|{}|{}|explain:{}",
+                pc.norm_json().to_string(),
+                scenarios.join(";"),
+                env.explain
+            )
         }
         OpKind::Plan => {
             // Plans have no single normalized context (per-leg fabrics);
             // key on the canonical body minus the envelope fields. The
             // BTreeMap behind Json::Obj serializes keys sorted, so field
             // order normalizes away even without full parsing.
-            let mut b = body.clone();
-            if let Json::Obj(m) = &mut b {
-                m.remove("v");
-                m.remove("id");
-                m.remove("op");
-            }
-            format!("plan|{}", b.to_string())
+            // `explain` stays in the body — it shapes the payload;
+            // `trace_id` is pure correlation and must not break
+            // coalescing.
+            format!("plan|{}", canonical_body(body).to_string())
         }
         OpKind::Validate => {
             // Same canonical-body keying as Plan: a validate request is
             // a plan request plus the replay knobs, all of which shape
             // the report and so belong in the key.
-            let mut b = body.clone();
-            if let Json::Obj(m) = &mut b {
-                m.remove("v");
-                m.remove("id");
-                m.remove("op");
-            }
-            format!("validate|{}", b.to_string())
+            format!("validate|{}", canonical_body(body).to_string())
         }
         OpKind::Replan => {
             // A replan request is a plan request plus its delta; both
             // shape the answer, so both belong in the key.
-            let mut b = body.clone();
-            if let Json::Obj(m) = &mut b {
-                m.remove("v");
-                m.remove("id");
-                m.remove("op");
-            }
-            format!("replan|{}", b.to_string())
+            format!("replan|{}", canonical_body(body).to_string())
         }
         OpKind::Stats => "stats".to_string(),
     };
@@ -655,6 +698,45 @@ mod tests {
         assert_eq!(space.kv_frac, vec![0.8]);
         assert_eq!(space.max_num_tokens, vec![4096]);
         assert!(space.flag_sweep);
+    }
+
+    #[test]
+    fn trace_id_echoes_but_never_splits_coalescing() {
+        let a = json::parse(
+            r#"{"v": 2, "op": "plan", "plan": {"windows": 4}, "trace_id": "req-7"}"#,
+        )
+        .unwrap();
+        let b = json::parse(r#"{"v": 2, "op": "plan", "plan": {"windows": 4}}"#).unwrap();
+        let ea = parse_envelope(&a).unwrap();
+        let eb = parse_envelope(&b).unwrap();
+        assert_eq!(ea.trace_id.as_deref(), Some("req-7"));
+        assert_eq!(eb.trace_id, None);
+        // Same key: trace_id is correlation, not computation.
+        assert_eq!(request_key(&ea).unwrap(), request_key(&eb).unwrap());
+        // Echoed by the stamping point (and absent when not supplied).
+        let stamped = stamp(Json::obj(), &ea);
+        assert_eq!(stamped.req_str("trace_id").unwrap(), "req-7");
+        assert!(stamp(Json::obj(), &eb).get("trace_id").is_none());
+        // A non-string trace_id is a loud error.
+        let bad = json::parse(r#"{"v": 2, "op": "stats", "trace_id": 9}"#).unwrap();
+        assert_eq!(parse_envelope(&bad).unwrap_err().code, ErrCode::BadRequest);
+    }
+
+    #[test]
+    fn explain_flag_is_part_of_the_key() {
+        let wl = WorkloadSpec::new("llama3.1-8b", 512, 64, 2000.0, 5.0);
+        let mut plain = Json::obj();
+        plain.set("workload", wl.to_json());
+        let mut explained = Json::obj();
+        explained.set("workload", wl.to_json()).set("explain", Json::Bool(true));
+        let ke = request_key(&parse_envelope(&explained).unwrap()).unwrap();
+        let kp = request_key(&parse_envelope(&plain).unwrap()).unwrap();
+        assert_ne!(ke, kp, "explain shapes the payload, so it must split the key");
+        assert!(parse_envelope(&explained).unwrap().explain);
+        assert!(!parse_envelope(&plain).unwrap().explain);
+        // Wrong type is a loud error.
+        let bad = json::parse(r#"{"workload": {}, "explain": "yes"}"#).unwrap();
+        assert_eq!(parse_envelope(&bad).unwrap_err().code, ErrCode::BadRequest);
     }
 
     #[test]

@@ -11,6 +11,7 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::perfdb::TierSnapshot;
+use crate::trace::{self, Trace};
 use crate::util::json::{self, Json};
 
 use super::protocol::OpKind;
@@ -126,6 +127,12 @@ pub struct ServiceStats {
     /// Oracle provenance totals across all answered searches/sweeps
     /// (measured, calibrated, analytic, SoL).
     tiers: [AtomicU64; 4],
+    /// Trace-derived span time per category (µs), accumulated from
+    /// sampled request traces (`--trace-sample`). Indexed by
+    /// [`trace::cat_index`].
+    span_us: [AtomicU64; trace::CATS.len()],
+    /// Trace-derived span counts per category, same indexing.
+    span_count: [AtomicU64; trace::CATS.len()],
 }
 
 impl ServiceStats {
@@ -166,6 +173,17 @@ impl ServiceStats {
     pub fn add_tiers(&self, t: &TierSnapshot) {
         for (slot, v) in self.tiers.iter().zip([t.measured, t.calibrated, t.analytic, t.sol]) {
             slot.fetch_add(v, Ordering::Relaxed);
+        }
+    }
+
+    /// Fold a finished request trace into the per-category span
+    /// accumulators (the `aiconf_span_*` series). Span time is summed
+    /// at µs granularity; sub-µs spans still count.
+    pub fn add_spans(&self, t: &Trace) {
+        for (cat, total_us, count) in t.cat_totals() {
+            let i = trace::cat_index(cat);
+            self.span_us[i].fetch_add(total_us as u64, Ordering::Relaxed);
+            self.span_count[i].fetch_add(count, Ordering::Relaxed);
         }
     }
 
@@ -226,6 +244,17 @@ impl ServiceStats {
             tiers.set(name, json::num(ld(slot)));
         }
 
+        let mut spans = Json::obj();
+        for (i, cat) in trace::CATS.iter().enumerate() {
+            let n = ld(&self.span_count[i]);
+            if n == 0.0 {
+                continue;
+            }
+            let mut so = Json::obj();
+            so.set("total_us", json::num(ld(&self.span_us[i]))).set("count", json::num(n));
+            spans.set(cat, so);
+        }
+
         let mut o = Json::obj();
         o.set("requests", requests)
             .set("errors", json::num(ld(&self.errors)))
@@ -233,7 +262,8 @@ impl ServiceStats {
             .set("shed", json::num(ld(&self.shed)))
             .set("coalesce", coalesce)
             .set("cache", cache_o)
-            .set("tiers", tiers);
+            .set("tiers", tiers)
+            .set("spans", spans);
         if let Some(p) = pool {
             let mut po = Json::obj();
             po.set("queue_depth", json::num(p.queue_depth as f64))
@@ -245,21 +275,34 @@ impl ServiceStats {
     }
 
     /// Prometheus-style exposition text (one gauge/counter per line),
-    /// the `metrics_text` field of a `stats` response.
+    /// the `metrics_text` field of a `stats` response. Each metric
+    /// family is announced by exactly one `# HELP` / `# TYPE` pair, and
+    /// all samples of a family are contiguous under it.
     pub fn render_metrics(&self, cache: &CacheGauges, pool: Option<&PoolGauges>) -> String {
         let ld = |a: &AtomicU64| a.load(Ordering::Relaxed);
         let mut out = String::new();
-        for (name, s) in [
+        let ops = [
             ("search", &self.search),
             ("sweep", &self.sweep),
             ("plan", &self.plan),
             ("validate", &self.validate),
             ("replan", &self.replan),
-        ] {
+        ];
+        family(&mut out, "aiconf_requests_total", "counter", "Answered requests by operation.");
+        for (name, s) in ops {
             out.push_str(&format!(
                 "aiconf_requests_total{{op=\"{name}\"}} {}\n",
                 ld(&s.count)
             ));
+        }
+        out.push_str(&format!("aiconf_requests_total{{op=\"stats\"}} {}\n", ld(&self.stats_reqs)));
+        family(
+            &mut out,
+            "aiconf_request_latency_ms",
+            "summary",
+            "End-to-end request latency quantiles, milliseconds.",
+        );
+        for (name, s) in ops {
             for (q, p) in [("0.5", 50.0), ("0.99", 99.0)] {
                 out.push_str(&format!(
                     "aiconf_request_latency_ms{{op=\"{name}\",quantile=\"{q}\"}} {:.3}\n",
@@ -267,10 +310,13 @@ impl ServiceStats {
                 ));
             }
         }
-        out.push_str(&format!("aiconf_requests_total{{op=\"stats\"}} {}\n", ld(&self.stats_reqs)));
+        family(&mut out, "aiconf_errors_total", "counter", "Error responses of any kind.");
         out.push_str(&format!("aiconf_errors_total {}\n", ld(&self.errors)));
+        family(&mut out, "aiconf_malformed_total", "counter", "Lines that never became a request.");
         out.push_str(&format!("aiconf_malformed_total {}\n", ld(&self.malformed)));
+        family(&mut out, "aiconf_shed_total", "counter", "Requests refused by admission control.");
         out.push_str(&format!("aiconf_shed_total {}\n", ld(&self.shed)));
+        family(&mut out, "aiconf_coalesce_total", "counter", "Coalesced request groups by role.");
         out.push_str(&format!(
             "aiconf_coalesce_total{{role=\"leader\"}} {}\n",
             ld(&self.coalesce_leaders)
@@ -279,11 +325,22 @@ impl ServiceStats {
             "aiconf_coalesce_total{{role=\"follower\"}} {}\n",
             ld(&self.coalesce_followers)
         ));
+        family(&mut out, "aiconf_cache_entries", "gauge", "Warm-cache entries resident.");
         out.push_str(&format!("aiconf_cache_entries {}\n", cache.entries));
+        family(&mut out, "aiconf_cache_capacity", "gauge", "Warm-cache capacity.");
         out.push_str(&format!("aiconf_cache_capacity {}\n", cache.cap));
+        family(&mut out, "aiconf_cache_hits_total", "counter", "Warm-cache hits.");
         out.push_str(&format!("aiconf_cache_hits_total {}\n", cache.hits));
+        family(&mut out, "aiconf_cache_misses_total", "counter", "Warm-cache misses.");
         out.push_str(&format!("aiconf_cache_misses_total {}\n", cache.misses));
+        family(&mut out, "aiconf_cache_evictions_total", "counter", "Warm-cache evictions.");
         out.push_str(&format!("aiconf_cache_evictions_total {}\n", cache.evictions));
+        family(
+            &mut out,
+            "aiconf_oracle_queries_total",
+            "counter",
+            "Oracle queries by provenance tier.",
+        );
         for (name, slot) in
             ["measured", "calibrated", "analytic", "sol"].iter().zip(&self.tiers)
         {
@@ -292,13 +349,45 @@ impl ServiceStats {
                 ld(slot)
             ));
         }
+        family(
+            &mut out,
+            "aiconf_span_total_us",
+            "counter",
+            "Trace span time by category from sampled requests, microseconds.",
+        );
+        for (i, cat) in trace::CATS.iter().enumerate() {
+            out.push_str(&format!(
+                "aiconf_span_total_us{{cat=\"{cat}\"}} {}\n",
+                ld(&self.span_us[i])
+            ));
+        }
+        family(
+            &mut out,
+            "aiconf_span_count",
+            "counter",
+            "Trace spans recorded by category from sampled requests.",
+        );
+        for (i, cat) in trace::CATS.iter().enumerate() {
+            out.push_str(&format!(
+                "aiconf_span_count{{cat=\"{cat}\"}} {}\n",
+                ld(&self.span_count[i])
+            ));
+        }
         if let Some(p) = pool {
+            family(&mut out, "aiconf_queue_depth", "gauge", "Requests waiting in the pool queue.");
             out.push_str(&format!("aiconf_queue_depth {}\n", p.queue_depth));
+            family(&mut out, "aiconf_queue_limit", "gauge", "Pool queue admission limit.");
             out.push_str(&format!("aiconf_queue_limit {}\n", p.queue_limit));
+            family(&mut out, "aiconf_pool_workers", "gauge", "Worker threads in the pool.");
             out.push_str(&format!("aiconf_pool_workers {}\n", p.workers));
         }
         out
     }
+}
+
+/// Emit the one `# HELP` / `# TYPE` pair announcing a metric family.
+fn family(out: &mut String, name: &str, kind: &str, help: &str) {
+    out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {kind}\n"));
 }
 
 /// Point-in-time worker-pool gauges (owned by the pipeline).
@@ -383,5 +472,77 @@ mod tests {
         assert!(text.contains("aiconf_queue_depth 4"));
         assert!(text.contains("aiconf_coalesce_total{role=\"follower\"} 3"));
         assert!(text.contains("aiconf_oracle_queries_total{tier=\"measured\"} 5"));
+    }
+
+    #[test]
+    fn span_accumulators_surface_in_both_outputs() {
+        let rec = crate::trace::Recorder::new();
+        rec.install();
+        {
+            let _outer = crate::trace::span("search", "search");
+            let _inner = crate::trace::span("price", "price");
+        }
+        let trace = rec.finish();
+        assert!(trace.len() >= 2);
+
+        let st = ServiceStats::new();
+        st.add_spans(&trace);
+        let cache = CacheGauges { entries: 0, cap: 8, hits: 0, misses: 0, evictions: 0 };
+        let j = st.to_json(&cache, None);
+        let spans = j.req("spans").unwrap();
+        assert_eq!(spans.req("search").unwrap().req_f64("count").unwrap(), 1.0);
+        assert_eq!(spans.req("price").unwrap().req_f64("count").unwrap(), 1.0);
+
+        let text = st.render_metrics(&cache, None);
+        assert!(text.contains("aiconf_span_count{cat=\"search\"} 1"));
+        assert!(text.contains("aiconf_span_count{cat=\"price\"} 1"));
+        assert!(text.contains("aiconf_span_total_us{cat=\"search\"}"));
+    }
+
+    /// Prometheus exposition hygiene: one HELP/TYPE pair per family,
+    /// every series named `aiconf_[a-z0-9_]*`, every value a finite
+    /// number.
+    #[test]
+    fn metrics_text_is_prometheus_clean() {
+        let st = ServiceStats::new();
+        st.bump(OpKind::Search);
+        st.record_latency(OpKind::Search, 12.0);
+        st.add_tiers(&TierSnapshot { measured: 1, calibrated: 2, analytic: 3, sol: 4 });
+        let cache = CacheGauges { entries: 1, cap: 8, hits: 2, misses: 1, evictions: 0 };
+        let pool = PoolGauges { queue_depth: 0, queue_limit: 64, workers: 2 };
+        let text = st.render_metrics(&cache, Some(&pool));
+
+        let mut seen_meta: Vec<String> = Vec::new();
+        for line in text.lines() {
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) =
+                line.strip_prefix("# HELP ").or_else(|| line.strip_prefix("# TYPE "))
+            {
+                let key = format!("{} {}", &line[2..6], rest.split(' ').next().unwrap());
+                assert!(!seen_meta.contains(&key), "duplicate exposition line: {line}");
+                seen_meta.push(key);
+                continue;
+            }
+            assert!(!line.starts_with('#'), "unexpected comment: {line}");
+            // Series name: up to `{` or the value separator space.
+            let name_end = line.find('{').unwrap_or_else(|| line.find(' ').unwrap());
+            let name = &line[..name_end];
+            assert!(name.starts_with("aiconf_"), "bad metric name: {name}");
+            assert!(
+                name.chars().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_'),
+                "bad character in metric name: {name}"
+            );
+            // Every sample line also needs a HELP and a TYPE above it.
+            assert!(seen_meta.contains(&format!("HELP {name}")), "no HELP for {name}");
+            assert!(seen_meta.contains(&format!("TYPE {name}")), "no TYPE for {name}");
+            let value = line.rsplit(' ').next().unwrap();
+            let v: f64 = value.parse().unwrap_or(f64::NAN);
+            assert!(v.is_finite(), "non-finite value in: {line}");
+        }
+        // Both span families made it out even with zero samples.
+        assert!(seen_meta.contains(&"TYPE aiconf_span_total_us".to_string()));
+        assert!(seen_meta.contains(&"TYPE aiconf_span_count".to_string()));
     }
 }

@@ -1,0 +1,470 @@
+//! "Why this config won" reports (DESIGN.md §12, "Explainability").
+//!
+//! Builds a machine-readable explain report for a finished search or
+//! capacity plan: the winner's latency decomposed by primitive class
+//! (GEMM / attention / comm / memory / host) per phase, a pruning
+//! audit by cause (SLA / dominance / memory infeasibility), the
+//! nearest runner-up and its losing margin, resolved-flag provenance
+//! and oracle tier provenance. The same report renders to JSON for
+//! `--explain-out` / the v2 service (`"explain": true`) and to a
+//! human-readable block for the CLI.
+
+use crate::config::{Candidate, EngineConfig, WorkloadSpec};
+use crate::hardware::ClusterSpec;
+use crate::models::ModelArch;
+use crate::ops::{self, StepShape};
+use crate::pareto;
+use crate::perfdb::LatencyOracle;
+use crate::perfmodel::moe;
+use crate::planner::DeploymentPlan;
+use crate::search::SearchReport;
+use crate::util::json::{self, Json};
+
+/// Primitive-class buckets the decomposition reports, in print order.
+pub const CLASS_GROUPS: [&str; 5] = ["gemm", "attention", "comm", "memory", "host"];
+
+/// Fold an [`ops::Op`] class into its report bucket.
+fn group_of(class: &str) -> &'static str {
+    match class {
+        "gemm" | "moe" => "gemm",
+        "attn_prefill" | "attn_decode" => "attention",
+        "allreduce" | "allgather" | "alltoall" | "p2p" => "comm",
+        _ => "memory",
+    }
+}
+
+/// Per-primitive-class latency of one engine step (µs): decompose the
+/// step, price every op through the oracle, bucket by class, and add
+/// the framework host overhead as its own bucket.
+fn phase_breakdown(
+    oracle: &dyn LatencyOracle,
+    model: &ModelArch,
+    cluster: &ClusterSpec,
+    eng: &EngineConfig,
+    shape: &StepShape,
+) -> Json {
+    let gamma = moe::model_imbalance(model, eng.parallel.ep, 0x1517);
+    let ops = ops::decompose(model, cluster, eng, shape, gamma);
+    let lat = oracle.latency_batch(&ops);
+    let mut sums = [0.0f64; CLASS_GROUPS.len()];
+    for (o, l) in ops.iter().zip(&lat) {
+        let g = group_of(o.class());
+        let i = CLASS_GROUPS.iter().position(|c| *c == g).unwrap_or(0);
+        sums[i] += l * o.count() as f64;
+    }
+    let host = eng
+        .framework
+        .profile()
+        .iter_host_overhead_us(eng.flags.cuda_graph, shape.is_decode_only());
+    sums[CLASS_GROUPS.len() - 1] += host;
+    let total: f64 = sums.iter().sum();
+    let mut o = Json::obj();
+    for (i, g) in CLASS_GROUPS.iter().enumerate() {
+        let mut e = Json::obj();
+        e.set("us", json::num(sums[i]))
+            .set("frac", json::num(if total > 0.0 { sums[i] / total } else { 0.0 }));
+        o.set(g, e);
+    }
+    o.set("total_us", json::num(total));
+    o
+}
+
+/// Prefill + decode breakdowns for a candidate's engine(s).
+fn candidate_phases(
+    oracle: &dyn LatencyOracle,
+    model: &ModelArch,
+    cluster: &ClusterSpec,
+    wl: &WorkloadSpec,
+    cand: &Candidate,
+) -> Json {
+    let isl = wl.isl.max(1) as u64;
+    let gen_kv = isl + wl.osl as u64 / 2;
+    let mut phases = Json::obj();
+    match cand {
+        Candidate::Aggregated { engine, .. } => {
+            phases.set(
+                "prefill",
+                phase_breakdown(oracle, model, cluster, engine, &StepShape::prefill(1, isl, isl)),
+            );
+            phases.set(
+                "decode",
+                phase_breakdown(
+                    oracle,
+                    model,
+                    cluster,
+                    engine,
+                    &StepShape::decode(engine.batch.max(1) as u64, gen_kv),
+                ),
+            );
+        }
+        Candidate::Disaggregated { prefill, decode, .. } => {
+            phases.set(
+                "prefill",
+                phase_breakdown(oracle, model, cluster, prefill, &StepShape::prefill(1, isl, isl)),
+            );
+            phases.set(
+                "decode",
+                phase_breakdown(
+                    oracle,
+                    model,
+                    cluster,
+                    decode,
+                    &StepShape::decode(decode.batch.max(1) as u64, gen_kv),
+                ),
+            );
+        }
+    }
+    phases
+}
+
+fn est_fields(o: &mut Json, est: &crate::perfmodel::PerfEstimate) {
+    o.set("ttft_ms", json::num(est.ttft_ms))
+        .set("tpot_ms", json::num(est.tpot_ms))
+        .set("speed", json::num(est.speed))
+        .set("thru_per_gpu", json::num(est.thru_per_gpu));
+}
+
+/// Explain report for a finished search: winner decomposition, pruning
+/// audit, nearest runner-up margin, flag + tier provenance.
+pub fn search_explain(
+    oracle: &dyn LatencyOracle,
+    model: &ModelArch,
+    cluster: &ClusterSpec,
+    wl: &WorkloadSpec,
+    report: &SearchReport,
+) -> Json {
+    let mut o = Json::obj();
+    o.set("kind", json::s("search-explain"));
+    let mut audit = Json::obj();
+    audit
+        .set("configs_priced", json::num(report.configs_priced as f64))
+        .set("evaluated", json::num(report.evaluated.len() as f64))
+        .set("pruned_total", json::num(report.pruned as f64))
+        .set("pruned_sla", json::num(report.pruned_sla as f64))
+        .set("pruned_dominated", json::num(report.pruned_dominated as f64))
+        .set("infeasible_memory", json::num(report.infeasible as f64));
+    o.set("pruning", audit);
+    let a = pareto::analyze(&report.evaluated, &wl.sla);
+    o.set("feasible", json::num(a.feasible.len() as f64));
+    match a.best() {
+        None => {
+            o.set("winner", Json::Null);
+            o.set("runner_up", Json::Null);
+        }
+        Some(w) => {
+            let mut win = Json::obj();
+            win.set("config", json::s(&w.cand.label()))
+                .set(
+                    "mode",
+                    json::s(match &w.cand {
+                        Candidate::Aggregated { .. } => "agg",
+                        Candidate::Disaggregated { .. } => "disagg",
+                    }),
+                )
+                .set("gpus", json::num(w.cand.total_gpus() as f64));
+            est_fields(&mut win, &w.est);
+            win.set("phases", candidate_phases(oracle, model, cluster, wl, &w.cand));
+            o.set("winner", win);
+            match a.feasible.get(1) {
+                None => {
+                    o.set("runner_up", Json::Null);
+                }
+                Some(r) => {
+                    let mut ru = Json::obj();
+                    ru.set("config", json::s(&r.cand.label()));
+                    est_fields(&mut ru, &r.est);
+                    ru.set(
+                        "margin_thru_per_gpu",
+                        json::num(w.est.thru_per_gpu - r.est.thru_per_gpu),
+                    )
+                    .set("margin_tpot_us", json::num((r.est.tpot_ms - w.est.tpot_ms) * 1e3))
+                    .set("margin_ttft_ms", json::num(r.est.ttft_ms - w.est.ttft_ms));
+                    o.set("runner_up", ru);
+                }
+            }
+        }
+    }
+    let flags: Vec<Json> =
+        report.flag_summaries.iter().map(|f| json::s(&f.describe())).collect();
+    o.set("flags", Json::Arr(flags));
+    if let Some(t) = &report.tier_counts {
+        let mut tiers = Json::obj();
+        tiers
+            .set("measured", json::num(t.measured as f64))
+            .set("calibrated", json::num(t.calibrated as f64))
+            .set("analytic", json::num(t.analytic as f64))
+            .set("sol", json::num(t.sol as f64));
+        o.set("tiers", tiers);
+    }
+    o
+}
+
+/// Explain report for a capacity plan: schedule economics, the option
+/// audit, and the peak window's winning unit decomposed by primitive
+/// class against its own leg's oracle.
+pub fn plan_explain(
+    model: &ModelArch,
+    wl: &WorkloadSpec,
+    plan: &DeploymentPlan,
+    legs: &[(String, ClusterSpec, &dyn LatencyOracle)],
+) -> Json {
+    let mut o = Json::obj();
+    o.set("kind", json::s("plan-explain"));
+    let mut audit = Json::obj();
+    audit
+        .set("options_considered", json::num(plan.options_considered as f64))
+        .set("options_pruned", json::num(plan.options_pruned as f64))
+        .set("windows", json::num(plan.windows.len() as f64))
+        .set(
+            "active_windows",
+            json::num(plan.windows.iter().filter(|w| w.replicas > 0).count() as f64),
+        );
+    o.set("pruning", audit);
+    let mut costs = Json::obj();
+    costs
+        .set("total_usd", json::num(plan.total_cost_usd))
+        .set("static_peak_usd", json::num(plan.static_peak_cost_usd))
+        .set("elastic_savings_frac", json::num(plan.elastic_savings_frac()));
+    match &plan.best_homogeneous {
+        Some((gpu, cost)) => {
+            costs
+                .set("best_homogeneous_gpu", json::s(gpu))
+                .set("best_homogeneous_usd", json::num(*cost))
+                .set("margin_vs_homogeneous_usd", json::num(cost - plan.total_cost_usd));
+        }
+        None => {
+            costs.set("best_homogeneous_gpu", Json::Null);
+        }
+    }
+    o.set("costs", costs);
+    // The peak active window carries the plan's binding constraint;
+    // decompose its winning unit against the leg it runs on.
+    let peak = plan
+        .windows
+        .iter()
+        .filter(|w| w.replicas > 0)
+        .max_by(|a, b| a.demand_qps.partial_cmp(&b.demand_qps).unwrap());
+    match peak {
+        None => {
+            o.set("peak_window", Json::Null);
+        }
+        Some(w) => {
+            let mut pw = Json::obj();
+            pw.set("index", json::num(w.index as f64))
+                .set("gpu", json::s(&w.gpu))
+                .set("config", json::s(&w.cand.label()))
+                .set("replicas", json::num(w.replicas as f64))
+                .set("gpus", json::num(w.gpus as f64))
+                .set("demand_qps", json::num(w.demand_qps))
+                .set("capacity_qps", json::num(w.capacity_qps))
+                .set("cost_usd", json::num(w.cost_usd));
+            est_fields(&mut pw, &w.est);
+            if let Some((_, cluster, oracle)) = legs.iter().find(|(n, _, _)| *n == w.gpu) {
+                pw.set("phases", candidate_phases(*oracle, model, cluster, wl, &w.cand));
+            }
+            o.set("peak_window", pw);
+        }
+    }
+    o
+}
+
+fn render_phase(out: &mut String, label: &str, p: &Json) {
+    out.push_str(&format!("    {label:<8}"));
+    for g in CLASS_GROUPS {
+        if let Ok(e) = p.req(g) {
+            out.push_str(&format!(
+                "  {g} {:.1}% ({:.0} us)",
+                100.0 * e.f64_or("frac", 0.0),
+                e.f64_or("us", 0.0)
+            ));
+        }
+    }
+    out.push('\n');
+}
+
+/// Human-readable rendering of [`search_explain`] for the CLI.
+pub fn render_search_explain(e: &Json) -> String {
+    let mut out = String::from("explain: why this config won\n");
+    match e.req("winner") {
+        Ok(w) if w.req("config").is_ok() => {
+            out.push_str(&format!(
+                "  winner: {} ({}, {:.0} GPUs)  ttft {:.1} ms  tpot {:.2} ms  \
+                 speed {:.1} tok/s/user  thru {:.1} tok/s/gpu\n",
+                w.str_or("config", "?"),
+                w.str_or("mode", "?"),
+                w.f64_or("gpus", 0.0),
+                w.f64_or("ttft_ms", 0.0),
+                w.f64_or("tpot_ms", 0.0),
+                w.f64_or("speed", 0.0),
+                w.f64_or("thru_per_gpu", 0.0),
+            ));
+            out.push_str("  latency by primitive class (one step):\n");
+            if let Ok(ph) = w.req("phases") {
+                if let Ok(p) = ph.req("prefill") {
+                    render_phase(&mut out, "prefill", p);
+                }
+                if let Ok(p) = ph.req("decode") {
+                    render_phase(&mut out, "decode", p);
+                }
+            }
+        }
+        _ => out.push_str("  winner: none (no SLA-feasible candidate)\n"),
+    }
+    if let Ok(a) = e.req("pruning") {
+        out.push_str(&format!(
+            "  pruning audit: {:.0} configs priced, {:.0} evaluated, {:.0} pruned \
+             ({:.0} by SLA, {:.0} dominated), {:.0} memory-infeasible\n",
+            a.f64_or("configs_priced", 0.0),
+            a.f64_or("evaluated", 0.0),
+            a.f64_or("pruned_total", 0.0),
+            a.f64_or("pruned_sla", 0.0),
+            a.f64_or("pruned_dominated", 0.0),
+            a.f64_or("infeasible_memory", 0.0),
+        ));
+    }
+    match e.req("runner_up") {
+        Ok(r) if r.req("config").is_ok() => out.push_str(&format!(
+            "  runner-up: {} lost by {:.2} tok/s/gpu (tpot margin {:+.0} us, \
+             ttft margin {:+.1} ms)\n",
+            r.str_or("config", "?"),
+            e.req("winner")
+                .ok()
+                .map(|w| w.f64_or("thru_per_gpu", 0.0) - r.f64_or("thru_per_gpu", 0.0))
+                .unwrap_or(0.0),
+            r.f64_or("margin_tpot_us", 0.0),
+            r.f64_or("margin_ttft_ms", 0.0),
+        )),
+        _ => out.push_str("  runner-up: none\n"),
+    }
+    if let Ok(t) = e.req("tiers") {
+        out.push_str(&format!(
+            "  oracle tiers: measured {:.0} / calibrated {:.0} / analytic {:.0} / sol {:.0}\n",
+            t.f64_or("measured", 0.0),
+            t.f64_or("calibrated", 0.0),
+            t.f64_or("analytic", 0.0),
+            t.f64_or("sol", 0.0),
+        ));
+    }
+    if let Ok(fs) = e.req("flags") {
+        if let Some(arr) = fs.as_arr() {
+            for f in arr {
+                if let Some(s) = f.as_str() {
+                    out.push_str(&format!("  flags: {s}\n"));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Human-readable rendering of [`plan_explain`] for the CLI.
+pub fn render_plan_explain(e: &Json) -> String {
+    let mut out = String::from("explain: why this plan won\n");
+    if let Ok(c) = e.req("costs") {
+        out.push_str(&format!(
+            "  cost: ${:.2} vs ${:.2} static-peak ({:.1}% elastic savings)\n",
+            c.f64_or("total_usd", 0.0),
+            c.f64_or("static_peak_usd", 0.0),
+            100.0 * c.f64_or("elastic_savings_frac", 0.0),
+        ));
+        if c.req("best_homogeneous_usd").is_ok() {
+            out.push_str(&format!(
+                "  vs best homogeneous ({}): ${:.2} — heterogeneity margin ${:.2}\n",
+                c.str_or("best_homogeneous_gpu", "?"),
+                c.f64_or("best_homogeneous_usd", 0.0),
+                c.f64_or("margin_vs_homogeneous_usd", 0.0),
+            ));
+        }
+    }
+    if let Ok(a) = e.req("pruning") {
+        out.push_str(&format!(
+            "  option audit: {:.0} considered, {:.0} frontier-pruned across \
+             {:.0} windows ({:.0} active)\n",
+            a.f64_or("options_considered", 0.0),
+            a.f64_or("options_pruned", 0.0),
+            a.f64_or("windows", 0.0),
+            a.f64_or("active_windows", 0.0),
+        ));
+    }
+    match e.req("peak_window") {
+        Ok(w) if w.req("config").is_ok() => {
+            out.push_str(&format!(
+                "  peak window {:.0}: {} x{:.0} on {} ({:.1} qps demand, {:.1} qps \
+                 capacity, ${:.2})\n",
+                w.f64_or("index", 0.0),
+                w.str_or("config", "?"),
+                w.f64_or("replicas", 0.0),
+                w.str_or("gpu", "?"),
+                w.f64_or("demand_qps", 0.0),
+                w.f64_or("capacity_qps", 0.0),
+                w.f64_or("cost_usd", 0.0),
+            ));
+            if let Ok(ph) = w.req("phases") {
+                out.push_str("  peak unit latency by primitive class (one step):\n");
+                if let Ok(p) = ph.req("prefill") {
+                    render_phase(&mut out, "prefill", p);
+                }
+                if let Ok(p) = ph.req("decode") {
+                    render_phase(&mut out, "decode", p);
+                }
+            }
+        }
+        _ => out.push_str("  peak window: none (plan is empty)\n"),
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frameworks::Framework;
+    use crate::hardware::h100_sxm;
+    use crate::models::by_name;
+    use crate::search::{SearchSpace, TaskRunner};
+    use crate::silicon::Silicon;
+
+    #[test]
+    fn search_explain_names_the_required_facts() {
+        let model = by_name("qwen3-32b").unwrap();
+        let cluster = ClusterSpec::new(h100_sxm(), 8, 1);
+        let sil = Silicon::new(cluster, Framework::TrtLlm.profile());
+        let wl = WorkloadSpec::new("qwen3-32b", 1024, 128, 2000.0, 10.0);
+        let mut space = SearchSpace::default_for(&model, Framework::TrtLlm);
+        space.batch = vec![8, 32];
+        let runner = TaskRunner::new(&model, &cluster, space, wl.clone());
+        let report = runner.run(&sil);
+        let e = search_explain(&sil, &model, &cluster, &wl, &report);
+        // Acceptance bar: primitive-class breakdown, pruning-audit
+        // counts and the runner-up margin must all be named.
+        let w = e.req("winner").unwrap();
+        let phases = w.req("phases").unwrap();
+        for phase in ["prefill", "decode"] {
+            let p = phases.req(phase).unwrap();
+            for g in CLASS_GROUPS {
+                p.req(g).unwrap_or_else(|_| panic!("{phase} missing class {g}"));
+            }
+            assert!(p.req_f64("total_us").unwrap() > 0.0);
+            // Fractions sum to ~1.
+            let s: f64 =
+                CLASS_GROUPS.iter().map(|g| p.req(g).unwrap().f64_or("frac", 0.0)).sum();
+            assert!((s - 1.0).abs() < 1e-6, "{phase} fracs sum to {s}");
+        }
+        let a = e.req("pruning").unwrap();
+        assert!(a.req_f64("configs_priced").unwrap() > 0.0);
+        a.req_f64("pruned_sla").unwrap();
+        a.req_f64("pruned_dominated").unwrap();
+        a.req_f64("infeasible_memory").unwrap();
+        let r = e.req("runner_up").unwrap();
+        assert!(r.req("config").is_ok(), "two feasible configs expected: {r:?}");
+        r.req_f64("margin_thru_per_gpu").unwrap();
+        r.req_f64("margin_tpot_us").unwrap();
+        // Human rendering mentions the same facts.
+        let txt = render_search_explain(&e);
+        assert!(txt.contains("winner:"), "{txt}");
+        assert!(txt.contains("pruning audit:"), "{txt}");
+        assert!(txt.contains("runner-up:"), "{txt}");
+        assert!(txt.contains("gemm"), "{txt}");
+        // And the report is valid JSON end-to-end.
+        assert!(json::parse(&e.to_string()).is_ok());
+    }
+}

@@ -1,0 +1,543 @@
+//! Pipeline-wide structured tracing (DESIGN.md §12).
+//!
+//! A zero-dependency span recorder threaded through search, planning,
+//! fleet replay and the service: hierarchical spans with attached
+//! counters, recorded into per-thread buffers and merged in worker-id
+//! order (the same deterministic idiom as the sweep engine's
+//! thread-local memo accumulators), exported as Chrome trace-event
+//! JSON (`chrome://tracing` / Perfetto) or a human-readable span tree.
+//!
+//! The recorder is strictly opt-in: nothing records until a
+//! [`Recorder`] is installed on the current thread, and every
+//! instrumentation point ([`span`], [`count`]) is a single
+//! thread-local check when none is — tracing off costs nothing
+//! measurable and changes no result (pinned by `tests/trace.rs`).
+//!
+//! Worker threads spawned by [`crate::util::pool`] pick the recorder
+//! up via [`install_worker`] inside the pool's per-worker init hook;
+//! their buffers flush when the scoped thread exits (which
+//! happens-before the pool join returns) and the final merge orders
+//! segments by `(tid, flush sequence)`, so the exported span list is
+//! identical run-to-run up to the recorded timings themselves.
+
+pub mod explain;
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::util::json::{self, Json};
+
+/// Span categories with fixed indices — the service exports one
+/// `aiconf_span_*` sample per category, and the Chrome export uses
+/// them as event `cat` fields. Unknown categories fold into "other".
+pub const CATS: [&str; 8] =
+    ["search", "sweep", "plan", "validate", "replan", "price", "fleet", "other"];
+
+/// Index of a category in [`CATS`] (unknowns map to "other").
+pub fn cat_index(cat: &str) -> usize {
+    CATS.iter().position(|c| *c == cat).unwrap_or(CATS.len() - 1)
+}
+
+/// One closed span: timestamps are microseconds since the recorder
+/// epoch, `tid` 0 is the recording thread and `1 + w` pool worker `w`,
+/// `parent` indexes the merged span list of the finished [`Trace`].
+#[derive(Clone, Debug)]
+pub struct SpanRec {
+    pub name: String,
+    pub cat: &'static str,
+    pub ts_us: f64,
+    pub dur_us: f64,
+    pub tid: u64,
+    pub parent: Option<usize>,
+    /// Accumulated counters (ops priced, memo hits, pruned-by-cause…).
+    pub counters: Vec<(&'static str, f64)>,
+}
+
+/// One thread's flushed buffer, tagged for the deterministic merge.
+struct Segment {
+    tid: u64,
+    seq: u64,
+    spans: Vec<SpanRec>,
+}
+
+struct Shared {
+    epoch: Instant,
+    segments: Mutex<Vec<Segment>>,
+    seq: AtomicU64,
+}
+
+/// Handle to one recording session. Clones share the session; the
+/// handle is captured on the spawning thread and re-installed on pool
+/// workers ([`install_worker`]).
+#[derive(Clone)]
+pub struct Recorder {
+    shared: Arc<Shared>,
+}
+
+impl Recorder {
+    pub fn new() -> Recorder {
+        Recorder {
+            shared: Arc::new(Shared {
+                epoch: Instant::now(),
+                segments: Mutex::new(Vec::new()),
+                seq: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    /// Install on the current thread as the recording root (tid 0).
+    /// No-op if any recorder is already installed here.
+    pub fn install(&self) {
+        install_tls(self.shared.clone(), 0);
+    }
+
+    /// Uninstall from this thread (flushing its buffer) and merge every
+    /// flushed segment in `(tid, flush sequence)` order into one
+    /// deterministic span list.
+    pub fn finish(self) -> Trace {
+        CUR.with(|c| {
+            let mut b = c.borrow_mut();
+            let ours = b
+                .as_ref()
+                .is_some_and(|t| Arc::ptr_eq(&t.shared, &self.shared));
+            if ours {
+                *b = None; // ThreadTrace::drop flushes the buffer
+            }
+        });
+        let mut segments = std::mem::take(&mut *self.shared.segments.lock().unwrap());
+        segments.sort_by_key(|s| (s.tid, s.seq));
+        let mut spans = Vec::new();
+        for seg in segments {
+            let off = spans.len();
+            for mut s in seg.spans {
+                s.parent = s.parent.map(|p| p + off);
+                spans.push(s);
+            }
+        }
+        Trace { spans }
+    }
+}
+
+impl Default for Recorder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+struct ThreadTrace {
+    shared: Arc<Shared>,
+    tid: u64,
+    epoch: Instant,
+    spans: Vec<SpanRec>,
+    stack: Vec<usize>,
+}
+
+impl ThreadTrace {
+    fn now_us(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64() * 1e6
+    }
+}
+
+impl Drop for ThreadTrace {
+    fn drop(&mut self) {
+        // Close anything left open (worker-lifetime spans, or guards a
+        // panic unwound past) so the flushed segment is well-formed.
+        let now = self.now_us();
+        for i in 0..self.stack.len() {
+            let idx = self.stack[i];
+            if self.spans[idx].dur_us == 0.0 {
+                self.spans[idx].dur_us = (now - self.spans[idx].ts_us).max(0.0);
+            }
+        }
+        if self.spans.is_empty() {
+            return;
+        }
+        let seq = self.shared.seq.fetch_add(1, Ordering::Relaxed);
+        let spans = std::mem::take(&mut self.spans);
+        if let Ok(mut g) = self.shared.segments.lock() {
+            g.push(Segment { tid: self.tid, seq, spans });
+        }
+    }
+}
+
+thread_local! {
+    static CUR: RefCell<Option<ThreadTrace>> = RefCell::new(None);
+}
+
+/// Returns true when this call installed (false = already recording).
+fn install_tls(shared: Arc<Shared>, tid: u64) -> bool {
+    CUR.with(|c| {
+        let mut b = c.borrow_mut();
+        if b.is_some() {
+            return false;
+        }
+        let epoch = shared.epoch;
+        *b = Some(ThreadTrace { shared, tid, epoch, spans: Vec::new(), stack: Vec::new() });
+        true
+    })
+}
+
+/// Handle to the recorder installed on the current thread, if any —
+/// capture this *before* spawning pool workers, then hand it to
+/// [`install_worker`] inside the pool's per-worker init hook.
+pub fn current() -> Option<Recorder> {
+    CUR.with(|c| c.borrow().as_ref().map(|t| Recorder { shared: t.shared.clone() }))
+}
+
+/// Install the recorder on a pool worker thread (tid `1 + wid`) and
+/// open a worker-lifetime span; the buffer flushes when the scoped
+/// worker thread exits. On the `threads <= 1` fast path (where the
+/// pool's init hook runs on the calling, already-recording thread)
+/// this is a no-op, so sequential runs don't grow phantom workers.
+pub fn install_worker(rec: &Recorder, wid: usize) {
+    if install_tls(rec.shared.clone(), wid as u64 + 1) {
+        let g = span("price_worker", "price");
+        std::mem::forget(g); // closed by ThreadTrace::drop at thread exit
+    }
+}
+
+/// Is a recorder installed on this thread?
+pub fn enabled() -> bool {
+    CUR.with(|c| c.borrow().is_some())
+}
+
+const INERT: usize = usize::MAX;
+
+/// Guard for one open span; the span closes when the guard drops.
+#[must_use = "the span closes when the guard drops"]
+pub struct SpanGuard {
+    idx: usize,
+}
+
+impl SpanGuard {
+    /// Add `v` to counter `key` on this span (accumulating).
+    pub fn add(&self, key: &'static str, v: f64) {
+        if self.idx == INERT {
+            return;
+        }
+        let idx = self.idx;
+        CUR.with(|c| {
+            if let Some(t) = c.borrow_mut().as_mut() {
+                if let Some(s) = t.spans.get_mut(idx) {
+                    bump_counter(s, key, v);
+                }
+            }
+        });
+    }
+
+    /// Is this guard actually recording?
+    pub fn active(&self) -> bool {
+        self.idx != INERT
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if self.idx == INERT {
+            return;
+        }
+        let idx = self.idx;
+        CUR.with(|c| {
+            if let Some(t) = c.borrow_mut().as_mut() {
+                let now = t.now_us();
+                if let Some(s) = t.spans.get_mut(idx) {
+                    s.dur_us = (now - s.ts_us).max(0.0);
+                }
+                while t.stack.last().is_some_and(|&top| top >= idx) {
+                    t.stack.pop();
+                }
+            }
+        });
+    }
+}
+
+fn bump_counter(s: &mut SpanRec, key: &'static str, v: f64) {
+    match s.counters.iter_mut().find(|(k, _)| *k == key) {
+        Some(e) => e.1 += v,
+        None => s.counters.push((key, v)),
+    }
+}
+
+/// Open a span on the current thread. Inert — one thread-local check,
+/// no allocation — when no recorder is installed.
+pub fn span(name: &str, cat: &'static str) -> SpanGuard {
+    CUR.with(|c| {
+        let mut b = c.borrow_mut();
+        match b.as_mut() {
+            None => SpanGuard { idx: INERT },
+            Some(t) => {
+                let idx = t.spans.len();
+                let parent = t.stack.last().copied();
+                let ts_us = t.now_us();
+                t.spans.push(SpanRec {
+                    name: name.to_string(),
+                    cat,
+                    ts_us,
+                    dur_us: 0.0,
+                    tid: t.tid,
+                    parent,
+                    counters: Vec::new(),
+                });
+                t.stack.push(idx);
+                SpanGuard { idx }
+            }
+        }
+    })
+}
+
+/// Add `v` to counter `key` on the innermost open span of this thread
+/// (no-op when untraced or no span is open).
+pub fn count(key: &'static str, v: f64) {
+    CUR.with(|c| {
+        if let Some(t) = c.borrow_mut().as_mut() {
+            if let Some(&idx) = t.stack.last() {
+                bump_counter(&mut t.spans[idx], key, v);
+            }
+        }
+    });
+}
+
+/// A finished, deterministically merged trace.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub spans: Vec<SpanRec>,
+}
+
+impl Trace {
+    pub fn len(&self) -> usize {
+        self.spans.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.spans.is_empty()
+    }
+
+    /// `(category, total µs, span count)` per [`CATS`] entry — the
+    /// aggregation behind the service's `aiconf_span_*` series.
+    pub fn cat_totals(&self) -> Vec<(&'static str, f64, u64)> {
+        let mut us = vec![0.0f64; CATS.len()];
+        let mut n = vec![0u64; CATS.len()];
+        for s in &self.spans {
+            let i = cat_index(s.cat);
+            us[i] += s.dur_us;
+            n[i] += 1;
+        }
+        CATS.iter().enumerate().map(|(i, c)| (*c, us[i], n[i])).collect()
+    }
+
+    /// Chrome trace-event JSON (load in `chrome://tracing` or
+    /// Perfetto): complete "X" events only (always balanced), `ts` /
+    /// `dur` in microseconds, one process, tid 0 = recording thread,
+    /// `1 + w` = pool worker `w`, counters as event `args`.
+    pub fn to_chrome_json(&self) -> Json {
+        let mut events = Vec::with_capacity(self.spans.len());
+        for s in &self.spans {
+            let mut args = Json::obj();
+            for (k, v) in &s.counters {
+                args.set(k, json::num(*v));
+            }
+            let mut e = Json::obj();
+            e.set("name", json::s(&s.name))
+                .set("cat", json::s(s.cat))
+                .set("ph", json::s("X"))
+                .set("pid", json::num(1.0))
+                .set("tid", json::num(s.tid as f64))
+                .set("ts", json::num(s.ts_us))
+                .set("dur", json::num(s.dur_us))
+                .set("args", args);
+            events.push(e);
+        }
+        let mut o = Json::obj();
+        o.set("displayTimeUnit", json::s("ms")).set("traceEvents", Json::Arr(events));
+        o
+    }
+
+    /// Human-readable span tree with total and self times (self =
+    /// total minus direct children) and inline counters.
+    pub fn render_tree(&self) -> String {
+        let mut children: Vec<Vec<usize>> = vec![Vec::new(); self.spans.len()];
+        let mut roots: Vec<usize> = Vec::new();
+        for (i, s) in self.spans.iter().enumerate() {
+            match s.parent {
+                Some(p) if p < self.spans.len() => children[p].push(i),
+                _ => roots.push(i),
+            }
+        }
+        fn render(
+            spans: &[SpanRec],
+            children: &[Vec<usize>],
+            i: usize,
+            depth: usize,
+            out: &mut String,
+        ) {
+            let s = &spans[i];
+            let child_us: f64 = children[i].iter().map(|&c| spans[c].dur_us).sum();
+            let self_us = (s.dur_us - child_us).max(0.0);
+            out.push_str(&"  ".repeat(depth + 1));
+            out.push_str(&format!(
+                "{:<24} total {:>10.3} ms  self {:>10.3} ms",
+                s.name,
+                s.dur_us / 1000.0,
+                self_us / 1000.0
+            ));
+            if s.tid > 0 {
+                out.push_str(&format!("  [w{}]", s.tid - 1));
+            }
+            for (k, v) in &s.counters {
+                out.push_str(&format!("  {k}={v}"));
+            }
+            out.push('\n');
+            for &c in &children[i] {
+                render(spans, children, c, depth + 1, out);
+            }
+        }
+        let threads = {
+            let mut tids: Vec<u64> = self.spans.iter().map(|s| s.tid).collect();
+            tids.sort_unstable();
+            tids.dedup();
+            tids.len()
+        };
+        let mut out = format!("trace: {} spans across {} threads\n", self.spans.len(), threads);
+        for &r in &roots {
+            render(&self.spans, &children, r, 0, &mut out);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn untraced_span_is_inert() {
+        assert!(!enabled());
+        let g = span("nothing", "other");
+        assert!(!g.active());
+        g.add("x", 1.0);
+        count("y", 2.0);
+        drop(g);
+        assert!(!enabled());
+    }
+
+    #[test]
+    fn spans_nest_and_counters_accumulate() {
+        let rec = Recorder::new();
+        rec.install();
+        {
+            let root = span("root", "search");
+            {
+                let child = span("child", "price");
+                child.add("ops", 3.0);
+                child.add("ops", 4.0);
+                count("hits", 5.0); // innermost open span = child
+            }
+            root.add("total", 1.0);
+        }
+        let tr = rec.finish();
+        assert!(!enabled(), "finish must uninstall");
+        assert_eq!(tr.len(), 2);
+        let root = &tr.spans[0];
+        let child = &tr.spans[1];
+        assert_eq!(root.name, "root");
+        assert_eq!(root.parent, None);
+        assert_eq!(child.parent, Some(0));
+        assert_eq!(child.counters, vec![("ops", 7.0), ("hits", 5.0)]);
+        assert_eq!(root.counters, vec![("total", 1.0)]);
+        assert!(root.dur_us >= child.dur_us);
+        assert!(child.ts_us >= root.ts_us);
+    }
+
+    #[test]
+    fn worker_segments_merge_in_tid_order() {
+        let rec = Recorder::new();
+        rec.install();
+        let _root = span("root", "search");
+        // Simulate workers finishing out of order: higher wid flushes
+        // first; the merge must still order by tid.
+        let h = rec.clone();
+        std::thread::scope(|s| {
+            for wid in [2usize, 0, 1] {
+                let h = h.clone();
+                s.spawn(move || {
+                    install_worker(&h, wid);
+                    let g = span("work", "price");
+                    g.add("wid", wid as f64);
+                });
+            }
+        });
+        drop(_root);
+        let tr = rec.finish();
+        let tids: Vec<u64> = tr.spans.iter().map(|s| s.tid).collect();
+        let mut sorted = tids.clone();
+        sorted.sort_unstable();
+        assert_eq!(tids, sorted, "segments must merge in worker-id order");
+        // Each worker contributed its lifetime span + the work span.
+        assert_eq!(tr.spans.iter().filter(|s| s.name == "price_worker").count(), 3);
+        assert_eq!(tr.spans.iter().filter(|s| s.name == "work").count(), 3);
+        // Worker-lifetime spans were auto-closed by the flush.
+        assert!(tr
+            .spans
+            .iter()
+            .filter(|s| s.name == "price_worker")
+            .all(|s| s.dur_us > 0.0));
+    }
+
+    #[test]
+    fn chrome_export_shape() {
+        let rec = Recorder::new();
+        rec.install();
+        {
+            let g = span("phase", "plan");
+            g.add("options", 12.0);
+        }
+        let j = rec.finish().to_chrome_json();
+        assert_eq!(j.str_or("displayTimeUnit", ""), "ms");
+        let events = j.req("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 1);
+        let e = &events[0];
+        assert_eq!(e.str_or("ph", ""), "X");
+        assert_eq!(e.str_or("name", ""), "phase");
+        assert_eq!(e.str_or("cat", ""), "plan");
+        assert!(e.req_f64("ts").is_ok() && e.req_f64("dur").is_ok());
+        assert!(e.req_f64("pid").is_ok() && e.req_f64("tid").is_ok());
+        assert_eq!(e.req("args").unwrap().f64_or("options", 0.0), 12.0);
+        // Round-trips through the hand-rolled JSON layer.
+        let txt = j.to_string();
+        assert!(json::parse(&txt).is_ok());
+    }
+
+    #[test]
+    fn render_tree_reports_self_time() {
+        let rec = Recorder::new();
+        rec.install();
+        {
+            let _a = span("outer", "search");
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            let _b = span("inner", "price");
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        let txt = rec.finish().render_tree();
+        assert!(txt.contains("outer"), "{txt}");
+        assert!(txt.contains("inner"), "{txt}");
+        assert!(txt.contains("self"), "{txt}");
+        assert!(txt.starts_with("trace: 2 spans"), "{txt}");
+    }
+
+    #[test]
+    fn cat_totals_cover_all_categories() {
+        let rec = Recorder::new();
+        rec.install();
+        {
+            let _a = span("s", "search");
+            let _b = span("weird", "not-a-cat");
+        }
+        let totals = rec.finish().cat_totals();
+        assert_eq!(totals.len(), CATS.len());
+        let get = |c: &str| totals.iter().find(|(k, _, _)| *k == c).unwrap().2;
+        assert_eq!(get("search"), 1);
+        assert_eq!(get("other"), 1, "unknown cats fold into 'other'");
+    }
+}

@@ -131,6 +131,22 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// The CLI's shared "oracle: …" stats line: every subcommand that
+/// prices through a [`crate::perfdb::MemoOracle`] reports the same
+/// ops-priced rate and memo hit share (`search`, `sweep`, `plan`,
+/// `validate`, `replan` all print this one formatter's output).
+pub fn oracle_line(memo_hits: u64, memo_misses: u64, elapsed_s: f64) -> String {
+    let ops = memo_hits + memo_misses;
+    format!(
+        "oracle: {} ops priced ({:.0} ops/s), memo hit rate {:.1}% ({} hits, {} misses)",
+        ops,
+        ops as f64 / elapsed_s.max(1e-9),
+        100.0 * memo_hits as f64 / (ops.max(1)) as f64,
+        memo_hits,
+        memo_misses
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -147,6 +163,14 @@ mod tests {
         assert_eq!(r.samples_ms.len(), 5);
         assert!(r.median_ms() >= 0.0);
         assert!(r.p95_ms() >= r.median_ms());
+    }
+
+    #[test]
+    fn oracle_line_format_is_stable() {
+        let l = oracle_line(75, 25, 2.0);
+        assert_eq!(l, "oracle: 100 ops priced (50 ops/s), memo hit rate 75.0% (75 hits, 25 misses)");
+        // Zero ops must not divide by zero.
+        assert!(oracle_line(0, 0, 0.0).contains("0 ops priced"));
     }
 
     #[test]

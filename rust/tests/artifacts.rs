@@ -209,6 +209,90 @@ fn bench_validate_keeps_its_contract() {
     }
 }
 
+/// Validate one Chrome trace-event export (what `--trace-out` writes):
+/// `displayTimeUnit` "ms", a `traceEvents` array of complete "X"
+/// events, each carrying finite `pid`/`tid`/`ts` and a non-negative
+/// `dur` — the shape chrome://tracing and Perfetto both load.
+fn assert_chrome_trace_schema(name: &str, j: &Json) {
+    assert_eq!(j.str_or("displayTimeUnit", ""), "ms", "{name}: displayTimeUnit must be 'ms'");
+    let events = j
+        .req("traceEvents")
+        .unwrap_or_else(|e| panic!("{name}: {e}"))
+        .as_arr()
+        .unwrap_or_else(|| panic!("{name}: traceEvents must be an array"));
+    assert!(!events.is_empty(), "{name}: trace holds no events");
+    for (i, e) in events.iter().enumerate() {
+        assert!(!e.str_or("name", "").is_empty(), "{name}: event {i} has no name");
+        assert_eq!(e.str_or("ph", ""), "X", "{name}: event {i} must be a complete 'X' event");
+        for key in ["pid", "tid", "ts"] {
+            let v = e.req_f64(key).unwrap_or_else(|err| panic!("{name}: event {i}: {err}"));
+            assert!(v.is_finite(), "{name}: event {i}: '{key}' must be finite");
+        }
+        let dur = e.req_f64("dur").unwrap_or_else(|err| panic!("{name}: event {i}: {err}"));
+        assert!(dur.is_finite() && dur >= 0.0, "{name}: event {i}: bad dur {dur}");
+    }
+}
+
+/// The committed BENCH_trace.json placeholder (or its measured
+/// overwrite) must keep the keys benches/trace.rs writes; a measured
+/// run must hold tracing overhead under the 5% acceptance bar.
+#[test]
+fn bench_trace_keeps_its_contract() {
+    let txt = std::fs::read_to_string(repo_root().join("BENCH_trace.json")).unwrap();
+    let j = json::parse(&txt).unwrap();
+    assert_eq!(j.req_str("bench").unwrap(), "trace");
+    for key in [
+        "search_off_ms_median",
+        "search_on_ms_median",
+        "overhead_frac",
+        "spans_recorded",
+    ] {
+        let v = j.req(key).unwrap_or_else(|e| panic!("BENCH_trace.json: {e}"));
+        assert!(
+            matches!(v, Json::Null | Json::Num(_)),
+            "BENCH_trace.json: '{key}' must be a number or null (pending)"
+        );
+    }
+    // A measured run (non-null medians) must keep recording cheap: the
+    // traced search may regress the untraced median by at most 5%.
+    if let Some(on) = j.req("search_on_ms_median").unwrap().as_f64() {
+        let off = j.req_f64("search_off_ms_median").unwrap();
+        assert!(off > 0.0, "BENCH_trace.json: off-median must be positive");
+        let frac = j.req_f64("overhead_frac").unwrap();
+        assert!(
+            frac <= 0.05,
+            "BENCH_trace.json: tracing overhead {frac:.4} exceeds the 5% budget \
+             (off {off:.2} ms, on {on:.2} ms)"
+        );
+        assert!(j.req_f64("spans_recorded").unwrap() > 0.0);
+    }
+}
+
+/// Every Chrome trace the trace-smoke job wrote under
+/// rust/target/trace-smoke/ must satisfy the trace-event schema (the
+/// job runs `search --trace-out` / `plan --trace-out` first, then this
+/// test validates what landed on disk).
+#[test]
+fn trace_smoke_outputs_are_valid_chrome_traces() {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("target").join("trace-smoke");
+    if !dir.is_dir() {
+        return; // smoke job not run locally
+    }
+    let mut found = 0;
+    for entry in std::fs::read_dir(&dir).unwrap() {
+        let path = entry.unwrap().path();
+        let name = path.file_name().unwrap().to_string_lossy().to_string();
+        if !name.ends_with("-trace.json") {
+            continue;
+        }
+        found += 1;
+        let txt = std::fs::read_to_string(&path).unwrap();
+        let j = json::parse(&txt).unwrap_or_else(|e| panic!("{name}: invalid JSON: {e}"));
+        assert_chrome_trace_schema(&name, &j);
+    }
+    assert!(found >= 1, "trace-smoke dir exists but holds no *-trace.json");
+}
+
 /// Every committed trace spec under artifacts/traces/ must satisfy the
 /// `validate --trace-spec` contract: `"kind": "trace-spec"`, a traffic
 /// model that parses and validates, a positive horizon, sane jitter,

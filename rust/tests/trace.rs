@@ -1,0 +1,141 @@
+//! Tracing must be free when off and inert when on: a search run with
+//! no recorder installed and one recorded end-to-end must produce
+//! bit-identical reports — the trace artifact is the only difference.
+//! Also pins the span structure the pipeline emits (search → grid
+//! build → pricing → frontier merge; plan → per-leg sweep → schedule)
+//! and the Chrome export of a real run.
+
+use aiconfigurator::config::WorkloadSpec;
+use aiconfigurator::frameworks::Framework;
+use aiconfigurator::hardware::{h100_sxm, ClusterSpec};
+use aiconfigurator::models::{by_name, Dtype};
+use aiconfigurator::perfdb::{LatencyOracle, PerfDatabase};
+use aiconfigurator::planner::{self, PlanSpec, TrafficModel};
+use aiconfigurator::search::{RunOptions, SearchReport, SearchSpace, TaskRunner};
+use aiconfigurator::silicon::Silicon;
+use aiconfigurator::trace;
+use aiconfigurator::util::json;
+
+fn fixture(model: &str) -> (ClusterSpec, aiconfigurator::models::ModelArch, PerfDatabase) {
+    let cluster = ClusterSpec::new(h100_sxm(), 8, 1);
+    let silicon = Silicon::new(cluster, Framework::TrtLlm.profile());
+    let m = by_name(model).unwrap();
+    let db = PerfDatabase::build(&silicon, &m, Dtype::Fp8, 0x5EED);
+    (cluster, m, db)
+}
+
+/// Everything in a report except wall-clock timings must match.
+fn assert_same_results(a: &SearchReport, b: &SearchReport) {
+    assert_eq!(a.configs_priced, b.configs_priced);
+    assert_eq!(a.pruned, b.pruned);
+    assert_eq!(a.pruned_sla, b.pruned_sla);
+    assert_eq!(a.pruned_dominated, b.pruned_dominated);
+    assert_eq!(a.infeasible, b.infeasible);
+    assert_eq!(a.evaluated.len(), b.evaluated.len());
+    for (x, y) in a.evaluated.iter().zip(&b.evaluated) {
+        assert_eq!(x.cand, y.cand, "candidate order must not depend on tracing");
+        assert_eq!(x.est, y.est, "estimates must be bit-identical with tracing on");
+    }
+    assert_eq!(a.flag_summaries.len(), b.flag_summaries.len());
+    assert_eq!(a.tier_counts.is_some(), b.tier_counts.is_some());
+}
+
+#[test]
+fn tracing_on_is_bit_identical_to_tracing_off() {
+    let (cluster, model, db) = fixture("qwen3-32b");
+    let mut space = SearchSpace::default_for(&model, Framework::TrtLlm);
+    space.batch = vec![8, 32, 128];
+    space.max_x = 8;
+    space.max_y = 8;
+    let wl = WorkloadSpec::new("qwen3-32b", 2048, 256, 1500.0, 20.0);
+    let runner = TaskRunner::new(&model, &cluster, space, wl);
+    let opts = RunOptions { prune: true };
+
+    assert!(!trace::enabled(), "test thread must start untraced");
+    let off = runner.run_with(&db as &dyn LatencyOracle, &opts);
+
+    let rec = trace::Recorder::new();
+    rec.install();
+    let on = runner.run_with(&db as &dyn LatencyOracle, &opts);
+    let tr = rec.finish();
+    assert!(!trace::enabled(), "finish must uninstall the recorder");
+
+    assert_same_results(&off, &on);
+    assert!(!tr.is_empty(), "the traced run must have recorded spans");
+}
+
+#[test]
+fn search_emits_the_pipeline_spans() {
+    let (cluster, model, db) = fixture("llama3.1-8b");
+    let mut space = SearchSpace::default_for(&model, Framework::TrtLlm);
+    space.batch = vec![8, 32];
+    let wl = WorkloadSpec::new("llama3.1-8b", 1024, 128, 2000.0, 10.0);
+    let runner = TaskRunner::new(&model, &cluster, space, wl);
+
+    let rec = trace::Recorder::new();
+    rec.install();
+    let _report = runner.run(&db as &dyn LatencyOracle);
+    let tr = rec.finish();
+
+    let names: Vec<&str> = tr.spans.iter().map(|s| s.name.as_str()).collect();
+    for want in ["grid_build", "price", "frontier_merge"] {
+        assert!(names.contains(&want), "missing span '{want}' in {names:?}");
+    }
+    // The pricing span carries its batch size as a counter.
+    let price = tr.spans.iter().find(|s| s.name == "price").unwrap();
+    assert!(
+        price.counters.iter().any(|(k, v)| *k == "jobs" && *v > 0.0),
+        "price span should count jobs: {:?}",
+        price.counters
+    );
+    // The export of a real run is valid Chrome trace-event JSON.
+    let j = tr.to_chrome_json();
+    assert_eq!(j.str_or("displayTimeUnit", ""), "ms");
+    let events = j.req("traceEvents").unwrap().as_arr().unwrap();
+    assert_eq!(events.len(), tr.len());
+    for e in events {
+        assert_eq!(e.str_or("ph", ""), "X");
+        assert!(e.req_f64("ts").unwrap().is_finite());
+        assert!(e.req_f64("dur").unwrap() >= 0.0);
+    }
+    assert!(json::parse(&j.to_string()).is_ok(), "export must round-trip");
+    // The tree render names every thread once and starts with the header.
+    let txt = tr.render_tree();
+    assert!(txt.starts_with("trace: "), "{txt}");
+}
+
+#[test]
+fn plan_emits_leg_and_schedule_spans_and_stays_bit_identical() {
+    let (cluster, model, db) = fixture("llama3.1-8b");
+    let spec = PlanSpec {
+        workload: WorkloadSpec::new("llama3.1-8b", 1024, 128, 2000.0, 10.0),
+        traffic: TrafficModel::Ramp { start_qps: 2.0, end_qps: 20.0 },
+        windows: 4,
+        window_h: 1.0,
+        max_gpus: None,
+        prune: true,
+        demand_override: Vec::new(),
+    };
+    let fleet: Vec<(ClusterSpec, &dyn LatencyOracle)> = vec![(cluster, &db)];
+
+    let off = planner::plan(&model, Framework::TrtLlm, &spec, &fleet).unwrap();
+
+    let rec = trace::Recorder::new();
+    rec.install();
+    let on = planner::plan(&model, Framework::TrtLlm, &spec, &fleet).unwrap();
+    let tr = rec.finish();
+
+    assert_eq!(
+        off.to_json(&spec.workload).to_string(),
+        on.to_json(&spec.workload).to_string(),
+        "the plan must be bit-identical with tracing on"
+    );
+    let names: Vec<&str> = tr.spans.iter().map(|s| s.name.as_str()).collect();
+    assert!(names.contains(&"plan"), "{names:?}");
+    assert!(names.iter().any(|n| n.starts_with("leg_sweep")), "{names:?}");
+    assert!(names.contains(&"schedule"), "{names:?}");
+    // Category totals roll up for the service's aiconf_span_* series.
+    let totals = tr.cat_totals();
+    let plan_count = totals.iter().find(|(c, _, _)| *c == "plan").unwrap().2;
+    assert!(plan_count >= 3, "plan spans under the 'plan' category: {totals:?}");
+}
